@@ -1,0 +1,142 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): exercises every
+//! layer of the stack on a real small workload and reports the paper's
+//! headline metric — speedup over job-per-iteration Mahout baselines at
+//! equal-or-better clustering quality.
+//!
+//! Layers exercised:
+//!   L1/L2 — AOT Pallas/JAX chunk graphs executed via PJRT (when
+//!           `artifacts/` exists; falls back to the native backend with a
+//!           notice otherwise),
+//!   L3    — the full MapReduce pipeline: driver sampling + pre-clustering
+//!           race, distributed cache, combiner FCM per block, WFCM reduce,
+//!           fault injection on, plus both baselines on the same substrate.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use std::sync::Arc;
+
+use bigfcm::baselines::{run_baseline, BaselineAlgo};
+use bigfcm::config::Config;
+use bigfcm::coordinator::BigFcm;
+use bigfcm::data::builtin;
+use bigfcm::fcm::{assign_hard, ChunkBackend};
+use bigfcm::hdfs::BlockStore;
+use bigfcm::mapreduce::{Engine, EngineOptions};
+use bigfcm::metrics::{confusion_accuracy, silhouette_width_sampled, speedup};
+use bigfcm::prng::Pcg;
+use bigfcm::runtime::ResolvedBackend;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.cluster.block_records = 8192;
+    cfg.fcm.max_iterations = 100;
+
+    // Backend: PJRT artifacts when built, else native (with a notice).
+    let backend: Arc<dyn ChunkBackend> = Arc::new(ResolvedBackend::from_config(&cfg)?);
+    println!("backend: {}", backend.name());
+    if backend.name() == "native" {
+        println!("  (artifacts/ not found — run `make artifacts` for the PJRT path)");
+    }
+
+    // Workload: SUSY-like at 60k records (18 features, 2 classes), the
+    // paper's Table 3 configuration C=2, m=2.
+    let dataset = builtin::susy(60_000, cfg.seed);
+    let labels = dataset.labels.clone().unwrap();
+    println!(
+        "workload: {} — {} records x {} features",
+        dataset.name,
+        dataset.rows(),
+        dataset.dims()
+    );
+
+    // Store on disk: real I/O through the block codec.
+    let dir = std::env::temp_dir().join(format!("bigfcm_e2e_{}", std::process::id()));
+    let store = BlockStore::on_disk(
+        dataset.name.clone(),
+        &dataset.features,
+        cfg.cluster.block_records,
+        cfg.cluster.workers,
+        dir.clone(),
+    )?;
+    println!(
+        "block store: {} blocks, {:.1} MiB on disk",
+        store.num_blocks(),
+        store.total_bytes() as f64 / (1024.0 * 1024.0)
+    );
+
+    let eps = 5.0e-7;
+
+    // --- BigFCM (with fault injection to exercise re-execution) ---------
+    let mut engine = Engine::new(
+        EngineOptions { workers: cfg.cluster.workers, fault_rate: 0.1, fault_seed: 42 },
+        cfg.overhead.clone(),
+    );
+    let big = BigFcm::new(cfg.clone())
+        .backend(Arc::clone(&backend))
+        .clusters(2)
+        .fuzzifier(2.0)
+        .epsilon(eps)
+        .run_with_engine(&store, &mut engine)?;
+    println!(
+        "\nBigFCM: wall={:.2?}  modelled={:.0}s  (1 MR job, {} map tasks, {} attempts)",
+        big.wall,
+        big.modelled_s(),
+        big.job.map_tasks,
+        big.job.attempts
+    );
+    println!(
+        "  driver: sample={} T_fcm={:.0?} T_wfcmpb={:.0?} -> flag={}",
+        big.driver.sample_size,
+        big.driver.t_fcm,
+        big.driver.t_wfcmpb,
+        if big.driver.flag_fcm { "FCM" } else { "WFCMPB" }
+    );
+
+    // --- Baselines on the same substrate --------------------------------
+    let mut results = Vec::new();
+    for algo in [BaselineAlgo::KMeans, BaselineAlgo::FuzzyKMeans] {
+        let mut engine = Engine::new(
+            EngineOptions { workers: cfg.cluster.workers, ..Default::default() },
+            cfg.overhead.clone(),
+        );
+        let mut bcfg = cfg.clone();
+        bcfg.fcm.clusters = 2;
+        bcfg.fcm.epsilon = eps;
+        let run = run_baseline(algo, &bcfg, &store, Arc::clone(&backend), &mut engine)?;
+        println!(
+            "{}: wall={:.2?}  modelled={:.0}s  ({} MR jobs)",
+            algo.as_str(),
+            run.wall,
+            run.modelled_s(),
+            run.jobs
+        );
+        results.push(run);
+    }
+
+    // --- Headline metrics ------------------------------------------------
+    println!("\n=== headline ===");
+    for run in &results {
+        println!(
+            "speedup over {}: {:.1}x (modelled cluster time)",
+            run.algo.as_str(),
+            speedup(run.modelled_s(), big.modelled_s())
+        );
+    }
+    let assign_big = assign_hard(&dataset.features, &big.centers);
+    let assign_fkm = assign_hard(&dataset.features, &results[1].centers);
+    let acc_big = confusion_accuracy(&assign_big, &labels, 2);
+    let acc_fkm = confusion_accuracy(&assign_fkm, &labels, 2);
+    println!(
+        "accuracy: BigFCM {:.1}% vs Mahout FKM {:.1}% (overlapping classes: ~50% is the paper's own Table 7 number)",
+        acc_big * 100.0,
+        acc_fkm * 100.0
+    );
+    let mut rng = Pcg::new(7);
+    let sil = silhouette_width_sampled(&dataset.features, &assign_big, 2000, &mut rng);
+    println!("silhouette (2k sample): {sil:.4}");
+
+    std::fs::remove_dir_all(dir).ok();
+    Ok(())
+}

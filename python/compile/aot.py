@@ -1,0 +1,167 @@
+"""AOT compile path: lower every Layer-2 graph the experiments need to HLO
+*text* artifacts the rust runtime loads via PJRT.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` rust crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  <graph>_d<dims>_c<c>.hlo.txt   one per artifact matrix entry
+  manifest.json                  artifact registry the rust runtime reads
+  golden.json                    deterministic input/output vectors from the
+                                 pure-jnp oracle, cross-checked by rust tests
+
+Usage:  cd python && python -m compile.aot [--out-dir DIR] [--only NAME]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import fcm_pallas, ref
+
+# Rows per chunk across the whole system.  The rust coordinator zero-pads the
+# last chunk of every partition; padded rows carry weight 0 and are exactly
+# ignored by all three graphs.
+CHUNK = 4096
+
+# (dims, clusters) combos required by the experiment matrix (DESIGN.md §5):
+#   iris(4,3)  pima(8,2)  susy(18, {2,6,10})  higgs(28, {2,6,10,15,50})
+#   kdd99(41, 23)
+SHAPES = [
+    (4, 3),
+    (8, 2),
+    (18, 2),
+    (18, 6),
+    (18, 10),
+    (28, 2),
+    (28, 6),
+    (28, 10),
+    (28, 15),
+    (28, 50),
+    (41, 23),
+]
+
+GRAPHS = ["fcm", "classic", "kmeans"]
+
+
+def artifact_name(graph, d, c):
+    return f"{graph}_d{d}_c{c}"
+
+
+def artifact_matrix():
+    """The full list of artifacts to build: one per (graph, dims, C)."""
+    return [(artifact_name(g, d, c), g, d, c) for g in GRAPHS for (d, c) in SHAPES]
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the rust
+    side unwraps a single tuple output)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(graph, d, c, chunk=CHUNK):
+    fn = model.GRAPHS[graph]
+    args = model.example_args(graph, chunk, d, c)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def _golden_case(graph, d, c, n=CHUNK, seed=0):
+    """Deterministic small input + oracle output, for rust cross-checks.
+
+    Uses a fixed key so the vectors are stable across runs/machines; values
+    are round-tripped through float32.
+    """
+    key = jax.random.PRNGKey(seed)
+    kx, kv, kw = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n, d), jnp.float32) * 2.0 + 0.5
+    v = jax.random.normal(kv, (c, d), jnp.float32)
+    w = jnp.abs(jax.random.normal(kw, (n,), jnp.float32)) + 0.1
+    # Zero-weight tail exercises the padding contract.
+    w = w.at[n - n // 8 :].set(0.0)
+    m = 1.7
+    if graph == "fcm":
+        out = ref.fcm_chunk_step(x, v, w, m)
+    elif graph == "classic":
+        out = ref.classic_fcm_chunk_step(x, v, w, m)
+    else:
+        out = ref.kmeans_chunk_step(x, v, w)
+    return {
+        "graph": graph,
+        "dims": d,
+        "clusters": c,
+        "chunk": n,
+        "m": m,
+        "x": [float(t) for t in x.reshape(-1)],
+        "v": [float(t) for t in v.reshape(-1)],
+        "w": [float(t) for t in w],
+        "out_vnum": [float(t) for t in out[0].reshape(-1)],
+        "out_wacc": [float(t) for t in out[1].reshape(-1)],
+        "out_obj": float(out[2]),
+    }
+
+
+def build(out_dir, only=None, golden=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"chunk": CHUNK, "row_block": fcm_pallas.ROW_BLOCK, "artifacts": []}
+    for name, graph, d, c in artifact_matrix():
+        if only and only not in name:
+            continue
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_artifact(graph, d, c)
+        with open(path, "w") as f:
+            f.write(text)
+        n_params = 3 if graph == "kmeans" else 4
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "graph": graph,
+                "dims": d,
+                "clusters": c,
+                "chunk": CHUNK,
+                "params": n_params,
+                "file": f"{name}.hlo.txt",
+                "bytes": len(text),
+            }
+        )
+        print(f"  {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if golden and not only:
+        # Small-chunk golden vectors (chunk=512 keeps the JSON manageable but
+        # still crosses one ROW_BLOCK boundary when ROW_BLOCK=512).
+        cases = [
+            _golden_case("fcm", 4, 3, n=512, seed=0),
+            _golden_case("fcm", 18, 2, n=512, seed=1),
+            _golden_case("classic", 4, 3, n=512, seed=2),
+            _golden_case("kmeans", 18, 2, n=512, seed=3),
+        ]
+        with open(os.path.join(out_dir, "golden.json"), "w") as f:
+            json.dump({"cases": cases}, f)
+        print(f"  golden.json: {len(cases)} cases")
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument("--no-golden", action="store_true")
+    args = ap.parse_args()
+    build(args.out_dir, only=args.only, golden=not args.no_golden)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for the Pallas kernels and the full FCM loop.
+
+These are the correctness ground truth: ``python/tests`` asserts the Pallas
+kernels (interpret mode) match these to float32 tolerance, and the rust-native
+implementations are cross-checked against the same math via golden vectors
+emitted by ``aot.py --golden``.
+"""
+
+import jax.numpy as jnp
+
+_DIST_EPS = 1e-12
+
+
+def dist2(x, v):
+    """Pairwise squared Euclidean distances, (N, d) × (C, d) → (N, C)."""
+    xx = jnp.sum(x * x, axis=1, keepdims=True)
+    vv = jnp.sum(v * v, axis=1)[None, :]
+    d2 = xx - 2.0 * (x @ v.T) + vv
+    return jnp.maximum(d2, _DIST_EPS)
+
+
+def memberships(x, v, m):
+    """True FCM membership matrix U (N, C), rows sum to 1.
+
+    Distances are normalised by the row minimum before powering — the
+    memberships depend only on ratios, and this keeps f32 from underflowing
+    at small m (see fcm_pallas._um_fast)."""
+    d2 = dist2(x, v)
+    p = 1.0 / (m - 1.0)
+    dmin = jnp.min(d2, axis=1, keepdims=True)
+    num = jnp.power(d2 / dmin, p)
+    den = jnp.sum(1.0 / num, axis=1, keepdims=True)
+    return 1.0 / (num * den)
+
+
+def um_fast(x, v, m):
+    """Kolen–Hutcheson membership term u^m, computed without U."""
+    d2 = dist2(x, v)
+    p = 1.0 / (m - 1.0)
+    dmin = jnp.min(d2, axis=1, keepdims=True)
+    num = jnp.power(d2 / dmin, p)
+    den = jnp.sum(1.0 / num, axis=1, keepdims=True)
+    return jnp.power(num * den, -m)
+
+
+def fcm_chunk_step(x, v, w, m):
+    """Oracle for kernels.fcm_pallas.fcm_chunk_step."""
+    um = um_fast(x, v, m) * w[:, None]
+    v_num = um.T @ x
+    w_acc = jnp.sum(um, axis=0)
+    obj = jnp.sum(um * dist2(x, v))
+    return v_num, w_acc, obj
+
+
+def classic_fcm_chunk_step(x, v, w, m):
+    """Oracle for kernels.fcm_pallas.classic_fcm_chunk_step."""
+    u = memberships(x, v, m)
+    um = jnp.power(u, m) * w[:, None]
+    v_num = um.T @ x
+    w_acc = jnp.sum(um, axis=0)
+    obj = jnp.sum(um * dist2(x, v))
+    return v_num, w_acc, obj
+
+
+def kmeans_chunk_step(x, v, w):
+    """Oracle for kernels.fcm_pallas.kmeans_chunk_step."""
+    d2 = dist2(x, v)
+    best = jnp.argmin(d2, axis=1)
+    onehot = (best[:, None] == jnp.arange(v.shape[0])[None, :]) * w[:, None]
+    sums = onehot.T @ x
+    counts = jnp.sum(onehot, axis=0)
+    sse = jnp.sum(onehot * d2)
+    return sums, counts, sse
+
+
+def fcm_full(x, v0, m, eps, max_iter, w=None):
+    """Complete weighted-FCM loop (the algorithm rust's L3 implements around
+    the chunk step).  Returns (centers, final weights, iterations, obj)."""
+    v = v0
+    w = jnp.ones(x.shape[0]) if w is None else w
+    it = 0
+    obj = jnp.inf
+    w_acc = jnp.zeros(v0.shape[0])
+    for it in range(1, max_iter + 1):
+        v_num, w_acc, obj = fcm_chunk_step(x, v, w, m)
+        v_new = v_num / jnp.maximum(w_acc[:, None], 1e-30)
+        shift = jnp.max(jnp.sum((v_new - v) ** 2, axis=1))
+        v = v_new
+        if float(shift) <= eps:
+            break
+    return v, w_acc, it, obj
+
+
+def kmeans_full(x, v0, eps, max_iter):
+    """Complete Lloyd's loop around the kmeans chunk step."""
+    v = v0
+    w = jnp.ones(x.shape[0])
+    it = 0
+    sse = jnp.inf
+    for it in range(1, max_iter + 1):
+        sums, counts, sse = kmeans_chunk_step(x, v, w)
+        # Empty clusters keep their previous center (Mahout behaviour).
+        safe = jnp.maximum(counts[:, None], 1e-30)
+        v_new = jnp.where(counts[:, None] > 0, sums / safe, v)
+        shift = jnp.max(jnp.sum((v_new - v) ** 2, axis=1))
+        v = v_new
+        if float(shift) <= eps:
+            break
+    return v, it, sse

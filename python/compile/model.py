@@ -1,0 +1,55 @@
+"""Layer-2 JAX compute graphs, lowered once by ``aot.py`` to HLO text.
+
+Each graph wraps a Layer-1 Pallas kernel and is the unit the rust runtime
+executes per chunk.  Rust owns everything around it: the iteration loop,
+the convergence test, padding, aggregation across chunks/workers, and the
+final center division (kept host-side so partials stay associative).
+
+Graph signatures (all f32, shapes fixed per artifact):
+
+  fcm_chunk_step      (chunk,d), (C,d), (chunk,), ()  -> (C,d), (C,), ()
+  classic_fcm_chunk   same                            -> same
+  kmeans_chunk_step   (chunk,d), (C,d), (chunk,)      -> (C,d), (C,), ()
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fcm_pallas
+
+
+def fcm_chunk_step(x, v, w, m):
+    """Fast-FCM (Kolen–Hutcheson) chunk partials — the BigFCM hot path."""
+    v_num, w_acc, obj = fcm_pallas.fcm_chunk_step(x, v, w, m)
+    return v_num, w_acc, obj
+
+
+def classic_fcm_chunk_step(x, v, w, m):
+    """Textbook-FCM chunk partials — the Mahout-FKM baseline hot path."""
+    v_num, w_acc, obj = fcm_pallas.classic_fcm_chunk_step(x, v, w, m)
+    return v_num, w_acc, obj
+
+
+def kmeans_chunk_step(x, v, w):
+    """Hard K-Means chunk partials — the Mahout-KM baseline hot path."""
+    sums, counts, sse = fcm_pallas.kmeans_chunk_step(x, v, w)
+    return sums, counts, sse
+
+
+GRAPHS = {
+    "fcm": fcm_chunk_step,
+    "classic": classic_fcm_chunk_step,
+    "kmeans": kmeans_chunk_step,
+}
+
+
+def example_args(graph, chunk, d, c):
+    """ShapeDtypeStructs used to lower a graph for a given artifact shape."""
+    f32 = jnp.float32
+    x = jax.ShapeDtypeStruct((chunk, d), f32)
+    v = jax.ShapeDtypeStruct((c, d), f32)
+    w = jax.ShapeDtypeStruct((chunk,), f32)
+    m = jax.ShapeDtypeStruct((), f32)
+    if graph == "kmeans":
+        return (x, v, w)
+    return (x, v, w, m)

@@ -1,0 +1,70 @@
+"""AOT pipeline tests: the artifact matrix lowers to loadable HLO text and
+the golden vectors are self-consistent."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot, model
+
+
+def test_artifact_matrix_covers_experiments():
+    names = {n for n, _, _, _ in aot.artifact_matrix()}
+    # Every experiment combo from DESIGN.md §5 must be present for all graphs.
+    for g in ("fcm", "classic", "kmeans"):
+        for d, c in [(4, 3), (8, 2), (18, 2), (28, 50), (41, 23)]:
+            assert f"{g}_d{d}_c{c}" in names
+
+
+def test_lowered_hlo_is_text_module():
+    text = aot.lower_artifact("fcm", 4, 3, chunk=64)
+    assert text.startswith("HloModule")
+    assert "f32[64,4]" in text  # x param at the requested shape
+    assert "f32[3,4]" in text  # centers param
+
+
+def test_kmeans_has_three_params():
+    text = aot.lower_artifact("kmeans", 4, 3, chunk=64)
+    assert text.startswith("HloModule")
+    # kmeans takes (x, v, w) — no fuzzifier scalar in the entry layout.
+    layout = text.splitlines()[0]
+    params = layout.split("entry_computation_layout={(")[1].split(")->")[0]
+    assert "f32[]" not in params, params
+    assert params.count("f32[") == 3, params
+
+
+def test_build_writes_manifest_and_artifacts():
+    with tempfile.TemporaryDirectory() as td:
+        # Build just one artifact (substring filter) without golden vectors.
+        aot.build(td, only="fcm_d4_c3", golden=False)
+        manifest = json.load(open(os.path.join(td, "manifest.json")))
+        assert manifest["chunk"] == aot.CHUNK
+        arts = manifest["artifacts"]
+        assert len(arts) == 1
+        a = arts[0]
+        assert a["name"] == "fcm_d4_c3"
+        assert a["params"] == 4
+        path = os.path.join(td, a["file"])
+        assert os.path.exists(path)
+        assert open(path).read().startswith("HloModule")
+
+
+def test_golden_case_roundtrip():
+    case = aot._golden_case("fcm", 4, 3, n=64, seed=0)
+    assert len(case["x"]) == 64 * 4
+    assert len(case["v"]) == 3 * 4
+    assert len(case["out_vnum"]) == 3 * 4
+    assert len(case["out_wacc"]) == 3
+    # Zero-weight tail present (padding contract exercised).
+    assert any(w == 0.0 for w in case["w"])
+    assert all(w >= 0.0 for w in case["w"])
+
+
+@pytest.mark.parametrize("graph", ["fcm", "classic", "kmeans"])
+def test_each_graph_lowers_at_production_combo(graph):
+    """One full-size lowering per graph (smoke for the matrix build)."""
+    text = aot.lower_artifact(graph, 18, 6, chunk=aot.CHUNK)
+    assert text.startswith("HloModule")
+    assert f"f32[{aot.CHUNK},18]" in text

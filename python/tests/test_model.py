@@ -1,0 +1,122 @@
+"""Layer-2 model graph tests: shapes, the outer-loop oracle, and the
+convergence behaviour the paper's design relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _blobs(n, d, c, seed, spread=0.3):
+    """c well-separated Gaussian blobs (n total records)."""
+    key = jax.random.PRNGKey(seed)
+    kc, kx = jax.random.split(key)
+    centers = jax.random.normal(kc, (c, d), jnp.float32) * 4.0
+    assign = jnp.arange(n) % c
+    noise = jax.random.normal(kx, (n, d), jnp.float32) * spread
+    return centers[assign] + noise, centers
+
+
+def test_graph_shapes():
+    for graph in model.GRAPHS:
+        args = model.example_args(graph, 256, 8, 4)
+        assert args[0].shape == (256, 8)
+        assert args[1].shape == (4, 8)
+        assert args[2].shape == (256,)
+        if graph != "kmeans":
+            assert args[3].shape == ()
+
+
+def test_graphs_lower_without_error():
+    """Every graph traces and lowers at a small shape (fast sanity ahead of
+    the full AOT matrix)."""
+    for graph, fn in model.GRAPHS.items():
+        args = model.example_args(graph, 64, 4, 3)
+        lowered = jax.jit(fn).lower(*args)
+        assert lowered is not None
+
+
+def test_fcm_objective_decreases():
+    """The weighted objective (paper Eq. 2) is non-increasing along the
+    FCM iteration — the Lyapunov property the convergence test relies on."""
+    x, _ = _blobs(512, 4, 3, 0)
+    v = x[:3] + 0.5
+    objs = []
+    w = jnp.ones(512)
+    for _ in range(8):
+        v_num, w_acc, obj = ref.fcm_chunk_step(x, v, w, 2.0)
+        objs.append(float(obj))
+        v = v_num / jnp.maximum(w_acc[:, None], 1e-30)
+    # Allow tiny float wiggle at the converged tail.
+    for a, b in zip(objs, objs[1:]):
+        assert b <= a * (1.0 + 1e-4), objs
+
+
+def test_fcm_full_recovers_blobs():
+    """On well-separated blobs the full loop recovers the true centers."""
+    x, true_centers = _blobs(900, 3, 3, 1, spread=0.15)
+    v0 = x[jnp.asarray([0, 1, 2])] + 0.3
+    v, _, iters, _ = ref.fcm_full(x, v0, 2.0, 1e-10, 200)
+    # Match each found center to its nearest true center.
+    d2 = ref.dist2(v, true_centers)
+    err = float(jnp.max(jnp.min(d2, axis=1)))
+    assert err < 0.05, (err, iters)
+    assert iters < 200
+
+
+def test_kmeans_full_recovers_blobs():
+    x, true_centers = _blobs(900, 3, 3, 2, spread=0.15)
+    v0 = x[jnp.asarray([0, 1, 2])] + 0.3
+    v, iters, _ = ref.kmeans_full(x, v0, 1e-10, 200)
+    d2 = ref.dist2(v, true_centers)
+    assert float(jnp.max(jnp.min(d2, axis=1))) < 0.05
+    assert iters < 200
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_warm_start_converges_no_slower(seed):
+    """The paper's driver claim (Table 2): seeding with approximate centers
+    does not *materially increase* the iteration count vs a mismatched
+    start. Individual runs are noisy (different basins can have different
+    local convergence rates), so the bound is statistical: warm must not
+    exceed 1.5x cold + 5."""
+    x, true_centers = _blobs(600, 4, 3, seed, spread=0.3)
+    key = jax.random.PRNGKey(seed + 7)
+    cold0 = jax.random.normal(key, true_centers.shape, jnp.float32) * 4.0
+    warm0 = true_centers + 0.05
+    # eps must stay above the f32 center-shift noise floor (~1e-12) or a
+    # symmetric start can oscillate forever without "converging".
+    _, _, it_cold, _ = ref.fcm_full(x, cold0, 2.0, 1e-8, 500)
+    _, _, it_warm, _ = ref.fcm_full(x, warm0, 2.0, 1e-8, 500)
+    assert it_warm <= it_cold * 1.5 + 5, (it_warm, it_cold)
+
+
+def test_weighted_merge_equals_full_pass_on_split():
+    """WFCM over per-partition (centers, weights) approximates the
+    full-data FCM — the core BigFCM soundness argument.  With partitions
+    that are random splits (iid), one fast-FCM step from the same seeds
+    followed by the weighted merge must land close to the full-data step."""
+    x, _ = _blobs(1024, 4, 3, 3, spread=0.4)
+    v_seed = x[jnp.asarray([0, 1, 2])]
+    w = jnp.ones(1024)
+
+    # Full-data one-step update.
+    v_num, w_acc, _ = ref.fcm_chunk_step(x, v_seed, w, 2.0)
+    v_full = v_num / w_acc[:, None]
+
+    # Two-partition update + weighted merge (per-cluster weighted average).
+    merged_num = jnp.zeros_like(v_num)
+    merged_wacc = jnp.zeros_like(w_acc)
+    for part in (x[:512], x[512:]):
+        pn, pw, _ = ref.fcm_chunk_step(part, v_seed, jnp.ones(part.shape[0]), 2.0)
+        merged_num = merged_num + pn
+        merged_wacc = merged_wacc + pw
+    v_merged = merged_num / merged_wacc[:, None]
+
+    np.testing.assert_allclose(
+        np.asarray(v_merged), np.asarray(v_full), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,24 @@
+//! `cargo bench --bench ablations` — the design-choice ablations of
+//! DESIGN.md §6: driver pre-clustering on/off, fast-vs-classic FCM update,
+//! weighted-vs-unweighted reduce merge.
+
+use bigfcm::bench::tables::{ablation_driver, ablation_fast_vs_classic, ablation_weighted_merge, Ctx};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let ctx = Ctx::quick();
+    for result in [
+        ablation_driver(&ctx),
+        ablation_fast_vs_classic(&ctx),
+        ablation_weighted_merge(&ctx),
+    ] {
+        match result {
+            Ok(table) => println!("{table}"),
+            Err(e) => {
+                eprintln!("ablation failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    println!("regenerated in {:.1?}", t0.elapsed());
+}

@@ -1,0 +1,75 @@
+//! `cargo bench --bench micro_hotpath` — micro-benchmarks of the per-chunk
+//! hot path (the §Perf working set): native vs PJRT chunk step, chunk-size
+//! sensitivity, and marshalling overhead. Results feed EXPERIMENTS.md §Perf.
+
+use std::path::Path;
+use std::time::Instant;
+
+use bigfcm::data::synth::susy_like;
+use bigfcm::fcm::native::fcm_partials_native;
+use bigfcm::fcm::ChunkBackend;
+use bigfcm::runtime::PjrtRuntime;
+
+fn bench<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
+    // Warm-up then min-of-N (robust to scheduler noise).
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    println!("{label:<44} {:>10.3} ms", best * 1e3);
+    best
+}
+
+fn main() {
+    let data = susy_like(65_536, 1);
+    let v = data.features.slice_rows(0, 6);
+    let w = vec![1.0f32; data.features.rows()];
+
+    println!("== micro_hotpath (SUSY-like 65 536 x 18, C=6, m=2) ==");
+
+    // Native chunk math at various slice sizes (cache behaviour).
+    for rows in [4_096usize, 16_384, 65_536] {
+        let x = data.features.slice_rows(0, rows);
+        let ws = &w[..rows];
+        bench(&format!("native fcm_partials {rows} rows"), 5, || {
+            std::hint::black_box(fcm_partials_native(&x, &v, ws, 2.0));
+        });
+    }
+
+    // Throughput summary for the full pass.
+    let t = bench("native fcm_partials 65536 rows (again)", 5, || {
+        std::hint::black_box(fcm_partials_native(&data.features, &v, &w, 2.0));
+    });
+    let flops = 65_536.0 * 6.0 * (3.0 * 18.0 + 8.0); // dist + um + accum est.
+    println!(
+        "native throughput ≈ {:.2} GFLOP/s ({:.1} Mrec/s)",
+        flops / t / 1e9,
+        65_536.0 / t / 1e6
+    );
+
+    // PJRT path (when artifacts exist): end-to-end chunk execution incl.
+    // marshalling, and the marshalling alone.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = PjrtRuntime::open(&dir).expect("open runtime");
+        bench("pjrt fcm_partials 65536 rows (16 chunks)", 3, || {
+            std::hint::black_box(rt.fcm_partials(&data.features, &v, &w, 2.0).unwrap());
+        });
+        let x4096 = data.features.slice_rows(0, 4096);
+        bench("pjrt fcm_partials 4096 rows (1 chunk)", 5, || {
+            std::hint::black_box(rt.fcm_partials(&x4096, &v, &w[..4096], 2.0).unwrap());
+        });
+        let stats = rt.stats().unwrap();
+        println!(
+            "pjrt device time: {:?} over {} chunks ({:.3} ms/chunk)",
+            stats.exec_time,
+            stats.chunks,
+            stats.exec_time.as_secs_f64() * 1e3 / stats.chunks.max(1) as f64
+        );
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` for the PJRT rows)");
+    }
+}

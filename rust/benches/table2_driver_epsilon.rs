@@ -1,0 +1,21 @@
+//! `cargo bench --bench table2_driver_epsilon` — regenerates driver-epsilon sweep (paper Table 2).
+//!
+//! Quick scale by default; run the heavier sweep with
+//! `target/release/bigfcm bench --exp table2 --full`.
+
+use bigfcm::bench::tables::{table2, Ctx};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let ctx = Ctx::quick();
+    match table2(&ctx) {
+        Ok(table) => {
+            println!("{table}");
+            println!("regenerated in {:.1?}", t0.elapsed());
+        }
+        Err(e) => {
+            eprintln!("table2_driver_epsilon failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

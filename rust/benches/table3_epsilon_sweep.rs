@@ -1,0 +1,34 @@
+//! `cargo bench --bench table3_epsilon_sweep` — regenerates the
+//! method × epsilon grid (paper Table 3) and the Figure 2 series.
+//!
+//! Quick scale by default; run the heavier sweep with
+//! `target/release/bigfcm bench --exp table3 --full`.
+
+use bigfcm::bench::tables::{fig2, table3, Ctx};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let ctx = Ctx::quick();
+    match table3(&ctx) {
+        Ok(table) => println!("{table}"),
+        Err(e) => {
+            eprintln!("table3 failed: {e}");
+            std::process::exit(1);
+        }
+    }
+    // Figure 2: epsilon vs modelled time, BigFCM vs Mahout FKM on SUSY.
+    match fig2(&ctx) {
+        Ok(series) => {
+            println!("\n== Figure 2 series (SUSY, C=2, m=2) ==");
+            println!("{:>10} {:>14} {:>14}", "epsilon", "BigFCM(s)", "MahoutFKM(s)");
+            for (eps, big, fkm) in series {
+                println!("{eps:>10.0e} {big:>14.1} {fkm:>14.1}");
+            }
+        }
+        Err(e) => {
+            eprintln!("fig2 failed: {e}");
+            std::process::exit(1);
+        }
+    }
+    println!("regenerated in {:.1?}", t0.elapsed());
+}

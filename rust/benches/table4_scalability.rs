@@ -1,0 +1,41 @@
+//! `cargo bench --bench table4_scalability` — regenerates time-vs-data-size
+//! (paper Table 4) and the Figure 3 series.
+//!
+//! Quick scale by default; run the heavier sweep with
+//! `target/release/bigfcm bench --exp table4 --full`.
+
+use bigfcm::bench::tables::{fig3, table4, Ctx};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let ctx = Ctx::quick();
+    match table4(&ctx) {
+        Ok(table) => println!("{table}"),
+        Err(e) => {
+            eprintln!("table4 failed: {e}");
+            std::process::exit(1);
+        }
+    }
+    // Figure 3: the same sweep as series (the paper plots BigFCM ×100 for
+    // visibility; we print raw values plus the ×100 column).
+    match fig3(&ctx) {
+        Ok(series) => {
+            println!("\n== Figure 3 series (SUSY-like, C=6, eps=5e-11) ==");
+            println!(
+                "{:>10} {:>12} {:>14} {:>12} {:>12}",
+                "records", "BigFCM(s)", "BigFCMx100(s)", "KM(s)", "FKM(s)"
+            );
+            for (n, big, km, fkm) in series {
+                println!(
+                    "{n:>10} {big:>12.1} {:>14.1} {km:>12.1} {fkm:>12.1}",
+                    big * 100.0
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("fig3 failed: {e}");
+            std::process::exit(1);
+        }
+    }
+    println!("regenerated in {:.1?}", t0.elapsed());
+}

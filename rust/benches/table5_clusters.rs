@@ -1,0 +1,21 @@
+//! `cargo bench --bench table5_clusters` — regenerates time vs cluster count (paper Table 5).
+//!
+//! Quick scale by default; run the heavier sweep with
+//! `target/release/bigfcm bench --exp table5 --full`.
+
+use bigfcm::bench::tables::{table5, Ctx};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let ctx = Ctx::quick();
+    match table5(&ctx) {
+        Ok(table) => {
+            println!("{table}");
+            println!("regenerated in {:.1?}", t0.elapsed());
+        }
+        Err(e) => {
+            eprintln!("table5_clusters failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! `cargo bench --bench table6_datasets` — regenerates cross-dataset comparison (paper Table 6).
+//!
+//! Quick scale by default; run the heavier sweep with
+//! `target/release/bigfcm bench --exp table6 --full`.
+
+use bigfcm::bench::tables::{table6, Ctx};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let ctx = Ctx::quick();
+    match table6(&ctx) {
+        Ok(table) => {
+            println!("{table}");
+            println!("regenerated in {:.1?}", t0.elapsed());
+        }
+        Err(e) => {
+            eprintln!("table6_datasets failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

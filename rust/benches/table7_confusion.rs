@@ -1,0 +1,21 @@
+//! `cargo bench --bench table7_confusion` — regenerates confusion-matrix accuracy (paper Table 7).
+//!
+//! Quick scale by default; run the heavier sweep with
+//! `target/release/bigfcm bench --exp table7 --full`.
+
+use bigfcm::bench::tables::{table7, Ctx};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let ctx = Ctx::quick();
+    match table7(&ctx) {
+        Ok(table) => {
+            println!("{table}");
+            println!("regenerated in {:.1?}", t0.elapsed());
+        }
+        Err(e) => {
+            eprintln!("table7_confusion failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! `cargo bench --bench table8_silhouette` — regenerates silhouette width (paper Table 8).
+//!
+//! Quick scale by default; run the heavier sweep with
+//! `target/release/bigfcm bench --exp table8 --full`.
+
+use bigfcm::bench::tables::{table8, Ctx};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let ctx = Ctx::quick();
+    match table8(&ctx) {
+        Ok(table) => {
+            println!("{table}");
+            println!("regenerated in {:.1?}", t0.elapsed());
+        }
+        Err(e) => {
+            eprintln!("table8_silhouette failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Table/figure regeneration harness.
+//!
+//! Every table and figure of the paper's evaluation (§4) has a function
+//! here that reruns the experiment on this machine and prints the same
+//! rows the paper reports. `rust/benches/table*.rs` and the CLI
+//! (`bigfcm bench --exp tableN`) both call into this module.
+//!
+//! Times are reported as **modelled cluster seconds** (SimClock; DESIGN.md
+//! §3) next to the real wall seconds of this process — we claim shape
+//! fidelity (who wins, by what factor, how it scales), not absolute equality
+//! with the paper's 2016 testbed.
+
+pub mod tables;
+
+use std::fmt;
+
+/// A rendered experiment table.
+#[derive(Clone, Debug)]
+pub struct TableReport {
+    pub id: &'static str,
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl TableReport {
+    pub fn new(id: &'static str, title: impl Into<String>, header: &[&str]) -> Self {
+        Self {
+            id,
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) {
+        self.notes.push(n.into());
+    }
+}
+
+impl fmt::Display for TableReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "\n== {} — {} ==", self.id, self.title)?;
+        // Column widths.
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |f: &mut fmt::Formatter<'_>, cells: &[String]| -> fmt::Result {
+            write!(f, "|")?;
+            for (i, c) in cells.iter().enumerate() {
+                write!(f, " {:<width$} |", c, width = widths[i])?;
+            }
+            writeln!(f)
+        };
+        line(f, &self.header)?;
+        let total: usize = widths.iter().map(|w| w + 3).sum::<usize>() + 1;
+        writeln!(f, "{}", "-".repeat(total))?;
+        for row in &self.rows {
+            line(f, row)?;
+        }
+        for n in &self.notes {
+            writeln!(f, "  note: {n}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Experiment scale: quick (CI/bench default) vs full (closer to paper).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    /// Records for SUSY-like runs.
+    pub susy_n: usize,
+    /// Records for HIGGS-like runs.
+    pub higgs_n: usize,
+    /// Records for KDD-like runs.
+    pub kdd_n: usize,
+    /// Iteration cap for the job-per-iteration baselines (they converge or
+    /// hit this; the paper used 1000).
+    pub baseline_max_iter: usize,
+    /// Sizes for the Table 4 sweep.
+    pub sweep: &'static [usize],
+}
+
+impl Scale {
+    /// Fast preset used by `cargo bench` (finishes in minutes).
+    pub fn quick() -> Self {
+        Self {
+            susy_n: 20_000,
+            higgs_n: 20_000,
+            kdd_n: 20_000,
+            baseline_max_iter: 60,
+            sweep: &[2_000, 4_000, 8_000, 16_000, 32_000, 64_000],
+        }
+    }
+
+    /// Heavier preset (CLI `--full`): same shapes at ~10× the records.
+    pub fn full() -> Self {
+        Self {
+            susy_n: 200_000,
+            higgs_n: 200_000,
+            kdd_n: 100_000,
+            baseline_max_iter: 200,
+            sweep: &[20_000, 40_000, 80_000, 160_000, 320_000, 640_000, 1_000_000],
+        }
+    }
+}
+
+/// Format modelled seconds the way the paper prints them.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 3600.0 {
+        format!("{:.0} ({:.1}h)", s, s / 3600.0)
+    } else if s >= 100.0 {
+        format!("{s:.0}")
+    } else {
+        format!("{s:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders() {
+        let mut t = TableReport::new("T0", "demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.note("hello");
+        let s = format!("{t}");
+        assert!(s.contains("T0"));
+        assert!(s.contains("| 1"));
+        assert!(s.contains("note: hello"));
+    }
+
+    #[test]
+    fn fmt_s_bands() {
+        assert_eq!(fmt_s(42.123), "42.1");
+        assert_eq!(fmt_s(432.0), "432");
+        assert!(fmt_s(7200.0).contains("2.0h"));
+    }
+}

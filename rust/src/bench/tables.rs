@@ -1,0 +1,516 @@
+//! One function per paper table/figure. See module docs in [`crate::bench`].
+
+use std::sync::Arc;
+
+use crate::baselines::{run_baseline, BaselineAlgo, BaselineRun};
+use crate::bench::{fmt_s, Scale, TableReport};
+use crate::config::Config;
+use crate::coordinator::{BigFcm, BigFcmRun};
+use crate::data::{builtin, Dataset};
+use crate::error::Result;
+use crate::fcm::{assign_hard, ChunkBackend, NativeBackend};
+use crate::hdfs::BlockStore;
+use crate::mapreduce::{Engine, EngineOptions};
+use crate::metrics::{confusion_accuracy, silhouette_width_sampled, speedup};
+use crate::prng::Pcg;
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub cfg: Config,
+    pub scale: Scale,
+    pub backend: Arc<dyn ChunkBackend>,
+}
+
+impl Ctx {
+    pub fn new(cfg: Config, scale: Scale, backend: Arc<dyn ChunkBackend>) -> Self {
+        Self { cfg, scale, backend }
+    }
+
+    /// Quick-scale context on the native backend (bench default).
+    pub fn quick() -> Self {
+        Self::new(Config::default(), Scale::quick(), Arc::new(NativeBackend))
+    }
+
+    fn store(&self, d: &Dataset) -> Result<BlockStore> {
+        BlockStore::in_memory(
+            d.name.clone(),
+            &d.features,
+            self.cfg.cluster.block_records.min((d.rows() / 4).max(1024)),
+            self.cfg.cluster.workers,
+        )
+    }
+
+    fn engine(&self) -> Engine {
+        Engine::new(
+            EngineOptions { workers: self.cfg.cluster.workers, ..Default::default() },
+            self.cfg.overhead.clone(),
+        )
+    }
+
+    fn bigfcm(&self, store: &BlockStore, c: usize, m: f64, eps: f64) -> Result<BigFcmRun> {
+        let mut engine = self.engine();
+        BigFcm::new(self.cfg.clone())
+            .backend(Arc::clone(&self.backend))
+            .clusters(c)
+            .fuzzifier(m)
+            .epsilon(eps)
+            .run_with_engine(store, &mut engine)
+    }
+
+    fn baseline(
+        &self,
+        algo: BaselineAlgo,
+        store: &BlockStore,
+        c: usize,
+        m: f64,
+        eps: f64,
+    ) -> Result<BaselineRun> {
+        let mut cfg = self.cfg.clone();
+        cfg.fcm.clusters = c;
+        cfg.fcm.fuzzifier = m;
+        cfg.fcm.epsilon = eps;
+        cfg.fcm.max_iterations = self.scale.baseline_max_iter;
+        let mut engine = self.engine();
+        run_baseline(algo, &cfg, store, Arc::clone(&self.backend), &mut engine)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — driver epsilon vs total time (SUSY, C=10, m=2)
+// ---------------------------------------------------------------------------
+
+pub fn table2(ctx: &Ctx) -> Result<TableReport> {
+    let data = builtin::susy(ctx.scale.susy_n, ctx.cfg.seed);
+    let store = ctx.store(&data)?;
+    let mut t = TableReport::new(
+        "Table 2",
+        format!(
+            "driver-epsilon sweep on {} (n={}, C=10, m=2) — modelled seconds",
+            data.name,
+            data.rows()
+        ),
+        &["Driver", "Total modelled (s)", "Wall (s)", "Combiner iters (job)", "Flag"],
+    );
+
+    // Column 1: no driver pre-clustering (random seeds).
+    let mut engine = ctx.engine();
+    let run = BigFcm::new(ctx.cfg.clone())
+        .backend(Arc::clone(&ctx.backend))
+        .clusters(10)
+        .fuzzifier(2.0)
+        .epsilon(5.0e-11)
+        .without_driver()
+        .run_with_engine(&store, &mut engine)?;
+    t.row(vec![
+        "random seed".into(),
+        fmt_s(run.modelled_s()),
+        format!("{:.2}", run.wall.as_secs_f64()),
+        run.reduce_iterations.to_string(),
+        "-".into(),
+    ]);
+
+    for eps in [5.0e-6, 5.0e-8, 5.0e-10, 5.0e-11] {
+        let mut engine = ctx.engine();
+        let run = BigFcm::new(ctx.cfg.clone())
+            .backend(Arc::clone(&ctx.backend))
+            .clusters(10)
+            .fuzzifier(2.0)
+            .epsilon(5.0e-11)
+            .driver_epsilon(eps)
+            .run_with_engine(&store, &mut engine)?;
+        t.row(vec![
+            format!("eps={eps:.0e}"),
+            fmt_s(run.modelled_s()),
+            format!("{:.2}", run.wall.as_secs_f64()),
+            run.reduce_iterations.to_string(),
+            if run.driver.flag_fcm { "FCM" } else { "WFCMPB" }.into(),
+        ]);
+    }
+    t.note("paper: 5432s (random) -> 882s (eps=5e-11): tighter driver eps must not increase total time");
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 + Figure 2 — methods × epsilon on SUSY and HIGGS (C=2, m=2)
+// ---------------------------------------------------------------------------
+
+pub const TABLE3_EPSILONS: [f64; 4] = [5.0e-7, 5.0e-5, 5.0e-3, 5.0e-2];
+
+pub fn table3(ctx: &Ctx) -> Result<TableReport> {
+    let mut t = TableReport::new(
+        "Table 3",
+        "method x epsilon, C=2, m=2 — modelled seconds",
+        &["Dataset", "Method", "eps=5e-7", "eps=5e-5", "eps=5e-3", "eps=5e-2"],
+    );
+    for (name, data) in [
+        ("SUSY", builtin::susy(ctx.scale.susy_n, ctx.cfg.seed)),
+        ("HIGGS", builtin::higgs(ctx.scale.higgs_n, ctx.cfg.seed)),
+    ] {
+        let store = ctx.store(&data)?;
+        for method in ["Mahout FKM", "Mahout KM", "BigFCM"] {
+            let mut cells = vec![name.to_string(), method.to_string()];
+            for eps in TABLE3_EPSILONS {
+                let s = match method {
+                    "Mahout FKM" => ctx
+                        .baseline(BaselineAlgo::FuzzyKMeans, &store, 2, 2.0, eps)?
+                        .modelled_s(),
+                    "Mahout KM" => ctx
+                        .baseline(BaselineAlgo::KMeans, &store, 2, 2.0, eps)?
+                        .modelled_s(),
+                    _ => ctx.bigfcm(&store, 2, 2.0, eps)?.modelled_s(),
+                };
+                cells.push(fmt_s(s));
+            }
+            t.row(cells);
+        }
+    }
+    t.note("paper shape: BigFCM flat in eps; Mahout FKM blows up as eps tightens (141887s at 5e-7 on SUSY)");
+    Ok(t)
+}
+
+/// Figure 2 series: (epsilon, BigFCM modelled s, Mahout FKM modelled s) on SUSY.
+pub fn fig2(ctx: &Ctx) -> Result<Vec<(f64, f64, f64)>> {
+    let data = builtin::susy(ctx.scale.susy_n, ctx.cfg.seed);
+    let store = ctx.store(&data)?;
+    let mut out = Vec::new();
+    for eps in TABLE3_EPSILONS {
+        let big = ctx.bigfcm(&store, 2, 2.0, eps)?.modelled_s();
+        let fkm = ctx
+            .baseline(BaselineAlgo::FuzzyKMeans, &store, 2, 2.0, eps)?
+            .modelled_s();
+        out.push((eps, big, fkm));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 + Figure 3 — time vs data size (SUSY-like, C=6, eps=5e-11)
+// ---------------------------------------------------------------------------
+
+pub fn table4(ctx: &Ctx) -> Result<TableReport> {
+    let mut t = TableReport::new(
+        "Table 4",
+        "time vs data size (C=6, eps=5e-11, m=2) — modelled seconds",
+        &["Records", "~Bytes", "BigFCM (s)", "Mahout KM (s)", "Mahout FKM (s)", "KM/Big", "FKM/Big"],
+    );
+    for &n in ctx.scale.sweep {
+        let data = builtin::susy(n, ctx.cfg.seed);
+        let store = ctx.store(&data)?;
+        let big = ctx.bigfcm(&store, 6, 2.0, 5.0e-11)?;
+        let km = ctx.baseline(BaselineAlgo::KMeans, &store, 6, 2.0, 5.0e-11)?;
+        let fkm = ctx.baseline(BaselineAlgo::FuzzyKMeans, &store, 6, 2.0, 5.0e-11)?;
+        t.row(vec![
+            n.to_string(),
+            store.total_bytes().to_string(),
+            fmt_s(big.modelled_s()),
+            fmt_s(km.modelled_s()),
+            fmt_s(fkm.modelled_s()),
+            format!("{:.0}x", speedup(km.modelled_s(), big.modelled_s())),
+            format!("{:.0}x", speedup(fkm.modelled_s(), big.modelled_s())),
+        ]);
+    }
+    t.note("paper: 287x over KM, 493x over FKM at 4M records; BigFCM near-linear in N");
+    Ok(t)
+}
+
+/// Figure 3 series: (records, BigFCM, KM, FKM) — same sweep as Table 4.
+pub fn fig3(ctx: &Ctx) -> Result<Vec<(usize, f64, f64, f64)>> {
+    let mut out = Vec::new();
+    for &n in ctx.scale.sweep {
+        let data = builtin::susy(n, ctx.cfg.seed);
+        let store = ctx.store(&data)?;
+        let big = ctx.bigfcm(&store, 6, 2.0, 5.0e-11)?.modelled_s();
+        let km = ctx
+            .baseline(BaselineAlgo::KMeans, &store, 6, 2.0, 5.0e-11)?
+            .modelled_s();
+        let fkm = ctx
+            .baseline(BaselineAlgo::FuzzyKMeans, &store, 6, 2.0, 5.0e-11)?
+            .modelled_s();
+        out.push((n, big, km, fkm));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — time vs number of clusters (HIGGS, eps=5e-11, m=2)
+// ---------------------------------------------------------------------------
+
+pub fn table5(ctx: &Ctx) -> Result<TableReport> {
+    let data = builtin::higgs(ctx.scale.higgs_n, ctx.cfg.seed);
+    let store = ctx.store(&data)?;
+    let mut t = TableReport::new(
+        "Table 5",
+        format!("BigFCM time vs clusters on {} (n={})", data.name, data.rows()),
+        &["Centroids", "Modelled (s)", "Wall (s)", "s per cluster"],
+    );
+    for c in [6usize, 10, 15, 50] {
+        let run = ctx.bigfcm(&store, c, 2.0, 5.0e-11)?;
+        t.row(vec![
+            c.to_string(),
+            fmt_s(run.modelled_s()),
+            format!("{:.2}", run.wall.as_secs_f64()),
+            format!("{:.2}", run.modelled_s() / c as f64),
+        ]);
+    }
+    t.note("paper claim: cost grows ~linearly in C (fast O(n.c) update in the combiner)");
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 6 — cross-dataset FKM vs BigFCM
+// ---------------------------------------------------------------------------
+
+/// Per-dataset parameters from the paper's Table 6. Pima and KDD99 are
+/// min-max normalised first (the paper normalises KDD99, §4.1; Pima's raw
+/// feature scales differ by 300x, which would reduce Euclidean FCM to
+/// clustering on serum insulin alone).
+pub fn table6_datasets(ctx: &Ctx) -> Vec<(Dataset, usize, f64, f64)> {
+    let normalise = |mut d: Dataset| {
+        let s = crate::data::normalize::Scaler::min_max(&d.features);
+        s.apply(&mut d.features);
+        d
+    };
+    vec![
+        (builtin::susy(ctx.scale.susy_n, ctx.cfg.seed), 2, 2.0, 5.0e-7),
+        (builtin::higgs(ctx.scale.higgs_n, ctx.cfg.seed), 2, 2.0, 5.0e-7),
+        (normalise(builtin::pima(ctx.cfg.seed)), 2, 1.2, 5.0e-2),
+        (builtin::iris(), 3, 1.2, 5.0e-2),
+        (normalise(builtin::kdd99(ctx.scale.kdd_n, ctx.cfg.seed)), 23, 1.2, 5.0e-7),
+    ]
+}
+
+pub fn table6(ctx: &Ctx) -> Result<TableReport> {
+    let mut t = TableReport::new(
+        "Table 6",
+        "cross-dataset modelled time, Mahout FKM vs BigFCM",
+        &["Dataset", "C", "m", "eps", "Mahout FKM (s)", "BigFCM (s)", "Speedup"],
+    );
+    let mut speedups = Vec::new();
+    for (data, c, m, eps) in table6_datasets(ctx) {
+        let store = ctx.store(&data)?;
+        let fkm = ctx.baseline(BaselineAlgo::FuzzyKMeans, &store, c, m, eps)?;
+        let big = ctx.bigfcm(&store, c, m, eps)?;
+        let sp = speedup(fkm.modelled_s(), big.modelled_s());
+        speedups.push(sp);
+        t.row(vec![
+            data.name.clone(),
+            c.to_string(),
+            format!("{m}"),
+            format!("{eps:.0e}"),
+            fmt_s(fkm.modelled_s()),
+            fmt_s(big.modelled_s()),
+            format!("{sp:.1}x"),
+        ]);
+    }
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    t.note(format!(
+        "average speedup {avg:.1}x (paper: 5.35x-44x, average 18.22x)"
+    ));
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 7 — confusion-matrix accuracy
+// ---------------------------------------------------------------------------
+
+pub fn table7(ctx: &Ctx) -> Result<TableReport> {
+    let mut t = TableReport::new(
+        "Table 7",
+        "confusion-matrix accuracy (cluster-class matched)",
+        &["Dataset", "Mahout FKM", "BigFCM", "paper FKM", "paper BigFCM"],
+    );
+    let paper: [(&str, &str); 5] = [
+        ("50.0%", "50.0%"),
+        ("50.0%", "50.0%"),
+        ("65.7%", "66.1%"),
+        ("89.1%", "92.0%"),
+        ("78.0%", "82.0%"),
+    ];
+    for ((data, c, m, eps), (p_fkm, p_big)) in table6_datasets(ctx).into_iter().zip(paper) {
+        let labels = data.labels.clone().expect("table7 datasets are labelled");
+        let store = ctx.store(&data)?;
+        let fkm = ctx.baseline(BaselineAlgo::FuzzyKMeans, &store, c, m, eps)?;
+        let big = ctx.bigfcm(&store, c, m, eps)?;
+        let acc_fkm = confusion_accuracy(&assign_hard(&data.features, &fkm.centers), &labels, c);
+        let acc_big = confusion_accuracy(&assign_hard(&data.features, &big.centers), &labels, c);
+        t.row(vec![
+            data.name.clone(),
+            format!("{:.1}%", acc_fkm * 100.0),
+            format!("{:.1}%", acc_big * 100.0),
+            p_fkm.into(),
+            p_big.into(),
+        ]);
+    }
+    t.note("shape claim: BigFCM accuracy >= FKM accuracy on every dataset");
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 8 — silhouette width on HIGGS at 1k-4k samples
+// ---------------------------------------------------------------------------
+
+pub fn table8(ctx: &Ctx) -> Result<TableReport> {
+    let data = builtin::higgs(ctx.scale.higgs_n, ctx.cfg.seed);
+    let store = ctx.store(&data)?;
+    let mut t = TableReport::new(
+        "Table 8",
+        format!("silhouette width on {} (C=2, eps=5e-11, m=2)", data.name),
+        &["Method", "1k", "2k", "3k", "4k"],
+    );
+    let fkm = ctx.baseline(BaselineAlgo::FuzzyKMeans, &store, 2, 2.0, 5.0e-11)?;
+    let big = ctx.bigfcm(&store, 2, 2.0, 5.0e-11)?;
+    // Mahout's coarse rounding degenerates its centers; we model that by
+    // rounding FKM centers to one decimal, as the paper footnotes ("weak
+    // values … due to the rounding made to enable a faster execution").
+    let mut fkm_centers = fkm.centers.clone();
+    for v in fkm_centers.as_mut_slice() {
+        *v = (*v * 10.0).round() / 10.0;
+    }
+    for (label, centers) in [("Mahout FKM", &fkm_centers), ("BigFCM", &big.centers)] {
+        let assign = assign_hard(&data.features, centers);
+        let mut cells = vec![label.to_string()];
+        for (i, k) in [1000usize, 2000, 3000, 4000].into_iter().enumerate() {
+            let mut rng = Pcg::new(ctx.cfg.seed ^ (i as u64 + 1));
+            let s = silhouette_width_sampled(&data.features, &assign, k, &mut rng);
+            cells.push(format!("{s:.4}"));
+        }
+        t.row(cells);
+    }
+    t.note("paper: FKM 0.0 at every size; BigFCM ~0.063 (positive, stable across sample sizes)");
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Ablations (DESIGN.md §6)
+// ---------------------------------------------------------------------------
+
+pub fn ablation_driver(ctx: &Ctx) -> Result<TableReport> {
+    let data = builtin::susy(ctx.scale.susy_n, ctx.cfg.seed);
+    let store = ctx.store(&data)?;
+    let mut t = TableReport::new(
+        "Ablation A1",
+        "driver pre-clustering on/off (SUSY, C=6, eps=5e-11)",
+        &["Arm", "Modelled (s)", "Combiner iters"],
+    );
+    for (label, with_driver) in [("with driver", true), ("without driver", false)] {
+        let mut engine = ctx.engine();
+        let mut b = BigFcm::new(ctx.cfg.clone())
+            .backend(Arc::clone(&ctx.backend))
+            .clusters(6)
+            .epsilon(5.0e-11);
+        if !with_driver {
+            b = b.without_driver();
+        }
+        let run = b.run_with_engine(&store, &mut engine)?;
+        t.row(vec![
+            label.into(),
+            fmt_s(run.modelled_s()),
+            run.reduce_iterations.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+pub fn ablation_fast_vs_classic(ctx: &Ctx) -> Result<TableReport> {
+    use crate::fcm::loops::{run_fcm, FcmParams, Variant};
+    use std::time::Instant;
+    let data = builtin::susy(ctx.scale.susy_n.min(50_000), ctx.cfg.seed);
+    let mut t = TableReport::new(
+        "Ablation A2",
+        "fast O(n.c) vs classic O(n.c^2) FCM update — wall seconds per pass, growing C",
+        &["C", "fast (s)", "classic (s)", "classic/fast"],
+    );
+    let w = vec![1.0f32; data.rows()];
+    for c in [2usize, 6, 15, 50] {
+        let mut rng = Pcg::new(ctx.cfg.seed);
+        let v0 = crate::fcm::seeding::random_records(&data.features, c, &mut rng);
+        let params = |variant| FcmParams { epsilon: 0.0, max_iterations: 3, variant, ..Default::default() };
+        let t0 = Instant::now();
+        run_fcm(ctx.backend.as_ref(), &data.features, &w, v0.clone(), &params(Variant::Fast))?;
+        let fast = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        run_fcm(ctx.backend.as_ref(), &data.features, &w, v0, &params(Variant::Classic))?;
+        let classic = t0.elapsed().as_secs_f64();
+        t.row(vec![
+            c.to_string(),
+            format!("{fast:.3}"),
+            format!("{classic:.3}"),
+            format!("{:.2}x", classic / fast.max(1e-9)),
+        ]);
+    }
+    t.note("the gap must widen with C (paper's reason for Algorithm 1 in the combiner)");
+    Ok(t)
+}
+
+pub fn ablation_weighted_merge(ctx: &Ctx) -> Result<TableReport> {
+    // Does WFCM weighting in the reduce matter? Merge per-partition centers
+    // with vs without weights on an *imbalanced* partitioning.
+    use crate::fcm::loops::{run_fcm, FcmParams};
+    let data = builtin::susy(ctx.scale.susy_n.min(40_000), ctx.cfg.seed);
+    let labels_truth = data.labels.clone().unwrap();
+    let mut t = TableReport::new(
+        "Ablation A3",
+        "weighted vs unweighted reduce merge (imbalanced partitions)",
+        &["Merge", "Accuracy", "Objective"],
+    );
+    // Build imbalanced partitions: 90% / 10%.
+    let cut = data.rows() * 9 / 10;
+    let parts = [data.features.slice_rows(0, cut), data.features.slice_rows(cut, data.rows())];
+    let mut rng = Pcg::new(ctx.cfg.seed);
+    let seeds = crate::fcm::seeding::random_records(&data.features, 2, &mut rng);
+    let params = FcmParams { epsilon: 5.0e-11, ..Default::default() };
+    let mut pool = crate::data::Matrix::zeros(0, data.dims());
+    let mut pool_w = Vec::new();
+    for p in &parts {
+        let w = vec![1.0f32; p.rows()];
+        let r = run_fcm(ctx.backend.as_ref(), p, &w, seeds.clone(), &params)?;
+        for i in 0..2 {
+            pool.push_row(r.centers.row(i));
+            pool_w.push(r.weights[i] as f32);
+        }
+    }
+    for (label, weights) in [
+        ("weighted (WFCM)", pool_w.clone()),
+        ("unweighted", vec![1.0f32; pool_w.len()]),
+    ] {
+        let r = run_fcm(ctx.backend.as_ref(), &pool, &weights, seeds.clone(), &params)?;
+        let assign = assign_hard(&data.features, &r.centers);
+        let acc = confusion_accuracy(&assign, &labels_truth, 2);
+        // Global objective of the merged centers.
+        let w_all = vec![1.0f32; data.rows()];
+        let p = ctx.backend.fcm_partials(&data.features, &r.centers, &w_all, 2.0)?;
+        t.row(vec![label.into(), format!("{:.2}%", acc * 100.0), format!("{:.1}", p.objective)]);
+    }
+    t.note("weighted merge must not lose to unweighted (paper contribution 3)");
+    Ok(t)
+}
+
+/// All tables by id (CLI dispatch).
+pub fn run_by_id(id: &str, ctx: &Ctx) -> Result<Vec<TableReport>> {
+    Ok(match id {
+        "table2" => vec![table2(ctx)?],
+        "table3" => vec![table3(ctx)?],
+        "table4" => vec![table4(ctx)?],
+        "table5" => vec![table5(ctx)?],
+        "table6" => vec![table6(ctx)?],
+        "table7" => vec![table7(ctx)?],
+        "table8" => vec![table8(ctx)?],
+        "ablations" => vec![
+            ablation_driver(ctx)?,
+            ablation_fast_vs_classic(ctx)?,
+            ablation_weighted_merge(ctx)?,
+        ],
+        "all" => {
+            let mut v = Vec::new();
+            for t in ["table2", "table3", "table4", "table5", "table6", "table7", "table8"] {
+                v.extend(run_by_id(t, ctx)?);
+            }
+            v
+        }
+        other => {
+            return Err(crate::error::Error::InvalidArgument(format!(
+                "unknown experiment `{other}` (use table2..table8, ablations, all)"
+            )))
+        }
+    })
+}

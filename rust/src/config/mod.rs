@@ -1,0 +1,347 @@
+//! Configuration system: typed config with defaults, a TOML-subset file
+//! parser, and `key=value` CLI overrides.
+//!
+//! The launcher resolves configuration in three layers (later wins):
+//! built-in defaults → `--config file.toml` → repeated `--set sec.key=value`.
+
+mod parse;
+
+pub use parse::{parse_toml, TomlValue};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Cluster-shape settings: how the single-machine run models the paper's
+/// Hadoop deployment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Simulated worker nodes (= thread-pool size = map slots).
+    pub workers: usize,
+    /// Records per HDFS block (one map task per block).
+    pub block_records: usize,
+    /// Rows per runtime chunk; must match the AOT artifact chunk.
+    pub chunk: usize,
+    /// Number of reduce slots (the paper uses 1 with an optional tree).
+    pub reducers: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self { workers: 4, block_records: 65_536, chunk: 4096, reducers: 1 }
+    }
+}
+
+/// SimClock overhead model: the per-job/task/IO charges a real Hadoop
+/// cluster pays. Defaults are calibrated in EXPERIMENTS.md §Calibration
+/// against the paper's own Mahout baseline rows (Table 4).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OverheadConfig {
+    /// Seconds to launch one MapReduce job (JVM spin-up, scheduling).
+    pub job_startup_s: f64,
+    /// Seconds to launch one task attempt within a job.
+    pub task_launch_s: f64,
+    /// Seconds per MiB moved through the shuffle.
+    pub shuffle_s_per_mib: f64,
+    /// Seconds per MiB read from / written to HDFS.
+    pub hdfs_s_per_mib: f64,
+    /// Multiplier translating our measured compute seconds onto the paper's
+    /// (slower, JVM, 2016 Core i5) per-node compute speed.
+    pub compute_scale: f64,
+}
+
+impl Default for OverheadConfig {
+    fn default() -> Self {
+        // Calibration: Mahout KM on 10 MiB × 1000 iterations ≈ 31 468 s in
+        // Table 4 ⇒ ≈31.5 s/job-iteration dominated by startup; shuffle and
+        // HDFS rates from common Hadoop-1.x measurements (~20 MiB/s effective).
+        Self {
+            job_startup_s: 28.0,
+            task_launch_s: 1.2,
+            shuffle_s_per_mib: 0.05,
+            hdfs_s_per_mib: 0.05,
+            compute_scale: 8.0,
+        }
+    }
+}
+
+/// How the driver chooses the combiner algorithm (Algorithm 3 line 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlagPolicy {
+    /// Paper behaviour: race FCM vs WFCMPB on the sample, pick the faster.
+    /// Inherently timing-dependent (the paper's own design).
+    Race,
+    /// Always plain FCM in the combiners (deterministic).
+    ForceFcm,
+    /// Always WFCMPB in the combiners (deterministic).
+    ForceWfcmpb,
+}
+
+impl FlagPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "race" => Ok(FlagPolicy::Race),
+            "fcm" => Ok(FlagPolicy::ForceFcm),
+            "wfcmpb" => Ok(FlagPolicy::ForceWfcmpb),
+            other => Err(Error::Config(format!("unknown flag policy `{other}`"))),
+        }
+    }
+}
+
+/// FCM algorithm settings (paper notation: C, m, epsilon).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FcmConfig {
+    /// Number of final clusters C.
+    pub clusters: usize,
+    /// Fuzzifier m (> 1).
+    pub fuzzifier: f64,
+    /// Reducer epsilon: convergence threshold on max squared center shift.
+    pub epsilon: f64,
+    /// Driver epsilon for the pre-clustering (Table 2 knob).
+    pub driver_epsilon: f64,
+    /// Hard iteration cap (the paper uses 1000).
+    pub max_iterations: usize,
+    /// Whether the driver pre-clustering runs at all (ablation knob).
+    pub driver_preclustering: bool,
+    /// Parker–Hall relative difference `r` for the sample-size formula.
+    pub sample_rel_diff: f64,
+    /// Parker–Hall v(alpha); 1.27359 for alpha = 0.05.
+    pub sample_v_alpha: f64,
+    /// How the driver picks the combiner algorithm (race = paper default).
+    pub flag_policy: FlagPolicy,
+    /// Pre-clustering restarts in the driver (best objective wins). The
+    /// sample is small, so restarts are cheap insurance against a bad
+    /// seeding draw.
+    pub driver_restarts: usize,
+    /// Reducer polish: after the WFCM merge, re-anchor the final centers
+    /// with a short FCM pass over the driver's sample (shipped through the
+    /// distributed cache). Recovers splits that underflow f32 when all
+    /// per-block centers are near-coincident (FCM's coincident-cluster mode
+    /// on weakly separated data).
+    pub reducer_polish: bool,
+}
+
+impl Default for FcmConfig {
+    fn default() -> Self {
+        Self {
+            clusters: 2,
+            fuzzifier: 2.0,
+            epsilon: 5.0e-7,
+            driver_epsilon: 5.0e-11,
+            max_iterations: 1000,
+            driver_preclustering: true,
+            sample_rel_diff: 0.10,
+            sample_v_alpha: 1.27359,
+            flag_policy: FlagPolicy::Race,
+            driver_restarts: 4,
+            reducer_polish: true,
+        }
+    }
+}
+
+/// Runtime backend selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Execute chunk steps through the AOT HLO artifacts on PJRT.
+    Pjrt,
+    /// Pure-rust chunk steps (no artifacts needed; used for tests/ablation).
+    Native,
+    /// PJRT when an artifact exists for the shape, else native.
+    Auto,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pjrt" => Ok(Backend::Pjrt),
+            "native" => Ok(Backend::Native),
+            "auto" => Ok(Backend::Auto),
+            other => Err(Error::Config(format!("unknown backend `{other}`"))),
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    pub cluster: ClusterConfig,
+    pub overhead: OverheadConfig,
+    pub fcm: FcmConfig,
+    pub backend: Backend,
+    /// Directory containing `manifest.json` + `*.hlo.txt`.
+    pub artifacts_dir: PathBuf,
+    /// Scratch directory for HDFS block stores.
+    pub data_dir: PathBuf,
+    /// Master seed for all randomness.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cluster: ClusterConfig::default(),
+            overhead: OverheadConfig::default(),
+            fcm: FcmConfig::default(),
+            backend: Backend::Auto,
+            artifacts_dir: PathBuf::from("artifacts"),
+            data_dir: PathBuf::from("data_cache"),
+            seed: 0xB16FC4,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML-subset file over the defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        let mut cfg = Config::default();
+        cfg.apply_toml(&text)?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed TOML document over the current values.
+    pub fn apply_toml(&mut self, text: &str) -> Result<()> {
+        let doc = parse_toml(text)?;
+        for (section, entries) in &doc {
+            for (key, value) in entries {
+                self.set(&format!("{section}.{key}"), &value.to_string())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one dotted-path override, e.g. `cluster.workers=8`.
+    pub fn set_kv(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| Error::Config(format!("override `{kv}` is not key=value")))?;
+        self.set(k.trim(), v.trim())
+    }
+
+    /// Set a single dotted key.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let bad = |k: &str, v: &str| Error::Config(format!("bad value `{v}` for `{k}`"));
+        macro_rules! num {
+            ($t:ty) => {
+                value.parse::<$t>().map_err(|_| bad(key, value))?
+            };
+        }
+        match key {
+            "cluster.workers" => self.cluster.workers = num!(usize),
+            "cluster.block_records" => self.cluster.block_records = num!(usize),
+            "cluster.chunk" => self.cluster.chunk = num!(usize),
+            "cluster.reducers" => self.cluster.reducers = num!(usize),
+            "overhead.job_startup_s" => self.overhead.job_startup_s = num!(f64),
+            "overhead.task_launch_s" => self.overhead.task_launch_s = num!(f64),
+            "overhead.shuffle_s_per_mib" => self.overhead.shuffle_s_per_mib = num!(f64),
+            "overhead.hdfs_s_per_mib" => self.overhead.hdfs_s_per_mib = num!(f64),
+            "overhead.compute_scale" => self.overhead.compute_scale = num!(f64),
+            "fcm.clusters" => self.fcm.clusters = num!(usize),
+            "fcm.fuzzifier" => self.fcm.fuzzifier = num!(f64),
+            "fcm.epsilon" => self.fcm.epsilon = num!(f64),
+            "fcm.driver_epsilon" => self.fcm.driver_epsilon = num!(f64),
+            "fcm.max_iterations" => self.fcm.max_iterations = num!(usize),
+            "fcm.driver_preclustering" => {
+                self.fcm.driver_preclustering = value.parse::<bool>().map_err(|_| bad(key, value))?
+            }
+            "fcm.sample_rel_diff" => self.fcm.sample_rel_diff = num!(f64),
+            "fcm.sample_v_alpha" => self.fcm.sample_v_alpha = num!(f64),
+            "fcm.flag_policy" => self.fcm.flag_policy = FlagPolicy::parse(value)?,
+            "fcm.driver_restarts" => self.fcm.driver_restarts = num!(usize),
+            "fcm.reducer_polish" => {
+                self.fcm.reducer_polish = value.parse::<bool>().map_err(|_| bad(key, value))?
+            }
+            "runtime.backend" => self.backend = Backend::parse(value)?,
+            "paths.artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
+            "paths.data_dir" => self.data_dir = PathBuf::from(value),
+            "seed" | "run.seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
+            other => return Err(Error::Config(format!("unknown config key `{other}`"))),
+        }
+        Ok(())
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.fcm.fuzzifier <= 1.0 {
+            return Err(Error::Config("fcm.fuzzifier must be > 1".into()));
+        }
+        if self.fcm.clusters < 2 {
+            return Err(Error::Config("fcm.clusters must be >= 2".into()));
+        }
+        if self.cluster.chunk == 0 || self.cluster.block_records == 0 {
+            return Err(Error::Config("cluster sizes must be positive".into()));
+        }
+        if self.fcm.epsilon <= 0.0 || self.fcm.driver_epsilon <= 0.0 {
+            return Err(Error::Config("epsilons must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Flattened `section.key → value` map of a parsed TOML document.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn kv_overrides() {
+        let mut c = Config::default();
+        c.set_kv("cluster.workers=16").unwrap();
+        c.set_kv("fcm.epsilon=5e-3").unwrap();
+        c.set_kv("fcm.driver_preclustering=false").unwrap();
+        c.set_kv("runtime.backend=native").unwrap();
+        assert_eq!(c.cluster.workers, 16);
+        assert_eq!(c.fcm.epsilon, 5e-3);
+        assert!(!c.fcm.driver_preclustering);
+        assert_eq!(c.backend, Backend::Native);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        let mut c = Config::default();
+        assert!(c.set_kv("nope.key=1").is_err());
+        assert!(c.set_kv("cluster.workers=abc").is_err());
+        assert!(c.set_kv("no-equals").is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let mut c = Config::default();
+        c.apply_toml(
+            r#"
+# experiment config
+[cluster]
+workers = 8
+chunk = 2048
+
+[fcm]
+epsilon = 5.0e-5
+fuzzifier = 1.2
+
+[paths]
+artifacts_dir = "art"
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.cluster.workers, 8);
+        assert_eq!(c.cluster.chunk, 2048);
+        assert_eq!(c.fcm.epsilon, 5.0e-5);
+        assert_eq!(c.fcm.fuzzifier, 1.2);
+        assert_eq!(c.artifacts_dir, PathBuf::from("art"));
+    }
+
+    #[test]
+    fn validation_catches_bad_fuzzifier() {
+        let mut c = Config::default();
+        c.fcm.fuzzifier = 1.0;
+        assert!(c.validate().is_err());
+    }
+}

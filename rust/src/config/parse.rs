@@ -1,0 +1,124 @@
+//! TOML-subset parser: sections, `key = value` with strings, numbers and
+//! booleans, `#` comments. Enough for experiment configs without pulling a
+//! TOML crate into the offline build.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed TOML scalar.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    String(String),
+    Number(f64),
+    Bool(bool),
+}
+
+impl std::fmt::Display for TomlValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TomlValue::String(s) => write!(f, "{s}"),
+            TomlValue::Number(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            TomlValue::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+/// Parse `[section]` / `key = value` lines into a nested map.
+pub fn parse_toml(text: &str) -> Result<super::TomlDoc> {
+    let mut doc: super::TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| Error::Config(format!("line {}: unterminated section", lineno + 1)))?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| Error::Config(format!("line {}: expected key = value", lineno + 1)))?;
+        let key = k.trim().to_string();
+        let value = parse_value(v.trim())
+            .ok_or_else(|| Error::Config(format!("line {}: bad value `{}`", lineno + 1, v.trim())))?;
+        if section.is_empty() {
+            return Err(Error::Config(format!(
+                "line {}: key `{key}` outside any [section]",
+                lineno + 1
+            )));
+        }
+        doc.entry(section.clone()).or_default().insert(key, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Option<TomlValue> {
+    if let Some(stripped) = v.strip_prefix('"') {
+        return stripped.strip_suffix('"').map(|s| TomlValue::String(s.to_string()));
+    }
+    match v {
+        "true" => return Some(TomlValue::Bool(true)),
+        "false" => return Some(TomlValue::Bool(false)),
+        _ => {}
+    }
+    v.parse::<f64>().ok().map(TomlValue::Number)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml(
+            "[a]\nx = 1\ny = 2.5   # trailing comment\nflag = true\nname = \"hi # not comment\"\n\n[b]\nz = -3e-2\n",
+        )
+        .unwrap();
+        assert_eq!(doc["a"]["x"], TomlValue::Number(1.0));
+        assert_eq!(doc["a"]["y"], TomlValue::Number(2.5));
+        assert_eq!(doc["a"]["flag"], TomlValue::Bool(true));
+        assert_eq!(doc["a"]["name"], TomlValue::String("hi # not comment".into()));
+        assert_eq!(doc["b"]["z"], TomlValue::Number(-0.03));
+    }
+
+    #[test]
+    fn rejects_key_outside_section() {
+        assert!(parse_toml("x = 1").is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated_section() {
+        assert!(parse_toml("[oops\nx=1").is_err());
+    }
+
+    #[test]
+    fn empty_and_comment_only_ok() {
+        let doc = parse_toml("# just a comment\n\n").unwrap();
+        assert!(doc.is_empty());
+    }
+}

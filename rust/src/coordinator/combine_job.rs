@@ -1,0 +1,313 @@
+//! The single MapReduce job of BigFCM (Algorithm 3 lines 7–14).
+//!
+//! * **map+combine** (lines 7–11): cluster the block's records with the
+//!   algorithm the driver flagged — plain fast FCM or WFCMPB — warm-started
+//!   from the cached `v_init`; emit the block's centers with their weights
+//!   (each weight = Σ membership mass of the block's records for that
+//!   center).
+//! * **reduce** (lines 12–14): WFCM over the union of all blocks' weighted
+//!   centers. With `reducers > 1` the merge runs as a two-level tree —
+//!   groups of map outputs are merged by intermediate WFCM reducers whose
+//!   outputs a final WFCM folds together (the paper's "execute multiple
+//!   reduce jobs … then integrate the results").
+
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::coordinator::driver::{KEY_BLOCK_SIZE, KEY_FLAG, KEY_V_INIT};
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+use crate::fcm::loops::{run_fcm, FcmParams, Variant};
+use crate::fcm::wfcmpb::{wfcmpb, WfcmpbResult};
+use crate::fcm::ChunkBackend;
+use crate::mapreduce::{MapReduceJob, TaskCtx};
+
+/// Combiner output: the block's centers with importance weights.
+#[derive(Clone, Debug)]
+pub struct CombinerOut {
+    pub centers: Matrix,
+    pub weights: Vec<f64>,
+    pub iterations: usize,
+}
+
+/// The job object shared by all tasks.
+pub struct CombineJob {
+    cfg: Config,
+    backend: Arc<dyn ChunkBackend>,
+}
+
+impl CombineJob {
+    pub fn new(cfg: Config, backend: Arc<dyn ChunkBackend>) -> Self {
+        Self { cfg, backend }
+    }
+
+    fn params(&self) -> FcmParams {
+        FcmParams {
+            m: self.cfg.fcm.fuzzifier,
+            epsilon: self.cfg.fcm.epsilon,
+            max_iterations: self.cfg.fcm.max_iterations,
+            variant: Variant::Fast,
+        }
+    }
+
+    /// WFCM over a pool of weighted centers (the reducer's core).
+    fn wfcm_merge(&self, pool: &Matrix, pool_w: &[f64], seeds: Matrix) -> Result<WfcmpbResult> {
+        let w32: Vec<f32> = pool_w.iter().map(|&w| w as f32).collect();
+        let result = run_fcm(self.backend.as_ref(), pool, &w32, seeds, &self.params())?;
+        Ok(WfcmpbResult { result, blocks: 1, block_iterations: vec![] })
+    }
+}
+
+impl MapReduceJob for CombineJob {
+    type MapOut = CombinerOut;
+    type Output = WfcmpbResult;
+
+    fn map_combine(&self, block: &Matrix, ctx: &TaskCtx) -> Result<CombinerOut> {
+        let v_init = ctx
+            .cache
+            .get_matrix(KEY_V_INIT)
+            .ok_or_else(|| Error::Job("v_init missing from distributed cache".into()))?;
+        let flag_fcm = ctx.cache.get_flag(KEY_FLAG).unwrap_or(true);
+        let params = self.params();
+        if flag_fcm {
+            // Flag = 1: plain fast FCM over the block (Algorithm 3 line 10).
+            let w = vec![1.0f32; block.rows()];
+            let r = run_fcm(self.backend.as_ref(), block, &w, v_init, &params)?;
+            Ok(CombinerOut { centers: r.centers, weights: r.weights, iterations: r.iterations })
+        } else {
+            // Flag = 0: WFCMPB over the block.
+            let block_size = ctx
+                .cache
+                .get_scalar(KEY_BLOCK_SIZE)
+                .map(|b| b as usize)
+                .unwrap_or_else(|| (block.rows() / 8).max(params_c(&v_init)));
+            let r = wfcmpb(self.backend.as_ref(), block, v_init, block_size, &params)?;
+            Ok(CombinerOut {
+                centers: r.result.centers,
+                weights: r.result.weights,
+                iterations: r.result.iterations,
+            })
+        }
+    }
+
+    fn reduce(&self, parts: Vec<CombinerOut>, ctx: &TaskCtx) -> Result<WfcmpbResult> {
+        if parts.is_empty() {
+            return Err(Error::Job("reduce received no combiner outputs".into()));
+        }
+        let seeds = ctx
+            .cache
+            .get_matrix(KEY_V_INIT)
+            .unwrap_or_else(|| parts[0].centers.clone());
+
+        let reducers = self.cfg.cluster.reducers.max(1);
+        let groups: Vec<&[CombinerOut]> = if reducers > 1 && parts.len() > reducers {
+            parts.chunks(parts.len().div_ceil(reducers)).collect()
+        } else {
+            vec![&parts[..]]
+        };
+
+        // Level 1: per-group WFCM merges.
+        let mut level1: Vec<CombinerOut> = Vec::with_capacity(groups.len());
+        for g in &groups {
+            let (pool, pool_w) = pool_of(g);
+            let merged = self.wfcm_merge(&pool, &pool_w, seeds.clone())?;
+            level1.push(CombinerOut {
+                centers: merged.result.centers,
+                weights: merged.result.weights,
+                iterations: merged.result.iterations,
+            });
+        }
+
+        // Level 2 (or the only level): final WFCM over the pooled output.
+        let (pool, pool_w) = pool_of(&level1);
+        let mut merged = self.wfcm_merge(&pool, &pool_w, seeds)?;
+
+        // Reducer polish (our extension, `fcm.reducer_polish`): re-anchor
+        // the merged centers with a short FCM pass over the driver's sample.
+        // When every per-block FCM lands on a near-coincident center pair
+        // (FCM's coincident-cluster mode), the WFCM merge of those pairs
+        // collapses to exactly-equal f32 centers; the raw-record pass
+        // recovers the data-space split, and on well-separated data it is a
+        // no-op refinement.
+        if self.cfg.fcm.reducer_polish {
+            if let Some(sample) = ctx.cache.get_matrix(crate::coordinator::driver::KEY_SAMPLE) {
+                // Exactly-equal centers are a symmetric fixed point of FCM
+                // (identical memberships → identical updates), so break the
+                // symmetry first by relocating duplicates to far records.
+                crate::fcm::seeding::repair_duplicate_centers(
+                    &sample,
+                    &mut merged.result.centers,
+                    1e-3,
+                );
+                let w = vec![1.0f32; sample.rows()];
+                let polished =
+                    run_fcm(self.backend.as_ref(), &sample, &w, merged.result.centers, &self.params())?;
+                merged.result.centers = polished.centers;
+            }
+        }
+        Ok(merged)
+    }
+
+    fn shuffle_bytes(&self, part: &CombinerOut) -> u64 {
+        // centers f32 + weights f64.
+        (part.centers.rows() * part.centers.cols() * 4 + part.weights.len() * 8) as u64
+    }
+
+    fn name(&self) -> &str {
+        "bigfcm-combine"
+    }
+}
+
+fn params_c(v: &Matrix) -> usize {
+    v.rows().max(1)
+}
+
+/// Union all (centers, weights) into one weighted pool.
+fn pool_of(parts: &[impl std::borrow::Borrow<CombinerOut>]) -> (Matrix, Vec<f64>) {
+    let first = parts[0].borrow();
+    let d = first.centers.cols();
+    let mut pool = Matrix::zeros(0, d);
+    let mut pool_w = Vec::new();
+    for p in parts {
+        let p = p.borrow();
+        for i in 0..p.centers.rows() {
+            pool.push_row(p.centers.row(i));
+            pool_w.push(p.weights[i]);
+        }
+    }
+    (pool, pool_w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+    use crate::fcm::NativeBackend;
+    use crate::mapreduce::DistributedCache;
+
+    fn job(c: usize, reducers: usize) -> CombineJob {
+        let mut cfg = Config::default();
+        cfg.fcm.clusters = c;
+        cfg.fcm.epsilon = 1e-9;
+        cfg.cluster.reducers = reducers;
+        CombineJob::new(cfg, Arc::new(NativeBackend))
+    }
+
+    fn cache_with_seeds(seeds: Matrix, flag: bool) -> DistributedCache {
+        let c = DistributedCache::new();
+        c.put_matrix(KEY_V_INIT, seeds);
+        c.put_flag(KEY_FLAG, flag);
+        c.put_scalar(KEY_BLOCK_SIZE, 128.0);
+        c
+    }
+
+    #[test]
+    fn combiner_emits_weighted_centers() {
+        let data = blobs(512, 3, 3, 0.2, 1);
+        let seeds = data.features.slice_rows(0, 3);
+        let cache = cache_with_seeds(seeds, true);
+        let j = job(3, 1);
+        let ctx = TaskCtx { cache: &cache, task_id: 0, attempt: 0 };
+        let out = j.map_combine(&data.features, &ctx).unwrap();
+        assert_eq!(out.centers.rows(), 3);
+        assert_eq!(out.weights.len(), 3);
+        // Weight mass is positive and bounded by the record count.
+        let total: f64 = out.weights.iter().sum();
+        assert!(total > 0.0 && total <= 512.0 + 1e-6, "total weight {total}");
+    }
+
+    #[test]
+    fn combiner_wfcmpb_arm_runs() {
+        let data = blobs(512, 3, 3, 0.2, 2);
+        let seeds = data.features.slice_rows(0, 3);
+        let cache = cache_with_seeds(seeds, false);
+        let j = job(3, 1);
+        let ctx = TaskCtx { cache: &cache, task_id: 0, attempt: 0 };
+        let out = j.map_combine(&data.features, &ctx).unwrap();
+        assert_eq!(out.centers.rows(), 3);
+    }
+
+    #[test]
+    fn reduce_merges_toward_global_centers() {
+        // Split blob data into 4 parts; combiner each; reduce must land on
+        // the blob structure.
+        let data = blobs(2048, 3, 3, 0.2, 3);
+        let seeds = data.features.slice_rows(0, 3);
+        let cache = cache_with_seeds(seeds.clone(), true);
+        let j = job(3, 1);
+        let mut parts = Vec::new();
+        for k in 0..4 {
+            let blk = data.features.slice_rows(k * 512, (k + 1) * 512);
+            let ctx = TaskCtx { cache: &cache, task_id: k, attempt: 0 };
+            parts.push(j.map_combine(&blk, &ctx).unwrap());
+        }
+        let ctx = TaskCtx { cache: &cache, task_id: usize::MAX, attempt: 0 };
+        let merged = j.reduce(parts, &ctx).unwrap();
+        // Every merged center sits in a dense region.
+        for i in 0..3 {
+            let mut best = f64::INFINITY;
+            for r in 0..data.features.rows() {
+                best = best.min(data.features.row_dist2(r, merged.result.centers.row(i)));
+            }
+            assert!(best < 0.3, "merged center {i} off-data ({best})");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_matches_flat_reduce() {
+        let data = blobs(2048, 3, 3, 0.25, 4);
+        let seeds = data.features.slice_rows(0, 3);
+        let cache = cache_with_seeds(seeds, true);
+        let flat = job(3, 1);
+        let tree = job(3, 3);
+        let mut parts = Vec::new();
+        for k in 0..8 {
+            let blk = data.features.slice_rows(k * 256, (k + 1) * 256);
+            let ctx = TaskCtx { cache: &cache, task_id: k, attempt: 0 };
+            parts.push(flat.map_combine(&blk, &ctx).unwrap());
+        }
+        let ctx = TaskCtx { cache: &cache, task_id: usize::MAX, attempt: 0 };
+        let a = flat.reduce(parts.clone(), &ctx).unwrap();
+        let b = tree.reduce(parts, &ctx).unwrap();
+        // Both must describe the same blob structure (centers pairwise close).
+        for i in 0..3 {
+            let best = (0..3)
+                .map(|jx| {
+                    crate::data::matrix::dist2(
+                        a.result.centers.row(i),
+                        b.result.centers.row(jx),
+                    )
+                })
+                .fold(f64::INFINITY, f64::min);
+            assert!(best < 0.05, "tree/flat divergence at center {i}: {best}");
+        }
+    }
+
+    #[test]
+    fn reduce_empty_fails() {
+        let j = job(2, 1);
+        let cache = DistributedCache::new();
+        let ctx = TaskCtx { cache: &cache, task_id: 0, attempt: 0 };
+        assert!(j.reduce(vec![], &ctx).is_err());
+    }
+
+    #[test]
+    fn missing_cache_fails_map() {
+        let data = blobs(128, 2, 2, 0.3, 5);
+        let cache = DistributedCache::new(); // no v_init
+        let j = job(2, 1);
+        let ctx = TaskCtx { cache: &cache, task_id: 0, attempt: 0 };
+        assert!(j.map_combine(&data.features, &ctx).is_err());
+    }
+
+    #[test]
+    fn shuffle_bytes_counts_payload() {
+        let out = CombinerOut {
+            centers: Matrix::zeros(3, 4),
+            weights: vec![1.0; 3],
+            iterations: 1,
+        };
+        let j = job(3, 1);
+        assert_eq!(j.shuffle_bytes(&out), (3 * 4 * 4 + 3 * 8) as u64);
+    }
+}

@@ -1,0 +1,164 @@
+//! The BigFCM coordinator — the paper's system contribution (Algorithm 3).
+//!
+//! One pipeline run is:
+//!
+//! 1. **Driver job** ([`driver`]): sample R_x records (Parker–Hall sizing,
+//!    Eq. 4), race plain FCM vs WFCMPB on the sample, pick the faster
+//!    (`Flag`), store the winner's centers in the distributed cache.
+//! 2. **The single MapReduce job** ([`combine_job`]): every map task runs
+//!    the selected fast clustering over its block, warm-started from the
+//!    cached centers, and emits `(centers, weights)`; the reducer merges all
+//!    weighted centers with WFCM (optionally as a two-level tree).
+//! 3. The final centers are the output — exactly one MR job regardless of
+//!    epsilon, which is the paper's headline scaling property.
+
+pub mod combine_job;
+pub mod driver;
+
+pub use combine_job::{CombineJob, CombinerOut};
+pub use driver::{run_driver, DriverDecision};
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::Config;
+use crate::data::{Dataset, Matrix};
+use crate::error::Result;
+use crate::fcm::{ChunkBackend, ClusterResult, NativeBackend};
+use crate::hdfs::BlockStore;
+use crate::mapreduce::{DistributedCache, Engine, EngineOptions, JobStats, SimCost};
+
+/// Everything a BigFCM run produces.
+#[derive(Clone, Debug)]
+pub struct BigFcmRun {
+    /// Final cluster centers (C, d).
+    pub centers: Matrix,
+    /// Final per-center weights.
+    pub weights: Vec<f64>,
+    /// Driver decision record (flag, race timings, sample size).
+    pub driver: DriverDecision,
+    /// Stats of the single MR job.
+    pub job: JobStats,
+    /// Real time of the whole pipeline on this machine.
+    pub wall: Duration,
+    /// Modelled cluster time of the whole pipeline.
+    pub sim: SimCost,
+    /// Reducer iterations (WFCM merge convergence).
+    pub reduce_iterations: usize,
+}
+
+impl BigFcmRun {
+    /// Modelled total seconds (what the paper's tables report).
+    pub fn modelled_s(&self) -> f64 {
+        self.sim.total_s()
+    }
+}
+
+/// Builder-style front end for the pipeline.
+pub struct BigFcm {
+    cfg: Config,
+    backend: Option<Arc<dyn ChunkBackend>>,
+}
+
+impl BigFcm {
+    pub fn new(cfg: Config) -> Self {
+        Self { cfg, backend: None }
+    }
+
+    /// Override the chunk backend (default: native).
+    pub fn backend(mut self, backend: Arc<dyn ChunkBackend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    pub fn clusters(mut self, c: usize) -> Self {
+        self.cfg.fcm.clusters = c;
+        self
+    }
+
+    pub fn fuzzifier(mut self, m: f64) -> Self {
+        self.cfg.fcm.fuzzifier = m;
+        self
+    }
+
+    pub fn epsilon(mut self, eps: f64) -> Self {
+        self.cfg.fcm.epsilon = eps;
+        self
+    }
+
+    pub fn driver_epsilon(mut self, eps: f64) -> Self {
+        self.cfg.fcm.driver_epsilon = eps;
+        self
+    }
+
+    pub fn max_iterations(mut self, n: usize) -> Self {
+        self.cfg.fcm.max_iterations = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Disable the driver pre-clustering (ablation: random seeds instead).
+    pub fn without_driver(mut self) -> Self {
+        self.cfg.fcm.driver_preclustering = false;
+        self
+    }
+
+    /// Run over an existing block store with a fresh engine.
+    pub fn run_store(&self, store: &BlockStore) -> Result<BigFcmRun> {
+        let mut engine = Engine::new(
+            EngineOptions { workers: self.cfg.cluster.workers, ..Default::default() },
+            self.cfg.overhead.clone(),
+        );
+        self.run_with_engine(store, &mut engine)
+    }
+
+    /// Run over in-memory records (shards them first).
+    pub fn run_in_memory(&self, features: &Matrix) -> Result<BigFcmRun> {
+        let store = BlockStore::in_memory(
+            "in-memory",
+            features,
+            self.cfg.cluster.block_records,
+            self.cfg.cluster.workers,
+        )?;
+        self.run_store(&store)
+    }
+
+    /// Convenience: run over a [`Dataset`].
+    pub fn run_dataset(&self, dataset: &Dataset) -> Result<BigFcmRun> {
+        self.run_in_memory(&dataset.features)
+    }
+
+    /// Run the full pipeline on a caller-provided engine (so several runs
+    /// can share one SimClock, e.g. in the bench harness).
+    pub fn run_with_engine(&self, store: &BlockStore, engine: &mut Engine) -> Result<BigFcmRun> {
+        self.cfg.validate()?;
+        let backend: Arc<dyn ChunkBackend> =
+            self.backend.clone().unwrap_or_else(|| Arc::new(NativeBackend));
+        let started = Instant::now();
+
+        // ---- Phase 1: driver job -------------------------------------
+        let cache = Arc::new(DistributedCache::new());
+        let decision = run_driver(&self.cfg, store, backend.as_ref(), &cache, engine)?;
+
+        // ---- Phase 2: the single MR job ------------------------------
+        let job = Arc::new(CombineJob::new(self.cfg.clone(), Arc::clone(&backend)));
+        let (reduced, stats) = engine.run_job(Arc::clone(&job), store, Arc::clone(&cache))?;
+
+        Ok(BigFcmRun {
+            centers: reduced.result.centers,
+            weights: reduced.result.weights,
+            driver: decision,
+            wall: started.elapsed(),
+            sim: engine.clock().cost(),
+            reduce_iterations: reduced.result.iterations,
+            job: stats,
+        })
+    }
+}
+
+/// Re-export for result users.
+pub type FinalClustering = ClusterResult;

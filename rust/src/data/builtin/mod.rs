@@ -1,0 +1,86 @@
+//! Built-in datasets: the embedded real Iris data plus named constructors
+//! for every dataset of the paper's evaluation (synthetic stand-ins are
+//! documented in DESIGN.md §3).
+
+mod iris_data;
+
+use crate::data::{synth, Dataset, Matrix};
+
+/// The real Iris dataset: 150 × 4, 3 classes.
+pub fn iris() -> Dataset {
+    let rows: Vec<Vec<f32>> = iris_data::IRIS_FEATURES.iter().map(|r| r.to_vec()).collect();
+    Dataset::labelled("Iris", Matrix::from_rows(&rows), iris_data::IRIS_LABELS.to_vec())
+}
+
+/// Pima-like diabetes data: 768 × 8, 2 classes (statistics from the
+/// published UCI summary; see `synth::pima_like`).
+pub fn pima(seed: u64) -> Dataset {
+    synth::pima_like(768, seed)
+}
+
+/// SUSY-like physics data at the requested size (paper: 5M × 18, 2 classes).
+pub fn susy(n: usize, seed: u64) -> Dataset {
+    synth::susy_like(n, seed)
+}
+
+/// HIGGS-like physics data (paper: 11M × 28, 2 classes).
+pub fn higgs(n: usize, seed: u64) -> Dataset {
+    synth::higgs_like(n, seed)
+}
+
+/// KDD99-like intrusion data (paper: 494k × 41 after one-hot, 23 classes).
+pub fn kdd99(n: usize, seed: u64) -> Dataset {
+    synth::kdd_like(n, seed)
+}
+
+/// Resolve a dataset by its paper name (used by the CLI and bench harness).
+/// `n` is the record count for the synthetic families (ignored for Iris/Pima).
+pub fn by_name(name: &str, n: usize, seed: u64) -> Option<Dataset> {
+    match name.to_ascii_lowercase().as_str() {
+        "iris" => Some(iris()),
+        "pima" => Some(pima(seed)),
+        "susy" => Some(susy(n, seed)),
+        "higgs" => Some(higgs(n, seed)),
+        "kdd99" | "kdd" => Some(kdd99(n, seed)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iris_shape_and_ranges() {
+        let d = iris();
+        assert_eq!(d.rows(), 150);
+        assert_eq!(d.dims(), 4);
+        assert_eq!(d.n_classes, 3);
+        // Sanity against the published value ranges.
+        for row in d.features.iter_rows() {
+            assert!(row[0] >= 4.0 && row[0] <= 8.0, "sepal length {row:?}");
+            assert!(row[3] >= 0.0 && row[3] <= 2.6, "petal width {row:?}");
+        }
+        // Class blocks of 50.
+        let labels = d.labels.unwrap();
+        assert!(labels[..50].iter().all(|&l| l == 0));
+        assert!(labels[50..100].iter().all(|&l| l == 1));
+        assert!(labels[100..].iter().all(|&l| l == 2));
+    }
+
+    #[test]
+    fn iris_known_first_row() {
+        let d = iris();
+        assert_eq!(d.features.row(0), &[5.1, 3.5, 1.4, 0.2]);
+        assert_eq!(d.features.row(149), &[5.9, 3.0, 5.1, 1.8]);
+    }
+
+    #[test]
+    fn by_name_resolves_all() {
+        for name in ["iris", "pima", "susy", "higgs", "kdd99"] {
+            let d = by_name(name, 1000, 7).unwrap();
+            assert!(d.rows() > 0, "{name}");
+        }
+        assert!(by_name("nope", 10, 0).is_none());
+    }
+}

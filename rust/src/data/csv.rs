@@ -1,0 +1,165 @@
+//! CSV codec for records — the format the paper's mappers parse line-by-line
+//! ("eliminate spaces, comma"; Algorithm 3 lines 7–9).
+//!
+//! Reader tolerates the mess the paper's mapper cleans up: surrounding
+//! whitespace, empty lines, an optional trailing label column, and either
+//! comma or whitespace separators.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use crate::data::{Dataset, Matrix};
+use crate::error::{Error, Result};
+
+/// Parse one record line into features (and optional trailing label).
+/// Returns `None` for blank/comment lines.
+pub fn parse_line(line: &str, with_label: bool) -> Result<Option<(Vec<f32>, Option<usize>)>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let fields: Vec<&str> = if line.contains(',') {
+        line.split(',').map(str::trim).filter(|f| !f.is_empty()).collect()
+    } else {
+        line.split_whitespace().collect()
+    };
+    if fields.is_empty() {
+        return Ok(None);
+    }
+    let (feat_fields, label_field) = if with_label && fields.len() > 1 {
+        (&fields[..fields.len() - 1], Some(fields[fields.len() - 1]))
+    } else {
+        (&fields[..], None)
+    };
+    let mut feats = Vec::with_capacity(feat_fields.len());
+    for f in feat_fields {
+        feats.push(
+            f.parse::<f32>()
+                .map_err(|_| Error::Dataset(format!("bad numeric field `{f}`")))?,
+        );
+    }
+    let label = match label_field {
+        Some(l) => Some(
+            l.parse::<usize>()
+                .map_err(|_| Error::Dataset(format!("bad label `{l}`")))?,
+        ),
+        None => None,
+    };
+    Ok(Some((feats, label)))
+}
+
+/// Read a whole CSV stream into a dataset.
+pub fn read_csv(reader: impl Read, name: &str, with_label: bool) -> Result<Dataset> {
+    let buf = BufReader::new(reader);
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let mut labels: Vec<usize> = Vec::new();
+    let mut width = None;
+    for (lineno, line) in buf.lines().enumerate() {
+        let line = line.map_err(|e| Error::Dataset(format!("read error: {e}")))?;
+        if let Some((feats, label)) = parse_line(&line, with_label)? {
+            if let Some(w) = width {
+                if feats.len() != w {
+                    return Err(Error::Dataset(format!(
+                        "line {}: width {} != {}",
+                        lineno + 1,
+                        feats.len(),
+                        w
+                    )));
+                }
+            } else {
+                width = Some(feats.len());
+            }
+            rows.push(feats);
+            if let Some(l) = label {
+                labels.push(l);
+            }
+        }
+    }
+    let features = Matrix::from_rows(&rows);
+    if with_label && labels.len() == features.rows() && !labels.is_empty() {
+        Ok(Dataset::labelled(name, features, labels))
+    } else {
+        Ok(Dataset::unlabelled(name, features))
+    }
+}
+
+/// Read a CSV file from disk.
+pub fn read_csv_file(path: &Path, with_label: bool) -> Result<Dataset> {
+    let f = std::fs::File::open(path).map_err(|e| Error::io(path, e))?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "csv".to_string());
+    read_csv(f, &name, with_label)
+}
+
+/// Write a dataset as CSV (features, then label if present).
+pub fn write_csv(dataset: &Dataset, mut w: impl Write) -> Result<()> {
+    let wrap = |e: std::io::Error| Error::Dataset(format!("write error: {e}"));
+    for i in 0..dataset.rows() {
+        let row = dataset.features.row(i);
+        let mut line = row
+            .iter()
+            .map(|v| format!("{v}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        if let Some(labels) = &dataset.labels {
+            line.push(',');
+            line.push_str(&labels[i].to_string());
+        }
+        line.push('\n');
+        w.write_all(line.as_bytes()).map_err(wrap)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_messy_lines() {
+        assert_eq!(
+            parse_line(" 1.5, 2 ,3.25 ", false).unwrap().unwrap().0,
+            vec![1.5, 2.0, 3.25]
+        );
+        assert_eq!(
+            parse_line("1.5 2 3.25", false).unwrap().unwrap().0,
+            vec![1.5, 2.0, 3.25]
+        );
+        assert!(parse_line("", false).unwrap().is_none());
+        assert!(parse_line("# comment", false).unwrap().is_none());
+        assert!(parse_line("1.5,abc", false).is_err());
+    }
+
+    #[test]
+    fn label_column_split() {
+        let (f, l) = parse_line("1,2,3,1", true).unwrap().unwrap();
+        assert_eq!(f, vec![1.0, 2.0, 3.0]);
+        assert_eq!(l, Some(1));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let d = crate::data::synth::blobs(20, 3, 2, 0.3, 1);
+        let mut buf = Vec::new();
+        write_csv(&d, &mut buf).unwrap();
+        let back = read_csv(&buf[..], "t", true).unwrap();
+        assert_eq!(back.rows(), 20);
+        assert_eq!(back.dims(), 3);
+        assert_eq!(back.labels.as_ref().unwrap(), d.labels.as_ref().unwrap());
+        for i in 0..20 {
+            for j in 0..3 {
+                let a = d.features.get(i, j);
+                let b = back.features.get(i, j);
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_ragged_width() {
+        let csv = "1,2,3\n1,2\n";
+        assert!(read_csv(csv.as_bytes(), "t", false).is_err());
+    }
+}

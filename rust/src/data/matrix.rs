@@ -1,0 +1,203 @@
+//! Row-major f32 matrix — the record container used across the stack.
+//!
+//! Deliberately minimal: the clustering hot paths operate on `&[f32]` row
+//! slices, and the PJRT runtime consumes the contiguous buffer directly, so
+//! no BLAS-style abstraction is needed here.
+
+/// Dense row-major matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Wrap an existing buffer; panics on length mismatch.
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length != rows*cols");
+        Self { data, rows, cols }
+    }
+
+    /// Build from row slices; panics on ragged input.
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        if rows.is_empty() {
+            return Self::zeros(0, 0);
+        }
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Self { data, rows: rows.len(), cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row access.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// The backing buffer (row-major).
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Copy of the row range [start, end).
+    pub fn slice_rows(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.rows);
+        Matrix {
+            data: self.data[start * self.cols..end * self.cols].to_vec(),
+            rows: end - start,
+            cols: self.cols,
+        }
+    }
+
+    /// New matrix from the given row indices.
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Vertically stack two matrices with equal column counts.
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "vstack column mismatch");
+        let mut data = Vec::with_capacity(self.data.len() + other.data.len());
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Matrix { data, rows: self.rows + other.rows, cols: self.cols }
+    }
+
+    /// Append one row. On an empty (0×0) matrix the first push sets the width.
+    pub fn push_row(&mut self, row: &[f32]) {
+        if self.rows == 0 && self.cols == 0 {
+            self.cols = row.len();
+        }
+        assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Squared Euclidean distance between row `i` and a center slice.
+    #[inline]
+    pub fn row_dist2(&self, i: usize, center: &[f32]) -> f64 {
+        dist2(self.row(i), center)
+    }
+
+    /// Iterator over row slices.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.cols.max(1)).take(self.rows)
+    }
+}
+
+/// Squared Euclidean distance between two equal-length slices.
+#[inline]
+pub fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_accessors() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 2);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.get(0, 1), 2.0);
+    }
+
+    #[test]
+    fn slice_and_select() {
+        let m = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0], vec![3.0]]);
+        assert_eq!(m.slice_rows(1, 3).as_slice(), &[1.0, 2.0]);
+        assert_eq!(m.select_rows(&[3, 0]).as_slice(), &[3.0, 0.0]);
+    }
+
+    #[test]
+    fn vstack_and_push() {
+        let a = Matrix::from_rows(&[vec![1.0, 1.0]]);
+        let b = Matrix::from_rows(&[vec![2.0, 2.0]]);
+        let c = a.vstack(&b);
+        assert_eq!(c.rows(), 2);
+        let mut d = Matrix::zeros(0, 0);
+        d.push_row(&[5.0, 6.0]);
+        d.push_row(&[7.0, 8.0]);
+        assert_eq!(d.rows(), 2);
+        assert_eq!(d.cols(), 2);
+        assert_eq!(d.row(1), &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn dist2_matches_manual() {
+        assert_eq!(dist2(&[0.0, 3.0], &[4.0, 0.0]), 25.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_panic() {
+        let _ = Matrix::from_rows(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn iter_rows_covers_all() {
+        let m = Matrix::from_rows(&[vec![1.0], vec![2.0]]);
+        let rows: Vec<&[f32]> = m.iter_rows().collect();
+        assert_eq!(rows, vec![&[1.0f32][..], &[2.0f32][..]]);
+    }
+}

@@ -1,0 +1,67 @@
+//! Dataset substrate: matrix type, codecs, normalisation, the embedded and
+//! synthetic datasets of the paper's evaluation (DESIGN.md §3 documents each
+//! substitution).
+
+pub mod builtin;
+pub mod csv;
+pub mod matrix;
+pub mod normalize;
+pub mod synth;
+
+pub use matrix::Matrix;
+
+/// A (possibly labelled) dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Human name used in reports ("SUSY-like", "Iris", ...).
+    pub name: String,
+    /// N × d feature matrix.
+    pub features: Matrix,
+    /// Ground-truth class per record, when known (for confusion accuracy).
+    pub labels: Option<Vec<usize>>,
+    /// Number of distinct classes in `labels`.
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    /// Build an unlabelled dataset.
+    pub fn unlabelled(name: impl Into<String>, features: Matrix) -> Self {
+        Self { name: name.into(), features, labels: None, n_classes: 0 }
+    }
+
+    /// Build a labelled dataset; panics if lengths disagree.
+    pub fn labelled(name: impl Into<String>, features: Matrix, labels: Vec<usize>) -> Self {
+        assert_eq!(features.rows(), labels.len(), "labels must match rows");
+        let n_classes = labels.iter().copied().max().map_or(0, |m| m + 1);
+        Self { name: name.into(), features, labels: Some(labels), n_classes }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.features.rows()
+    }
+
+    pub fn dims(&self) -> usize {
+        self.features.cols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labelled_counts_classes() {
+        let m = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0]]);
+        let d = Dataset::labelled("t", m, vec![0, 2, 1]);
+        assert_eq!(d.n_classes, 3);
+        assert_eq!(d.rows(), 3);
+        assert_eq!(d.dims(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must match rows")]
+    fn labelled_length_mismatch_panics() {
+        let m = Matrix::from_rows(&[vec![0.0]]);
+        let _ = Dataset::labelled("t", m, vec![0, 1]);
+    }
+}

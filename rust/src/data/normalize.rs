@@ -1,0 +1,133 @@
+//! Feature normalisation — the paper normalises KDD99 and converts its
+//! categorical features to numeric before clustering (§4.1).
+
+use crate::data::Matrix;
+
+/// Per-feature affine transform learned from data (min-max or z-score).
+#[derive(Clone, Debug)]
+pub struct Scaler {
+    /// Per-feature offset subtracted first.
+    pub offset: Vec<f32>,
+    /// Per-feature divisor (1 where the feature is constant).
+    pub scale: Vec<f32>,
+}
+
+impl Scaler {
+    /// Min-max scaler mapping each feature to [0, 1].
+    pub fn min_max(m: &Matrix) -> Scaler {
+        let d = m.cols();
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        for row in m.iter_rows() {
+            for j in 0..d {
+                lo[j] = lo[j].min(row[j]);
+                hi[j] = hi[j].max(row[j]);
+            }
+        }
+        let scale = lo
+            .iter()
+            .zip(&hi)
+            .map(|(&l, &h)| if h > l { h - l } else { 1.0 })
+            .collect();
+        Scaler { offset: lo, scale }
+    }
+
+    /// Z-score scaler (mean 0, std 1).
+    pub fn z_score(m: &Matrix) -> Scaler {
+        let d = m.cols();
+        let n = m.rows().max(1) as f64;
+        let mut mean = vec![0.0f64; d];
+        for row in m.iter_rows() {
+            for j in 0..d {
+                mean[j] += row[j] as f64;
+            }
+        }
+        for v in &mut mean {
+            *v /= n;
+        }
+        let mut var = vec![0.0f64; d];
+        for row in m.iter_rows() {
+            for j in 0..d {
+                let diff = row[j] as f64 - mean[j];
+                var[j] += diff * diff;
+            }
+        }
+        let scale = var
+            .iter()
+            .map(|&v| {
+                let s = (v / n).sqrt() as f32;
+                if s > 0.0 {
+                    s
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        Scaler { offset: mean.iter().map(|&x| x as f32).collect(), scale }
+    }
+
+    /// Apply in place.
+    pub fn apply(&self, m: &mut Matrix) {
+        let d = m.cols();
+        assert_eq!(d, self.offset.len(), "scaler dims mismatch");
+        for i in 0..m.rows() {
+            let row = m.row_mut(i);
+            for j in 0..d {
+                row[j] = (row[j] - self.offset[j]) / self.scale[j];
+            }
+        }
+    }
+
+    /// Invert a transformed center back to original units (for reports).
+    pub fn invert_row(&self, row: &[f32]) -> Vec<f32> {
+        row.iter()
+            .zip(self.offset.iter().zip(&self.scale))
+            .map(|(&v, (&o, &s))| v * s + o)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_max_maps_to_unit_interval() {
+        let mut m = Matrix::from_rows(&[vec![0.0, 10.0], vec![5.0, 20.0], vec![10.0, 30.0]]);
+        let s = Scaler::min_max(&m);
+        s.apply(&mut m);
+        assert_eq!(m.row(0), &[0.0, 0.0]);
+        assert_eq!(m.row(2), &[1.0, 1.0]);
+        assert_eq!(m.row(1), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn z_score_moments() {
+        let mut m = Matrix::from_rows(&[vec![1.0], vec![2.0], vec![3.0], vec![4.0]]);
+        let s = Scaler::z_score(&m);
+        s.apply(&mut m);
+        let mean: f32 = m.as_slice().iter().sum::<f32>() / 4.0;
+        let var: f32 = m.as_slice().iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn constant_feature_is_safe() {
+        let mut m = Matrix::from_rows(&[vec![7.0], vec![7.0]]);
+        let s = Scaler::min_max(&m);
+        s.apply(&mut m);
+        assert!(m.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn invert_roundtrips() {
+        let m = Matrix::from_rows(&[vec![2.0, -1.0], vec![8.0, 3.0]]);
+        let s = Scaler::min_max(&m);
+        let mut t = m.clone();
+        s.apply(&mut t);
+        let back = s.invert_row(t.row(1));
+        assert!((back[0] - 8.0).abs() < 1e-6);
+        assert!((back[1] - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,279 @@
+//! Synthetic dataset generators standing in for the paper's multi-gigabyte
+//! UCI downloads (SUSY, HIGGS, KDD99) and Pima (DESIGN.md §3).
+//!
+//! Each family is a Gaussian mixture whose shape matches the original:
+//! feature count, class count, class balance and class overlap. FCM's cost
+//! is a function of (N, d, C, iterations), and its *quality* numbers in the
+//! paper (Table 7) are driven by class overlap — e.g. SUSY/HIGGS score ~50%
+//! 2-class accuracy because signal/background overlap heavily, which the
+//! generators reproduce with strongly overlapping components.
+
+use crate::data::{Dataset, Matrix};
+use crate::prng::Pcg;
+
+/// A Gaussian mixture component: per-dimension mean and standard deviation.
+#[derive(Clone, Debug)]
+pub struct Component {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+    /// Relative sampling weight (class prior).
+    pub weight: f64,
+    /// Class label emitted for records from this component.
+    pub label: usize,
+}
+
+/// Draw `n` records from a mixture; returns features + labels.
+pub fn gaussian_mixture(
+    n: usize,
+    components: &[Component],
+    seed: u64,
+    name: &str,
+) -> Dataset {
+    assert!(!components.is_empty());
+    let d = components[0].mean.len();
+    for c in components {
+        assert_eq!(c.mean.len(), d, "component dims disagree");
+        assert_eq!(c.std.len(), d, "component dims disagree");
+    }
+    let weights: Vec<f64> = components.iter().map(|c| c.weight).collect();
+    let mut rng = Pcg::new(seed);
+    let mut features = Matrix::zeros(n, d);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let k = rng.weighted_index(&weights);
+        let comp = &components[k];
+        let row = features.row_mut(i);
+        for j in 0..d {
+            row[j] = rng.normal_with(comp.mean[j], comp.std[j]) as f32;
+        }
+        labels.push(comp.label);
+    }
+    Dataset::labelled(name, features, labels)
+}
+
+/// Deterministic per-dimension means on a ring: class centers separated by
+/// `sep` in a d-dimensional space, derived from a seed.
+fn spread_means(d: usize, k: usize, sep: f64, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg::new(seed ^ 0x5EED);
+    (0..k)
+        .map(|_| (0..d).map(|_| rng.normal() * sep).collect())
+        .collect()
+}
+
+/// Physics-like generator shared by the SUSY/HIGGS stand-ins.
+///
+/// Two properties of the real datasets matter for Tables 7–8:
+///
+/// * **classes are cluster-invisible** — 2-means/2-FCM cannot separate
+///   signal from background (the paper reports exactly 50.0% confusion
+///   accuracy for both methods). We reproduce that by carrying the class
+///   label in the *sign* of one isotropic feature (a genuine function of
+///   the features, like a physics discriminant) while keeping both class
+///   conditionals identical as point clouds — no centroid-based method can
+///   see it.
+/// * **weak but real cluster structure exists** — FCM finds a balanced
+///   split along the dominant variance directions with a small positive
+///   silhouette (paper Table 8: ≈0.063). We reproduce that with an
+///   anisotropic cloud (two stretched features).
+fn physics_like(n: usize, d: usize, seed: u64, label_flip: f64, name: &str) -> Dataset {
+    let mut rng = Pcg::new(seed ^ 0x9197);
+    let mut features = Matrix::zeros(n, d);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let row = features.row_mut(i);
+        for j in 0..d {
+            let std = match j {
+                0 => 2.0, // stretched: where 2-clustering splits
+                1 => 1.4,
+                _ => 1.0,
+            };
+            row[j] = rng.normal_with(0.0, std) as f32;
+        }
+        // Class = sign of an isotropic feature, with label noise — strong
+        // class signal, orthogonal to the cluster structure.
+        let mut label = usize::from(row[2] > 0.0);
+        if rng.next_f64() < label_flip {
+            label = 1 - label;
+        }
+        labels.push(label);
+    }
+    Dataset::labelled(name, features, labels)
+}
+
+/// SUSY-like: 18 features, 2 classes; clusters carry no class signal, as in
+/// the real data (paper Table 7: 50.0%).
+pub fn susy_like(n: usize, seed: u64) -> Dataset {
+    physics_like(n, 18, seed, 0.10, "SUSY-like")
+}
+
+/// HIGGS-like: 28 features, 2 classes, same class/cluster decoupling.
+pub fn higgs_like(n: usize, seed: u64) -> Dataset {
+    physics_like(n, 28, seed.wrapping_add(1), 0.10, "HIGGS-like")
+}
+
+/// KDD99-like: 41 features, 23 classes with the original's extreme
+/// imbalance (smurf ≈ 57%, neptune ≈ 22%, normal ≈ 20%, the remaining 20
+/// classes share ~1.5%).
+///
+/// Two properties of the real data matter for reproducing Table 7's ~80%:
+/// * attack families form well-separated clusters (categorical one-hots);
+/// * the dominant DoS classes are near-duplicate records (smurf packets are
+///   practically identical), so their blobs have tiny variance — redundant
+///   FCM centers collapse onto the same point instead of splitting the
+///   class, keeping it intact under cluster↔class matching.
+pub fn kdd_like(n: usize, seed: u64) -> Dataset {
+    let d = 41;
+    let k = 23;
+    // Real KDD99-10% class proportions: smurf, neptune, normal, then the
+    // graded attack tail (back, satan, ipsweep, portsweep, warezclient,
+    // teardrop, pod, nmap, guess_passwd, ..., spy). Counts from the
+    // published kddcup.data_10_percent distribution (494 021 records).
+    let weights: Vec<f64> = [
+        280_790.0, 107_201.0, 97_278.0, 2_203.0, 1_589.0, 1_247.0, 1_040.0,
+        1_020.0, 979.0, 264.0, 231.0, 53.0, 30.0, 21.0, 20.0, 12.0, 10.0,
+        9.0, 8.0, 7.0, 4.0, 3.0, 2.0,
+    ]
+    .iter()
+    .map(|c| c / 494_021.0)
+    .collect();
+    let means = spread_means(d, k, 1.6, seed.wrapping_add(2));
+    let comps: Vec<Component> = means
+        .into_iter()
+        .zip(weights)
+        .enumerate()
+        .map(|(label, (mean, weight))| Component {
+            mean,
+            // Near-duplicate DoS floods vs broader "normal"/rare attacks.
+            std: vec![if label < 2 { 0.04 } else if label == 2 { 0.45 } else { 0.30 }; d],
+            weight,
+            label,
+        })
+        .collect();
+    gaussian_mixture(n, &comps, seed, "KDD99-like")
+}
+
+/// Pima-like diabetes: 768 records × 8 features, 2 classes with the
+/// published 65/35 split and per-feature class means/stds from the UCI
+/// summary statistics (pregnancies, glucose, blood pressure, skin fold,
+/// insulin, BMI, pedigree, age).
+pub fn pima_like(n: usize, seed: u64) -> Dataset {
+    // (negative mean, positive mean, shared-ish std) per feature, from the
+    // published per-class summary of the Pima Indian Diabetes data.
+    const STATS: [(f64, f64, f64); 8] = [
+        (3.30, 4.87, 3.20),     // pregnancies
+        (109.98, 141.26, 28.0), // plasma glucose
+        (68.18, 70.82, 18.0),   // diastolic bp
+        (19.66, 22.16, 15.0),   // triceps skin fold
+        (68.79, 100.34, 100.0), // serum insulin
+        (30.30, 35.14, 7.0),    // bmi
+        (0.43, 0.55, 0.30),     // diabetes pedigree
+        (31.19, 37.07, 11.0),   // age
+    ];
+    let neg = Component {
+        mean: STATS.iter().map(|s| s.0).collect(),
+        std: STATS.iter().map(|s| s.2).collect(),
+        weight: 0.651,
+        label: 0,
+    };
+    let pos = Component {
+        mean: STATS.iter().map(|s| s.1).collect(),
+        std: STATS.iter().map(|s| s.2).collect(),
+        weight: 0.349,
+        label: 1,
+    };
+    gaussian_mixture(n, &[neg, pos], seed, "Pima-like")
+}
+
+/// Well-separated blobs for tests and the quickstart example.
+pub fn blobs(n: usize, d: usize, k: usize, spread: f64, seed: u64) -> Dataset {
+    let means = spread_means(d, k, 4.0, seed);
+    let comps: Vec<Component> = means
+        .into_iter()
+        .enumerate()
+        .map(|(label, mean)| Component {
+            mean,
+            std: vec![spread; d],
+            weight: 1.0 / k as f64,
+            label,
+        })
+        .collect();
+    gaussian_mixture(n, &comps, seed, "blobs")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_paper() {
+        let s = susy_like(500, 1);
+        assert_eq!((s.rows(), s.dims(), s.n_classes), (500, 18, 2));
+        let h = higgs_like(500, 1);
+        assert_eq!((h.rows(), h.dims(), h.n_classes), (500, 28, 2));
+        let k = kdd_like(4000, 1);
+        // The rarest KDD classes (spy: 2 records in 494k) won't appear in a
+        // 4k draw; the dominant ones must.
+        assert_eq!((k.rows(), k.dims()), (4000, 41));
+        assert!(k.n_classes >= 9 && k.n_classes <= 23, "{}", k.n_classes);
+        let p = pima_like(768, 1);
+        assert_eq!((p.rows(), p.dims(), p.n_classes), (768, 8, 2));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = susy_like(100, 9);
+        let b = susy_like(100, 9);
+        assert_eq!(a.features.as_slice(), b.features.as_slice());
+        let c = susy_like(100, 10);
+        assert_ne!(a.features.as_slice(), c.features.as_slice());
+    }
+
+    #[test]
+    fn kdd_imbalance_present() {
+        let d = kdd_like(20_000, 3);
+        let labels = d.labels.unwrap();
+        let mut counts = vec![0usize; 23];
+        for &l in &labels {
+            counts[l] += 1;
+        }
+        // smurf-like class dominates; tail classes are rare but present.
+        assert!(counts[0] > 10_000, "{counts:?}");
+        assert!(counts[1] > 3_000);
+        let tail: usize = counts[3..].iter().sum();
+        assert!(tail < 1_000, "tail too heavy: {tail}");
+    }
+
+    #[test]
+    fn blobs_are_separated() {
+        let d = blobs(300, 4, 3, 0.2, 5);
+        let labels = d.labels.as_ref().unwrap();
+        // Mean intra-class distance must be far below inter-class.
+        let m = &d.features;
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let mut n_intra = 0;
+        let mut n_inter = 0;
+        for i in (0..300).step_by(7) {
+            for j in (1..300).step_by(11) {
+                let dd = m.row_dist2(i, m.row(j));
+                if labels[i] == labels[j] {
+                    intra += dd;
+                    n_intra += 1;
+                } else {
+                    inter += dd;
+                    n_inter += 1;
+                }
+            }
+        }
+        assert!(inter / n_inter as f64 > 5.0 * (intra / n_intra as f64));
+    }
+
+    #[test]
+    fn pima_class_balance() {
+        let d = pima_like(768, 11);
+        let labels = d.labels.unwrap();
+        let pos = labels.iter().filter(|&&l| l == 1).count();
+        let frac = pos as f64 / 768.0;
+        assert!((0.28..0.42).contains(&frac), "positive fraction {frac}");
+    }
+}

@@ -1,0 +1,57 @@
+//! Crate-wide error type.
+
+use std::path::PathBuf;
+
+/// All failure modes of the BigFCM system.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("i/o error at {path:?}: {source}")]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+
+    #[error("artifact registry: {0}")]
+    Artifact(String),
+
+    #[error("json parse error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    #[error("dataset error: {0}")]
+    Dataset(String),
+
+    #[error("hdfs block store: {0}")]
+    BlockStore(String),
+
+    #[error("mapreduce job failed: {0}")]
+    Job(String),
+
+    #[error("clustering did not produce a result: {0}")]
+    Clustering(String),
+}
+
+impl Error {
+    /// Wrap an io::Error with the path that caused it.
+    pub fn io(path: impl Into<PathBuf>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

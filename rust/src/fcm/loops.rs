@@ -1,0 +1,259 @@
+//! Outer iteration loops: weighted FCM (fast or classic chunk math) and
+//! Lloyd's K-Means, generic over the chunk backend.
+//!
+//! Layer 3 owns these loops by design — the AOT artifacts only compute one
+//! pass of partials, so convergence policy (epsilon on the max squared
+//! center shift, iteration cap) lives here in rust, identical for the
+//! native and PJRT backends.
+
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+use crate::fcm::{max_center_shift2, ChunkBackend, ClusterResult, Partials};
+
+/// FCM chunk-math variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Kolen–Hutcheson O(n·c) update (paper Algorithm 1).
+    Fast,
+    /// Textbook O(n·c²) update ("basic FCM").
+    Classic,
+}
+
+/// Parameters of one FCM run (paper notation).
+#[derive(Clone, Copy, Debug)]
+pub struct FcmParams {
+    /// Fuzzifier m > 1.
+    pub m: f64,
+    /// Convergence threshold on max squared center shift.
+    pub epsilon: f64,
+    /// Iteration cap (paper uses 1000).
+    pub max_iterations: usize,
+    /// Chunk-math variant.
+    pub variant: Variant,
+}
+
+impl Default for FcmParams {
+    fn default() -> Self {
+        Self { m: 2.0, epsilon: 5.0e-7, max_iterations: 1000, variant: Variant::Fast }
+    }
+}
+
+fn one_pass(
+    backend: &dyn ChunkBackend,
+    x: &Matrix,
+    v: &Matrix,
+    w: &[f32],
+    params: &FcmParams,
+) -> Result<Partials> {
+    match params.variant {
+        Variant::Fast => backend.fcm_partials(x, v, w, params.m),
+        Variant::Classic => backend.classic_partials(x, v, w, params.m),
+    }
+}
+
+/// Weighted FCM to convergence over in-memory records.
+///
+/// This is the paper's Algorithm 1 (WFCM): each iteration computes weighted
+/// membership terms and center numerators in one pass, then divides. The
+/// final per-center weights (Σ u^m w) are returned as the center importance
+/// used by downstream WFCM merges (paper Eq. 6).
+pub fn run_fcm(
+    backend: &dyn ChunkBackend,
+    x: &Matrix,
+    w: &[f32],
+    v0: Matrix,
+    params: &FcmParams,
+) -> Result<ClusterResult> {
+    if x.rows() == 0 {
+        return Err(Error::Clustering("empty input".into()));
+    }
+    if x.rows() != w.len() {
+        return Err(Error::Clustering(format!(
+            "weights length {} != rows {}",
+            w.len(),
+            x.rows()
+        )));
+    }
+    if v0.cols() != x.cols() {
+        return Err(Error::Clustering("seed center dims mismatch".into()));
+    }
+    let mut v = v0;
+    let mut weights = vec![0.0; v.rows()];
+    let mut objective = f64::INFINITY;
+    let mut converged = false;
+    let mut iterations = 0;
+    for it in 1..=params.max_iterations {
+        iterations = it;
+        let partials = one_pass(backend, x, &v, w, params)?;
+        weights.clone_from_slice(&partials.w_acc);
+        objective = partials.objective;
+        let v_new = partials.into_centers(&v);
+        let shift = max_center_shift2(&v, &v_new);
+        v = v_new;
+        if shift <= params.epsilon {
+            converged = true;
+            break;
+        }
+    }
+    Ok(ClusterResult { centers: v, weights, iterations, objective, converged })
+}
+
+/// Lloyd's K-Means to convergence (the Mahout-KM compute model).
+pub fn kmeans_loop(
+    backend: &dyn ChunkBackend,
+    x: &Matrix,
+    v0: Matrix,
+    epsilon: f64,
+    max_iterations: usize,
+) -> Result<ClusterResult> {
+    if x.rows() == 0 {
+        return Err(Error::Clustering("empty input".into()));
+    }
+    let w = vec![1.0f32; x.rows()];
+    let mut v = v0;
+    let mut weights = vec![0.0; v.rows()];
+    let mut objective = f64::INFINITY;
+    let mut converged = false;
+    let mut iterations = 0;
+    for it in 1..=max_iterations {
+        iterations = it;
+        let partials = backend.kmeans_partials(x, &v, &w)?;
+        weights.clone_from_slice(&partials.w_acc);
+        objective = partials.objective;
+        let v_new = partials.into_centers(&v);
+        let shift = max_center_shift2(&v, &v_new);
+        v = v_new;
+        if shift <= epsilon {
+            converged = true;
+            break;
+        }
+    }
+    Ok(ClusterResult { centers: v, weights, iterations, objective, converged })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+    use crate::fcm::seeding;
+    use crate::fcm::NativeBackend;
+    use crate::prng::Pcg;
+
+    #[test]
+    fn fcm_recovers_blobs() {
+        let data = blobs(600, 3, 3, 0.15, 1);
+        let mut rng = Pcg::new(2);
+        let v0 = seeding::random_records(&data.features, 3, &mut rng);
+        let w = vec![1.0f32; 600];
+        let params = FcmParams { epsilon: 1e-10, ..Default::default() };
+        let r = run_fcm(&NativeBackend, &data.features, &w, v0, &params).unwrap();
+        assert!(r.converged, "did not converge in {} iters", r.iterations);
+        // Every found center sits inside some blob (spread 0.15 → within 0.5).
+        let truth = crate::fcm::assign_hard(&r.centers, &r.centers);
+        assert_eq!(truth.len(), 3);
+        for i in 0..3 {
+            let mut best = f64::INFINITY;
+            for j in 0..600 {
+                best = best.min(data.features.row_dist2(j, r.centers.row(i)));
+            }
+            assert!(best < 0.25, "center {i} far from data: {best}");
+        }
+    }
+
+    #[test]
+    fn objective_monotone_nonincreasing() {
+        let data = blobs(400, 4, 3, 0.4, 3);
+        let mut rng = Pcg::new(4);
+        let v0 = seeding::random_records(&data.features, 3, &mut rng);
+        let w = vec![1.0f32; 400];
+        let mut v = v0;
+        let mut last = f64::INFINITY;
+        for _ in 0..10 {
+            let p = NativeBackend.fcm_partials(&data.features, &v, &w, 2.0).unwrap();
+            assert!(p.objective <= last * (1.0 + 1e-7), "{} > {last}", p.objective);
+            last = p.objective;
+            v = p.into_centers(&v);
+        }
+    }
+
+    #[test]
+    fn fast_and_classic_converge_to_same_centers() {
+        let data = blobs(300, 3, 3, 0.3, 5);
+        let mut rng = Pcg::new(6);
+        let v0 = seeding::random_records(&data.features, 3, &mut rng);
+        let w = vec![1.0f32; 300];
+        let fast = run_fcm(
+            &NativeBackend,
+            &data.features,
+            &w,
+            v0.clone(),
+            &FcmParams { epsilon: 1e-12, variant: Variant::Fast, ..Default::default() },
+        )
+        .unwrap();
+        let classic = run_fcm(
+            &NativeBackend,
+            &data.features,
+            &w,
+            v0,
+            &FcmParams { epsilon: 1e-12, variant: Variant::Classic, ..Default::default() },
+        )
+        .unwrap();
+        let shift = max_center_shift2(&fast.centers, &classic.centers);
+        assert!(shift < 1e-4, "variants diverged: {shift}");
+    }
+
+    #[test]
+    fn kmeans_recovers_blobs() {
+        let data = blobs(600, 3, 3, 0.15, 7);
+        let mut rng = Pcg::new(8);
+        let v0 = seeding::random_records(&data.features, 3, &mut rng);
+        let r = kmeans_loop(&NativeBackend, &data.features, v0, 1e-10, 500).unwrap();
+        assert!(r.converged);
+        assert!(r.objective / 600.0 < 0.2, "per-record SSE {}", r.objective / 600.0);
+    }
+
+    #[test]
+    fn weighted_points_pull_centers() {
+        // One heavy point at 10 must pull its cluster center toward it.
+        let x = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![10.0], vec![11.0]]);
+        let w_uniform = vec![1.0f32, 1.0, 1.0, 1.0];
+        let w_heavy = vec![1.0f32, 1.0, 50.0, 1.0];
+        let v0 = Matrix::from_rows(&[vec![0.5], vec![10.5]]);
+        let p = FcmParams { epsilon: 1e-12, ..Default::default() };
+        let a = run_fcm(&NativeBackend, &x, &w_uniform, v0.clone(), &p).unwrap();
+        let b = run_fcm(&NativeBackend, &x, &w_heavy, v0, &p).unwrap();
+        // Heavy cluster center must be closer to 10 than the uniform one.
+        let ua = a.centers.get(1, 0);
+        let ub = b.centers.get(1, 0);
+        assert!((ub - 10.0).abs() < (ua - 10.0).abs(), "{ua} vs {ub}");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let x = Matrix::zeros(0, 3);
+        let v0 = Matrix::zeros(2, 3);
+        assert!(run_fcm(&NativeBackend, &x, &[], v0.clone(), &FcmParams::default()).is_err());
+        let x = Matrix::zeros(4, 3);
+        assert!(run_fcm(&NativeBackend, &x, &[1.0; 3], v0.clone(), &FcmParams::default()).is_err());
+        let v_bad = Matrix::zeros(2, 5);
+        assert!(run_fcm(&NativeBackend, &x, &[1.0; 4], v_bad, &FcmParams::default()).is_err());
+    }
+
+    #[test]
+    fn iteration_cap_respected() {
+        let data = blobs(200, 3, 3, 0.4, 9);
+        let mut rng = Pcg::new(10);
+        let v0 = seeding::random_records(&data.features, 3, &mut rng);
+        let w = vec![1.0f32; 200];
+        let r = run_fcm(
+            &NativeBackend,
+            &data.features,
+            &w,
+            v0,
+            &FcmParams { epsilon: 0.0, max_iterations: 5, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(r.iterations, 5);
+        assert!(!r.converged);
+    }
+}

@@ -1,0 +1,189 @@
+//! Core clustering algorithms: fast (Kolen–Hutcheson) FCM, classic FCM,
+//! weighted FCM, the block-wise WFCMPB of the paper's Algorithm 2, K-Means,
+//! plus seeding and convergence policy.
+//!
+//! All loops are generic over a [`ChunkBackend`] so the same code drives the
+//! pure-rust native implementation (tests, driver-side small jobs) and the
+//! AOT HLO executables on PJRT (the production hot path).
+
+pub mod loops;
+pub mod native;
+pub mod seeding;
+pub mod wfcmpb;
+
+pub use loops::{kmeans_loop, run_fcm, FcmParams, Variant};
+pub use native::NativeBackend;
+
+use crate::data::Matrix;
+use crate::error::Result;
+
+/// Partial sufficient statistics of one pass over some records:
+/// un-normalised center numerators, per-cluster weight mass, and the
+/// weighted objective (paper Eq. 2).
+#[derive(Clone, Debug)]
+pub struct Partials {
+    /// Σ_k u^m_{ik} w_k x_k, shape (C, d).
+    pub v_num: Matrix,
+    /// Σ_k u^m_{ik} w_k, length C.
+    pub w_acc: Vec<f64>,
+    /// Σ_ik u^m_{ik} w_k ‖x_k − v_i‖².
+    pub objective: f64,
+}
+
+impl Partials {
+    pub fn zeros(c: usize, d: usize) -> Self {
+        Self { v_num: Matrix::zeros(c, d), w_acc: vec![0.0; c], objective: 0.0 }
+    }
+
+    /// Merge another partial into this one (associative, commutative — the
+    /// combiner contract).
+    pub fn merge(&mut self, other: &Partials) {
+        debug_assert_eq!(self.v_num.rows(), other.v_num.rows());
+        debug_assert_eq!(self.v_num.cols(), other.v_num.cols());
+        for (a, b) in self
+            .v_num
+            .as_mut_slice()
+            .iter_mut()
+            .zip(other.v_num.as_slice())
+        {
+            *a += b;
+        }
+        for (a, b) in self.w_acc.iter_mut().zip(&other.w_acc) {
+            *a += b;
+        }
+        self.objective += other.objective;
+    }
+
+    /// Finish the update: centers = numerators / weights. Clusters with no
+    /// mass keep `fallback`'s row (Mahout's empty-cluster behaviour).
+    pub fn into_centers(self, fallback: &Matrix) -> Matrix {
+        let (c, d) = (self.v_num.rows(), self.v_num.cols());
+        let mut out = Matrix::zeros(c, d);
+        for i in 0..c {
+            let wi = self.w_acc[i];
+            let row = out.row_mut(i);
+            if wi > 1e-30 {
+                for (j, val) in row.iter_mut().enumerate() {
+                    *val = (self.v_num.get(i, j) as f64 / wi) as f32;
+                }
+            } else {
+                row.copy_from_slice(fallback.row(i));
+            }
+        }
+        out
+    }
+}
+
+/// Backend executing one pass of per-chunk heavy math.
+pub trait ChunkBackend: Send + Sync {
+    /// Fast-FCM (Kolen–Hutcheson) partials, O(n·c) per record block.
+    fn fcm_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials>;
+
+    /// Classic-FCM partials, O(n·c²) formulation.
+    fn classic_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials>;
+
+    /// Hard K-Means partials (v_num = per-cluster sums, w_acc = counts,
+    /// objective = SSE).
+    fn kmeans_partials(&self, x: &Matrix, v: &Matrix, w: &[f32]) -> Result<Partials>;
+
+    /// Human name for reports ("native", "pjrt").
+    fn name(&self) -> &'static str;
+}
+
+/// The outcome of a clustering run.
+#[derive(Clone, Debug)]
+pub struct ClusterResult {
+    /// Final centers, (C, d).
+    pub centers: Matrix,
+    /// Final per-center weight mass (importance for downstream WFCM).
+    pub weights: Vec<f64>,
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Final objective value.
+    pub objective: f64,
+    /// Whether the epsilon criterion was met (vs hitting max_iterations).
+    pub converged: bool,
+}
+
+/// Max squared center displacement — the paper's convergence statistic
+/// (`max_i ‖V_i,new − V_i,old‖²`).
+pub fn max_center_shift2(old: &Matrix, new: &Matrix) -> f64 {
+    debug_assert_eq!(old.rows(), new.rows());
+    let mut worst = 0.0f64;
+    for i in 0..old.rows() {
+        let mut acc = 0.0f64;
+        for (a, b) in old.row(i).iter().zip(new.row(i)) {
+            let d = (*a - *b) as f64;
+            acc += d * d;
+        }
+        worst = worst.max(acc);
+    }
+    worst
+}
+
+/// Hard assignment of each record to its nearest center (used for the
+/// confusion-matrix evaluation; for FCM this is the argmax-membership rule,
+/// which coincides with nearest-center for any m).
+pub fn assign_hard(x: &Matrix, centers: &Matrix) -> Vec<usize> {
+    let mut out = Vec::with_capacity(x.rows());
+    for i in 0..x.rows() {
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for c in 0..centers.rows() {
+            let d = x.row_dist2(i, centers.row(c));
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        out.push(best);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partials_merge_is_componentwise() {
+        let mut a = Partials::zeros(2, 2);
+        a.v_num.set(0, 0, 1.0);
+        a.w_acc[0] = 2.0;
+        a.objective = 3.0;
+        let mut b = Partials::zeros(2, 2);
+        b.v_num.set(0, 0, 4.0);
+        b.w_acc[0] = 5.0;
+        b.objective = 6.0;
+        a.merge(&b);
+        assert_eq!(a.v_num.get(0, 0), 5.0);
+        assert_eq!(a.w_acc[0], 7.0);
+        assert_eq!(a.objective, 9.0);
+    }
+
+    #[test]
+    fn into_centers_divides_and_falls_back() {
+        let mut p = Partials::zeros(2, 1);
+        p.v_num.set(0, 0, 6.0);
+        p.w_acc[0] = 2.0;
+        // cluster 1 gets no mass → falls back.
+        let fallback = Matrix::from_rows(&[vec![9.0], vec![7.0]]);
+        let centers = p.into_centers(&fallback);
+        assert_eq!(centers.get(0, 0), 3.0);
+        assert_eq!(centers.get(1, 0), 7.0);
+    }
+
+    #[test]
+    fn shift_is_max_over_clusters() {
+        let a = Matrix::from_rows(&[vec![0.0, 0.0], vec![1.0, 1.0]]);
+        let b = Matrix::from_rows(&[vec![0.0, 1.0], vec![1.0, 1.0]]);
+        assert_eq!(max_center_shift2(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn hard_assignment_nearest() {
+        let x = Matrix::from_rows(&[vec![0.1], vec![4.9], vec![2.4]]);
+        let v = Matrix::from_rows(&[vec![0.0], vec![5.0]]);
+        assert_eq!(assign_hard(&x, &v), vec![0, 1, 0]);
+    }
+}

@@ -1,0 +1,297 @@
+//! Pure-rust [`ChunkBackend`] — the same math as the Pallas kernels
+//! (`python/compile/kernels/fcm_pallas.py`), validated against the AOT
+//! golden vectors in `rust/tests/integration_runtime.rs`.
+//!
+//! Used by: the driver job (tiny sample, not worth a PJRT round-trip),
+//! unit tests, and as the `Backend::Native` ablation arm.
+
+use crate::data::matrix::dist2;
+use crate::data::Matrix;
+use crate::error::Result;
+use crate::fcm::{ChunkBackend, Partials};
+
+const DIST_EPS: f64 = 1e-12;
+
+/// The native backend is stateless.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend
+    }
+}
+
+impl ChunkBackend for NativeBackend {
+    fn fcm_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
+        Ok(fcm_partials_native(x, v, w, m))
+    }
+
+    fn classic_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
+        Ok(classic_partials_native(x, v, w, m))
+    }
+
+    fn kmeans_partials(&self, x: &Matrix, v: &Matrix, w: &[f32]) -> Result<Partials> {
+        Ok(kmeans_partials_native(x, v, w))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Fast-FCM partials (Kolen–Hutcheson): computes u^m directly from the
+/// distance vector of each record — O(C·d) per record, no membership matrix.
+///
+/// Perf (EXPERIMENTS.md §Perf): `powf` dominates the generic path, so the
+/// paper's default m=2 (p = 1, u^m = x⁻²) takes a transcendental-free fast
+/// path — ~3.6× throughput on the 65k-record micro-bench.
+pub fn fcm_partials_native(x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Partials {
+    let (c, d) = (v.rows(), v.cols());
+    debug_assert_eq!(x.rows(), w.len());
+    let mut out = Partials::zeros(c, d);
+    let p = 1.0 / (m - 1.0);
+    let m2 = m == 2.0; // p = 1, (num·den)^-m = 1/(num·den)²
+    // Scratch reused across records to keep the hot loop allocation-free.
+    let mut num = vec![0.0f64; c];
+    let mut d2v = vec![0.0f64; c];
+    for (k, row) in x.iter_rows().enumerate() {
+        let wk = w[k] as f64;
+        if wk == 0.0 {
+            continue; // padding contract
+        }
+        // Memberships depend only on distance ratios; normalising by the row
+        // minimum before powering avoids under/overflow at small m (matches
+        // the Pallas kernel, fcm_pallas._um_fast).
+        let mut dmin = f64::INFINITY;
+        for i in 0..c {
+            let d2 = dist2(row, v.row(i)).max(DIST_EPS);
+            d2v[i] = d2;
+            dmin = dmin.min(d2);
+        }
+        let mut den = 0.0f64;
+        if m2 {
+            for i in 0..c {
+                let n = d2v[i] / dmin;
+                num[i] = n;
+                den += 1.0 / n;
+            }
+        } else {
+            for i in 0..c {
+                let n = (d2v[i] / dmin).powf(p);
+                num[i] = n;
+                den += 1.0 / n;
+            }
+        }
+        for i in 0..c {
+            let um = if m2 {
+                let nd = num[i] * den;
+                wk / (nd * nd)
+            } else {
+                (num[i] * den).powf(-m) * wk
+            };
+            out.w_acc[i] += um;
+            out.objective += um * d2v[i];
+            let umf = um as f32;
+            let vrow = out.v_num.row_mut(i);
+            for (val, &xj) in vrow.iter_mut().zip(row) {
+                *val += umf * xj;
+            }
+        }
+    }
+    out
+}
+
+/// Classic-FCM partials: explicit O(C²) ratio sums per record — the
+/// "basic FCM" complexity the paper contrasts against (and the compute
+/// model of the Mahout FKM baseline).
+pub fn classic_partials_native(x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Partials {
+    let (c, d) = (v.rows(), v.cols());
+    let mut out = Partials::zeros(c, d);
+    let p = 1.0 / (m - 1.0);
+    let mut d2v = vec![0.0f64; c];
+    for (k, row) in x.iter_rows().enumerate() {
+        let wk = w[k] as f64;
+        if wk == 0.0 {
+            continue;
+        }
+        for i in 0..c {
+            d2v[i] = dist2(row, v.row(i)).max(DIST_EPS);
+        }
+        for i in 0..c {
+            // u_i = 1 / Σ_j (d_i/d_j)^p — the textbook double loop.
+            let mut s = 0.0f64;
+            for j in 0..c {
+                s += (d2v[i] / d2v[j]).powf(p);
+            }
+            let u = 1.0 / s;
+            let um = u.powf(m) * wk;
+            out.w_acc[i] += um;
+            out.objective += um * d2v[i];
+            let vrow = out.v_num.row_mut(i);
+            for (jj, val) in vrow.iter_mut().enumerate() {
+                *val += (um * row[jj] as f64) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Hard K-Means partials: per-cluster weighted sums/counts + SSE.
+pub fn kmeans_partials_native(x: &Matrix, v: &Matrix, w: &[f32]) -> Partials {
+    let (c, d) = (v.rows(), v.cols());
+    let mut out = Partials::zeros(c, d);
+    for (k, row) in x.iter_rows().enumerate() {
+        let wk = w[k] as f64;
+        if wk == 0.0 {
+            continue;
+        }
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for i in 0..c {
+            let dd = dist2(row, v.row(i)).max(DIST_EPS);
+            if dd < best_d {
+                best_d = dd;
+                best = i;
+            }
+        }
+        out.w_acc[best] += wk;
+        out.objective += wk * best_d;
+        let vrow = out.v_num.row_mut(best);
+        for (j, val) in vrow.iter_mut().enumerate() {
+            *val += (wk * row[j] as f64) as f32;
+        }
+    }
+    out
+}
+
+/// Full membership matrix (N, C) — used by quality metrics, not the hot path.
+pub fn memberships(x: &Matrix, v: &Matrix, m: f64) -> Matrix {
+    let (n, c) = (x.rows(), v.rows());
+    let p = 1.0 / (m - 1.0);
+    let mut u = Matrix::zeros(n, c);
+    let mut num = vec![0.0f64; c];
+    let mut d2v = vec![0.0f64; c];
+    for k in 0..n {
+        let row = x.row(k);
+        let mut dmin = f64::INFINITY;
+        for i in 0..c {
+            let d2 = dist2(row, v.row(i)).max(DIST_EPS);
+            d2v[i] = d2;
+            dmin = dmin.min(d2);
+        }
+        let mut den = 0.0f64;
+        for i in 0..c {
+            let nm = (d2v[i] / dmin).powf(p);
+            num[i] = nm;
+            den += 1.0 / nm;
+        }
+        for i in 0..c {
+            u.set(k, i, (1.0 / (num[i] * den)) as f32);
+        }
+    }
+    u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg;
+
+    fn rand_case(n: usize, d: usize, c: usize, seed: u64) -> (Matrix, Matrix, Vec<f32>) {
+        let mut rng = Pcg::new(seed);
+        let mut x = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                x.set(i, j, rng.normal() as f32);
+            }
+        }
+        let mut v = Matrix::zeros(c, d);
+        for i in 0..c {
+            for j in 0..d {
+                v.set(i, j, rng.normal() as f32);
+            }
+        }
+        let w = (0..n).map(|_| rng.next_f32() + 0.1).collect();
+        (x, v, w)
+    }
+
+    #[test]
+    fn fast_equals_classic_partials() {
+        // The Kolen–Hutcheson trick is algebraically identical to classic.
+        let (x, v, w) = rand_case(200, 5, 4, 1);
+        for m in [1.2, 2.0, 2.8] {
+            let a = fcm_partials_native(&x, &v, &w, m);
+            let b = classic_partials_native(&x, &v, &w, m);
+            for (p, q) in a.v_num.as_slice().iter().zip(b.v_num.as_slice()) {
+                assert!((p - q).abs() < 1e-3, "{p} vs {q} at m={m}");
+            }
+            for (p, q) in a.w_acc.iter().zip(&b.w_acc) {
+                assert!((p - q).abs() < 1e-6);
+            }
+            assert!((a.objective - b.objective).abs() / b.objective.max(1e-9) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn memberships_rows_sum_to_one() {
+        let (x, v, _) = rand_case(100, 4, 3, 2);
+        let u = memberships(&x, &v, 2.0);
+        for i in 0..u.rows() {
+            let s: f32 = u.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn zero_weight_records_ignored() {
+        let (x, v, mut w) = rand_case(64, 3, 2, 3);
+        for wk in w.iter_mut().skip(32) {
+            *wk = 0.0;
+        }
+        let full = fcm_partials_native(&x, &v, &w, 2.0);
+        // Corrupt ignored rows; result must be identical.
+        let mut x2 = x.clone();
+        for i in 32..64 {
+            for j in 0..3 {
+                x2.set(i, j, 1e9);
+            }
+        }
+        let same = fcm_partials_native(&x2, &v, &w, 2.0);
+        assert_eq!(full.v_num.as_slice(), same.v_num.as_slice());
+        assert_eq!(full.w_acc, same.w_acc);
+    }
+
+    #[test]
+    fn partials_associativity() {
+        let (x, v, w) = rand_case(128, 4, 3, 4);
+        let full = fcm_partials_native(&x, &v, &w, 2.0);
+        let mut merged = fcm_partials_native(&x.slice_rows(0, 64), &v, &w[..64], 2.0);
+        let right = fcm_partials_native(&x.slice_rows(64, 128), &v, &w[64..], 2.0);
+        merged.merge(&right);
+        for (a, b) in merged.v_num.as_slice().iter().zip(full.v_num.as_slice()) {
+            assert!((a - b).abs() < 1e-3);
+        }
+        for (a, b) in merged.w_acc.iter().zip(&full.w_acc) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn kmeans_counts_sum_to_weight_mass() {
+        let (x, v, w) = rand_case(256, 6, 5, 5);
+        let p = kmeans_partials_native(&x, &v, &w);
+        let total_w: f64 = w.iter().map(|&x| x as f64).sum();
+        let total_c: f64 = p.w_acc.iter().sum();
+        assert!((total_w - total_c).abs() < 1e-6);
+    }
+
+    #[test]
+    fn point_on_center_is_finite() {
+        let x = Matrix::from_rows(&[vec![1.0, 1.0], vec![3.0, 3.0]]);
+        let v = Matrix::from_rows(&[vec![1.0, 1.0], vec![5.0, 5.0]]);
+        let p = fcm_partials_native(&x, &v, &[1.0, 1.0], 2.0);
+        assert!(p.v_num.as_slice().iter().all(|v| v.is_finite()));
+        assert!(p.w_acc.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,224 @@
+//! Center seeding strategies.
+//!
+//! The paper contrasts *random* initial centers (what Mahout does per job)
+//! with its driver-side sampled pre-clustering. Both live here, plus a
+//! k-means++-style spread seeding used as an optional extension (the paper's
+//! "future work: tuning the required parameters").
+
+use crate::data::matrix::dist2;
+use crate::data::Matrix;
+use crate::prng::Pcg;
+
+/// Pick `c` distinct records as initial centers (the baseline strategy).
+pub fn random_records(x: &Matrix, c: usize, rng: &mut Pcg) -> Matrix {
+    assert!(x.rows() >= c, "need at least c records to seed");
+    let idx = rng.sample_indices(x.rows(), c);
+    x.select_rows(&idx)
+}
+
+/// Uniform random points inside the per-feature bounding box.
+pub fn random_uniform(x: &Matrix, c: usize, rng: &mut Pcg) -> Matrix {
+    let d = x.cols();
+    let mut lo = vec![f32::INFINITY; d];
+    let mut hi = vec![f32::NEG_INFINITY; d];
+    for row in x.iter_rows() {
+        for j in 0..d {
+            lo[j] = lo[j].min(row[j]);
+            hi[j] = hi[j].max(row[j]);
+        }
+    }
+    let mut out = Matrix::zeros(c, d);
+    for i in 0..c {
+        for j in 0..d {
+            out.set(i, j, rng.uniform(lo[j] as f64, hi[j] as f64) as f32);
+        }
+    }
+    out
+}
+
+/// k-means++ seeding: spread centers by D² sampling (extension knob).
+pub fn kmeanspp(x: &Matrix, c: usize, rng: &mut Pcg) -> Matrix {
+    assert!(x.rows() >= c);
+    let n = x.rows();
+    let mut chosen = Vec::with_capacity(c);
+    chosen.push(rng.next_index(n));
+    let mut d2 = vec![f64::INFINITY; n];
+    while chosen.len() < c {
+        let last = *chosen.last().unwrap();
+        for i in 0..n {
+            d2[i] = d2[i].min(dist2(x.row(i), x.row(last)));
+        }
+        let pick = rng.weighted_index(&d2);
+        chosen.push(pick);
+    }
+    x.select_rows(&chosen)
+}
+
+/// Detect near-duplicate centers and relocate them to the records farthest
+/// from every current center (classic duplicate/empty-cluster repair).
+///
+/// Near-zero-variance clusters (e.g. KDD99's smurf flood, where records are
+/// practically identical) can capture several centers during FCM descent;
+/// the duplicates waste capacity while barely moving the objective, so
+/// objective-based restart selection cannot repair them. Returns the number
+/// of centers relocated (0 = nothing to repair).
+pub fn repair_duplicate_centers(x: &Matrix, centers: &mut Matrix, rel_tol: f64) -> usize {
+    let c = centers.rows();
+    if c < 2 {
+        return 0;
+    }
+    // Scale: mean pairwise center distance.
+    let mut mean_d2 = 0.0f64;
+    let mut pairs = 0usize;
+    for i in 0..c {
+        for j in (i + 1)..c {
+            mean_d2 += dist2(centers.row(i), centers.row(j));
+            pairs += 1;
+        }
+    }
+    mean_d2 /= pairs.max(1) as f64;
+    // All-coincident centers give mean_d2 = 0; fall back to the data scale
+    // (mean squared record distance to the first center) so full collapse
+    // is still detected and repaired.
+    if mean_d2 <= f64::MIN_POSITIVE {
+        let n = x.rows().max(1);
+        mean_d2 = (0..n)
+            .step_by((n / 256).max(1))
+            .map(|r| x.row_dist2(r, centers.row(0)))
+            .sum::<f64>()
+            / (n.div_ceil((n / 256).max(1)) as f64);
+    }
+    let threshold = mean_d2 * rel_tol * rel_tol;
+
+    // Mark duplicates: for each close pair, the higher index is relocated.
+    let mut dup = vec![false; c];
+    for i in 0..c {
+        if dup[i] {
+            continue;
+        }
+        for j in (i + 1)..c {
+            if !dup[j] && dist2(centers.row(i), centers.row(j)) < threshold {
+                dup[j] = true;
+            }
+        }
+    }
+    let n_dup = dup.iter().filter(|&&d| d).count();
+    if n_dup == 0 {
+        return 0;
+    }
+    // Farthest-point reseeding (deterministic): iteratively move each
+    // duplicate to the record with max distance to all kept centers.
+    let mut d2min: Vec<f64> = (0..x.rows())
+        .map(|r| {
+            (0..c)
+                .filter(|&i| !dup[i])
+                .map(|i| x.row_dist2(r, centers.row(i)))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
+    for i in 0..c {
+        if !dup[i] {
+            continue;
+        }
+        let far = d2min
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(r, _)| r)
+            .unwrap_or(0);
+        let row = x.row(far).to_vec();
+        centers.row_mut(i).copy_from_slice(&row);
+        for (r, d) in d2min.iter_mut().enumerate() {
+            *d = d.min(x.row_dist2(r, &row));
+        }
+    }
+    n_dup
+}
+
+/// Named strategy selector for config/CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Seeding {
+    RandomRecords,
+    RandomUniform,
+    KMeansPlusPlus,
+}
+
+impl Seeding {
+    pub fn seed(&self, x: &Matrix, c: usize, rng: &mut Pcg) -> Matrix {
+        match self {
+            Seeding::RandomRecords => random_records(x, c, rng),
+            Seeding::RandomUniform => random_uniform(x, c, rng),
+            Seeding::KMeansPlusPlus => kmeanspp(x, c, rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+
+    #[test]
+    fn random_records_are_records() {
+        let data = blobs(50, 3, 2, 0.3, 1);
+        let mut rng = Pcg::new(1);
+        let seeds = random_records(&data.features, 4, &mut rng);
+        assert_eq!(seeds.rows(), 4);
+        for i in 0..4 {
+            let is_record = (0..50).any(|j| data.features.row(j) == seeds.row(i));
+            assert!(is_record);
+        }
+    }
+
+    #[test]
+    fn random_uniform_inside_bbox() {
+        let data = blobs(100, 2, 2, 0.3, 2);
+        let mut rng = Pcg::new(2);
+        let seeds = random_uniform(&data.features, 8, &mut rng);
+        let m = &data.features;
+        for j in 0..2 {
+            let lo = (0..100).map(|i| m.get(i, j)).fold(f32::INFINITY, f32::min);
+            let hi = (0..100).map(|i| m.get(i, j)).fold(f32::NEG_INFINITY, f32::max);
+            for i in 0..8 {
+                assert!(seeds.get(i, j) >= lo && seeds.get(i, j) <= hi);
+            }
+        }
+    }
+
+    #[test]
+    fn kmeanspp_spreads_across_blobs() {
+        // 3 well-separated blobs, 3 seeds → expect one seed near each blob.
+        let data = blobs(300, 2, 3, 0.1, 3);
+        let mut hits = 0;
+        for trial in 0..5 {
+            let mut rng = Pcg::new(100 + trial);
+            let seeds = kmeanspp(&data.features, 3, &mut rng);
+            let labels = data.labels.as_ref().unwrap();
+            let mut covered = std::collections::HashSet::new();
+            for i in 0..3 {
+                let mut best = (f64::INFINITY, 0usize);
+                for j in 0..300 {
+                    let d = data.features.row_dist2(j, seeds.row(i));
+                    if d < best.0 {
+                        best = (d, labels[j]);
+                    }
+                }
+                covered.insert(best.1);
+            }
+            if covered.len() == 3 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 4, "kmeans++ covered all blobs only {hits}/5 times");
+    }
+
+    #[test]
+    fn seeding_enum_dispatch() {
+        let data = blobs(30, 2, 2, 0.2, 4);
+        let mut rng = Pcg::new(5);
+        for s in [Seeding::RandomRecords, Seeding::RandomUniform, Seeding::KMeansPlusPlus] {
+            let m = s.seed(&data.features, 2, &mut rng);
+            assert_eq!((m.rows(), m.cols()), (2, 2));
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! WFCMPB — the paper's Algorithm 2: block-wise weighted FCM.
+//!
+//! Splits the records into blocks sized by the sampling formula, runs FCM on
+//! each block warm-started from the previous block's centers, and folds every
+//! block's (centers, weights) into a running weighted-FCM merge. This is the
+//! single-pass "divide and conquer" arm that the driver races against plain
+//! FCM (the `Flag` decision in Algorithm 3), and the alternative combiner
+//! when plain FCM converges slowly on a dataset.
+
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+use crate::fcm::loops::{run_fcm, FcmParams};
+use crate::fcm::{ChunkBackend, ClusterResult};
+
+/// Outcome of a WFCMPB run: final merged centers/weights plus per-block
+/// iteration counts (telemetry for the Flag race).
+#[derive(Clone, Debug)]
+pub struct WfcmpbResult {
+    pub result: ClusterResult,
+    pub blocks: usize,
+    pub block_iterations: Vec<usize>,
+}
+
+/// Run Algorithm 2 over in-memory records.
+///
+/// * `block_size` — records per block S_i (from the sampling formula).
+/// * `v_init` — C_intermediate seeds for the first block.
+pub fn wfcmpb(
+    backend: &dyn ChunkBackend,
+    x: &Matrix,
+    v_init: Matrix,
+    block_size: usize,
+    params: &FcmParams,
+) -> Result<WfcmpbResult> {
+    if x.rows() == 0 {
+        return Err(Error::Clustering("wfcmpb: empty input".into()));
+    }
+    let block_size = block_size.max(v_init.rows()).min(x.rows());
+    let c = v_init.rows();
+    let d = x.cols();
+
+    // Accumulated (center, weight) pool across blocks: V_final ∪ C_i.
+    let mut pool = Matrix::zeros(0, d);
+    let mut pool_w: Vec<f64> = Vec::new();
+
+    let mut seeds = v_init;
+    let mut block_iterations = Vec::new();
+    let mut blocks = 0usize;
+    let mut start = 0usize;
+    while start < x.rows() {
+        let end = (start + block_size).min(x.rows());
+        // A tail block smaller than C can't be clustered into C groups —
+        // fold its records straight into the pool with unit weights.
+        if end - start < c {
+            for i in start..end {
+                pool.push_row(x.row(i));
+                pool_w.push(1.0);
+            }
+            break;
+        }
+        let block = x.slice_rows(start, end);
+        let w = vec![1.0f32; block.rows()];
+        // C_i, W_i = FCM(S_i, C_{i-1}, C, M) — warm start from previous.
+        let r = run_fcm(backend, &block, &w, seeds.clone(), params)?;
+        block_iterations.push(r.iterations);
+        seeds = r.centers.clone();
+        for i in 0..c {
+            pool.push_row(r.centers.row(i));
+            pool_w.push(r.weights[i]);
+        }
+        blocks += 1;
+        start = end;
+    }
+
+    // V_final, W_f = WFCM over the pooled weighted centers.
+    let pool_w32: Vec<f32> = pool_w.iter().map(|&w| w as f32).collect();
+    let final_run = run_fcm(backend, &pool, &pool_w32, seeds, params)?;
+    Ok(WfcmpbResult { result: final_run, blocks, block_iterations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+    use crate::fcm::seeding::random_records;
+    use crate::fcm::{max_center_shift2, NativeBackend};
+    use crate::prng::Pcg;
+
+    fn params() -> FcmParams {
+        FcmParams { epsilon: 1e-10, ..Default::default() }
+    }
+
+    #[test]
+    fn matches_full_fcm_on_blobs() {
+        let data = blobs(900, 3, 3, 0.2, 1);
+        let mut rng = Pcg::new(2);
+        let v0 = random_records(&data.features, 3, &mut rng);
+        let w = vec![1.0f32; 900];
+        let full = run_fcm(&NativeBackend, &data.features, &w, v0.clone(), &params()).unwrap();
+        let blocked = wfcmpb(&NativeBackend, &data.features, v0, 300, &params()).unwrap();
+        assert_eq!(blocked.blocks, 3);
+        // Same blob structure → same centers up to matching/tolerance.
+        // Compare via nearest-center distance both ways.
+        let a = &full.centers;
+        let b = &blocked.result.centers;
+        for i in 0..3 {
+            let best = (0..3)
+                .map(|j| {
+                    crate::data::matrix::dist2(a.row(i), b.row(j))
+                })
+                .fold(f64::INFINITY, f64::min);
+            assert!(best < 0.05, "center {i} off by {best}");
+        }
+    }
+
+    #[test]
+    fn single_block_equals_plain_fcm_plus_merge() {
+        let data = blobs(200, 2, 2, 0.3, 3);
+        let mut rng = Pcg::new(4);
+        let v0 = random_records(&data.features, 2, &mut rng);
+        let r = wfcmpb(&NativeBackend, &data.features, v0, 500, &params()).unwrap();
+        assert_eq!(r.blocks, 1);
+        assert!(r.result.converged);
+    }
+
+    #[test]
+    fn tail_smaller_than_c_is_not_dropped() {
+        // 10 records, block 7 → tail of 3 with c=2 is clustered; tail of 1
+        // with c=2 goes to the pool directly.
+        let data = blobs(15, 2, 2, 0.3, 5);
+        let mut rng = Pcg::new(6);
+        let v0 = random_records(&data.features, 2, &mut rng);
+        let r = wfcmpb(&NativeBackend, &data.features, v0, 7, &params()).unwrap();
+        assert!(r.blocks >= 2);
+        assert!(r.result.centers.rows() == 2);
+    }
+
+    #[test]
+    fn warm_start_reduces_block_iterations() {
+        // Later blocks should typically converge in fewer iterations than
+        // the first (they inherit fitted centers) on iid data.
+        let data = blobs(3000, 4, 3, 0.25, 7);
+        let mut rng = Pcg::new(8);
+        let v0 = random_records(&data.features, 3, &mut rng);
+        let r = wfcmpb(&NativeBackend, &data.features, v0, 600, &params()).unwrap();
+        let first = r.block_iterations[0];
+        let later: f64 = r.block_iterations[1..]
+            .iter()
+            .map(|&x| x as f64)
+            .sum::<f64>()
+            / (r.block_iterations.len() - 1) as f64;
+        assert!(
+            later <= first as f64,
+            "warm start didn't help: first={first}, later mean={later}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let data = blobs(400, 3, 2, 0.3, 9);
+        let mut rng = Pcg::new(10);
+        let v0 = random_records(&data.features, 2, &mut rng);
+        let a = wfcmpb(&NativeBackend, &data.features, v0.clone(), 100, &params()).unwrap();
+        let b = wfcmpb(&NativeBackend, &data.features, v0, 100, &params()).unwrap();
+        assert_eq!(max_center_shift2(&a.result.centers, &b.result.centers), 0.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Binary block file codec (`.bfb` — "bigfcm block").
+//!
+//! Layout: magic `BFCMBLK1` (8 bytes), rows u32 LE, cols u32 LE, then
+//! rows·cols f32 LE. Checksummed with a trailing FNV-1a u64 of the payload
+//! so corrupt blocks fail loudly (HDFS does the same with CRCs).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"BFCMBLK1";
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Serialised size in bytes of a block holding `m`.
+pub fn encoded_size(m: &Matrix) -> u64 {
+    (8 + 4 + 4 + m.rows() * m.cols() * 4 + 8) as u64
+}
+
+/// Write a block file; returns bytes written.
+pub fn write_block_file(path: &Path, m: &Matrix) -> Result<u64> {
+    let mut payload = Vec::with_capacity(m.rows() * m.cols() * 4 + 8);
+    payload.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+    payload.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+    for &v in m.as_slice() {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    let checksum = fnv1a(&payload);
+    let mut f = std::fs::File::create(path).map_err(|e| Error::io(path, e))?;
+    f.write_all(MAGIC).map_err(|e| Error::io(path, e))?;
+    f.write_all(&payload).map_err(|e| Error::io(path, e))?;
+    f.write_all(&checksum.to_le_bytes())
+        .map_err(|e| Error::io(path, e))?;
+    Ok(encoded_size(m))
+}
+
+/// Read and verify a block file.
+pub fn read_block_file(path: &Path) -> Result<Matrix> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| Error::io(path, e))?
+        .read_to_end(&mut bytes)
+        .map_err(|e| Error::io(path, e))?;
+    if bytes.len() < 8 + 8 + 8 || &bytes[..8] != MAGIC {
+        return Err(Error::BlockStore(format!("{}: bad magic/short file", path.display())));
+    }
+    let payload = &bytes[8..bytes.len() - 8];
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    if fnv1a(payload) != stored {
+        return Err(Error::BlockStore(format!("{}: checksum mismatch", path.display())));
+    }
+    let rows = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    let cols = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
+    let expect = rows * cols * 4;
+    let data = &payload[8..];
+    if data.len() != expect {
+        return Err(Error::BlockStore(format!(
+            "{}: payload {} != expected {expect}",
+            path.display(),
+            data.len()
+        )));
+    }
+    let mut values = Vec::with_capacity(rows * cols);
+    for chunk in data.chunks_exact(4) {
+        values.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(Matrix::from_vec(values, rows, cols))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bigfcm_codec_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = Matrix::from_rows(&[vec![1.5, -2.0], vec![0.0, 3.25]]);
+        let p = tmp("rt.bfb");
+        let bytes = write_block_file(&p, &m).unwrap();
+        assert_eq!(bytes, encoded_size(&m));
+        let back = read_block_file(&p).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0]]);
+        let p = tmp("bad.bfb");
+        write_block_file(&p, &m).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_block_file(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let p = tmp("magic.bfb");
+        std::fs::write(&p, b"NOTABLOCKFILE_____________").unwrap();
+        assert!(read_block_file(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

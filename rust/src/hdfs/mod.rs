@@ -1,0 +1,266 @@
+//! HDFS-like block store substrate.
+//!
+//! The paper's pipeline reads record blocks out of HDFS, one map task per
+//! block. This module provides that substrate on a single machine: a
+//! dataset is split into fixed-record-count blocks, each block stored
+//! either on disk (binary f32 format + manifest, exercising real I/O) or in
+//! memory (for benches isolating compute). The namenode-equivalent is the
+//! [`BlockStore`] manifest; locality hints assign each block a preferred
+//! worker the scheduler honours.
+
+mod codec;
+
+pub use codec::{read_block_file, write_block_file};
+
+use std::path::PathBuf;
+
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+
+/// Metadata of one stored block.
+#[derive(Clone, Debug)]
+pub struct BlockMeta {
+    pub id: usize,
+    pub rows: usize,
+    /// Preferred worker (locality hint).
+    pub preferred_worker: usize,
+    /// Byte size of the serialised block (drives modelled HDFS I/O cost).
+    pub bytes: u64,
+}
+
+enum Storage {
+    Memory(Vec<Matrix>),
+    Disk { dir: PathBuf },
+}
+
+/// A sharded, immutable dataset: the namenode view plus block access.
+pub struct BlockStore {
+    name: String,
+    cols: usize,
+    total_rows: usize,
+    blocks: Vec<BlockMeta>,
+    storage: Storage,
+}
+
+impl BlockStore {
+    /// Shard `features` into in-memory blocks of `block_records` rows.
+    pub fn in_memory(
+        name: impl Into<String>,
+        features: &Matrix,
+        block_records: usize,
+        workers: usize,
+    ) -> Result<Self> {
+        let (metas, mats) = shard(features, block_records, workers)?;
+        Ok(Self {
+            name: name.into(),
+            cols: features.cols(),
+            total_rows: features.rows(),
+            blocks: metas,
+            storage: Storage::Memory(mats),
+        })
+    }
+
+    /// Shard `features` into binary block files under `dir` (created).
+    pub fn on_disk(
+        name: impl Into<String>,
+        features: &Matrix,
+        block_records: usize,
+        workers: usize,
+        dir: PathBuf,
+    ) -> Result<Self> {
+        std::fs::create_dir_all(&dir).map_err(|e| Error::io(&dir, e))?;
+        let (mut metas, mats) = shard(features, block_records, workers)?;
+        for (meta, mat) in metas.iter_mut().zip(&mats) {
+            let path = dir.join(format!("block_{:06}.bfb", meta.id));
+            let bytes = write_block_file(&path, mat)?;
+            meta.bytes = bytes;
+        }
+        Ok(Self {
+            name: name.into(),
+            cols: features.cols(),
+            total_rows: features.rows(),
+            blocks: metas,
+            storage: Storage::Disk { dir },
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.total_rows
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn blocks(&self) -> &[BlockMeta] {
+        &self.blocks
+    }
+
+    /// Total serialised bytes (drives the modelled scan cost).
+    pub fn total_bytes(&self) -> u64 {
+        self.blocks.iter().map(|b| b.bytes).sum()
+    }
+
+    /// Fetch a block's records.
+    pub fn read_block(&self, id: usize) -> Result<Matrix> {
+        if id >= self.blocks.len() {
+            return Err(Error::BlockStore(format!("block {id} out of range")));
+        }
+        match &self.storage {
+            Storage::Memory(mats) => Ok(mats[id].clone()),
+            Storage::Disk { dir } => {
+                let path = dir.join(format!("block_{id:06}.bfb"));
+                read_block_file(&path)
+            }
+        }
+    }
+
+    /// Uniformly sample `k` records across blocks (used by the driver job;
+    /// reservoir-equivalent because block sizes are known).
+    pub fn sample_records(&self, k: usize, rng: &mut crate::prng::Pcg) -> Result<Matrix> {
+        let k = k.min(self.total_rows);
+        let idx = rng.sample_indices(self.total_rows, k);
+        let mut sorted = idx;
+        sorted.sort_unstable();
+        let mut out = Matrix::zeros(k, self.cols);
+        let mut cursor = 0usize; // global row offset of current block
+        let mut bi = 0usize;
+        let mut current: Option<Matrix> = None;
+        for (slot, &global) in sorted.iter().enumerate() {
+            // Advance to the block containing `global`.
+            while global >= cursor + self.blocks[bi].rows {
+                cursor += self.blocks[bi].rows;
+                bi += 1;
+                current = None;
+            }
+            if current.is_none() {
+                current = Some(self.read_block(bi)?);
+            }
+            let local = global - cursor;
+            out.row_mut(slot)
+                .copy_from_slice(current.as_ref().unwrap().row(local));
+        }
+        Ok(out)
+    }
+}
+
+fn shard(
+    features: &Matrix,
+    block_records: usize,
+    workers: usize,
+) -> Result<(Vec<BlockMeta>, Vec<Matrix>)> {
+    if features.rows() == 0 {
+        return Err(Error::BlockStore("cannot shard an empty dataset".into()));
+    }
+    if block_records == 0 {
+        return Err(Error::BlockStore("block_records must be positive".into()));
+    }
+    let workers = workers.max(1);
+    let mut metas = Vec::new();
+    let mut mats = Vec::new();
+    let mut start = 0usize;
+    let mut id = 0usize;
+    while start < features.rows() {
+        let end = (start + block_records).min(features.rows());
+        let mat = features.slice_rows(start, end);
+        metas.push(BlockMeta {
+            id,
+            rows: mat.rows(),
+            preferred_worker: id % workers,
+            // In-memory blocks model the same bytes as the binary codec.
+            bytes: codec::encoded_size(&mat),
+        });
+        mats.push(mat);
+        start = end;
+        id += 1;
+    }
+    Ok((metas, mats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+    use crate::prng::Pcg;
+
+    #[test]
+    fn shards_cover_all_rows() {
+        let d = blobs(1000, 4, 2, 0.3, 1);
+        let s = BlockStore::in_memory("t", &d.features, 300, 4).unwrap();
+        assert_eq!(s.num_blocks(), 4);
+        assert_eq!(s.blocks()[3].rows, 100);
+        let total: usize = s.blocks().iter().map(|b| b.rows).sum();
+        assert_eq!(total, 1000);
+        // Round-trip a row.
+        let b2 = s.read_block(2).unwrap();
+        assert_eq!(b2.row(0), d.features.row(600));
+    }
+
+    #[test]
+    fn disk_roundtrip() {
+        let d = blobs(500, 3, 2, 0.3, 2);
+        let dir = std::env::temp_dir().join(format!("bigfcm_bs_{}", std::process::id()));
+        let s = BlockStore::on_disk("t", &d.features, 128, 2, dir.clone()).unwrap();
+        assert_eq!(s.num_blocks(), 4);
+        for b in 0..4 {
+            let m = s.read_block(b).unwrap();
+            assert_eq!(m.cols(), 3);
+            assert_eq!(m.row(0), d.features.row(b * 128));
+        }
+        assert!(s.total_bytes() > 500 * 3 * 4);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn locality_hints_round_robin() {
+        let d = blobs(600, 2, 2, 0.3, 3);
+        let s = BlockStore::in_memory("t", &d.features, 100, 3).unwrap();
+        let hints: Vec<usize> = s.blocks().iter().map(|b| b.preferred_worker).collect();
+        assert_eq!(hints, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn sampling_returns_real_records() {
+        let d = blobs(400, 3, 2, 0.3, 4);
+        let s = BlockStore::in_memory("t", &d.features, 64, 2).unwrap();
+        let mut rng = Pcg::new(5);
+        let sample = s.sample_records(50, &mut rng).unwrap();
+        assert_eq!(sample.rows(), 50);
+        for i in 0..50 {
+            let found = (0..400).any(|j| d.features.row(j) == sample.row(i));
+            assert!(found, "sampled row {i} is not a dataset record");
+        }
+    }
+
+    #[test]
+    fn sample_more_than_population_clamps() {
+        let d = blobs(20, 2, 2, 0.3, 5);
+        let s = BlockStore::in_memory("t", &d.features, 7, 2).unwrap();
+        let mut rng = Pcg::new(6);
+        let sample = s.sample_records(100, &mut rng).unwrap();
+        assert_eq!(sample.rows(), 20);
+    }
+
+    #[test]
+    fn rejects_empty_and_zero_block() {
+        let empty = Matrix::zeros(0, 3);
+        assert!(BlockStore::in_memory("t", &empty, 10, 1).is_err());
+        let d = blobs(10, 2, 2, 0.3, 7);
+        assert!(BlockStore::in_memory("t", &d.features, 0, 1).is_err());
+    }
+
+    #[test]
+    fn out_of_range_block_errors() {
+        let d = blobs(10, 2, 2, 0.3, 8);
+        let s = BlockStore::in_memory("t", &d.features, 5, 1).unwrap();
+        assert!(s.read_block(2).is_err());
+    }
+}

@@ -1,0 +1,53 @@
+//! # BigFCM — fast, precise and scalable Fuzzy C-Means on a MapReduce substrate
+//!
+//! A from-scratch reproduction of *BigFCM: Fast, Precise and Scalable FCM on
+//! Hadoop* (Ghadiri, Ghaffari, Nikbakht, 2016) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: the BigFCM
+//!   driver/mapper/combiner/reducer pipeline ([`coordinator`]) running on a
+//!   mini-Hadoop substrate ([`mapreduce`], [`hdfs`]) with Mahout-style
+//!   iterative-MR baselines ([`baselines`]).
+//! * **Layer 2/1 (build-time python)** — per-chunk FCM/K-Means compute graphs
+//!   (JAX) wrapping Pallas kernels, AOT-lowered to HLO text artifacts that
+//!   the [`runtime`] module loads and executes via PJRT. Python never runs on
+//!   the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use bigfcm::config::Config;
+//! use bigfcm::coordinator::BigFcm;
+//! use bigfcm::data::builtin::iris;
+//!
+//! let cfg = Config::default();
+//! let dataset = iris();
+//! let result = BigFcm::new(cfg)
+//!     .clusters(3)
+//!     .fuzzifier(2.0)
+//!     .run_in_memory(&dataset.features)
+//!     .unwrap();
+//! println!("centers: {:?}", result.centers);
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `rust/benches/` for the
+//! regeneration harness of every table and figure in the paper.
+
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod fcm;
+pub mod hdfs;
+pub mod json;
+pub mod mapreduce;
+pub mod metrics;
+pub mod prng;
+pub mod runtime;
+pub mod sampling;
+pub mod telemetry;
+pub mod threadpool;
+
+pub use error::{Error, Result};

@@ -1,0 +1,279 @@
+//! The `bigfcm` launcher.
+//!
+//! ```text
+//! bigfcm run    --dataset susy --records 100000 --clusters 6 [--epsilon 5e-11]
+//! bigfcm bench  --exp table4 [--full] [--backend native|pjrt|auto]
+//! bigfcm gen    --dataset higgs --records 1000000 --out higgs.csv
+//! bigfcm info   [--artifacts artifacts]
+//! ```
+//!
+//! Every flag can also be set via `--config file.toml` and repeated
+//! `--set section.key=value` overrides (see `rust/src/config`).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context};
+
+use bigfcm::baselines::{run_baseline, BaselineAlgo};
+use bigfcm::bench::tables::{run_by_id, Ctx};
+use bigfcm::bench::Scale;
+use bigfcm::config::Config;
+use bigfcm::coordinator::BigFcm;
+use bigfcm::data::{builtin, csv};
+use bigfcm::fcm::{assign_hard, ChunkBackend};
+use bigfcm::hdfs::BlockStore;
+use bigfcm::mapreduce::{Engine, EngineOptions};
+use bigfcm::metrics::confusion_accuracy;
+use bigfcm::runtime::ResolvedBackend;
+use bigfcm::telemetry::human_duration;
+
+/// Minimal flag parser: `--key value` pairs + positional subcommand.
+struct Args {
+    sub: String,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse() -> anyhow::Result<Args> {
+        let mut it = std::env::args().skip(1).peekable();
+        let sub = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = Vec::new();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // boolean flags take no value when followed by another flag/end
+                let value = match it.peek() {
+                    Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                flags.push((key.to_string(), value));
+            } else {
+                bail!("unexpected positional argument `{a}`");
+            }
+        }
+        Ok(Args { sub, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path))
+            .with_context(|| format!("loading config {path}"))?,
+        None => Config::default(),
+    };
+    for (k, v) in &args.flags {
+        if k == "set" {
+            cfg.set_kv(v).with_context(|| format!("applying --set {v}"))?;
+        }
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.set(&format!("runtime.backend"), b)?;
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.set("paths.artifacts_dir", a)?;
+    }
+    if let Some(s) = args.get("seed") {
+        cfg.set("seed", s)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn backend_of(cfg: &Config) -> anyhow::Result<Arc<dyn ChunkBackend>> {
+    Ok(Arc::new(ResolvedBackend::from_config(cfg)?))
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let name = args.get_or("dataset", "susy");
+    let n: usize = args.get_or("records", "50000").parse()?;
+    let c: usize = args.get_or("clusters", "2").parse()?;
+    let m: f64 = args.get_or("fuzzifier", "2.0").parse()?;
+    let eps: f64 = args.get_or("epsilon", &cfg.fcm.epsilon.to_string()).parse()?;
+    let dataset = builtin::by_name(&name, n, cfg.seed)
+        .with_context(|| format!("unknown dataset `{name}`"))?;
+    let backend = backend_of(&cfg)?;
+    println!(
+        "dataset={} records={} dims={} C={c} m={m} eps={eps:.0e} backend={}",
+        dataset.name,
+        dataset.rows(),
+        dataset.dims(),
+        backend.name()
+    );
+
+    let store = BlockStore::in_memory(
+        dataset.name.clone(),
+        &dataset.features,
+        cfg.cluster.block_records,
+        cfg.cluster.workers,
+    )?;
+    let run = BigFcm::new(cfg.clone())
+        .backend(Arc::clone(&backend))
+        .clusters(c)
+        .fuzzifier(m)
+        .epsilon(eps)
+        .run_store(&store)?;
+
+    println!(
+        "driver: ran={} sample={} T_fcm={:?} T_wfcmpb={:?} flag={}",
+        run.driver.ran,
+        run.driver.sample_size,
+        run.driver.t_fcm,
+        run.driver.t_wfcmpb,
+        if run.driver.flag_fcm { "FCM" } else { "WFCMPB" }
+    );
+    println!(
+        "job: {} map tasks, {} attempts, shuffle {} B",
+        run.job.map_tasks, run.job.attempts, run.job.shuffle_bytes
+    );
+    println!(
+        "wall={} modelled={} (startup {:.1}s + launch {:.1}s + io {:.1}s + shuffle {:.1}s + compute {:.1}s)",
+        human_duration(run.wall),
+        human_duration(std::time::Duration::from_secs_f64(run.modelled_s())),
+        run.sim.job_startup_s,
+        run.sim.task_launch_s,
+        run.sim.hdfs_io_s,
+        run.sim.shuffle_s,
+        run.sim.compute_s,
+    );
+    for i in 0..run.centers.rows() {
+        let row: Vec<String> = run.centers.row(i).iter().take(8).map(|v| format!("{v:.3}")).collect();
+        println!("center[{i}] w={:.1} [{}{}]", run.weights[i], row.join(", "),
+            if run.centers.cols() > 8 { ", ..." } else { "" });
+    }
+    if let Some(labels) = &dataset.labels {
+        let acc = confusion_accuracy(&assign_hard(&dataset.features, &run.centers), labels, c);
+        println!("confusion accuracy: {:.1}%", acc * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let name = args.get_or("dataset", "susy");
+    let n: usize = args.get_or("records", "50000").parse()?;
+    let algo = match args.get_or("algo", "fkm").as_str() {
+        "km" | "kmeans" => BaselineAlgo::KMeans,
+        "fkm" | "fuzzy" => BaselineAlgo::FuzzyKMeans,
+        other => bail!("unknown baseline `{other}`"),
+    };
+    let mut cfg = cfg;
+    cfg.fcm.clusters = args.get_or("clusters", "2").parse()?;
+    cfg.fcm.fuzzifier = args.get_or("fuzzifier", "2.0").parse()?;
+    cfg.fcm.epsilon = args.get_or("epsilon", &cfg.fcm.epsilon.to_string()).parse()?;
+    cfg.fcm.max_iterations = args.get_or("max-iterations", "100").parse()?;
+    let dataset =
+        builtin::by_name(&name, n, cfg.seed).with_context(|| format!("unknown dataset `{name}`"))?;
+    let backend = backend_of(&cfg)?;
+    let store = BlockStore::in_memory(
+        dataset.name.clone(),
+        &dataset.features,
+        cfg.cluster.block_records,
+        cfg.cluster.workers,
+    )?;
+    let mut engine = Engine::new(
+        EngineOptions { workers: cfg.cluster.workers, ..Default::default() },
+        cfg.overhead.clone(),
+    );
+    let run = run_baseline(algo, &cfg, &store, backend, &mut engine)?;
+    println!(
+        "{}: {} iterations ({} MR jobs), converged={}, wall={}, modelled={}",
+        algo.as_str(),
+        run.iterations,
+        run.jobs,
+        run.converged,
+        human_duration(run.wall),
+        human_duration(std::time::Duration::from_secs_f64(run.modelled_s())),
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let exp = args.get_or("exp", "all");
+    let scale = if args.has("full") { Scale::full() } else { Scale::quick() };
+    let backend = backend_of(&cfg)?;
+    let ctx = Ctx::new(cfg, scale, backend);
+    for table in run_by_id(&exp, &ctx)? {
+        println!("{table}");
+    }
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let name = args.get_or("dataset", "susy");
+    let n: usize = args.get_or("records", "100000").parse()?;
+    let out = args.get_or("out", &format!("{name}.csv"));
+    let dataset =
+        builtin::by_name(&name, n, cfg.seed).with_context(|| format!("unknown dataset `{name}`"))?;
+    let f = std::fs::File::create(&out)?;
+    csv::write_csv(&dataset, std::io::BufWriter::new(f))?;
+    println!("wrote {} records x {} features to {out}", dataset.rows(), dataset.dims());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    println!("bigfcm {} — BigFCM on a MapReduce substrate", env!("CARGO_PKG_VERSION"));
+    println!("config: workers={} chunk={} block_records={}",
+        cfg.cluster.workers, cfg.cluster.chunk, cfg.cluster.block_records);
+    match bigfcm::runtime::PjrtRuntime::open(&cfg.artifacts_dir) {
+        Ok(rt) => {
+            println!(
+                "artifacts: {} entries (chunk={}, row_block={}) at {}",
+                rt.manifest().artifacts.len(),
+                rt.manifest().chunk,
+                rt.manifest().row_block,
+                cfg.artifacts_dir.display()
+            );
+            for a in &rt.manifest().artifacts {
+                println!("  {} ({}, d={}, C={})", a.name, a.graph.as_str(), a.dims, a.clusters);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse()?;
+    match args.sub.as_str() {
+        "run" => cmd_run(&args),
+        "baseline" => cmd_baseline(&args),
+        "bench" => cmd_bench(&args),
+        "gen" => cmd_gen(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!(
+                "usage: bigfcm <run|baseline|bench|gen|info> [--flags]\n\
+                 \n\
+                 run       run BigFCM on a dataset (--dataset --records --clusters --epsilon)\n\
+                 baseline  run a Mahout-style baseline (--algo km|fkm ...)\n\
+                 bench     regenerate paper tables (--exp table2..table8|ablations|all [--full])\n\
+                 gen       write a synthetic dataset to CSV (--dataset --records --out)\n\
+                 info      show config + artifact registry\n\
+                 \n\
+                 common:   --config file.toml --set sec.key=val --backend native|pjrt|auto\n\
+                 \u{20}         --artifacts DIR --seed N"
+            );
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `bigfcm help`)"),
+    }
+}

@@ -1,0 +1,143 @@
+//! Distributed cache file — Hadoop's mechanism for shipping small read-only
+//! data (the paper stores V_init / V_winit and the `Flag` there) to every
+//! task. Modelled as a concurrent typed KV store; writes happen in the
+//! driver before job submission, tasks only read.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use crate::data::Matrix;
+
+/// A cached value.
+#[derive(Clone, Debug)]
+pub enum CacheValue {
+    Matrix(Matrix),
+    Scalar(f64),
+    Flag(bool),
+    Text(String),
+}
+
+/// The cache itself. Cheap to share via `&` across tasks.
+#[derive(Default)]
+pub struct DistributedCache {
+    entries: RwLock<HashMap<String, CacheValue>>,
+}
+
+impl DistributedCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&self, key: &str, value: CacheValue) {
+        self.entries
+            .write()
+            .expect("cache poisoned")
+            .insert(key.to_string(), value);
+    }
+
+    pub fn put_matrix(&self, key: &str, m: Matrix) {
+        self.put(key, CacheValue::Matrix(m));
+    }
+
+    pub fn put_flag(&self, key: &str, b: bool) {
+        self.put(key, CacheValue::Flag(b));
+    }
+
+    pub fn put_scalar(&self, key: &str, v: f64) {
+        self.put(key, CacheValue::Scalar(v));
+    }
+
+    pub fn get_matrix(&self, key: &str) -> Option<Matrix> {
+        match self.entries.read().expect("cache poisoned").get(key) {
+            Some(CacheValue::Matrix(m)) => Some(m.clone()),
+            _ => None,
+        }
+    }
+
+    pub fn get_flag(&self, key: &str) -> Option<bool> {
+        match self.entries.read().expect("cache poisoned").get(key) {
+            Some(CacheValue::Flag(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn get_scalar(&self, key: &str) -> Option<f64> {
+        match self.entries.read().expect("cache poisoned").get(key) {
+            Some(CacheValue::Scalar(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.read().expect("cache poisoned").contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.read().expect("cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serialised footprint (models the per-task cache download cost).
+    pub fn bytes(&self) -> u64 {
+        self.entries
+            .read()
+            .expect("cache poisoned")
+            .values()
+            .map(|v| match v {
+                CacheValue::Matrix(m) => (m.rows() * m.cols() * 4) as u64,
+                CacheValue::Scalar(_) => 8,
+                CacheValue::Flag(_) => 1,
+                CacheValue::Text(s) => s.len() as u64,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_roundtrips() {
+        let c = DistributedCache::new();
+        c.put_matrix("v_init", Matrix::from_rows(&[vec![1.0, 2.0]]));
+        c.put_flag("flag", true);
+        c.put_scalar("m", 2.0);
+        assert_eq!(c.get_matrix("v_init").unwrap().row(0), &[1.0, 2.0]);
+        assert_eq!(c.get_flag("flag"), Some(true));
+        assert_eq!(c.get_scalar("m"), Some(2.0));
+        assert_eq!(c.len(), 3);
+        assert!(c.bytes() >= 8 + 8 + 1);
+    }
+
+    #[test]
+    fn wrong_type_returns_none() {
+        let c = DistributedCache::new();
+        c.put_flag("x", false);
+        assert!(c.get_matrix("x").is_none());
+        assert!(c.get_scalar("x").is_none());
+        assert!(c.get_flag("missing").is_none());
+    }
+
+    #[test]
+    fn concurrent_reads() {
+        let c = std::sync::Arc::new(DistributedCache::new());
+        c.put_scalar("k", 7.0);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = std::sync::Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        assert_eq!(c.get_scalar("k"), Some(7.0));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,336 @@
+//! The job engine: schedules map tasks over the worker pool, re-executes
+//! failed attempts, runs the reduce, and charges the SimClock.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::OverheadConfig;
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+use crate::hdfs::BlockStore;
+use crate::mapreduce::simclock::{SimClock, SimCost, TaskSample};
+use crate::mapreduce::{DistributedCache, MapReduceJob, TaskCtx};
+use crate::prng::Pcg;
+use crate::threadpool::ThreadPool;
+
+/// Hadoop's default max attempts per task.
+const MAX_ATTEMPTS: usize = 4;
+
+/// Engine knobs.
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    /// Worker (map-slot) count.
+    pub workers: usize,
+    /// Injected per-attempt failure probability (fault-tolerance tests).
+    pub fault_rate: f64,
+    /// Seed for fault injection.
+    pub fault_seed: u64,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self { workers: 4, fault_rate: 0.0, fault_seed: 0 }
+    }
+}
+
+/// Statistics of one executed job.
+#[derive(Clone, Debug)]
+pub struct JobStats {
+    pub name: String,
+    /// Real elapsed time of the whole job on this machine.
+    pub wall: Duration,
+    /// Modelled cluster cost of this job.
+    pub sim: SimCost,
+    pub map_tasks: usize,
+    /// Total attempts (> map_tasks when faults were injected).
+    pub attempts: usize,
+    pub shuffle_bytes: u64,
+}
+
+/// The MapReduce engine. One engine per pipeline run; owns the worker pool
+/// and the SimClock.
+pub struct Engine {
+    pool: ThreadPool,
+    options: EngineOptions,
+    overhead: OverheadConfig,
+    clock: SimClock,
+}
+
+impl Engine {
+    pub fn new(options: EngineOptions, overhead: OverheadConfig) -> Self {
+        Self {
+            pool: ThreadPool::new(options.workers),
+            options,
+            overhead,
+            clock: SimClock::new(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.options.workers
+    }
+
+    pub fn clock(&self) -> &SimClock {
+        &self.clock
+    }
+
+    pub fn overhead(&self) -> &OverheadConfig {
+        &self.overhead
+    }
+
+    /// Charge driver-side local compute to the modelled clock.
+    pub fn charge_local(&mut self, wall: Duration) {
+        self.clock.charge_local(&self.overhead, wall);
+    }
+
+    /// Charge a driver-side HDFS scan.
+    pub fn charge_scan(&mut self, bytes: u64) {
+        self.clock.charge_scan(&self.overhead, bytes);
+    }
+
+    /// Execute one MapReduce job over every block of `store`.
+    pub fn run_job<J: MapReduceJob + 'static>(
+        &mut self,
+        job: Arc<J>,
+        store: &BlockStore,
+        cache: Arc<DistributedCache>,
+    ) -> Result<(J::Output, JobStats)> {
+        let started = Instant::now();
+        let n_blocks = store.num_blocks();
+        if n_blocks == 0 {
+            return Err(Error::Job("no input blocks".into()));
+        }
+
+        // Pre-draw fault schedules so parallel execution stays deterministic:
+        // fail_counts[t] = how many attempts of task t fail before success.
+        let mut fault_rng = Pcg::new(self.options.fault_seed);
+        let fail_counts: Vec<usize> = (0..n_blocks)
+            .map(|_| {
+                let mut fails = 0;
+                while fails < MAX_ATTEMPTS - 1 && fault_rng.next_f64() < self.options.fault_rate {
+                    fails += 1;
+                }
+                fails
+            })
+            .collect();
+
+        // Map phase: read + map_combine per block on the pool.
+        struct TaskResult<M> {
+            out: M,
+            sample: TaskSample,
+        }
+        let blocks: Vec<(usize, Matrix, u64, usize)> = (0..n_blocks)
+            .map(|id| {
+                let meta_bytes = store.blocks()[id].bytes;
+                store
+                    .read_block(id)
+                    .map(|m| (id, m, meta_bytes, fail_counts[id]))
+            })
+            .collect::<Result<_>>()?;
+
+        let job_for_map = Arc::clone(&job);
+        let cache_for_map = Arc::clone(&cache);
+        let results = self.pool.map_parallel(blocks, move |(id, block, bytes, fails)| {
+            let mut attempt = 0usize;
+            loop {
+                let ctx = TaskCtx { cache: &cache_for_map, task_id: id, attempt };
+                let t0 = Instant::now();
+                let out = job_for_map.map_combine(&block, &ctx);
+                let compute_wall_s = t0.elapsed().as_secs_f64();
+                // Injected fault: discard this attempt's output and retry
+                // (idempotence is the combiner contract).
+                if attempt < fails {
+                    attempt += 1;
+                    continue;
+                }
+                return out.map(|o| TaskResult {
+                    out: o,
+                    sample: TaskSample {
+                        compute_wall_s,
+                        input_bytes: bytes,
+                        attempts: attempt + 1,
+                    },
+                });
+            }
+        });
+
+        let mut outs = Vec::with_capacity(n_blocks);
+        let mut samples = Vec::with_capacity(n_blocks);
+        let mut attempts_total = 0usize;
+        for r in results {
+            let task = r
+                .map_err(|panic| Error::Job(format!("map task panicked: {panic}")))?
+                .map_err(|e| Error::Job(format!("map task failed: {e}")))?;
+            attempts_total += task.sample.attempts;
+            samples.push(task.sample);
+            outs.push(task.out);
+        }
+
+        let shuffle_bytes: u64 = outs.iter().map(|o| job.shuffle_bytes(o)).sum();
+
+        // Reduce phase (single reducer, as the paper's default).
+        let reduce_ctx = TaskCtx { cache: &cache, task_id: usize::MAX, attempt: 0 };
+        let t0 = Instant::now();
+        let output = job.reduce(outs, &reduce_ctx)?;
+        let reduce_wall_s = t0.elapsed().as_secs_f64();
+
+        let sim = self.clock.charge_job(
+            &self.overhead,
+            self.options.workers,
+            &samples,
+            shuffle_bytes,
+            reduce_wall_s,
+        );
+
+        let stats = JobStats {
+            name: job.name().to_string(),
+            wall: started.elapsed(),
+            sim,
+            map_tasks: n_blocks,
+            attempts: attempts_total,
+            shuffle_bytes,
+        };
+        Ok((output, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+
+    /// Toy job: per-block weighted row sums, reduce = grand total.
+    struct SumJob;
+
+    impl MapReduceJob for SumJob {
+        type MapOut = (f64, usize);
+        type Output = (f64, usize);
+
+        fn map_combine(&self, block: &Matrix, _ctx: &TaskCtx) -> Result<Self::MapOut> {
+            let s: f64 = block.as_slice().iter().map(|&v| v as f64).sum();
+            Ok((s, block.rows()))
+        }
+
+        fn reduce(&self, parts: Vec<Self::MapOut>, _ctx: &TaskCtx) -> Result<Self::Output> {
+            Ok(parts
+                .into_iter()
+                .fold((0.0, 0), |acc, p| (acc.0 + p.0, acc.1 + p.1)))
+        }
+
+        fn shuffle_bytes(&self, _part: &Self::MapOut) -> u64 {
+            16
+        }
+
+        fn name(&self) -> &str {
+            "sum"
+        }
+    }
+
+    fn store() -> BlockStore {
+        let d = blobs(1000, 3, 2, 0.5, 1);
+        BlockStore::in_memory("t", &d.features, 128, 4).unwrap()
+    }
+
+    #[test]
+    fn job_computes_correct_global_result() {
+        let s = store();
+        let expected: f64 = {
+            let mut acc = 0.0;
+            for b in 0..s.num_blocks() {
+                acc += s
+                    .read_block(b)
+                    .unwrap()
+                    .as_slice()
+                    .iter()
+                    .map(|&v| v as f64)
+                    .sum::<f64>();
+            }
+            acc
+        };
+        let mut e = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let ((total, rows), stats) = e
+            .run_job(Arc::new(SumJob), &s, Arc::new(DistributedCache::new()))
+            .unwrap();
+        assert_eq!(rows, 1000);
+        assert!((total - expected).abs() < 1e-6);
+        assert_eq!(stats.map_tasks, 8);
+        assert_eq!(stats.attempts, 8);
+        assert_eq!(stats.shuffle_bytes, 8 * 16);
+        assert!(stats.sim.total_s() > 0.0);
+    }
+
+    #[test]
+    fn fault_injection_retries_and_still_correct() {
+        let s = store();
+        let opts = EngineOptions { workers: 4, fault_rate: 0.4, fault_seed: 9 };
+        let mut e = Engine::new(opts, OverheadConfig::default());
+        let ((_, rows), stats) = e
+            .run_job(Arc::new(SumJob), &s, Arc::new(DistributedCache::new()))
+            .unwrap();
+        assert_eq!(rows, 1000);
+        assert!(stats.attempts > stats.map_tasks, "expected retries");
+    }
+
+    #[test]
+    fn sim_clock_accumulates_per_job() {
+        let s = store();
+        let mut e = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        for _ in 0..3 {
+            e.run_job(Arc::new(SumJob), &s, Arc::new(DistributedCache::new()))
+                .unwrap();
+        }
+        assert_eq!(e.clock().jobs(), 3);
+        // 3 job startups at least.
+        assert!(e.clock().total_s() >= 3.0 * e.overhead().job_startup_s);
+    }
+
+    #[test]
+    fn cache_visible_to_tasks() {
+        struct CacheEcho;
+        impl MapReduceJob for CacheEcho {
+            type MapOut = f64;
+            type Output = f64;
+            fn map_combine(&self, _b: &Matrix, ctx: &TaskCtx) -> Result<f64> {
+                Ok(ctx.cache.get_scalar("x").unwrap_or(-1.0))
+            }
+            fn reduce(&self, parts: Vec<f64>, _ctx: &TaskCtx) -> Result<f64> {
+                Ok(parts.into_iter().sum())
+            }
+            fn shuffle_bytes(&self, _p: &f64) -> u64 {
+                8
+            }
+        }
+        let s = store();
+        let cache = Arc::new(DistributedCache::new());
+        cache.put_scalar("x", 2.5);
+        let mut e = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let (total, _) = e.run_job(Arc::new(CacheEcho), &s, cache).unwrap();
+        assert_eq!(total, 2.5 * s.num_blocks() as f64);
+    }
+
+    #[test]
+    fn failing_map_task_fails_job() {
+        struct FailJob;
+        impl MapReduceJob for FailJob {
+            type MapOut = ();
+            type Output = ();
+            fn map_combine(&self, _b: &Matrix, ctx: &TaskCtx) -> Result<()> {
+                if ctx.task_id == 2 {
+                    Err(Error::Job("synthetic failure".into()))
+                } else {
+                    Ok(())
+                }
+            }
+            fn reduce(&self, _p: Vec<()>, _ctx: &TaskCtx) -> Result<()> {
+                Ok(())
+            }
+            fn shuffle_bytes(&self, _p: &()) -> u64 {
+                0
+            }
+        }
+        let s = store();
+        let mut e = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let r = e.run_job(Arc::new(FailJob), &s, Arc::new(DistributedCache::new()));
+        assert!(r.is_err());
+    }
+}

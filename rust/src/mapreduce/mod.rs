@@ -1,0 +1,64 @@
+//! Mini-Hadoop: a MapReduce engine over the [`crate::hdfs`] block store.
+//!
+//! What it reproduces from the paper's platform:
+//!
+//! * **job / task lifecycle** — a job = map tasks (one per block, combiner
+//!   folded in, as the paper runs FCM inside the combiner) + one reduce;
+//! * **distributed cache** — a read-only key-value store every task can
+//!   read, written by the driver (the paper stores V_init there);
+//! * **scheduling** — map tasks run on a fixed worker pool in waves with
+//!   locality hints;
+//! * **fault tolerance** — injectable task failures with Hadoop's
+//!   re-execution semantics (4 attempts), exercising combiner idempotence;
+//! * **cost model** — a [`simclock::SimClock`] charging job startup, task
+//!   launch, HDFS I/O and shuffle the way the paper's physical cluster paid
+//!   them, so job-per-iteration baselines show their true relative cost on
+//!   a single machine (DESIGN.md §3).
+
+pub mod cache;
+pub mod engine;
+pub mod simclock;
+
+pub use cache::DistributedCache;
+pub use engine::{Engine, EngineOptions, JobStats};
+pub use simclock::{SimClock, SimCost};
+
+use crate::data::Matrix;
+use crate::error::Result;
+
+/// Context handed to every task attempt.
+pub struct TaskCtx<'a> {
+    /// Read-only distributed cache.
+    pub cache: &'a DistributedCache,
+    /// Block/task id.
+    pub task_id: usize,
+    /// Attempt number (0 = first attempt).
+    pub attempt: usize,
+}
+
+/// A MapReduce job. `map_combine` is the fused map+combiner the paper runs
+/// (the mapper parses records, the combiner clusters them); `reduce` folds
+/// all combiner outputs into the job result.
+///
+/// Both must be pure with respect to their inputs — the engine re-executes
+/// failed attempts, exactly like Hadoop.
+pub trait MapReduceJob: Send + Sync {
+    /// Per-block combiner output (shipped through the shuffle).
+    type MapOut: Send + 'static;
+    /// Job result (written back to the "HDFS" by the caller).
+    type Output: Send;
+
+    /// Fused map+combine over one block of records.
+    fn map_combine(&self, block: &Matrix, ctx: &TaskCtx) -> Result<Self::MapOut>;
+
+    /// Reduce over all combiner outputs (input order = block order).
+    fn reduce(&self, parts: Vec<Self::MapOut>, ctx: &TaskCtx) -> Result<Self::Output>;
+
+    /// Serialised size of one combiner output, for the shuffle cost model.
+    fn shuffle_bytes(&self, part: &Self::MapOut) -> u64;
+
+    /// Job name for telemetry.
+    fn name(&self) -> &str {
+        "job"
+    }
+}

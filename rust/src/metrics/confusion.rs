@@ -1,0 +1,201 @@
+//! Confusion-matrix accuracy with optimal cluster↔class matching.
+//!
+//! Clustering is label-free, so accuracy requires assigning each found
+//! cluster to a ground-truth class first. We solve the assignment exactly
+//! with the Hungarian algorithm (O(n³), fine for C ≤ 50 as in the paper's
+//! KDD/50-centroid runs), maximising the matched record count.
+
+/// counts[i][j] = records in cluster i with true class j.
+pub fn confusion_matrix(
+    assignments: &[usize],
+    labels: &[usize],
+    clusters: usize,
+    classes: usize,
+) -> Vec<Vec<u64>> {
+    assert_eq!(assignments.len(), labels.len());
+    let mut m = vec![vec![0u64; classes]; clusters];
+    for (&a, &l) in assignments.iter().zip(labels) {
+        m[a][l] += 1;
+    }
+    m
+}
+
+/// Maximum-weight assignment on a (possibly rectangular) matrix.
+/// Returns per-row column choice (usize::MAX = unassigned).
+pub fn hungarian_max(weights: &[Vec<u64>]) -> Vec<usize> {
+    let rows = weights.len();
+    if rows == 0 {
+        return Vec::new();
+    }
+    let cols = weights[0].len();
+    let n = rows.max(cols);
+    let max_w = weights
+        .iter()
+        .flat_map(|r| r.iter())
+        .copied()
+        .max()
+        .unwrap_or(0) as i64;
+    // Convert to square min-cost matrix: cost = max_w - weight, padding 0s.
+    let cost: Vec<Vec<i64>> = (0..n)
+        .map(|i| {
+            (0..n)
+                .map(|j| {
+                    if i < rows && j < cols {
+                        max_w - weights[i][j] as i64
+                    } else {
+                        max_w
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    // Jonker–Volgenant style O(n³) Hungarian (potentials + augmenting paths).
+    let inf = i64::MAX / 4;
+    let mut u = vec![0i64; n + 1];
+    let mut v = vec![0i64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[j] = row matched to column j (1-based)
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![inf; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = inf;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut row_to_col = vec![usize::MAX; rows];
+    for j in 1..=n {
+        let i = p[j];
+        if i >= 1 && i <= rows && j <= cols {
+            row_to_col[i - 1] = j - 1;
+        }
+    }
+    row_to_col
+}
+
+/// Accuracy = matched records / total, after optimal cluster↔class matching
+/// (the paper's Table 7 "precision of the results").
+pub fn confusion_accuracy(assignments: &[usize], labels: &[usize], clusters: usize) -> f64 {
+    if assignments.is_empty() {
+        return 0.0;
+    }
+    let classes = labels.iter().copied().max().unwrap_or(0) + 1;
+    let m = confusion_matrix(assignments, labels, clusters, classes);
+    let matching = hungarian_max(&m);
+    let correct: u64 = matching
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c != usize::MAX)
+        .map(|(i, &c)| m[i][c])
+        .sum();
+    correct as f64 / assignments.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_clustering_scores_one() {
+        let labels = vec![0, 0, 1, 1, 2, 2];
+        // Clusters permuted relative to classes.
+        let assign = vec![2, 2, 0, 0, 1, 1];
+        assert_eq!(confusion_accuracy(&assign, &labels, 3), 1.0);
+    }
+
+    #[test]
+    fn chance_level_two_balanced_classes() {
+        // Assignments independent of labels → ~50%.
+        let labels: Vec<usize> = (0..1000).map(|i| i % 2).collect();
+        let assign: Vec<usize> = (0..1000).map(|i| (i / 2) % 2).collect();
+        let acc = confusion_accuracy(&assign, &labels, 2);
+        assert!((0.45..0.55).contains(&acc), "{acc}");
+    }
+
+    #[test]
+    fn hungarian_simple_case() {
+        // weights: row 0 prefers col 1, row 1 prefers col 0.
+        let w = vec![vec![1, 10], vec![8, 2]];
+        let m = hungarian_max(&w);
+        assert_eq!(m, vec![1, 0]);
+    }
+
+    #[test]
+    fn hungarian_beats_greedy() {
+        // Greedy would give row0→col0 (9), forcing row1→col1 (1): total 10.
+        // Optimal is row0→col1 (8) + row1→col0 (7): total 15.
+        let w = vec![vec![9, 8], vec![7, 1]];
+        let m = hungarian_max(&w);
+        let total: u64 = m.iter().enumerate().map(|(i, &j)| w[i][j]).sum();
+        assert_eq!(total, 15);
+    }
+
+    #[test]
+    fn rectangular_more_clusters_than_classes() {
+        let labels = vec![0, 0, 1, 1];
+        let assign = vec![0, 2, 1, 1]; // 3 clusters, 2 classes
+        let acc = confusion_accuracy(&assign, &labels, 3);
+        // Best: cluster0→class0 (1), cluster1→class1 (2); cluster2 unmatched.
+        assert!((acc - 0.75).abs() < 1e-12, "{acc}");
+    }
+
+    #[test]
+    fn rectangular_more_classes_than_clusters() {
+        let labels = vec![0, 1, 2, 2];
+        let assign = vec![0, 1, 1, 1];
+        let acc = confusion_accuracy(&assign, &labels, 2);
+        // cluster0→class0 (1), cluster1→class2 (2) = 3/4.
+        assert!((acc - 0.75).abs() < 1e-12, "{acc}");
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(confusion_accuracy(&[], &[], 2), 0.0);
+    }
+
+    #[test]
+    fn confusion_matrix_counts() {
+        let m = confusion_matrix(&[0, 0, 1], &[1, 1, 0], 2, 2);
+        assert_eq!(m[0][1], 2);
+        assert_eq!(m[1][0], 1);
+        assert_eq!(m[0][0] + m[1][1], 0);
+    }
+}

@@ -1,0 +1,26 @@
+//! Evaluation metrics of the paper (§3.5): confusion-matrix accuracy,
+//! silhouette width, and speedup.
+
+pub mod confusion;
+pub mod silhouette;
+
+pub use confusion::{confusion_accuracy, confusion_matrix, hungarian_max};
+pub use silhouette::{silhouette_width, silhouette_width_sampled};
+
+/// Relative speedup of `baseline` over `ours` (paper: T_baseline / T_ours).
+pub fn speedup(baseline_s: f64, ours_s: f64) -> f64 {
+    if ours_s <= 0.0 {
+        f64::INFINITY
+    } else {
+        baseline_s / ours_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn speedup_basic() {
+        assert_eq!(super::speedup(100.0, 10.0), 10.0);
+        assert!(super::speedup(1.0, 0.0).is_infinite());
+    }
+}

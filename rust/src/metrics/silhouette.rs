@@ -1,0 +1,149 @@
+//! Silhouette width (Rousseeuw 1987) — the paper's cluster-quality metric
+//! (Table 8).
+//!
+//! s(i) = (b(i) − a(i)) / max(a(i), b(i)) with a(i) the mean distance to
+//! the own cluster and b(i) the smallest mean distance to another cluster.
+//! The paper evaluates it on subsamples of 1k–4k records; we do the same
+//! (exact over the given sample, O(k²)).
+
+use crate::data::Matrix;
+use crate::prng::Pcg;
+
+/// Exact silhouette width over the given records/assignments (Euclidean).
+/// Records in singleton clusters contribute 0, per Rousseeuw's convention.
+pub fn silhouette_width(x: &Matrix, assignments: &[usize]) -> f64 {
+    let n = x.rows();
+    assert_eq!(n, assignments.len());
+    if n < 2 {
+        return 0.0;
+    }
+    let k = assignments.iter().copied().max().unwrap_or(0) + 1;
+    let mut cluster_sizes = vec![0usize; k];
+    for &a in assignments {
+        cluster_sizes[a] += 1;
+    }
+    let mut total = 0.0f64;
+    // Per record: mean distance to each cluster.
+    let mut sums = vec![0.0f64; k];
+    for i in 0..n {
+        sums.iter_mut().for_each(|s| *s = 0.0);
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let d = x.row_dist2(i, x.row(j)).sqrt();
+            sums[assignments[j]] += d;
+        }
+        let own = assignments[i];
+        if cluster_sizes[own] <= 1 {
+            continue; // s(i) = 0 for singletons
+        }
+        let a = sums[own] / (cluster_sizes[own] - 1) as f64;
+        let mut b = f64::INFINITY;
+        for (c, &s) in sums.iter().enumerate() {
+            if c != own && cluster_sizes[c] > 0 {
+                b = b.min(s / cluster_sizes[c] as f64);
+            }
+        }
+        if b.is_finite() {
+            let denom = a.max(b);
+            if denom > 0.0 {
+                total += (b - a) / denom;
+            }
+        }
+    }
+    total / n as f64
+}
+
+/// Silhouette over a uniform subsample of `sample` records (the paper's
+/// 1k/2k/3k/4k columns in Table 8).
+pub fn silhouette_width_sampled(
+    x: &Matrix,
+    assignments: &[usize],
+    sample: usize,
+    rng: &mut Pcg,
+) -> f64 {
+    let n = x.rows();
+    if sample >= n {
+        return silhouette_width(x, assignments);
+    }
+    let idx = rng.sample_indices(n, sample);
+    let sub = x.select_rows(&idx);
+    let sub_assign: Vec<usize> = idx.iter().map(|&i| assignments[i]).collect();
+    silhouette_width(&sub, &sub_assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+    use crate::fcm::assign_hard;
+
+    #[test]
+    fn well_separated_blobs_score_high() {
+        let d = blobs(200, 2, 2, 0.1, 1);
+        let labels = d.labels.as_ref().unwrap();
+        let s = silhouette_width(&d.features, labels);
+        assert!(s > 0.7, "expected near-1 silhouette, got {s}");
+    }
+
+    #[test]
+    fn random_assignment_scores_near_zero() {
+        let d = blobs(200, 2, 2, 0.1, 2);
+        let random: Vec<usize> = (0..200).map(|i| i % 2).collect();
+        let s = silhouette_width(&d.features, &random);
+        assert!(s.abs() < 0.15, "random assignment silhouette {s}");
+    }
+
+    #[test]
+    fn correct_beats_incorrect() {
+        let d = blobs(150, 3, 3, 0.2, 3);
+        let good = assign_hard(&d.features, &{
+            // centroids from labels
+            let mut c = Matrix::zeros(3, 3);
+            let labels = d.labels.as_ref().unwrap();
+            let mut counts = [0f32; 3];
+            for i in 0..150 {
+                let l = labels[i];
+                counts[l] += 1.0;
+                for j in 0..3 {
+                    c.set(l, j, c.get(l, j) + d.features.get(i, j));
+                }
+            }
+            for l in 0..3 {
+                for j in 0..3 {
+                    c.set(l, j, c.get(l, j) / counts[l]);
+                }
+            }
+            c
+        });
+        let bad: Vec<usize> = (0..150).map(|i| i % 3).collect();
+        assert!(
+            silhouette_width(&d.features, &good) > silhouette_width(&d.features, &bad) + 0.3
+        );
+    }
+
+    #[test]
+    fn sampled_close_to_exact() {
+        let d = blobs(1000, 3, 3, 0.3, 4);
+        let labels = d.labels.as_ref().unwrap();
+        let exact = silhouette_width(&d.features, labels);
+        let mut rng = Pcg::new(5);
+        let approx = silhouette_width_sampled(&d.features, labels, 300, &mut rng);
+        assert!((exact - approx).abs() < 0.08, "exact {exact} vs sampled {approx}");
+    }
+
+    #[test]
+    fn singleton_cluster_is_safe() {
+        let x = Matrix::from_rows(&[vec![0.0], vec![0.1], vec![5.0]]);
+        let s = silhouette_width(&x, &[0, 0, 1]);
+        assert!(s.is_finite());
+        assert!(s > 0.5);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let x = Matrix::from_rows(&[vec![1.0]]);
+        assert_eq!(silhouette_width(&x, &[0]), 0.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Artifact registry: `artifacts/manifest.json` written by the AOT build.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::json;
+use crate::runtime::Graph;
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub graph: Graph,
+    pub dims: usize,
+    pub clusters: usize,
+    pub chunk: usize,
+    /// Parameter count of the lowered entry (4 for fcm/classic, 3 kmeans).
+    pub params: usize,
+    /// File name relative to the artifacts dir.
+    pub file: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub chunk: usize,
+    pub row_block: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let chunk = v
+            .require("chunk")?
+            .as_usize()
+            .ok_or_else(|| Error::Artifact("chunk is not a number".into()))?;
+        let row_block = v
+            .require("row_block")?
+            .as_usize()
+            .ok_or_else(|| Error::Artifact("row_block is not a number".into()))?;
+        let arr = v
+            .require("artifacts")?
+            .as_array()
+            .ok_or_else(|| Error::Artifact("artifacts is not an array".into()))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for a in arr {
+            let get_usize = |k: &str| -> Result<usize> {
+                a.require(k)?
+                    .as_usize()
+                    .ok_or_else(|| Error::Artifact(format!("{k} is not a number")))
+            };
+            let get_str = |k: &str| -> Result<String> {
+                Ok(a.require(k)?
+                    .as_str()
+                    .ok_or_else(|| Error::Artifact(format!("{k} is not a string")))?
+                    .to_string())
+            };
+            artifacts.push(ArtifactMeta {
+                name: get_str("name")?,
+                graph: Graph::parse(&get_str("graph")?)?,
+                dims: get_usize("dims")?,
+                clusters: get_usize("clusters")?,
+                chunk: get_usize("chunk")?,
+                params: get_usize("params")?,
+                file: get_str("file")?,
+            });
+        }
+        if artifacts.is_empty() {
+            return Err(Error::Artifact("manifest lists no artifacts".into()));
+        }
+        Ok(Manifest { chunk, row_block, artifacts })
+    }
+
+    /// Find the artifact for a shape.
+    pub fn find(&self, graph: Graph, dims: usize, clusters: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.graph == graph && a.dims == dims && a.clusters == clusters)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "chunk": 4096, "row_block": 512,
+      "artifacts": [
+        {"name": "fcm_d4_c3", "graph": "fcm", "dims": 4, "clusters": 3,
+         "chunk": 4096, "params": 4, "file": "fcm_d4_c3.hlo.txt", "bytes": 100},
+        {"name": "kmeans_d4_c3", "graph": "kmeans", "dims": 4, "clusters": 3,
+         "chunk": 4096, "params": 3, "file": "kmeans_d4_c3.hlo.txt", "bytes": 90}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.chunk, 4096);
+        assert_eq!(m.row_block, 512);
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.find(Graph::Fcm, 4, 3).unwrap();
+        assert_eq!(a.params, 4);
+        assert!(m.find(Graph::Fcm, 9, 9).is_none());
+        assert!(m.find(Graph::Kmeans, 4, 3).is_some());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"chunk": 4096}"#).is_err());
+        assert!(Manifest::parse(r#"{"chunk": 4096, "row_block": 1, "artifacts": []}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_graph() {
+        let bad = SAMPLE.replace("\"kmeans\"", "\"mystery\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,87 @@
+//! One compiled HLO executable + literal marshalling. Lives on the PJRT
+//! device-owner thread ([`super::server`]); callers marshal padded buffers.
+
+use std::path::Path;
+
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+use crate::fcm::Partials;
+use crate::runtime::ArtifactMeta;
+
+/// A compiled chunk-step executable for one `(graph, dims, clusters)` shape.
+pub struct ChunkExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+}
+
+impl ChunkExecutor {
+    /// Load HLO text and compile it on the client.
+    pub fn compile(client: &xla::PjRtClient, path: &Path, meta: ArtifactMeta) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(format!("non-utf8 path {path:?}")))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Self { exe, meta })
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Execute one pre-padded chunk.
+    ///
+    /// * `x` — chunk×dims row-major, tail rows zeroed;
+    /// * `v` — clusters×dims;
+    /// * `w` — chunk weights, tail zeroed (padding contract);
+    /// * `m` — fuzzifier, ignored by 3-parameter (kmeans) artifacts.
+    pub fn execute_padded(&self, x: &[f32], v: &[f32], w: &[f32], m: f64) -> Result<Partials> {
+        let chunk = self.meta.chunk;
+        let d = self.meta.dims;
+        let c = self.meta.clusters;
+        if x.len() != chunk * d || v.len() != c * d || w.len() != chunk {
+            return Err(Error::Artifact(format!(
+                "buffer shapes for {}: x={} (want {}), v={} (want {}), w={} (want {chunk})",
+                self.meta.name,
+                x.len(),
+                chunk * d,
+                v.len(),
+                c * d,
+                w.len()
+            )));
+        }
+
+        let x_lit = xla::Literal::vec1(x).reshape(&[chunk as i64, d as i64])?;
+        let v_lit = xla::Literal::vec1(v).reshape(&[c as i64, d as i64])?;
+        let w_lit = xla::Literal::vec1(w).reshape(&[chunk as i64])?;
+
+        let result = if self.meta.params == 4 {
+            let m_lit = xla::Literal::scalar(m as f32);
+            self.exe.execute::<xla::Literal>(&[x_lit, v_lit, w_lit, m_lit])?
+        } else {
+            self.exe.execute::<xla::Literal>(&[x_lit, v_lit, w_lit])?
+        };
+        let out = result[0][0].to_literal_sync()?;
+
+        // Graphs are lowered with return_tuple=True → one 3-tuple.
+        let (vnum_lit, wacc_lit, obj_lit) = out.to_tuple3()?;
+        let vnum = vnum_lit.to_vec::<f32>()?;
+        let wacc = wacc_lit.to_vec::<f32>()?;
+        let obj = obj_lit.to_vec::<f32>()?;
+        if vnum.len() != c * d || wacc.len() != c || obj.len() != 1 {
+            return Err(Error::Xla(format!(
+                "unexpected output shapes from {}: {} {} {}",
+                self.meta.name,
+                vnum.len(),
+                wacc.len(),
+                obj.len()
+            )));
+        }
+        Ok(Partials {
+            v_num: Matrix::from_vec(vnum, c, d),
+            w_acc: wacc.into_iter().map(|x| x as f64).collect(),
+            objective: obj[0] as f64,
+        })
+    }
+}

@@ -1,0 +1,242 @@
+//! PJRT runtime: loads the AOT HLO text artifacts produced by
+//! `python/compile/aot.py` and executes them as the chunk backend.
+//!
+//! Flow per artifact (see /opt/xla-example/load_hlo): HLO text →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile` →
+//! `PjRtLoadedExecutable`, compiled lazily and cached per
+//! `(graph, dims, clusters)` on a dedicated device-owner thread
+//! ([`server`]) because the `xla` crate types are `!Send`.
+//!
+//! [`PjrtRuntime`] implements [`crate::fcm::ChunkBackend`]: inputs are split
+//! into fixed `chunk`-row pieces (the artifact's lowered shape), the last
+//! piece zero-padded with zero weights (exactly ignored by the kernels —
+//! the padding contract tested in `python/tests/test_kernel.py` and
+//! `rust/tests/integration_runtime.rs`), partials merged host-side.
+
+pub mod artifact;
+pub mod executor;
+pub mod server;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use executor::ChunkExecutor;
+pub use server::ServerStats;
+
+use std::path::Path;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+use crate::fcm::{ChunkBackend, NativeBackend, Partials};
+
+/// Graph families in the artifact matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Graph {
+    Fcm,
+    Classic,
+    Kmeans,
+}
+
+impl Graph {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Graph::Fcm => "fcm",
+            Graph::Classic => "classic",
+            Graph::Kmeans => "kmeans",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fcm" => Ok(Graph::Fcm),
+            "classic" => Ok(Graph::Classic),
+            "kmeans" => Ok(Graph::Kmeans),
+            other => Err(Error::Artifact(format!("unknown graph `{other}`"))),
+        }
+    }
+}
+
+/// The PJRT-backed chunk backend: a `Send + Sync` handle to the device
+/// thread.
+pub struct PjrtRuntime {
+    manifest: Manifest,
+    tx: Mutex<Sender<server::Request>>,
+}
+
+impl PjrtRuntime {
+    /// Open the artifact registry and start the device-owner thread.
+    pub fn open(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))?;
+        let tx = server::spawn(artifacts_dir.to_path_buf(), manifest.clone());
+        Ok(Self { manifest, tx: Mutex::new(tx) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The chunk row count all artifacts were lowered with.
+    pub fn chunk(&self) -> usize {
+        self.manifest.chunk
+    }
+
+    /// Whether an artifact exists for this shape.
+    pub fn supports(&self, graph: Graph, dims: usize, clusters: usize) -> bool {
+        self.manifest.find(graph, dims, clusters).is_some()
+    }
+
+    /// Aggregate execution statistics from the device thread.
+    pub fn stats(&self) -> Result<ServerStats> {
+        let (reply_tx, reply_rx) = channel();
+        self.send(server::Request::Stats(reply_tx))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Xla("pjrt server thread is gone".into()))
+    }
+
+    fn send(&self, req: server::Request) -> Result<()> {
+        self.tx
+            .lock()
+            .expect("pjrt sender poisoned")
+            .send(req)
+            .map_err(|_| Error::Xla("pjrt server thread is gone".into()))
+    }
+
+    fn run_chunked(
+        &self,
+        graph: Graph,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        m: f64,
+    ) -> Result<Partials> {
+        let d = x.cols();
+        let c = v.rows();
+        if !self.supports(graph, d, c) {
+            return Err(Error::Artifact(format!(
+                "no artifact for graph={} dims={d} clusters={c} — add the combo to \
+                 python/compile/aot.py::SHAPES and re-run `make artifacts`",
+                graph.as_str()
+            )));
+        }
+        let chunk = self.manifest.chunk;
+        let mut total = Partials::zeros(c, d);
+        let mut start = 0usize;
+        while start < x.rows() {
+            let end = (start + chunk).min(x.rows());
+            let live = end - start;
+            // Marshal padded buffers (tail zeros are exactly ignored).
+            let mut xbuf = vec![0.0f32; chunk * d];
+            xbuf[..live * d].copy_from_slice(&x.as_slice()[start * d..end * d]);
+            let mut wbuf = vec![0.0f32; chunk];
+            wbuf[..live].copy_from_slice(&w[start..end]);
+            let (reply_tx, reply_rx) = channel();
+            self.send(server::Request::Run(
+                server::ChunkRequest {
+                    graph,
+                    dims: d,
+                    clusters: c,
+                    x: xbuf,
+                    v: v.as_slice().to_vec(),
+                    w: wbuf,
+                    m,
+                },
+                reply_tx,
+            ))?;
+            let partial = reply_rx
+                .recv()
+                .map_err(|_| Error::Xla("pjrt server thread is gone".into()))??;
+            total.merge(&partial);
+            start = end;
+        }
+        Ok(total)
+    }
+}
+
+impl Drop for PjrtRuntime {
+    fn drop(&mut self) {
+        let _ = self.send(server::Request::Shutdown);
+    }
+}
+
+impl ChunkBackend for PjrtRuntime {
+    fn fcm_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
+        self.run_chunked(Graph::Fcm, x, v, w, m)
+    }
+
+    fn classic_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
+        self.run_chunked(Graph::Classic, x, v, w, m)
+    }
+
+    fn kmeans_partials(&self, x: &Matrix, v: &Matrix, w: &[f32]) -> Result<Partials> {
+        self.run_chunked(Graph::Kmeans, x, v, w, 0.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Backend resolved from config: PJRT artifacts when available, native
+/// otherwise (or forced by `runtime.backend`).
+pub enum ResolvedBackend {
+    Pjrt(Arc<PjrtRuntime>),
+    Native(NativeBackend),
+    /// PJRT runtime with native fallback for unsupported shapes.
+    Auto(Arc<PjrtRuntime>, NativeBackend),
+}
+
+impl ResolvedBackend {
+    /// Resolve from config. `Auto` degrades to native (with no error) when
+    /// the artifacts directory is missing.
+    pub fn from_config(cfg: &crate::config::Config) -> Result<ResolvedBackend> {
+        use crate::config::Backend;
+        match cfg.backend {
+            Backend::Native => Ok(ResolvedBackend::Native(NativeBackend)),
+            Backend::Pjrt => {
+                let rt = Arc::new(PjrtRuntime::open(&cfg.artifacts_dir)?);
+                Ok(ResolvedBackend::Pjrt(rt))
+            }
+            Backend::Auto => match PjrtRuntime::open(&cfg.artifacts_dir) {
+                Ok(rt) => Ok(ResolvedBackend::Auto(Arc::new(rt), NativeBackend)),
+                Err(_) => Ok(ResolvedBackend::Native(NativeBackend)),
+            },
+        }
+    }
+
+    fn pick(&self, graph: Graph, dims: usize, clusters: usize) -> &dyn ChunkBackend {
+        match self {
+            ResolvedBackend::Pjrt(rt) => rt.as_ref(),
+            ResolvedBackend::Native(nb) => nb,
+            ResolvedBackend::Auto(rt, nb) => {
+                if rt.supports(graph, dims, clusters) {
+                    rt.as_ref()
+                } else {
+                    nb
+                }
+            }
+        }
+    }
+}
+
+impl ChunkBackend for ResolvedBackend {
+    fn fcm_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
+        self.pick(Graph::Fcm, x.cols(), v.rows()).fcm_partials(x, v, w, m)
+    }
+
+    fn classic_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
+        self.pick(Graph::Classic, x.cols(), v.rows()).classic_partials(x, v, w, m)
+    }
+
+    fn kmeans_partials(&self, x: &Matrix, v: &Matrix, w: &[f32]) -> Result<Partials> {
+        self.pick(Graph::Kmeans, x.cols(), v.rows()).kmeans_partials(x, v, w)
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            ResolvedBackend::Pjrt(_) => "pjrt",
+            ResolvedBackend::Native(_) => "native",
+            ResolvedBackend::Auto(_, _) => "auto",
+        }
+    }
+}

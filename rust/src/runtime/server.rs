@@ -1,0 +1,126 @@
+//! The PJRT device-owner thread.
+//!
+//! The `xla` crate's client/executable types are `!Send` (Rc + raw
+//! pointers), but map tasks run on a thread pool. So all PJRT state lives
+//! on one dedicated thread — the pattern a real accelerator runtime uses —
+//! and [`super::PjrtRuntime`] talks to it over a channel. CPU PJRT
+//! parallelises execution internally (Eigen thread pool), so a single
+//! dispatcher thread does not serialise the actual math.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::fcm::Partials;
+use crate::runtime::executor::ChunkExecutor;
+use crate::runtime::{Graph, Manifest};
+
+/// One chunk execution request (buffers pre-padded by the caller).
+pub struct ChunkRequest {
+    pub graph: Graph,
+    pub dims: usize,
+    pub clusters: usize,
+    /// chunk×dims, zero-padded.
+    pub x: Vec<f32>,
+    /// clusters×dims.
+    pub v: Vec<f32>,
+    /// chunk, zero-padded.
+    pub w: Vec<f32>,
+    pub m: f64,
+}
+
+/// Aggregate server statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub chunks: u64,
+    pub exec_time: Duration,
+    pub compiled: usize,
+}
+
+pub enum Request {
+    Run(ChunkRequest, Sender<Result<Partials>>),
+    Stats(Sender<ServerStats>),
+    Shutdown,
+}
+
+/// Spawn the device-owner thread. Returns its request sender.
+pub fn spawn(artifacts_dir: PathBuf, manifest: Manifest) -> Sender<Request> {
+    let (tx, rx) = channel::<Request>();
+    std::thread::Builder::new()
+        .name("bigfcm-pjrt".to_string())
+        .spawn(move || serve(artifacts_dir, manifest, rx))
+        .expect("spawn pjrt server thread");
+    tx
+}
+
+fn serve(artifacts_dir: PathBuf, manifest: Manifest, rx: Receiver<Request>) {
+    // Client construction happens on the owner thread.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Serve errors to every request until shutdown.
+            let msg = format!("pjrt client init failed: {e}");
+            for req in rx {
+                match req {
+                    Request::Run(_, reply) => {
+                        let _ = reply.send(Err(Error::Xla(msg.clone())));
+                    }
+                    Request::Stats(reply) => {
+                        let _ = reply.send(ServerStats::default());
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+
+    let mut executors: HashMap<(Graph, usize, usize), ChunkExecutor> = HashMap::new();
+    let mut stats = ServerStats::default();
+
+    for req in rx {
+        match req {
+            Request::Shutdown => break,
+            Request::Stats(reply) => {
+                stats.compiled = executors.len();
+                let _ = reply.send(stats.clone());
+            }
+            Request::Run(cr, reply) => {
+                let key = (cr.graph, cr.dims, cr.clusters);
+                // Compile on first use.
+                if !executors.contains_key(&key) {
+                    let meta = match manifest.find(cr.graph, cr.dims, cr.clusters) {
+                        Some(m) => m.clone(),
+                        None => {
+                            let _ = reply.send(Err(Error::Artifact(format!(
+                                "no artifact for {} d={} c={}",
+                                cr.graph.as_str(),
+                                cr.dims,
+                                cr.clusters
+                            ))));
+                            continue;
+                        }
+                    };
+                    let path = artifacts_dir.join(&meta.file);
+                    match ChunkExecutor::compile(&client, &path, meta) {
+                        Ok(exec) => {
+                            executors.insert(key, exec);
+                        }
+                        Err(e) => {
+                            let _ = reply.send(Err(e));
+                            continue;
+                        }
+                    }
+                }
+                let exec = executors.get(&key).expect("just inserted");
+                let t0 = std::time::Instant::now();
+                let out = exec.execute_padded(&cr.x, &cr.v, &cr.w, cr.m);
+                stats.exec_time += t0.elapsed();
+                stats.chunks += 1;
+                let _ = reply.send(out);
+            }
+        }
+    }
+}

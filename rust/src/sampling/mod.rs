@@ -1,0 +1,102 @@
+//! Subsample sizing (paper Eqs. 3–4) and reservoir sampling over record
+//! streams — the driver job's machinery for picking R_x.
+
+use crate::prng::Pcg;
+
+/// Thompson's formula (Eq. 3): smallest sample size for estimating
+/// multinomial proportions with `mu` classes and max absolute error `d`
+/// at confidence level z (upper α/(2µ) normal quantile).
+///
+/// `Smallest n = max_µ z² (1/µ)(1 − 1/µ) / d²` — the max over µ is attained
+/// at the worst-case split; we evaluate at the given µ as the paper does.
+pub fn thompson_sample_size(mu: usize, d: f64, z: f64) -> usize {
+    assert!(mu >= 2, "need at least two classes");
+    assert!(d > 0.0 && z > 0.0);
+    let p = 1.0 / mu as f64;
+    let n = z * z * p * (1.0 - p) / (d * d);
+    n.ceil() as usize
+}
+
+/// Parker–Hall formula (Eq. 4): λ = v(α)·c² / r², the subsample size used
+/// when per-class proportions are unknown.
+///
+/// * `c` — number of clusters;
+/// * `r` — relative difference between class proportions;
+/// * `v_alpha` — Thompson's tabulated v(α) (1.27359 for α = 0.05).
+///
+/// Paper's example: c=5, r=0.10, α=0.05 → 3184 records.
+pub fn parker_hall_sample_size(c: usize, r: f64, v_alpha: f64) -> usize {
+    assert!(c >= 1 && r > 0.0 && v_alpha > 0.0);
+    let lambda = v_alpha * (c * c) as f64 / (r * r);
+    lambda.ceil() as usize
+}
+
+/// Reservoir sampling (Algorithm R): uniform k-subset of a stream of
+/// unknown length. Returns the sampled items.
+pub fn reservoir_sample<T: Clone>(
+    stream: impl Iterator<Item = T>,
+    k: usize,
+    rng: &mut Pcg,
+) -> Vec<T> {
+    let mut reservoir: Vec<T> = Vec::with_capacity(k);
+    for (i, item) in stream.enumerate() {
+        if i < k {
+            reservoir.push(item);
+        } else {
+            let j = rng.next_index(i + 1);
+            if j < k {
+                reservoir[j] = item;
+            }
+        }
+    }
+    reservoir
+}
+
+/// Reservoir sampling of row indices [0, n) without materialising them.
+pub fn reservoir_indices(n: usize, k: usize, rng: &mut Pcg) -> Vec<usize> {
+    reservoir_sample(0..n, k.min(n), rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parker_hall_matches_paper_example() {
+        // "five clusters and the relative difference is 0.10 … 3184 records"
+        let n = parker_hall_sample_size(5, 0.10, 1.27359);
+        assert_eq!(n, 3184);
+    }
+
+    #[test]
+    fn thompson_reasonable_magnitudes() {
+        // 2 classes, d=0.05, z=1.96 → n = 1.96²·0.25/0.0025 ≈ 385.
+        let n = thompson_sample_size(2, 0.05, 1.96);
+        assert_eq!(n, 385);
+        // Tighter d → larger sample.
+        assert!(thompson_sample_size(2, 0.01, 1.96) > n);
+    }
+
+    #[test]
+    fn reservoir_uniformity() {
+        let mut rng = Pcg::new(3);
+        let mut counts = vec![0usize; 20];
+        for _ in 0..20_000 {
+            for &i in &reservoir_indices(20, 5, &mut rng) {
+                counts[i] += 1;
+            }
+        }
+        // Each index expected 20_000·(5/20) = 5_000; allow ±6%.
+        for &c in &counts {
+            assert!((4_700..5_300).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn reservoir_small_stream_returns_all() {
+        let mut rng = Pcg::new(4);
+        let mut s = reservoir_indices(3, 10, &mut rng);
+        s.sort_unstable();
+        assert_eq!(s, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,207 @@
+//! Structured timing and counters for every run.
+//!
+//! Two clocks exist in this system and every report keeps them separate:
+//!
+//! * **wall time** — real measured nanoseconds of our single-machine run;
+//! * **sim time** — the modelled Hadoop-cluster time from
+//!   [`crate::mapreduce::simclock`], which charges job/task/shuffle overheads
+//!   the paper's physical testbed paid but a single process does not.
+//!
+//! The table-regeneration harness reports `modelled = sim + scaled-wall`, the
+//! way DESIGN.md §3 documents the substitution.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::json::{self, Value};
+
+/// A single named timing span.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub name: String,
+    pub wall: Duration,
+}
+
+/// Collects spans and counters for one run; cheap to clone snapshots out of.
+#[derive(Default)]
+pub struct Telemetry {
+    spans: Mutex<Vec<Span>>,
+    counters: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.record(name, start.elapsed());
+        out
+    }
+
+    /// Record an externally measured span.
+    pub fn record(&self, name: &str, wall: Duration) {
+        self.spans
+            .lock()
+            .expect("telemetry poisoned")
+            .push(Span { name: name.to_string(), wall });
+    }
+
+    /// Increment a named counter.
+    pub fn incr(&self, name: &str, by: u64) {
+        *self
+            .counters
+            .lock()
+            .expect("telemetry poisoned")
+            .entry(name.to_string())
+            .or_insert(0) += by;
+    }
+
+    /// Total wall time across spans with this name.
+    pub fn total(&self, name: &str) -> Duration {
+        self.spans
+            .lock()
+            .expect("telemetry poisoned")
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| s.wall)
+            .sum()
+    }
+
+    /// Counter value (0 if never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .expect("telemetry poisoned")
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Snapshot all spans.
+    pub fn spans(&self) -> Vec<Span> {
+        self.spans.lock().expect("telemetry poisoned").clone()
+    }
+
+    /// Serialise to a JSON report object.
+    pub fn to_json(&self) -> Value {
+        let spans = self.spans();
+        let mut by_name: BTreeMap<String, (u64, f64)> = BTreeMap::new();
+        for s in &spans {
+            let e = by_name.entry(s.name.clone()).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += s.wall.as_secs_f64();
+        }
+        let span_obj = Value::Object(
+            by_name
+                .into_iter()
+                .map(|(k, (n, secs))| {
+                    (
+                        k,
+                        json::obj(vec![
+                            ("count", json::num(n as f64)),
+                            ("total_s", json::num(secs)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let counters = Value::Object(
+            self.counters
+                .lock()
+                .expect("telemetry poisoned")
+                .iter()
+                .map(|(k, &v)| (k.clone(), json::num(v as f64)))
+                .collect(),
+        );
+        json::obj(vec![("spans", span_obj), ("counters", counters)])
+    }
+}
+
+/// A monotonically accumulating nanosecond cell, safe to bump from workers.
+#[derive(Default)]
+pub struct AtomicDuration {
+    nanos: AtomicU64,
+}
+
+impl AtomicDuration {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, d: Duration) {
+        self.nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::Relaxed))
+    }
+}
+
+/// Format a duration the way the paper's tables do (seconds, or m/h).
+pub fn human_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 120.0 {
+        format!("{s:.1}s")
+    } else if s < 7200.0 {
+        format!("{:.1}m", s / 60.0)
+    } else if s < 48.0 * 3600.0 {
+        format!("{:.1}h", s / 3600.0)
+    } else {
+        format!("{:.1}d", s / 86400.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_spans_and_counters() {
+        let t = Telemetry::new();
+        let v = t.time("work", || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(t.total("work") >= Duration::from_millis(4));
+        t.incr("chunks", 3);
+        t.incr("chunks", 2);
+        assert_eq!(t.counter("chunks"), 5);
+        assert_eq!(t.counter("missing"), 0);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let t = Telemetry::new();
+        t.record("phase", Duration::from_millis(10));
+        t.record("phase", Duration::from_millis(20));
+        t.incr("n", 1);
+        let j = t.to_json();
+        let phase = j.get("spans").unwrap().get("phase").unwrap();
+        assert_eq!(phase.get("count").unwrap().as_f64(), Some(2.0));
+        assert!(phase.get("total_s").unwrap().as_f64().unwrap() >= 0.029);
+        assert_eq!(j.get("counters").unwrap().get("n").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn atomic_duration_accumulates() {
+        let d = AtomicDuration::new();
+        d.add(Duration::from_millis(3));
+        d.add(Duration::from_millis(4));
+        assert_eq!(d.get(), Duration::from_millis(7));
+    }
+
+    #[test]
+    fn human_duration_bands() {
+        assert_eq!(human_duration(Duration::from_secs(30)), "30.0s");
+        assert_eq!(human_duration(Duration::from_secs(600)), "10.0m");
+        assert_eq!(human_duration(Duration::from_secs(7200)), "2.0h");
+        assert_eq!(human_duration(Duration::from_secs(200_000)), "2.3d");
+    }
+}

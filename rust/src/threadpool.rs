@@ -1,0 +1,176 @@
+//! A small work-stealing-free thread pool.
+//!
+//! The offline dependency set has neither tokio nor rayon, so the MapReduce
+//! engine runs on this pool: fixed worker count (one per simulated cluster
+//! node), FIFO queue, panic isolation per task, and a `scope`-style
+//! `map_parallel` helper that preserves input ordering of results.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Task),
+    Shutdown,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    workers: Vec<JoinHandle<()>>,
+    sender: Sender<Message>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (sender, receiver) = channel::<Message>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                std::thread::Builder::new()
+                    .name(format!("bigfcm-worker-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        Self { workers, sender }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a task.
+    pub fn execute(&self, task: impl FnOnce() + Send + 'static) {
+        self.sender
+            .send(Message::Run(Box::new(task)))
+            .expect("thread pool has shut down");
+    }
+
+    /// Run `f` over every item of `items` in parallel, returning results in
+    /// input order. Panics in `f` are propagated as `Err(description)` for
+    /// that item (the engine converts them into task failures).
+    pub fn map_parallel<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<Result<R, String>>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (tx, rx): (Sender<(usize, Result<R, String>)>, Receiver<_>) = channel();
+        for (idx, item) in items.into_iter().enumerate() {
+            let tx = tx.clone();
+            let f = Arc::clone(&f);
+            self.execute(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(item))).map_err(|e| {
+                    e.downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| e.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "task panicked".to_string())
+                });
+                let _ = tx.send((idx, out));
+            });
+        }
+        drop(tx);
+        let mut results: Vec<Option<Result<R, String>>> = (0..n).map(|_| None).collect();
+        for (idx, r) in rx {
+            results[idx] = Some(r);
+        }
+        results
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|| Err("worker dropped task".to_string())))
+            .collect()
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Message>>>) {
+    loop {
+        let msg = {
+            let guard = rx.lock().expect("poisoned pool queue");
+            guard.recv()
+        };
+        match msg {
+            Ok(Message::Run(task)) => {
+                // Panic isolation: a panicking task must not kill the worker.
+                let _ = catch_unwind(AssertUnwindSafe(task));
+            }
+            Ok(Message::Shutdown) | Err(_) => break,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.sender.send(Message::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_tasks() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        drop(tx);
+        let done = rx.iter().count();
+        assert_eq!(done, 100);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_parallel_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map_parallel((0..50).collect(), |x: i32| x * 2);
+        let vals: Vec<i32> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_parallel_isolates_panics() {
+        let pool = ThreadPool::new(2);
+        let out = pool.map_parallel(vec![1, 2, 3, 4], |x: i32| {
+            if x == 3 {
+                panic!("boom {x}");
+            }
+            x
+        });
+        assert_eq!(out[0], Ok(1));
+        assert_eq!(out[1], Ok(2));
+        assert!(out[2].as_ref().unwrap_err().contains("boom"));
+        assert_eq!(out[3], Ok(4));
+        // Pool still usable after a panic.
+        let again = pool.map_parallel(vec![10], |x: i32| x + 1);
+        assert_eq!(again[0], Ok(11));
+    }
+
+    #[test]
+    fn single_worker_pool_works() {
+        let pool = ThreadPool::new(1);
+        let out = pool.map_parallel(vec![5, 6], |x: i32| x);
+        assert_eq!(out.len(), 2);
+    }
+}

@@ -1,0 +1,205 @@
+//! Baselines vs BigFCM: the comparative claims of the paper's evaluation,
+//! verified as *shape* assertions at test scale.
+
+use std::sync::Arc;
+
+use bigfcm::baselines::{run_baseline, BaselineAlgo};
+use bigfcm::config::Config;
+use bigfcm::coordinator::BigFcm;
+use bigfcm::data::synth::{blobs, susy_like};
+use bigfcm::fcm::seeding::random_records;
+use bigfcm::fcm::{assign_hard, NativeBackend};
+use bigfcm::hdfs::BlockStore;
+use bigfcm::mapreduce::{Engine, EngineOptions};
+use bigfcm::metrics::{confusion_accuracy, silhouette_width_sampled, speedup};
+use bigfcm::prng::Pcg;
+
+fn cfg_with(c: usize, eps: f64, max_iter: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.fcm.clusters = c;
+    cfg.fcm.epsilon = eps;
+    cfg.fcm.max_iterations = max_iter;
+    cfg.cluster.block_records = 1024;
+    cfg
+}
+
+fn engine(cfg: &Config) -> Engine {
+    Engine::new(EngineOptions::default(), cfg.overhead.clone())
+}
+
+/// Table 3/4 shape: BigFCM's modelled time beats both baselines by a wide
+/// margin at tight epsilon (job-per-iteration vs single job).
+#[test]
+fn bigfcm_beats_baselines_at_tight_epsilon() {
+    let data = susy_like(8_000, 3);
+    let store = BlockStore::in_memory("susy", &data.features, 1024, 4).unwrap();
+    let cfg = cfg_with(2, 5e-9, 100);
+
+    let mut e = engine(&cfg);
+    let big = BigFcm::new(cfg.clone()).clusters(2).run_with_engine(&store, &mut e).unwrap();
+    let mut e = engine(&cfg);
+    let km = run_baseline(BaselineAlgo::KMeans, &cfg, &store, Arc::new(NativeBackend), &mut e)
+        .unwrap();
+    let mut e = engine(&cfg);
+    let fkm = run_baseline(
+        BaselineAlgo::FuzzyKMeans,
+        &cfg,
+        &store,
+        Arc::new(NativeBackend),
+        &mut e,
+    )
+    .unwrap();
+
+    let sp_km = speedup(km.modelled_s(), big.modelled_s());
+    let sp_fkm = speedup(fkm.modelled_s(), big.modelled_s());
+    assert!(sp_km > 3.0, "KM speedup only {sp_km:.1}x");
+    assert!(sp_fkm > 3.0, "FKM speedup only {sp_fkm:.1}x");
+    // The gap is driven by job count: baselines launch one job per iteration.
+    assert!(km.jobs > 1);
+    assert!(fkm.jobs > 1);
+}
+
+/// Figure 2 shape: BigFCM modelled time is ~flat in epsilon while the FKM
+/// baseline grows.
+#[test]
+fn bigfcm_flat_in_epsilon_baseline_grows() {
+    let data = susy_like(6_000, 5);
+    let store = BlockStore::in_memory("susy", &data.features, 1024, 4).unwrap();
+    let mut big_times = Vec::new();
+    let mut fkm_jobs = Vec::new();
+    for eps in [5e-2, 5e-5, 5e-9] {
+        let cfg = cfg_with(2, eps, 80);
+        let mut e = engine(&cfg);
+        let big = BigFcm::new(cfg.clone()).clusters(2).epsilon(eps).run_with_engine(&store, &mut e).unwrap();
+        big_times.push(big.modelled_s());
+        let mut e = engine(&cfg);
+        let fkm = run_baseline(
+            BaselineAlgo::FuzzyKMeans,
+            &cfg,
+            &store,
+            Arc::new(NativeBackend),
+            &mut e,
+        )
+        .unwrap();
+        fkm_jobs.push(fkm.jobs);
+    }
+    // BigFCM: job count fixed at 1 → modelled time within 2x across epsilons.
+    let (min_t, max_t) = (
+        big_times.iter().cloned().fold(f64::INFINITY, f64::min),
+        big_times.iter().cloned().fold(0.0, f64::max),
+    );
+    assert!(max_t / min_t < 2.0, "BigFCM not flat in epsilon: {big_times:?}");
+    // FKM: strictly more jobs as epsilon tightens.
+    assert!(
+        fkm_jobs[2] > fkm_jobs[0],
+        "FKM jobs did not grow with tighter epsilon: {fkm_jobs:?}"
+    );
+}
+
+/// Table 7 shape: BigFCM clustering quality is not worse than the FKM
+/// baseline on a separable workload.
+#[test]
+fn quality_parity_with_baseline() {
+    let data = blobs(4_000, 6, 4, 0.35, 7);
+    let labels = data.labels.as_ref().unwrap();
+    let store = BlockStore::in_memory("blobs", &data.features, 512, 4).unwrap();
+    let cfg = cfg_with(4, 1e-8, 200);
+
+    let mut e = engine(&cfg);
+    let big = BigFcm::new(cfg.clone()).clusters(4).run_with_engine(&store, &mut e).unwrap();
+    let mut e = engine(&cfg);
+    let fkm = run_baseline(
+        BaselineAlgo::FuzzyKMeans,
+        &cfg,
+        &store,
+        Arc::new(NativeBackend),
+        &mut e,
+    )
+    .unwrap();
+
+    let acc_big = confusion_accuracy(&assign_hard(&data.features, &big.centers), labels, 4);
+    let acc_fkm = confusion_accuracy(&assign_hard(&data.features, &fkm.centers), labels, 4);
+    assert!(
+        acc_big + 0.03 >= acc_fkm,
+        "BigFCM accuracy {acc_big:.3} markedly below baseline {acc_fkm:.3}"
+    );
+    assert!(acc_big > 0.9, "absolute quality too low: {acc_big:.3}");
+}
+
+/// Table 8 shape: BigFCM silhouette is positive and stable across sample
+/// sizes on a clusterable workload.
+#[test]
+fn silhouette_positive_and_stable() {
+    let data = blobs(6_000, 8, 2, 0.6, 11);
+    let store = BlockStore::in_memory("blobs", &data.features, 1024, 4).unwrap();
+    let cfg = cfg_with(2, 1e-8, 200);
+    let mut e = engine(&cfg);
+    let big = BigFcm::new(cfg).clusters(2).run_with_engine(&store, &mut e).unwrap();
+    let assign = assign_hard(&data.features, &big.centers);
+    let mut values = Vec::new();
+    for (i, k) in [1000usize, 2000, 3000, 4000].into_iter().enumerate() {
+        let mut rng = Pcg::new(100 + i as u64);
+        values.push(silhouette_width_sampled(&data.features, &assign, k, &mut rng));
+    }
+    for v in &values {
+        assert!(*v > 0.2, "silhouette not positive: {values:?}");
+    }
+    let spread = values.iter().cloned().fold(0.0, f64::max)
+        - values.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(spread < 0.1, "silhouette unstable across samples: {values:?}");
+}
+
+/// Table 5 shape: the fast combiner update is O(n·c) — doubling C must
+/// roughly double (not quadruple) the cost of one pass.
+#[test]
+fn cost_near_linear_in_clusters() {
+    use bigfcm::fcm::native::fcm_partials_native;
+    let data = susy_like(30_000, 13);
+    let w = vec![1.0f32; data.features.rows()];
+    let mut rng = Pcg::new(99);
+    let time_pass = |c: usize, rng: &mut Pcg| {
+        let v = random_records(&data.features, c, rng);
+        // Warm-up + 3 timed passes, take the min (noise robustness).
+        fcm_partials_native(&data.features, &v, &w, 2.0);
+        (0..3)
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                fcm_partials_native(&data.features, &v, &w, 2.0);
+                t0.elapsed().as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+    let t6 = time_pass(6, &mut rng);
+    let t12 = time_pass(12, &mut rng);
+    let t24 = time_pass(24, &mut rng);
+    // Linear would be 2.0x per doubling; quadratic 4.0x. Require < 3.2x.
+    assert!(t12 / t6 < 3.2, "6->12 scaling {:.2}x", t12 / t6);
+    assert!(t24 / t12 < 3.2, "12->24 scaling {:.2}x", t24 / t12);
+}
+
+/// Baselines converge to sane centers — they are real algorithms, not straw
+/// men: on separable data KM and FKM recover the blob structure from at
+/// least one of a few random seeds (random seeding can hit the classic
+/// two-seeds-in-one-blob local minimum, exactly as real Mahout does).
+#[test]
+fn baselines_are_not_strawmen() {
+    let data = blobs(3_000, 4, 3, 0.25, 17);
+    let labels = data.labels.as_ref().unwrap();
+    let store = BlockStore::in_memory("blobs", &data.features, 512, 4).unwrap();
+    for algo in [BaselineAlgo::KMeans, BaselineAlgo::FuzzyKMeans] {
+        let mut best = 0.0f64;
+        for seed in 0..4u64 {
+            let mut cfg = cfg_with(3, 1e-9, 300);
+            cfg.seed = 1000 + seed;
+            let mut e = engine(&cfg);
+            let run = run_baseline(algo, &cfg, &store, Arc::new(NativeBackend), &mut e).unwrap();
+            assert!(run.converged, "{algo:?} did not converge (seed {seed})");
+            let acc = confusion_accuracy(&assign_hard(&data.features, &run.centers), labels, 3);
+            best = best.max(acc);
+            if best > 0.95 {
+                break;
+            }
+        }
+        assert!(best > 0.95, "{algo:?} best accuracy {best:.3}");
+    }
+}

@@ -1,0 +1,220 @@
+//! End-to-end pipeline integration: BigFCM over the MapReduce substrate,
+//! cross-checked against single-machine clustering and the baselines.
+
+use std::sync::Arc;
+
+use bigfcm::config::Config;
+use bigfcm::coordinator::BigFcm;
+use bigfcm::data::matrix::dist2;
+use bigfcm::data::synth::blobs;
+use bigfcm::data::{builtin, Matrix};
+use bigfcm::fcm::loops::{run_fcm, FcmParams};
+use bigfcm::fcm::{assign_hard, NativeBackend};
+use bigfcm::hdfs::BlockStore;
+use bigfcm::mapreduce::{Engine, EngineOptions};
+use bigfcm::metrics::confusion_accuracy;
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.block_records = 512;
+    cfg.fcm.epsilon = 1e-9;
+    cfg
+}
+
+/// The headline soundness property: the distributed pipeline must land on
+/// the same cluster structure as a single-machine FCM over all records.
+#[test]
+fn pipeline_matches_single_machine_fcm() {
+    let data = blobs(4096, 4, 3, 0.25, 101);
+    let cfg = small_cfg();
+    let run = BigFcm::new(cfg.clone())
+        .clusters(3)
+        .run_in_memory(&data.features)
+        .unwrap();
+
+    // The pipeline's centers must be (near) a fixed point of global FCM.
+    let w = vec![1.0f32; data.features.rows()];
+    let global = run_fcm(
+        &NativeBackend,
+        &data.features,
+        &w,
+        run.centers.clone(),
+        &FcmParams { epsilon: 1e-9, ..Default::default() },
+    )
+    .unwrap();
+
+    for i in 0..3 {
+        let best = (0..3)
+            .map(|j| dist2(run.centers.row(i), global.centers.row(j)))
+            .fold(f64::INFINITY, f64::min);
+        assert!(best < 0.02, "pipeline center {i} not a global fixed point ({best})");
+    }
+    // And the structure matches the generating blobs.
+    let labels = data.labels.as_ref().unwrap();
+    let acc = confusion_accuracy(&assign_hard(&data.features, &run.centers), labels, 3);
+    assert!(acc > 0.95, "accuracy {acc}");
+}
+
+#[test]
+fn pipeline_is_deterministic_given_seed() {
+    let data = blobs(2048, 3, 3, 0.3, 55);
+    // Pin the flag: the driver's FCM-vs-WFCMPB race is timing-dependent by
+    // design (the paper's Algorithm 3 line 6), so determinism is only
+    // guaranteed under a forced policy.
+    let mut cfg = small_cfg();
+    cfg.fcm.flag_policy = bigfcm::config::FlagPolicy::ForceFcm;
+    let a = BigFcm::new(cfg.clone()).clusters(3).seed(7).run_in_memory(&data.features).unwrap();
+    let b = BigFcm::new(cfg).clusters(3).seed(7).run_in_memory(&data.features).unwrap();
+    assert_eq!(a.centers.as_slice(), b.centers.as_slice());
+    assert_eq!(a.driver.flag_fcm, b.driver.flag_fcm);
+}
+
+#[test]
+fn pipeline_single_job_regardless_of_epsilon() {
+    // The paper's core scaling property: one MR job total, for any epsilon.
+    let data = blobs(2048, 3, 2, 0.3, 77);
+    for eps in [5e-2, 5e-7, 5e-11] {
+        let mut engine = Engine::new(EngineOptions::default(), small_cfg().overhead.clone());
+        let store = BlockStore::in_memory("t", &data.features, 512, 4).unwrap();
+        let _run = BigFcm::new(small_cfg())
+            .clusters(2)
+            .epsilon(eps)
+            .run_with_engine(&store, &mut engine)
+            .unwrap();
+        assert_eq!(engine.clock().jobs(), 1, "eps={eps}: more than one MR job");
+    }
+}
+
+#[test]
+fn pipeline_handles_tiny_datasets() {
+    let data = builtin::iris();
+    let mut cfg = small_cfg();
+    cfg.cluster.block_records = 64; // force multiple blocks even on iris
+    cfg.fcm.fuzzifier = 1.2;
+    cfg.fcm.epsilon = 5e-2;
+    let run = BigFcm::new(cfg).clusters(3).run_in_memory(&data.features).unwrap();
+    assert_eq!(run.centers.rows(), 3);
+    let labels = data.labels.as_ref().unwrap();
+    let acc = confusion_accuracy(&assign_hard(&data.features, &run.centers), labels, 3);
+    // Iris fuzzy clustering lands 80-96% depending on seeding; the paper
+    // reports 92%.
+    assert!(acc > 0.75, "iris accuracy {acc}");
+}
+
+#[test]
+fn pipeline_survives_injected_task_faults() {
+    let data = blobs(4096, 3, 3, 0.25, 31);
+    let mut cfg = small_cfg();
+    cfg.fcm.flag_policy = bigfcm::config::FlagPolicy::ForceFcm;
+    let store = BlockStore::in_memory("t", &data.features, 256, 4).unwrap();
+    let mut engine = Engine::new(
+        EngineOptions { workers: 4, fault_rate: 0.3, fault_seed: 5 },
+        cfg.overhead.clone(),
+    );
+    let run = BigFcm::new(cfg.clone())
+        .clusters(3)
+        .run_with_engine(&store, &mut engine)
+        .unwrap();
+    assert!(run.job.attempts > run.job.map_tasks, "faults were not injected");
+    // Results are identical to a fault-free run (idempotent combiners).
+    let clean = BigFcm::new(cfg)
+        .clusters(3)
+        .run_store(&store)
+        .unwrap();
+    for (a, b) in run.centers.as_slice().iter().zip(clean.centers.as_slice()) {
+        assert!((a - b).abs() < 1e-5, "fault injection changed the result");
+    }
+}
+
+#[test]
+fn disk_and_memory_stores_agree() {
+    let data = blobs(2000, 4, 2, 0.3, 13);
+    let dir = std::env::temp_dir().join(format!("bigfcm_it_{}", std::process::id()));
+    let disk = BlockStore::on_disk("t", &data.features, 256, 4, dir.clone()).unwrap();
+    let mem = BlockStore::in_memory("t", &data.features, 256, 4).unwrap();
+    // Pin the flag (the FCM-vs-WFCMPB race is timing-dependent by design).
+    let mut cfg = small_cfg();
+    cfg.fcm.flag_policy = bigfcm::config::FlagPolicy::ForceFcm;
+    let a = BigFcm::new(cfg.clone()).clusters(2).run_store(&disk).unwrap();
+    let b = BigFcm::new(cfg).clusters(2).run_store(&mem).unwrap();
+    assert_eq!(a.centers.as_slice(), b.centers.as_slice());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn weights_reflect_partition_mass() {
+    // All record mass must be conserved into the final center weights
+    // (within fuzzy-membership shrinkage: Σ weights <= N, > 0).
+    let data = blobs(3000, 3, 3, 0.25, 17);
+    let run = BigFcm::new(small_cfg()).clusters(3).run_in_memory(&data.features).unwrap();
+    let total: f64 = run.weights.iter().sum();
+    assert!(total > 0.0);
+    assert!(total.is_finite(), "weights contain NaN/inf: {:?}", run.weights);
+}
+
+#[test]
+fn multi_reducer_tree_agrees_with_flat() {
+    let data = blobs(4096, 3, 3, 0.25, 23);
+    let store = BlockStore::in_memory("t", &data.features, 256, 4).unwrap();
+    let mut cfg_flat = small_cfg();
+    cfg_flat.cluster.reducers = 1;
+    let mut cfg_tree = small_cfg();
+    cfg_tree.cluster.reducers = 4;
+    let a = BigFcm::new(cfg_flat).clusters(3).run_store(&store).unwrap();
+    let b = BigFcm::new(cfg_tree).clusters(3).run_store(&store).unwrap();
+    for i in 0..3 {
+        let best = (0..3)
+            .map(|j| dist2(a.centers.row(i), b.centers.row(j)))
+            .fold(f64::INFINITY, f64::min);
+        assert!(best < 0.05, "tree reducer diverged at center {i}: {best}");
+    }
+}
+
+#[test]
+fn backend_trait_object_works_via_arc() {
+    // The builder accepts any ChunkBackend behind an Arc.
+    let data = blobs(1024, 3, 2, 0.3, 29);
+    let run = BigFcm::new(small_cfg())
+        .backend(Arc::new(NativeBackend))
+        .clusters(2)
+        .run_in_memory(&data.features)
+        .unwrap();
+    assert_eq!(run.centers.rows(), 2);
+}
+
+#[test]
+fn sim_cost_breakdown_is_consistent() {
+    let data = blobs(2048, 3, 2, 0.3, 41);
+    let run = BigFcm::new(small_cfg()).clusters(2).run_in_memory(&data.features).unwrap();
+    let s = &run.sim;
+    let total = s.total_s();
+    let parts = s.job_startup_s + s.task_launch_s + s.hdfs_io_s + s.shuffle_s + s.compute_s;
+    assert!((total - parts).abs() < 1e-9);
+    // Exactly one job startup.
+    assert!((s.job_startup_s - small_cfg().overhead.job_startup_s).abs() < 1e-9);
+}
+
+#[test]
+fn empty_matrix_is_rejected() {
+    let empty = Matrix::zeros(0, 3);
+    assert!(BigFcm::new(small_cfg()).clusters(2).run_in_memory(&empty).is_err());
+}
+
+#[test]
+fn m_1_2_small_distances_no_nan() {
+    // Regression: at m=1.2 the exponent 1/(m-1)=5 used to underflow f32 in
+    // the PJRT kernels and produce NaN weights; the ratio-normalised
+    // formulation must stay finite even with near-duplicate records.
+    let mut rows = Vec::new();
+    for i in 0..512 {
+        let v = (i % 3) as f32;
+        rows.push(vec![v + 1e-6 * i as f32, v]);
+    }
+    let data = Matrix::from_rows(&rows);
+    let mut cfg = small_cfg();
+    cfg.fcm.fuzzifier = 1.2;
+    cfg.cluster.block_records = 128;
+    let run = BigFcm::new(cfg).clusters(3).run_in_memory(&data).unwrap();
+    assert!(run.centers.as_slice().iter().all(|v| v.is_finite()));
+    assert!(run.weights.iter().all(|w| w.is_finite()));
+}

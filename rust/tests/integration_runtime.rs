@@ -1,0 +1,196 @@
+//! PJRT runtime integration: AOT artifacts vs golden vectors vs the native
+//! backend. Requires `make artifacts` (skips gracefully when absent so
+//! `cargo test` works on a fresh checkout, but CI always builds artifacts
+//! first).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use bigfcm::config::Config;
+use bigfcm::coordinator::BigFcm;
+use bigfcm::data::synth::blobs;
+use bigfcm::data::Matrix;
+use bigfcm::fcm::{ChunkBackend, NativeBackend};
+use bigfcm::json;
+use bigfcm::runtime::{Graph, PjrtRuntime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_covers_experiment_matrix() {
+    let dir = require_artifacts!();
+    let rt = PjrtRuntime::open(&dir).unwrap();
+    for (d, c) in [(4, 3), (8, 2), (18, 2), (18, 6), (18, 10), (28, 2), (28, 50), (41, 23)] {
+        for g in [Graph::Fcm, Graph::Classic, Graph::Kmeans] {
+            assert!(rt.supports(g, d, c), "missing artifact {g:?} d={d} c={c}");
+        }
+    }
+}
+
+/// The AOT golden vectors (emitted from the pure-jnp oracle) must match
+/// what the compiled artifacts produce through the whole rust path.
+#[test]
+fn pjrt_matches_python_golden_vectors() {
+    let dir = require_artifacts!();
+    let golden = std::fs::read_to_string(dir.join("golden.json")).unwrap();
+    let v = json::parse(&golden).unwrap();
+    let rt = PjrtRuntime::open(&dir).unwrap();
+    for case in v.require("cases").unwrap().as_array().unwrap() {
+        let graph = Graph::parse(case.get("graph").unwrap().as_str().unwrap()).unwrap();
+        let d = case.get("dims").unwrap().as_usize().unwrap();
+        let c = case.get("clusters").unwrap().as_usize().unwrap();
+        let n = case.get("chunk").unwrap().as_usize().unwrap();
+        let m = case.get("m").unwrap().as_f64().unwrap();
+        let x = Matrix::from_vec(case.get("x").unwrap().as_f32_vec().unwrap(), n, d);
+        let vc = Matrix::from_vec(case.get("v").unwrap().as_f32_vec().unwrap(), c, d);
+        let w = case.get("w").unwrap().as_f32_vec().unwrap();
+        let exp_vnum = case.get("out_vnum").unwrap().as_f32_vec().unwrap();
+        let exp_wacc = case.get("out_wacc").unwrap().as_f32_vec().unwrap();
+        let exp_obj = case.get("out_obj").unwrap().as_f64().unwrap();
+
+        let got = match graph {
+            Graph::Fcm => rt.fcm_partials(&x, &vc, &w, m).unwrap(),
+            Graph::Classic => rt.classic_partials(&x, &vc, &w, m).unwrap(),
+            Graph::Kmeans => rt.kmeans_partials(&x, &vc, &w).unwrap(),
+        };
+        let name = format!("{graph:?} d={d} c={c}");
+        for (a, e) in got.v_num.as_slice().iter().zip(&exp_vnum) {
+            assert!(
+                (a - e).abs() <= 2e-3 + 2e-3 * e.abs(),
+                "{name}: vnum {a} vs {e}"
+            );
+        }
+        for (a, e) in got.w_acc.iter().zip(&exp_wacc) {
+            assert!(
+                (a - *e as f64).abs() <= 2e-3 + 2e-3 * e.abs() as f64,
+                "{name}: wacc {a} vs {e}"
+            );
+        }
+        assert!(
+            (got.objective - exp_obj).abs() <= 1e-2 + 2e-3 * exp_obj.abs(),
+            "{name}: obj {} vs {exp_obj}",
+            got.objective
+        );
+    }
+}
+
+/// PJRT and native backends must agree on random inputs (fp32 tolerance),
+/// including padded tail chunks.
+#[test]
+fn pjrt_agrees_with_native_backend() {
+    let dir = require_artifacts!();
+    let rt = PjrtRuntime::open(&dir).unwrap();
+    // 5000 rows → one full 4096 chunk + one padded 904-row chunk.
+    let data = blobs(5000, 18, 6, 0.8, 3);
+    let v = data.features.slice_rows(0, 6);
+    let w: Vec<f32> = (0..5000).map(|i| 0.5 + (i % 7) as f32 * 0.2).collect();
+    for m in [1.2, 2.0] {
+        let a = rt.fcm_partials(&data.features, &v, &w, m).unwrap();
+        let b = NativeBackend.fcm_partials(&data.features, &v, &w, m).unwrap();
+        for (x, y) in a.v_num.as_slice().iter().zip(b.v_num.as_slice()) {
+            assert!((x - y).abs() <= 2e-2 + 2e-3 * y.abs(), "vnum {x} vs {y} at m={m}");
+        }
+        for (x, y) in a.w_acc.iter().zip(&b.w_acc) {
+            assert!((x - y).abs() <= 1e-2 + 2e-3 * y.abs(), "wacc {x} vs {y} at m={m}");
+        }
+    }
+    let a = rt.kmeans_partials(&data.features, &v, &w).unwrap();
+    let b = NativeBackend.kmeans_partials(&data.features, &v, &w).unwrap();
+    for (x, y) in a.w_acc.iter().zip(&b.w_acc) {
+        assert!((x - y).abs() <= 1e-3 + 1e-4 * y.abs(), "kmeans counts {x} vs {y}");
+    }
+}
+
+/// Full BigFCM pipeline on the PJRT backend matches the native pipeline.
+#[test]
+fn full_pipeline_pjrt_vs_native() {
+    let dir = require_artifacts!();
+    let rt: Arc<dyn ChunkBackend> = Arc::new(PjrtRuntime::open(&dir).unwrap());
+    let data = blobs(6000, 18, 6, 0.6, 9);
+    let mut cfg = Config::default();
+    cfg.cluster.block_records = 2048;
+    cfg.fcm.epsilon = 1e-8;
+    let pjrt_run = BigFcm::new(cfg.clone())
+        .backend(rt)
+        .clusters(6)
+        .run_in_memory(&data.features)
+        .unwrap();
+    let native_run = BigFcm::new(cfg)
+        .backend(Arc::new(NativeBackend))
+        .clusters(6)
+        .run_in_memory(&data.features)
+        .unwrap();
+    for i in 0..6 {
+        let best = (0..6)
+            .map(|j| {
+                bigfcm::data::matrix::dist2(pjrt_run.centers.row(i), native_run.centers.row(j))
+            })
+            .fold(f64::INFINITY, f64::min);
+        assert!(best < 0.05, "pjrt/native divergence at center {i}: {best}");
+    }
+    assert!(pjrt_run.weights.iter().all(|w| w.is_finite()));
+}
+
+/// Executable cache: repeated runs reuse the compiled artifact.
+#[test]
+fn executables_are_cached() {
+    let dir = require_artifacts!();
+    let rt = PjrtRuntime::open(&dir).unwrap();
+    let data = blobs(1000, 4, 3, 0.5, 1);
+    let v = data.features.slice_rows(0, 3);
+    let w = vec![1.0f32; 1000];
+    rt.fcm_partials(&data.features, &v, &w, 2.0).unwrap();
+    rt.fcm_partials(&data.features, &v, &w, 2.0).unwrap();
+    let stats = rt.stats().unwrap();
+    assert_eq!(stats.compiled, 1, "artifact should compile once");
+    assert_eq!(stats.chunks, 2, "two chunk executions expected");
+}
+
+/// Unsupported shapes produce a clear error naming the fix.
+#[test]
+fn unsupported_shape_error_is_actionable() {
+    let dir = require_artifacts!();
+    let rt = PjrtRuntime::open(&dir).unwrap();
+    let x = Matrix::zeros(10, 7); // d=7 not in the matrix
+    let v = Matrix::zeros(2, 7);
+    let err = rt.fcm_partials(&x, &v, &[1.0; 10], 2.0).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("aot.py"), "error should point at the AOT matrix: {msg}");
+}
+
+/// The runtime is shareable across threads (handle to the device thread).
+#[test]
+fn runtime_is_send_sync_across_threads() {
+    let dir = require_artifacts!();
+    let rt = Arc::new(PjrtRuntime::open(&dir).unwrap());
+    let data = Arc::new(blobs(2000, 4, 3, 0.5, 2));
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let rt = Arc::clone(&rt);
+        let data = Arc::clone(&data);
+        handles.push(std::thread::spawn(move || {
+            let v = data.features.slice_rows(0, 3);
+            let w = vec![1.0f32; data.features.rows()];
+            rt.fcm_partials(&data.features, &v, &w, 2.0).unwrap()
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for r in &results[1..] {
+        assert_eq!(r.v_num.as_slice(), results[0].v_num.as_slice());
+    }
+}

@@ -1,0 +1,331 @@
+//! Property-based tests over randomly generated cases (seeded,
+//! deterministic). The offline build has no proptest, so each property runs
+//! a seeded loop of random cases; failures print the case number + seed for
+//! reproduction.
+
+use std::sync::Arc;
+
+use bigfcm::config::Config;
+use bigfcm::coordinator::BigFcm;
+use bigfcm::data::synth::{blobs, gaussian_mixture, Component};
+use bigfcm::data::Matrix;
+use bigfcm::fcm::loops::{run_fcm, FcmParams, Variant};
+use bigfcm::fcm::native::{classic_partials_native, fcm_partials_native, memberships};
+use bigfcm::fcm::seeding::random_records;
+use bigfcm::fcm::{max_center_shift2, ChunkBackend, NativeBackend};
+use bigfcm::hdfs::BlockStore;
+use bigfcm::metrics::hungarian_max;
+use bigfcm::prng::Pcg;
+
+const CASES: u64 = 30;
+
+fn rand_matrix(rng: &mut Pcg, n: usize, d: usize, scale: f64) -> Matrix {
+    let mut m = Matrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            m.set(i, j, (rng.normal() * scale) as f32);
+        }
+    }
+    m
+}
+
+fn rand_weights(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() + 0.01).collect()
+}
+
+/// Partials are associative under arbitrary splits: any partition of the
+/// records merges to the full-pass result. This is THE combiner-correctness
+/// property the MapReduce decomposition rests on.
+#[test]
+fn prop_partials_associative_under_random_splits() {
+    for case in 0..CASES {
+        let mut rng = Pcg::new(1000 + case);
+        let n = 64 + rng.next_index(400);
+        let d = 1 + rng.next_index(12);
+        let c = 2 + rng.next_index(6);
+        let m = [1.2, 1.7, 2.0, 3.0][rng.next_index(4)];
+        let x = rand_matrix(&mut rng, n, d, 2.0);
+        let v = rand_matrix(&mut rng, c, d, 2.0);
+        let w = rand_weights(&mut rng, n);
+
+        let full = fcm_partials_native(&x, &v, &w, m);
+        // Random 3-way split.
+        let cut1 = 1 + rng.next_index(n - 2);
+        let cut2 = cut1 + 1 + rng.next_index(n - cut1 - 1);
+        let mut merged = fcm_partials_native(&x.slice_rows(0, cut1), &v, &w[..cut1], m);
+        merged.merge(&fcm_partials_native(
+            &x.slice_rows(cut1, cut2),
+            &v,
+            &w[cut1..cut2],
+            m,
+        ));
+        merged.merge(&fcm_partials_native(&x.slice_rows(cut2, n), &v, &w[cut2..], m));
+
+        for (a, b) in merged.v_num.as_slice().iter().zip(full.v_num.as_slice()) {
+            assert!(
+                (a - b).abs() <= 1e-3 + 1e-4 * b.abs(),
+                "case {case}: vnum {a} vs {b}"
+            );
+        }
+        for (a, b) in merged.w_acc.iter().zip(&full.w_acc) {
+            assert!((a - b).abs() <= 1e-6 + 1e-9 * b.abs(), "case {case}: wacc");
+        }
+    }
+}
+
+/// Memberships always form a probability distribution per record.
+#[test]
+fn prop_memberships_are_distributions() {
+    for case in 0..CASES {
+        let mut rng = Pcg::new(2000 + case);
+        let n = 32 + rng.next_index(200);
+        let d = 1 + rng.next_index(10);
+        let c = 2 + rng.next_index(8);
+        let m = [1.1, 1.5, 2.0, 4.0][rng.next_index(4)];
+        let scale = [1e-3, 1.0, 1e3][rng.next_index(3)];
+        let x = rand_matrix(&mut rng, n, d, scale);
+        let v = rand_matrix(&mut rng, c, d, 1.0);
+        let u = memberships(&x, &v, m);
+        for i in 0..n {
+            let mut s = 0.0f64;
+            for j in 0..c {
+                let val = u.get(i, j);
+                assert!(val.is_finite() && val >= 0.0, "case {case}: u[{i},{j}]={val}");
+                s += val as f64;
+            }
+            assert!((s - 1.0).abs() < 1e-4, "case {case}: row {i} sums to {s}");
+        }
+    }
+}
+
+/// Fast (Kolen–Hutcheson) and classic formulations agree on random input.
+#[test]
+fn prop_fast_equals_classic() {
+    for case in 0..CASES {
+        let mut rng = Pcg::new(3000 + case);
+        let n = 32 + rng.next_index(128);
+        let d = 1 + rng.next_index(8);
+        let c = 2 + rng.next_index(5);
+        let m = [1.3, 2.0, 2.5][rng.next_index(3)];
+        let x = rand_matrix(&mut rng, n, d, 1.5);
+        let v = rand_matrix(&mut rng, c, d, 1.5);
+        let w = rand_weights(&mut rng, n);
+        let a = fcm_partials_native(&x, &v, &w, m);
+        let b = classic_partials_native(&x, &v, &w, m);
+        for (p, q) in a.w_acc.iter().zip(&b.w_acc) {
+            assert!((p - q).abs() <= 1e-5 + 1e-6 * q.abs(), "case {case}: {p} vs {q}");
+        }
+    }
+}
+
+/// The FCM objective is non-increasing along iterations from any start.
+#[test]
+fn prop_objective_monotone() {
+    for case in 0..15 {
+        let mut rng = Pcg::new(4000 + case);
+        let k = 2 + rng.next_index(3);
+        let data = blobs(300 + rng.next_index(300), 2 + rng.next_index(4), k, 0.5, 5000 + case);
+        let v0 = random_records(&data.features, k, &mut rng);
+        let w = vec![1.0f32; data.features.rows()];
+        let mut v = v0;
+        let mut last = f64::INFINITY;
+        for _ in 0..12 {
+            let p = fcm_partials_native(&data.features, &v, &w, 2.0);
+            assert!(
+                p.objective <= last * (1.0 + 1e-6),
+                "case {case}: objective rose {} -> {}",
+                last,
+                p.objective
+            );
+            last = p.objective;
+            v = p.into_centers(&v);
+        }
+    }
+}
+
+/// Cluster relabeling invariance: permuting seed order cannot change the
+/// *set* of final centers the pipeline produces.
+#[test]
+fn prop_center_set_invariant_to_seed_permutation() {
+    for case in 0..10 {
+        let mut rng = Pcg::new(6000 + case);
+        let k = 2 + rng.next_index(3);
+        let data = blobs(600, 3, k, 0.3, 7000 + case);
+        let v0 = random_records(&data.features, k, &mut rng);
+        // Permute rows of v0.
+        let mut perm: Vec<usize> = (0..k).collect();
+        rng.shuffle(&mut perm);
+        let v0_perm = v0.select_rows(&perm);
+        let w = vec![1.0f32; 600];
+        let params = FcmParams { epsilon: 1e-12, ..Default::default() };
+        let a = run_fcm(&NativeBackend, &data.features, &w, v0, &params).unwrap();
+        let b = run_fcm(&NativeBackend, &data.features, &w, v0_perm, &params).unwrap();
+        for i in 0..k {
+            let best = (0..k)
+                .map(|j| bigfcm::data::matrix::dist2(a.centers.row(i), b.centers.row(j)))
+                .fold(f64::INFINITY, f64::min);
+            assert!(best < 1e-6, "case {case}: center sets differ ({best})");
+        }
+    }
+}
+
+/// Pipeline invariance to block size: the number of HDFS blocks must not
+/// change what clustering the pipeline finds (only how it is scheduled).
+#[test]
+fn prop_block_size_does_not_change_clustering() {
+    for case in 0..6 {
+        let data = blobs(2048, 3, 3, 0.3, 8000 + case);
+        let mut cfg = Config::default();
+        cfg.fcm.epsilon = 1e-9;
+        let mut results = Vec::new();
+        for block in [256usize, 512, 2048] {
+            cfg.cluster.block_records = block;
+            let store = BlockStore::in_memory("t", &data.features, block, 4).unwrap();
+            let run = BigFcm::new(cfg.clone()).clusters(3).run_store(&store).unwrap();
+            results.push(run.centers);
+        }
+        for other in &results[1..] {
+            for i in 0..3 {
+                let best = (0..3)
+                    .map(|j| bigfcm::data::matrix::dist2(results[0].row(i), other.row(j)))
+                    .fold(f64::INFINITY, f64::min);
+                assert!(best < 0.05, "case {case}: block size changed clustering ({best})");
+            }
+        }
+    }
+}
+
+/// Weighted runs are equivalent to record duplication: weight k on a record
+/// ≈ k copies of it (the WFCM soundness argument, Hore et al.).
+#[test]
+fn prop_weight_equals_duplication() {
+    for case in 0..CASES {
+        let mut rng = Pcg::new(9000 + case);
+        let n = 16 + rng.next_index(64);
+        let d = 1 + rng.next_index(6);
+        let c = 2 + rng.next_index(3);
+        let x = rand_matrix(&mut rng, n, d, 2.0);
+        let v = rand_matrix(&mut rng, c, d, 2.0);
+        // Duplicate record 0 three times vs weight 3.
+        let mut w = vec![1.0f32; n];
+        w[0] = 3.0;
+        let weighted = fcm_partials_native(&x, &v, &w, 2.0);
+
+        let mut x_dup = Matrix::zeros(0, d);
+        for _ in 0..3 {
+            x_dup.push_row(x.row(0));
+        }
+        for i in 1..n {
+            x_dup.push_row(x.row(i));
+        }
+        let dup = fcm_partials_native(&x_dup, &v, &vec![1.0f32; n + 2], 2.0);
+        for (a, b) in weighted.v_num.as_slice().iter().zip(dup.v_num.as_slice()) {
+            assert!((a - b).abs() <= 1e-3 + 1e-5 * b.abs(), "case {case}: {a} vs {b}");
+        }
+    }
+}
+
+/// Hungarian assignment really is optimal: verify against brute force on
+/// small random matrices.
+#[test]
+fn prop_hungarian_optimal_vs_bruteforce() {
+    fn permutations(n: usize) -> Vec<Vec<usize>> {
+        if n == 1 {
+            return vec![vec![0]];
+        }
+        let mut out = Vec::new();
+        for p in permutations(n - 1) {
+            for i in 0..n {
+                let mut q = p.clone();
+                q.insert(i, n - 1);
+                out.push(q);
+            }
+        }
+        out
+    }
+    for case in 0..CASES {
+        let mut rng = Pcg::new(10_000 + case);
+        let n = 2 + rng.next_index(4); // up to 5x5
+        let w: Vec<Vec<u64>> = (0..n)
+            .map(|_| (0..n).map(|_| rng.next_below(100)).collect())
+            .collect();
+        let assignment = hungarian_max(&w);
+        let got: u64 = assignment.iter().enumerate().map(|(i, &j)| w[i][j]).sum();
+        let best = permutations(n)
+            .into_iter()
+            .map(|p| p.iter().enumerate().map(|(i, &j)| w[i][j]).sum::<u64>())
+            .max()
+            .unwrap();
+        assert_eq!(got, best, "case {case}: hungarian {got} vs brute force {best}");
+    }
+}
+
+/// Variant equivalence survives the full loop on mixtures of any imbalance.
+#[test]
+fn prop_variants_converge_same_on_imbalanced_mixtures() {
+    for case in 0..8 {
+        let mut rng = Pcg::new(11_000 + case);
+        let d = 2 + rng.next_index(4);
+        let comps = vec![
+            Component {
+                mean: (0..d).map(|_| rng.normal() * 3.0).collect(),
+                std: vec![0.4; d],
+                weight: 0.85,
+                label: 0,
+            },
+            Component {
+                mean: (0..d).map(|_| rng.normal() * 3.0).collect(),
+                std: vec![0.4; d],
+                weight: 0.15,
+                label: 1,
+            },
+        ];
+        let data = gaussian_mixture(800, &comps, 12_000 + case, "imb");
+        let v0 = random_records(&data.features, 2, &mut rng);
+        let w = vec![1.0f32; 800];
+        let fast = run_fcm(
+            &NativeBackend,
+            &data.features,
+            &w,
+            v0.clone(),
+            &FcmParams { epsilon: 1e-12, variant: Variant::Fast, ..Default::default() },
+        )
+        .unwrap();
+        let classic = run_fcm(
+            &NativeBackend,
+            &data.features,
+            &w,
+            v0,
+            &FcmParams { epsilon: 1e-12, variant: Variant::Classic, ..Default::default() },
+        )
+        .unwrap();
+        let shift = max_center_shift2(&fast.centers, &classic.centers);
+        assert!(shift < 1e-3, "case {case}: variants diverged {shift}");
+    }
+}
+
+/// Backend object safety: the pipeline accepts Arc<dyn ChunkBackend> of any
+/// implementation and produces finite results.
+#[test]
+fn prop_pipeline_finite_for_random_configs() {
+    for case in 0..8 {
+        let mut rng = Pcg::new(13_000 + case);
+        let c = 2 + rng.next_index(4);
+        let data = blobs(1024, 2 + rng.next_index(6), c, 0.2 + rng.next_f64() * 0.5, 14_000 + case);
+        let mut cfg = Config::default();
+        cfg.cluster.block_records = 128 << rng.next_index(3);
+        cfg.cluster.workers = 1 + rng.next_index(6);
+        cfg.fcm.fuzzifier = [1.2, 2.0, 2.8][rng.next_index(3)];
+        cfg.fcm.epsilon = [5e-3, 5e-7, 5e-11][rng.next_index(3)];
+        cfg.seed = rng.next_u64();
+        let backend: Arc<dyn ChunkBackend> = Arc::new(NativeBackend);
+        let run = BigFcm::new(cfg)
+            .backend(backend)
+            .clusters(c)
+            .run_in_memory(&data.features)
+            .unwrap();
+        assert!(run.centers.as_slice().iter().all(|v| v.is_finite()), "case {case}");
+        assert!(run.weights.iter().all(|w| w.is_finite() && *w >= 0.0), "case {case}");
+        assert_eq!(run.centers.rows(), c);
+    }
+}
