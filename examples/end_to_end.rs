@@ -28,7 +28,7 @@ use bigfcm::metrics::{confusion_accuracy, silhouette_width_sampled, speedup};
 use bigfcm::prng::Pcg;
 use bigfcm::runtime::ResolvedBackend;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut cfg = Config::default();
     cfg.cluster.block_records = 8192;
     cfg.fcm.max_iterations = 100;
@@ -53,13 +53,13 @@ fn main() -> anyhow::Result<()> {
 
     // Store on disk: real I/O through the block codec.
     let dir = std::env::temp_dir().join(format!("bigfcm_e2e_{}", std::process::id()));
-    let store = BlockStore::on_disk(
+    let store = Arc::new(BlockStore::on_disk(
         dataset.name.clone(),
         &dataset.features,
         cfg.cluster.block_records,
         cfg.cluster.workers,
         dir.clone(),
-    )?;
+    )?);
     println!(
         "block store: {} blocks, {:.1} MiB on disk",
         store.num_blocks(),
@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- BigFCM (with fault injection to exercise re-execution) ---------
     let mut engine = Engine::new(
-        EngineOptions { workers: cfg.cluster.workers, fault_rate: 0.1, fault_seed: 42 },
+        EngineOptions { workers: cfg.cluster.workers, fault_rate: 0.1, fault_seed: 42, ..Default::default() },
         cfg.overhead.clone(),
     );
     let big = BigFcm::new(cfg.clone())

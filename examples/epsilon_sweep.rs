@@ -13,7 +13,7 @@ use bigfcm::bench::Scale;
 use bigfcm::config::Config;
 use bigfcm::fcm::NativeBackend;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let ctx = Ctx::new(Config::default(), Scale::quick(), Arc::new(NativeBackend));
     println!("sweeping epsilon on SUSY-like data (C=2, m=2)...\n");
     let series = fig2(&ctx)?;

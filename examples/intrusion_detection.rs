@@ -17,7 +17,7 @@ use bigfcm::data::normalize::Scaler;
 use bigfcm::fcm::assign_hard;
 use bigfcm::metrics::confusion_accuracy;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let cfg = Config::default();
 
     // KDD99-like: 50k records, 41 features, 23 classes with the original's

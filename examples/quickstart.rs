@@ -10,7 +10,7 @@ use bigfcm::data::builtin::iris;
 use bigfcm::fcm::assign_hard;
 use bigfcm::metrics::confusion_accuracy;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dataset = iris();
     println!("Iris: {} records x {} features", dataset.rows(), dataset.dims());
 

@@ -1,14 +1,20 @@
 //! `cargo bench --bench micro_hotpath` — micro-benchmarks of the per-chunk
-//! hot path (the §Perf working set): native vs PJRT chunk step, chunk-size
-//! sensitivity, and marshalling overhead. Results feed EXPERIMENTS.md §Perf.
+//! hot path (the §Perf working set): scalar vs tiled native chunk step
+//! (an honest same-run A/B), chunk-size sensitivity, PJRT marshalling
+//! overhead. Results feed EXPERIMENTS.md §Perf and are also emitted as
+//! machine-readable `BENCH_micro_hotpath.json` (label → best-of-N seconds,
+//! Mrec/s) so the perf trajectory is tracked across PRs.
 
 use std::path::Path;
 use std::time::Instant;
 
 use bigfcm::data::synth::susy_like;
-use bigfcm::fcm::native::fcm_partials_native;
+use bigfcm::fcm::native::{fcm_partials_native, fcm_partials_scalar};
 use bigfcm::fcm::ChunkBackend;
+use bigfcm::json;
 use bigfcm::runtime::PjrtRuntime;
+
+const N: usize = 65_536;
 
 fn bench<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
     // Warm-up then min-of-N (robust to scheduler noise).
@@ -23,45 +29,80 @@ fn bench<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
     best
 }
 
+/// (json key, best seconds, rows processed per pass).
+struct Row {
+    key: &'static str,
+    best_s: f64,
+    rows: usize,
+}
+
 fn main() {
-    let data = susy_like(65_536, 1);
+    let data = susy_like(N, 1);
     let v = data.features.slice_rows(0, 6);
     let w = vec![1.0f32; data.features.rows()];
+    let mut rows_out: Vec<Row> = Vec::new();
 
     println!("== micro_hotpath (SUSY-like 65 536 x 18, C=6, m=2) ==");
 
-    // Native chunk math at various slice sizes (cache behaviour).
+    // The A/B: scalar reference vs tiled kernel on the identical full pass.
+    let t_scalar = bench("scalar fcm_partials 65536 rows", 5, || {
+        std::hint::black_box(fcm_partials_scalar(&data.features, &v, &w, 2.0));
+    });
+    rows_out.push(Row { key: "scalar_fcm_65536", best_s: t_scalar, rows: N });
+
+    // Tiled chunk math at various slice sizes (cache behaviour).
     for rows in [4_096usize, 16_384, 65_536] {
         let x = data.features.slice_rows(0, rows);
         let ws = &w[..rows];
-        bench(&format!("native fcm_partials {rows} rows"), 5, || {
+        let t = bench(&format!("tiled fcm_partials {rows} rows"), 5, || {
             std::hint::black_box(fcm_partials_native(&x, &v, ws, 2.0));
         });
+        match rows {
+            4_096 => rows_out.push(Row { key: "tiled_fcm_4096", best_s: t, rows }),
+            16_384 => rows_out.push(Row { key: "tiled_fcm_16384", best_s: t, rows }),
+            _ => rows_out.push(Row { key: "tiled_fcm_65536", best_s: t, rows }),
+        }
     }
 
-    // Throughput summary for the full pass.
-    let t = bench("native fcm_partials 65536 rows (again)", 5, || {
-        std::hint::black_box(fcm_partials_native(&data.features, &v, &w, 2.0));
+    // Generic-m arm (powf path) at full size.
+    let t_m28 = bench("tiled fcm_partials 65536 rows (m=2.8)", 5, || {
+        std::hint::black_box(fcm_partials_native(&data.features, &v, &w, 2.8));
     });
-    let flops = 65_536.0 * 6.0 * (3.0 * 18.0 + 8.0); // dist + um + accum est.
+    rows_out.push(Row { key: "tiled_fcm_65536_m2.8", best_s: t_m28, rows: N });
+
+    // Throughput summary of the A/B.
+    let t_tiled = rows_out
+        .iter()
+        .find(|r| r.key == "tiled_fcm_65536")
+        .map(|r| r.best_s)
+        .unwrap();
+    let flops = N as f64 * 6.0 * (3.0 * 18.0 + 8.0); // dist + um + accum est.
     println!(
-        "native throughput ≈ {:.2} GFLOP/s ({:.1} Mrec/s)",
-        flops / t / 1e9,
-        65_536.0 / t / 1e6
+        "scalar throughput ≈ {:.2} GFLOP/s ({:.1} Mrec/s)",
+        flops / t_scalar / 1e9,
+        N as f64 / t_scalar / 1e6
     );
+    println!(
+        "tiled  throughput ≈ {:.2} GFLOP/s ({:.1} Mrec/s)",
+        flops / t_tiled / 1e9,
+        N as f64 / t_tiled / 1e6
+    );
+    println!("tiled vs scalar: {:.2}x", t_scalar / t_tiled);
 
     // PJRT path (when artifacts exist): end-to-end chunk execution incl.
     // marshalling, and the marshalling alone.
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         let rt = PjrtRuntime::open(&dir).expect("open runtime");
-        bench("pjrt fcm_partials 65536 rows (16 chunks)", 3, || {
+        let t = bench("pjrt fcm_partials 65536 rows (16 chunks)", 3, || {
             std::hint::black_box(rt.fcm_partials(&data.features, &v, &w, 2.0).unwrap());
         });
+        rows_out.push(Row { key: "pjrt_fcm_65536", best_s: t, rows: N });
         let x4096 = data.features.slice_rows(0, 4096);
-        bench("pjrt fcm_partials 4096 rows (1 chunk)", 5, || {
+        let t = bench("pjrt fcm_partials 4096 rows (1 chunk)", 5, || {
             std::hint::black_box(rt.fcm_partials(&x4096, &v, &w[..4096], 2.0).unwrap());
         });
+        rows_out.push(Row { key: "pjrt_fcm_4096", best_s: t, rows: 4096 });
         let stats = rt.stats().unwrap();
         println!(
             "pjrt device time: {:?} over {} chunks ({:.3} ms/chunk)",
@@ -71,5 +112,31 @@ fn main() {
         );
     } else {
         println!("(artifacts/ missing — run `make artifacts` for the PJRT rows)");
+    }
+
+    // Machine-readable emission for cross-PR tracking.
+    let results = json::Value::Object(
+        rows_out
+            .iter()
+            .map(|r| {
+                (
+                    r.key.to_string(),
+                    json::obj(vec![
+                        ("best_s", json::num(r.best_s)),
+                        ("mrec_per_s", json::num(r.rows as f64 / r.best_s / 1e6)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let doc = json::obj(vec![
+        ("bench", json::s("micro_hotpath")),
+        ("workload", json::s("susy_like 65536x18 C=6")),
+        ("results", results),
+    ]);
+    let path = "BENCH_micro_hotpath.json";
+    match std::fs::write(path, json::to_string(&doc)) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

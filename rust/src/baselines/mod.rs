@@ -106,10 +106,12 @@ impl MapReduceJob for IterationJob {
 }
 
 /// Run a Mahout-style baseline to convergence, one MR job per iteration.
+/// Iteration jobs stream the same store, so the engine's block cache keeps
+/// hot blocks decoded across iterations.
 pub fn run_baseline(
     algo: BaselineAlgo,
     cfg: &Config,
-    store: &BlockStore,
+    store: &Arc<BlockStore>,
     backend: Arc<dyn ChunkBackend>,
     engine: &mut Engine,
 ) -> Result<BaselineRun> {
@@ -175,13 +177,13 @@ mod tests {
     use crate::fcm::NativeBackend;
     use crate::mapreduce::EngineOptions;
 
-    fn setup(c: usize, eps: f64) -> (Config, BlockStore, Engine) {
+    fn setup(c: usize, eps: f64) -> (Config, Arc<BlockStore>, Engine) {
         let mut cfg = Config::default();
         cfg.fcm.clusters = c;
         cfg.fcm.epsilon = eps;
         cfg.fcm.max_iterations = 200;
         let data = blobs(1200, 3, c, 0.2, 11);
-        let store = BlockStore::in_memory("t", &data.features, 256, 4).unwrap();
+        let store = Arc::new(BlockStore::in_memory("t", &data.features, 256, 4).unwrap());
         let engine = Engine::new(EngineOptions::default(), cfg.overhead.clone());
         (cfg, store, engine)
     }

@@ -31,13 +31,13 @@ impl Ctx {
         Self::new(Config::default(), Scale::quick(), Arc::new(NativeBackend))
     }
 
-    fn store(&self, d: &Dataset) -> Result<BlockStore> {
-        BlockStore::in_memory(
+    fn store(&self, d: &Dataset) -> Result<Arc<BlockStore>> {
+        Ok(Arc::new(BlockStore::in_memory(
             d.name.clone(),
             &d.features,
             self.cfg.cluster.block_records.min((d.rows() / 4).max(1024)),
             self.cfg.cluster.workers,
-        )
+        )?))
     }
 
     fn engine(&self) -> Engine {
@@ -47,7 +47,7 @@ impl Ctx {
         )
     }
 
-    fn bigfcm(&self, store: &BlockStore, c: usize, m: f64, eps: f64) -> Result<BigFcmRun> {
+    fn bigfcm(&self, store: &Arc<BlockStore>, c: usize, m: f64, eps: f64) -> Result<BigFcmRun> {
         let mut engine = self.engine();
         BigFcm::new(self.cfg.clone())
             .backend(Arc::clone(&self.backend))
@@ -60,7 +60,7 @@ impl Ctx {
     fn baseline(
         &self,
         algo: BaselineAlgo,
-        store: &BlockStore,
+        store: &Arc<BlockStore>,
         c: usize,
         m: f64,
         eps: f64,

@@ -107,8 +107,10 @@ impl BigFcm {
         self
     }
 
-    /// Run over an existing block store with a fresh engine.
-    pub fn run_store(&self, store: &BlockStore) -> Result<BigFcmRun> {
+    /// Run over an existing block store with a fresh engine. The store is
+    /// taken behind `Arc` because the engine's streaming map pipeline reads
+    /// blocks from the worker pool.
+    pub fn run_store(&self, store: &Arc<BlockStore>) -> Result<BigFcmRun> {
         let mut engine = Engine::new(
             EngineOptions { workers: self.cfg.cluster.workers, ..Default::default() },
             self.cfg.overhead.clone(),
@@ -118,12 +120,12 @@ impl BigFcm {
 
     /// Run over in-memory records (shards them first).
     pub fn run_in_memory(&self, features: &Matrix) -> Result<BigFcmRun> {
-        let store = BlockStore::in_memory(
+        let store = Arc::new(BlockStore::in_memory(
             "in-memory",
             features,
             self.cfg.cluster.block_records,
             self.cfg.cluster.workers,
-        )?;
+        )?);
         self.run_store(&store)
     }
 
@@ -133,8 +135,9 @@ impl BigFcm {
     }
 
     /// Run the full pipeline on a caller-provided engine (so several runs
-    /// can share one SimClock, e.g. in the bench harness).
-    pub fn run_with_engine(&self, store: &BlockStore, engine: &mut Engine) -> Result<BigFcmRun> {
+    /// can share one SimClock and one warm block cache, e.g. in the bench
+    /// harness).
+    pub fn run_with_engine(&self, store: &Arc<BlockStore>, engine: &mut Engine) -> Result<BigFcmRun> {
         self.cfg.validate()?;
         let backend: Arc<dyn ChunkBackend> =
             self.backend.clone().unwrap_or_else(|| Arc::new(NativeBackend));

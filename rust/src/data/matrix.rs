@@ -135,6 +135,32 @@ impl Matrix {
     pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
         self.data.chunks_exact(self.cols.max(1)).take(self.rows)
     }
+
+    /// Transposed copy (cols × rows). The tiled kernels in `fcm::native`
+    /// stream a transposed (d × C) center panel so the innermost lane loop
+    /// reads one contiguous slice of center components per dimension.
+    pub fn transposed(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Iterator over fixed-height row tiles: `(first_row, rows_in_tile,
+    /// contiguous row-major slab)`. The last tile may be short; a 0-row
+    /// matrix yields no tiles.
+    pub fn iter_row_tiles(&self, tile: usize) -> impl Iterator<Item = (usize, usize, &[f32])> {
+        let tile = tile.max(1);
+        let n_tiles = (self.rows + tile - 1) / tile;
+        (0..n_tiles).map(move |t| {
+            let base = t * tile;
+            let len = tile.min(self.rows - base);
+            (base, len, &self.data[base * self.cols..(base + len) * self.cols])
+        })
+    }
 }
 
 /// Squared Euclidean distance between two equal-length slices.
@@ -199,5 +225,32 @@ mod tests {
         let m = Matrix::from_rows(&[vec![1.0], vec![2.0]]);
         let rows: Vec<&[f32]> = m.iter_rows().collect();
         assert_eq!(rows, vec![&[1.0f32][..], &[2.0f32][..]]);
+    }
+
+    #[test]
+    fn transposed_roundtrip() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let t = m.transposed();
+        assert_eq!((t.rows(), t.cols()), (3, 2));
+        assert_eq!(t.row(0), &[1.0, 4.0]);
+        assert_eq!(t.row(2), &[3.0, 6.0]);
+        assert_eq!(t.transposed(), m);
+    }
+
+    #[test]
+    fn row_tiles_cover_all_rows_with_short_tail() {
+        let m = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0], vec![3.0], vec![4.0]]);
+        let tiles: Vec<(usize, usize, Vec<f32>)> = m
+            .iter_row_tiles(2)
+            .map(|(base, len, slab)| (base, len, slab.to_vec()))
+            .collect();
+        assert_eq!(tiles.len(), 3);
+        assert_eq!(tiles[0], (0, 2, vec![0.0, 1.0]));
+        assert_eq!(tiles[1], (2, 2, vec![2.0, 3.0]));
+        assert_eq!(tiles[2], (4, 1, vec![4.0]));
+        // Tile height larger than the matrix: one tile with every row.
+        let all: Vec<_> = m.iter_row_tiles(100).collect();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].1, 5);
     }
 }

@@ -1,43 +1,54 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no thiserror): the build is fully
+//! offline with zero external dependencies.
 
+use std::fmt;
 use std::path::PathBuf;
 
+use crate::xla;
+
 /// All failure modes of the BigFCM system.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("i/o error at {path:?}: {source}")]
-    Io {
-        path: PathBuf,
-        #[source]
-        source: std::io::Error,
-    },
-
-    #[error("xla/pjrt error: {0}")]
+    Io { path: PathBuf, source: std::io::Error },
     Xla(String),
-
-    #[error("artifact registry: {0}")]
     Artifact(String),
-
-    #[error("json parse error at byte {offset}: {message}")]
     Json { offset: usize, message: String },
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
-
-    #[error("dataset error: {0}")]
     Dataset(String),
-
-    #[error("hdfs block store: {0}")]
     BlockStore(String),
-
-    #[error("mapreduce job failed: {0}")]
     Job(String),
-
-    #[error("clustering did not produce a result: {0}")]
     Clustering(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io { path, source } => write!(f, "i/o error at {path:?}: {source}"),
+            Error::Xla(m) => write!(f, "xla/pjrt error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact registry: {m}"),
+            Error::Json { offset, message } => {
+                write!(f, "json parse error at byte {offset}: {message}")
+            }
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Error::Dataset(m) => write!(f, "dataset error: {m}"),
+            Error::BlockStore(m) => write!(f, "hdfs block store: {m}"),
+            Error::Job(m) => write!(f, "mapreduce job failed: {m}"),
+            Error::Clustering(m) => write!(f, "clustering did not produce a result: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {
@@ -55,3 +66,23 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Job("map task 3 failed".into());
+        assert_eq!(e.to_string(), "mapreduce job failed: map task 3 failed");
+        let e = Error::Json { offset: 17, message: "expected `,`".into() };
+        assert!(e.to_string().contains("byte 17"));
+    }
+
+    #[test]
+    fn io_error_carries_path_and_source() {
+        let e = Error::io("/tmp/x", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(e.to_string().contains("/tmp/x"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

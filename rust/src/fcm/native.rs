@@ -4,6 +4,25 @@
 //!
 //! Used by: the driver job (tiny sample, not worth a PJRT round-trip),
 //! unit tests, and as the `Backend::Native` ablation arm.
+//!
+//! ## Kernel layout (EXPERIMENTS.md §Perf)
+//!
+//! The hot entry points (`fcm_partials_native`, `classic_partials_native`,
+//! `kmeans_partials_native`) run a **tiled distance pass**: records are
+//! processed in [`TILE_ROWS`]-row tiles against a transposed (d × C) center
+//! panel, so the innermost loop walks one contiguous f32 slice of center
+//! components per dimension — independent f32 lanes the autovectorizer maps
+//! straight onto SIMD registers. Distances accumulate in f32 lanes
+//! (squared-difference form — no ‖x‖²−2x·v+‖v‖² cancellation) and are
+//! promoted to f64 at the tile boundary, where the membership reduction
+//! runs exactly as the scalar reference. `powf` dominates the generic path,
+//! so the paper's default m=2 (p = 1, u^m = x⁻²) takes a
+//! transcendental-free fast path everywhere.
+//!
+//! The original scalar per-row loops are kept verbatim as
+//! `*_partials_scalar` — the correctness reference the tiled path is
+//! property-tested against (`rust/tests/prop_invariants.rs`) and the
+//! baseline arm of the `micro_hotpath` A/B.
 
 use crate::data::matrix::dist2;
 use crate::data::Matrix;
@@ -11,6 +30,12 @@ use crate::error::Result;
 use crate::fcm::{ChunkBackend, Partials};
 
 const DIST_EPS: f64 = 1e-12;
+
+/// Row-tile height of the tiled distance pass. 8 rows × C f32 lanes keeps
+/// the tile's distance block plus the center panel row in L1 across the
+/// whole experiment matrix (C ≤ 50, d ≤ 41) while giving the vectorizer
+/// long independent lanes.
+pub const TILE_ROWS: usize = 8;
 
 /// The native backend is stateless.
 #[derive(Clone, Copy, Debug, Default)]
@@ -40,19 +65,222 @@ impl ChunkBackend for NativeBackend {
     }
 }
 
-/// Fast-FCM partials (Kolen–Hutcheson): computes u^m directly from the
-/// distance vector of each record — O(C·d) per record, no membership matrix.
+/// f32-lane squared-distance pass over one row tile.
 ///
-/// Perf (EXPERIMENTS.md §Perf): `powf` dominates the generic path, so the
-/// paper's default m=2 (p = 1, u^m = x⁻²) takes a transcendental-free fast
-/// path — ~3.6× throughput on the 65k-record micro-bench.
+/// `rows` is a `t × d` row-major slab, `panel` the (d × C) transposed center
+/// matrix; on return `out[r·C + i] = Σ_j (rows[r][j] − v[i][j])²`. Each
+/// row's lane accumulates in the same j-order regardless of its position in
+/// the tile, so per-record distances are bit-identical under any row split —
+/// the combiner-associativity property the engine relies on.
+fn tile_dist2(rows: &[f32], t: usize, d: usize, panel: &Matrix, out: &mut [f32]) {
+    let c = panel.cols();
+    debug_assert_eq!(panel.rows(), d);
+    debug_assert_eq!(rows.len(), t * d);
+    debug_assert_eq!(out.len(), t * c);
+    for acc in out.iter_mut() {
+        *acc = 0.0;
+    }
+    for j in 0..d {
+        let pj = panel.row(j); // component j of every center, contiguous
+        for r in 0..t {
+            let xrj = rows[r * d + j];
+            let lane = &mut out[r * c..(r + 1) * c];
+            for (acc, &vj) in lane.iter_mut().zip(pj) {
+                let diff = xrj - vj;
+                *acc += diff * diff;
+            }
+        }
+    }
+}
+
+/// Fast-FCM partials (Kolen–Hutcheson), tiled: computes u^m directly from
+/// the distance vector of each record — O(C·d) per record, no membership
+/// matrix. Distances come from the f32-lane tile pass; the membership
+/// reduction is f64 per record, matching [`fcm_partials_scalar`] to f32
+/// rounding (property-tested in `prop_invariants.rs`).
 pub fn fcm_partials_native(x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Partials {
     let (c, d) = (v.rows(), v.cols());
     debug_assert_eq!(x.rows(), w.len());
     let mut out = Partials::zeros(c, d);
+    if c == 0 {
+        return out;
+    }
     let p = 1.0 / (m - 1.0);
     let m2 = m == 2.0; // p = 1, (num·den)^-m = 1/(num·den)²
-    // Scratch reused across records to keep the hot loop allocation-free.
+    let panel = v.transposed();
+    // Scratch reused across tiles to keep the hot loop allocation-free.
+    let mut d2t = vec![0.0f32; TILE_ROWS * c];
+    let mut num = vec![0.0f64; c];
+    let mut d2v = vec![0.0f64; c];
+    for (base, t, rows) in x.iter_row_tiles(TILE_ROWS) {
+        tile_dist2(rows, t, d, &panel, &mut d2t[..t * c]);
+        for r in 0..t {
+            let wk = w[base + r] as f64;
+            if wk == 0.0 {
+                continue; // padding contract
+            }
+            // f64 reduction at the tile boundary. Memberships depend only on
+            // distance ratios; normalising by the row minimum before powering
+            // avoids under/overflow at small m (matches the Pallas kernel,
+            // fcm_pallas._um_fast).
+            let lane = &d2t[r * c..(r + 1) * c];
+            let mut dmin = f64::INFINITY;
+            for i in 0..c {
+                let d2 = (lane[i] as f64).max(DIST_EPS);
+                d2v[i] = d2;
+                dmin = dmin.min(d2);
+            }
+            let mut den = 0.0f64;
+            if m2 {
+                for i in 0..c {
+                    let n = d2v[i] / dmin;
+                    num[i] = n;
+                    den += 1.0 / n;
+                }
+            } else {
+                for i in 0..c {
+                    let n = (d2v[i] / dmin).powf(p);
+                    num[i] = n;
+                    den += 1.0 / n;
+                }
+            }
+            let row = &rows[r * d..(r + 1) * d];
+            for i in 0..c {
+                let um = if m2 {
+                    let nd = num[i] * den;
+                    wk / (nd * nd)
+                } else {
+                    (num[i] * den).powf(-m) * wk
+                };
+                out.w_acc[i] += um;
+                out.objective += um * d2v[i];
+                let umf = um as f32;
+                let vrow = out.v_num.row_mut(i);
+                for (val, &xj) in vrow.iter_mut().zip(row) {
+                    *val += umf * xj;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Classic-FCM partials, tiled: the explicit O(C²) ratio sum per record —
+/// the "basic FCM" complexity the paper contrasts against (and the compute
+/// model of the Mahout FKM baseline; the pair loop is kept so that model
+/// stays honest). Powered distances are hoisted out of the pair loop:
+/// `powf` cost is C per record instead of C².
+pub fn classic_partials_native(x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Partials {
+    let (c, d) = (v.rows(), v.cols());
+    let mut out = Partials::zeros(c, d);
+    if c == 0 {
+        return out;
+    }
+    let p = 1.0 / (m - 1.0);
+    let m2 = m == 2.0;
+    let panel = v.transposed();
+    let mut d2t = vec![0.0f32; TILE_ROWS * c];
+    let mut d2v = vec![0.0f64; c];
+    let mut dp = vec![0.0f64; c];
+    for (base, t, rows) in x.iter_row_tiles(TILE_ROWS) {
+        tile_dist2(rows, t, d, &panel, &mut d2t[..t * c]);
+        for r in 0..t {
+            let wk = w[base + r] as f64;
+            if wk == 0.0 {
+                continue;
+            }
+            let lane = &d2t[r * c..(r + 1) * c];
+            let mut dmin = f64::INFINITY;
+            for i in 0..c {
+                let d2 = (lane[i] as f64).max(DIST_EPS);
+                d2v[i] = d2;
+                dmin = dmin.min(d2);
+            }
+            // powf hoist: dp[i] = (d_i/dmin)^p once per (record, cluster);
+            // the dmin normalisation keeps dp ≥ ~1 so ratios cannot
+            // overflow, and it cancels in dp[i]/dp[j] below.
+            if m2 {
+                for i in 0..c {
+                    dp[i] = d2v[i] / dmin;
+                }
+            } else {
+                for i in 0..c {
+                    dp[i] = (d2v[i] / dmin).powf(p);
+                }
+            }
+            let row = &rows[r * d..(r + 1) * d];
+            for i in 0..c {
+                // u_i = 1 / Σ_j (d_i/d_j)^p — the textbook double loop,
+                // over precomputed powers.
+                let mut s = 0.0f64;
+                for j in 0..c {
+                    s += dp[i] / dp[j];
+                }
+                let u = 1.0 / s;
+                let um = if m2 { u * u * wk } else { u.powf(m) * wk };
+                out.w_acc[i] += um;
+                out.objective += um * d2v[i];
+                let vrow = out.v_num.row_mut(i);
+                for (jj, val) in vrow.iter_mut().enumerate() {
+                    *val += (um * row[jj] as f64) as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Hard K-Means partials, tiled: per-cluster weighted sums/counts + SSE.
+pub fn kmeans_partials_native(x: &Matrix, v: &Matrix, w: &[f32]) -> Partials {
+    let (c, d) = (v.rows(), v.cols());
+    let mut out = Partials::zeros(c, d);
+    if c == 0 {
+        return out;
+    }
+    let panel = v.transposed();
+    let mut d2t = vec![0.0f32; TILE_ROWS * c];
+    for (base, t, rows) in x.iter_row_tiles(TILE_ROWS) {
+        tile_dist2(rows, t, d, &panel, &mut d2t[..t * c]);
+        for r in 0..t {
+            let wk = w[base + r] as f64;
+            if wk == 0.0 {
+                continue;
+            }
+            let lane = &d2t[r * c..(r + 1) * c];
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for (i, &d2) in lane.iter().enumerate() {
+                let dd = (d2 as f64).max(DIST_EPS);
+                if dd < best_d {
+                    best_d = dd;
+                    best = i;
+                }
+            }
+            out.w_acc[best] += wk;
+            out.objective += wk * best_d;
+            let row = &rows[r * d..(r + 1) * d];
+            let vrow = out.v_num.row_mut(best);
+            for (j, val) in vrow.iter_mut().enumerate() {
+                *val += (wk * row[j] as f64) as f32;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference kernels
+// ---------------------------------------------------------------------------
+
+/// Scalar fast-FCM reference: per-row f64 distances, no tiling. This is the
+/// pre-optimization hot path, kept verbatim as the oracle the tiled kernel
+/// is property-tested against and as the `micro_hotpath` A/B baseline.
+pub fn fcm_partials_scalar(x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Partials {
+    let (c, d) = (v.rows(), v.cols());
+    debug_assert_eq!(x.rows(), w.len());
+    let mut out = Partials::zeros(c, d);
+    let p = 1.0 / (m - 1.0);
+    let m2 = m == 2.0;
     let mut num = vec![0.0f64; c];
     let mut d2v = vec![0.0f64; c];
     for (k, row) in x.iter_rows().enumerate() {
@@ -60,9 +288,6 @@ pub fn fcm_partials_native(x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Partial
         if wk == 0.0 {
             continue; // padding contract
         }
-        // Memberships depend only on distance ratios; normalising by the row
-        // minimum before powering avoids under/overflow at small m (matches
-        // the Pallas kernel, fcm_pallas._um_fast).
         let mut dmin = f64::INFINITY;
         for i in 0..c {
             let d2 = dist2(row, v.row(i)).max(DIST_EPS);
@@ -102,10 +327,9 @@ pub fn fcm_partials_native(x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Partial
     out
 }
 
-/// Classic-FCM partials: explicit O(C²) ratio sums per record — the
-/// "basic FCM" complexity the paper contrasts against (and the compute
-/// model of the Mahout FKM baseline).
-pub fn classic_partials_native(x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Partials {
+/// Scalar classic-FCM reference: the textbook O(C²) double loop with a
+/// `powf` per (i, j) pair — exactly the pre-hoist formulation.
+pub fn classic_partials_scalar(x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Partials {
     let (c, d) = (v.rows(), v.cols());
     let mut out = Partials::zeros(c, d);
     let p = 1.0 / (m - 1.0);
@@ -137,8 +361,8 @@ pub fn classic_partials_native(x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Par
     out
 }
 
-/// Hard K-Means partials: per-cluster weighted sums/counts + SSE.
-pub fn kmeans_partials_native(x: &Matrix, v: &Matrix, w: &[f32]) -> Partials {
+/// Scalar hard K-Means reference.
+pub fn kmeans_partials_scalar(x: &Matrix, v: &Matrix, w: &[f32]) -> Partials {
     let (c, d) = (v.rows(), v.cols());
     let mut out = Partials::zeros(c, d);
     for (k, row) in x.iter_rows().enumerate() {
@@ -165,10 +389,13 @@ pub fn kmeans_partials_native(x: &Matrix, v: &Matrix, w: &[f32]) -> Partials {
     out
 }
 
-/// Full membership matrix (N, C) — used by quality metrics, not the hot path.
+/// Full membership matrix (N, C) — used by quality metrics, not the hot
+/// path. Still worth the m=2 fast path: silhouette/confusion passes over
+/// large N would otherwise pay a `powf` per (record, cluster).
 pub fn memberships(x: &Matrix, v: &Matrix, m: f64) -> Matrix {
     let (n, c) = (x.rows(), v.rows());
     let p = 1.0 / (m - 1.0);
+    let m2 = m == 2.0; // p = 1: ratios need no powering
     let mut u = Matrix::zeros(n, c);
     let mut num = vec![0.0f64; c];
     let mut d2v = vec![0.0f64; c];
@@ -181,10 +408,18 @@ pub fn memberships(x: &Matrix, v: &Matrix, m: f64) -> Matrix {
             dmin = dmin.min(d2);
         }
         let mut den = 0.0f64;
-        for i in 0..c {
-            let nm = (d2v[i] / dmin).powf(p);
-            num[i] = nm;
-            den += 1.0 / nm;
+        if m2 {
+            for i in 0..c {
+                let nm = d2v[i] / dmin;
+                num[i] = nm;
+                den += 1.0 / nm;
+            }
+        } else {
+            for i in 0..c {
+                let nm = (d2v[i] / dmin).powf(p);
+                num[i] = nm;
+                den += 1.0 / nm;
+            }
         }
         for i in 0..c {
             u.set(k, i, (1.0 / (num[i] * den)) as f32);
@@ -234,12 +469,60 @@ mod tests {
     }
 
     #[test]
+    fn tiled_matches_scalar_reference() {
+        // Awkward shapes: tail tiles (n % TILE_ROWS ≠ 0), d=1, C=1.
+        for (n, d, c, seed) in [(67, 5, 4, 11), (8, 1, 3, 12), (13, 7, 1, 13), (256, 18, 6, 14)] {
+            let (x, v, w) = rand_case(n, d, c, seed);
+            for m in [1.2, 2.0, 2.8] {
+                let a = fcm_partials_native(&x, &v, &w, m);
+                let b = fcm_partials_scalar(&x, &v, &w, m);
+                for (p, q) in a.v_num.as_slice().iter().zip(b.v_num.as_slice()) {
+                    assert!((p - q).abs() <= 1e-3 + 1e-4 * q.abs(), "{p} vs {q} m={m} n={n}");
+                }
+                for (p, q) in a.w_acc.iter().zip(&b.w_acc) {
+                    assert!((p - q).abs() <= 1e-6 + 1e-4 * q.abs(), "{p} vs {q} m={m} n={n}");
+                }
+                let rel = (a.objective - b.objective).abs() / b.objective.max(1e-9);
+                assert!(rel < 1e-4, "objective {rel} m={m} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn classic_hoist_matches_scalar_reference() {
+        let (x, v, w) = rand_case(100, 4, 5, 21);
+        for m in [1.2, 2.0, 2.8] {
+            let a = classic_partials_native(&x, &v, &w, m);
+            let b = classic_partials_scalar(&x, &v, &w, m);
+            for (p, q) in a.w_acc.iter().zip(&b.w_acc) {
+                assert!((p - q).abs() <= 1e-6 + 1e-4 * q.abs(), "{p} vs {q} at m={m}");
+            }
+            let rel = (a.objective - b.objective).abs() / b.objective.max(1e-9);
+            assert!(rel < 1e-4, "objective diverged: {rel} at m={m}");
+        }
+    }
+
+    #[test]
     fn memberships_rows_sum_to_one() {
         let (x, v, _) = rand_case(100, 4, 3, 2);
-        let u = memberships(&x, &v, 2.0);
-        for i in 0..u.rows() {
-            let s: f32 = u.row(i).iter().sum();
-            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+        for m in [1.5, 2.0, 3.0] {
+            let u = memberships(&x, &v, m);
+            for i in 0..u.rows() {
+                let s: f32 = u.row(i).iter().sum();
+                assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s} at m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn memberships_fast_path_matches_generic_at_m2() {
+        // The m=2 shortcut must be the identical distribution, only cheaper.
+        // 2.0 + tiny epsilon forces the generic powf arm for comparison.
+        let (x, v, _) = rand_case(80, 3, 4, 6);
+        let fast = memberships(&x, &v, 2.0);
+        let generic = memberships(&x, &v, 2.0 + 1e-12);
+        for (a, b) in fast.as_slice().iter().zip(generic.as_slice()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
     }
 
@@ -278,12 +561,59 @@ mod tests {
     }
 
     #[test]
+    fn partials_associativity_unaligned_split() {
+        // Split off the tile grid: per-record tile_dist2 lanes must not
+        // depend on a row's position within its tile.
+        let (x, v, w) = rand_case(61, 5, 4, 9);
+        let full = fcm_partials_native(&x, &v, &w, 2.0);
+        let mut merged = fcm_partials_native(&x.slice_rows(0, 29), &v, &w[..29], 2.0);
+        merged.merge(&fcm_partials_native(&x.slice_rows(29, 61), &v, &w[29..], 2.0));
+        for (a, b) in merged.v_num.as_slice().iter().zip(full.v_num.as_slice()) {
+            assert!((a - b).abs() < 1e-3);
+        }
+        for (a, b) in merged.w_acc.iter().zip(&full.w_acc) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
     fn kmeans_counts_sum_to_weight_mass() {
         let (x, v, w) = rand_case(256, 6, 5, 5);
         let p = kmeans_partials_native(&x, &v, &w);
         let total_w: f64 = w.iter().map(|&x| x as f64).sum();
         let total_c: f64 = p.w_acc.iter().sum();
         assert!((total_w - total_c).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kmeans_tiled_matches_scalar_on_separated_data() {
+        // Hand-built well-separated clusters: the argmin margin dwarfs f32
+        // rounding (a tiled/scalar flip would need a record equidistant to
+        // two centers within f32 eps), so per-cluster sums must agree.
+        let (c, d, n) = (4usize, 4usize, 500usize);
+        let mut rng = Pcg::new(31);
+        let mut v = Matrix::zeros(c, d);
+        for i in 0..c {
+            v.set(i, i % d, 8.0 * (i as f32 + 1.0));
+        }
+        let mut x = Matrix::zeros(n, d);
+        for k in 0..n {
+            let home = k % c;
+            for j in 0..d {
+                x.set(k, j, v.get(home, j) + (rng.normal() * 0.3) as f32);
+            }
+        }
+        let w: Vec<f32> = (0..n).map(|i| 0.5 + (i % 5) as f32 * 0.3).collect();
+        let a = kmeans_partials_native(&x, &v, &w);
+        let b = kmeans_partials_scalar(&x, &v, &w);
+        for (p, q) in a.w_acc.iter().zip(&b.w_acc) {
+            assert!((p - q).abs() < 1e-9, "{p} vs {q}");
+        }
+        for (p, q) in a.v_num.as_slice().iter().zip(b.v_num.as_slice()) {
+            assert!((p - q).abs() <= 1e-3 + 1e-4 * q.abs(), "{p} vs {q}");
+        }
+        let rel = (a.objective - b.objective).abs() / b.objective.max(1e-9);
+        assert!(rel < 1e-4, "objective diverged: {rel}");
     }
 
     #[test]

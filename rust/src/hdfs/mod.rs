@@ -13,9 +13,15 @@ mod codec;
 pub use codec::{read_block_file, write_block_file};
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::data::Matrix;
 use crate::error::{Error, Result};
+
+/// Monotonic store id source — every [`BlockStore`] gets a process-unique
+/// id so block caches can key on `(store, block)` without aliasing between
+/// stores.
+static NEXT_STORE_UID: AtomicU64 = AtomicU64::new(1);
 
 /// Metadata of one stored block.
 #[derive(Clone, Debug)]
@@ -34,7 +40,12 @@ enum Storage {
 }
 
 /// A sharded, immutable dataset: the namenode view plus block access.
+///
+/// Immutable after construction and internally unshared, so it is `Sync`
+/// and cheap to hand to the map-task pool behind an `Arc` — the engine's
+/// streaming pipeline reads blocks from worker threads.
 pub struct BlockStore {
+    uid: u64,
     name: String,
     cols: usize,
     total_rows: usize,
@@ -52,6 +63,7 @@ impl BlockStore {
     ) -> Result<Self> {
         let (metas, mats) = shard(features, block_records, workers)?;
         Ok(Self {
+            uid: NEXT_STORE_UID.fetch_add(1, Ordering::Relaxed),
             name: name.into(),
             cols: features.cols(),
             total_rows: features.rows(),
@@ -76,12 +88,18 @@ impl BlockStore {
             meta.bytes = bytes;
         }
         Ok(Self {
+            uid: NEXT_STORE_UID.fetch_add(1, Ordering::Relaxed),
             name: name.into(),
             cols: features.cols(),
             total_rows: features.rows(),
             blocks: metas,
             storage: Storage::Disk { dir },
         })
+    }
+
+    /// Process-unique store id (block-cache key component).
+    pub fn uid(&self) -> u64 {
+        self.uid
     }
 
     pub fn name(&self) -> &str {
@@ -255,6 +273,14 @@ mod tests {
         assert!(BlockStore::in_memory("t", &empty, 10, 1).is_err());
         let d = blobs(10, 2, 2, 0.3, 7);
         assert!(BlockStore::in_memory("t", &d.features, 0, 1).is_err());
+    }
+
+    #[test]
+    fn store_uids_are_unique() {
+        let d = blobs(20, 2, 2, 0.3, 9);
+        let a = BlockStore::in_memory("a", &d.features, 10, 1).unwrap();
+        let b = BlockStore::in_memory("b", &d.features, 10, 1).unwrap();
+        assert_ne!(a.uid(), b.uid());
     }
 
     #[test]

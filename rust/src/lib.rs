@@ -49,5 +49,6 @@ pub mod runtime;
 pub mod sampling;
 pub mod telemetry;
 pub mod threadpool;
+pub mod xla;
 
 pub use error::{Error, Result};

@@ -12,8 +12,6 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context};
-
 use bigfcm::baselines::{run_baseline, BaselineAlgo};
 use bigfcm::bench::tables::{run_by_id, Ctx};
 use bigfcm::bench::Scale;
@@ -27,6 +25,17 @@ use bigfcm::metrics::confusion_accuracy;
 use bigfcm::runtime::ResolvedBackend;
 use bigfcm::telemetry::human_duration;
 
+/// CLI result: any error renders via Display at top level (offline build —
+/// no anyhow, so context is folded into the message at the wrap site).
+type CliResult<T> = Result<T, Box<dyn std::error::Error>>;
+
+/// Early-return with a formatted error message.
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err(format!($($arg)*).into())
+    };
+}
+
 /// Minimal flag parser: `--key value` pairs + positional subcommand.
 struct Args {
     sub: String,
@@ -34,7 +43,7 @@ struct Args {
 }
 
 impl Args {
-    fn parse() -> anyhow::Result<Args> {
+    fn parse() -> CliResult<Args> {
         let mut it = std::env::args().skip(1).peekable();
         let sub = it.next().unwrap_or_else(|| "help".to_string());
         let mut flags = Vec::new();
@@ -70,19 +79,19 @@ impl Args {
     }
 }
 
-fn load_config(args: &Args) -> anyhow::Result<Config> {
+fn load_config(args: &Args) -> CliResult<Config> {
     let mut cfg = match args.get("config") {
         Some(path) => Config::from_file(std::path::Path::new(path))
-            .with_context(|| format!("loading config {path}"))?,
+            .map_err(|e| format!("loading config {path}: {e}"))?,
         None => Config::default(),
     };
     for (k, v) in &args.flags {
         if k == "set" {
-            cfg.set_kv(v).with_context(|| format!("applying --set {v}"))?;
+            cfg.set_kv(v).map_err(|e| format!("applying --set {v}: {e}"))?;
         }
     }
     if let Some(b) = args.get("backend") {
-        cfg.set(&format!("runtime.backend"), b)?;
+        cfg.set("runtime.backend", b)?;
     }
     if let Some(a) = args.get("artifacts") {
         cfg.set("paths.artifacts_dir", a)?;
@@ -94,11 +103,11 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
     Ok(cfg)
 }
 
-fn backend_of(cfg: &Config) -> anyhow::Result<Arc<dyn ChunkBackend>> {
+fn backend_of(cfg: &Config) -> CliResult<Arc<dyn ChunkBackend>> {
     Ok(Arc::new(ResolvedBackend::from_config(cfg)?))
 }
 
-fn cmd_run(args: &Args) -> anyhow::Result<()> {
+fn cmd_run(args: &Args) -> CliResult<()> {
     let cfg = load_config(args)?;
     let name = args.get_or("dataset", "susy");
     let n: usize = args.get_or("records", "50000").parse()?;
@@ -106,7 +115,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let m: f64 = args.get_or("fuzzifier", "2.0").parse()?;
     let eps: f64 = args.get_or("epsilon", &cfg.fcm.epsilon.to_string()).parse()?;
     let dataset = builtin::by_name(&name, n, cfg.seed)
-        .with_context(|| format!("unknown dataset `{name}`"))?;
+        .ok_or_else(|| format!("unknown dataset `{name}`"))?;
     let backend = backend_of(&cfg)?;
     println!(
         "dataset={} records={} dims={} C={c} m={m} eps={eps:.0e} backend={}",
@@ -116,12 +125,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         backend.name()
     );
 
-    let store = BlockStore::in_memory(
+    let store = Arc::new(BlockStore::in_memory(
         dataset.name.clone(),
         &dataset.features,
         cfg.cluster.block_records,
         cfg.cluster.workers,
-    )?;
+    )?);
     let run = BigFcm::new(cfg.clone())
         .backend(Arc::clone(&backend))
         .clusters(c)
@@ -163,7 +172,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_baseline(args: &Args) -> anyhow::Result<()> {
+fn cmd_baseline(args: &Args) -> CliResult<()> {
     let cfg = load_config(args)?;
     let name = args.get_or("dataset", "susy");
     let n: usize = args.get_or("records", "50000").parse()?;
@@ -177,15 +186,15 @@ fn cmd_baseline(args: &Args) -> anyhow::Result<()> {
     cfg.fcm.fuzzifier = args.get_or("fuzzifier", "2.0").parse()?;
     cfg.fcm.epsilon = args.get_or("epsilon", &cfg.fcm.epsilon.to_string()).parse()?;
     cfg.fcm.max_iterations = args.get_or("max-iterations", "100").parse()?;
-    let dataset =
-        builtin::by_name(&name, n, cfg.seed).with_context(|| format!("unknown dataset `{name}`"))?;
+    let dataset = builtin::by_name(&name, n, cfg.seed)
+        .ok_or_else(|| format!("unknown dataset `{name}`"))?;
     let backend = backend_of(&cfg)?;
-    let store = BlockStore::in_memory(
+    let store = Arc::new(BlockStore::in_memory(
         dataset.name.clone(),
         &dataset.features,
         cfg.cluster.block_records,
         cfg.cluster.workers,
-    )?;
+    )?);
     let mut engine = Engine::new(
         EngineOptions { workers: cfg.cluster.workers, ..Default::default() },
         cfg.overhead.clone(),
@@ -203,7 +212,7 @@ fn cmd_baseline(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+fn cmd_bench(args: &Args) -> CliResult<()> {
     let cfg = load_config(args)?;
     let exp = args.get_or("exp", "all");
     let scale = if args.has("full") { Scale::full() } else { Scale::quick() };
@@ -215,20 +224,20 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+fn cmd_gen(args: &Args) -> CliResult<()> {
     let cfg = load_config(args)?;
     let name = args.get_or("dataset", "susy");
     let n: usize = args.get_or("records", "100000").parse()?;
     let out = args.get_or("out", &format!("{name}.csv"));
-    let dataset =
-        builtin::by_name(&name, n, cfg.seed).with_context(|| format!("unknown dataset `{name}`"))?;
+    let dataset = builtin::by_name(&name, n, cfg.seed)
+        .ok_or_else(|| format!("unknown dataset `{name}`"))?;
     let f = std::fs::File::create(&out)?;
     csv::write_csv(&dataset, std::io::BufWriter::new(f))?;
     println!("wrote {} records x {} features to {out}", dataset.rows(), dataset.dims());
     Ok(())
 }
 
-fn cmd_info(args: &Args) -> anyhow::Result<()> {
+fn cmd_info(args: &Args) -> CliResult<()> {
     let cfg = load_config(args)?;
     println!("bigfcm {} — BigFCM on a MapReduce substrate", env!("CARGO_PKG_VERSION"));
     println!("config: workers={} chunk={} block_records={}",
@@ -251,7 +260,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> CliResult<()> {
     let args = Args::parse()?;
     match args.sub.as_str() {
         "run" => cmd_run(&args),

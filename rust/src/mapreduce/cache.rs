@@ -1,12 +1,24 @@
-//! Distributed cache file — Hadoop's mechanism for shipping small read-only
-//! data (the paper stores V_init / V_winit and the `Flag` there) to every
-//! task. Modelled as a concurrent typed KV store; writes happen in the
-//! driver before job submission, tasks only read.
+//! Task-visible caches.
+//!
+//! * [`DistributedCache`] — Hadoop's mechanism for shipping small read-only
+//!   data (the paper stores V_init / V_winit and the `Flag` there) to every
+//!   task. Modelled as a concurrent typed KV store; writes happen in the
+//!   driver before job submission, tasks only read.
+//! * [`BlockCache`] — an LRU over decoded HDFS blocks, shared by all map
+//!   slots of an engine. The streaming pipeline reads blocks *inside* the
+//!   worker closure; this cache is what makes repeated iterations over the
+//!   same store hit warm blocks instead of re-decoding — the paper's
+//!   "efficient caching design". It also meters residency: how many decoded
+//!   blocks are alive right now (cache + in-flight) and the high-water
+//!   mark, which the engine tests pin to `workers + capacity`.
 
-use std::collections::HashMap;
-use std::sync::RwLock;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::data::Matrix;
+use crate::error::Result;
+use crate::hdfs::BlockStore;
 
 /// A cached value.
 #[derive(Clone, Debug)]
@@ -96,6 +108,171 @@ impl DistributedCache {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Block cache (LRU over decoded HDFS blocks)
+// ---------------------------------------------------------------------------
+
+/// Live-block gauge shared between the cache and every outstanding
+/// [`CachedBlock`]: `resident` counts decoded blocks currently alive
+/// anywhere (cache entries + blocks held by in-flight map tasks), `peak`
+/// its high-water mark.
+#[derive(Default)]
+struct Residency {
+    resident: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+/// One decoded block. Dropping the last `Arc<CachedBlock>` releases the
+/// block's memory and decrements the residency gauge — the mechanism the
+/// streaming-bound test (`engine::tests`) observes.
+pub struct CachedBlock {
+    data: Matrix,
+    residency: Arc<Residency>,
+}
+
+impl CachedBlock {
+    fn new(data: Matrix, residency: Arc<Residency>) -> Self {
+        let now = residency.resident.fetch_add(1, Ordering::SeqCst) + 1;
+        residency.peak.fetch_max(now, Ordering::SeqCst);
+        Self { data, residency }
+    }
+
+    /// The block's records.
+    pub fn data(&self) -> &Matrix {
+        &self.data
+    }
+}
+
+impl Drop for CachedBlock {
+    fn drop(&mut self) {
+        self.residency.resident.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Keys are `(store uid, block id)` so one cache can serve several stores
+/// without aliasing.
+type BlockKey = (u64, usize);
+
+struct LruState {
+    entries: HashMap<BlockKey, Arc<CachedBlock>>,
+    /// Access order, least-recent at the front.
+    order: VecDeque<BlockKey>,
+}
+
+/// Shared LRU cache of decoded blocks with hit/miss and residency metering.
+/// `capacity` is in blocks; 0 disables caching (every read is a pass-through
+/// miss, nothing is retained).
+pub struct BlockCache {
+    capacity: usize,
+    state: Mutex<LruState>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    residency: Arc<Residency>,
+}
+
+impl BlockCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            state: Mutex::new(LruState { entries: HashMap::new(), order: VecDeque::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            residency: Arc::new(Residency::default()),
+        }
+    }
+
+    /// Fetch a block through the cache: warm hit returns the shared decoded
+    /// block; a miss decodes from the store (outside the lock, so workers
+    /// fetching different blocks decode in parallel) and inserts it,
+    /// evicting the least-recently-used entry beyond `capacity`.
+    ///
+    /// A concurrent duplicate miss of the same block decodes twice and the
+    /// later insert is dropped — benign, and still within the
+    /// `workers + capacity` residency bound because the duplicate is held
+    /// by exactly one in-flight task.
+    pub fn get_or_read(&self, store: &BlockStore, id: usize) -> Result<Arc<CachedBlock>> {
+        Ok(self.get_or_read_traced(store, id)?.0)
+    }
+
+    /// [`Self::get_or_read`] that also reports whether the block was served
+    /// warm (`true` = cache hit: no store I/O happened, so the engine
+    /// charges no modelled HDFS read for it).
+    pub fn get_or_read_traced(
+        &self,
+        store: &BlockStore,
+        id: usize,
+    ) -> Result<(Arc<CachedBlock>, bool)> {
+        let key: BlockKey = (store.uid(), id);
+        if self.capacity > 0 {
+            let mut st = self.state.lock().expect("block cache poisoned");
+            if let Some(hit) = st.entries.get(&key).cloned() {
+                if let Some(pos) = st.order.iter().position(|k| *k == key) {
+                    st.order.remove(pos);
+                    st.order.push_back(key);
+                }
+                drop(st);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((hit, true));
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let data = store.read_block(id)?;
+        let block = Arc::new(CachedBlock::new(data, Arc::clone(&self.residency)));
+        if self.capacity > 0 {
+            let mut st = self.state.lock().expect("block cache poisoned");
+            if !st.entries.contains_key(&key) {
+                st.entries.insert(key, Arc::clone(&block));
+                st.order.push_back(key);
+                while st.order.len() > self.capacity {
+                    if let Some(evicted) = st.order.pop_front() {
+                        st.entries.remove(&evicted);
+                    }
+                }
+            }
+        }
+        Ok((block, false))
+    }
+
+    /// Capacity in blocks (0 = caching disabled).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Blocks currently retained by the cache itself.
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("block cache poisoned").entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Decoded blocks alive right now (cache entries + in-flight tasks).
+    pub fn resident(&self) -> usize {
+        self.residency.resident.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of [`Self::resident`] since construction.
+    pub fn peak_resident(&self) -> usize {
+        self.residency.peak.load(Ordering::SeqCst)
+    }
+
+    /// Drop every retained block (in-flight holders keep theirs alive).
+    pub fn clear(&self) {
+        let mut st = self.state.lock().expect("block cache poisoned");
+        st.entries.clear();
+        st.order.clear();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,6 +297,76 @@ mod tests {
         assert!(c.get_matrix("x").is_none());
         assert!(c.get_scalar("x").is_none());
         assert!(c.get_flag("missing").is_none());
+    }
+
+    fn block_store(n: usize, block: usize) -> BlockStore {
+        let d = crate::data::synth::blobs(n, 3, 2, 0.4, 7);
+        BlockStore::in_memory("t", &d.features, block, 2).unwrap()
+    }
+
+    #[test]
+    fn block_cache_hits_after_first_read() {
+        let s = block_store(400, 100); // 4 blocks
+        let c = BlockCache::new(8);
+        let a = c.get_or_read(&s, 2).unwrap();
+        let b = c.get_or_read(&s, 2).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "warm hit must return the shared block");
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+        assert_eq!(c.len(), 1);
+        assert_eq!(a.data().rows(), 100);
+    }
+
+    #[test]
+    fn block_cache_evicts_least_recently_used() {
+        let s = block_store(400, 100); // 4 blocks
+        let c = BlockCache::new(2);
+        c.get_or_read(&s, 0).unwrap();
+        c.get_or_read(&s, 1).unwrap();
+        c.get_or_read(&s, 0).unwrap(); // touch 0 → 1 is now LRU
+        c.get_or_read(&s, 2).unwrap(); // evicts 1
+        assert_eq!(c.len(), 2);
+        c.get_or_read(&s, 0).unwrap(); // still warm
+        assert_eq!(c.hits(), 2);
+        c.get_or_read(&s, 1).unwrap(); // was evicted → miss
+        assert_eq!(c.misses(), 4);
+    }
+
+    #[test]
+    fn block_cache_zero_capacity_is_passthrough() {
+        let s = block_store(200, 100);
+        let c = BlockCache::new(0);
+        c.get_or_read(&s, 0).unwrap();
+        c.get_or_read(&s, 0).unwrap();
+        assert_eq!((c.hits(), c.misses()), (0, 2));
+        assert!(c.is_empty());
+        // Nothing retained once callers drop their blocks.
+        assert_eq!(c.resident(), 0);
+    }
+
+    #[test]
+    fn residency_gauge_tracks_live_blocks_and_peak() {
+        let s = block_store(400, 100);
+        let c = BlockCache::new(1);
+        let held = c.get_or_read(&s, 0).unwrap(); // in cache + held here
+        assert_eq!(c.resident(), 1);
+        c.get_or_read(&s, 1).unwrap(); // evicts 0 from cache; `held` keeps it alive
+        assert_eq!(c.resident(), 2, "held block + cached block");
+        assert!(c.peak_resident() >= 2);
+        drop(held);
+        assert_eq!(c.resident(), 1, "only the cached block remains");
+        c.clear();
+        assert_eq!(c.resident(), 0);
+    }
+
+    #[test]
+    fn block_cache_keys_by_store_uid() {
+        let s1 = block_store(200, 100);
+        let s2 = block_store(200, 100);
+        let c = BlockCache::new(8);
+        c.get_or_read(&s1, 0).unwrap();
+        c.get_or_read(&s2, 0).unwrap();
+        assert_eq!(c.misses(), 2, "same block id of another store is distinct");
+        assert_eq!(c.len(), 2);
     }
 
     #[test]

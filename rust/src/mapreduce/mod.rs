@@ -13,13 +13,17 @@
 //! * **cost model** — a [`simclock::SimClock`] charging job startup, task
 //!   launch, HDFS I/O and shuffle the way the paper's physical cluster paid
 //!   them, so job-per-iteration baselines show their true relative cost on
-//!   a single machine (DESIGN.md §3).
+//!   a single machine (DESIGN.md §3);
+//! * **block caching** — map tasks stream their blocks through a shared
+//!   LRU [`cache::BlockCache`] (the paper's "efficient caching design"):
+//!   blocks are decoded inside the map slot, dropped when the task ends,
+//!   and kept warm across the jobs of one engine.
 
 pub mod cache;
 pub mod engine;
 pub mod simclock;
 
-pub use cache::DistributedCache;
+pub use cache::{BlockCache, CachedBlock, DistributedCache};
 pub use engine::{Engine, EngineOptions, JobStats};
 pub use simclock::{SimClock, SimCost};
 

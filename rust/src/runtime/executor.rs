@@ -7,6 +7,7 @@ use crate::data::Matrix;
 use crate::error::{Error, Result};
 use crate::fcm::Partials;
 use crate::runtime::ArtifactMeta;
+use crate::xla;
 
 /// A compiled chunk-step executable for one `(graph, dims, clusters)` shape.
 pub struct ChunkExecutor {

@@ -16,6 +16,7 @@ use crate::error::{Error, Result};
 use crate::fcm::Partials;
 use crate::runtime::executor::ChunkExecutor;
 use crate::runtime::{Graph, Manifest};
+use crate::xla;
 
 /// One chunk execution request (buffers pre-padded by the caller).
 pub struct ChunkRequest {

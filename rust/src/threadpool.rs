@@ -69,25 +69,57 @@ impl ThreadPool {
             let tx = tx.clone();
             let f = Arc::clone(&f);
             self.execute(move || {
-                let out = catch_unwind(AssertUnwindSafe(|| f(item))).map_err(|e| {
-                    e.downcast_ref::<&str>()
-                        .map(|s| s.to_string())
-                        .or_else(|| e.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "task panicked".to_string())
-                });
+                let out = catch_unwind(AssertUnwindSafe(|| f(item))).map_err(describe_panic);
                 let _ = tx.send((idx, out));
             });
         }
         drop(tx);
-        let mut results: Vec<Option<Result<R, String>>> = (0..n).map(|_| None).collect();
-        for (idx, r) in rx {
-            results[idx] = Some(r);
-        }
-        results
-            .into_iter()
-            .map(|r| r.unwrap_or_else(|| Err("worker dropped task".to_string())))
-            .collect()
+        collect_ordered(n, rx)
     }
+
+    /// Run `f(0..n)` in parallel, returning results in index order — the
+    /// streaming variant of [`Self::map_parallel`]: tasks are described by
+    /// their index alone, so nothing per-task is materialized up front (the
+    /// engine uses this to read HDFS blocks *inside* the map slot instead
+    /// of pre-loading the dataset).
+    pub fn map_indexed<R, F>(&self, n: usize, f: F) -> Vec<Result<R, String>>
+    where
+        R: Send + 'static,
+        F: Fn(usize) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (tx, rx): (Sender<(usize, Result<R, String>)>, Receiver<_>) = channel();
+        for idx in 0..n {
+            let tx = tx.clone();
+            let f = Arc::clone(&f);
+            self.execute(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(idx))).map_err(describe_panic);
+                let _ = tx.send((idx, out));
+            });
+        }
+        drop(tx);
+        collect_ordered(n, rx)
+    }
+}
+
+/// Render a caught panic payload as a task-failure message.
+fn describe_panic(e: Box<dyn std::any::Any + Send>) -> String {
+    e.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| e.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "task panicked".to_string())
+}
+
+/// Drain `(index, result)` pairs into an input-ordered vector.
+fn collect_ordered<R>(n: usize, rx: Receiver<(usize, Result<R, String>)>) -> Vec<Result<R, String>> {
+    let mut results: Vec<Option<Result<R, String>>> = (0..n).map(|_| None).collect();
+    for (idx, r) in rx {
+        results[idx] = Some(r);
+    }
+    results
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|| Err("worker dropped task".to_string())))
+        .collect()
 }
 
 fn worker_loop(rx: Arc<Mutex<Receiver<Message>>>) {
@@ -165,6 +197,25 @@ mod tests {
         // Pool still usable after a panic.
         let again = pool.map_parallel(vec![10], |x: i32| x + 1);
         assert_eq!(again[0], Ok(11));
+    }
+
+    #[test]
+    fn map_indexed_preserves_order_and_isolates_panics() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map_indexed(20, |i| {
+            if i == 7 {
+                panic!("boom {i}");
+            }
+            i * 3
+        });
+        for (i, r) in out.iter().enumerate() {
+            if i == 7 {
+                assert!(r.as_ref().unwrap_err().contains("boom"));
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i * 3);
+            }
+        }
+        assert!(pool.map_indexed::<usize, _>(0, |i| i).is_empty());
     }
 
     #[test]

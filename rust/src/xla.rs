@@ -1,0 +1,131 @@
+//! Offline shim for the `xla` crate's PJRT surface.
+//!
+//! The production build links the real `xla` crate (HLO → PJRT CPU client);
+//! this container builds fully offline, so the runtime modules import this
+//! shim instead (`use crate::xla;`). It exposes the exact API shape
+//! [`crate::runtime`] consumes and fails at *client construction* — the one
+//! place [`crate::runtime::server`] already handles gracefully — so every
+//! backend-resolution path (`Backend::Auto` falling back to native, benches
+//! skipping PJRT rows, `info` reporting "unavailable") behaves identically
+//! to a machine without a PJRT plugin.
+//!
+//! Swapping in the real crate is a one-line change per importing module
+//! (`use xla;` instead of `use crate::xla;`) plus the Cargo dependency.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (opaque message).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "xla/pjrt backend not linked in this build (offline shim) — \
+         vendor the xla crate and point `use` at it to enable PJRT"
+            .to_string(),
+    ))
+}
+
+/// PJRT client handle. The shim can never construct one, which statically
+/// guarantees the downstream entry points below are unreachable at runtime.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Real crate: build the CPU (Eigen) PJRT client. Shim: always errors.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (real crate: protobuf-backed).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled executable resident on a PJRT device.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Real crate: execute and return per-device, per-output buffers.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Host literal (dense array value).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T>(_v: T) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal)> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_cleanly() {
+        let err = PjRtClient::cpu().err().expect("shim must not build a client");
+        assert!(err.to_string().contains("offline shim"));
+    }
+
+    #[test]
+    fn error_converts_into_crate_error() {
+        let e: crate::error::Error = Error("boom".into()).into();
+        assert!(e.to_string().contains("boom"));
+    }
+}

@@ -32,7 +32,7 @@ fn engine(cfg: &Config) -> Engine {
 #[test]
 fn bigfcm_beats_baselines_at_tight_epsilon() {
     let data = susy_like(8_000, 3);
-    let store = BlockStore::in_memory("susy", &data.features, 1024, 4).unwrap();
+    let store = Arc::new(BlockStore::in_memory("susy", &data.features, 1024, 4).unwrap());
     let cfg = cfg_with(2, 5e-9, 100);
 
     let mut e = engine(&cfg);
@@ -64,7 +64,7 @@ fn bigfcm_beats_baselines_at_tight_epsilon() {
 #[test]
 fn bigfcm_flat_in_epsilon_baseline_grows() {
     let data = susy_like(6_000, 5);
-    let store = BlockStore::in_memory("susy", &data.features, 1024, 4).unwrap();
+    let store = Arc::new(BlockStore::in_memory("susy", &data.features, 1024, 4).unwrap());
     let mut big_times = Vec::new();
     let mut fkm_jobs = Vec::new();
     for eps in [5e-2, 5e-5, 5e-9] {
@@ -102,7 +102,7 @@ fn bigfcm_flat_in_epsilon_baseline_grows() {
 fn quality_parity_with_baseline() {
     let data = blobs(4_000, 6, 4, 0.35, 7);
     let labels = data.labels.as_ref().unwrap();
-    let store = BlockStore::in_memory("blobs", &data.features, 512, 4).unwrap();
+    let store = Arc::new(BlockStore::in_memory("blobs", &data.features, 512, 4).unwrap());
     let cfg = cfg_with(4, 1e-8, 200);
 
     let mut e = engine(&cfg);
@@ -131,7 +131,7 @@ fn quality_parity_with_baseline() {
 #[test]
 fn silhouette_positive_and_stable() {
     let data = blobs(6_000, 8, 2, 0.6, 11);
-    let store = BlockStore::in_memory("blobs", &data.features, 1024, 4).unwrap();
+    let store = Arc::new(BlockStore::in_memory("blobs", &data.features, 1024, 4).unwrap());
     let cfg = cfg_with(2, 1e-8, 200);
     let mut e = engine(&cfg);
     let big = BigFcm::new(cfg).clusters(2).run_with_engine(&store, &mut e).unwrap();
@@ -185,7 +185,7 @@ fn cost_near_linear_in_clusters() {
 fn baselines_are_not_strawmen() {
     let data = blobs(3_000, 4, 3, 0.25, 17);
     let labels = data.labels.as_ref().unwrap();
-    let store = BlockStore::in_memory("blobs", &data.features, 512, 4).unwrap();
+    let store = Arc::new(BlockStore::in_memory("blobs", &data.features, 512, 4).unwrap());
     for algo in [BaselineAlgo::KMeans, BaselineAlgo::FuzzyKMeans] {
         let mut best = 0.0f64;
         for seed in 0..4u64 {

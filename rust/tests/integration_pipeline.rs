@@ -75,7 +75,7 @@ fn pipeline_single_job_regardless_of_epsilon() {
     let data = blobs(2048, 3, 2, 0.3, 77);
     for eps in [5e-2, 5e-7, 5e-11] {
         let mut engine = Engine::new(EngineOptions::default(), small_cfg().overhead.clone());
-        let store = BlockStore::in_memory("t", &data.features, 512, 4).unwrap();
+        let store = Arc::new(BlockStore::in_memory("t", &data.features, 512, 4).unwrap());
         let _run = BigFcm::new(small_cfg())
             .clusters(2)
             .epsilon(eps)
@@ -106,9 +106,9 @@ fn pipeline_survives_injected_task_faults() {
     let data = blobs(4096, 3, 3, 0.25, 31);
     let mut cfg = small_cfg();
     cfg.fcm.flag_policy = bigfcm::config::FlagPolicy::ForceFcm;
-    let store = BlockStore::in_memory("t", &data.features, 256, 4).unwrap();
+    let store = Arc::new(BlockStore::in_memory("t", &data.features, 256, 4).unwrap());
     let mut engine = Engine::new(
-        EngineOptions { workers: 4, fault_rate: 0.3, fault_seed: 5 },
+        EngineOptions { workers: 4, fault_rate: 0.3, fault_seed: 5, ..Default::default() },
         cfg.overhead.clone(),
     );
     let run = BigFcm::new(cfg.clone())
@@ -130,8 +130,8 @@ fn pipeline_survives_injected_task_faults() {
 fn disk_and_memory_stores_agree() {
     let data = blobs(2000, 4, 2, 0.3, 13);
     let dir = std::env::temp_dir().join(format!("bigfcm_it_{}", std::process::id()));
-    let disk = BlockStore::on_disk("t", &data.features, 256, 4, dir.clone()).unwrap();
-    let mem = BlockStore::in_memory("t", &data.features, 256, 4).unwrap();
+    let disk = Arc::new(BlockStore::on_disk("t", &data.features, 256, 4, dir.clone()).unwrap());
+    let mem = Arc::new(BlockStore::in_memory("t", &data.features, 256, 4).unwrap());
     // Pin the flag (the FCM-vs-WFCMPB race is timing-dependent by design).
     let mut cfg = small_cfg();
     cfg.fcm.flag_policy = bigfcm::config::FlagPolicy::ForceFcm;
@@ -155,7 +155,7 @@ fn weights_reflect_partition_mass() {
 #[test]
 fn multi_reducer_tree_agrees_with_flat() {
     let data = blobs(4096, 3, 3, 0.25, 23);
-    let store = BlockStore::in_memory("t", &data.features, 256, 4).unwrap();
+    let store = Arc::new(BlockStore::in_memory("t", &data.features, 256, 4).unwrap());
     let mut cfg_flat = small_cfg();
     cfg_flat.cluster.reducers = 1;
     let mut cfg_tree = small_cfg();

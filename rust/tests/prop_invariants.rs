@@ -5,15 +5,19 @@
 
 use std::sync::Arc;
 
-use bigfcm::config::Config;
+use bigfcm::config::{Config, FlagPolicy};
 use bigfcm::coordinator::BigFcm;
 use bigfcm::data::synth::{blobs, gaussian_mixture, Component};
 use bigfcm::data::Matrix;
 use bigfcm::fcm::loops::{run_fcm, FcmParams, Variant};
-use bigfcm::fcm::native::{classic_partials_native, fcm_partials_native, memberships};
+use bigfcm::fcm::native::{
+    classic_partials_native, classic_partials_scalar, fcm_partials_native, fcm_partials_scalar,
+    kmeans_partials_native, kmeans_partials_scalar, memberships,
+};
 use bigfcm::fcm::seeding::random_records;
 use bigfcm::fcm::{max_center_shift2, ChunkBackend, NativeBackend};
 use bigfcm::hdfs::BlockStore;
+use bigfcm::mapreduce::{Engine, EngineOptions};
 use bigfcm::metrics::hungarian_max;
 use bigfcm::prng::Pcg;
 
@@ -95,6 +99,143 @@ fn prop_memberships_are_distributions() {
             }
             assert!((s - 1.0).abs() < 1e-4, "case {case}: row {i} sums to {s}");
         }
+    }
+}
+
+/// The tiled f32-lane FCM kernel agrees with the scalar f64 reference on
+/// awkward shapes: tail row-tiles (n not a multiple of the tile height),
+/// d=1, C=1, C prime, and zero-weight padding suffixes — across the
+/// fuzzifier regimes of the paper's experiments. Tolerances: 1e-3 absolute
+/// on v_num; 1e-6 absolute + an f32-lane-rounding relative term on w_acc
+/// and the objective (EXPERIMENTS.md §Perf documents the bound).
+#[test]
+fn prop_tiled_fcm_matches_scalar_reference() {
+    for case in 0..CASES {
+        let mut rng = Pcg::new(20_000 + case);
+        let n = 1 + rng.next_index(300);
+        let d = 1 + rng.next_index(12);
+        let c = 1 + rng.next_index(9);
+        let x = rand_matrix(&mut rng, n, d, 2.0);
+        let v = rand_matrix(&mut rng, c, d, 2.0);
+        let mut w = rand_weights(&mut rng, n);
+        // Zero-weight padding rows (the runtime's tail-chunk contract).
+        if n > 4 {
+            for wk in w.iter_mut().skip(n - n / 4) {
+                *wk = 0.0;
+            }
+        }
+        for m in [1.2, 2.0, 2.8] {
+            let a = fcm_partials_native(&x, &v, &w, m);
+            let b = fcm_partials_scalar(&x, &v, &w, m);
+            for (p, q) in a.v_num.as_slice().iter().zip(b.v_num.as_slice()) {
+                assert!(
+                    (p - q).abs() <= 1e-3 + 1e-4 * q.abs(),
+                    "case {case}: vnum {p} vs {q} (n={n} d={d} c={c} m={m})"
+                );
+            }
+            for (p, q) in a.w_acc.iter().zip(&b.w_acc) {
+                assert!(
+                    (p - q).abs() <= 1e-6 + 1e-4 * q.abs(),
+                    "case {case}: wacc {p} vs {q} (n={n} d={d} c={c} m={m})"
+                );
+            }
+            let rel = (a.objective - b.objective).abs() / b.objective.max(1e-9);
+            assert!(rel < 1e-4, "case {case}: objective rel {rel} (m={m})");
+        }
+    }
+}
+
+/// Same agreement for the classic (hoisted-powf) kernel against the
+/// textbook per-pair-powf scalar reference.
+#[test]
+fn prop_tiled_classic_matches_scalar_reference() {
+    for case in 0..CASES {
+        let mut rng = Pcg::new(21_000 + case);
+        let n = 1 + rng.next_index(200);
+        let d = 1 + rng.next_index(10);
+        let c = 1 + rng.next_index(7);
+        let x = rand_matrix(&mut rng, n, d, 1.5);
+        let v = rand_matrix(&mut rng, c, d, 1.5);
+        let w = rand_weights(&mut rng, n);
+        for m in [1.2, 2.0, 2.8] {
+            let a = classic_partials_native(&x, &v, &w, m);
+            let b = classic_partials_scalar(&x, &v, &w, m);
+            for (p, q) in a.w_acc.iter().zip(&b.w_acc) {
+                assert!(
+                    (p - q).abs() <= 1e-6 + 1e-4 * q.abs(),
+                    "case {case}: wacc {p} vs {q} (m={m})"
+                );
+            }
+            for (p, q) in a.v_num.as_slice().iter().zip(b.v_num.as_slice()) {
+                assert!((p - q).abs() <= 1e-3 + 1e-4 * q.abs(), "case {case}: vnum");
+            }
+            let rel = (a.objective - b.objective).abs() / b.objective.max(1e-9);
+            assert!(rel < 1e-4, "case {case}: objective rel {rel} (m={m})");
+        }
+    }
+}
+
+/// Tiled K-Means preserves the assignment-insensitive aggregates exactly
+/// (total mass) and the objective to f32-lane rounding. Per-cluster sums
+/// are compared on separated data in `fcm::native::tests` — on arbitrary
+/// random input a record can sit within f32 rounding of a bisector, where
+/// tiled/scalar may legitimately disagree on the argmin.
+#[test]
+fn prop_tiled_kmeans_preserves_aggregates() {
+    for case in 0..CASES {
+        let mut rng = Pcg::new(22_000 + case);
+        let n = 1 + rng.next_index(200);
+        let d = 1 + rng.next_index(10);
+        let c = 1 + rng.next_index(7);
+        let x = rand_matrix(&mut rng, n, d, 2.0);
+        let v = rand_matrix(&mut rng, c, d, 2.0);
+        let w = rand_weights(&mut rng, n);
+        let a = kmeans_partials_native(&x, &v, &w);
+        let b = kmeans_partials_scalar(&x, &v, &w);
+        let mass_a: f64 = a.w_acc.iter().sum();
+        let mass_b: f64 = b.w_acc.iter().sum();
+        assert!((mass_a - mass_b).abs() < 1e-9, "case {case}: mass {mass_a} vs {mass_b}");
+        let rel = (a.objective - b.objective).abs() / b.objective.max(1e-9);
+        assert!(rel < 1e-4, "case {case}: objective rel {rel}");
+    }
+}
+
+/// Streaming engine + small block cache change nothing about the result:
+/// a pipeline over an on-disk store with cache capacity below the block
+/// count matches the in-memory run bit-for-bit, while peak resident blocks
+/// stay within workers + capacity.
+#[test]
+fn prop_small_block_cache_preserves_results() {
+    for case in 0..3u64 {
+        let data = blobs(2048, 3, 3, 0.3, 30_000 + case);
+        let mut cfg = Config::default();
+        cfg.fcm.epsilon = 1e-9;
+        cfg.cluster.block_records = 256;
+        // Pin the flag: the FCM-vs-WFCMPB race is timing-dependent by design.
+        cfg.fcm.flag_policy = FlagPolicy::ForceFcm;
+        let dir = std::env::temp_dir()
+            .join(format!("bigfcm_prop_cache_{}_{case}", std::process::id()));
+        let disk =
+            Arc::new(BlockStore::on_disk("t", &data.features, 256, 4, dir.clone()).unwrap());
+        let mem = Arc::new(BlockStore::in_memory("t", &data.features, 256, 4).unwrap());
+        let workers = 4;
+        let cache_blocks = 2; // << 8 blocks
+        let mut engine = Engine::new(
+            EngineOptions { workers, block_cache_blocks: cache_blocks, ..Default::default() },
+            cfg.overhead.clone(),
+        );
+        let a = BigFcm::new(cfg.clone())
+            .clusters(3)
+            .run_with_engine(&disk, &mut engine)
+            .unwrap();
+        let b = BigFcm::new(cfg).clusters(3).run_store(&mem).unwrap();
+        assert_eq!(a.centers.as_slice(), b.centers.as_slice(), "case {case}");
+        assert!(
+            engine.block_cache().peak_resident() <= workers + cache_blocks,
+            "case {case}: peak resident {} > workers + capacity",
+            engine.block_cache().peak_resident()
+        );
+        std::fs::remove_dir_all(dir).ok();
     }
 }
 
@@ -180,7 +321,7 @@ fn prop_block_size_does_not_change_clustering() {
         let mut results = Vec::new();
         for block in [256usize, 512, 2048] {
             cfg.cluster.block_records = block;
-            let store = BlockStore::in_memory("t", &data.features, block, 4).unwrap();
+            let store = Arc::new(BlockStore::in_memory("t", &data.features, block, 4).unwrap());
             let run = BigFcm::new(cfg.clone()).clusters(3).run_store(&store).unwrap();
             results.push(run.centers);
         }

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verification: format, release build, full test suite.
+# Run from anywhere; operates on the rust/ crate.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "rustfmt unavailable in this toolchain; skipping format check"
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "verify: OK"
