@@ -70,7 +70,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // --- BigFCM (with fault injection to exercise re-execution) ---------
     let mut engine = Engine::new(
-        EngineOptions { workers: cfg.cluster.workers, fault_rate: 0.1, fault_seed: 42, ..Default::default() },
+        EngineOptions {
+            fault_rate: 0.1,
+            fault_seed: 42,
+            ..EngineOptions::from_cluster(&cfg.cluster)
+        },
         cfg.overhead.clone(),
     );
     let big = BigFcm::new(cfg.clone())
@@ -87,6 +91,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         big.job.attempts
     );
     println!(
+        "  streaming: locality hits {} / steals {}, prefetch hits {}",
+        big.job.locality_hits, big.job.locality_steals, big.job.prefetch_hits
+    );
+    println!(
         "  driver: sample={} T_fcm={:.0?} T_wfcmpb={:.0?} -> flag={}",
         big.driver.sample_size,
         big.driver.t_fcm,
@@ -98,7 +106,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut results = Vec::new();
     for algo in [BaselineAlgo::KMeans, BaselineAlgo::FuzzyKMeans] {
         let mut engine = Engine::new(
-            EngineOptions { workers: cfg.cluster.workers, ..Default::default() },
+            EngineOptions::from_cluster(&cfg.cluster),
             cfg.overhead.clone(),
         );
         let mut bcfg = cfg.clone();

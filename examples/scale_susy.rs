@@ -1,0 +1,273 @@
+//! Multi-GiB scale harness (the paper's SUSY/HIGGS regime; EXPERIMENTS.md
+//! §Streaming): generate a SUSY-like block store on disk *without ever
+//! materializing the dataset*, stream it end-to-end through the full BigFCM
+//! pipeline under a small byte-budgeted block cache with locality-aware
+//! scheduling and prefetch on, then enforce the streaming envelopes:
+//!
+//! * **resident bytes** — `peak_resident_bytes ≤ budget + workers ×
+//!   max_block_bytes` (the pipeline never holds more than the cache budget
+//!   plus one in-flight block per worker);
+//! * **mechanism liveness** — locality hits > 0 and prefetch hits > 0 (the
+//!   scheduler honoured block placement and reads overlapped compute);
+//! * **wall time** — optional `--max-wall-s` ceiling.
+//!
+//! ```bash
+//! # CI-sized (default): 1 GiB on disk, 64 MiB cache
+//! cargo run --release --example scale_susy
+//! # the paper's regime, locally:
+//! cargo run --release --example scale_susy -- --bytes 2GiB --cache-mib 64
+//! ```
+//!
+//! Exit status is non-zero when any envelope is violated, so the harness
+//! can gate CI or local runs directly.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use bigfcm::config::{Config, FlagPolicy};
+use bigfcm::coordinator::BigFcm;
+use bigfcm::data::synth::susy_like;
+use bigfcm::hdfs::BlockStoreWriter;
+use bigfcm::mapreduce::{Engine, EngineOptions, MIB};
+
+struct Args {
+    /// Target on-disk store size in bytes.
+    bytes: u64,
+    /// Block-cache byte budget in MiB.
+    cache_mib: u64,
+    workers: usize,
+    /// Records per block (65 536 × 18 f32 ≈ 4.5 MiB serialised).
+    block_rows: usize,
+    /// 0 disables the wall-time envelope.
+    max_wall_s: f64,
+    /// Keep the generated store (for re-runs) instead of deleting it.
+    keep: bool,
+    dir: Option<PathBuf>,
+    seed: u64,
+}
+
+impl Default for Args {
+    fn default() -> Self {
+        Self {
+            bytes: 1 << 30, // 1 GiB
+            cache_mib: 64,
+            workers: 4,
+            block_rows: 65_536,
+            max_wall_s: 0.0,
+            keep: false,
+            dir: None,
+            seed: 0xB16FC4,
+        }
+    }
+}
+
+/// Parse "2GiB", "512MiB", "64KiB" or a plain byte count (fractional unit
+/// values like "1.5GiB" allowed).
+fn parse_size(s: &str) -> Option<u64> {
+    let lower = s.trim().to_ascii_lowercase();
+    let (digits, mult) = if let Some(v) = lower.strip_suffix("gib") {
+        (v, 1024.0 * 1024.0 * 1024.0)
+    } else if let Some(v) = lower.strip_suffix("mib") {
+        (v, 1024.0 * 1024.0)
+    } else if let Some(v) = lower.strip_suffix("kib") {
+        (v, 1024.0)
+    } else {
+        (lower.as_str(), 1.0)
+    };
+    let v: f64 = digits.trim().parse().ok()?;
+    if !v.is_finite() || v < 0.0 {
+        return None;
+    }
+    Some((v * mult) as u64)
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: scale_susy [--bytes SIZE] [--cache-mib N] [--workers N] \
+         [--block-rows N] [--max-wall-s S] [--dir PATH] [--keep] [--seed N]\n\
+         SIZE accepts GiB/MiB/KiB suffixes, e.g. --bytes 2GiB"
+    );
+    std::process::exit(2);
+}
+
+fn parse_args() -> Args {
+    let mut args = Args::default();
+    let mut it = std::env::args().skip(1);
+    while let Some(flag) = it.next() {
+        let mut val = |name: &str| -> String {
+            it.next().unwrap_or_else(|| {
+                eprintln!("missing value for {name}");
+                usage()
+            })
+        };
+        match flag.as_str() {
+            "--bytes" => {
+                args.bytes = parse_size(&val("--bytes")).unwrap_or_else(|| usage());
+            }
+            "--cache-mib" => {
+                args.cache_mib = val("--cache-mib").parse().unwrap_or_else(|_| usage());
+            }
+            "--workers" => {
+                args.workers = val("--workers").parse().unwrap_or_else(|_| usage());
+            }
+            "--block-rows" => {
+                args.block_rows = val("--block-rows").parse().unwrap_or_else(|_| usage());
+            }
+            "--max-wall-s" => {
+                args.max_wall_s = val("--max-wall-s").parse().unwrap_or_else(|_| usage());
+            }
+            "--dir" => args.dir = Some(PathBuf::from(val("--dir"))),
+            "--keep" => args.keep = true,
+            "--seed" => args.seed = val("--seed").parse().unwrap_or_else(|_| usage()),
+            _ => usage(),
+        }
+    }
+    if args.bytes == 0 || args.block_rows == 0 || args.workers == 0 {
+        usage();
+    }
+    args
+}
+
+fn mib(b: u64) -> f64 {
+    b as f64 / MIB as f64
+}
+
+/// Deletes the generated store on every exit path (success, error or
+/// panic) when armed. Never armed for `--keep` runs or user-supplied
+/// `--dir` paths — a pre-existing directory the user named may hold
+/// unrelated files and is never deleted by this harness.
+struct Cleanup(Option<PathBuf>);
+
+impl Drop for Cleanup {
+    fn drop(&mut self) {
+        if let Some(dir) = self.0.take() {
+            std::fs::remove_dir_all(dir).ok();
+        }
+    }
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = parse_args();
+    let dims = 18usize; // SUSY feature count
+    let row_bytes = (dims * 4) as u64;
+    let block_bytes_est = args.block_rows as u64 * row_bytes + 24;
+    let n_blocks = (((args.bytes + block_bytes_est - 1) / block_bytes_est).max(1)) as usize;
+
+    let user_dir = args.dir.is_some();
+    let dir = args.dir.clone().unwrap_or_else(|| {
+        std::env::temp_dir().join(format!("bigfcm_scale_{}", std::process::id()))
+    });
+    // Armed for the default temp-dir case only; disarmed by --keep, and
+    // user-supplied --dir paths are never deleted.
+    let cleanup = Cleanup((!args.keep && !user_dir).then(|| dir.clone()));
+
+    // ---- Phase 0: stream the store to disk, one block at a time --------
+    println!(
+        "generating SUSY-like store: {} blocks x {} rows ({:.0} MiB target) -> {}",
+        n_blocks,
+        args.block_rows,
+        mib(args.bytes),
+        dir.display()
+    );
+    let t0 = Instant::now();
+    let mut writer = BlockStoreWriter::create("SUSY-like", dims, args.workers, dir.clone())?;
+    for b in 0..n_blocks {
+        let block = susy_like(args.block_rows, args.seed.wrapping_add(b as u64));
+        writer.append(&block.features)?;
+        if (b + 1) % 50 == 0 || b + 1 == n_blocks {
+            println!(
+                "  wrote {}/{} blocks ({:.0} MiB, {:.1}s)",
+                b + 1,
+                n_blocks,
+                mib(writer.total_bytes()),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    let store = Arc::new(writer.finish()?);
+    println!(
+        "store ready: {} rows, {:.0} MiB on disk, max block {:.2} MiB ({:.1}s)",
+        store.total_rows(),
+        mib(store.total_bytes()),
+        mib(store.max_block_bytes()),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- Phase 1+2: full pipeline under the byte budget ----------------
+    let mut cfg = Config::default();
+    cfg.seed = args.seed;
+    cfg.cluster.workers = args.workers;
+    cfg.cluster.cache_mib = args.cache_mib as usize;
+    cfg.fcm.clusters = 2; // SUSY: signal vs background
+    cfg.fcm.max_iterations = 100;
+    // Pin the driver race so repeated harness runs are comparable.
+    cfg.fcm.flag_policy = FlagPolicy::ForceFcm;
+
+    let budget = args.cache_mib * MIB;
+    let mut engine = Engine::new(EngineOptions::from_cluster(&cfg.cluster), cfg.overhead.clone());
+    let t1 = Instant::now();
+    // Errors may `?` straight out: `cleanup` removes the store on every
+    // exit path, including generation-phase failures above.
+    let run = BigFcm::new(cfg).clusters(2).run_with_engine(&store, &mut engine)?;
+    let wall_s = t1.elapsed().as_secs_f64();
+
+    let bc = engine.block_cache();
+    let max_block = store.max_block_bytes();
+    let envelope = budget + args.workers as u64 * max_block;
+    println!("\n=== scale_susy results ===");
+    println!(
+        "pipeline wall {wall_s:.1}s  ({:.1} MiB/s through FCM), modelled cluster {:.0}s",
+        mib(store.total_bytes()) / wall_s,
+        run.modelled_s()
+    );
+    println!(
+        "map tasks {}: locality hits {}, steals {}, prefetch hits {}",
+        run.job.map_tasks, run.job.locality_hits, run.job.locality_steals, run.job.prefetch_hits
+    );
+    println!(
+        "cache: budget {:.0} MiB, peak resident {:.1} MiB (envelope {:.1} MiB), \
+         hits {} misses {} prefetches {}",
+        mib(budget),
+        mib(bc.peak_resident_bytes()),
+        mib(envelope),
+        bc.hits(),
+        bc.misses(),
+        bc.prefetches()
+    );
+
+    let mut failures = Vec::new();
+    if bc.peak_resident_bytes() > envelope {
+        failures.push(format!(
+            "resident-byte envelope violated: peak {} > budget {} + {} workers x {}",
+            bc.peak_resident_bytes(),
+            budget,
+            args.workers,
+            max_block
+        ));
+    }
+    if run.job.locality_hits == 0 {
+        failures.push("no locality hits: scheduler ignored block placement".into());
+    }
+    if run.job.prefetch_hits == 0 {
+        failures.push("no prefetch hits: reads never overlapped compute".into());
+    }
+    if args.max_wall_s > 0.0 && wall_s > args.max_wall_s {
+        failures.push(format!("wall {wall_s:.1}s > envelope {:.1}s", args.max_wall_s));
+    }
+
+    if cleanup.0.is_none() {
+        println!("kept store at {}", dir.display());
+    }
+
+    // Exit via `Err`, not `process::exit` — the cleanup guard must drop.
+    if failures.is_empty() {
+        println!("scale_susy: all envelopes OK");
+        Ok(())
+    } else {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        Err(format!("{} envelope violation(s)", failures.len()).into())
+    }
+}

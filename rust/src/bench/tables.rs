@@ -41,10 +41,7 @@ impl Ctx {
     }
 
     fn engine(&self) -> Engine {
-        Engine::new(
-            EngineOptions { workers: self.cfg.cluster.workers, ..Default::default() },
-            self.cfg.overhead.clone(),
-        )
+        Engine::new(EngineOptions::from_cluster(&self.cfg.cluster), self.cfg.overhead.clone())
     }
 
     fn bigfcm(&self, store: &Arc<BlockStore>, c: usize, m: f64, eps: f64) -> Result<BigFcmRun> {

@@ -25,11 +25,23 @@ pub struct ClusterConfig {
     pub chunk: usize,
     /// Number of reduce slots (the paper uses 1 with an optional tree).
     pub reducers: usize,
+    /// Block-cache byte budget per engine, in MiB (0 disables caching).
+    pub cache_mib: usize,
+    /// Overlap each worker's next block read with the current block's
+    /// compute (the engine's prefetcher thread).
+    pub prefetch: bool,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        Self { workers: 4, block_records: 65_536, chunk: 4096, reducers: 1 }
+        Self {
+            workers: 4,
+            block_records: 65_536,
+            chunk: 4096,
+            reducers: 1,
+            cache_mib: 256,
+            prefetch: true,
+        }
     }
 }
 
@@ -232,6 +244,10 @@ impl Config {
             "cluster.block_records" => self.cluster.block_records = num!(usize),
             "cluster.chunk" => self.cluster.chunk = num!(usize),
             "cluster.reducers" => self.cluster.reducers = num!(usize),
+            "cluster.cache_mib" => self.cluster.cache_mib = num!(usize),
+            "cluster.prefetch" => {
+                self.cluster.prefetch = value.parse::<bool>().map_err(|_| bad(key, value))?
+            }
             "overhead.job_startup_s" => self.overhead.job_startup_s = num!(f64),
             "overhead.task_launch_s" => self.overhead.task_launch_s = num!(f64),
             "overhead.shuffle_s_per_mib" => self.overhead.shuffle_s_per_mib = num!(f64),
@@ -295,10 +311,14 @@ mod tests {
     fn kv_overrides() {
         let mut c = Config::default();
         c.set_kv("cluster.workers=16").unwrap();
+        c.set_kv("cluster.cache_mib=64").unwrap();
+        c.set_kv("cluster.prefetch=false").unwrap();
         c.set_kv("fcm.epsilon=5e-3").unwrap();
         c.set_kv("fcm.driver_preclustering=false").unwrap();
         c.set_kv("runtime.backend=native").unwrap();
         assert_eq!(c.cluster.workers, 16);
+        assert_eq!(c.cluster.cache_mib, 64);
+        assert!(!c.cluster.prefetch);
         assert_eq!(c.fcm.epsilon, 5e-3);
         assert!(!c.fcm.driver_preclustering);
         assert_eq!(c.backend, Backend::Native);

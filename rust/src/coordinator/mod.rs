@@ -109,10 +109,11 @@ impl BigFcm {
 
     /// Run over an existing block store with a fresh engine. The store is
     /// taken behind `Arc` because the engine's streaming map pipeline reads
-    /// blocks from the worker pool.
+    /// blocks from the worker pool. Engine shape (workers, block-cache
+    /// budget, prefetch) comes from the cluster config.
     pub fn run_store(&self, store: &Arc<BlockStore>) -> Result<BigFcmRun> {
         let mut engine = Engine::new(
-            EngineOptions { workers: self.cfg.cluster.workers, ..Default::default() },
+            EngineOptions::from_cluster(&self.cfg.cluster),
             self.cfg.overhead.clone(),
         );
         self.run_with_engine(store, &mut engine)

@@ -73,6 +73,9 @@ impl BlockStore {
     }
 
     /// Shard `features` into binary block files under `dir` (created).
+    /// Built on [`BlockStoreWriter`] so the on-disk layout has exactly one
+    /// implementation; prefer the writer directly for datasets too large
+    /// to materialize.
     pub fn on_disk(
         name: impl Into<String>,
         features: &Matrix,
@@ -80,21 +83,20 @@ impl BlockStore {
         workers: usize,
         dir: PathBuf,
     ) -> Result<Self> {
-        std::fs::create_dir_all(&dir).map_err(|e| Error::io(&dir, e))?;
-        let (mut metas, mats) = shard(features, block_records, workers)?;
-        for (meta, mat) in metas.iter_mut().zip(&mats) {
-            let path = dir.join(format!("block_{:06}.bfb", meta.id));
-            let bytes = write_block_file(&path, mat)?;
-            meta.bytes = bytes;
+        if features.rows() == 0 {
+            return Err(Error::BlockStore("cannot shard an empty dataset".into()));
         }
-        Ok(Self {
-            uid: NEXT_STORE_UID.fetch_add(1, Ordering::Relaxed),
-            name: name.into(),
-            cols: features.cols(),
-            total_rows: features.rows(),
-            blocks: metas,
-            storage: Storage::Disk { dir },
-        })
+        if block_records == 0 {
+            return Err(Error::BlockStore("block_records must be positive".into()));
+        }
+        let mut writer = BlockStoreWriter::create(name, features.cols(), workers, dir)?;
+        let mut start = 0usize;
+        while start < features.rows() {
+            let end = (start + block_records).min(features.rows());
+            writer.append(&features.slice_rows(start, end))?;
+            start = end;
+        }
+        writer.finish()
     }
 
     /// Process-unique store id (block-cache key component).
@@ -125,6 +127,12 @@ impl BlockStore {
     /// Total serialised bytes (drives the modelled scan cost).
     pub fn total_bytes(&self) -> u64 {
         self.blocks.iter().map(|b| b.bytes).sum()
+    }
+
+    /// Largest serialised block (the per-worker term of the streaming
+    /// residency envelope `budget + workers × max_block_bytes`).
+    pub fn max_block_bytes(&self) -> u64 {
+        self.blocks.iter().map(|b| b.bytes).max().unwrap_or(0)
     }
 
     /// Fetch a block's records.
@@ -167,6 +175,108 @@ impl BlockStore {
                 .copy_from_slice(current.as_ref().unwrap().row(local));
         }
         Ok(out)
+    }
+}
+
+/// Incremental on-disk store builder for datasets too large to materialize:
+/// blocks are generated, written and dropped one at a time, so building a
+/// multi-GiB store needs only one block of memory at a time (the scale
+/// harness's generator path, `examples/scale_susy.rs`).
+///
+/// ```no_run
+/// # use bigfcm::hdfs::BlockStoreWriter;
+/// # use bigfcm::data::Matrix;
+/// let mut w = BlockStoreWriter::create("susy", 18, 4, "/tmp/susy".into()).unwrap();
+/// for _ in 0..100 {
+///     let block = Matrix::zeros(65_536, 18); // generate one block
+///     w.append(&block).unwrap();             // write it, drop it
+/// }
+/// let store = w.finish().unwrap();
+/// ```
+pub struct BlockStoreWriter {
+    name: String,
+    dir: PathBuf,
+    cols: usize,
+    workers: usize,
+    metas: Vec<BlockMeta>,
+    total_rows: usize,
+}
+
+impl BlockStoreWriter {
+    /// Start a store under `dir` (created). Blocks appended later must all
+    /// have `cols` columns; locality hints round-robin over `workers`.
+    pub fn create(
+        name: impl Into<String>,
+        cols: usize,
+        workers: usize,
+        dir: PathBuf,
+    ) -> Result<Self> {
+        if cols == 0 {
+            return Err(Error::BlockStore("cols must be positive".into()));
+        }
+        std::fs::create_dir_all(&dir).map_err(|e| Error::io(&dir, e))?;
+        Ok(Self {
+            name: name.into(),
+            dir,
+            cols,
+            workers: workers.max(1),
+            metas: Vec::new(),
+            total_rows: 0,
+        })
+    }
+
+    /// Write one block file and record its manifest entry; returns the
+    /// block id. The caller drops `block` afterwards — nothing is retained.
+    pub fn append(&mut self, block: &Matrix) -> Result<usize> {
+        if block.cols() != self.cols {
+            return Err(Error::BlockStore(format!(
+                "block has {} cols, store expects {}",
+                block.cols(),
+                self.cols
+            )));
+        }
+        if block.rows() == 0 {
+            return Err(Error::BlockStore("cannot append an empty block".into()));
+        }
+        let id = self.metas.len();
+        let path = self.dir.join(format!("block_{id:06}.bfb"));
+        let bytes = write_block_file(&path, block)?;
+        self.metas.push(BlockMeta {
+            id,
+            rows: block.rows(),
+            preferred_worker: id % self.workers,
+            bytes,
+        });
+        self.total_rows += block.rows();
+        Ok(id)
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.metas.len()
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.total_rows
+    }
+
+    /// Serialised bytes written so far.
+    pub fn total_bytes(&self) -> u64 {
+        self.metas.iter().map(|b| b.bytes).sum()
+    }
+
+    /// Seal the manifest into a readable store.
+    pub fn finish(self) -> Result<BlockStore> {
+        if self.metas.is_empty() {
+            return Err(Error::BlockStore("store has no blocks".into()));
+        }
+        Ok(BlockStore {
+            uid: NEXT_STORE_UID.fetch_add(1, Ordering::Relaxed),
+            name: self.name,
+            cols: self.cols,
+            total_rows: self.total_rows,
+            blocks: self.metas,
+            storage: Storage::Disk { dir: self.dir },
+        })
     }
 }
 
@@ -273,6 +383,38 @@ mod tests {
         assert!(BlockStore::in_memory("t", &empty, 10, 1).is_err());
         let d = blobs(10, 2, 2, 0.3, 7);
         assert!(BlockStore::in_memory("t", &d.features, 0, 1).is_err());
+    }
+
+    #[test]
+    fn writer_streams_blocks_to_disk_and_reads_back() {
+        let d = blobs(600, 3, 2, 0.3, 11);
+        let dir = std::env::temp_dir().join(format!("bigfcm_bsw_{}", std::process::id()));
+        let mut w = BlockStoreWriter::create("t", 3, 4, dir.clone()).unwrap();
+        for b in 0..3 {
+            let block = d.features.slice_rows(b * 200, (b + 1) * 200);
+            assert_eq!(w.append(&block).unwrap(), b);
+        }
+        assert_eq!(w.num_blocks(), 3);
+        assert_eq!(w.total_rows(), 600);
+        let s = w.finish().unwrap();
+        assert_eq!(s.num_blocks(), 3);
+        assert_eq!(s.total_rows(), 600);
+        assert_eq!(s.blocks()[2].preferred_worker, 2);
+        assert_eq!(s.max_block_bytes(), s.blocks()[0].bytes);
+        let m = s.read_block(1).unwrap();
+        assert_eq!(m.row(0), d.features.row(200));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn writer_rejects_mismatched_and_empty_blocks() {
+        let dir = std::env::temp_dir().join(format!("bigfcm_bsw_bad_{}", std::process::id()));
+        let mut w = BlockStoreWriter::create("t", 3, 2, dir.clone()).unwrap();
+        assert!(w.append(&Matrix::zeros(5, 4)).is_err(), "wrong col count");
+        assert!(w.append(&Matrix::zeros(0, 3)).is_err(), "empty block");
+        let empty = BlockStoreWriter::create("t", 3, 2, dir.clone()).unwrap();
+        assert!(empty.finish().is_err(), "store with no blocks");
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

@@ -195,10 +195,7 @@ fn cmd_baseline(args: &Args) -> CliResult<()> {
         cfg.cluster.block_records,
         cfg.cluster.workers,
     )?);
-    let mut engine = Engine::new(
-        EngineOptions { workers: cfg.cluster.workers, ..Default::default() },
-        cfg.overhead.clone(),
-    );
+    let mut engine = Engine::new(EngineOptions::from_cluster(&cfg.cluster), cfg.overhead.clone());
     let run = run_baseline(algo, &cfg, &store, backend, &mut engine)?;
     println!(
         "{}: {} iterations ({} MR jobs), converged={}, wall={}, modelled={}",

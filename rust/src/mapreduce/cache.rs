@@ -4,21 +4,35 @@
 //!   data (the paper stores V_init / V_winit and the `Flag` there) to every
 //!   task. Modelled as a concurrent typed KV store; writes happen in the
 //!   driver before job submission, tasks only read.
-//! * [`BlockCache`] — an LRU over decoded HDFS blocks, shared by all map
-//!   slots of an engine. The streaming pipeline reads blocks *inside* the
-//!   worker closure; this cache is what makes repeated iterations over the
-//!   same store hit warm blocks instead of re-decoding — the paper's
-//!   "efficient caching design". It also meters residency: how many decoded
-//!   blocks are alive right now (cache + in-flight) and the high-water
-//!   mark, which the engine tests pin to `workers + capacity`.
+//! * [`BlockCache`] — a byte-budgeted LRU over decoded HDFS blocks, shared
+//!   by all map slots of an engine. The streaming pipeline reads blocks
+//!   *inside* the worker closure; this cache is what makes repeated
+//!   iterations over the same store hit warm blocks instead of re-decoding
+//!   — the paper's "efficient caching design". Capacity is a **byte
+//!   budget** (skewed block sizes make a block-count capacity meaningless):
+//!   each entry is accounted at its serialised block size and LRU entries
+//!   are evicted until the retained bytes fit the budget. The cache also
+//!   meters residency in blocks *and* bytes — how much decoded data is
+//!   alive right now (cache + in-flight tasks + in-flight prefetch) and the
+//!   high-water marks, which the engine and scale-harness tests pin to
+//!   `budget + workers × max_block_bytes`.
+//!
+//! The prefetch path ([`BlockCache::prefetch`]) lets the engine pull a
+//! worker's *next* queued block into the cache while the current block
+//! computes, overlapping disk latency with compute. Prefetch reservations
+//! are counted against the same byte budget (evicting LRU entries to make
+//! room), so prefetching never grows the residency envelope.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::data::Matrix;
 use crate::error::Result;
 use crate::hdfs::BlockStore;
+
+/// One mebibyte — the unit block-cache budgets are usually expressed in.
+pub const MIB: u64 = 1024 * 1024;
 
 /// A cached value.
 #[derive(Clone, Debug)]
@@ -109,133 +123,312 @@ impl DistributedCache {
 }
 
 // ---------------------------------------------------------------------------
-// Block cache (LRU over decoded HDFS blocks)
+// Block cache (byte-budgeted LRU over decoded HDFS blocks)
 // ---------------------------------------------------------------------------
 
 /// Live-block gauge shared between the cache and every outstanding
-/// [`CachedBlock`]: `resident` counts decoded blocks currently alive
-/// anywhere (cache entries + blocks held by in-flight map tasks), `peak`
-/// its high-water mark.
+/// [`CachedBlock`]: decoded blocks currently alive anywhere (cache entries
+/// + blocks held by in-flight map tasks + prefetch decodes), in blocks and
+/// bytes, plus their high-water marks.
 #[derive(Default)]
 struct Residency {
-    resident: AtomicUsize,
-    peak: AtomicUsize,
+    resident_blocks: AtomicUsize,
+    peak_blocks: AtomicUsize,
+    resident_bytes: AtomicU64,
+    peak_bytes: AtomicU64,
 }
 
 /// One decoded block. Dropping the last `Arc<CachedBlock>` releases the
-/// block's memory and decrements the residency gauge — the mechanism the
-/// streaming-bound test (`engine::tests`) observes.
+/// block's memory and decrements the residency gauges — the mechanism the
+/// streaming-bound tests (`engine::tests`, `integration_streaming`)
+/// observe.
 pub struct CachedBlock {
     data: Matrix,
+    bytes: u64,
     residency: Arc<Residency>,
 }
 
 impl CachedBlock {
-    fn new(data: Matrix, residency: Arc<Residency>) -> Self {
-        let now = residency.resident.fetch_add(1, Ordering::SeqCst) + 1;
-        residency.peak.fetch_max(now, Ordering::SeqCst);
-        Self { data, residency }
+    fn new(data: Matrix, bytes: u64, residency: Arc<Residency>) -> Self {
+        let now = residency.resident_blocks.fetch_add(1, Ordering::SeqCst) + 1;
+        residency.peak_blocks.fetch_max(now, Ordering::SeqCst);
+        let now_b = residency.resident_bytes.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        residency.peak_bytes.fetch_max(now_b, Ordering::SeqCst);
+        Self { data, bytes, residency }
     }
 
     /// The block's records.
     pub fn data(&self) -> &Matrix {
         &self.data
     }
+
+    /// Serialised byte size this block is accounted at.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
 }
 
 impl Drop for CachedBlock {
     fn drop(&mut self) {
-        self.residency.resident.fetch_sub(1, Ordering::SeqCst);
+        self.residency.resident_blocks.fetch_sub(1, Ordering::SeqCst);
+        self.residency.resident_bytes.fetch_sub(self.bytes, Ordering::SeqCst);
     }
+}
+
+/// Where a traced block read was served from — drives the engine's modelled
+/// HDFS I/O accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadSource {
+    /// Demand miss: the task decoded the block from the store on its
+    /// critical path.
+    Miss,
+    /// Warm hit on a block a previous demand read left in the cache — no
+    /// store I/O happened for this access.
+    Cached,
+    /// First demand touch of a block the prefetcher pulled in. The disk
+    /// read did happen (and is charged), just off the task's critical path.
+    Prefetched,
 }
 
 /// Keys are `(store uid, block id)` so one cache can serve several stores
 /// without aliasing.
 type BlockKey = (u64, usize);
 
-struct LruState {
-    entries: HashMap<BlockKey, Arc<CachedBlock>>,
-    /// Access order, least-recent at the front.
-    order: VecDeque<BlockKey>,
+/// One cache slot: the block plus its latest recency stamp.
+struct LruEntry {
+    block: Arc<CachedBlock>,
+    /// Stamp of this entry's most recent touch; `order` occurrences with an
+    /// older stamp are stale and skipped by eviction.
+    stamp: u64,
 }
 
-/// Shared LRU cache of decoded blocks with hit/miss and residency metering.
-/// `capacity` is in blocks; 0 disables caching (every read is a pass-through
-/// miss, nothing is retained).
+struct LruState {
+    entries: HashMap<BlockKey, LruEntry>,
+    /// Recency queue, least-recent candidates at the front. Touches append
+    /// `(key, stamp)` without removing the key's earlier occurrence — an
+    /// O(1) "lazy invalidation" LRU: eviction pops stale pairs until it
+    /// finds one whose stamp matches the live entry. Compacted when stale
+    /// pairs dominate, so warm hit-heavy phases stay O(1) amortized
+    /// instead of the linear rescan a `remove(position)` queue costs.
+    order: VecDeque<(BlockKey, u64)>,
+    /// Monotonic recency stamp source.
+    next_stamp: u64,
+    /// Bytes retained by `entries`.
+    cached_bytes: u64,
+    /// Keys inserted by the prefetcher and not yet served to a task.
+    prefetched: HashSet<BlockKey>,
+}
+
+impl LruState {
+    /// Stamp `key` as most-recently-used (entry must exist).
+    fn touch(&mut self, key: BlockKey) {
+        self.next_stamp += 1;
+        let stamp = self.next_stamp;
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.stamp = stamp;
+        }
+        self.order.push_back((key, stamp));
+        // Bound stale growth: a long warm phase appends one pair per hit
+        // without evicting any; rebuild once live pairs are the minority.
+        if self.order.len() > 4 * self.entries.len().max(16) {
+            let entries = &self.entries;
+            self.order
+                .retain(|(k, s)| entries.get(k).map(|e| e.stamp == *s).unwrap_or(false));
+        }
+    }
+}
+
+/// Shared byte-budgeted LRU cache of decoded blocks with hit/miss,
+/// prefetch and residency metering. A budget of 0 disables caching (every
+/// read is a pass-through miss, nothing is retained).
 pub struct BlockCache {
-    capacity: usize,
+    budget_bytes: u64,
     state: Mutex<LruState>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Completed prefetch inserts.
+    prefetches: AtomicU64,
+    /// Demand hits served by a prefetched block (first touch only).
+    prefetch_hits: AtomicU64,
+    /// Bytes reserved by in-flight prefetch decodes; counted against the
+    /// budget by the eviction loop so cache + in-flight prefetch ≤ budget.
+    prefetch_pending: AtomicU64,
+    /// Bytes the prefetcher read from the store that no task ever consumed
+    /// (entry evicted before first touch, or the decode lost a duplicate
+    /// race). These reads really happened; the engine charges them to the
+    /// job so modelled HDFS I/O counts every disk read exactly once.
+    prefetch_wasted: AtomicU64,
     residency: Arc<Residency>,
 }
 
 impl BlockCache {
-    pub fn new(capacity: usize) -> Self {
+    /// Cache with a byte budget (0 disables caching).
+    pub fn with_budget_bytes(budget_bytes: u64) -> Self {
         Self {
-            capacity,
-            state: Mutex::new(LruState { entries: HashMap::new(), order: VecDeque::new() }),
+            budget_bytes,
+            state: Mutex::new(LruState {
+                entries: HashMap::new(),
+                order: VecDeque::new(),
+                next_stamp: 0,
+                cached_bytes: 0,
+                prefetched: HashSet::new(),
+            }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            prefetches: AtomicU64::new(0),
+            prefetch_hits: AtomicU64::new(0),
+            prefetch_pending: AtomicU64::new(0),
+            prefetch_wasted: AtomicU64::new(0),
             residency: Arc::new(Residency::default()),
+        }
+    }
+
+    /// Cache with a budget expressed in MiB.
+    pub fn with_budget_mib(mib: usize) -> Self {
+        Self::with_budget_bytes(mib as u64 * MIB)
+    }
+
+    /// Evict least-recently-used entries until retained bytes plus in-flight
+    /// prefetch reservations fit the budget. Runs under the state lock.
+    /// Stale recency pairs (superseded by a later touch of the same key)
+    /// are discarded on the way.
+    fn evict_over_budget(&self, st: &mut LruState) {
+        let pending = self.prefetch_pending.load(Ordering::SeqCst);
+        while st.cached_bytes + pending > self.budget_bytes {
+            let Some((key, stamp)) = st.order.pop_front() else { break };
+            let live = st.entries.get(&key).map(|e| e.stamp) == Some(stamp);
+            if !live {
+                continue; // stale pair; the key was re-touched or is gone
+            }
+            if let Some(e) = st.entries.remove(&key) {
+                st.cached_bytes -= e.block.bytes();
+                if st.prefetched.remove(&key) {
+                    // Read from disk by the prefetcher, never consumed.
+                    self.prefetch_wasted.fetch_add(e.block.bytes(), Ordering::Relaxed);
+                }
+            }
         }
     }
 
     /// Fetch a block through the cache: warm hit returns the shared decoded
     /// block; a miss decodes from the store (outside the lock, so workers
     /// fetching different blocks decode in parallel) and inserts it,
-    /// evicting the least-recently-used entry beyond `capacity`.
+    /// evicting least-recently-used entries beyond the byte budget.
     ///
     /// A concurrent duplicate miss of the same block decodes twice and the
     /// later insert is dropped — benign, and still within the
-    /// `workers + capacity` residency bound because the duplicate is held
-    /// by exactly one in-flight task.
+    /// `budget + workers × max_block_bytes` residency bound because the
+    /// duplicate is held by exactly one in-flight task.
     pub fn get_or_read(&self, store: &BlockStore, id: usize) -> Result<Arc<CachedBlock>> {
         Ok(self.get_or_read_traced(store, id)?.0)
     }
 
-    /// [`Self::get_or_read`] that also reports whether the block was served
-    /// warm (`true` = cache hit: no store I/O happened, so the engine
-    /// charges no modelled HDFS read for it).
+    /// [`Self::get_or_read`] that also reports where the block came from
+    /// (see [`ReadSource`]) so the engine can charge modelled HDFS reads
+    /// only for bytes that actually moved this job.
     pub fn get_or_read_traced(
         &self,
         store: &BlockStore,
         id: usize,
-    ) -> Result<(Arc<CachedBlock>, bool)> {
+    ) -> Result<(Arc<CachedBlock>, ReadSource)> {
         let key: BlockKey = (store.uid(), id);
-        if self.capacity > 0 {
+        if self.budget_bytes > 0 {
             let mut st = self.state.lock().expect("block cache poisoned");
-            if let Some(hit) = st.entries.get(&key).cloned() {
-                if let Some(pos) = st.order.iter().position(|k| *k == key) {
-                    st.order.remove(pos);
-                    st.order.push_back(key);
-                }
+            if let Some(hit) = st.entries.get(&key).map(|e| Arc::clone(&e.block)) {
+                st.touch(key);
+                let was_prefetched = st.prefetched.remove(&key);
                 drop(st);
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                return Ok((hit, true));
+                if was_prefetched {
+                    self.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((hit, ReadSource::Prefetched));
+                }
+                return Ok((hit, ReadSource::Cached));
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let data = store.read_block(id)?;
-        let block = Arc::new(CachedBlock::new(data, Arc::clone(&self.residency)));
-        if self.capacity > 0 {
+        let bytes = store.blocks()[id].bytes;
+        let block = Arc::new(CachedBlock::new(data, bytes, Arc::clone(&self.residency)));
+        if self.budget_bytes > 0 {
             let mut st = self.state.lock().expect("block cache poisoned");
             if !st.entries.contains_key(&key) {
-                st.entries.insert(key, Arc::clone(&block));
-                st.order.push_back(key);
-                while st.order.len() > self.capacity {
-                    if let Some(evicted) = st.order.pop_front() {
-                        st.entries.remove(&evicted);
-                    }
-                }
+                st.cached_bytes += bytes;
+                st.entries.insert(key, LruEntry { block: Arc::clone(&block), stamp: 0 });
+                st.touch(key);
+                self.evict_over_budget(&mut st);
             }
+            // A concurrent prefetch insert beat our decode: leave its
+            // `prefetched` flag in place. Both reads really happened and
+            // both are charged exactly once — this one as a Miss now, the
+            // prefetcher's when its entry is first touched (Prefetched) or
+            // evicted unconsumed (wasted).
         }
-        Ok((block, false))
+        Ok((block, ReadSource::Miss))
     }
 
-    /// Capacity in blocks (0 = caching disabled).
-    pub fn capacity(&self) -> usize {
-        self.capacity
+    /// Pull a block into the cache ahead of demand, evicting LRU entries to
+    /// make room. Returns `Ok(true)` when the block was decoded and
+    /// inserted; `Ok(false)` when it was already cached, caching is
+    /// disabled, or the block cannot fit the budget. The reservation keeps
+    /// `cached bytes + in-flight prefetch ≤ budget` throughout, so prefetch
+    /// never grows the residency envelope beyond what the budget allows.
+    pub fn prefetch(&self, store: &BlockStore, id: usize) -> Result<bool> {
+        if self.budget_bytes == 0 || id >= store.num_blocks() {
+            return Ok(false);
+        }
+        let key: BlockKey = (store.uid(), id);
+        let bytes = store.blocks()[id].bytes;
+        {
+            let mut st = self.state.lock().expect("block cache poisoned");
+            if st.entries.contains_key(&key) {
+                return Ok(false);
+            }
+            if bytes + self.prefetch_pending.load(Ordering::SeqCst) > self.budget_bytes {
+                // A block this size can never fit alongside in-flight
+                // reservations; let the demand path stream it instead.
+                return Ok(false);
+            }
+            self.prefetch_pending.fetch_add(bytes, Ordering::SeqCst);
+            // Make room now, while we still hold the lock: the decode below
+            // runs unlocked and demand inserts must keep seeing a budget
+            // that accounts for this reservation.
+            self.evict_over_budget(&mut st);
+        }
+        let data = match store.read_block(id) {
+            Ok(d) => d,
+            Err(e) => {
+                self.prefetch_pending.fetch_sub(bytes, Ordering::SeqCst);
+                return Err(e);
+            }
+        };
+        let block = Arc::new(CachedBlock::new(data, bytes, Arc::clone(&self.residency)));
+        let mut st = self.state.lock().expect("block cache poisoned");
+        self.prefetch_pending.fetch_sub(bytes, Ordering::SeqCst);
+        if st.entries.contains_key(&key) {
+            // A demand miss beat us to it; drop our duplicate decode. The
+            // read still happened — account it so the engine charges it.
+            self.prefetch_wasted.fetch_add(bytes, Ordering::Relaxed);
+            return Ok(false);
+        }
+        st.cached_bytes += bytes;
+        st.entries.insert(key, LruEntry { block, stamp: 0 });
+        st.touch(key);
+        st.prefetched.insert(key);
+        self.evict_over_budget(&mut st);
+        drop(st);
+        self.prefetches.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// Byte budget (0 = caching disabled).
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Bytes currently retained by the cache itself.
+    pub fn cached_bytes(&self) -> u64 {
+        self.state.lock().expect("block cache poisoned").cached_bytes
     }
 
     /// Blocks currently retained by the cache itself.
@@ -255,21 +448,69 @@ impl BlockCache {
         self.misses.load(Ordering::Relaxed)
     }
 
-    /// Decoded blocks alive right now (cache entries + in-flight tasks).
+    /// Completed prefetch inserts since construction.
+    pub fn prefetches(&self) -> u64 {
+        self.prefetches.load(Ordering::Relaxed)
+    }
+
+    /// Demand hits served by a prefetched block (first touch only).
+    pub fn prefetch_hits(&self) -> u64 {
+        self.prefetch_hits.load(Ordering::Relaxed)
+    }
+
+    /// Bytes the prefetcher read that no task ever consumed (evicted before
+    /// first touch, duplicate race, or dropped by `clear()`); the engine
+    /// charges these so modelled I/O counts every real read exactly once.
+    pub fn prefetch_wasted_bytes(&self) -> u64 {
+        self.prefetch_wasted.load(Ordering::Relaxed)
+    }
+
+    /// Decoded blocks alive right now (cache + in-flight tasks + prefetch).
     pub fn resident(&self) -> usize {
-        self.residency.resident.load(Ordering::SeqCst)
+        self.residency.resident_blocks.load(Ordering::SeqCst)
     }
 
-    /// High-water mark of [`Self::resident`] since construction.
+    /// High-water mark of [`Self::resident`].
     pub fn peak_resident(&self) -> usize {
-        self.residency.peak.load(Ordering::SeqCst)
+        self.residency.peak_blocks.load(Ordering::SeqCst)
     }
 
-    /// Drop every retained block (in-flight holders keep theirs alive).
+    /// Decoded bytes alive right now (cache + in-flight tasks + prefetch).
+    pub fn resident_bytes(&self) -> u64 {
+        self.residency.resident_bytes.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of [`Self::resident_bytes`].
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.residency.peak_bytes.load(Ordering::SeqCst)
+    }
+
+    /// Drop every retained block (in-flight holders keep theirs alive) and
+    /// reset the peak meters to the current residency, so a long-lived
+    /// cache reports per-job peaks when cleared between jobs rather than
+    /// the all-time high-water mark.
     pub fn clear(&self) {
         let mut st = self.state.lock().expect("block cache poisoned");
+        // Flagged-but-unconsumed prefetch reads die here; account them.
+        let dropped_prefetched: u64 = st
+            .prefetched
+            .iter()
+            .filter_map(|k| st.entries.get(k).map(|e| e.block.bytes()))
+            .sum();
+        if dropped_prefetched > 0 {
+            self.prefetch_wasted.fetch_add(dropped_prefetched, Ordering::Relaxed);
+        }
         st.entries.clear();
         st.order.clear();
+        st.prefetched.clear();
+        st.cached_bytes = 0;
+        drop(st); // dropping the Arcs above decremented the gauges
+        self.residency
+            .peak_blocks
+            .store(self.residency.resident_blocks.load(Ordering::SeqCst), Ordering::SeqCst);
+        self.residency
+            .peak_bytes
+            .store(self.residency.resident_bytes.load(Ordering::SeqCst), Ordering::SeqCst);
     }
 }
 
@@ -304,27 +545,34 @@ mod tests {
         BlockStore::in_memory("t", &d.features, block, 2).unwrap()
     }
 
+    /// Budget sized to hold exactly `blocks` equal-size blocks of `s`.
+    fn budget_for(s: &BlockStore, blocks: u64) -> u64 {
+        s.blocks()[0].bytes * blocks
+    }
+
     #[test]
     fn block_cache_hits_after_first_read() {
-        let s = block_store(400, 100); // 4 blocks
-        let c = BlockCache::new(8);
+        let s = block_store(400, 100); // 4 equal blocks
+        let c = BlockCache::with_budget_bytes(budget_for(&s, 8));
         let a = c.get_or_read(&s, 2).unwrap();
         let b = c.get_or_read(&s, 2).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "warm hit must return the shared block");
         assert_eq!((c.hits(), c.misses()), (1, 1));
         assert_eq!(c.len(), 1);
+        assert_eq!(c.cached_bytes(), s.blocks()[2].bytes);
         assert_eq!(a.data().rows(), 100);
     }
 
     #[test]
-    fn block_cache_evicts_least_recently_used() {
-        let s = block_store(400, 100); // 4 blocks
-        let c = BlockCache::new(2);
+    fn block_cache_evicts_least_recently_used_by_bytes() {
+        let s = block_store(400, 100); // 4 equal blocks
+        let c = BlockCache::with_budget_bytes(budget_for(&s, 2));
         c.get_or_read(&s, 0).unwrap();
         c.get_or_read(&s, 1).unwrap();
         c.get_or_read(&s, 0).unwrap(); // touch 0 → 1 is now LRU
         c.get_or_read(&s, 2).unwrap(); // evicts 1
         assert_eq!(c.len(), 2);
+        assert!(c.cached_bytes() <= c.budget_bytes());
         c.get_or_read(&s, 0).unwrap(); // still warm
         assert_eq!(c.hits(), 2);
         c.get_or_read(&s, 1).unwrap(); // was evicted → miss
@@ -332,37 +580,156 @@ mod tests {
     }
 
     #[test]
-    fn block_cache_zero_capacity_is_passthrough() {
+    fn budget_below_one_block_retains_nothing() {
+        let s = block_store(400, 100);
+        let c = BlockCache::with_budget_bytes(s.blocks()[0].bytes - 1);
+        c.get_or_read(&s, 0).unwrap();
+        assert!(c.is_empty(), "a block above the whole budget must not stick");
+        assert_eq!(c.cached_bytes(), 0);
+        c.get_or_read(&s, 0).unwrap();
+        assert_eq!((c.hits(), c.misses()), (0, 2));
+    }
+
+    #[test]
+    fn block_cache_zero_budget_is_passthrough() {
         let s = block_store(200, 100);
-        let c = BlockCache::new(0);
+        let c = BlockCache::with_budget_bytes(0);
         c.get_or_read(&s, 0).unwrap();
         c.get_or_read(&s, 0).unwrap();
         assert_eq!((c.hits(), c.misses()), (0, 2));
         assert!(c.is_empty());
         // Nothing retained once callers drop their blocks.
         assert_eq!(c.resident(), 0);
+        assert_eq!(c.resident_bytes(), 0);
+        // Prefetch is a no-op without a budget.
+        assert!(!c.prefetch(&s, 1).unwrap());
     }
 
     #[test]
-    fn residency_gauge_tracks_live_blocks_and_peak() {
+    fn residency_gauge_tracks_live_blocks_and_bytes() {
         let s = block_store(400, 100);
-        let c = BlockCache::new(1);
+        let bytes = s.blocks()[0].bytes;
+        let c = BlockCache::with_budget_bytes(bytes); // room for one block
         let held = c.get_or_read(&s, 0).unwrap(); // in cache + held here
         assert_eq!(c.resident(), 1);
+        assert_eq!(c.resident_bytes(), bytes);
         c.get_or_read(&s, 1).unwrap(); // evicts 0 from cache; `held` keeps it alive
         assert_eq!(c.resident(), 2, "held block + cached block");
+        assert_eq!(c.resident_bytes(), 2 * bytes);
         assert!(c.peak_resident() >= 2);
+        assert!(c.peak_resident_bytes() >= 2 * bytes);
         drop(held);
         assert_eq!(c.resident(), 1, "only the cached block remains");
+        assert_eq!(c.resident_bytes(), bytes);
         c.clear();
         assert_eq!(c.resident(), 0);
+        assert_eq!(c.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn clear_resets_peak_meters_to_current_residency() {
+        let s = block_store(400, 100);
+        let bytes = s.blocks()[0].bytes;
+        let c = BlockCache::with_budget_bytes(budget_for(&s, 8));
+        c.get_or_read(&s, 0).unwrap();
+        c.get_or_read(&s, 1).unwrap();
+        assert!(c.peak_resident() >= 2);
+        let held = c.get_or_read(&s, 2).unwrap();
+        c.clear();
+        // `held` is still alive, so the per-job meters restart from it —
+        // not from zero, and not from the previous job's high-water mark.
+        assert_eq!(c.resident(), 1);
+        assert_eq!(c.peak_resident(), 1);
+        assert_eq!(c.peak_resident_bytes(), bytes);
+        drop(held);
+        c.clear();
+        assert_eq!(c.peak_resident(), 0);
+        assert_eq!(c.peak_resident_bytes(), 0);
+    }
+
+    #[test]
+    fn prefetch_warms_and_first_touch_counts_as_prefetch_hit() {
+        let s = block_store(400, 100);
+        let c = BlockCache::with_budget_bytes(budget_for(&s, 4));
+        assert!(c.prefetch(&s, 1).unwrap());
+        assert_eq!(c.prefetches(), 1);
+        assert_eq!(c.misses(), 0, "prefetch is not a demand miss");
+        let (_, src) = c.get_or_read_traced(&s, 1).unwrap();
+        assert_eq!(src, ReadSource::Prefetched);
+        assert_eq!(c.prefetch_hits(), 1);
+        // Second touch is an ordinary warm hit.
+        let (_, src) = c.get_or_read_traced(&s, 1).unwrap();
+        assert_eq!(src, ReadSource::Cached);
+        assert_eq!(c.prefetch_hits(), 1);
+        // Prefetching an already-cached block is a no-op.
+        assert!(!c.prefetch(&s, 1).unwrap());
+    }
+
+    #[test]
+    fn prefetch_evicts_lru_to_make_room_within_budget() {
+        let s = block_store(400, 100); // 4 equal blocks
+        let c = BlockCache::with_budget_bytes(budget_for(&s, 2));
+        c.get_or_read(&s, 0).unwrap();
+        c.get_or_read(&s, 1).unwrap();
+        // Cache is at budget; prefetch must evict block 0 (LRU), not fail.
+        assert!(c.prefetch(&s, 2).unwrap());
+        assert!(c.cached_bytes() <= c.budget_bytes());
+        let (_, src) = c.get_or_read_traced(&s, 2).unwrap();
+        assert_eq!(src, ReadSource::Prefetched);
+        let (_, src) = c.get_or_read_traced(&s, 0).unwrap();
+        assert_eq!(src, ReadSource::Miss, "LRU block 0 was evicted for the prefetch");
+    }
+
+    #[test]
+    fn unconsumed_prefetch_reads_are_metered_as_wasted() {
+        let s = block_store(400, 100); // 4 equal blocks
+        let bytes = s.blocks()[0].bytes;
+        let c = BlockCache::with_budget_bytes(2 * bytes);
+        assert!(c.prefetch(&s, 3).unwrap());
+        assert_eq!(c.prefetch_wasted_bytes(), 0);
+        // Two demand reads evict the never-touched prefetched block 3.
+        c.get_or_read(&s, 0).unwrap();
+        c.get_or_read(&s, 1).unwrap();
+        assert_eq!(c.prefetch_wasted_bytes(), bytes, "evicted-unconsumed read not metered");
+        // A consumed prefetch is never counted as wasted.
+        assert!(c.prefetch(&s, 2).unwrap());
+        let (_, src) = c.get_or_read_traced(&s, 2).unwrap();
+        assert_eq!(src, ReadSource::Prefetched);
+        c.clear();
+        assert_eq!(c.prefetch_wasted_bytes(), bytes);
+        // But one dropped by clear() while still flagged is.
+        assert!(c.prefetch(&s, 0).unwrap());
+        c.clear();
+        assert_eq!(c.prefetch_wasted_bytes(), 2 * bytes);
+    }
+
+    #[test]
+    fn lru_order_survives_heavy_touching() {
+        // Hammer warm hits so the lazy recency queue compacts several
+        // times, then check eviction still removes the true LRU entry.
+        let s = block_store(400, 100); // 4 equal blocks
+        let c = BlockCache::with_budget_bytes(budget_for(&s, 3));
+        c.get_or_read(&s, 0).unwrap();
+        c.get_or_read(&s, 1).unwrap();
+        c.get_or_read(&s, 2).unwrap();
+        for _ in 0..500 {
+            c.get_or_read(&s, 1).unwrap();
+            c.get_or_read(&s, 2).unwrap();
+        }
+        // 0 is the LRU despite 1000 stale pairs behind it.
+        c.get_or_read(&s, 3).unwrap(); // evicts 0
+        assert_eq!(c.len(), 3);
+        let (_, src) = c.get_or_read_traced(&s, 1).unwrap();
+        assert_eq!(src, ReadSource::Cached, "recently touched block was evicted");
+        let (_, src) = c.get_or_read_traced(&s, 0).unwrap();
+        assert_eq!(src, ReadSource::Miss, "LRU block survived eviction");
     }
 
     #[test]
     fn block_cache_keys_by_store_uid() {
         let s1 = block_store(200, 100);
         let s2 = block_store(200, 100);
-        let c = BlockCache::new(8);
+        let c = BlockCache::with_budget_bytes(budget_for(&s1, 8));
         c.get_or_read(&s1, 0).unwrap();
         c.get_or_read(&s2, 0).unwrap();
         assert_eq!(c.misses(), 2, "same block id of another store is distinct");

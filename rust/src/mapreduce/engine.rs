@@ -1,24 +1,39 @@
-//! The job engine: schedules map tasks over the worker pool, re-executes
-//! failed attempts, runs the reduce, and charges the SimClock.
+//! The job engine: schedules map tasks over the worker pool with locality
+//! hints, re-executes failed attempts, prefetches upcoming blocks, runs the
+//! reduce, and charges the SimClock.
 //!
 //! ## Streaming map pipeline
 //!
 //! `run_job` never materializes the dataset: map tasks are described to the
 //! pool by block id alone, and each map slot reads (or cache-hits), computes
 //! and *drops* its block inside the worker closure. Peak decoded-block
-//! memory is therefore O(workers + block-cache capacity), not O(dataset) —
-//! the property that lets one engine stream multi-gigabyte stores. Warm
-//! blocks are served by the engine's [`BlockCache`], so iterative callers
-//! (the Mahout-style one-job-per-iteration baselines especially) re-read
-//! hot blocks from memory instead of re-decoding HDFS files.
+//! memory is therefore O(byte budget + workers × block size), not
+//! O(dataset) — the property that lets one engine stream multi-gigabyte
+//! stores. Three mechanisms coordinate around the engine's byte-budgeted
+//! [`BlockCache`]:
+//!
+//! * **locality-aware ordering** — tasks are queued per worker from each
+//!   block's [`crate::hdfs::BlockMeta::preferred_worker`] hint
+//!   ([`ThreadPool::map_indexed_hinted`]); a worker steals only when its
+//!   own queue is dry. Own-queue claims vs steals surface in [`JobStats`].
+//! * **prefetch** — when a worker claims block *k* it hints the engine's
+//!   prefetcher thread at block *k+1* of the same queue, so the next disk
+//!   read overlaps the current block's compute. Prefetch-served reads
+//!   surface in [`JobStats::prefetch_hits`].
+//! * **byte-budgeted caching** — warm blocks are served by the engine's
+//!   [`BlockCache`], so iterative callers (the Mahout-style
+//!   one-job-per-iteration baselines especially) re-read hot blocks from
+//!   memory instead of re-decoding HDFS files.
 
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::config::OverheadConfig;
+use crate::config::{ClusterConfig, OverheadConfig};
 use crate::error::{Error, Result};
 use crate::hdfs::BlockStore;
-use crate::mapreduce::cache::BlockCache;
+use crate::mapreduce::cache::{BlockCache, ReadSource, MIB};
 use crate::mapreduce::simclock::{SimClock, SimCost, TaskSample};
 use crate::mapreduce::{DistributedCache, MapReduceJob, TaskCtx};
 use crate::prng::Pcg;
@@ -36,14 +51,36 @@ pub struct EngineOptions {
     pub fault_rate: f64,
     /// Seed for fault injection.
     pub fault_seed: u64,
-    /// Block-cache capacity in decoded blocks (0 disables caching; reads
-    /// then stream straight from the store, one block per busy worker).
-    pub block_cache_blocks: usize,
+    /// Block-cache byte budget (0 disables caching; reads then stream
+    /// straight from the store, one block per busy worker). Express MiB
+    /// budgets via [`crate::mapreduce::cache::MIB`].
+    pub block_cache_bytes: u64,
+    /// Overlap the next queued block's read with the current block's
+    /// compute on a dedicated prefetcher thread.
+    pub prefetch: bool,
 }
 
 impl Default for EngineOptions {
     fn default() -> Self {
-        Self { workers: 4, fault_rate: 0.0, fault_seed: 0, block_cache_blocks: 32 }
+        Self {
+            workers: 4,
+            fault_rate: 0.0,
+            fault_seed: 0,
+            block_cache_bytes: 256 * MIB,
+            prefetch: true,
+        }
+    }
+}
+
+impl EngineOptions {
+    /// Engine shape from the cluster config (fault injection stays off).
+    pub fn from_cluster(cluster: &ClusterConfig) -> Self {
+        Self {
+            workers: cluster.workers,
+            block_cache_bytes: cluster.cache_mib as u64 * MIB,
+            prefetch: cluster.prefetch,
+            ..Self::default()
+        }
     }
 }
 
@@ -59,31 +96,89 @@ pub struct JobStats {
     /// Total attempts (> map_tasks when faults were injected).
     pub attempts: usize,
     pub shuffle_bytes: u64,
+    /// Map tasks claimed by the worker their block's locality hint named.
+    pub locality_hits: usize,
+    /// Map tasks stolen by a worker whose own queue was dry.
+    pub locality_steals: usize,
+    /// Map-task block reads served warm by the prefetcher this job.
+    pub prefetch_hits: u64,
+    /// Prefetcher disk reads nothing consumed (evicted before first touch
+    /// or lost a duplicate race); charged to this job's modelled HDFS I/O
+    /// so every real read is counted exactly once.
+    pub prefetch_wasted_bytes: u64,
 }
 
 /// The MapReduce engine. One engine per pipeline run; owns the worker pool,
-/// the block cache and the SimClock.
+/// the block cache, the prefetcher thread and the SimClock.
 pub struct Engine {
     pool: ThreadPool,
     options: EngineOptions,
     overhead: OverheadConfig,
     clock: SimClock,
     block_cache: Arc<BlockCache>,
+    prefetch_tx: Option<Sender<PrefetchMsg>>,
+    prefetch_handle: Option<JoinHandle<()>>,
+}
+
+/// Messages to the engine's prefetcher thread.
+enum PrefetchMsg {
+    /// Pull this block into the cache ahead of demand.
+    Fetch(Arc<BlockStore>, usize),
+    /// Barrier: ack once every message queued before it is processed. Sent
+    /// at the end of each job's map phase so late prefetch completions are
+    /// metered (and charged) to the job whose map queued them, and so an
+    /// engine is never dropped with a backlog of pointless reads.
+    Fence(Sender<()>),
+}
+
+/// Prefetcher thread body: pull hinted blocks into the cache until the
+/// engine drops its sender. Prefetch failures are deliberately swallowed —
+/// the demand path will retry the read and surface the error attached to
+/// the task that needed the block.
+fn prefetch_loop(rx: Receiver<PrefetchMsg>, cache: Arc<BlockCache>) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            PrefetchMsg::Fetch(store, id) => {
+                let _ = cache.prefetch(&store, id);
+            }
+            PrefetchMsg::Fence(ack) => {
+                let _ = ack.send(());
+            }
+        }
+    }
 }
 
 impl Engine {
     pub fn new(options: EngineOptions, overhead: OverheadConfig) -> Self {
+        let block_cache = Arc::new(BlockCache::with_budget_bytes(options.block_cache_bytes));
+        let (prefetch_tx, prefetch_handle) = if options.prefetch {
+            let (tx, rx) = channel();
+            let cache = Arc::clone(&block_cache);
+            let handle = std::thread::Builder::new()
+                .name("bigfcm-prefetch".to_string())
+                .spawn(move || prefetch_loop(rx, cache))
+                .expect("spawn prefetch thread");
+            (Some(tx), Some(handle))
+        } else {
+            (None, None)
+        };
         Self {
             pool: ThreadPool::new(options.workers),
-            block_cache: Arc::new(BlockCache::new(options.block_cache_blocks)),
+            block_cache,
             options,
             overhead,
             clock: SimClock::new(),
+            prefetch_tx,
+            prefetch_handle,
         }
     }
 
     pub fn workers(&self) -> usize {
         self.options.workers
+    }
+
+    pub fn options(&self) -> &EngineOptions {
+        &self.options
     }
 
     pub fn clock(&self) -> &SimClock {
@@ -138,10 +233,16 @@ impl Engine {
             })
             .collect();
 
+        // Locality hints: one queue entry per block on its preferred worker.
+        let hints: Vec<usize> = store.blocks().iter().map(|b| b.preferred_worker).collect();
+        let prefetch_hits_before = self.block_cache.prefetch_hits();
+        let prefetch_wasted_before = self.block_cache.prefetch_wasted_bytes();
+
         // Map phase: each task reads its own block on the pool (through the
         // engine's block cache), runs map_combine, and releases the block
         // when it finishes — the only materialized blocks at any instant are
-        // the busy workers' plus the cache's.
+        // the busy workers' plus the cache's budget plus at most one
+        // in-flight prefetch.
         struct TaskResult<M> {
             out: M,
             sample: TaskSample,
@@ -150,35 +251,67 @@ impl Engine {
         let cache_for_map = Arc::clone(&cache);
         let store_for_map = Arc::clone(store);
         let blocks_for_map = Arc::clone(&self.block_cache);
-        let results = self.pool.map_indexed(n_blocks, move |id| -> Result<TaskResult<J::MapOut>> {
-            let fails = fail_counts[id];
-            let (block, warm) = blocks_for_map.get_or_read_traced(&store_for_map, id)?;
-            // A warm hit is a data-local in-memory read: no modelled HDFS
-            // I/O is charged, which is where the paper's caching design
-            // shows up in the reported cluster time.
-            let bytes = if warm { 0 } else { store_for_map.blocks()[id].bytes };
-            let mut attempt = 0usize;
-            loop {
-                let ctx = TaskCtx { cache: &cache_for_map, task_id: id, attempt };
-                let t0 = Instant::now();
-                let out = job_for_map.map_combine(block.data(), &ctx);
-                let compute_wall_s = t0.elapsed().as_secs_f64();
-                // Injected fault: discard this attempt's output and retry
-                // (idempotence is the combiner contract).
-                if attempt < fails {
-                    attempt += 1;
-                    continue;
+        // `Sender` predates `Sync` in older std releases; the Mutex makes
+        // the shared map closure unambiguously thread-safe either way.
+        let prefetch_for_map = self.prefetch_tx.clone().map(Mutex::new);
+        let (results, locality) = self.pool.map_indexed_hinted(
+            n_blocks,
+            &hints,
+            move |id, next| -> Result<TaskResult<J::MapOut>> {
+                // Hint the prefetcher at this worker's next queued block
+                // *before* paying our own read, so the two overlap.
+                if let (Some(tx), Some(next)) = (prefetch_for_map.as_ref(), next) {
+                    let _ = tx
+                        .lock()
+                        .expect("prefetch sender poisoned")
+                        .send(PrefetchMsg::Fetch(Arc::clone(&store_for_map), next));
                 }
-                return out.map(|o| TaskResult {
-                    out: o,
-                    sample: TaskSample {
-                        compute_wall_s,
-                        input_bytes: bytes,
-                        attempts: attempt + 1,
-                    },
-                });
+                let fails = fail_counts[id];
+                let (block, source) = blocks_for_map.get_or_read_traced(&store_for_map, id)?;
+                // Modelled HDFS bytes: a demand miss paid the read on the
+                // task's critical path; a prefetched block's read also
+                // happened this job (off the critical path) and is charged
+                // to the task that consumes it. Only blocks warm from
+                // earlier jobs — data-local in-memory re-reads, the paper's
+                // caching design — cost nothing.
+                let bytes = match source {
+                    ReadSource::Cached => 0,
+                    ReadSource::Miss | ReadSource::Prefetched => store_for_map.blocks()[id].bytes,
+                };
+                let mut attempt = 0usize;
+                loop {
+                    let ctx = TaskCtx { cache: &cache_for_map, task_id: id, attempt };
+                    let t0 = Instant::now();
+                    let out = job_for_map.map_combine(block.data(), &ctx);
+                    let compute_wall_s = t0.elapsed().as_secs_f64();
+                    // Injected fault: discard this attempt's output and retry
+                    // (idempotence is the combiner contract).
+                    if attempt < fails {
+                        attempt += 1;
+                        continue;
+                    }
+                    return out.map(|o| TaskResult {
+                        out: o,
+                        sample: TaskSample {
+                            compute_wall_s,
+                            input_bytes: bytes,
+                            attempts: attempt + 1,
+                        },
+                    });
+                }
+            },
+        );
+
+        // Every map task has finished, so every Fetch this job will ever
+        // queue is already in the channel; fence the prefetcher so its
+        // late completions land in this job's meters (and charges), not
+        // the next job's — and so Drop never faces a stale backlog.
+        if let Some(tx) = &self.prefetch_tx {
+            let (ack_tx, ack_rx) = channel();
+            if tx.send(PrefetchMsg::Fence(ack_tx)).is_ok() {
+                let _ = ack_rx.recv();
             }
-        });
+        }
 
         let mut outs = Vec::with_capacity(n_blocks);
         let mut samples = Vec::with_capacity(n_blocks);
@@ -200,13 +333,23 @@ impl Engine {
         let output = job.reduce(outs, &reduce_ctx)?;
         let reduce_wall_s = t0.elapsed().as_secs_f64();
 
-        let sim = self.clock.charge_job(
+        let mut sim = self.clock.charge_job(
             &self.overhead,
             self.options.workers,
             &samples,
             shuffle_bytes,
             reduce_wall_s,
         );
+
+        // Prefetcher reads nothing consumed this job (evicted unconsumed or
+        // duplicate races) still moved bytes off the store: charge them so
+        // modelled I/O counts every real read exactly once, even in the
+        // churn regime where the budget is tight against the worker count.
+        let prefetch_wasted_bytes =
+            self.block_cache.prefetch_wasted_bytes() - prefetch_wasted_before;
+        if prefetch_wasted_bytes > 0 {
+            sim.hdfs_io_s += self.clock.charge_scan(&self.overhead, prefetch_wasted_bytes);
+        }
 
         let stats = JobStats {
             name: job.name().to_string(),
@@ -215,8 +358,22 @@ impl Engine {
             map_tasks: n_blocks,
             attempts: attempts_total,
             shuffle_bytes,
+            locality_hits: locality.local_hits,
+            locality_steals: locality.steals,
+            prefetch_hits: self.block_cache.prefetch_hits() - prefetch_hits_before,
+            prefetch_wasted_bytes,
         };
         Ok((output, stats))
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // Disconnect the prefetcher (its recv() errors out), then join it.
+        self.prefetch_tx = None;
+        if let Some(h) = self.prefetch_handle.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -284,12 +441,14 @@ mod tests {
         assert_eq!(stats.attempts, 8);
         assert_eq!(stats.shuffle_bytes, 8 * 16);
         assert!(stats.sim.total_s() > 0.0);
+        assert_eq!(stats.locality_hits + stats.locality_steals, 8);
     }
 
     #[test]
     fn fault_injection_retries_and_still_correct() {
         let s = store();
-        let opts = EngineOptions { workers: 4, fault_rate: 0.4, fault_seed: 9, ..Default::default() };
+        let opts =
+            EngineOptions { workers: 4, fault_rate: 0.4, fault_seed: 9, ..Default::default() };
         let mut e = Engine::new(opts, OverheadConfig::default());
         let ((_, rows), stats) = e
             .run_job(Arc::new(SumJob), &s, Arc::new(DistributedCache::new()))
@@ -362,16 +521,19 @@ mod tests {
     }
 
     #[test]
-    fn streaming_bounds_resident_blocks_on_disk_store() {
-        // 20 on-disk blocks, cache capacity 3, 4 workers: the job must
-        // succeed with capacity < block count while never materializing
-        // more than workers + capacity decoded blocks at once — the
-        // streaming-pipeline memory bound.
+    fn streaming_bounds_resident_bytes_on_disk_store() {
+        // 20 on-disk blocks, byte budget of 3 blocks, 4 workers: the job
+        // must succeed with the budget far below the store size while never
+        // materializing more than budget + workers × block bytes at once —
+        // the streaming-pipeline memory bound, with prefetch on.
         let d = blobs(2000, 3, 2, 0.5, 2);
         let dir = std::env::temp_dir().join(format!("bigfcm_stream_{}", std::process::id()));
         let s = Arc::new(BlockStore::on_disk("t", &d.features, 100, 4, dir.clone()).unwrap());
         assert_eq!(s.num_blocks(), 20);
-        let opts = EngineOptions { workers: 4, block_cache_blocks: 3, ..Default::default() };
+        let workers = 4u64;
+        let block_bytes = s.max_block_bytes();
+        let budget = 3 * block_bytes;
+        let opts = EngineOptions { workers: 4, block_cache_bytes: budget, ..Default::default() };
         let mut e = Engine::new(opts, OverheadConfig::default());
         let ((_, rows), stats) = e
             .run_job(Arc::new(SumJob), &s, Arc::new(DistributedCache::new()))
@@ -380,19 +542,30 @@ mod tests {
         assert_eq!(stats.map_tasks, 20);
         let bc = e.block_cache();
         assert!(
-            bc.peak_resident() <= 4 + 3,
-            "peak resident blocks {} > workers + capacity",
-            bc.peak_resident()
+            bc.peak_resident_bytes() <= budget + workers * block_bytes,
+            "peak resident bytes {} > budget {budget} + workers × block {block_bytes}",
+            bc.peak_resident_bytes()
         );
-        // With every block distinct, at most `capacity` reads can be warm.
-        assert!(bc.misses() >= 17, "misses {}", bc.misses());
+        assert!(bc.cached_bytes() <= budget);
+        // Every distinct block was decoded at least once, by a demand miss
+        // or by the prefetcher.
+        assert!(bc.misses() + bc.prefetches() >= 20, "{} + {}", bc.misses(), bc.prefetches());
+        assert_eq!(stats.locality_hits + stats.locality_steals, 20);
         std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]
     fn repeated_jobs_hit_warm_block_cache() {
+        // Prefetch off: this test pins exact demand-miss counts and the
+        // warm pass's zero modelled I/O, which a racing prefetcher would
+        // legitimately perturb.
         let s = store(); // 8 in-memory blocks
-        let opts = EngineOptions { workers: 4, block_cache_blocks: 16, ..Default::default() };
+        let opts = EngineOptions {
+            workers: 4,
+            block_cache_bytes: 16 * MIB,
+            prefetch: false,
+            ..Default::default()
+        };
         let mut e = Engine::new(opts, OverheadConfig::default());
         let (_, stats1) = e
             .run_job(Arc::new(SumJob), &s, Arc::new(DistributedCache::new()))
@@ -407,5 +580,36 @@ mod tests {
         assert_eq!(e.block_cache().misses(), 8, "second pass must not re-decode");
         assert_eq!(e.block_cache().hits(), 8);
         assert_eq!(stats2.sim.hdfs_io_s, 0.0, "warm pass must charge no HDFS I/O");
+        assert_eq!(stats2.prefetch_hits, 0);
+    }
+
+    #[test]
+    fn locality_hints_beyond_pool_size_degrade_gracefully() {
+        // Store sharded for 8 workers, engine pool of 2: hints 0..7 wrap
+        // onto the 2 logical workers and every block still runs exactly
+        // once with claims fully accounted.
+        let d = blobs(1000, 3, 2, 0.5, 3);
+        let s = Arc::new(BlockStore::in_memory("t", &d.features, 125, 8).unwrap());
+        assert_eq!(s.num_blocks(), 8);
+        let opts = EngineOptions { workers: 2, ..Default::default() };
+        let mut e = Engine::new(opts, OverheadConfig::default());
+        let ((_, rows), stats) = e
+            .run_job(Arc::new(SumJob), &s, Arc::new(DistributedCache::new()))
+            .unwrap();
+        assert_eq!(rows, 1000);
+        assert_eq!(stats.map_tasks, 8);
+        assert_eq!(stats.locality_hits + stats.locality_steals, 8);
+    }
+
+    #[test]
+    fn prefetch_disabled_engine_has_no_prefetcher_effects() {
+        let s = store();
+        let opts = EngineOptions { prefetch: false, ..Default::default() };
+        let mut e = Engine::new(opts, OverheadConfig::default());
+        let (_, stats) = e
+            .run_job(Arc::new(SumJob), &s, Arc::new(DistributedCache::new()))
+            .unwrap();
+        assert_eq!(stats.prefetch_hits, 0);
+        assert_eq!(e.block_cache().prefetches(), 0);
     }
 }

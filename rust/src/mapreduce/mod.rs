@@ -6,24 +6,28 @@
 //!   folded in, as the paper runs FCM inside the combiner) + one reduce;
 //! * **distributed cache** — a read-only key-value store every task can
 //!   read, written by the driver (the paper stores V_init there);
-//! * **scheduling** — map tasks run on a fixed worker pool in waves with
-//!   locality hints;
+//! * **scheduling** — map tasks run on a fixed worker pool, each drained
+//!   from a per-worker queue built from the blocks' locality hints
+//!   ([`crate::hdfs::BlockMeta::preferred_worker`]), stealing only when a
+//!   queue runs dry — Hadoop's data-local task assignment;
 //! * **fault tolerance** — injectable task failures with Hadoop's
 //!   re-execution semantics (4 attempts), exercising combiner idempotence;
 //! * **cost model** — a [`simclock::SimClock`] charging job startup, task
 //!   launch, HDFS I/O and shuffle the way the paper's physical cluster paid
 //!   them, so job-per-iteration baselines show their true relative cost on
 //!   a single machine (DESIGN.md §3);
-//! * **block caching** — map tasks stream their blocks through a shared
-//!   LRU [`cache::BlockCache`] (the paper's "efficient caching design"):
-//!   blocks are decoded inside the map slot, dropped when the task ends,
-//!   and kept warm across the jobs of one engine.
+//! * **block caching + prefetch** — map tasks stream their blocks through a
+//!   shared byte-budgeted LRU [`cache::BlockCache`] (the paper's "efficient
+//!   caching design"): blocks are decoded inside the map slot, dropped when
+//!   the task ends, kept warm across the jobs of one engine, and pulled in
+//!   ahead of demand by the engine's prefetcher so disk latency overlaps
+//!   compute.
 
 pub mod cache;
 pub mod engine;
 pub mod simclock;
 
-pub use cache::{BlockCache, CachedBlock, DistributedCache};
+pub use cache::{BlockCache, CachedBlock, DistributedCache, ReadSource, MIB};
 pub use engine::{Engine, EngineOptions, JobStats};
 pub use simclock::{SimClock, SimCost};
 

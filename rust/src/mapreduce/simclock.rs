@@ -137,9 +137,14 @@ impl SimClock {
         self.cost.compute_s += wall.as_secs_f64() * overhead.compute_scale;
     }
 
-    /// Charge a one-off HDFS scan of `bytes` (e.g. the driver sampling).
-    pub fn charge_scan(&mut self, overhead: &OverheadConfig, bytes: u64) {
-        self.cost.hdfs_io_s += bytes as f64 / (1024.0 * 1024.0) * overhead.hdfs_s_per_mib;
+    /// Charge a one-off HDFS scan of `bytes` (e.g. the driver sampling, or
+    /// wasted prefetch reads); returns the seconds charged so callers can
+    /// fold the same amount into a per-job cost without re-deriving the
+    /// formula.
+    pub fn charge_scan(&mut self, overhead: &OverheadConfig, bytes: u64) -> f64 {
+        let s = bytes as f64 / (1024.0 * 1024.0) * overhead.hdfs_s_per_mib;
+        self.cost.hdfs_io_s += s;
+        s
     }
 
     pub fn cost(&self) -> SimCost {

@@ -1,11 +1,16 @@
-//! A small work-stealing-free thread pool.
+//! A small thread pool with locality-aware map scheduling.
 //!
 //! The offline dependency set has neither tokio nor rayon, so the MapReduce
 //! engine runs on this pool: fixed worker count (one per simulated cluster
-//! node), FIFO queue, panic isolation per task, and a `scope`-style
-//! `map_parallel` helper that preserves input ordering of results.
+//! node), FIFO queue, panic isolation per task, and `scope`-style map
+//! helpers that preserve input ordering of results. The hinted variant
+//! ([`ThreadPool::map_indexed_hinted`]) models Hadoop's data-local task
+//! assignment: each logical worker drains its own queue of hinted tasks and
+//! steals from a neighbour only when its queue is dry.
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -100,6 +105,103 @@ impl ThreadPool {
         drop(tx);
         collect_ordered(n, rx)
     }
+
+    /// Locality-aware variant of [`Self::map_indexed`]: task `i` is queued
+    /// on the worker named by `hints[i]` (wrapping when the hint is out of
+    /// range, so a store sharded for more workers than this pool still
+    /// schedules every block). Each logical worker drains its own queue
+    /// front-to-back — preserving per-worker block order, which is what
+    /// makes the *next* task prefetchable — and steals from the back of the
+    /// first non-dry neighbour only when its own queue is empty.
+    ///
+    /// `f` receives `(task, next)` where `next` is the task that was at the
+    /// head of the same queue when `task` was claimed (the engine's
+    /// prefetch hint), or `None` when that queue drained.
+    ///
+    /// Returns results in index order plus the locality outcome of the
+    /// whole map (own-queue claims vs steals).
+    pub fn map_indexed_hinted<R, F>(
+        &self,
+        n: usize,
+        hints: &[usize],
+        f: F,
+    ) -> (Vec<Result<R, String>>, LocalityStats)
+    where
+        R: Send + 'static,
+        F: Fn(usize, Option<usize>) -> R + Send + Sync + 'static,
+    {
+        let size = self.size();
+        let mut build: Vec<VecDeque<usize>> = (0..size).map(|_| VecDeque::new()).collect();
+        for id in 0..n {
+            let hint = hints.get(id).copied().unwrap_or(id);
+            build[hint % size].push_back(id);
+        }
+        let queues: Arc<Vec<Mutex<VecDeque<usize>>>> =
+            Arc::new(build.into_iter().map(Mutex::new).collect());
+        let local_hits = Arc::new(AtomicUsize::new(0));
+        let steals = Arc::new(AtomicUsize::new(0));
+        let f = Arc::new(f);
+        let (tx, rx): (Sender<(usize, Result<R, String>)>, Receiver<_>) = channel();
+        // One drain task per logical worker. Whichever pool thread picks a
+        // drain task *becomes* that logical worker; with all workers idle at
+        // map start (the engine runs jobs sequentially) this is one drain
+        // task per thread.
+        for w in 0..size {
+            let queues = Arc::clone(&queues);
+            let local_hits = Arc::clone(&local_hits);
+            let steals = Arc::clone(&steals);
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.execute(move || loop {
+                // Own queue first...
+                let mut claimed: Option<(usize, Option<usize>, bool)> = None;
+                {
+                    let mut q = queues[w].lock().expect("poisoned locality queue");
+                    if let Some(id) = q.pop_front() {
+                        claimed = Some((id, q.front().copied(), true));
+                    }
+                }
+                // ...then steal from the back of the first non-dry victim
+                // (back = the task the victim will reach last).
+                if claimed.is_none() {
+                    for off in 1..size {
+                        let v = (w + off) % size;
+                        let mut q = queues[v].lock().expect("poisoned locality queue");
+                        if let Some(id) = q.pop_back() {
+                            claimed = Some((id, q.front().copied(), false));
+                            break;
+                        }
+                    }
+                }
+                let Some((id, next, local)) = claimed else { break };
+                if local {
+                    local_hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    steals.fetch_add(1, Ordering::Relaxed);
+                }
+                let out = catch_unwind(AssertUnwindSafe(|| f(id, next))).map_err(describe_panic);
+                let _ = tx.send((id, out));
+            });
+        }
+        drop(tx);
+        let results = collect_ordered(n, rx);
+        (
+            results,
+            LocalityStats {
+                local_hits: local_hits.load(Ordering::Relaxed),
+                steals: steals.load(Ordering::Relaxed),
+            },
+        )
+    }
+}
+
+/// Locality outcome of a hinted map: how tasks were claimed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LocalityStats {
+    /// Tasks a logical worker took from its own hinted queue.
+    pub local_hits: usize,
+    /// Tasks taken from another worker's queue because one's own was dry.
+    pub steals: usize,
 }
 
 /// Render a caught panic payload as a task-failure message.
@@ -223,5 +325,106 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map_parallel(vec![5, 6], |x: i32| x);
         assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn hinted_map_runs_every_task_once_and_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let hints: Vec<usize> = (0..40).map(|i| i % 4).collect();
+        let (out, stats) = pool.map_indexed_hinted(40, &hints, |i, _next| i * 2);
+        let vals: Vec<usize> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, (0..40).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(stats.local_hits + stats.steals, 40, "every claim is counted once");
+    }
+
+    #[test]
+    fn hinted_map_single_worker_is_all_local() {
+        let pool = ThreadPool::new(1);
+        let hints = vec![0usize; 10];
+        let (out, stats) = pool.map_indexed_hinted(10, &hints, |i, _next| i);
+        assert_eq!(out.len(), 10);
+        assert_eq!(stats, LocalityStats { local_hits: 10, steals: 0 });
+    }
+
+    #[test]
+    fn hinted_map_skewed_queues_trigger_steals() {
+        // All tasks hinted onto worker 0 of a 4-worker pool: the other three
+        // logical workers are dry from the start and must steal. The slow
+        // tasks keep worker 0 busy long enough that at least one steal lands
+        // regardless of scheduling order.
+        let pool = ThreadPool::new(4);
+        let hints = vec![0usize; 16];
+        let (out, stats) = pool.map_indexed_hinted(16, &hints, |i, _next| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            i
+        });
+        assert!(out.iter().all(|r| r.is_ok()));
+        assert_eq!(stats.local_hits + stats.steals, 16);
+        assert!(stats.steals > 0, "dry workers must steal from the loaded queue");
+    }
+
+    #[test]
+    fn hinted_map_out_of_range_hints_degrade_gracefully() {
+        // Hints name workers 5..9 of a 2-worker pool (a store sharded for a
+        // larger cluster): every task must still run exactly once, results
+        // in order, with claims fully accounted.
+        let pool = ThreadPool::new(2);
+        let hints: Vec<usize> = (0..20).map(|i| 5 + i % 5).collect();
+        let (out, stats) = pool.map_indexed_hinted(20, &hints, |i, _next| i + 100);
+        let vals: Vec<usize> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, (0..20).map(|i| i + 100).collect::<Vec<_>>());
+        assert_eq!(stats.local_hits + stats.steals, 20);
+    }
+
+    #[test]
+    fn hinted_map_passes_next_queued_task_as_hint() {
+        // Single worker, all tasks on its queue: the next-hint must be the
+        // task that followed in queue order, and None at the queue's end.
+        let pool = ThreadPool::new(1);
+        let hints = vec![0usize; 5];
+        let seen: Arc<Mutex<Vec<(usize, Option<usize>)>>> = Arc::new(Mutex::new(Vec::new()));
+        let seen_in = Arc::clone(&seen);
+        let (out, _) = pool.map_indexed_hinted(5, &hints, move |i, next| {
+            seen_in.lock().unwrap().push((i, next));
+            i
+        });
+        assert!(out.iter().all(|r| r.is_ok()));
+        let mut log = seen.lock().unwrap().clone();
+        log.sort();
+        assert_eq!(
+            log,
+            vec![(0, Some(1)), (1, Some(2)), (2, Some(3)), (3, Some(4)), (4, None)]
+        );
+    }
+
+    #[test]
+    fn hinted_map_isolates_panics() {
+        let pool = ThreadPool::new(3);
+        let hints: Vec<usize> = (0..9).map(|i| i % 3).collect();
+        let (out, stats) = pool.map_indexed_hinted(9, &hints, |i, _next| {
+            if i == 4 {
+                panic!("boom {i}");
+            }
+            i
+        });
+        for (i, r) in out.iter().enumerate() {
+            if i == 4 {
+                assert!(r.as_ref().unwrap_err().contains("boom"));
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i);
+            }
+        }
+        assert_eq!(stats.local_hits + stats.steals, 9);
+        // Pool still usable after a panic.
+        let (again, _) = pool.map_indexed_hinted(2, &[0, 1], |i, _| i);
+        assert_eq!(again.len(), 2);
+    }
+
+    #[test]
+    fn hinted_map_empty_input() {
+        let pool = ThreadPool::new(2);
+        let (out, stats) = pool.map_indexed_hinted::<usize, _>(0, &[], |i, _| i);
+        assert!(out.is_empty());
+        assert_eq!(stats, LocalityStats::default());
     }
 }

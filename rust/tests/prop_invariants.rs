@@ -200,10 +200,11 @@ fn prop_tiled_kmeans_preserves_aggregates() {
     }
 }
 
-/// Streaming engine + small block cache change nothing about the result:
-/// a pipeline over an on-disk store with cache capacity below the block
-/// count matches the in-memory run bit-for-bit, while peak resident blocks
-/// stay within workers + capacity.
+/// Streaming engine + small byte-budgeted block cache (with locality
+/// scheduling and prefetch on) change nothing about the result: a pipeline
+/// over an on-disk store with a budget far below the store size matches the
+/// in-memory run bit-for-bit, while peak resident bytes stay within
+/// `budget + workers × max_block_bytes`.
 #[test]
 fn prop_small_block_cache_preserves_results() {
     for case in 0..3u64 {
@@ -218,10 +219,11 @@ fn prop_small_block_cache_preserves_results() {
         let disk =
             Arc::new(BlockStore::on_disk("t", &data.features, 256, 4, dir.clone()).unwrap());
         let mem = Arc::new(BlockStore::in_memory("t", &data.features, 256, 4).unwrap());
-        let workers = 4;
-        let cache_blocks = 2; // << 8 blocks
+        let workers = 4u64;
+        let block_bytes = disk.max_block_bytes();
+        let budget = 2 * block_bytes; // room for 2 of the 8 blocks
         let mut engine = Engine::new(
-            EngineOptions { workers, block_cache_blocks: cache_blocks, ..Default::default() },
+            EngineOptions { workers: 4, block_cache_bytes: budget, ..Default::default() },
             cfg.overhead.clone(),
         );
         let a = BigFcm::new(cfg.clone())
@@ -231,11 +233,66 @@ fn prop_small_block_cache_preserves_results() {
         let b = BigFcm::new(cfg).clusters(3).run_store(&mem).unwrap();
         assert_eq!(a.centers.as_slice(), b.centers.as_slice(), "case {case}");
         assert!(
-            engine.block_cache().peak_resident() <= workers + cache_blocks,
-            "case {case}: peak resident {} > workers + capacity",
-            engine.block_cache().peak_resident()
+            engine.block_cache().peak_resident_bytes() <= budget + workers * block_bytes,
+            "case {case}: peak resident bytes {} > budget + workers × block",
+            engine.block_cache().peak_resident_bytes()
         );
         std::fs::remove_dir_all(dir).ok();
+    }
+}
+
+/// Byte-budgeted eviction never exceeds the budget plus one in-flight block
+/// per reader, under concurrent random access with skewed block sizes —
+/// the residency envelope the scale harness relies on, hammered directly
+/// at the cache layer.
+#[test]
+fn prop_byte_budget_bounds_residency_under_concurrency() {
+    for case in 0..5u64 {
+        let mut rng = Pcg::new(40_000 + case);
+        // Skewed blocks: a small block_records over a row count chosen so
+        // the tail block is short.
+        let n = 600 + rng.next_index(900);
+        let d = 2 + rng.next_index(6);
+        let block_records = 64 + rng.next_index(128);
+        let data = blobs(n, d, 2, 0.4, 41_000 + case);
+        let store =
+            Arc::new(BlockStore::in_memory("t", &data.features, block_records, 4).unwrap());
+        let max_block = store.max_block_bytes();
+        let readers = 2 + rng.next_index(4); // 2..=5 concurrent readers
+        let budget = (1 + rng.next_index(4)) as u64 * max_block;
+        let cache = Arc::new(bigfcm::mapreduce::BlockCache::with_budget_bytes(budget));
+
+        let handles: Vec<_> = (0..readers)
+            .map(|r| {
+                let cache = Arc::clone(&cache);
+                let store = Arc::clone(&store);
+                std::thread::spawn(move || {
+                    let mut rng = Pcg::new(42_000 + case * 100 + r as u64);
+                    for _ in 0..200 {
+                        let id = rng.next_index(store.num_blocks());
+                        let block = cache.get_or_read(&store, id).unwrap();
+                        // Touch the data so the block stays in flight.
+                        std::hint::black_box(block.data().get(0, 0));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+
+        let envelope = budget + readers as u64 * max_block;
+        assert!(
+            cache.peak_resident_bytes() <= envelope,
+            "case {case}: peak {} > budget {budget} + {readers} readers × {max_block}",
+            cache.peak_resident_bytes()
+        );
+        assert!(cache.cached_bytes() <= budget, "case {case}");
+        // The meters agree with a fresh drain: clearing with no holders
+        // returns residency to zero (the `clear()` per-job-peak contract).
+        cache.clear();
+        assert_eq!(cache.resident_bytes(), 0, "case {case}");
+        assert_eq!(cache.peak_resident_bytes(), 0, "case {case}");
     }
 }
 

@@ -1,0 +1,77 @@
+#!/usr/bin/env bash
+# Perf-trajectory tracker: run the micro_hotpath bench, emit
+# BENCH_micro_hotpath.json, and diff it against the committed baseline
+# (rust/benches/BENCH_micro_hotpath.baseline.json).
+#
+# FAIL-SOFT BY DESIGN: this script always exits 0. Micro-benchmarks flake
+# on shared CI runners; the diff is a comment-style report for humans (and
+# the uploaded JSON artifact feeds EXPERIMENTS.md §Perf), not a gate.
+set -uo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+BASELINE="benches/BENCH_micro_hotpath.baseline.json"
+CURRENT="BENCH_micro_hotpath.json"
+# Mrec/s regressions beyond this fraction are flagged in the report.
+THRESHOLD="${BENCH_DIFF_THRESHOLD:-0.10}"
+
+echo "== cargo bench --bench micro_hotpath =="
+if ! cargo bench --bench micro_hotpath; then
+    echo "bench run failed (soft): nothing to diff"
+    exit 0
+fi
+
+if [ ! -f "$CURRENT" ]; then
+    echo "bench completed but $CURRENT was not emitted (soft)"
+    exit 0
+fi
+
+if [ ! -f "$BASELINE" ]; then
+    echo ""
+    echo "no committed baseline at rust/$BASELINE — perf trajectory starts here."
+    echo "to begin tracking, commit this run as the baseline:"
+    echo "    cp rust/$CURRENT rust/$BASELINE && git add rust/$BASELINE"
+    exit 0
+fi
+
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "python3 unavailable (soft): skipping diff"
+    exit 0
+fi
+
+python3 - "$BASELINE" "$CURRENT" "$THRESHOLD" <<'EOF'
+import json
+import sys
+
+base_path, cur_path, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
+base = json.load(open(base_path))["results"]
+cur = json.load(open(cur_path))["results"]
+
+print()
+print("== micro_hotpath vs committed baseline ==")
+print(f"{'label':<26} {'base Mrec/s':>12} {'now Mrec/s':>12} {'delta':>8}")
+regressions = []
+for key in sorted(set(base) | set(cur)):
+    b = base.get(key, {}).get("mrec_per_s")
+    c = cur.get(key, {}).get("mrec_per_s")
+    if b is None or c is None:
+        status = "baseline-only" if c is None else "new"
+        print(f"{key:<26} {b or '-':>12} {c or '-':>12} {status:>8}")
+        continue
+    delta = (c - b) / b if b else 0.0
+    mark = ""
+    if delta < -threshold:
+        mark = "  << REGRESSION"
+        regressions.append((key, delta))
+    print(f"{key:<26} {b:>12.2f} {c:>12.2f} {delta:>+7.1%}{mark}")
+
+print()
+if regressions:
+    worst = ", ".join(f"{k} ({d:+.1%})" for k, d in regressions)
+    print(f"report: {len(regressions)} label(s) slower than baseline by >{threshold:.0%}: {worst}")
+    print("(fail-soft: not failing the build; investigate or refresh the baseline)")
+else:
+    print(f"report: no label slower than baseline by >{threshold:.0%}")
+EOF
+
+exit 0
