@@ -9,7 +9,11 @@
 //!   plus one in-flight block per worker);
 //! * **mechanism liveness** — locality hits > 0 and prefetch hits > 0 (the
 //!   scheduler honoured block placement and reads overlapped compute);
-//! * **wall time** — optional `--max-wall-s` ceiling.
+//! * **wall time** — optional `--max-wall-s` ceiling;
+//! * **iteration residency** — an FCM convergence loop over the same
+//!   store through an `IterativeSession` (sticky pruning slab, worker-side
+//!   tree combine, startup charged once) must report `records_pruned > 0`
+//!   after iteration 2.
 //!
 //! ```bash
 //! # CI-sized (default): 1 GiB on disk, 64 MiB cache
@@ -28,8 +32,10 @@ use std::time::Instant;
 use bigfcm::config::{Config, FlagPolicy};
 use bigfcm::coordinator::BigFcm;
 use bigfcm::data::synth::susy_like;
+use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo};
+use bigfcm::fcm::{ChunkBackend, NativeBackend};
 use bigfcm::hdfs::BlockStoreWriter;
-use bigfcm::mapreduce::{Engine, EngineOptions, MIB};
+use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions, MIB};
 
 struct Args {
     /// Target on-disk store size in bytes.
@@ -41,6 +47,11 @@ struct Args {
     block_rows: usize,
     /// 0 disables the wall-time envelope.
     max_wall_s: f64,
+    /// Iteration cap of the iteration-residency phase (0 skips it).
+    session_iters: usize,
+    /// Sticky-slab budget in MiB for the session phase (0 = auto-size to
+    /// hold every block's pruning state).
+    slab_mib: u64,
     /// Keep the generated store (for re-runs) instead of deleting it.
     keep: bool,
     dir: Option<PathBuf>,
@@ -55,6 +66,8 @@ impl Default for Args {
             workers: 4,
             block_rows: 65_536,
             max_wall_s: 0.0,
+            session_iters: 8,
+            slab_mib: 0,
             keep: false,
             dir: None,
             seed: 0xB16FC4,
@@ -85,8 +98,10 @@ fn parse_size(s: &str) -> Option<u64> {
 fn usage() -> ! {
     eprintln!(
         "usage: scale_susy [--bytes SIZE] [--cache-mib N] [--workers N] \
-         [--block-rows N] [--max-wall-s S] [--dir PATH] [--keep] [--seed N]\n\
-         SIZE accepts GiB/MiB/KiB suffixes, e.g. --bytes 2GiB"
+         [--block-rows N] [--max-wall-s S] [--session-iters N] \
+         [--slab-mib N] [--dir PATH] [--keep] [--seed N]\n\
+         SIZE accepts GiB/MiB/KiB suffixes, e.g. --bytes 2GiB; \
+         --slab-mib 0 auto-sizes the pruning slab to the store"
     );
     std::process::exit(2);
 }
@@ -116,6 +131,12 @@ fn parse_args() -> Args {
             }
             "--max-wall-s" => {
                 args.max_wall_s = val("--max-wall-s").parse().unwrap_or_else(|_| usage());
+            }
+            "--session-iters" => {
+                args.session_iters = val("--session-iters").parse().unwrap_or_else(|_| usage());
+            }
+            "--slab-mib" => {
+                args.slab_mib = val("--slab-mib").parse().unwrap_or_else(|_| usage());
             }
             "--dir" => args.dir = Some(PathBuf::from(val("--dir"))),
             "--keep" => args.keep = true,
@@ -209,12 +230,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let t1 = Instant::now();
     // Errors may `?` straight out: `cleanup` removes the store on every
     // exit path, including generation-phase failures above.
-    let run = BigFcm::new(cfg).clusters(2).run_with_engine(&store, &mut engine)?;
+    let run = BigFcm::new(cfg.clone())
+        .clusters(2)
+        .run_with_engine(&store, &mut engine)?;
     let wall_s = t1.elapsed().as_secs_f64();
 
-    let bc = engine.block_cache();
     let max_block = store.max_block_bytes();
     let envelope = budget + args.workers as u64 * max_block;
+    // Snapshot the pipeline phase's cache outcome before the session phase
+    // borrows the engine mutably (session iterations reset the per-job
+    // peak meters as part of their residency contract).
+    let pipeline_peak = engine.block_cache().peak_resident_bytes();
     println!("\n=== scale_susy results ===");
     println!(
         "pipeline wall {wall_s:.1}s  ({:.1} MiB/s through FCM), modelled cluster {:.0}s",
@@ -229,18 +255,122 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "cache: budget {:.0} MiB, peak resident {:.1} MiB (envelope {:.1} MiB), \
          hits {} misses {} prefetches {}",
         mib(budget),
-        mib(bc.peak_resident_bytes()),
+        mib(pipeline_peak),
         mib(envelope),
-        bc.hits(),
-        bc.misses(),
-        bc.prefetches()
+        engine.block_cache().hits(),
+        engine.block_cache().misses(),
+        engine.block_cache().prefetches()
     );
 
+    // ---- Phase 3: iteration-residency (sticky slab + pruned passes) ----
+    // An FCM convergence loop over the same store through an
+    // IterativeSession, warm-started from the pipeline's centers: the
+    // first pass refreshes the slab bounds, later passes serve bounded
+    // records from the slab and tree-combine partials on the workers.
+    let mut session_run = None;
+    if args.session_iters > 0 {
+        println!(
+            "\n=== iteration-residency phase (≤ {} iterations) ===",
+            args.session_iters
+        );
+        let params = FcmParams {
+            epsilon: 1e-12, // run the full budget of iterations
+            max_iterations: args.session_iters,
+            ..Default::default()
+        };
+        let backend: Arc<dyn ChunkBackend> = Arc::new(NativeBackend);
+        // Full pruning coverage needs every block's state resident:
+        // ≈ 4·(C+2) bytes/record for FCM (d_min + obj + u^m rows) plus a
+        // small per-block constant — far below the slab budget at CI
+        // scale, but a 1 GiB store needs a few hundred MiB. The harness's
+        // job is to demonstrate the mechanism, so it auto-sizes (with 25%
+        // headroom) unless --slab-mib pins the budget; a deliberately
+        // undersized slab just degrades to exact passes (metered as
+        // slab_evictions), which is the deployment tradeoff, not a bug.
+        let mut prune = PruneConfig::from_cluster(&cfg.cluster);
+        if args.slab_mib > 0 {
+            prune.slab_bytes = args.slab_mib * MIB;
+        } else {
+            let per_block = args.block_rows as u64 * 4 * (cfg.fcm.clusters as u64 + 2) + 4096;
+            let auto = per_block * n_blocks as u64 * 5 / 4;
+            prune.slab_bytes = prune.slab_bytes.max(auto);
+        }
+        println!(
+            "slab budget {:.0} MiB ({} blocks × ≈{:.2} MiB pruning state)",
+            mib(prune.slab_bytes),
+            n_blocks,
+            mib(args.block_rows as u64 * 4 * (cfg.fcm.clusters as u64 + 2))
+        );
+        let t2 = Instant::now();
+        let srun = run_fcm_session(
+            &mut engine,
+            &store,
+            backend,
+            SessionAlgo::Fcm,
+            run.centers.clone(),
+            &params,
+            &prune,
+            SessionOptions::default(),
+        )?;
+        let session_wall = t2.elapsed().as_secs_f64();
+        for (i, s) in srun.per_iteration.iter().enumerate() {
+            println!(
+                "  iter {:>2}: pruned {:>9} records, reduce parts {:>2} (depth {}), \
+                 reduce wall {:.3} ms, slab {:.1} MiB ({} evictions)",
+                i + 1,
+                s.records_pruned,
+                s.reduce_parts,
+                s.combine_depth,
+                s.reduce_wall_s * 1e3,
+                mib(s.slab_bytes),
+                s.slab_evictions
+            );
+        }
+        println!(
+            "session: {} iterations in {session_wall:.1}s wall ({:.1} MiB/s·iter), \
+             {} records pruned total, startup charged once: {}",
+            srun.jobs,
+            mib(store.total_bytes()) * srun.jobs as f64 / session_wall.max(1e-9),
+            srun.records_pruned,
+            (srun.sim.job_startup_s - cfg.overhead.job_startup_s).abs() < 1e-9
+        );
+        session_run = Some(srun);
+    }
+
     let mut failures = Vec::new();
-    if bc.peak_resident_bytes() > envelope {
+    if let Some(srun) = &session_run {
+        if args.session_iters >= 3 {
+            let pruned_after_two: u64 = srun
+                .per_iteration
+                .iter()
+                .skip(2)
+                .map(|s| s.records_pruned)
+                .sum();
+            if pruned_after_two == 0 {
+                failures.push(
+                    "iteration-residency: no records pruned after iteration 2".to_string(),
+                );
+            }
+        }
+        if (srun.sim.job_startup_s - cfg.overhead.job_startup_s).abs() > 1e-9 {
+            failures.push(format!(
+                "iteration-residency: resident loop charged startup {:.1}s (expected one {:.1}s charge)",
+                srun.sim.job_startup_s, cfg.overhead.job_startup_s
+            ));
+        }
+    }
+    // Both phases must respect the residency envelope: the pipeline's
+    // snapshot and the max over every session iteration's peak (the
+    // session resets the per-job meters between iterations, so the
+    // loop-wide figure comes from the run result, not a post-loop gauge).
+    let session_peak = session_run
+        .as_ref()
+        .map(|s| s.peak_resident_bytes)
+        .unwrap_or(0);
+    if pipeline_peak.max(session_peak) > envelope {
         failures.push(format!(
             "resident-byte envelope violated: peak {} > budget {} + {} workers x {}",
-            bc.peak_resident_bytes(),
+            pipeline_peak.max(session_peak),
             budget,
             args.workers,
             max_block

@@ -1,17 +1,26 @@
 //! `cargo bench --bench micro_hotpath` — micro-benchmarks of the per-chunk
 //! hot path (the §Perf working set): scalar vs tiled native chunk step
 //! (an honest same-run A/B), chunk-size sensitivity, PJRT marshalling
-//! overhead. Results feed EXPERIMENTS.md §Perf and are also emitted as
+//! overhead, and the **session-vs-per-job A/B** (iteration-resident
+//! session with pruning + tree combine against the Mahout-style
+//! one-job-per-iteration control, same seeds, same store). Results feed
+//! EXPERIMENTS.md §Perf / §Iteration-residency and are also emitted as
 //! machine-readable `BENCH_micro_hotpath.json` (label → best-of-N seconds,
-//! Mrec/s) so the perf trajectory is tracked across PRs.
+//! Mrec/s, plus the `session` counter object) so the perf trajectory is
+//! tracked across PRs.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
+use bigfcm::config::OverheadConfig;
 use bigfcm::data::synth::susy_like;
+use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo};
 use bigfcm::fcm::native::{fcm_partials_native, fcm_partials_scalar};
-use bigfcm::fcm::ChunkBackend;
+use bigfcm::fcm::{ChunkBackend, NativeBackend};
+use bigfcm::hdfs::BlockStore;
 use bigfcm::json;
+use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions};
 use bigfcm::runtime::PjrtRuntime;
 
 const N: usize = 65_536;
@@ -114,6 +123,85 @@ fn main() {
         println!("(artifacts/ missing — run `make artifacts` for the PJRT rows)");
     }
 
+    // --- Iteration-resident session vs per-job A/B ---------------------
+    // Same store, same seeds, same epsilon: the Mahout-style control pays
+    // job startup + flat reduce every iteration and never prunes; the
+    // session charges startup once, tree-combines partials on the workers
+    // and serves bounded records from the sticky slab.
+    println!("\n== session vs per-job (FCM loop, 32 blocks x 2048 rows) ==");
+    let store =
+        Arc::new(BlockStore::in_memory("susy", &data.features, 2_048, 4).expect("shard store"));
+    let mut rng = bigfcm::prng::Pcg::new(0xAB);
+    let v0 = bigfcm::fcm::seeding::random_records(&data.features, 6, &mut rng);
+    let params = FcmParams { epsilon: 1e-9, max_iterations: 60, ..Default::default() };
+    let backend: Arc<dyn ChunkBackend> = Arc::new(NativeBackend);
+    let overhead = OverheadConfig::default();
+
+    let mut per_job_engine = Engine::new(EngineOptions::default(), overhead.clone());
+    let per_job = run_fcm_session(
+        &mut per_job_engine,
+        &store,
+        Arc::clone(&backend),
+        SessionAlgo::Fcm,
+        v0.clone(),
+        &params,
+        &PruneConfig::disabled(),
+        SessionOptions::per_job(),
+    )
+    .expect("per-job arm");
+
+    let mut session_engine = Engine::new(EngineOptions::default(), overhead.clone());
+    let session = run_fcm_session(
+        &mut session_engine,
+        &store,
+        backend,
+        SessionAlgo::Fcm,
+        v0,
+        &params,
+        &PruneConfig::default(),
+        SessionOptions::default(),
+    )
+    .expect("session arm");
+
+    let wall_sum = |runs: &[bigfcm::mapreduce::JobStats]| -> f64 {
+        runs.iter().map(|s| s.reduce_wall_s).sum()
+    };
+    let per_job_reduce_wall = wall_sum(&per_job.per_iteration);
+    let session_reduce_wall = wall_sum(&session.per_iteration);
+    let combine_depth = session
+        .per_iteration
+        .iter()
+        .map(|s| s.combine_depth)
+        .max()
+        .unwrap_or(0);
+    // Modelled reduce wall scales the measured reduce seconds by the
+    // calibrated compute factor — the comparison the session claim is
+    // about (per-iteration parts funneled: O(blocks) vs O(log blocks)).
+    let scale = overhead.compute_scale;
+    println!(
+        "per-job: {} jobs, reduce wall {:.3} ms (modelled {:.3} ms), modelled total {:.0}s, objective {:.3e}",
+        per_job.jobs,
+        per_job_reduce_wall * 1e3,
+        per_job_reduce_wall * scale * 1e3,
+        per_job.sim.total_s(),
+        per_job.result.objective
+    );
+    println!(
+        "session: {} jobs, reduce wall {:.3} ms (modelled {:.3} ms), modelled total {:.0}s, objective {:.3e}",
+        session.jobs,
+        session_reduce_wall * 1e3,
+        session_reduce_wall * scale * 1e3,
+        session.sim.total_s(),
+        session.result.objective
+    );
+    println!(
+        "session counters: records_pruned {}, combine depth {}, reduce parts/iter {} -> {}",
+        session.records_pruned,
+        combine_depth,
+        per_job.per_iteration.first().map(|s| s.reduce_parts).unwrap_or(0),
+        session.per_iteration.first().map(|s| s.reduce_parts).unwrap_or(0),
+    );
+
     // Machine-readable emission for cross-PR tracking.
     let results = json::Value::Object(
         rows_out
@@ -129,10 +217,23 @@ fn main() {
             })
             .collect(),
     );
+    let session_obj = json::obj(vec![
+        ("per_job_jobs", json::num(per_job.jobs as f64)),
+        ("session_jobs", json::num(session.jobs as f64)),
+        ("per_job_reduce_wall_s", json::num(per_job_reduce_wall)),
+        ("session_reduce_wall_s", json::num(session_reduce_wall)),
+        ("per_job_modelled_s", json::num(per_job.sim.total_s())),
+        ("session_modelled_s", json::num(session.sim.total_s())),
+        ("records_pruned", json::num(session.records_pruned as f64)),
+        ("combine_depth", json::num(combine_depth as f64)),
+        ("per_job_objective", json::num(per_job.result.objective)),
+        ("session_objective", json::num(session.result.objective)),
+    ]);
     let doc = json::obj(vec![
         ("bench", json::s("micro_hotpath")),
         ("workload", json::s("susy_like 65536x18 C=6")),
         ("results", results),
+        ("session", session_obj),
     ]);
     let path = "BENCH_micro_hotpath.json";
     match std::fs::write(path, json::to_string(&doc)) {

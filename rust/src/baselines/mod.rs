@@ -18,7 +18,7 @@ use crate::error::{Error, Result};
 use crate::fcm::seeding::random_records;
 use crate::fcm::{max_center_shift2, ChunkBackend, Partials};
 use crate::hdfs::BlockStore;
-use crate::mapreduce::{DistributedCache, Engine, MapReduceJob, SimCost, TaskCtx};
+use crate::mapreduce::{DistributedCache, Engine, MapReduceJob, SessionOptions, SimCost, TaskCtx};
 use crate::prng::Pcg;
 
 /// Which baseline algorithm an iteration job runs.
@@ -96,8 +96,21 @@ impl MapReduceJob for IterationJob {
         Ok(acc)
     }
 
+    // `Partials` merge pairwise — but the baseline runner pins the flat
+    // reduce (`SessionOptions::per_job`) so the Mahout model stays honest;
+    // the combiner is only exercised when a caller opts a baseline job
+    // into a tree-combining engine explicitly.
+    fn supports_combine(&self) -> bool {
+        true
+    }
+
+    fn combine(&self, mut left: Partials, right: Partials) -> Result<Partials> {
+        left.merge(&right);
+        Ok(left)
+    }
+
     fn shuffle_bytes(&self, part: &Partials) -> u64 {
-        (part.v_num.rows() * part.v_num.cols() * 4 + part.w_acc.len() * 8 + 8) as u64
+        part.encoded_bytes()
     }
 
     fn name(&self) -> &str {
@@ -131,6 +144,12 @@ pub fn run_baseline(
         backend,
     });
 
+    // The baselines run through the session API like every iterative
+    // caller now does, but with the per-job control options: full job
+    // startup every iteration and the flat reduce funnel — exactly how
+    // Mahout drives Hadoop, and the A/B control for the
+    // iteration-resident session loop (`fcm::loops::run_fcm_session`).
+    let mut session = engine.session(store, SessionOptions::per_job());
     let mut iterations = 0usize;
     let mut converged = false;
     let mut objective = f64::INFINITY;
@@ -139,7 +158,7 @@ pub fn run_baseline(
         // Fresh cache per job (Hadoop re-distributes it each submission).
         let cache = Arc::new(DistributedCache::new());
         cache.put_matrix(KEY_CENTERS, centers.clone());
-        let (partials, _stats) = engine.run_job(Arc::clone(&job), store, cache)?;
+        let (partials, _stats) = session.run_iteration(Arc::clone(&job), cache)?;
         objective = partials.objective;
         let new_centers = partials.into_centers(&centers);
         let shift = max_center_shift2(&centers, &new_centers);
@@ -149,14 +168,10 @@ pub fn run_baseline(
             break;
         }
     }
+    drop(session);
 
-    let mut sim = engine.clock().cost();
     // Report only this run's share when the engine is reused.
-    sim.job_startup_s -= sim_before.job_startup_s;
-    sim.task_launch_s -= sim_before.task_launch_s;
-    sim.hdfs_io_s -= sim_before.hdfs_io_s;
-    sim.shuffle_s -= sim_before.shuffle_s;
-    sim.compute_s -= sim_before.compute_s;
+    let sim = engine.clock().cost().delta(&sim_before);
 
     Ok(BaselineRun {
         algo,

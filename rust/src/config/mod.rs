@@ -30,6 +30,12 @@ pub struct ClusterConfig {
     /// Overlap each worker's next block read with the current block's
     /// compute (the engine's prefetcher thread).
     pub prefetch: bool,
+    /// Merge map outputs pairwise on the worker pool as slots drain, for
+    /// jobs that implement a combiner (the worker-side tree reduce).
+    pub tree_combine: bool,
+    /// Sticky-slab byte budget for iteration-resident sessions, in MiB —
+    /// the per-block pruning state kernels persist between iterations.
+    pub slab_mib: usize,
 }
 
 impl Default for ClusterConfig {
@@ -41,6 +47,8 @@ impl Default for ClusterConfig {
             reducers: 1,
             cache_mib: 256,
             prefetch: true,
+            tree_combine: true,
+            slab_mib: 64,
         }
     }
 }
@@ -248,6 +256,10 @@ impl Config {
             "cluster.prefetch" => {
                 self.cluster.prefetch = value.parse::<bool>().map_err(|_| bad(key, value))?
             }
+            "cluster.tree_combine" => {
+                self.cluster.tree_combine = value.parse::<bool>().map_err(|_| bad(key, value))?
+            }
+            "cluster.slab_mib" => self.cluster.slab_mib = num!(usize),
             "overhead.job_startup_s" => self.overhead.job_startup_s = num!(f64),
             "overhead.task_launch_s" => self.overhead.task_launch_s = num!(f64),
             "overhead.shuffle_s_per_mib" => self.overhead.shuffle_s_per_mib = num!(f64),
@@ -313,12 +325,16 @@ mod tests {
         c.set_kv("cluster.workers=16").unwrap();
         c.set_kv("cluster.cache_mib=64").unwrap();
         c.set_kv("cluster.prefetch=false").unwrap();
+        c.set_kv("cluster.tree_combine=false").unwrap();
+        c.set_kv("cluster.slab_mib=16").unwrap();
         c.set_kv("fcm.epsilon=5e-3").unwrap();
         c.set_kv("fcm.driver_preclustering=false").unwrap();
         c.set_kv("runtime.backend=native").unwrap();
         assert_eq!(c.cluster.workers, 16);
         assert_eq!(c.cluster.cache_mib, 64);
         assert!(!c.cluster.prefetch);
+        assert!(!c.cluster.tree_combine);
+        assert_eq!(c.cluster.slab_mib, 16);
         assert_eq!(c.fcm.epsilon, 5e-3);
         assert!(!c.fcm.driver_preclustering);
         assert_eq!(c.backend, Backend::Native);

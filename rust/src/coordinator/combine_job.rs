@@ -90,6 +90,31 @@ impl MapReduceJob for CombineJob {
         }
     }
 
+    /// Tree combine only when the single-reducer funnel runs: with
+    /// `cluster.reducers > 1` the reduce's own two-level WFCM grouping is
+    /// keyed on the incoming part count, and pre-merged parts would
+    /// silently bypass it — so the engine-level tree stands down and the
+    /// multi-reducer path behaves exactly as before.
+    fn supports_combine(&self) -> bool {
+        self.cfg.cluster.reducers <= 1
+    }
+
+    /// Worker-side combine: **ordered pool concatenation**. Lossless and
+    /// order-preserving — the reduce sees exactly the weighted-center rows
+    /// a flat funnel would, in the same (block) order, so the tree path is
+    /// a bit-identical drop-in even though `CombinerOut` pooling is not
+    /// commutative. (The real O(blocks) → O(log blocks) reduction belongs
+    /// to the `Partials`-merging iterative jobs, whose combine keeps the
+    /// payload at C×d; this job's single reduce is already cheap.)
+    fn combine(&self, mut left: CombinerOut, right: CombinerOut) -> Result<CombinerOut> {
+        for i in 0..right.centers.rows() {
+            left.centers.push_row(right.centers.row(i));
+        }
+        left.weights.extend_from_slice(&right.weights);
+        left.iterations = left.iterations.max(right.iterations);
+        Ok(left)
+    }
+
     fn reduce(&self, parts: Vec<CombinerOut>, ctx: &TaskCtx) -> Result<WfcmpbResult> {
         if parts.is_empty() {
             return Err(Error::Job("reduce received no combiner outputs".into()));
@@ -298,6 +323,28 @@ mod tests {
         let j = job(2, 1);
         let ctx = TaskCtx { cache: &cache, task_id: 0, attempt: 0 };
         assert!(j.map_combine(&data.features, &ctx).is_err());
+    }
+
+    #[test]
+    fn worker_combine_is_ordered_pool_concat() {
+        let j = job(3, 1);
+        assert!(j.supports_combine());
+        let a = CombinerOut {
+            centers: Matrix::from_rows(&[vec![1.0, 0.0]]),
+            weights: vec![2.0],
+            iterations: 3,
+        };
+        let b = CombinerOut {
+            centers: Matrix::from_rows(&[vec![0.0, 1.0]]),
+            weights: vec![5.0],
+            iterations: 7,
+        };
+        let c = j.combine(a, b).unwrap();
+        assert_eq!(c.centers.rows(), 2);
+        assert_eq!(c.centers.row(0), &[1.0, 0.0]);
+        assert_eq!(c.centers.row(1), &[0.0, 1.0]);
+        assert_eq!(c.weights, vec![2.0, 5.0]);
+        assert_eq!(c.iterations, 7);
     }
 
     #[test]

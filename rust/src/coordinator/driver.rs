@@ -12,6 +12,7 @@
 //! over a tiny sample, so it executes on the native backend; its time is
 //! still charged to the modelled clock.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::Config;
@@ -20,8 +21,7 @@ use crate::fcm::loops::{run_fcm, FcmParams, Variant};
 use crate::fcm::seeding::{kmeanspp, random_records};
 use crate::fcm::wfcmpb::wfcmpb;
 use crate::fcm::ChunkBackend;
-use crate::hdfs::BlockStore;
-use crate::mapreduce::{DistributedCache, Engine};
+use crate::mapreduce::{DistributedCache, IterativeSession};
 use crate::prng::Pcg;
 use crate::sampling::parker_hall_sample_size;
 
@@ -49,14 +49,17 @@ pub struct DriverDecision {
     pub iterations: usize,
 }
 
-/// Run the driver job; writes `v_init`, `flag` (+ block size) to the cache.
+/// Run the driver job; writes `v_init`, `flag` (+ block size) to the
+/// cache. Runs inside the pipeline's [`IterativeSession`], which spans the
+/// driver and the MR phase so the engine's pool/cache/prefetcher stay warm
+/// between them and driver-side charges land on the session's clock.
 pub fn run_driver(
     cfg: &Config,
-    store: &BlockStore,
     backend: &dyn ChunkBackend,
     cache: &DistributedCache,
-    engine: &mut Engine,
+    session: &mut IterativeSession<'_>,
 ) -> Result<DriverDecision> {
+    let store = Arc::clone(session.store());
     let c = cfg.fcm.clusters;
     let mut rng = Pcg::new(cfg.seed);
 
@@ -85,7 +88,7 @@ pub fn run_driver(
     let sample = store.sample_records(sample_size, &mut rng)?;
     // Charge the sampling scan: proportional share of the store bytes.
     let frac = sample_size as f64 / store.total_rows().max(1) as f64;
-    engine.charge_scan((store.total_bytes() as f64 * frac) as u64);
+    session.charge_scan((store.total_bytes() as f64 * frac) as u64);
 
     let params = FcmParams {
         m: cfg.fcm.fuzzifier,
@@ -139,7 +142,7 @@ pub fn run_driver(
     }
     let t_wfcmpb = t0.elapsed();
 
-    engine.charge_local(t_fcm + t_wfcmpb);
+    session.charge_local(t_fcm + t_wfcmpb);
 
     // Flag = 1 ⇔ plain FCM was faster (Algorithm 3 line 6). The race is the
     // paper's design and is timing-dependent; the Force* policies pin it for
@@ -171,14 +174,15 @@ mod tests {
     use crate::config::Config;
     use crate::data::synth::blobs;
     use crate::fcm::NativeBackend;
-    use crate::mapreduce::EngineOptions;
+    use crate::hdfs::BlockStore;
+    use crate::mapreduce::{Engine, EngineOptions, SessionOptions};
 
-    fn setup(n: usize) -> (Config, BlockStore, Engine) {
+    fn setup(n: usize) -> (Config, Arc<BlockStore>, Engine) {
         let mut cfg = Config::default();
         cfg.fcm.clusters = 3;
         cfg.fcm.driver_epsilon = 1e-8;
         let data = blobs(n, 4, 3, 0.3, 42);
-        let store = BlockStore::in_memory("t", &data.features, 256, 4).unwrap();
+        let store = Arc::new(BlockStore::in_memory("t", &data.features, 256, 4).unwrap());
         let engine = Engine::new(EngineOptions::default(), cfg.overhead.clone());
         (cfg, store, engine)
     }
@@ -187,7 +191,8 @@ mod tests {
     fn driver_publishes_seeds_and_flag() {
         let (cfg, store, mut engine) = setup(2000);
         let cache = DistributedCache::new();
-        let d = run_driver(&cfg, &store, &NativeBackend, &cache, &mut engine).unwrap();
+        let mut session = engine.session(&store, SessionOptions::default());
+        let d = run_driver(&cfg, &NativeBackend, &cache, &mut session).unwrap();
         assert!(d.ran);
         assert!(d.sample_size > 100, "sample {}", d.sample_size);
         let v = cache.get_matrix(KEY_V_INIT).unwrap();
@@ -202,7 +207,8 @@ mod tests {
         cfg.fcm.clusters = 5;
         cfg.fcm.sample_rel_diff = 0.10;
         let cache = DistributedCache::new();
-        let d = run_driver(&cfg, &store, &NativeBackend, &cache, &mut engine).unwrap();
+        let mut session = engine.session(&store, SessionOptions::default());
+        let d = run_driver(&cfg, &NativeBackend, &cache, &mut session).unwrap();
         assert_eq!(d.sample_size, 3184); // the paper's worked example
     }
 
@@ -210,7 +216,8 @@ mod tests {
     fn sample_clamped_to_population() {
         let (cfg, store, mut engine) = setup(300);
         let cache = DistributedCache::new();
-        let d = run_driver(&cfg, &store, &NativeBackend, &cache, &mut engine).unwrap();
+        let mut session = engine.session(&store, SessionOptions::default());
+        let d = run_driver(&cfg, &NativeBackend, &cache, &mut session).unwrap();
         assert_eq!(d.sample_size, 300);
     }
 
@@ -219,7 +226,8 @@ mod tests {
         let (mut cfg, store, mut engine) = setup(1000);
         cfg.fcm.driver_preclustering = false;
         let cache = DistributedCache::new();
-        let d = run_driver(&cfg, &store, &NativeBackend, &cache, &mut engine).unwrap();
+        let mut session = engine.session(&store, SessionOptions::default());
+        let d = run_driver(&cfg, &NativeBackend, &cache, &mut session).unwrap();
         assert!(!d.ran);
         assert_eq!(d.iterations, 0);
         // Seeds still published (random records).
@@ -233,10 +241,11 @@ mod tests {
         cfg.fcm.clusters = 3;
         cfg.fcm.driver_epsilon = 1e-10;
         let data = blobs(3000, 3, 3, 0.15, 7);
-        let store = BlockStore::in_memory("t", &data.features, 512, 4).unwrap();
+        let store = Arc::new(BlockStore::in_memory("t", &data.features, 512, 4).unwrap());
         let mut engine = Engine::new(EngineOptions::default(), cfg.overhead.clone());
         let cache = DistributedCache::new();
-        run_driver(&cfg, &store, &NativeBackend, &cache, &mut engine).unwrap();
+        let mut session = engine.session(&store, SessionOptions::default());
+        run_driver(&cfg, &NativeBackend, &cache, &mut session).unwrap();
         let seeds = cache.get_matrix(KEY_V_INIT).unwrap();
         // Each seed within 0.5 of some data point (pre-clustered, not random
         // box corners).

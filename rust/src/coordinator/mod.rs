@@ -26,7 +26,9 @@ use crate::data::{Dataset, Matrix};
 use crate::error::Result;
 use crate::fcm::{ChunkBackend, ClusterResult, NativeBackend};
 use crate::hdfs::BlockStore;
-use crate::mapreduce::{DistributedCache, Engine, EngineOptions, JobStats, SimCost};
+use crate::mapreduce::{
+    DistributedCache, Engine, EngineOptions, JobStats, SessionOptions, SimCost,
+};
 
 /// Everything a BigFCM run produces.
 #[derive(Clone, Debug)]
@@ -137,20 +139,26 @@ impl BigFcm {
 
     /// Run the full pipeline on a caller-provided engine (so several runs
     /// can share one SimClock and one warm block cache, e.g. in the bench
-    /// harness).
+    /// harness). One [`crate::mapreduce::IterativeSession`] spans both
+    /// phases: the driver's sampling/racing and the single MR job share
+    /// the warm pool, cache and prefetcher, and the job's combiner outputs
+    /// merge on the workers (tree combine) when `cluster.tree_combine` is
+    /// on.
     pub fn run_with_engine(&self, store: &Arc<BlockStore>, engine: &mut Engine) -> Result<BigFcmRun> {
         self.cfg.validate()?;
         let backend: Arc<dyn ChunkBackend> =
             self.backend.clone().unwrap_or_else(|| Arc::new(NativeBackend));
         let started = Instant::now();
+        let cache = Arc::new(DistributedCache::new());
+        let mut session = engine.session(store, SessionOptions::default());
 
         // ---- Phase 1: driver job -------------------------------------
-        let cache = Arc::new(DistributedCache::new());
-        let decision = run_driver(&self.cfg, store, backend.as_ref(), &cache, engine)?;
+        let decision = run_driver(&self.cfg, backend.as_ref(), &cache, &mut session)?;
 
         // ---- Phase 2: the single MR job ------------------------------
         let job = Arc::new(CombineJob::new(self.cfg.clone(), Arc::clone(&backend)));
-        let (reduced, stats) = engine.run_job(Arc::clone(&job), store, Arc::clone(&cache))?;
+        let (reduced, stats) = session.run_iteration(Arc::clone(&job), Arc::clone(&cache))?;
+        drop(session);
 
         Ok(BigFcmRun {
             centers: reduced.result.centers,

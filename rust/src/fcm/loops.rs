@@ -1,14 +1,28 @@
 //! Outer iteration loops: weighted FCM (fast or classic chunk math) and
-//! Lloyd's K-Means, generic over the chunk backend.
+//! Lloyd's K-Means, generic over the chunk backend — plus the
+//! **iteration-resident distributed loop** ([`run_fcm_session`]), where
+//! each iteration is one MapReduce job over a block store run through an
+//! [`crate::mapreduce::IterativeSession`]: job startup charged once, warm
+//! block cache and prefetcher across iterations, worker-side tree combine
+//! of the per-block [`Partials`], and shift-bounded pruning against the
+//! session's sticky per-block state slab.
 //!
 //! Layer 3 owns these loops by design — the AOT artifacts only compute one
 //! pass of partials, so convergence policy (epsilon on the max squared
 //! center shift, iteration cap) lives here in rust, identical for the
 //! native and PJRT backends.
 
+use std::sync::{Arc, Mutex};
+
 use crate::data::Matrix;
 use crate::error::{Error, Result};
+use crate::fcm::native::BlockPruneState;
 use crate::fcm::{max_center_shift2, ChunkBackend, ClusterResult, Partials};
+use crate::hdfs::BlockStore;
+use crate::mapreduce::{
+    DistributedCache, Engine, JobStats, MapReduceJob, SessionOptions, SimCost, SlabState,
+    StateSlab, TaskCtx, MIB,
+};
 
 /// FCM chunk-math variant.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -129,6 +143,317 @@ pub fn kmeans_loop(
         }
     }
     Ok(ClusterResult { centers: v, weights, iterations, objective, converged })
+}
+
+// ---------------------------------------------------------------------------
+// Iteration-resident distributed loop
+// ---------------------------------------------------------------------------
+
+/// Pruning knobs of an iteration-resident session run.
+#[derive(Clone, Copy, Debug)]
+pub struct PruneConfig {
+    /// Master switch; disabled sessions run every pass exactly.
+    pub enabled: bool,
+    /// Relative distance-perturbation tolerance: a record replays its
+    /// cached contribution while the accumulated center shift stays below
+    /// `tolerance × d_min(record)`.
+    pub tolerance: f64,
+    /// Force an exact (bound-refreshing) pass at least every this many
+    /// passes — the drift bound.
+    pub refresh_every: usize,
+    /// Sticky-slab byte budget (see `cluster.slab_mib`).
+    pub slab_bytes: u64,
+}
+
+impl Default for PruneConfig {
+    fn default() -> Self {
+        Self { enabled: true, tolerance: 5e-3, refresh_every: 4, slab_bytes: 64 * MIB }
+    }
+}
+
+impl PruneConfig {
+    /// The exact control arm: no pruning, no slab.
+    pub fn disabled() -> Self {
+        Self { enabled: false, ..Default::default() }
+    }
+
+    /// Budget the slab from the cluster config.
+    pub fn from_cluster(cluster: &crate::config::ClusterConfig) -> Self {
+        Self { slab_bytes: cluster.slab_mib as u64 * MIB, ..Default::default() }
+    }
+}
+
+/// Which per-iteration partials the session loop computes. The FCM arm
+/// takes its Fast/Classic chunk math from [`FcmParams::variant`], exactly
+/// like [`run_fcm`] — one source of truth, no redundant specification.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionAlgo {
+    /// Weighted FCM ([`FcmParams::variant`] picks the chunk math).
+    Fcm,
+    /// Lloyd's K-Means.
+    KMeans,
+}
+
+/// Distributed-cache key the session loop publishes the centers under
+/// (overwritten in place each iteration — the cache itself is resident).
+const KEY_SESSION_CENTERS: &str = "session_centers";
+
+/// The per-iteration job: one pass of partials for every block against the
+/// current centers, pruned against the session's sticky slab, merged
+/// pairwise on the pool (tree combine) on the way to the reduce.
+struct SessionPartialsJob {
+    algo: SessionAlgo,
+    variant: Variant,
+    m: f64,
+    backend: Arc<dyn ChunkBackend>,
+    slab: Arc<StateSlab<BlockPruneState>>,
+    prune: PruneConfig,
+    /// Shared all-ones weight buffer, grown on demand — per-task weight
+    /// allocation would put an O(rows) memset on the whole-block pruned
+    /// path, whose entire point is to touch no record.
+    ones: Mutex<Arc<Vec<f32>>>,
+}
+
+impl SessionPartialsJob {
+    fn new(
+        algo: SessionAlgo,
+        variant: Variant,
+        m: f64,
+        backend: Arc<dyn ChunkBackend>,
+        slab: Arc<StateSlab<BlockPruneState>>,
+        prune: PruneConfig,
+    ) -> Self {
+        Self { algo, variant, m, backend, slab, prune, ones: Mutex::new(Arc::new(Vec::new())) }
+    }
+
+    /// All-ones weights of at least `n` entries (callers slice to size).
+    fn uniform_weights(&self, n: usize) -> Arc<Vec<f32>> {
+        let mut buf = self.ones.lock().expect("weights buffer poisoned");
+        if buf.len() < n {
+            *buf = Arc::new(vec![1.0f32; n]);
+        }
+        Arc::clone(&buf)
+    }
+
+    fn exact_pass(&self, block: &Matrix, v: &Matrix, w: &[f32]) -> Result<Partials> {
+        match (self.algo, self.variant) {
+            (SessionAlgo::Fcm, Variant::Fast) => self.backend.fcm_partials(block, v, w, self.m),
+            (SessionAlgo::Fcm, Variant::Classic) => {
+                self.backend.classic_partials(block, v, w, self.m)
+            }
+            (SessionAlgo::KMeans, _) => self.backend.kmeans_partials(block, v, w),
+        }
+    }
+}
+
+impl MapReduceJob for SessionPartialsJob {
+    type MapOut = Partials;
+    type Output = Partials;
+
+    fn map_combine(&self, block: &Matrix, ctx: &TaskCtx) -> Result<Partials> {
+        let v = ctx
+            .cache
+            .get_matrix(KEY_SESSION_CENTERS)
+            .ok_or_else(|| Error::Job("session centers missing from cache".into()))?;
+        let ones = self.uniform_weights(block.rows());
+        let w = &ones[..block.rows()];
+        // Retried attempts (injected-fault re-execution) bypass the slab:
+        // the engine's combiner contract is idempotence, and a discarded
+        // first attempt already advanced the sticky state — replaying the
+        // pruned path could double-count. An exact pass is always safe and
+        // retries are the rare case by construction.
+        if !self.prune.enabled || ctx.attempt > 0 {
+            return self.exact_pass(block, &v, w);
+        }
+        let handle = self.slab.entry(ctx.task_id);
+        let mut st = handle.lock().expect("slab state poisoned");
+        let (p, pruned) = match (self.algo, self.variant) {
+            (SessionAlgo::Fcm, Variant::Fast) => self.backend.fcm_partials_pruned(
+                block,
+                &v,
+                w,
+                self.m,
+                &mut st,
+                self.prune.tolerance,
+                self.prune.refresh_every,
+            )?,
+            (SessionAlgo::Fcm, Variant::Classic) => self.backend.classic_partials_pruned(
+                block,
+                &v,
+                w,
+                self.m,
+                &mut st,
+                self.prune.tolerance,
+                self.prune.refresh_every,
+            )?,
+            (SessionAlgo::KMeans, _) => self.backend.kmeans_partials_pruned(
+                block,
+                &v,
+                w,
+                &mut st,
+                self.prune.tolerance,
+                self.prune.refresh_every,
+            )?,
+        };
+        let bytes = st.slab_bytes();
+        drop(st); // never hold a state lock while taking the slab lock
+        self.slab.note_update(ctx.task_id, bytes);
+        if pruned > 0 {
+            self.slab.add_records_pruned(pruned as u64);
+        }
+        Ok(p)
+    }
+
+    fn reduce(&self, parts: Vec<Partials>, _ctx: &TaskCtx) -> Result<Partials> {
+        let mut it = parts.into_iter();
+        let mut acc = it
+            .next()
+            .ok_or_else(|| Error::Job("no partials to reduce".into()))?;
+        for p in it {
+            acc.merge(&p);
+        }
+        Ok(acc)
+    }
+
+    fn supports_combine(&self) -> bool {
+        true
+    }
+
+    fn combine(&self, mut left: Partials, right: Partials) -> Result<Partials> {
+        left.merge(&right);
+        Ok(left)
+    }
+
+    fn shuffle_bytes(&self, part: &Partials) -> u64 {
+        part.encoded_bytes()
+    }
+
+    fn name(&self) -> &str {
+        match (self.algo, self.variant) {
+            (SessionAlgo::Fcm, Variant::Fast) => "session-fcm-fast",
+            (SessionAlgo::Fcm, Variant::Classic) => "session-fcm-classic",
+            (SessionAlgo::KMeans, _) => "session-kmeans",
+        }
+    }
+}
+
+/// Outcome of an iteration-resident convergence run.
+#[derive(Clone, Debug)]
+pub struct SessionRunResult {
+    /// Final centers / weights / convergence record.
+    pub result: ClusterResult,
+    /// Engine jobs run (= iterations; startup charged once when resident).
+    pub jobs: usize,
+    /// Map records served from the sticky slab across the whole run.
+    pub records_pruned: u64,
+    /// Per-iteration job stats, with `records_pruned`, `slab_bytes` and
+    /// `slab_evictions` stamped in.
+    pub per_iteration: Vec<JobStats>,
+    /// Max of the block cache's per-iteration peak resident bytes across
+    /// the whole loop (the session resets the per-job meters between
+    /// iterations, so a single post-loop gauge read would only see the
+    /// last one — envelope checks must use this).
+    pub peak_resident_bytes: u64,
+    /// This run's share of the modelled cluster cost.
+    pub sim: SimCost,
+}
+
+/// Run an FCM (or K-Means) convergence loop over a block store through an
+/// iteration-resident session: every iteration is one engine job, but the
+/// pool, block cache, prefetcher, distributed cache and the sticky pruning
+/// slab stay warm across them, and job startup is charged per
+/// [`SessionOptions::resident`].
+///
+/// With pruning on, a convergence signal read off a pruned pass could be
+/// an artifact of frozen contributions, so it is only accepted from an
+/// exact pass: the loop invalidates the slab and re-checks on the next
+/// (exact) iteration. Final centers therefore always satisfy the epsilon
+/// criterion under exact math.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fcm_session(
+    engine: &mut Engine,
+    store: &Arc<BlockStore>,
+    backend: Arc<dyn ChunkBackend>,
+    algo: SessionAlgo,
+    v0: Matrix,
+    params: &FcmParams,
+    prune: &PruneConfig,
+    options: SessionOptions,
+) -> Result<SessionRunResult> {
+    if v0.cols() != store.cols() {
+        return Err(Error::Clustering("seed center dims mismatch".into()));
+    }
+    if v0.rows() == 0 {
+        return Err(Error::Clustering("no seed centers".into()));
+    }
+    let sim_before = engine.clock().cost();
+    let slab = Arc::new(StateSlab::with_budget_bytes(if prune.enabled {
+        prune.slab_bytes
+    } else {
+        0
+    }));
+    let job = Arc::new(SessionPartialsJob::new(
+        algo,
+        params.variant,
+        params.m,
+        backend,
+        Arc::clone(&slab),
+        *prune,
+    ));
+    let mut session = engine.session(store, options);
+    let cache = Arc::new(DistributedCache::new());
+
+    let mut v = v0;
+    let mut weights = vec![0.0; v.rows()];
+    let mut objective = f64::INFINITY;
+    let mut converged = false;
+    let mut iterations = 0usize;
+    let mut records_pruned_total = 0u64;
+    let mut peak_resident_bytes = 0u64;
+    let mut per_iteration: Vec<JobStats> = Vec::new();
+    for it in 1..=params.max_iterations {
+        iterations = it;
+        cache.put_matrix(KEY_SESSION_CENTERS, v.clone());
+        let (partials, mut stats) = session.run_iteration(Arc::clone(&job), Arc::clone(&cache))?;
+        let pruned_this = slab.take_records_pruned();
+        stats.records_pruned = pruned_this;
+        stats.slab_bytes = slab.bytes();
+        stats.slab_evictions = slab.evictions();
+        records_pruned_total += pruned_this;
+        // The per-job meters reset between iterations; fold each
+        // iteration's peak into the loop-wide envelope figure.
+        peak_resident_bytes =
+            peak_resident_bytes.max(session.engine().block_cache().peak_resident_bytes());
+        weights.clone_from_slice(&partials.w_acc);
+        objective = partials.objective;
+        let v_new = partials.into_centers(&v);
+        let shift = max_center_shift2(&v, &v_new);
+        v = v_new;
+        per_iteration.push(stats);
+        if shift <= params.epsilon {
+            if prune.enabled && pruned_this > 0 {
+                // Confirm convergence with an exact pass: drop every
+                // cached bound so the next iteration recomputes fully.
+                slab.invalidate_all();
+                continue;
+            }
+            converged = true;
+            break;
+        }
+    }
+    drop(session);
+
+    // Report only this run's share when the engine is reused.
+    let sim = engine.clock().cost().delta(&sim_before);
+
+    Ok(SessionRunResult {
+        result: ClusterResult { centers: v, weights, iterations, objective, converged },
+        jobs: iterations,
+        records_pruned: records_pruned_total,
+        per_iteration,
+        peak_resident_bytes,
+        sim,
+    })
 }
 
 #[cfg(test)]
@@ -255,5 +580,225 @@ mod tests {
         .unwrap();
         assert_eq!(r.iterations, 5);
         assert!(!r.converged);
+    }
+
+    // -- iteration-resident session loop ---------------------------------
+
+    use crate::config::OverheadConfig;
+    use crate::mapreduce::EngineOptions;
+
+    fn session_setup(
+        seed: u64,
+    ) -> (Arc<BlockStore>, Matrix, FcmParams, Arc<dyn ChunkBackend>) {
+        let data = blobs(2048, 3, 3, 0.25, seed);
+        let store =
+            Arc::new(BlockStore::in_memory("t", &data.features, 256, 4).unwrap());
+        let mut rng = Pcg::new(seed ^ 0x5E55);
+        let v0 = seeding::random_records(&data.features, 3, &mut rng);
+        let params = FcmParams { epsilon: 1e-10, ..Default::default() };
+        (store, v0, params, Arc::new(NativeBackend))
+    }
+
+    #[test]
+    fn session_loop_pruned_matches_exact_and_prunes() {
+        let (store, v0, params, backend) = session_setup(71);
+        let mut exact_engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let exact = run_fcm_session(
+            &mut exact_engine,
+            &store,
+            Arc::clone(&backend),
+            SessionAlgo::Fcm,
+            v0.clone(),
+            &params,
+            &PruneConfig::disabled(),
+            SessionOptions::default(),
+        )
+        .unwrap();
+        let mut pruned_engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let pruned = run_fcm_session(
+            &mut pruned_engine,
+            &store,
+            backend,
+            SessionAlgo::Fcm,
+            v0,
+            &params,
+            &PruneConfig::default(),
+            SessionOptions::default(),
+        )
+        .unwrap();
+        assert!(exact.result.converged, "exact arm did not converge");
+        assert!(pruned.result.converged, "pruned arm did not converge");
+        assert!(exact.records_pruned == 0);
+        assert!(
+            pruned.records_pruned > 0,
+            "tail iterations must prune ({} iterations)",
+            pruned.jobs
+        );
+        let shift = max_center_shift2(&exact.result.centers, &pruned.result.centers);
+        assert!(shift < 1e-3, "pruned run drifted from exact: {shift}");
+        // Resident session: one job startup for the whole loop.
+        let startup = OverheadConfig::default().job_startup_s;
+        assert!(
+            (pruned.sim.job_startup_s - startup).abs() < 1e-9,
+            "resident loop charged startup {} times",
+            pruned.sim.job_startup_s / startup
+        );
+        assert!(pruned.jobs >= 3, "loop should take several iterations");
+        // Per-iteration stats carry the slab counters.
+        assert!(pruned.per_iteration.iter().any(|s| s.records_pruned > 0));
+        assert!(pruned.per_iteration.last().unwrap().slab_bytes > 0);
+    }
+
+    #[test]
+    fn session_loop_kmeans_matches_exact() {
+        let (store, v0, _, backend) = session_setup(81);
+        let params = FcmParams { epsilon: 1e-10, ..Default::default() };
+        let mut e1 = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let exact = run_fcm_session(
+            &mut e1,
+            &store,
+            Arc::clone(&backend),
+            SessionAlgo::KMeans,
+            v0.clone(),
+            &params,
+            &PruneConfig::disabled(),
+            SessionOptions::default(),
+        )
+        .unwrap();
+        let mut e2 = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let pruned = run_fcm_session(
+            &mut e2,
+            &store,
+            backend,
+            SessionAlgo::KMeans,
+            v0,
+            &params,
+            &PruneConfig::default(),
+            SessionOptions::default(),
+        )
+        .unwrap();
+        assert!(exact.result.converged && pruned.result.converged);
+        // Margin-exact pruning: only f32 accumulation-order rounding (and
+        // at most boundary-record flips it induces) separates the arms.
+        let shift = max_center_shift2(&exact.result.centers, &pruned.result.centers);
+        assert!(shift < 1e-4, "K-Means pruned arm drifted: {shift}");
+    }
+
+    #[test]
+    fn session_loop_classic_variant_runs_pruned() {
+        let (store, v0, params, backend) = session_setup(91);
+        let params = FcmParams { variant: Variant::Classic, ..params };
+        let mut engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let run = run_fcm_session(
+            &mut engine,
+            &store,
+            backend,
+            SessionAlgo::Fcm,
+            v0,
+            &params,
+            &PruneConfig::default(),
+            SessionOptions::default(),
+        )
+        .unwrap();
+        assert!(run.result.converged);
+        assert!(run.records_pruned > 0, "classic variant must prune too");
+    }
+
+    #[test]
+    fn session_loop_rejects_bad_seeds() {
+        let (store, _, params, backend) = session_setup(95);
+        let mut engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let bad_dims = Matrix::zeros(3, 7);
+        assert!(run_fcm_session(
+            &mut engine,
+            &store,
+            Arc::clone(&backend),
+            SessionAlgo::Fcm,
+            bad_dims,
+            &params,
+            &PruneConfig::default(),
+            SessionOptions::default(),
+        )
+        .is_err());
+        let no_seeds = Matrix::zeros(0, 3);
+        assert!(run_fcm_session(
+            &mut engine,
+            &store,
+            backend,
+            SessionAlgo::Fcm,
+            no_seeds,
+            &params,
+            &PruneConfig::default(),
+            SessionOptions::default(),
+        )
+        .is_err());
+    }
+
+    /// The bugfix regression: a mid-session `BlockCache::clear()` (the old
+    /// between-jobs metering idiom) must never yield stale pruned partials
+    /// — the sticky slab lives outside the block cache, so the interrupted
+    /// run's arithmetic is bit-identical to the uninterrupted one.
+    fn manual_pruned_run(clear_between: bool) -> (Matrix, u64, bool) {
+        let data = blobs(1024, 3, 3, 0.25, 73);
+        let store =
+            Arc::new(BlockStore::in_memory("t", &data.features, 128, 4).unwrap());
+        let mut rng = Pcg::new(74);
+        let v0 = seeding::random_records(&data.features, 3, &mut rng);
+        let params = FcmParams { epsilon: 1e-10, ..Default::default() };
+        let prune = PruneConfig::default();
+        let slab = Arc::new(StateSlab::with_budget_bytes(prune.slab_bytes));
+        let job = Arc::new(SessionPartialsJob::new(
+            SessionAlgo::Fcm,
+            params.variant,
+            params.m,
+            Arc::new(NativeBackend),
+            Arc::clone(&slab),
+            prune,
+        ));
+        let mut engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let mut session = engine.session(&store, SessionOptions::default());
+        let cache = Arc::new(DistributedCache::new());
+        let mut v = v0;
+        let mut pruned_total = 0u64;
+        let mut converged = false;
+        for _ in 0..params.max_iterations {
+            cache.put_matrix(KEY_SESSION_CENTERS, v.clone());
+            let (partials, _) = session
+                .run_iteration(Arc::clone(&job), Arc::clone(&cache))
+                .unwrap();
+            let pruned_this = slab.take_records_pruned();
+            pruned_total += pruned_this;
+            let v_new = partials.into_centers(&v);
+            let shift = max_center_shift2(&v, &v_new);
+            v = v_new;
+            if clear_between {
+                // The hazardous idiom: dropping every warm block between
+                // iterations. Must cost performance only, never staleness.
+                session.engine().block_cache().clear();
+            }
+            if shift <= params.epsilon {
+                if pruned_this > 0 {
+                    slab.invalidate_all();
+                    continue;
+                }
+                converged = true;
+                break;
+            }
+        }
+        (v, pruned_total, converged)
+    }
+
+    #[test]
+    fn mid_session_cache_clear_never_stales_pruned_partials() {
+        let (clean, clean_pruned, clean_conv) = manual_pruned_run(false);
+        let (cleared, cleared_pruned, cleared_conv) = manual_pruned_run(true);
+        assert!(clean_conv && cleared_conv);
+        assert!(clean_pruned > 0, "the scenario must actually exercise pruning");
+        assert_eq!(
+            clean.as_slice(),
+            cleared.as_slice(),
+            "mid-session clear() changed pruned results — slab lifetime leaked into the cache"
+        );
+        assert_eq!(clean_pruned, cleared_pruned, "pruning decisions diverged");
     }
 }

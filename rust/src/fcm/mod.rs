@@ -11,8 +11,11 @@ pub mod native;
 pub mod seeding;
 pub mod wfcmpb;
 
-pub use loops::{kmeans_loop, run_fcm, FcmParams, Variant};
-pub use native::NativeBackend;
+pub use loops::{
+    kmeans_loop, run_fcm, run_fcm_session, FcmParams, PruneConfig, SessionAlgo,
+    SessionRunResult, Variant,
+};
+pub use native::{BlockPruneState, NativeBackend};
 
 use crate::data::Matrix;
 use crate::error::Result;
@@ -54,6 +57,12 @@ impl Partials {
         self.objective += other.objective;
     }
 
+    /// Serialised footprint: centers f32 + weights f64 + objective f64 —
+    /// the single source for the shuffle cost model and slab accounting.
+    pub fn encoded_bytes(&self) -> u64 {
+        (self.v_num.rows() * self.v_num.cols() * 4 + self.w_acc.len() * 8 + 8) as u64
+    }
+
     /// Finish the update: centers = numerators / weights. Clusters with no
     /// mass keep `fallback`'s row (Mahout's empty-cluster behaviour).
     pub fn into_centers(self, fallback: &Matrix) -> Matrix {
@@ -85,6 +94,62 @@ pub trait ChunkBackend: Send + Sync {
     /// Hard K-Means partials (v_num = per-cluster sums, w_acc = counts,
     /// objective = SSE).
     fn kmeans_partials(&self, x: &Matrix, v: &Matrix, w: &[f32]) -> Result<Partials>;
+
+    /// Fast-FCM partials with shift-bounded pruning against the block's
+    /// sticky `state` (see [`native::fcm_partials_pruned`]); returns the
+    /// partials and the number of records that reused their cached
+    /// contribution. The default is an exact pass with the state reset —
+    /// backends without bound support (e.g. PJRT) stay correct and no
+    /// stale bound can survive them.
+    #[allow(clippy::too_many_arguments)]
+    fn fcm_partials_pruned(
+        &self,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        m: f64,
+        state: &mut BlockPruneState,
+        tol: f64,
+        refresh_every: usize,
+    ) -> Result<(Partials, usize)> {
+        let _ = (tol, refresh_every);
+        state.reset();
+        Ok((self.fcm_partials(x, v, w, m)?, 0))
+    }
+
+    /// Classic-FCM partials with shift-bounded pruning (same contract as
+    /// [`Self::fcm_partials_pruned`]).
+    #[allow(clippy::too_many_arguments)]
+    fn classic_partials_pruned(
+        &self,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        m: f64,
+        state: &mut BlockPruneState,
+        tol: f64,
+        refresh_every: usize,
+    ) -> Result<(Partials, usize)> {
+        let _ = (tol, refresh_every);
+        state.reset();
+        Ok((self.classic_partials(x, v, w, m)?, 0))
+    }
+
+    /// K-Means partials with shift-bounded (margin-exact) pruning (same
+    /// contract as [`Self::fcm_partials_pruned`]).
+    fn kmeans_partials_pruned(
+        &self,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        state: &mut BlockPruneState,
+        tol: f64,
+        refresh_every: usize,
+    ) -> Result<(Partials, usize)> {
+        let _ = (tol, refresh_every);
+        state.reset();
+        Ok((self.kmeans_partials(x, v, w)?, 0))
+    }
 
     /// Human name for reports ("native", "pjrt").
     fn name(&self) -> &'static str;

@@ -426,6 +426,16 @@ impl BlockCache {
         self.budget_bytes
     }
 
+    /// Unreserved budget headroom right now: budget − retained bytes −
+    /// in-flight prefetch reservations. Drives the engine's adaptive
+    /// prefetch depth (a second-block prefetch is only hinted when at
+    /// least two max-size blocks of slack remain).
+    pub fn budget_slack(&self) -> u64 {
+        let cached = self.state.lock().expect("block cache poisoned").cached_bytes;
+        self.budget_bytes
+            .saturating_sub(cached + self.prefetch_pending.load(Ordering::SeqCst))
+    }
+
     /// Bytes currently retained by the cache itself.
     pub fn cached_bytes(&self) -> u64 {
         self.state.lock().expect("block cache poisoned").cached_bytes
@@ -489,6 +499,15 @@ impl BlockCache {
     /// reset the peak meters to the current residency, so a long-lived
     /// cache reports per-job peaks when cleared between jobs rather than
     /// the all-time high-water mark.
+    ///
+    /// This drops **blocks only**. Iteration-resident sessions that just
+    /// want per-iteration peak metering must call
+    /// [`Self::reset_job_meters`] instead — clearing decoded blocks
+    /// between iterations of one convergence loop would throw away exactly
+    /// the warm data the session exists to keep. Sticky per-block *state*
+    /// (the pruning slabs) lives outside this cache entirely
+    /// (`crate::mapreduce::session::StateSlab`), so neither call can ever
+    /// invalidate bounds the pruning path still holds.
     pub fn clear(&self) {
         let mut st = self.state.lock().expect("block cache poisoned");
         // Flagged-but-unconsumed prefetch reads die here; account them.
@@ -505,6 +524,16 @@ impl BlockCache {
         st.prefetched.clear();
         st.cached_bytes = 0;
         drop(st); // dropping the Arcs above decremented the gauges
+        self.reset_job_meters();
+    }
+
+    /// Reset the per-job peak meters to the current residency **without**
+    /// dropping any cached block — the between-iterations reset of an
+    /// iteration-resident session, which needs job-scoped peaks while the
+    /// warm blocks (and the session's sticky slabs, which live outside
+    /// this cache) stay alive. Split out of [`Self::clear`] so per-job
+    /// meter lifecycle and block lifetime can never be conflated again.
+    pub fn reset_job_meters(&self) {
         self.residency
             .peak_blocks
             .store(self.residency.resident_blocks.load(Ordering::SeqCst), Ordering::SeqCst);
@@ -701,6 +730,40 @@ mod tests {
         assert!(c.prefetch(&s, 0).unwrap());
         c.clear();
         assert_eq!(c.prefetch_wasted_bytes(), 2 * bytes);
+    }
+
+    #[test]
+    fn reset_job_meters_keeps_blocks_warm() {
+        let s = block_store(400, 100);
+        let c = BlockCache::with_budget_bytes(budget_for(&s, 8));
+        c.get_or_read(&s, 0).unwrap();
+        c.get_or_read(&s, 1).unwrap();
+        assert!(c.peak_resident() >= 2);
+        c.reset_job_meters();
+        // Peaks restart from current residency; nothing was dropped.
+        assert_eq!(c.len(), 2, "meter reset must not drop blocks");
+        assert_eq!(c.peak_resident(), 2);
+        assert_eq!(c.peak_resident_bytes(), c.resident_bytes());
+        let (_, src) = c.get_or_read_traced(&s, 0).unwrap();
+        assert_eq!(src, ReadSource::Cached, "block evaporated across a meter reset");
+    }
+
+    #[test]
+    fn budget_slack_tracks_retained_bytes() {
+        let s = block_store(400, 100); // 4 equal blocks
+        let bytes = s.blocks()[0].bytes;
+        let c = BlockCache::with_budget_bytes(3 * bytes);
+        assert_eq!(c.budget_slack(), 3 * bytes);
+        c.get_or_read(&s, 0).unwrap();
+        assert_eq!(c.budget_slack(), 2 * bytes);
+        c.get_or_read(&s, 1).unwrap();
+        c.get_or_read(&s, 2).unwrap();
+        assert_eq!(c.budget_slack(), 0);
+        c.clear();
+        assert_eq!(c.budget_slack(), 3 * bytes);
+        // Zero-budget cache has no slack by definition.
+        let z = BlockCache::with_budget_bytes(0);
+        assert_eq!(z.budget_slack(), 0);
     }
 
     #[test]

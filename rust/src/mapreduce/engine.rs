@@ -24,6 +24,13 @@
 //!   [`BlockCache`], so iterative callers (the Mahout-style
 //!   one-job-per-iteration baselines especially) re-read hot blocks from
 //!   memory instead of re-decoding HDFS files.
+//! * **worker-side tree combine** — jobs implementing
+//!   [`MapReduceJob::combine`] merge their map outputs pairwise on the
+//!   pool as slots drain (a fixed binary topology over block ids, so the
+//!   result is deterministic); the reduce and the modelled shuffle then
+//!   handle O(workers + log blocks) segments instead of O(blocks).
+//!   [`JobStats::reduce_parts`] and [`JobStats::combine_depth`] surface
+//!   the effect per job.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -37,7 +44,7 @@ use crate::mapreduce::cache::{BlockCache, ReadSource, MIB};
 use crate::mapreduce::simclock::{SimClock, SimCost, TaskSample};
 use crate::mapreduce::{DistributedCache, MapReduceJob, TaskCtx};
 use crate::prng::Pcg;
-use crate::threadpool::ThreadPool;
+use crate::threadpool::{QueueAhead, ThreadPool};
 
 /// Hadoop's default max attempts per task.
 const MAX_ATTEMPTS: usize = 4;
@@ -56,8 +63,14 @@ pub struct EngineOptions {
     /// budgets via [`crate::mapreduce::cache::MIB`].
     pub block_cache_bytes: u64,
     /// Overlap the next queued block's read with the current block's
-    /// compute on a dedicated prefetcher thread.
+    /// compute on a dedicated prefetcher thread. The depth adapts: when
+    /// the byte budget has at least two max-size blocks of unreserved
+    /// slack, the block after next is warmed as well.
     pub prefetch: bool,
+    /// Merge map outputs pairwise on the worker pool as slots drain, for
+    /// jobs that implement [`MapReduceJob::combine`] — the reduce then
+    /// funnels O(workers + log blocks) segments instead of O(blocks).
+    pub tree_combine: bool,
 }
 
 impl Default for EngineOptions {
@@ -68,6 +81,7 @@ impl Default for EngineOptions {
             fault_seed: 0,
             block_cache_bytes: 256 * MIB,
             prefetch: true,
+            tree_combine: true,
         }
     }
 }
@@ -79,9 +93,21 @@ impl EngineOptions {
             workers: cluster.workers,
             block_cache_bytes: cluster.cache_mib as u64 * MIB,
             prefetch: cluster.prefetch,
+            tree_combine: cluster.tree_combine,
             ..Self::default()
         }
     }
+}
+
+/// Per-invocation job knobs — the session layer drives these; plain
+/// [`Engine::run_job`] uses the defaults implied by [`EngineOptions`].
+#[derive(Clone, Copy, Debug)]
+pub struct JobRunCfg {
+    /// Charge the modelled per-job startup cost. Iteration-resident
+    /// sessions charge it once for the whole convergence loop.
+    pub charge_startup: bool,
+    /// Use the worker-side combine tree when the job supports it.
+    pub tree_combine: bool,
 }
 
 /// Statistics of one executed job.
@@ -106,6 +132,29 @@ pub struct JobStats {
     /// or lost a duplicate race); charged to this job's modelled HDFS I/O
     /// so every real read is counted exactly once.
     pub prefetch_wasted_bytes: u64,
+    /// Map records whose contribution was served from the sticky pruning
+    /// slab instead of a full distance pass. Filled by the session layer
+    /// (`crate::fcm::loops::run_fcm_session`); 0 for ordinary jobs.
+    pub records_pruned: u64,
+    /// Bytes resident in the session's sticky state slab after this job
+    /// (session runs only).
+    pub slab_bytes: u64,
+    /// Sticky-slab evictions observed so far in the session (session runs
+    /// only).
+    pub slab_evictions: u64,
+    /// Real seconds of the reduce phase. Tree-combined jobs fold most
+    /// merge work into the map slots, so this drops from O(blocks) worth
+    /// of merging to O(parts).
+    pub reduce_wall_s: f64,
+    /// Real seconds spent in worker-side combine merges (overlapped with
+    /// map compute; charged serially to the modelled clock, which is
+    /// conservative).
+    pub combine_wall_s: f64,
+    /// Height of the worker-side combine tree (0 = flat reduce).
+    pub combine_depth: usize,
+    /// Combiner outputs that reached the reduce phase (= `map_tasks` for a
+    /// flat reduce, O(workers + log blocks) when tree-combined).
+    pub reduce_parts: usize,
 }
 
 /// The MapReduce engine. One engine per pipeline run; owns the worker pool,
@@ -207,12 +256,28 @@ impl Engine {
     /// Execute one MapReduce job over every block of `store`.
     ///
     /// Blocks are read *inside* the worker tasks (see module docs); the
-    /// store travels to the pool behind an `Arc`.
+    /// store travels to the pool behind an `Arc`. Equivalent to
+    /// [`Self::run_job_cfg`] with startup charged and the engine's
+    /// tree-combine default.
     pub fn run_job<J: MapReduceJob + 'static>(
         &mut self,
         job: Arc<J>,
         store: &Arc<BlockStore>,
         cache: Arc<DistributedCache>,
+    ) -> Result<(J::Output, JobStats)> {
+        let cfg = JobRunCfg { charge_startup: true, tree_combine: self.options.tree_combine };
+        self.run_job_cfg(job, store, cache, cfg)
+    }
+
+    /// [`Self::run_job`] with per-invocation knobs — the session layer's
+    /// entry point (resumed iterations skip the startup charge; the
+    /// Mahout-style control disables the combine tree).
+    pub fn run_job_cfg<J: MapReduceJob + 'static>(
+        &mut self,
+        job: Arc<J>,
+        store: &Arc<BlockStore>,
+        cache: Arc<DistributedCache>,
+        cfg: JobRunCfg,
     ) -> Result<(J::Output, JobStats)> {
         let started = Instant::now();
         let n_blocks = store.num_blocks();
@@ -237,12 +302,14 @@ impl Engine {
         let hints: Vec<usize> = store.blocks().iter().map(|b| b.preferred_worker).collect();
         let prefetch_hits_before = self.block_cache.prefetch_hits();
         let prefetch_wasted_before = self.block_cache.prefetch_wasted_bytes();
+        let max_block = store.max_block_bytes();
+        let use_tree = cfg.tree_combine && job.supports_combine();
 
         // Map phase: each task reads its own block on the pool (through the
         // engine's block cache), runs map_combine, and releases the block
         // when it finishes — the only materialized blocks at any instant are
-        // the busy workers' plus the cache's budget plus at most one
-        // in-flight prefetch.
+        // the busy workers' plus the cache's budget plus the in-flight
+        // prefetches (whose reservations count against the budget).
         struct TaskResult<M> {
             out: M,
             sample: TaskSample,
@@ -254,78 +321,110 @@ impl Engine {
         // `Sender` predates `Sync` in older std releases; the Mutex makes
         // the shared map closure unambiguously thread-safe either way.
         let prefetch_for_map = self.prefetch_tx.clone().map(Mutex::new);
-        let (results, locality) = self.pool.map_indexed_hinted(
-            n_blocks,
-            &hints,
-            move |id, next| -> Result<TaskResult<J::MapOut>> {
-                // Hint the prefetcher at this worker's next queued block
-                // *before* paying our own read, so the two overlap.
-                if let (Some(tx), Some(next)) = (prefetch_for_map.as_ref(), next) {
-                    let _ = tx
+
+        let (outs, samples, locality, combine_depth, combine_wall_s) = if use_tree {
+            // Worker-side tree combine: map outputs merge pairwise on the
+            // pool as slots drain; the reduce sees O(log blocks) segments.
+            // Samples travel on a side channel (the merge tree only carries
+            // the combinable payload).
+            let (sample_tx, sample_rx) = channel::<(usize, TaskSample)>();
+            let sample_tx = Mutex::new(sample_tx);
+            let job_for_combine = Arc::clone(&job);
+            let combine_wall = Arc::new(Mutex::new(0.0f64));
+            let combine_wall_in = Arc::clone(&combine_wall);
+            let (parts, locality, cstats) = self.pool.map_indexed_hinted_combined(
+                n_blocks,
+                &hints,
+                move |id, ahead| -> Result<J::MapOut> {
+                    let (out, sample) = run_map_task(
+                        job_for_map.as_ref(),
+                        &cache_for_map,
+                        &store_for_map,
+                        &blocks_for_map,
+                        prefetch_for_map.as_ref(),
+                        max_block,
+                        fail_counts[id],
+                        id,
+                        ahead,
+                    )?;
+                    let _ = sample_tx
                         .lock()
-                        .expect("prefetch sender poisoned")
-                        .send(PrefetchMsg::Fetch(Arc::clone(&store_for_map), next));
-                }
-                let fails = fail_counts[id];
-                let (block, source) = blocks_for_map.get_or_read_traced(&store_for_map, id)?;
-                // Modelled HDFS bytes: a demand miss paid the read on the
-                // task's critical path; a prefetched block's read also
-                // happened this job (off the critical path) and is charged
-                // to the task that consumes it. Only blocks warm from
-                // earlier jobs — data-local in-memory re-reads, the paper's
-                // caching design — cost nothing.
-                let bytes = match source {
-                    ReadSource::Cached => 0,
-                    ReadSource::Miss | ReadSource::Prefetched => store_for_map.blocks()[id].bytes,
-                };
-                let mut attempt = 0usize;
-                loop {
-                    let ctx = TaskCtx { cache: &cache_for_map, task_id: id, attempt };
-                    let t0 = Instant::now();
-                    let out = job_for_map.map_combine(block.data(), &ctx);
-                    let compute_wall_s = t0.elapsed().as_secs_f64();
-                    // Injected fault: discard this attempt's output and retry
-                    // (idempotence is the combiner contract).
-                    if attempt < fails {
-                        attempt += 1;
-                        continue;
+                        .expect("sample sender poisoned")
+                        .send((id, sample));
+                    Ok(out)
+                },
+                move |a: Result<J::MapOut>, b: Result<J::MapOut>| -> Result<J::MapOut> {
+                    match (a, b) {
+                        (Ok(x), Ok(y)) => {
+                            let t0 = Instant::now();
+                            let merged = job_for_combine.combine(x, y);
+                            *combine_wall_in.lock().expect("combine wall poisoned") +=
+                                t0.elapsed().as_secs_f64();
+                            merged
+                        }
+                        (Err(e), _) | (_, Err(e)) => Err(e),
                     }
-                    return out.map(|o| TaskResult {
-                        out: o,
-                        sample: TaskSample {
-                            compute_wall_s,
-                            input_bytes: bytes,
-                            attempts: attempt + 1,
-                        },
-                    });
-                }
-            },
-        );
-
-        // Every map task has finished, so every Fetch this job will ever
-        // queue is already in the channel; fence the prefetcher so its
-        // late completions land in this job's meters (and charges), not
-        // the next job's — and so Drop never faces a stale backlog.
-        if let Some(tx) = &self.prefetch_tx {
-            let (ack_tx, ack_rx) = channel();
-            if tx.send(PrefetchMsg::Fence(ack_tx)).is_ok() {
-                let _ = ack_rx.recv();
+                },
+            );
+            self.fence_prefetcher();
+            let mut outs = Vec::with_capacity(parts.len());
+            for p in parts {
+                let part = p
+                    .map_err(|panic| Error::Job(format!("map/combine panicked: {panic}")))?
+                    .map_err(|e| Error::Job(format!("map task failed: {e}")))?;
+                outs.push(part);
             }
-        }
+            let mut tagged: Vec<(usize, TaskSample)> = sample_rx.into_iter().collect();
+            if tagged.len() != n_blocks {
+                return Err(Error::Job(format!(
+                    "lost map-task samples: {} of {n_blocks}",
+                    tagged.len()
+                )));
+            }
+            // Deterministic greedy-wave charging regardless of completion
+            // order.
+            tagged.sort_by_key(|(id, _)| *id);
+            let samples: Vec<TaskSample> = tagged.into_iter().map(|(_, s)| s).collect();
+            let combine_wall_s = *combine_wall.lock().expect("combine wall poisoned");
+            (outs, samples, locality, cstats.depth, combine_wall_s)
+        } else {
+            let (results, locality) = self.pool.map_indexed_hinted(
+                n_blocks,
+                &hints,
+                move |id, ahead| -> Result<TaskResult<J::MapOut>> {
+                    run_map_task(
+                        job_for_map.as_ref(),
+                        &cache_for_map,
+                        &store_for_map,
+                        &blocks_for_map,
+                        prefetch_for_map.as_ref(),
+                        max_block,
+                        fail_counts[id],
+                        id,
+                        ahead,
+                    )
+                    .map(|(out, sample)| TaskResult { out, sample })
+                },
+            );
+            self.fence_prefetcher();
+            let mut outs = Vec::with_capacity(n_blocks);
+            let mut samples = Vec::with_capacity(n_blocks);
+            for r in results {
+                let task = r
+                    .map_err(|panic| Error::Job(format!("map task panicked: {panic}")))?
+                    .map_err(|e| Error::Job(format!("map task failed: {e}")))?;
+                samples.push(task.sample);
+                outs.push(task.out);
+            }
+            (outs, samples, locality, 0, 0.0)
+        };
 
-        let mut outs = Vec::with_capacity(n_blocks);
-        let mut samples = Vec::with_capacity(n_blocks);
-        let mut attempts_total = 0usize;
-        for r in results {
-            let task = r
-                .map_err(|panic| Error::Job(format!("map task panicked: {panic}")))?
-                .map_err(|e| Error::Job(format!("map task failed: {e}")))?;
-            attempts_total += task.sample.attempts;
-            samples.push(task.sample);
-            outs.push(task.out);
-        }
-
+        let attempts_total: usize = samples.iter().map(|s| s.attempts).sum();
+        // Shuffle ships exactly what reaches the reduce: every map output
+        // on the flat path, only the surviving merged segments on the tree
+        // path.
         let shuffle_bytes: u64 = outs.iter().map(|o| job.shuffle_bytes(o)).sum();
+        let reduce_parts = outs.len();
 
         // Reduce phase (single reducer, as the paper's default).
         let reduce_ctx = TaskCtx { cache: &cache, task_id: usize::MAX, attempt: 0 };
@@ -333,13 +432,26 @@ impl Engine {
         let output = job.reduce(outs, &reduce_ctx)?;
         let reduce_wall_s = t0.elapsed().as_secs_f64();
 
+        let mut oh = self.overhead.clone();
+        if !cfg.charge_startup {
+            // A resumed session iteration: the pool, cache and prefetcher
+            // are already warm, so no per-job startup is paid.
+            oh.job_startup_s = 0.0;
+        }
         let mut sim = self.clock.charge_job(
-            &self.overhead,
+            &oh,
             self.options.workers,
             &samples,
             shuffle_bytes,
             reduce_wall_s,
         );
+        if combine_wall_s > 0.0 {
+            // Worker-side merges are real compute. They overlap map slots
+            // in practice; charging them serially is conservative.
+            sim.compute_s += self
+                .clock
+                .charge_local(&oh, Duration::from_secs_f64(combine_wall_s));
+        }
 
         // Prefetcher reads nothing consumed this job (evicted unconsumed or
         // duplicate races) still moved bytes off the store: charge them so
@@ -348,7 +460,7 @@ impl Engine {
         let prefetch_wasted_bytes =
             self.block_cache.prefetch_wasted_bytes() - prefetch_wasted_before;
         if prefetch_wasted_bytes > 0 {
-            sim.hdfs_io_s += self.clock.charge_scan(&self.overhead, prefetch_wasted_bytes);
+            sim.hdfs_io_s += self.clock.charge_scan(&oh, prefetch_wasted_bytes);
         }
 
         let stats = JobStats {
@@ -362,8 +474,88 @@ impl Engine {
             locality_steals: locality.steals,
             prefetch_hits: self.block_cache.prefetch_hits() - prefetch_hits_before,
             prefetch_wasted_bytes,
+            records_pruned: 0,
+            slab_bytes: 0,
+            slab_evictions: 0,
+            reduce_wall_s,
+            combine_wall_s,
+            combine_depth,
+            reduce_parts,
         };
         Ok((output, stats))
+    }
+
+    /// Barrier the prefetcher: every map task has finished, so every Fetch
+    /// this job will ever queue is already in the channel; fencing makes
+    /// late completions land in this job's meters (and charges), not the
+    /// next job's — and Drop never faces a stale backlog.
+    fn fence_prefetcher(&self) {
+        if let Some(tx) = &self.prefetch_tx {
+            let (ack_tx, ack_rx) = channel();
+            if tx.send(PrefetchMsg::Fence(ack_tx)).is_ok() {
+                let _ = ack_rx.recv();
+            }
+        }
+    }
+}
+
+/// One map task, start to finish: hint the prefetcher at the claimed
+/// queue's lookahead (depth 2 only while the cache budget has ≥ 2
+/// max-blocks of unreserved slack), read the block through the cache,
+/// run `map_combine` with Hadoop's re-execution semantics, and report the
+/// task's modelled sample.
+///
+/// Modelled HDFS bytes: a demand miss paid the read on the task's critical
+/// path; a prefetched block's read also happened this job (off the
+/// critical path) and is charged to the task that consumes it. Only blocks
+/// warm from earlier jobs — data-local in-memory re-reads, the paper's
+/// caching design — cost nothing.
+#[allow(clippy::too_many_arguments)]
+fn run_map_task<J: MapReduceJob>(
+    job: &J,
+    cache: &DistributedCache,
+    store: &Arc<BlockStore>,
+    blocks: &BlockCache,
+    prefetch: Option<&Mutex<Sender<PrefetchMsg>>>,
+    max_block: u64,
+    fails: usize,
+    id: usize,
+    ahead: QueueAhead,
+) -> Result<(J::MapOut, TaskSample)> {
+    // Hint the prefetcher *before* paying our own read, so they overlap.
+    if let (Some(tx), Some(next)) = (prefetch, ahead.next) {
+        let tx = tx.lock().expect("prefetch sender poisoned");
+        let _ = tx.send(PrefetchMsg::Fetch(Arc::clone(store), next));
+        // Adaptive depth (ROADMAP streaming follow-up): also warm the
+        // block after next while the budget has two max-blocks of slack —
+        // the reservation accounting in the cache keeps the residency
+        // envelope `budget + workers × max_block` intact either way.
+        if let Some(next2) = ahead.next2 {
+            if max_block > 0 && blocks.budget_slack() >= 2 * max_block {
+                let _ = tx.send(PrefetchMsg::Fetch(Arc::clone(store), next2));
+            }
+        }
+    }
+    let (block, source) = blocks.get_or_read_traced(store, id)?;
+    let bytes = match source {
+        ReadSource::Cached => 0,
+        ReadSource::Miss | ReadSource::Prefetched => store.blocks()[id].bytes,
+    };
+    let mut attempt = 0usize;
+    loop {
+        let ctx = TaskCtx { cache, task_id: id, attempt };
+        let t0 = Instant::now();
+        let out = job.map_combine(block.data(), &ctx);
+        let compute_wall_s = t0.elapsed().as_secs_f64();
+        // Injected fault: discard this attempt's output and retry
+        // (idempotence is the combiner contract).
+        if attempt < fails {
+            attempt += 1;
+            continue;
+        }
+        return out.map(|o| {
+            (o, TaskSample { compute_wall_s, input_bytes: bytes, attempts: attempt + 1 })
+        });
     }
 }
 
@@ -611,5 +803,111 @@ mod tests {
             .unwrap();
         assert_eq!(stats.prefetch_hits, 0);
         assert_eq!(e.block_cache().prefetches(), 0);
+    }
+
+    /// SumJob with a real combiner: the tree path must produce the same
+    /// global result while shrinking what the reduce funnels.
+    struct CombSum;
+
+    impl MapReduceJob for CombSum {
+        type MapOut = (f64, usize);
+        type Output = (f64, usize);
+
+        fn map_combine(&self, block: &Matrix, _ctx: &TaskCtx) -> Result<Self::MapOut> {
+            let s: f64 = block.as_slice().iter().map(|&v| v as f64).sum();
+            Ok((s, block.rows()))
+        }
+
+        fn reduce(&self, parts: Vec<Self::MapOut>, _ctx: &TaskCtx) -> Result<Self::Output> {
+            Ok(parts
+                .into_iter()
+                .fold((0.0, 0), |acc, p| (acc.0 + p.0, acc.1 + p.1)))
+        }
+
+        fn supports_combine(&self) -> bool {
+            true
+        }
+
+        fn combine(&self, left: Self::MapOut, right: Self::MapOut) -> Result<Self::MapOut> {
+            Ok((left.0 + right.0, left.1 + right.1))
+        }
+
+        fn shuffle_bytes(&self, _part: &Self::MapOut) -> u64 {
+            16
+        }
+
+        fn name(&self) -> &str {
+            "comb_sum"
+        }
+    }
+
+    #[test]
+    fn tree_combine_matches_flat_and_shrinks_reduce() {
+        let s = store(); // 8 blocks
+        let cache = Arc::new(DistributedCache::new());
+        let mut flat_engine = Engine::new(
+            EngineOptions { tree_combine: false, ..Default::default() },
+            OverheadConfig::default(),
+        );
+        let ((flat_total, flat_rows), flat_stats) = flat_engine
+            .run_job(Arc::new(CombSum), &s, Arc::clone(&cache))
+            .unwrap();
+        let mut tree_engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let ((tree_total, tree_rows), tree_stats) = tree_engine
+            .run_job(Arc::new(CombSum), &s, cache)
+            .unwrap();
+        assert_eq!(flat_rows, 1000);
+        assert_eq!(tree_rows, 1000);
+        assert!((flat_total - tree_total).abs() < 1e-9);
+        // Flat funnels every map output; the tree funnels the merged root
+        // (8 = 2^3 blocks → exactly one part, depth 3).
+        assert_eq!(flat_stats.reduce_parts, 8);
+        assert_eq!(flat_stats.combine_depth, 0);
+        assert_eq!(flat_stats.shuffle_bytes, 8 * 16);
+        assert_eq!(tree_stats.reduce_parts, 1);
+        assert_eq!(tree_stats.combine_depth, 3);
+        assert_eq!(tree_stats.shuffle_bytes, 16);
+        assert_eq!(tree_stats.attempts, 8, "samples must cover every task");
+        assert_eq!(tree_stats.locality_hits + tree_stats.locality_steals, 8);
+    }
+
+    #[test]
+    fn tree_combine_survives_fault_injection() {
+        let s = store();
+        let opts =
+            EngineOptions { workers: 4, fault_rate: 0.4, fault_seed: 9, ..Default::default() };
+        let mut e = Engine::new(opts, OverheadConfig::default());
+        let ((total, rows), stats) = e
+            .run_job(Arc::new(CombSum), &s, Arc::new(DistributedCache::new()))
+            .unwrap();
+        assert_eq!(rows, 1000);
+        assert!(total.is_finite());
+        assert!(stats.attempts > stats.map_tasks, "expected retries");
+    }
+
+    #[test]
+    fn job_without_combiner_ignores_tree_option() {
+        let s = store();
+        let mut e = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let (_, stats) = e
+            .run_job(Arc::new(SumJob), &s, Arc::new(DistributedCache::new()))
+            .unwrap();
+        assert_eq!(stats.reduce_parts, 8, "flat fallback for combiner-less jobs");
+        assert_eq!(stats.combine_depth, 0);
+    }
+
+    #[test]
+    fn uncharged_startup_drops_job_startup_only() {
+        let s = store();
+        let cache = Arc::new(DistributedCache::new());
+        let mut e = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let cfg = JobRunCfg { charge_startup: false, tree_combine: false };
+        let (_, stats) = e
+            .run_job_cfg(Arc::new(SumJob), &s, Arc::clone(&cache), cfg)
+            .unwrap();
+        assert_eq!(stats.sim.job_startup_s, 0.0);
+        assert!(stats.sim.total_s() > 0.0, "other cost classes still charged");
+        let (_, charged) = e.run_job(Arc::new(SumJob), &s, cache).unwrap();
+        assert!(charged.sim.job_startup_s > 0.0);
     }
 }

@@ -21,18 +21,30 @@
 //!   caching design"): blocks are decoded inside the map slot, dropped when
 //!   the task ends, kept warm across the jobs of one engine, and pulled in
 //!   ahead of demand by the engine's prefetcher so disk latency overlaps
-//!   compute.
+//!   compute (depth 2 when the byte budget has slack);
+//! * **worker-side tree combine** — jobs that implement
+//!   [`MapReduceJob::combine`] have their map outputs merged pairwise on
+//!   the pool as slots drain (the thread pool's combining drain), so
+//!   shuffle bytes and the reduce funnel drop from O(blocks) to
+//!   O(workers + log blocks);
+//! * **iteration-resident sessions** — [`session::IterativeSession`] spans
+//!   every iteration of a convergence loop: one job-startup charge, warm
+//!   pool/cache/prefetcher across iterations, and a byte-accounted sticky
+//!   [`session::StateSlab`] where kernels persist per-block derived state
+//!   (the pruning bounds of `crate::fcm::native`) between iterations.
 
 pub mod cache;
 pub mod engine;
+pub mod session;
 pub mod simclock;
 
 pub use cache::{BlockCache, CachedBlock, DistributedCache, ReadSource, MIB};
-pub use engine::{Engine, EngineOptions, JobStats};
+pub use engine::{Engine, EngineOptions, JobRunCfg, JobStats};
+pub use session::{IterativeSession, SessionOptions, SlabState, StateSlab};
 pub use simclock::{SimClock, SimCost};
 
 use crate::data::Matrix;
-use crate::error::Result;
+use crate::error::{Error, Result};
 
 /// Context handed to every task attempt.
 pub struct TaskCtx<'a> {
@@ -61,6 +73,26 @@ pub trait MapReduceJob: Send + Sync {
 
     /// Reduce over all combiner outputs (input order = block order).
     fn reduce(&self, parts: Vec<Self::MapOut>, ctx: &TaskCtx) -> Result<Self::Output>;
+
+    /// Whether [`Self::combine`] implements a real pairwise merge. When
+    /// true (and the engine's tree-combine knob is on) map outputs merge
+    /// pairwise on the worker pool as map slots drain, so [`Self::reduce`]
+    /// sees O(workers + log blocks) pre-merged segments instead of one
+    /// output per block — and the modelled shuffle ships only those.
+    fn supports_combine(&self) -> bool {
+        false
+    }
+
+    /// Pairwise combine of two **adjacent** map-output segments (`left`
+    /// always covers the lower block ids). Must be equivalent to folding
+    /// the two segments in block order; the engine's merge tree has a
+    /// topology and operand order fixed by the block count, so any combine
+    /// meeting that contract — including order-sensitive ones like pool
+    /// concatenation — yields deterministic results.
+    fn combine(&self, left: Self::MapOut, right: Self::MapOut) -> Result<Self::MapOut> {
+        let _ = (left, right);
+        Err(Error::Job(format!("job `{}` does not implement combine", self.name())))
+    }
 
     /// Serialised size of one combiner output, for the shuffle cost model.
     fn shuffle_bytes(&self, part: &Self::MapOut) -> u64;

@@ -1,0 +1,463 @@
+//! Iteration-resident sessions: one session spans every iteration of a
+//! convergence loop over one block store.
+//!
+//! The Mahout-style one-job-per-iteration pattern pays a full job startup,
+//! a cold distributed-cache push and a flat reduce funnel *per iteration* —
+//! the dominant cost of iterative clustering on Hadoop (PAPER.md §3;
+//! Parallel Hierarchical Affinity Propagation, arXiv:1403.7394, makes the
+//! same observation). An [`IterativeSession`] keeps the engine's worker
+//! pool, block cache, locality queues and prefetcher warm across the jobs
+//! of one loop, charges the modelled job startup once, and gives kernels a
+//! **sticky per-block state slab** ([`StateSlab`]) — keyed by block id,
+//! byte-accounted against its own budget — where derived state (the
+//! shift-bounded pruning bounds of `crate::fcm::native`) persists between
+//! iterations.
+//!
+//! The slab deliberately lives *outside* the block cache: per-job cache
+//! meter resets ([`crate::mapreduce::BlockCache::reset_job_meters`]) and
+//! even a full block `clear()` can never invalidate bounds the pruning
+//! path still holds. Slab lifetime is the session's, ended only by its own byte
+//! budget (LRU eviction, surfaced as `slab_evictions`) or an explicit
+//! [`StateSlab::invalidate_all`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::hdfs::BlockStore;
+use crate::mapreduce::engine::{Engine, JobRunCfg, JobStats};
+use crate::mapreduce::{DistributedCache, MapReduceJob};
+
+/// How a session schedules its iterations.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionOptions {
+    /// Resident sessions charge the modelled job startup once (first
+    /// iteration only) — the pool, cache and prefetcher stay warm. A
+    /// non-resident session pays it every iteration, like a fresh Hadoop
+    /// job submission.
+    pub resident: bool,
+    /// Worker-side tree combine for this session's jobs; `None` inherits
+    /// the engine option.
+    pub tree_combine: Option<bool>,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        Self { resident: true, tree_combine: None }
+    }
+}
+
+impl SessionOptions {
+    /// The Mahout-style control arm: every iteration pays job startup and
+    /// funnels every map output through the flat reduce — exactly the
+    /// pre-session engine behaviour, for honest A/B rows.
+    pub fn per_job() -> Self {
+        Self { resident: false, tree_combine: Some(false) }
+    }
+}
+
+/// State a kernel may persist in a [`StateSlab`] between iterations.
+pub trait SlabState: Send {
+    /// Bytes this state is accounted at against the slab budget.
+    fn slab_bytes(&self) -> u64;
+}
+
+impl SlabState for () {
+    fn slab_bytes(&self) -> u64 {
+        0
+    }
+}
+
+struct SlabEntry<S> {
+    state: Arc<Mutex<S>>,
+    bytes: u64,
+    last_touch: u64,
+}
+
+struct SlabInner<S> {
+    entries: HashMap<usize, SlabEntry<S>>,
+    bytes: u64,
+    tick: u64,
+}
+
+/// Sticky per-block state, keyed by block id and byte-accounted against a
+/// budget of its own (configured via `cluster.slab_mib`). The global lock
+/// covers only lookup/accounting; each block's state sits behind its own
+/// mutex, so map tasks of different blocks never serialize on the slab.
+///
+/// Exceeding the budget evicts the least-recently-touched *other* entries
+/// (an evicted block simply recomputes exactly on its next pass); a single
+/// state larger than the whole budget does not stick, mirroring the block
+/// cache's budget semantics.
+pub struct StateSlab<S> {
+    budget_bytes: u64,
+    inner: Mutex<SlabInner<S>>,
+    evictions: AtomicU64,
+    records_pruned: AtomicU64,
+}
+
+impl<S: SlabState + Default> StateSlab<S> {
+    pub fn with_budget_bytes(budget_bytes: u64) -> Self {
+        Self {
+            budget_bytes,
+            inner: Mutex::new(SlabInner { entries: HashMap::new(), bytes: 0, tick: 0 }),
+            evictions: AtomicU64::new(0),
+            records_pruned: AtomicU64::new(0),
+        }
+    }
+
+    /// Handle to `block`'s sticky state, created empty on first touch.
+    /// Touching marks the entry most-recently-used.
+    pub fn entry(&self, block: usize) -> Arc<Mutex<S>> {
+        let mut inner = self.inner.lock().expect("state slab poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        let e = inner.entries.entry(block).or_insert_with(|| SlabEntry {
+            state: Arc::new(Mutex::new(S::default())),
+            bytes: 0,
+            last_touch: tick,
+        });
+        e.last_touch = tick;
+        Arc::clone(&e.state)
+    }
+
+    /// Record `block`'s new byte size after a mutation (the caller measures
+    /// it via [`SlabState::slab_bytes`] and drops the state lock first —
+    /// the slab never locks a state itself, so lock order is always
+    /// state-then-slab). Evicts beyond the budget.
+    pub fn note_update(&self, block: usize, bytes: u64) {
+        let mut inner = self.inner.lock().expect("state slab poisoned");
+        let st = &mut *inner;
+        if let Some(e) = st.entries.get_mut(&block) {
+            st.bytes = st.bytes + bytes - e.bytes;
+            e.bytes = bytes;
+        }
+        // Evict least-recently-touched entries (never the one just
+        // updated) until the budget holds.
+        while st.bytes > self.budget_bytes && st.entries.len() > 1 {
+            let victim = st
+                .entries
+                .iter()
+                .filter(|(id, _)| **id != block)
+                .min_by_key(|(_, e)| e.last_touch)
+                .map(|(id, _)| *id);
+            let Some(v) = victim else { break };
+            if let Some(e) = st.entries.remove(&v) {
+                st.bytes -= e.bytes;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if st.bytes > self.budget_bytes {
+            // The updated state alone exceeds the budget: drop it too (its
+            // current holder keeps the Arc alive for the rest of this
+            // iteration; the next pass starts from an empty state).
+            if let Some(e) = st.entries.remove(&block) {
+                st.bytes -= e.bytes;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Drop every sticky state (e.g. to force the next pass exact). Not
+    /// counted as evictions — this is a deliberate refresh, not budget
+    /// pressure.
+    pub fn invalidate_all(&self) {
+        let mut inner = self.inner.lock().expect("state slab poisoned");
+        inner.entries.clear();
+        inner.bytes = 0;
+    }
+
+    /// Bytes currently accounted in the slab.
+    pub fn bytes(&self) -> u64 {
+        self.inner.lock().expect("state slab poisoned").bytes
+    }
+
+    /// Entries currently resident.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("state slab poisoned").entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Budget (bytes) this slab evicts against.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Entries dropped by budget pressure since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Add to the shared pruned-records counter (kernels report how many
+    /// records reused their cached contribution).
+    pub fn add_records_pruned(&self, n: u64) {
+        self.records_pruned.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Drain the pruned-records counter (the session loop reads one
+    /// iteration's worth and stamps it into that iteration's [`JobStats`]).
+    pub fn take_records_pruned(&self) -> u64 {
+        self.records_pruned.swap(0, Ordering::Relaxed)
+    }
+}
+
+/// One convergence loop's view of the engine: iterations run as engine
+/// jobs, but startup is charged per [`SessionOptions::resident`] and the
+/// per-job cache peak meters reset between iterations without dropping
+/// warm blocks.
+pub struct IterativeSession<'e> {
+    engine: &'e mut Engine,
+    store: Arc<BlockStore>,
+    options: SessionOptions,
+    iterations: usize,
+}
+
+impl Engine {
+    /// Open an iteration-resident session over `store`. The session
+    /// borrows the engine exclusively: one convergence loop at a time,
+    /// which is also what keeps its warm-state reasoning sound.
+    pub fn session<'e>(
+        &'e mut self,
+        store: &Arc<BlockStore>,
+        options: SessionOptions,
+    ) -> IterativeSession<'e> {
+        IterativeSession { engine: self, store: Arc::clone(store), options, iterations: 0 }
+    }
+}
+
+impl IterativeSession<'_> {
+    /// Run one iteration of the loop as an engine job.
+    pub fn run_iteration<J: MapReduceJob + 'static>(
+        &mut self,
+        job: Arc<J>,
+        cache: Arc<DistributedCache>,
+    ) -> Result<(J::Output, JobStats)> {
+        let cfg = JobRunCfg {
+            charge_startup: !self.options.resident || self.iterations == 0,
+            tree_combine: self
+                .options
+                .tree_combine
+                .unwrap_or(self.engine.options().tree_combine),
+        };
+        if self.iterations > 0 {
+            // Job-scoped peak metering without evicting warm blocks (the
+            // regression the old clear()-between-jobs pattern invited).
+            self.engine.block_cache().reset_job_meters();
+        }
+        let store = Arc::clone(&self.store);
+        let out = self.engine.run_job_cfg(job, &store, cache, cfg)?;
+        self.iterations += 1;
+        Ok(out)
+    }
+
+    /// Iterations run so far.
+    pub fn iterations(&self) -> usize {
+        self.iterations
+    }
+
+    /// The store this session iterates over.
+    pub fn store(&self) -> &Arc<BlockStore> {
+        &self.store
+    }
+
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        self.engine
+    }
+
+    /// Charge driver-side local compute to the session's modelled clock.
+    pub fn charge_local(&mut self, wall: Duration) {
+        self.engine.charge_local(wall);
+    }
+
+    /// Charge a driver-side HDFS scan to the session's modelled clock.
+    pub fn charge_scan(&mut self, bytes: u64) {
+        self.engine.charge_scan(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OverheadConfig;
+    use crate::data::synth::blobs;
+    use crate::data::Matrix;
+    use crate::error::Result;
+    use crate::mapreduce::{EngineOptions, TaskCtx};
+
+    #[derive(Default)]
+    struct CounterState {
+        passes: usize,
+        payload: Vec<u8>,
+    }
+
+    impl SlabState for CounterState {
+        fn slab_bytes(&self) -> u64 {
+            self.payload.len() as u64
+        }
+    }
+
+    #[test]
+    fn slab_persists_state_across_touches() {
+        let slab: StateSlab<CounterState> = StateSlab::with_budget_bytes(1024);
+        for _ in 0..3 {
+            let h = slab.entry(7);
+            let mut st = h.lock().unwrap();
+            st.passes += 1;
+            st.payload = vec![0; 100];
+            let bytes = st.slab_bytes();
+            drop(st);
+            slab.note_update(7, bytes);
+        }
+        let h = slab.entry(7);
+        assert_eq!(h.lock().unwrap().passes, 3);
+        assert_eq!(slab.bytes(), 100);
+        assert_eq!(slab.evictions(), 0);
+    }
+
+    #[test]
+    fn slab_evicts_lru_beyond_budget_but_not_the_updater() {
+        let slab: StateSlab<CounterState> = StateSlab::with_budget_bytes(250);
+        for block in 0..4 {
+            let h = slab.entry(block);
+            let mut st = h.lock().unwrap();
+            st.payload = vec![0; 100];
+            let bytes = st.slab_bytes();
+            drop(st);
+            slab.note_update(block, bytes);
+        }
+        // Budget holds 2 entries; the two oldest (0, 1) were evicted.
+        assert_eq!(slab.len(), 2);
+        assert!(slab.bytes() <= 250);
+        assert_eq!(slab.evictions(), 2);
+        // Block 3 (just updated) must have survived.
+        assert_eq!(slab.entry(3).lock().unwrap().payload.len(), 100);
+        // Block 0 restarts empty.
+        assert_eq!(slab.entry(0).lock().unwrap().passes, 0);
+    }
+
+    #[test]
+    fn slab_rejects_single_state_above_budget() {
+        let slab: StateSlab<CounterState> = StateSlab::with_budget_bytes(50);
+        let h = slab.entry(0);
+        h.lock().unwrap().payload = vec![0; 100];
+        slab.note_update(0, 100);
+        assert!(slab.is_empty(), "an over-budget state must not stick");
+        assert_eq!(slab.bytes(), 0);
+        assert_eq!(slab.evictions(), 1);
+    }
+
+    #[test]
+    fn slab_pruned_counter_drains() {
+        let slab: StateSlab<CounterState> = StateSlab::with_budget_bytes(10);
+        slab.add_records_pruned(5);
+        slab.add_records_pruned(7);
+        assert_eq!(slab.take_records_pruned(), 12);
+        assert_eq!(slab.take_records_pruned(), 0);
+    }
+
+    #[test]
+    fn slab_invalidate_all_is_not_an_eviction() {
+        let slab: StateSlab<CounterState> = StateSlab::with_budget_bytes(1024);
+        let h = slab.entry(0);
+        h.lock().unwrap().payload = vec![0; 10];
+        slab.note_update(0, 10);
+        slab.invalidate_all();
+        assert!(slab.is_empty());
+        assert_eq!(slab.evictions(), 0);
+    }
+
+    struct SumJob;
+
+    impl MapReduceJob for SumJob {
+        type MapOut = f64;
+        type Output = f64;
+
+        fn map_combine(&self, block: &Matrix, _ctx: &TaskCtx) -> Result<f64> {
+            Ok(block.as_slice().iter().map(|&v| v as f64).sum())
+        }
+
+        fn reduce(&self, parts: Vec<f64>, _ctx: &TaskCtx) -> Result<f64> {
+            Ok(parts.into_iter().sum())
+        }
+
+        fn shuffle_bytes(&self, _part: &f64) -> u64 {
+            8
+        }
+    }
+
+    fn store() -> Arc<BlockStore> {
+        let d = blobs(800, 3, 2, 0.5, 21);
+        Arc::new(BlockStore::in_memory("t", &d.features, 100, 4).unwrap())
+    }
+
+    #[test]
+    fn resident_session_charges_startup_once() {
+        let s = store();
+        let overhead = OverheadConfig::default();
+        let startup = overhead.job_startup_s;
+        let mut e = Engine::new(EngineOptions::default(), overhead);
+        let mut session = e.session(&s, SessionOptions::default());
+        for it in 0..3 {
+            let (_, stats) = session
+                .run_iteration(Arc::new(SumJob), Arc::new(DistributedCache::new()))
+                .unwrap();
+            if it == 0 {
+                assert!(stats.sim.job_startup_s > 0.0);
+            } else {
+                assert_eq!(stats.sim.job_startup_s, 0.0);
+            }
+        }
+        assert_eq!(session.iterations(), 3);
+        drop(session);
+        assert_eq!(e.clock().jobs(), 3);
+        let total = e.clock().cost().job_startup_s;
+        assert!(
+            (total - startup).abs() < 1e-9,
+            "resident session must charge startup once, got {total}"
+        );
+    }
+
+    #[test]
+    fn per_job_session_charges_startup_each_iteration() {
+        let s = store();
+        let overhead = OverheadConfig::default();
+        let startup = overhead.job_startup_s;
+        let mut e = Engine::new(EngineOptions::default(), overhead);
+        let mut session = e.session(&s, SessionOptions::per_job());
+        for _ in 0..3 {
+            session
+                .run_iteration(Arc::new(SumJob), Arc::new(DistributedCache::new()))
+                .unwrap();
+        }
+        drop(session);
+        let total = e.clock().cost().job_startup_s;
+        assert!((total - 3.0 * startup).abs() < 1e-9, "control arm must stay per-job: {total}");
+    }
+
+    #[test]
+    fn session_iterations_reuse_warm_blocks() {
+        let s = store();
+        let opts = EngineOptions { prefetch: false, ..Default::default() };
+        let mut e = Engine::new(opts, OverheadConfig::default());
+        let mut session = e.session(&s, SessionOptions::default());
+        let (_, first) = session
+            .run_iteration(Arc::new(SumJob), Arc::new(DistributedCache::new()))
+            .unwrap();
+        assert!(first.sim.hdfs_io_s > 0.0);
+        let (_, second) = session
+            .run_iteration(Arc::new(SumJob), Arc::new(DistributedCache::new()))
+            .unwrap();
+        assert_eq!(second.sim.hdfs_io_s, 0.0, "warm iteration must charge no HDFS I/O");
+        drop(session);
+        assert_eq!(e.block_cache().misses(), 8, "second iteration must not re-decode");
+    }
+}

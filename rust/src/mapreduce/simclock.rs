@@ -41,6 +41,19 @@ impl SimCost {
         self.shuffle_s += other.shuffle_s;
         self.compute_s += other.compute_s;
     }
+
+    /// Field-wise `self − before`: a run's share of a shared clock's cost
+    /// (callers snapshot the clock before, subtract after). One place to
+    /// update when a cost class is added.
+    pub fn delta(&self, before: &SimCost) -> SimCost {
+        SimCost {
+            job_startup_s: self.job_startup_s - before.job_startup_s,
+            task_launch_s: self.task_launch_s - before.task_launch_s,
+            hdfs_io_s: self.hdfs_io_s - before.hdfs_io_s,
+            shuffle_s: self.shuffle_s - before.shuffle_s,
+            compute_s: self.compute_s - before.compute_s,
+        }
+    }
 }
 
 /// Accumulates modelled cluster time across jobs of one pipeline run.
@@ -132,9 +145,13 @@ impl SimClock {
         exact
     }
 
-    /// Charge driver-side (non-MR) compute, e.g. the pre-clustering.
-    pub fn charge_local(&mut self, overhead: &OverheadConfig, wall: Duration) {
-        self.cost.compute_s += wall.as_secs_f64() * overhead.compute_scale;
+    /// Charge driver-side (non-MR) compute, e.g. the pre-clustering or the
+    /// worker-side combine-tree merges; returns the seconds charged so
+    /// callers can fold the same amount into a per-job cost breakdown.
+    pub fn charge_local(&mut self, overhead: &OverheadConfig, wall: Duration) -> f64 {
+        let s = wall.as_secs_f64() * overhead.compute_scale;
+        self.cost.compute_s += s;
+        s
     }
 
     /// Charge a one-off HDFS scan of `bytes` (e.g. the driver sampling, or
@@ -237,6 +254,19 @@ mod tests {
         assert_eq!(clock.jobs(), 5);
         // 5 × startup alone = 50s.
         assert!(clock.total_s() >= 50.0);
+    }
+
+    #[test]
+    fn delta_isolates_a_runs_share() {
+        let mut clock = SimClock::new();
+        clock.charge_job(&overhead(), 4, &[task(1.0)], 1024 * 1024, 0.5);
+        let before = clock.cost();
+        clock.charge_job(&overhead(), 4, &[task(2.0)], 0, 0.0);
+        let share = clock.cost().delta(&before);
+        let mut fresh = SimClock::new();
+        let direct = fresh.charge_job(&overhead(), 4, &[task(2.0)], 0, 0.0);
+        assert!((share.total_s() - direct.total_s()).abs() < 1e-9);
+        assert!((share.job_startup_s - direct.job_startup_s).abs() < 1e-9);
     }
 
     #[test]

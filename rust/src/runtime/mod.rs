@@ -232,6 +232,53 @@ impl ChunkBackend for ResolvedBackend {
         self.pick(Graph::Kmeans, x.cols(), v.rows()).kmeans_partials(x, v, w)
     }
 
+    // Forward the pruned entry points to whatever backend the shape
+    // resolves to, so Auto/Native resolutions keep real shift-bounded
+    // pruning (a PJRT pick falls back to its exact default, which resets
+    // the state — no stale bound can cross a backend switch).
+    #[allow(clippy::too_many_arguments)]
+    fn fcm_partials_pruned(
+        &self,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        m: f64,
+        state: &mut crate::fcm::BlockPruneState,
+        tol: f64,
+        refresh_every: usize,
+    ) -> Result<(Partials, usize)> {
+        self.pick(Graph::Fcm, x.cols(), v.rows())
+            .fcm_partials_pruned(x, v, w, m, state, tol, refresh_every)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn classic_partials_pruned(
+        &self,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        m: f64,
+        state: &mut crate::fcm::BlockPruneState,
+        tol: f64,
+        refresh_every: usize,
+    ) -> Result<(Partials, usize)> {
+        self.pick(Graph::Classic, x.cols(), v.rows())
+            .classic_partials_pruned(x, v, w, m, state, tol, refresh_every)
+    }
+
+    fn kmeans_partials_pruned(
+        &self,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        state: &mut crate::fcm::BlockPruneState,
+        tol: f64,
+        refresh_every: usize,
+    ) -> Result<(Partials, usize)> {
+        self.pick(Graph::Kmeans, x.cols(), v.rows())
+            .kmeans_partials_pruned(x, v, w, state, tol, refresh_every)
+    }
+
     fn name(&self) -> &'static str {
         match self {
             ResolvedBackend::Pjrt(_) => "pjrt",

@@ -7,8 +7,15 @@
 //! ([`ThreadPool::map_indexed_hinted`]) models Hadoop's data-local task
 //! assignment: each logical worker drains its own queue of hinted tasks and
 //! steals from a neighbour only when its queue is dry.
+//!
+//! The combining drain ([`ThreadPool::map_indexed_hinted_combined`]) adds a
+//! worker-side merge tree on top of the hinted drain: task outputs merge
+//! pairwise on the pool as map slots free up, following a binary topology
+//! fixed by task index (left sibling is always the left operand), so the
+//! caller's reduce sees O(log n) pre-merged segments instead of n raw
+//! outputs — deterministically, whatever order tasks actually complete in.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -114,9 +121,9 @@ impl ThreadPool {
     /// makes the *next* task prefetchable — and steals from the back of the
     /// first non-dry neighbour only when its own queue is empty.
     ///
-    /// `f` receives `(task, next)` where `next` is the task that was at the
-    /// head of the same queue when `task` was claimed (the engine's
-    /// prefetch hint), or `None` when that queue drained.
+    /// `f` receives `(task, ahead)` where [`QueueAhead`] holds the one or
+    /// two tasks that were next on the same queue when `task` was claimed
+    /// (the engine's prefetch hints, depth 1 and 2).
     ///
     /// Returns results in index order plus the locality outcome of the
     /// whole map (own-queue claims vs steals).
@@ -128,16 +135,10 @@ impl ThreadPool {
     ) -> (Vec<Result<R, String>>, LocalityStats)
     where
         R: Send + 'static,
-        F: Fn(usize, Option<usize>) -> R + Send + Sync + 'static,
+        F: Fn(usize, QueueAhead) -> R + Send + Sync + 'static,
     {
         let size = self.size();
-        let mut build: Vec<VecDeque<usize>> = (0..size).map(|_| VecDeque::new()).collect();
-        for id in 0..n {
-            let hint = hints.get(id).copied().unwrap_or(id);
-            build[hint % size].push_back(id);
-        }
-        let queues: Arc<Vec<Mutex<VecDeque<usize>>>> =
-            Arc::new(build.into_iter().map(Mutex::new).collect());
+        let queues = build_queues(n, hints, size);
         let local_hits = Arc::new(AtomicUsize::new(0));
         let steals = Arc::new(AtomicUsize::new(0));
         let f = Arc::new(f);
@@ -153,33 +154,13 @@ impl ThreadPool {
             let f = Arc::clone(&f);
             let tx = tx.clone();
             self.execute(move || loop {
-                // Own queue first...
-                let mut claimed: Option<(usize, Option<usize>, bool)> = None;
-                {
-                    let mut q = queues[w].lock().expect("poisoned locality queue");
-                    if let Some(id) = q.pop_front() {
-                        claimed = Some((id, q.front().copied(), true));
-                    }
-                }
-                // ...then steal from the back of the first non-dry victim
-                // (back = the task the victim will reach last).
-                if claimed.is_none() {
-                    for off in 1..size {
-                        let v = (w + off) % size;
-                        let mut q = queues[v].lock().expect("poisoned locality queue");
-                        if let Some(id) = q.pop_back() {
-                            claimed = Some((id, q.front().copied(), false));
-                            break;
-                        }
-                    }
-                }
-                let Some((id, next, local)) = claimed else { break };
+                let Some((id, ahead, local)) = claim_task(&queues, w, size) else { break };
                 if local {
                     local_hits.fetch_add(1, Ordering::Relaxed);
                 } else {
                     steals.fetch_add(1, Ordering::Relaxed);
                 }
-                let out = catch_unwind(AssertUnwindSafe(|| f(id, next))).map_err(describe_panic);
+                let out = catch_unwind(AssertUnwindSafe(|| f(id, ahead))).map_err(describe_panic);
                 let _ = tx.send((id, out));
             });
         }
@@ -193,6 +174,193 @@ impl ThreadPool {
             },
         )
     }
+
+    /// Combining drain: like [`Self::map_indexed_hinted`], but task outputs
+    /// merge pairwise on the pool as map slots drain, following a binary
+    /// tree fixed by task index — siblings `(2k, 2k+1)` merge into slot `k`
+    /// of the next level, with the even (left) sibling always the left
+    /// operand of `combine`. The topology and operand order depend only on
+    /// `n`, so results are deterministic for any associative-over-adjacent-
+    /// segments `combine`, even one that is order-sensitive (e.g. ordered
+    /// concatenation), regardless of completion order.
+    ///
+    /// Returns the surviving segment values ordered by their leftmost task
+    /// index — O(log n) of them (the root plus one lone tail per odd-width
+    /// level) — with the locality and merge-tree outcomes. A panic in `f`
+    /// or `combine` surfaces as the `Err` of the segment that contained it.
+    pub fn map_indexed_hinted_combined<R, F, C>(
+        &self,
+        n: usize,
+        hints: &[usize],
+        f: F,
+        combine: C,
+    ) -> (Vec<Result<R, String>>, LocalityStats, CombineStats)
+    where
+        R: Send + 'static,
+        F: Fn(usize, QueueAhead) -> R + Send + Sync + 'static,
+        C: Fn(R, R) -> R + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return (Vec::new(), LocalityStats::default(), CombineStats::default());
+        }
+        let size = self.size();
+        let queues = build_queues(n, hints, size);
+        let local_hits = Arc::new(AtomicUsize::new(0));
+        let steals = Arc::new(AtomicUsize::new(0));
+        // Slot widths per level: a lone trailing slot (odd width) can never
+        // merge at its level and parks there until final collection.
+        let mut widths = vec![n];
+        while *widths.last().expect("non-empty widths") > 1 {
+            let w = *widths.last().expect("non-empty widths");
+            widths.push(w / 2);
+        }
+        let widths = Arc::new(widths);
+        let ledger: Arc<Mutex<MergeLedger<R>>> = Arc::new(Mutex::new(MergeLedger {
+            slots: HashMap::new(),
+            merges: 0,
+            depth: 0,
+        }));
+        let f = Arc::new(f);
+        let combine = Arc::new(combine);
+        // Completion is detected by sender-drop, so a panicking drain task
+        // (the closures inside are unwind-caught, but belt and braces) can
+        // never deadlock the collection below.
+        let (done_tx, done_rx) = channel::<()>();
+        for w in 0..size {
+            let queues = Arc::clone(&queues);
+            let local_hits = Arc::clone(&local_hits);
+            let steals = Arc::clone(&steals);
+            let widths = Arc::clone(&widths);
+            let ledger = Arc::clone(&ledger);
+            let f = Arc::clone(&f);
+            let combine = Arc::clone(&combine);
+            let done_tx = done_tx.clone();
+            self.execute(move || {
+                loop {
+                    let Some((id, ahead, local)) = claim_task(&queues, w, size) else { break };
+                    if local {
+                        local_hits.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        steals.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let mut val: Result<R, String> =
+                        catch_unwind(AssertUnwindSafe(|| f(id, ahead))).map_err(describe_panic);
+                    // Cascade up the merge tree: park when the sibling is
+                    // still running (it will pick the pair up later), merge
+                    // and promote when it already parked. Check-and-park is
+                    // one lock acquisition, so exactly one of the siblings
+                    // performs each merge.
+                    let mut level = 0usize;
+                    let mut slot = id;
+                    loop {
+                        let width = widths.get(level).copied().unwrap_or(1);
+                        let sib = slot ^ 1;
+                        let partner = {
+                            let mut lg = ledger.lock().expect("combine ledger poisoned");
+                            if sib >= width {
+                                // Lone tail slot: parks permanently.
+                                lg.slots.insert((level, slot), val);
+                                break;
+                            }
+                            match lg.slots.remove(&(level, sib)) {
+                                Some(p) => p,
+                                None => {
+                                    lg.slots.insert((level, slot), val);
+                                    break;
+                                }
+                            }
+                        };
+                        // Even slot = left segment = left operand, always.
+                        let (left, right) =
+                            if slot & 1 == 0 { (val, partner) } else { (partner, val) };
+                        let merged = match (left, right) {
+                            (Ok(a), Ok(b)) => {
+                                let c = Arc::clone(&combine);
+                                catch_unwind(AssertUnwindSafe(move || c(a, b)))
+                                    .map_err(describe_panic)
+                            }
+                            (Err(e), _) | (_, Err(e)) => Err(e),
+                        };
+                        {
+                            let mut lg = ledger.lock().expect("combine ledger poisoned");
+                            lg.merges += 1;
+                            lg.depth = lg.depth.max(level + 1);
+                        }
+                        val = merged;
+                        slot /= 2;
+                        level += 1;
+                    }
+                }
+                drop(done_tx);
+            });
+        }
+        drop(done_tx);
+        // Block until every drain task has finished (all senders dropped).
+        while done_rx.recv().is_ok() {}
+        let mut lg = ledger.lock().expect("combine ledger poisoned");
+        let stats = CombineStats { merges: lg.merges, depth: lg.depth };
+        let mut parts: Vec<((usize, usize), Result<R, String>)> = lg.slots.drain().collect();
+        drop(lg);
+        // Order surviving segments by their leftmost task index.
+        parts.sort_by_key(|part| {
+            let (level, slot) = part.0;
+            slot << level
+        });
+        let results = parts.into_iter().map(|(_, v)| v).collect();
+        (
+            results,
+            LocalityStats {
+                local_hits: local_hits.load(Ordering::Relaxed),
+                steals: steals.load(Ordering::Relaxed),
+            },
+            stats,
+        )
+    }
+}
+
+/// Segment ledger of one combining drain: values parked by `(level, slot)`.
+struct MergeLedger<R> {
+    slots: HashMap<(usize, usize), Result<R, String>>,
+    merges: usize,
+    depth: usize,
+}
+
+/// Per-worker hinted queues for a map of `n` tasks.
+fn build_queues(n: usize, hints: &[usize], size: usize) -> Arc<Vec<Mutex<VecDeque<usize>>>> {
+    let mut build: Vec<VecDeque<usize>> = (0..size).map(|_| VecDeque::new()).collect();
+    for id in 0..n {
+        let hint = hints.get(id).copied().unwrap_or(id);
+        build[hint % size].push_back(id);
+    }
+    Arc::new(build.into_iter().map(Mutex::new).collect())
+}
+
+/// Claim the next task for logical worker `w`: own queue front first, then
+/// the back of the first non-dry victim. Returns the claimed id, the
+/// claimed queue's lookahead, and whether the claim was own-queue.
+fn claim_task(
+    queues: &[Mutex<VecDeque<usize>>],
+    w: usize,
+    size: usize,
+) -> Option<(usize, QueueAhead, bool)> {
+    {
+        let mut q = queues[w].lock().expect("poisoned locality queue");
+        if let Some(id) = q.pop_front() {
+            let ahead = QueueAhead { next: q.front().copied(), next2: q.get(1).copied() };
+            return Some((id, ahead, true));
+        }
+    }
+    for off in 1..size {
+        let v = (w + off) % size;
+        let mut q = queues[v].lock().expect("poisoned locality queue");
+        if let Some(id) = q.pop_back() {
+            // A stolen task gets no deep lookahead: the victim still owns
+            // its queue order, so only its current front is a useful hint.
+            let ahead = QueueAhead { next: q.front().copied(), next2: None };
+            return Some((id, ahead, false));
+        }
+    }
+    None
 }
 
 /// Locality outcome of a hinted map: how tasks were claimed.
@@ -202,6 +370,25 @@ pub struct LocalityStats {
     pub local_hits: usize,
     /// Tasks taken from another worker's queue because one's own was dry.
     pub steals: usize,
+}
+
+/// Lookahead of the claimed queue at claim time — the engine's prefetch
+/// hints (depth 1 always, depth 2 when the cache budget has slack).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueAhead {
+    /// The task that was next on the same queue, if any.
+    pub next: Option<usize>,
+    /// The task after `next` on the same queue, if any.
+    pub next2: Option<usize>,
+}
+
+/// Merge-tree outcome of a combining drain.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CombineStats {
+    /// Pairwise merges executed on the pool.
+    pub merges: usize,
+    /// Height of the tallest merged segment (0 = nothing merged).
+    pub depth: usize,
 }
 
 /// Render a caught panic payload as a task-failure message.
@@ -377,15 +564,17 @@ mod tests {
     }
 
     #[test]
-    fn hinted_map_passes_next_queued_task_as_hint() {
-        // Single worker, all tasks on its queue: the next-hint must be the
-        // task that followed in queue order, and None at the queue's end.
+    fn hinted_map_passes_queue_lookahead_as_hint() {
+        // Single worker, all tasks on its queue: the lookahead must be the
+        // one or two tasks that followed in queue order, and None at the
+        // queue's end.
         let pool = ThreadPool::new(1);
         let hints = vec![0usize; 5];
-        let seen: Arc<Mutex<Vec<(usize, Option<usize>)>>> = Arc::new(Mutex::new(Vec::new()));
+        let seen: Arc<Mutex<Vec<(usize, Option<usize>, Option<usize>)>>> =
+            Arc::new(Mutex::new(Vec::new()));
         let seen_in = Arc::clone(&seen);
-        let (out, _) = pool.map_indexed_hinted(5, &hints, move |i, next| {
-            seen_in.lock().unwrap().push((i, next));
+        let (out, _) = pool.map_indexed_hinted(5, &hints, move |i, ahead: QueueAhead| {
+            seen_in.lock().unwrap().push((i, ahead.next, ahead.next2));
             i
         });
         assert!(out.iter().all(|r| r.is_ok()));
@@ -393,7 +582,13 @@ mod tests {
         log.sort();
         assert_eq!(
             log,
-            vec![(0, Some(1)), (1, Some(2)), (2, Some(3)), (3, Some(4)), (4, None)]
+            vec![
+                (0, Some(1), Some(2)),
+                (1, Some(2), Some(3)),
+                (2, Some(3), Some(4)),
+                (3, Some(4), None),
+                (4, None, None)
+            ]
         );
     }
 
@@ -426,5 +621,88 @@ mod tests {
         let (out, stats) = pool.map_indexed_hinted::<usize, _>(0, &[], |i, _| i);
         assert!(out.is_empty());
         assert_eq!(stats, LocalityStats::default());
+    }
+
+    /// Ordered concatenation is the most order-sensitive combine there is:
+    /// the fixed tree topology must reproduce the sequential fold exactly,
+    /// for any worker count and any (non-power-of-two) task count.
+    #[test]
+    fn combined_drain_preserves_segment_order() {
+        for workers in [1usize, 3, 4] {
+            for n in [1usize, 2, 7, 16, 20, 33] {
+                let pool = ThreadPool::new(workers);
+                let hints: Vec<usize> = (0..n).map(|i| i % workers.max(1)).collect();
+                let (parts, locality, stats) = pool.map_indexed_hinted_combined(
+                    n,
+                    &hints,
+                    |i, _ahead| vec![i],
+                    |mut a: Vec<usize>, b: Vec<usize>| {
+                        a.extend(b);
+                        a
+                    },
+                );
+                let flat: Vec<usize> = parts
+                    .into_iter()
+                    .flat_map(|p| p.expect("no task failed"))
+                    .collect();
+                assert_eq!(flat, (0..n).collect::<Vec<_>>(), "workers={workers} n={n}");
+                assert_eq!(locality.local_hits + locality.steals, n);
+                if n > 1 {
+                    assert!(stats.merges > 0, "workers={workers} n={n}: no merges");
+                    assert!(stats.merges < n, "merge count must be below task count");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn combined_drain_collapses_to_log_parts() {
+        let pool = ThreadPool::new(4);
+        let n = 64usize; // power of two: single root survives
+        let hints: Vec<usize> = (0..n).map(|i| i % 4).collect();
+        let (parts, _, stats) =
+            pool.map_indexed_hinted_combined(n, &hints, |i, _| i, |a: usize, b: usize| a + b);
+        assert_eq!(parts.len(), 1, "power-of-two map must merge to the root");
+        assert_eq!(*parts[0].as_ref().unwrap(), (0..64).sum::<usize>());
+        assert_eq!(stats.merges, 63);
+        assert_eq!(stats.depth, 6);
+    }
+
+    #[test]
+    fn combined_drain_surfaces_panics_as_segment_errors() {
+        let pool = ThreadPool::new(3);
+        let hints: Vec<usize> = (0..9).map(|i| i % 3).collect();
+        let (parts, _, _) = pool.map_indexed_hinted_combined(
+            9,
+            &hints,
+            |i, _| {
+                if i == 4 {
+                    panic!("boom {i}");
+                }
+                i
+            },
+            |a: usize, b: usize| a + b,
+        );
+        let errs: Vec<&String> = parts.iter().filter_map(|p| p.as_ref().err()).collect();
+        assert_eq!(errs.len(), 1, "exactly one poisoned segment: {parts:?}");
+        assert!(errs[0].contains("boom"));
+        // Pool still usable after the panic.
+        let (again, _, _) =
+            pool.map_indexed_hinted_combined(2, &[0, 1], |i, _| i, |a: usize, b: usize| a + b);
+        assert_eq!(again.len(), 1);
+    }
+
+    #[test]
+    fn combined_drain_empty_and_single() {
+        let pool = ThreadPool::new(2);
+        let (parts, _, stats) =
+            pool.map_indexed_hinted_combined::<usize, _, _>(0, &[], |i, _| i, |a, b| a + b);
+        assert!(parts.is_empty());
+        assert_eq!(stats, CombineStats::default());
+        let (parts, _, stats) =
+            pool.map_indexed_hinted_combined(1, &[0], |i, _| i * 7, |a: usize, b: usize| a + b);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(*parts[0].as_ref().unwrap(), 0);
+        assert_eq!(stats.merges, 0);
     }
 }

@@ -11,8 +11,12 @@ use bigfcm::config::OverheadConfig;
 use bigfcm::data::synth::blobs;
 use bigfcm::data::Matrix;
 use bigfcm::error::Result;
+use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo};
+use bigfcm::fcm::{max_center_shift2, ChunkBackend, NativeBackend};
 use bigfcm::hdfs::BlockStoreWriter;
-use bigfcm::mapreduce::{DistributedCache, Engine, EngineOptions, MapReduceJob, TaskCtx};
+use bigfcm::mapreduce::{
+    DistributedCache, Engine, EngineOptions, MapReduceJob, SessionOptions, TaskCtx,
+};
 
 /// Sum job whose compute deliberately dominates a tiny block decode (many
 /// passes over the block), so the prefetcher reliably wins its race and the
@@ -130,6 +134,105 @@ fn mini_scale_harness_envelopes_hold() {
     );
     // Every distinct block was decoded at least once, on demand or ahead.
     assert!(bc.misses() + bc.prefetches() >= 48);
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// CI-sized twin of the scale harness's iteration-residency phase: an FCM
+/// convergence loop over an on-disk store through an `IterativeSession`,
+/// with shift-bounded pruning on. Pins the acceptance envelope:
+/// `records_pruned > 0` after iteration 2, final centers within epsilon-
+/// scale distance of the exact (pruning-disabled) run, job startup charged
+/// once, and the byte-budget residency envelope intact throughout.
+#[test]
+fn mini_scale_session_fcm_prunes_and_matches_exact() {
+    let workers = 4usize;
+    // One coherent blob structure split across 12 on-disk blocks (the
+    // session loop clusters globally, so every block must come from the
+    // same mixture).
+    let data = blobs(12 * 1024, 6, 3, 0.25, 9100);
+    let dir = std::env::temp_dir()
+        .join(format!("bigfcm_scale_mini_session_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut w = BlockStoreWriter::create("mini", 6, workers, dir.clone()).unwrap();
+    for b in 0..12 {
+        w.append(&data.features.slice_rows(b * 1024, (b + 1) * 1024)).unwrap();
+    }
+    let store = Arc::new(w.finish().unwrap());
+    let block_bytes = store.max_block_bytes();
+    let budget = 6 * block_bytes;
+
+    let mut rng = bigfcm::prng::Pcg::new(9101);
+    let v0 = bigfcm::fcm::seeding::random_records(&data.features, 3, &mut rng);
+    let params = FcmParams { epsilon: 1e-10, ..Default::default() };
+    let backend: Arc<dyn ChunkBackend> = Arc::new(NativeBackend);
+    let overhead = OverheadConfig::default();
+    let opts = EngineOptions { workers, block_cache_bytes: budget, ..Default::default() };
+
+    let mut exact_engine = Engine::new(opts.clone(), overhead.clone());
+    let exact = run_fcm_session(
+        &mut exact_engine,
+        &store,
+        Arc::clone(&backend),
+        SessionAlgo::Fcm,
+        v0.clone(),
+        &params,
+        &PruneConfig::disabled(),
+        SessionOptions::default(),
+    )
+    .unwrap();
+
+    let mut engine = Engine::new(opts, overhead.clone());
+    let run = run_fcm_session(
+        &mut engine,
+        &store,
+        backend,
+        SessionAlgo::Fcm,
+        v0,
+        &params,
+        &PruneConfig::default(),
+        SessionOptions::default(),
+    )
+    .unwrap();
+
+    assert!(exact.result.converged && run.result.converged);
+    // Acceptance: pruning live after iteration 2.
+    let pruned_after_two: u64 = run
+        .per_iteration
+        .iter()
+        .skip(2)
+        .map(|s| s.records_pruned)
+        .sum();
+    assert!(
+        pruned_after_two > 0,
+        "no records pruned after iteration 2 across {} iterations",
+        run.jobs
+    );
+    // Acceptance: final centers within epsilon-scale distance of exact.
+    let shift = max_center_shift2(&exact.result.centers, &run.result.centers);
+    assert!(shift < 1e-3, "pruned session drifted from exact: {shift}");
+    // Iteration residency: the whole loop charged startup once.
+    assert!(
+        (run.sim.job_startup_s - overhead.job_startup_s).abs() < 1e-9,
+        "resident loop charged startup more than once: {}",
+        run.sim.job_startup_s
+    );
+    // The streaming envelope holds across all iterations: the run result
+    // carries the max over per-iteration peaks (the session resets the
+    // per-job meters between iterations, so a post-loop gauge read would
+    // only see the last one).
+    assert!(
+        run.peak_resident_bytes <= budget + workers as u64 * block_bytes,
+        "session iterations broke the residency envelope: {} > {budget} + {workers}×{block_bytes}",
+        run.peak_resident_bytes
+    );
+    assert!(run.peak_resident_bytes > 0, "peak meter never observed");
+    // Slab stayed within its own budget and was metered.
+    let last = run.per_iteration.last().unwrap();
+    assert!(last.slab_bytes <= PruneConfig::default().slab_bytes);
+    assert!(run.per_iteration.iter().any(|s| s.slab_bytes > 0));
+    // Tree combine funnels few parts into each iteration's reduce.
+    assert!(last.reduce_parts < 12, "tree combine inactive: {} parts", last.reduce_parts);
 
     std::fs::remove_dir_all(dir).ok();
 }

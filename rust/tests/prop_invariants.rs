@@ -9,7 +9,9 @@ use bigfcm::config::{Config, FlagPolicy};
 use bigfcm::coordinator::BigFcm;
 use bigfcm::data::synth::{blobs, gaussian_mixture, Component};
 use bigfcm::data::Matrix;
-use bigfcm::fcm::loops::{run_fcm, FcmParams, Variant};
+use bigfcm::fcm::loops::{
+    run_fcm, run_fcm_session, FcmParams, PruneConfig, SessionAlgo, Variant,
+};
 use bigfcm::fcm::native::{
     classic_partials_native, classic_partials_scalar, fcm_partials_native, fcm_partials_scalar,
     kmeans_partials_native, kmeans_partials_scalar, memberships,
@@ -17,7 +19,7 @@ use bigfcm::fcm::native::{
 use bigfcm::fcm::seeding::random_records;
 use bigfcm::fcm::{max_center_shift2, ChunkBackend, NativeBackend};
 use bigfcm::hdfs::BlockStore;
-use bigfcm::mapreduce::{Engine, EngineOptions};
+use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions};
 use bigfcm::metrics::hungarian_max;
 use bigfcm::prng::Pcg;
 
@@ -293,6 +295,147 @@ fn prop_byte_budget_bounds_residency_under_concurrency() {
         cache.clear();
         assert_eq!(cache.resident_bytes(), 0, "case {case}");
         assert_eq!(cache.peak_resident_bytes(), 0, "case {case}");
+    }
+}
+
+/// A pruned iteration-resident session converges to the same centers as
+/// the exact (pruning-disabled) path, within epsilon-scale drift — for
+/// both the Fast and Classic chunk-math variants, on seeded synth blobs.
+/// The pruned run must actually prune (tail iterations have tiny shifts),
+/// and convergence is only ever accepted from an exact pass.
+#[test]
+fn prop_pruned_session_converges_to_exact_centers() {
+    for case in 0..4u64 {
+        for variant in [Variant::Fast, Variant::Classic] {
+            let data = blobs(1536, 3, 3, 0.25, 50_000 + case);
+            let store =
+                Arc::new(BlockStore::in_memory("t", &data.features, 192, 4).unwrap());
+            let mut rng = Pcg::new(51_000 + case);
+            let v0 = random_records(&data.features, 3, &mut rng);
+            let params = FcmParams { epsilon: 1e-10, variant, ..Default::default() };
+            let backend: Arc<dyn ChunkBackend> = Arc::new(NativeBackend);
+            let mut e1 = Engine::new(EngineOptions::default(), Config::default().overhead);
+            let exact = run_fcm_session(
+                &mut e1,
+                &store,
+                Arc::clone(&backend),
+                SessionAlgo::Fcm,
+                v0.clone(),
+                &params,
+                &PruneConfig::disabled(),
+                SessionOptions::default(),
+            )
+            .unwrap();
+            let mut e2 = Engine::new(EngineOptions::default(), Config::default().overhead);
+            let pruned = run_fcm_session(
+                &mut e2,
+                &store,
+                Arc::clone(&backend),
+                SessionAlgo::Fcm,
+                v0,
+                &params,
+                &PruneConfig::default(),
+                SessionOptions::default(),
+            )
+            .unwrap();
+            assert!(exact.result.converged, "case {case} {variant:?}: exact arm stalled");
+            assert!(pruned.result.converged, "case {case} {variant:?}: pruned arm stalled");
+            assert!(
+                pruned.records_pruned > 0,
+                "case {case} {variant:?}: session never pruned over {} iterations",
+                pruned.jobs
+            );
+            let shift = max_center_shift2(&exact.result.centers, &pruned.result.centers);
+            assert!(shift < 1e-3, "case {case} {variant:?}: pruned drift {shift}");
+        }
+    }
+}
+
+/// Engine-level tree combine is a drop-in for the flat reduce even on
+/// non-commutative-looking `CombinerOut` orderings: the full BigFCM
+/// pipeline (whose combiner output pools weighted centers — order visibly
+/// matters to the reduce's WFCM input) must produce bit-identical centers
+/// with the combine tree on and off, because ordered pool concatenation
+/// over the fixed merge topology reproduces block order exactly.
+#[test]
+fn prop_tree_combine_is_drop_in_for_flat_reduce() {
+    for case in 0..4u64 {
+        for reducers in [1usize, 4] {
+            let data = blobs(2048, 3, 3, 0.3, 60_000 + case);
+            let store =
+                Arc::new(BlockStore::in_memory("t", &data.features, 256, 4).unwrap());
+            let mut cfg = Config::default();
+            cfg.fcm.epsilon = 1e-9;
+            cfg.fcm.flag_policy = FlagPolicy::ForceFcm;
+            cfg.cluster.reducers = reducers;
+            cfg.cluster.tree_combine = true;
+            let tree = BigFcm::new(cfg.clone()).clusters(3).run_store(&store).unwrap();
+            cfg.cluster.tree_combine = false;
+            let flat = BigFcm::new(cfg).clusters(3).run_store(&store).unwrap();
+            assert_eq!(
+                tree.centers.as_slice(),
+                flat.centers.as_slice(),
+                "case {case} reducers {reducers}: tree combine changed the pipeline result"
+            );
+            assert_eq!(flat.job.combine_depth, 0, "case {case}: flat path not taken");
+            if reducers == 1 {
+                assert!(tree.job.combine_depth > 0, "case {case}: tree path not taken");
+                assert!(
+                    tree.job.reduce_parts < flat.job.reduce_parts,
+                    "case {case}: tree reduce saw {} parts vs flat {}",
+                    tree.job.reduce_parts,
+                    flat.job.reduce_parts
+                );
+            } else {
+                // The multi-reducer two-level WFCM is keyed on the part
+                // count; CombineJob stands its combiner down so that path
+                // behaves exactly as before.
+                assert_eq!(
+                    tree.job.combine_depth, 0,
+                    "case {case}: tree combine must stand down for reducers > 1"
+                );
+            }
+        }
+    }
+}
+
+/// Adaptive prefetch depth never grows the residency envelope: with a
+/// budget roomy enough to trigger depth-2 prefetches (≥ 2 max-blocks of
+/// slack throughout), peak resident bytes still stay within
+/// `budget + workers × max_block_bytes`, and results are unchanged.
+#[test]
+fn prop_adaptive_prefetch_depth_keeps_residency_envelope() {
+    for case in 0..3u64 {
+        let data = blobs(2048, 4, 2, 0.4, 70_000 + case);
+        let dir = std::env::temp_dir()
+            .join(format!("bigfcm_prop_prefetch_{}_{case}", std::process::id()));
+        let disk =
+            Arc::new(BlockStore::on_disk("t", &data.features, 128, 4, dir.clone()).unwrap());
+        let workers = 4u64;
+        let block_bytes = disk.max_block_bytes();
+        // 8 of 16 blocks fit: plenty of slack early (deep prefetch fires),
+        // saturated later (depth falls back to 1).
+        let budget = 8 * block_bytes;
+        let mut cfg = Config::default();
+        cfg.fcm.epsilon = 1e-6;
+        cfg.fcm.flag_policy = FlagPolicy::ForceFcm;
+        let mut engine = Engine::new(
+            EngineOptions { workers: 4, block_cache_bytes: budget, ..Default::default() },
+            cfg.overhead.clone(),
+        );
+        let run = BigFcm::new(cfg)
+            .clusters(2)
+            .run_with_engine(&disk, &mut engine)
+            .unwrap();
+        assert!(run.centers.as_slice().iter().all(|v| v.is_finite()));
+        let bc = engine.block_cache();
+        assert!(
+            bc.peak_resident_bytes() <= budget + workers * block_bytes,
+            "case {case}: deep prefetch broke the envelope ({} > {budget} + {workers}×{block_bytes})",
+            bc.peak_resident_bytes()
+        );
+        assert!(bc.cached_bytes() <= budget, "case {case}");
+        std::fs::remove_dir_all(dir).ok();
     }
 }
 

@@ -44,8 +44,10 @@ import json
 import sys
 
 base_path, cur_path, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
-base = json.load(open(base_path))["results"]
-cur = json.load(open(cur_path))["results"]
+base_doc = json.load(open(base_path))
+cur_doc = json.load(open(cur_path))
+base = base_doc["results"]
+cur = cur_doc["results"]
 
 print()
 print("== micro_hotpath vs committed baseline ==")
@@ -72,6 +74,34 @@ if regressions:
     print("(fail-soft: not failing the build; investigate or refresh the baseline)")
 else:
     print(f"report: no label slower than baseline by >{threshold:.0%}")
+
+# Session counters (iteration-resident A/B): reduce wall, pruning rate and
+# combine-tree depth per push, diffed against the baseline when it has them.
+base_sess = base_doc.get("session") or {}
+cur_sess = cur_doc.get("session") or {}
+if cur_sess:
+    print()
+    print("== iteration-residency counters (session vs per-job A/B) ==")
+    keys = [
+        "per_job_reduce_wall_s",
+        "session_reduce_wall_s",
+        "records_pruned",
+        "combine_depth",
+        "per_job_modelled_s",
+        "session_modelled_s",
+    ]
+    print(f"{'counter':<26} {'baseline':>14} {'now':>14}")
+    for key in keys:
+        b = base_sess.get(key)
+        c = cur_sess.get(key)
+        bs = f"{b:.6g}" if isinstance(b, (int, float)) else "-"
+        cs = f"{c:.6g}" if isinstance(c, (int, float)) else "-"
+        print(f"{key:<26} {bs:>14} {cs:>14}")
+    pj, se = cur_sess.get("per_job_reduce_wall_s"), cur_sess.get("session_reduce_wall_s")
+    if pj and se and pj > 0:
+        print(f"reduce-wall ratio (session / per-job): {se / pj:.2f}x")
+    if not cur_sess.get("records_pruned"):
+        print("note: records_pruned == 0 this run — pruning never engaged; investigate")
 EOF
 
 exit 0
