@@ -21,7 +21,7 @@ use bigfcm::baselines::{run_baseline, BaselineAlgo};
 use bigfcm::config::Config;
 use bigfcm::coordinator::BigFcm;
 use bigfcm::data::builtin;
-use bigfcm::fcm::{assign_hard, ChunkBackend};
+use bigfcm::fcm::{assign_hard, KernelBackend};
 use bigfcm::hdfs::BlockStore;
 use bigfcm::mapreduce::{Engine, EngineOptions};
 use bigfcm::metrics::{confusion_accuracy, silhouette_width_sampled, speedup};
@@ -34,7 +34,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     cfg.fcm.max_iterations = 100;
 
     // Backend: PJRT artifacts when built, else native (with a notice).
-    let backend: Arc<dyn ChunkBackend> = Arc::new(ResolvedBackend::from_config(&cfg)?);
+    let backend: Arc<dyn KernelBackend> = Arc::new(ResolvedBackend::from_config(&cfg)?);
     println!("backend: {}", backend.name());
     if backend.name() == "native" {
         println!("  (artifacts/ not found — run `make artifacts` for the PJRT path)");

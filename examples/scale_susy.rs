@@ -29,11 +29,11 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
-use bigfcm::config::{Config, FlagPolicy};
+use bigfcm::config::{BoundModel, Config, FlagPolicy};
 use bigfcm::coordinator::BigFcm;
 use bigfcm::data::synth::susy_like;
 use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo};
-use bigfcm::fcm::{ChunkBackend, NativeBackend};
+use bigfcm::fcm::{KernelBackend, NativeBackend};
 use bigfcm::hdfs::BlockStoreWriter;
 use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions, MIB};
 
@@ -52,6 +52,10 @@ struct Args {
     /// Sticky-slab budget in MiB for the session phase (0 = auto-size to
     /// hold every block's pruning state).
     slab_mib: u64,
+    /// Bound model of the session phase ("dmin" | "elkan").
+    bounds: BoundModel,
+    /// Spill cold slab state to this disk ring instead of evicting it.
+    spill_dir: Option<PathBuf>,
     /// Keep the generated store (for re-runs) instead of deleting it.
     keep: bool,
     dir: Option<PathBuf>,
@@ -68,6 +72,8 @@ impl Default for Args {
             max_wall_s: 0.0,
             session_iters: 8,
             slab_mib: 0,
+            bounds: BoundModel::Elkan,
+            spill_dir: None,
             keep: false,
             dir: None,
             seed: 0xB16FC4,
@@ -99,9 +105,11 @@ fn usage() -> ! {
     eprintln!(
         "usage: scale_susy [--bytes SIZE] [--cache-mib N] [--workers N] \
          [--block-rows N] [--max-wall-s S] [--session-iters N] \
-         [--slab-mib N] [--dir PATH] [--keep] [--seed N]\n\
+         [--slab-mib N] [--bounds dmin|elkan] [--spill-dir PATH] \
+         [--dir PATH] [--keep] [--seed N]\n\
          SIZE accepts GiB/MiB/KiB suffixes, e.g. --bytes 2GiB; \
-         --slab-mib 0 auto-sizes the pruning slab to the store"
+         --slab-mib 0 auto-sizes the pruning slab to the store and the \
+         bound model; --spill-dir rides out undersized slabs on disk"
     );
     std::process::exit(2);
 }
@@ -138,6 +146,10 @@ fn parse_args() -> Args {
             "--slab-mib" => {
                 args.slab_mib = val("--slab-mib").parse().unwrap_or_else(|_| usage());
             }
+            "--bounds" => {
+                args.bounds = BoundModel::parse(&val("--bounds")).unwrap_or_else(|_| usage());
+            }
+            "--spill-dir" => args.spill_dir = Some(PathBuf::from(val("--spill-dir"))),
             "--dir" => args.dir = Some(PathBuf::from(val("--dir"))),
             "--keep" => args.keep = true,
             "--seed" => args.seed = val("--seed").parse().unwrap_or_else(|_| usage()),
@@ -278,28 +290,41 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             max_iterations: args.session_iters,
             ..Default::default()
         };
-        let backend: Arc<dyn ChunkBackend> = Arc::new(NativeBackend);
-        // Full pruning coverage needs every block's state resident:
-        // ≈ 4·(C+2) bytes/record for FCM (d_min + obj + u^m rows) plus a
-        // small per-block constant — far below the slab budget at CI
-        // scale, but a 1 GiB store needs a few hundred MiB. The harness's
-        // job is to demonstrate the mechanism, so it auto-sizes (with 25%
-        // headroom) unless --slab-mib pins the budget; a deliberately
-        // undersized slab just degrades to exact passes (metered as
-        // slab_evictions), which is the deployment tradeoff, not a bug.
+        let backend: Arc<dyn KernelBackend> = Arc::new(NativeBackend);
+        // Full pruning coverage needs every block's state resident. The
+        // sizing rule is per bound model — the elkan layout stores an
+        // extra per-record × per-center lower-bound row the accounting
+        // charges (the old flat-8-B/record assumption undersized it by
+        // C·4 B/record and the auto-sized slab thrashed):
+        //   dmin : ≈ 4·(C+2)  B/record (u^m rows + d_min + obj)
+        //   elkan: ≈ 4·(2C+2) B/record (u^m rows + lb rows + obj)
+        // plus a small per-block constant — far below the slab budget at
+        // CI scale, but a 1 GiB store needs a few hundred MiB. The
+        // harness's job is to demonstrate the mechanism, so it auto-sizes
+        // (with 25% headroom) unless --slab-mib pins the budget; an
+        // undersized slab degrades to exact recomputes (slab_evictions) —
+        // or, with --spill-dir, rides the disk ring (slab_spilled_bytes /
+        // slab_reloads) at unchanged results.
         let mut prune = PruneConfig::from_cluster(&cfg.cluster);
+        prune.bounds = args.bounds;
+        prune.spill_dir = args.spill_dir.clone();
+        let per_record = match args.bounds {
+            BoundModel::DMin => 4 * (cfg.fcm.clusters as u64 + 2),
+            BoundModel::Elkan => 4 * (2 * cfg.fcm.clusters as u64 + 2),
+        };
+        let per_block = args.block_rows as u64 * per_record + 4096;
         if args.slab_mib > 0 {
             prune.slab_bytes = args.slab_mib * MIB;
         } else {
-            let per_block = args.block_rows as u64 * 4 * (cfg.fcm.clusters as u64 + 2) + 4096;
             let auto = per_block * n_blocks as u64 * 5 / 4;
             prune.slab_bytes = prune.slab_bytes.max(auto);
         }
         println!(
-            "slab budget {:.0} MiB ({} blocks × ≈{:.2} MiB pruning state)",
+            "slab budget {:.0} MiB ({} blocks × ≈{:.2} MiB {} pruning state)",
             mib(prune.slab_bytes),
             n_blocks,
-            mib(args.block_rows as u64 * 4 * (cfg.fcm.clusters as u64 + 2))
+            mib(per_block),
+            args.bounds.as_str()
         );
         let t2 = Instant::now();
         let srun = run_fcm_session(
@@ -316,14 +341,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         for (i, s) in srun.per_iteration.iter().enumerate() {
             println!(
                 "  iter {:>2}: pruned {:>9} records, reduce parts {:>2} (depth {}), \
-                 reduce wall {:.3} ms, slab {:.1} MiB ({} evictions)",
+                 reduce wall {:.3} ms, slab {:.1} MiB ({} evictions, {:.1} MiB spilled, \
+                 {} reloads)",
                 i + 1,
                 s.records_pruned,
                 s.reduce_parts,
                 s.combine_depth,
                 s.reduce_wall_s * 1e3,
                 mib(s.slab_bytes),
-                s.slab_evictions
+                s.slab_evictions,
+                mib(s.slab_spilled_bytes),
+                s.slab_reloads
             );
         }
         println!(

@@ -17,7 +17,7 @@ use bigfcm::config::OverheadConfig;
 use bigfcm::data::synth::susy_like;
 use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo};
 use bigfcm::fcm::native::{fcm_partials_native, fcm_partials_scalar};
-use bigfcm::fcm::{ChunkBackend, NativeBackend};
+use bigfcm::fcm::{KernelBackend, NativeBackend};
 use bigfcm::hdfs::BlockStore;
 use bigfcm::json;
 use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions};
@@ -134,7 +134,7 @@ fn main() {
     let mut rng = bigfcm::prng::Pcg::new(0xAB);
     let v0 = bigfcm::fcm::seeding::random_records(&data.features, 6, &mut rng);
     let params = FcmParams { epsilon: 1e-9, max_iterations: 60, ..Default::default() };
-    let backend: Arc<dyn ChunkBackend> = Arc::new(NativeBackend);
+    let backend: Arc<dyn KernelBackend> = Arc::new(NativeBackend);
     let overhead = OverheadConfig::default();
 
     let mut per_job_engine = Engine::new(EngineOptions::default(), overhead.clone());
@@ -150,6 +150,19 @@ fn main() {
     )
     .expect("per-job arm");
 
+    let mut dmin_engine = Engine::new(EngineOptions::default(), overhead.clone());
+    let session_dmin = run_fcm_session(
+        &mut dmin_engine,
+        &store,
+        Arc::clone(&backend),
+        SessionAlgo::Fcm,
+        v0.clone(),
+        &params,
+        &PruneConfig::dmin(),
+        SessionOptions::default(),
+    )
+    .expect("dmin session arm");
+
     let mut session_engine = Engine::new(EngineOptions::default(), overhead.clone());
     let session = run_fcm_session(
         &mut session_engine,
@@ -158,7 +171,7 @@ fn main() {
         SessionAlgo::Fcm,
         v0,
         &params,
-        &PruneConfig::default(),
+        &PruneConfig::default(), // elkan bounds
         SessionOptions::default(),
     )
     .expect("session arm");
@@ -201,6 +214,13 @@ fn main() {
         per_job.per_iteration.first().map(|s| s.reduce_parts).unwrap_or(0),
         session.per_iteration.first().map(|s| s.reduce_parts).unwrap_or(0),
     );
+    // Bound-model A/B (same store, seeds and epsilon): the per-center
+    // elkan bounds should prune at least as many records as the single
+    // d_min bound, at identical convergence.
+    println!(
+        "bounds A/B: dmin pruned {} over {} jobs, elkan pruned {} over {} jobs",
+        session_dmin.records_pruned, session_dmin.jobs, session.records_pruned, session.jobs,
+    );
 
     // Machine-readable emission for cross-PR tracking.
     let results = json::Value::Object(
@@ -225,6 +245,11 @@ fn main() {
         ("per_job_modelled_s", json::num(per_job.sim.total_s())),
         ("session_modelled_s", json::num(session.sim.total_s())),
         ("records_pruned", json::num(session.records_pruned as f64)),
+        ("records_pruned_dmin", json::num(session_dmin.records_pruned as f64)),
+        ("records_pruned_elkan", json::num(session.records_pruned as f64)),
+        ("dmin_modelled_s", json::num(session_dmin.sim.total_s())),
+        ("slab_spilled_bytes", json::num(session.slab_spilled_bytes as f64)),
+        ("slab_reloads", json::num(session.slab_reloads as f64)),
         ("combine_depth", json::num(combine_depth as f64)),
         ("per_job_objective", json::num(per_job.result.objective)),
         ("session_objective", json::num(session.result.objective)),

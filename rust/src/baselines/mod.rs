@@ -16,7 +16,7 @@ use crate::config::Config;
 use crate::data::Matrix;
 use crate::error::{Error, Result};
 use crate::fcm::seeding::random_records;
-use crate::fcm::{max_center_shift2, ChunkBackend, Partials};
+use crate::fcm::{max_center_shift2, KernelBackend, Partials};
 use crate::hdfs::BlockStore;
 use crate::mapreduce::{DistributedCache, Engine, MapReduceJob, SessionOptions, SimCost, TaskCtx};
 use crate::prng::Pcg;
@@ -63,7 +63,7 @@ impl BaselineRun {
 struct IterationJob {
     algo: BaselineAlgo,
     m: f64,
-    backend: Arc<dyn ChunkBackend>,
+    backend: Arc<dyn KernelBackend>,
 }
 
 const KEY_CENTERS: &str = "baseline_centers";
@@ -80,8 +80,10 @@ impl MapReduceJob for IterationJob {
         let w = vec![1.0f32; block.rows()];
         match self.algo {
             BaselineAlgo::KMeans => self.backend.kmeans_partials(block, &v, &w),
-            // Mahout FKM runs the classic O(n·c²) membership math.
-            BaselineAlgo::FuzzyKMeans => self.backend.classic_partials(block, &v, &w, self.m),
+            // Mahout FKM runs the classic O(n·c²) membership math — the
+            // pair-loop kernel, deliberately NOT the fused O(n·c) path the
+            // pipeline uses, so the baseline's compute model stays honest.
+            BaselineAlgo::FuzzyKMeans => self.backend.classic_partials_pair(block, &v, &w, self.m),
         }
     }
 
@@ -125,7 +127,7 @@ pub fn run_baseline(
     algo: BaselineAlgo,
     cfg: &Config,
     store: &Arc<BlockStore>,
-    backend: Arc<dyn ChunkBackend>,
+    backend: Arc<dyn KernelBackend>,
     engine: &mut Engine,
 ) -> Result<BaselineRun> {
     let started = Instant::now();

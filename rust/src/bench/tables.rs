@@ -8,7 +8,7 @@ use crate::config::Config;
 use crate::coordinator::{BigFcm, BigFcmRun};
 use crate::data::{builtin, Dataset};
 use crate::error::Result;
-use crate::fcm::{assign_hard, ChunkBackend, NativeBackend};
+use crate::fcm::{assign_hard, KernelBackend, NativeBackend};
 use crate::hdfs::BlockStore;
 use crate::mapreduce::{Engine, EngineOptions};
 use crate::metrics::{confusion_accuracy, silhouette_width_sampled, speedup};
@@ -18,11 +18,11 @@ use crate::prng::Pcg;
 pub struct Ctx {
     pub cfg: Config,
     pub scale: Scale,
-    pub backend: Arc<dyn ChunkBackend>,
+    pub backend: Arc<dyn KernelBackend>,
 }
 
 impl Ctx {
-    pub fn new(cfg: Config, scale: Scale, backend: Arc<dyn ChunkBackend>) -> Self {
+    pub fn new(cfg: Config, scale: Scale, backend: Arc<dyn KernelBackend>) -> Self {
         Self { cfg, scale, backend }
     }
 

@@ -13,6 +13,37 @@ use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 
+/// Which per-record bound model a session's pruned kernels maintain in the
+/// sticky slab (see `fcm::backend::BlockBounds`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BoundModel {
+    /// One nearest-center distance per record; a record prunes while the
+    /// worst per-center shift stays below `tol × d_min` (PR-3 model).
+    DMin,
+    /// Per-record × per-center Elkan-style lower bounds; center `j` only
+    /// has to satisfy its *own* `δ_j ≤ tol × lb_j`, so mid-shift
+    /// iterations (one center still moving, the rest settled) keep
+    /// pruning where the single `d_min` bound stalls.
+    Elkan,
+}
+
+impl BoundModel {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "dmin" => Ok(BoundModel::DMin),
+            "elkan" => Ok(BoundModel::Elkan),
+            other => Err(Error::Config(format!("unknown bound model `{other}`"))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BoundModel::DMin => "dmin",
+            BoundModel::Elkan => "elkan",
+        }
+    }
+}
+
 /// Cluster-shape settings: how the single-machine run models the paper's
 /// Hadoop deployment.
 #[derive(Clone, Debug, PartialEq)]
@@ -36,6 +67,13 @@ pub struct ClusterConfig {
     /// Sticky-slab byte budget for iteration-resident sessions, in MiB —
     /// the per-block pruning state kernels persist between iterations.
     pub slab_mib: usize,
+    /// Bound model of the session's pruned kernels.
+    pub bounds: BoundModel,
+    /// Directory for the slab's disk spill ring: cold per-block bound
+    /// state beyond `slab_mib` is written there and reloaded on the next
+    /// touch instead of being evicted and recomputed. Empty disables
+    /// spilling (budget pressure evicts, as before).
+    pub slab_spill_dir: String,
 }
 
 impl Default for ClusterConfig {
@@ -49,6 +87,8 @@ impl Default for ClusterConfig {
             prefetch: true,
             tree_combine: true,
             slab_mib: 64,
+            bounds: BoundModel::Elkan,
+            slab_spill_dir: String::new(),
         }
     }
 }
@@ -169,6 +209,10 @@ pub enum Backend {
     Native,
     /// PJRT when an artifact exists for the shape, else native.
     Auto,
+    /// The offline PJRT shim: device execution shape (fixed chunks,
+    /// zero-padded tails, per-chunk merge) computed with the native
+    /// kernels — no artifacts needed, pruning contract fully supported.
+    Shim,
 }
 
 impl Backend {
@@ -177,6 +221,7 @@ impl Backend {
             "pjrt" => Ok(Backend::Pjrt),
             "native" => Ok(Backend::Native),
             "auto" => Ok(Backend::Auto),
+            "shim" => Ok(Backend::Shim),
             other => Err(Error::Config(format!("unknown backend `{other}`"))),
         }
     }
@@ -260,6 +305,8 @@ impl Config {
                 self.cluster.tree_combine = value.parse::<bool>().map_err(|_| bad(key, value))?
             }
             "cluster.slab_mib" => self.cluster.slab_mib = num!(usize),
+            "cluster.bounds" => self.cluster.bounds = BoundModel::parse(value)?,
+            "cluster.slab_spill_dir" => self.cluster.slab_spill_dir = value.to_string(),
             "overhead.job_startup_s" => self.overhead.job_startup_s = num!(f64),
             "overhead.task_launch_s" => self.overhead.task_launch_s = num!(f64),
             "overhead.shuffle_s_per_mib" => self.overhead.shuffle_s_per_mib = num!(f64),
@@ -327,6 +374,8 @@ mod tests {
         c.set_kv("cluster.prefetch=false").unwrap();
         c.set_kv("cluster.tree_combine=false").unwrap();
         c.set_kv("cluster.slab_mib=16").unwrap();
+        c.set_kv("cluster.bounds=dmin").unwrap();
+        c.set_kv("cluster.slab_spill_dir=/tmp/slab").unwrap();
         c.set_kv("fcm.epsilon=5e-3").unwrap();
         c.set_kv("fcm.driver_preclustering=false").unwrap();
         c.set_kv("runtime.backend=native").unwrap();
@@ -335,6 +384,8 @@ mod tests {
         assert!(!c.cluster.prefetch);
         assert!(!c.cluster.tree_combine);
         assert_eq!(c.cluster.slab_mib, 16);
+        assert_eq!(c.cluster.bounds, BoundModel::DMin);
+        assert_eq!(c.cluster.slab_spill_dir, "/tmp/slab");
         assert_eq!(c.fcm.epsilon, 5e-3);
         assert!(!c.fcm.driver_preclustering);
         assert_eq!(c.backend, Backend::Native);

@@ -19,7 +19,7 @@ use crate::data::Matrix;
 use crate::error::{Error, Result};
 use crate::fcm::loops::{run_fcm, FcmParams, Variant};
 use crate::fcm::wfcmpb::{wfcmpb, WfcmpbResult};
-use crate::fcm::ChunkBackend;
+use crate::fcm::KernelBackend;
 use crate::mapreduce::{MapReduceJob, TaskCtx};
 
 /// Combiner output: the block's centers with importance weights.
@@ -33,11 +33,11 @@ pub struct CombinerOut {
 /// The job object shared by all tasks.
 pub struct CombineJob {
     cfg: Config,
-    backend: Arc<dyn ChunkBackend>,
+    backend: Arc<dyn KernelBackend>,
 }
 
 impl CombineJob {
-    pub fn new(cfg: Config, backend: Arc<dyn ChunkBackend>) -> Self {
+    pub fn new(cfg: Config, backend: Arc<dyn KernelBackend>) -> Self {
         Self { cfg, backend }
     }
 
@@ -232,7 +232,7 @@ mod tests {
         let seeds = data.features.slice_rows(0, 3);
         let cache = cache_with_seeds(seeds, true);
         let j = job(3, 1);
-        let ctx = TaskCtx { cache: &cache, task_id: 0, attempt: 0 };
+        let ctx = TaskCtx { cache: &cache, task_id: 0, attempt: 0, doomed: false };
         let out = j.map_combine(&data.features, &ctx).unwrap();
         assert_eq!(out.centers.rows(), 3);
         assert_eq!(out.weights.len(), 3);
@@ -247,7 +247,7 @@ mod tests {
         let seeds = data.features.slice_rows(0, 3);
         let cache = cache_with_seeds(seeds, false);
         let j = job(3, 1);
-        let ctx = TaskCtx { cache: &cache, task_id: 0, attempt: 0 };
+        let ctx = TaskCtx { cache: &cache, task_id: 0, attempt: 0, doomed: false };
         let out = j.map_combine(&data.features, &ctx).unwrap();
         assert_eq!(out.centers.rows(), 3);
     }
@@ -263,10 +263,10 @@ mod tests {
         let mut parts = Vec::new();
         for k in 0..4 {
             let blk = data.features.slice_rows(k * 512, (k + 1) * 512);
-            let ctx = TaskCtx { cache: &cache, task_id: k, attempt: 0 };
+            let ctx = TaskCtx { cache: &cache, task_id: k, attempt: 0, doomed: false };
             parts.push(j.map_combine(&blk, &ctx).unwrap());
         }
-        let ctx = TaskCtx { cache: &cache, task_id: usize::MAX, attempt: 0 };
+        let ctx = TaskCtx { cache: &cache, task_id: usize::MAX, attempt: 0, doomed: false };
         let merged = j.reduce(parts, &ctx).unwrap();
         // Every merged center sits in a dense region.
         for i in 0..3 {
@@ -288,10 +288,10 @@ mod tests {
         let mut parts = Vec::new();
         for k in 0..8 {
             let blk = data.features.slice_rows(k * 256, (k + 1) * 256);
-            let ctx = TaskCtx { cache: &cache, task_id: k, attempt: 0 };
+            let ctx = TaskCtx { cache: &cache, task_id: k, attempt: 0, doomed: false };
             parts.push(flat.map_combine(&blk, &ctx).unwrap());
         }
-        let ctx = TaskCtx { cache: &cache, task_id: usize::MAX, attempt: 0 };
+        let ctx = TaskCtx { cache: &cache, task_id: usize::MAX, attempt: 0, doomed: false };
         let a = flat.reduce(parts.clone(), &ctx).unwrap();
         let b = tree.reduce(parts, &ctx).unwrap();
         // Both must describe the same blob structure (centers pairwise close).
@@ -312,7 +312,7 @@ mod tests {
     fn reduce_empty_fails() {
         let j = job(2, 1);
         let cache = DistributedCache::new();
-        let ctx = TaskCtx { cache: &cache, task_id: 0, attempt: 0 };
+        let ctx = TaskCtx { cache: &cache, task_id: 0, attempt: 0, doomed: false };
         assert!(j.reduce(vec![], &ctx).is_err());
     }
 
@@ -321,7 +321,7 @@ mod tests {
         let data = blobs(128, 2, 2, 0.3, 5);
         let cache = DistributedCache::new(); // no v_init
         let j = job(2, 1);
-        let ctx = TaskCtx { cache: &cache, task_id: 0, attempt: 0 };
+        let ctx = TaskCtx { cache: &cache, task_id: 0, attempt: 0, doomed: false };
         assert!(j.map_combine(&data.features, &ctx).is_err());
     }
 

@@ -20,7 +20,7 @@ use crate::error::Result;
 use crate::fcm::loops::{run_fcm, FcmParams, Variant};
 use crate::fcm::seeding::{kmeanspp, random_records};
 use crate::fcm::wfcmpb::wfcmpb;
-use crate::fcm::ChunkBackend;
+use crate::fcm::KernelBackend;
 use crate::mapreduce::{DistributedCache, IterativeSession};
 use crate::prng::Pcg;
 use crate::sampling::parker_hall_sample_size;
@@ -55,7 +55,7 @@ pub struct DriverDecision {
 /// between them and driver-side charges land on the session's clock.
 pub fn run_driver(
     cfg: &Config,
-    backend: &dyn ChunkBackend,
+    backend: &dyn KernelBackend,
     cache: &DistributedCache,
     session: &mut IterativeSession<'_>,
 ) -> Result<DriverDecision> {

@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 use crate::config::Config;
 use crate::data::{Dataset, Matrix};
 use crate::error::Result;
-use crate::fcm::{ChunkBackend, ClusterResult, NativeBackend};
+use crate::fcm::{KernelBackend, ClusterResult, NativeBackend};
 use crate::hdfs::BlockStore;
 use crate::mapreduce::{
     DistributedCache, Engine, EngineOptions, JobStats, SessionOptions, SimCost,
@@ -59,7 +59,7 @@ impl BigFcmRun {
 /// Builder-style front end for the pipeline.
 pub struct BigFcm {
     cfg: Config,
-    backend: Option<Arc<dyn ChunkBackend>>,
+    backend: Option<Arc<dyn KernelBackend>>,
 }
 
 impl BigFcm {
@@ -68,7 +68,7 @@ impl BigFcm {
     }
 
     /// Override the chunk backend (default: native).
-    pub fn backend(mut self, backend: Arc<dyn ChunkBackend>) -> Self {
+    pub fn backend(mut self, backend: Arc<dyn KernelBackend>) -> Self {
         self.backend = Some(backend);
         self
     }
@@ -146,7 +146,7 @@ impl BigFcm {
     /// on.
     pub fn run_with_engine(&self, store: &Arc<BlockStore>, engine: &mut Engine) -> Result<BigFcmRun> {
         self.cfg.validate()?;
-        let backend: Arc<dyn ChunkBackend> =
+        let backend: Arc<dyn KernelBackend> =
             self.backend.clone().unwrap_or_else(|| Arc::new(NativeBackend));
         let started = Instant::now();
         let cache = Arc::new(DistributedCache::new());

@@ -1,0 +1,1243 @@
+//! The [`KernelBackend`] contract: one object-safe interface owning exact
+//! partials, pruned partials, the per-block bound-state layout and the
+//! bound maintenance on center shift — for every backend.
+//!
+//! ## Why the pruning protocol lives here and not in the kernels
+//!
+//! PR-3 welded the shift-bounded pruning logic into three near-duplicate
+//! native kernels (`fcm`/`classic`/`kmeans` each carried its own
+//! replay/gather/refresh loop), which meant the session layer's wins died
+//! the moment the backend swapped to PJRT. The protocol is actually
+//! backend-agnostic: deciding which records replay, replaying their cached
+//! contributions, gathering the rest into a compact tile set and
+//! scattering the refreshed bounds back is pure host bookkeeping — only
+//! the *exact math over the gathered rows* is backend work. So the
+//! contract splits there:
+//!
+//! * backends implement two primitives — [`KernelBackend::exact_partials`]
+//!   (one pass of a [`Kernel`] over a block) and
+//!   [`KernelBackend::partials_with_bounds`] (the same pass, additionally
+//!   emitting the per-row [`BoundRows`] the bounds are rebuilt from);
+//! * the full pruning protocol is a *provided* trait method
+//!   ([`KernelBackend::pruned_partials`]) driving [`BlockBounds`] — every
+//!   backend that can run an exact pass gets shift-bounded pruning for
+//!   free, and there is exactly one copy of the bound logic to audit.
+//!
+//! ## Bound models
+//!
+//! [`BlockBounds`] maintains one of two models (selected per session via
+//! `cluster.bounds`):
+//!
+//! * **`dmin`** (PR-3): one nearest-center distance per record; a record
+//!   replays while `max_j δ_j ≤ tol × d_min`. Cheap (O(1) per-record
+//!   check) but a single still-moving center stalls the whole bound.
+//! * **`elkan`**: per-record × per-center lower bounds `lb_j` (Elkan-style,
+//!   adapted to fuzzy memberships): each center only has to satisfy its
+//!   own `δ_j ≤ tol × lb_j`. Since `δ_j ≤ max δ` and `lb_j ≥ d_min`,
+//!   every `dmin`-prunable record is `elkan`-prunable — the per-center
+//!   model prunes a superset, and keeps pruning through mid-shift
+//!   iterations where one center's drift freezes the `d_min` bound. The
+//!   per-record check is O(C) and the slab state grows by C·4 B/record
+//!   (charged — see [`BlockBounds::bytes`]).
+//!
+//! For K-Means the bound is not a tolerance but the exact assignment
+//! margin: `dmin` uses the classic `2·δ_max ≤ d₂ − d₁` test, `elkan` the
+//! per-center generalization `lb_j − δ_j ≥ lb_b + δ_b` for every rival
+//! `j` — under either, the cached assignment (and therefore the record's
+//! exact `w_acc`/`v_num` contribution) cannot have changed.
+//!
+//! `δ_j` accumulates center `j`'s *path length* since the block's last
+//! full refresh, which upper-bounds its movement since any later
+//! per-record refresh — so mixed passes stay conservative.
+//!
+//! [`BlockBounds`] lives in a session's
+//! [`crate::mapreduce::session::StateSlab`], byte-accounted and — via its
+//! bitwise [`SlabState::spill`]/[`SlabState::unspill`] codec — spillable
+//! to the slab's disk ring instead of being evicted under budget pressure.
+
+use crate::data::matrix::dist2;
+use crate::data::Matrix;
+use crate::error::Result;
+use crate::fcm::Partials;
+use crate::hdfs::fnv1a;
+use crate::mapreduce::session::SlabState;
+
+pub use crate::config::BoundModel;
+
+/// Which partials pass a backend computes — the dispatch token that
+/// replaced the per-variant match arms of the session/baseline layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Fast (Kolen–Hutcheson) FCM, O(C·d) per record.
+    FcmFast,
+    /// Classic FCM through the **fused** membership evaluation: the
+    /// textbook `u_i = 1 / Σ_j (d_i/d_j)^p` computed as `d_i^{-p} / Σ_j
+    /// d_j^{-p}` — one reciprocal sum per record, the O(C²) pair loop
+    /// skipped (ROADMAP kernel follow-up).
+    FcmClassic,
+    /// Classic FCM paying the textbook O(C²) pair loop per record — the
+    /// compute model of the Mahout-FKM baseline (kept so that model stays
+    /// honest) and the property-test oracle of the fused path.
+    FcmClassicPair,
+    /// Hard K-Means.
+    KMeans,
+}
+
+impl Kernel {
+    pub fn is_kmeans(&self) -> bool {
+        matches!(self, Kernel::KMeans)
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Kernel::FcmFast => "fcm-fast",
+            Kernel::FcmClassic => "fcm-classic",
+            Kernel::FcmClassicPair => "fcm-classic-pair",
+            Kernel::KMeans => "kmeans",
+        }
+    }
+}
+
+/// Knobs of one pruned pass.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundConfig {
+    /// Bound model the block state maintains.
+    pub model: BoundModel,
+    /// Relative distance-perturbation tolerance (≤ 0 disables pruning —
+    /// every pass refreshes exactly). For K-Means it only gates whether
+    /// pruning runs; the margin test itself is absolute.
+    pub tolerance: f64,
+    /// Force an exact (bound-refreshing) pass at least every this many
+    /// passes — the drift cap.
+    pub refresh_every: usize,
+}
+
+/// Per-row outputs of a bound-refreshing exact pass, in gathered-row
+/// order. Backends fill these; the protocol scatters them into the
+/// sticky [`BlockBounds`]. A real device backend returns these arrays
+/// from the lowered kernel; the offline shim marshals them per chunk.
+pub struct BoundRows {
+    /// Squared distance to every center, (t × C) — the *clamped* values
+    /// (≥ the kernel's distance epsilon) the membership math used.
+    pub d2: Matrix,
+    /// u^m·w contribution per center, (t × C). FCM kernels only (0×0 for
+    /// K-Means).
+    pub um: Matrix,
+    /// Per-row objective contribution.
+    pub obj: Vec<f32>,
+    /// Nearest center per row. K-Means only (empty for FCM).
+    pub best: Vec<u32>,
+}
+
+impl BoundRows {
+    pub fn for_kernel(kernel: Kernel, t: usize, c: usize) -> Self {
+        if kernel.is_kmeans() {
+            Self {
+                d2: Matrix::zeros(t, c),
+                um: Matrix::zeros(0, 0),
+                obj: vec![0.0; t],
+                best: vec![0; t],
+            }
+        } else {
+            Self {
+                d2: Matrix::zeros(t, c),
+                um: Matrix::zeros(t, c),
+                obj: vec![0.0; t],
+                best: Vec::new(),
+            }
+        }
+    }
+}
+
+/// Backend executing one pass of per-chunk heavy math — and, through the
+/// provided [`Self::pruned_partials`], the whole backend-portable pruning
+/// protocol.
+pub trait KernelBackend: Send + Sync {
+    /// One exact partials pass of `kernel` over a block (`m` is ignored by
+    /// [`Kernel::KMeans`]).
+    fn exact_partials(&self, kernel: Kernel, x: &Matrix, v: &Matrix, w: &[f32], m: f64)
+        -> Result<Partials>;
+
+    /// [`Self::exact_partials`] that additionally fills `rows` with the
+    /// per-row bound inputs (distances, contributions, assignments) the
+    /// protocol rebuilds [`BlockBounds`] from. `x`/`w`/`rows` are in the
+    /// same (gathered) row order; rows with zero weight may carry
+    /// arbitrary bound values but must contribute nothing to the partials.
+    fn partials_with_bounds(
+        &self,
+        kernel: Kernel,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        m: f64,
+        rows: &mut BoundRows,
+    ) -> Result<Partials>;
+
+    /// Human name for reports ("native", "pjrt", "pjrt-shim").
+    fn name(&self) -> &'static str;
+
+    /// One pruned pass against the block's sticky `state`: records whose
+    /// bound still holds replay their cached contribution, the rest are
+    /// gathered and recomputed exactly through
+    /// [`Self::partials_with_bounds`]. Returns the partials and how many
+    /// records replayed. Provided generically — backends only override to
+    /// opt *out* (e.g. device artifacts without the bound outputs reset
+    /// the state and run exactly, so no stale bound can survive them).
+    #[allow(clippy::too_many_arguments)]
+    fn pruned_partials(
+        &self,
+        kernel: Kernel,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        m: f64,
+        state: &mut BlockBounds,
+        cfg: &BoundConfig,
+    ) -> Result<(Partials, usize)> {
+        state.pruned_pass(kernel, x, v, w, cfg, &mut |xg: &Matrix, wg: &[f32], rows: &mut BoundRows| {
+            self.partials_with_bounds(kernel, xg, v, wg, m, rows)
+        })
+    }
+
+    /// Fast-FCM (Kolen–Hutcheson) partials, O(C·d) per record.
+    fn fcm_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
+        self.exact_partials(Kernel::FcmFast, x, v, w, m)
+    }
+
+    /// Classic-FCM partials through the fused (pair-loop-free) path.
+    fn classic_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
+        self.exact_partials(Kernel::FcmClassic, x, v, w, m)
+    }
+
+    /// Classic-FCM partials paying the O(C²) pair loop (the Mahout model).
+    fn classic_partials_pair(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
+        self.exact_partials(Kernel::FcmClassicPair, x, v, w, m)
+    }
+
+    /// Hard K-Means partials.
+    fn kmeans_partials(&self, x: &Matrix, v: &Matrix, w: &[f32]) -> Result<Partials> {
+        self.exact_partials(Kernel::KMeans, x, v, w, 0.0)
+    }
+}
+
+/// Per-block sticky bound state — layout owned here, maintained by the
+/// protocol, persisted in the session's `StateSlab` between iterations
+/// (and across its disk spill ring, bitwise).
+#[derive(Clone, Debug)]
+pub struct BlockBounds {
+    /// Bound model the cached arrays belong to.
+    model: BoundModel,
+    /// Kernel the cached state belongs to (a different kernel refreshes).
+    kernel: Option<Kernel>,
+    /// Centers seen by the most recent pass (for shift accumulation).
+    centers_prev: Matrix,
+    /// Per-center path length accumulated since the last full refresh.
+    delta: Vec<f64>,
+    /// Per-record nearest-center distance — FCM `dmin` model.
+    d_min: Vec<f32>,
+    /// Per-record runner-up margin `d₂ − d₁` — K-Means (both models; the
+    /// whole-block K-Means bound reads its min).
+    margin: Vec<f32>,
+    /// Per-record × per-center lower bounds — `elkan` model, (n × C).
+    lb: Matrix,
+    /// Per-record cached contribution u^m·w per center — FCM, (n × C).
+    um: Matrix,
+    /// Per-record cached objective contribution.
+    obj: Vec<f32>,
+    /// Per-record cached assignment — K-Means.
+    best: Vec<u32>,
+    /// Block minima of the per-record bounds (whole-block prune tests).
+    d_min_block: f32,
+    margin_block: f32,
+    lb_block: Vec<f32>,
+    /// The block's latest partials (whole-block replay reuses these).
+    partials: Option<Partials>,
+    /// Live (non-zero-weight) records at the last refresh — the
+    /// whole-block replayed count. (Pruning assumes per-record weights
+    /// are stable across the session, which the session loop's uniform
+    /// weights guarantee.)
+    live: usize,
+    /// Passes since the last full refresh.
+    stale_iters: usize,
+    /// Block payload bytes (n·d·4) — the modelled read an exact recompute
+    /// of this state pays, the reread-vs-recompute crossover input of the
+    /// slab's spill policy.
+    block_payload_bytes: u64,
+}
+
+impl Default for BlockBounds {
+    fn default() -> Self {
+        Self {
+            model: BoundModel::Elkan,
+            kernel: None,
+            centers_prev: Matrix::zeros(0, 0),
+            delta: Vec::new(),
+            d_min: Vec::new(),
+            margin: Vec::new(),
+            lb: Matrix::zeros(0, 0),
+            um: Matrix::zeros(0, 0),
+            obj: Vec::new(),
+            best: Vec::new(),
+            d_min_block: f32::INFINITY,
+            margin_block: f32::INFINITY,
+            lb_block: Vec::new(),
+            partials: None,
+            live: 0,
+            stale_iters: 0,
+            block_payload_bytes: 0,
+        }
+    }
+}
+
+/// Running block minima of one pass (replayed records fold their cached
+/// bounds, recomputed records their fresh ones).
+struct Mins {
+    d_min: f32,
+    margin: f32,
+    lb: Vec<f32>,
+}
+
+impl Mins {
+    fn new(kernel: Kernel, model: BoundModel, c: usize) -> Self {
+        let lb = if model == BoundModel::Elkan && !kernel.is_kmeans() {
+            vec![f32::INFINITY; c]
+        } else {
+            Vec::new()
+        };
+        Self { d_min: f32::INFINITY, margin: f32::INFINITY, lb }
+    }
+
+    fn fold_cached(&mut self, st: &BlockBounds, kernel: Kernel, k: usize) {
+        if kernel.is_kmeans() {
+            self.margin = self.margin.min(st.margin[k]);
+        } else if st.model == BoundModel::Elkan {
+            for (m, &lb) in self.lb.iter_mut().zip(st.lb.row(k)) {
+                *m = (*m).min(lb);
+            }
+        } else {
+            self.d_min = self.d_min.min(st.d_min[k]);
+        }
+    }
+
+    fn store(self, st: &mut BlockBounds) {
+        st.d_min_block = self.d_min;
+        st.margin_block = self.margin;
+        st.lb_block = self.lb;
+    }
+}
+
+impl BlockBounds {
+    /// Drop every cached bound: the next pass is exact and refreshing.
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+
+    /// Whether any bounds are currently cached.
+    pub fn is_fresh(&self) -> bool {
+        self.partials.is_some()
+    }
+
+    /// Byte footprint for slab accounting. Charges **every** per-record
+    /// array — including the `elkan` model's per-center lower bounds
+    /// (C·4 B/record on top of the `dmin` layout's flat 8 B/record), which
+    /// the slab sizing rules must budget for (see `examples/scale_susy`).
+    pub fn bytes(&self) -> u64 {
+        let f32s = self.d_min.len()
+            + self.margin.len()
+            + self.obj.len()
+            + self.lb_block.len()
+            + self.um.rows() * self.um.cols()
+            + self.lb.rows() * self.lb.cols()
+            + self.centers_prev.rows() * self.centers_prev.cols();
+        let partials = self.partials.as_ref().map(Partials::encoded_bytes).unwrap_or(0);
+        (f32s * 4 + self.delta.len() * 8 + self.best.len() * 4) as u64 + partials
+    }
+
+    /// Whether the cached state can bound a pass of `kernel` under `cfg`.
+    fn usable(&self, kernel: Kernel, n: usize, c: usize, d: usize, cfg: &BoundConfig) -> bool {
+        let base = cfg.tolerance > 0.0
+            && c > 0
+            && self.kernel == Some(kernel)
+            && self.model == cfg.model
+            && self.partials.is_some()
+            && self.stale_iters < cfg.refresh_every.max(1)
+            && self.centers_prev.rows() == c
+            && self.centers_prev.cols() == d
+            && self.delta.len() == c
+            && self.obj.len() == n;
+        if !base {
+            return false;
+        }
+        let lb_ok = self.lb.rows() == n && self.lb.cols() == c;
+        if kernel.is_kmeans() {
+            let km = self.best.len() == n && self.margin.len() == n;
+            match cfg.model {
+                BoundModel::DMin => km,
+                BoundModel::Elkan => km && lb_ok,
+            }
+        } else {
+            let fcm = self.um.rows() == n && self.um.cols() == c;
+            match cfg.model {
+                BoundModel::DMin => fcm && self.d_min.len() == n,
+                BoundModel::Elkan => fcm && lb_ok && self.lb_block.len() == c,
+            }
+        }
+    }
+
+    /// Fold the centers' movement since the previous pass into the
+    /// per-center accumulated path lengths; returns the largest.
+    fn accumulate_shift(&mut self, v: &Matrix) -> f64 {
+        let mut worst = 0.0f64;
+        for j in 0..v.rows() {
+            let step = dist2(self.centers_prev.row(j), v.row(j)).sqrt();
+            self.delta[j] += step;
+            worst = worst.max(self.delta[j]);
+        }
+        self.centers_prev = v.clone();
+        worst
+    }
+
+    /// Whole-block bound: every live record's own test is implied, so the
+    /// cached block partials replay without touching a record.
+    fn block_prunable(&self, kernel: Kernel, delta_max: f64, tol: f64) -> bool {
+        if kernel.is_kmeans() {
+            2.0 * delta_max <= self.margin_block as f64
+        } else {
+            match self.model {
+                BoundModel::DMin => delta_max <= tol * self.d_min_block as f64,
+                BoundModel::Elkan => self
+                    .lb_block
+                    .iter()
+                    .zip(&self.delta)
+                    .all(|(&lb, &dj)| dj <= tol * lb as f64),
+            }
+        }
+    }
+
+    /// Per-record bound test. `thr_dmin = δ_max / tol` and
+    /// `two_delta = 2·δ_max` are hoisted by the caller.
+    fn record_prunable(
+        &self,
+        kernel: Kernel,
+        k: usize,
+        tol: f64,
+        thr_dmin: f64,
+        two_delta: f64,
+    ) -> bool {
+        if kernel.is_kmeans() {
+            match self.model {
+                BoundModel::DMin => two_delta <= self.margin[k] as f64,
+                BoundModel::Elkan => {
+                    let lbr = self.lb.row(k);
+                    let b = self.best[k] as usize;
+                    let rival_floor = lbr[b] as f64 + self.delta[b];
+                    lbr.iter()
+                        .zip(&self.delta)
+                        .enumerate()
+                        .all(|(j, (&lb, &dj))| j == b || lb as f64 - dj >= rival_floor)
+                }
+            }
+        } else {
+            match self.model {
+                BoundModel::DMin => self.d_min[k] as f64 >= thr_dmin,
+                BoundModel::Elkan => self
+                    .lb
+                    .row(k)
+                    .iter()
+                    .zip(&self.delta)
+                    .all(|(&lb, &dj)| dj <= tol * lb as f64),
+            }
+        }
+    }
+
+    /// Replay record `k`'s cached contribution into `out` (no distance
+    /// pass, no powf). For K-Means the replayed `w_acc`/`v_num` terms are
+    /// *exact* under the margin test; only the objective term is stale.
+    fn replay(&self, kernel: Kernel, k: usize, x: &Matrix, w: &[f32], out: &mut Partials) {
+        let row = x.row(k);
+        if kernel.is_kmeans() {
+            let wk = w[k] as f64;
+            let best = self.best[k] as usize;
+            out.w_acc[best] += wk;
+            out.objective += self.obj[k] as f64;
+            let vrow = out.v_num.row_mut(best);
+            for (j, val) in vrow.iter_mut().enumerate() {
+                *val += (wk * row[j] as f64) as f32;
+            }
+        } else {
+            let um_row = self.um.row(k);
+            for (i, &u) in um_row.iter().enumerate() {
+                out.w_acc[i] += u as f64;
+                let vrow = out.v_num.row_mut(i);
+                for (val, &xj) in vrow.iter_mut().zip(row) {
+                    *val += u * xj;
+                }
+            }
+            out.objective += self.obj[k] as f64;
+        }
+    }
+
+    /// Scatter one gathered pass's [`BoundRows`] back into the per-record
+    /// state, folding fresh block minima.
+    fn scatter(&mut self, kernel: Kernel, idx: &[usize], rows: &BoundRows, mins: &mut Mins) {
+        let elkan = self.model == BoundModel::Elkan;
+        for (r, &k) in idx.iter().enumerate() {
+            self.obj[k] = rows.obj[r];
+            let d2r = rows.d2.row(r);
+            if kernel.is_kmeans() {
+                let b = rows.best[r] as usize;
+                self.best[k] = rows.best[r];
+                let best_d = d2r[b] as f64;
+                let mut second = f64::INFINITY;
+                for (j, &d2) in d2r.iter().enumerate() {
+                    if j != b {
+                        second = second.min(d2 as f64);
+                    }
+                }
+                // C = 1: the assignment can never change.
+                let margin = if second.is_finite() {
+                    (second.sqrt() - best_d.sqrt()) as f32
+                } else {
+                    f32::INFINITY
+                };
+                self.margin[k] = margin;
+                mins.margin = mins.margin.min(margin);
+                if elkan {
+                    for (lb, &d2) in self.lb.row_mut(k).iter_mut().zip(d2r) {
+                        *lb = (d2 as f64).sqrt() as f32;
+                    }
+                }
+            } else {
+                self.um.row_mut(k).copy_from_slice(rows.um.row(r));
+                if elkan {
+                    for ((lb, m), &d2) in
+                        self.lb.row_mut(k).iter_mut().zip(mins.lb.iter_mut()).zip(d2r)
+                    {
+                        let de = (d2 as f64).sqrt() as f32;
+                        *lb = de;
+                        *m = (*m).min(de);
+                    }
+                } else {
+                    let mut dmin = f64::INFINITY;
+                    for &d2 in d2r {
+                        dmin = dmin.min(d2 as f64);
+                    }
+                    let de = dmin.sqrt() as f32;
+                    self.d_min[k] = de;
+                    mins.d_min = mins.d_min.min(de);
+                }
+            }
+        }
+    }
+
+    /// Full exact pass that (re)builds every cached bound — the fallback
+    /// for empty/mismatched state, disabled pruning, and the periodic
+    /// refresh. `f` runs the backend's bound-emitting exact pass over the
+    /// gathered live rows.
+    pub fn refresh<F>(
+        &mut self,
+        kernel: Kernel,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        model: BoundModel,
+        f: &mut F,
+    ) -> Result<Partials>
+    where
+        F: FnMut(&Matrix, &[f32], &mut BoundRows) -> Result<Partials>,
+    {
+        let (n, c, d) = (x.rows(), v.rows(), v.cols());
+        debug_assert_eq!(n, w.len());
+        self.kernel = Some(kernel);
+        self.model = model;
+        self.centers_prev = v.clone();
+        self.delta = vec![0.0; c];
+        self.stale_iters = 0;
+        self.obj = vec![0.0; n];
+        self.block_payload_bytes = (n * d * 4) as u64;
+        let elkan = model == BoundModel::Elkan;
+        if kernel.is_kmeans() {
+            self.um = Matrix::zeros(0, 0);
+            self.d_min = Vec::new();
+            self.best = vec![0; n];
+            self.margin = vec![f32::INFINITY; n];
+        } else {
+            self.um = Matrix::zeros(n, c);
+            self.best = Vec::new();
+            self.margin = Vec::new();
+            self.d_min = if elkan { Vec::new() } else { vec![f32::INFINITY; n] };
+        }
+        self.lb = if elkan {
+            let mut lb = Matrix::zeros(n, c);
+            lb.as_mut_slice().fill(f32::INFINITY);
+            lb
+        } else {
+            Matrix::zeros(0, 0)
+        };
+        self.live = w.iter().filter(|&&wk| wk != 0.0).count();
+        let mut out = Partials::zeros(c, d);
+        let mut mins = Mins::new(kernel, model, c);
+        if c > 0 && self.live > 0 {
+            if self.live == n {
+                // Uniform-weight fast path: no gather copy.
+                let idx: Vec<usize> = (0..n).collect();
+                let mut rows = BoundRows::for_kernel(kernel, n, c);
+                out = f(x, w, &mut rows)?;
+                self.scatter(kernel, &idx, &rows, &mut mins);
+            } else {
+                let mut idx = Vec::with_capacity(self.live);
+                let mut buf: Vec<f32> = Vec::with_capacity(self.live * d);
+                for k in 0..n {
+                    if w[k] != 0.0 {
+                        idx.push(k);
+                        buf.extend_from_slice(x.row(k));
+                    }
+                }
+                let xg = Matrix::from_vec(buf, idx.len(), d);
+                let wg: Vec<f32> = idx.iter().map(|&k| w[k]).collect();
+                let mut rows = BoundRows::for_kernel(kernel, idx.len(), c);
+                out = f(&xg, &wg, &mut rows)?;
+                self.scatter(kernel, &idx, &rows, &mut mins);
+            }
+        }
+        mins.store(self);
+        self.partials = Some(out.clone());
+        Ok(out)
+    }
+
+    /// One pruned pass (the protocol behind
+    /// [`KernelBackend::pruned_partials`]): whole-block replay when the
+    /// block bound holds, otherwise per-record replay + a gathered exact
+    /// recompute of the rest through `f`.
+    pub fn pruned_pass<F>(
+        &mut self,
+        kernel: Kernel,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        cfg: &BoundConfig,
+        f: &mut F,
+    ) -> Result<(Partials, usize)>
+    where
+        F: FnMut(&Matrix, &[f32], &mut BoundRows) -> Result<Partials>,
+    {
+        let (n, c, d) = (x.rows(), v.rows(), v.cols());
+        debug_assert_eq!(n, w.len());
+        if !self.usable(kernel, n, c, d, cfg) {
+            let p = self.refresh(kernel, x, v, w, cfg.model, f)?;
+            return Ok((p, 0));
+        }
+        self.stale_iters += 1;
+        let delta_max = self.accumulate_shift(v);
+        let tol = cfg.tolerance;
+        if self.block_prunable(kernel, delta_max, tol) {
+            let p = self.partials.clone().expect("usable implies cached partials");
+            return Ok((p, self.live));
+        }
+        let thr_dmin = delta_max / tol;
+        let two_delta = 2.0 * delta_max;
+        let mut out = Partials::zeros(c, d);
+        let mut pruned = 0usize;
+        let mut idx: Vec<usize> = Vec::new();
+        let mut buf: Vec<f32> = Vec::new();
+        let mut mins = Mins::new(kernel, self.model, c);
+        for k in 0..n {
+            if w[k] == 0.0 {
+                continue; // padding contract
+            }
+            if self.record_prunable(kernel, k, tol, thr_dmin, two_delta) {
+                self.replay(kernel, k, x, w, &mut out);
+                mins.fold_cached(self, kernel, k);
+                pruned += 1;
+            } else {
+                idx.push(k);
+                buf.extend_from_slice(x.row(k));
+            }
+        }
+        if !idx.is_empty() {
+            let xg = Matrix::from_vec(buf, idx.len(), d);
+            let wg: Vec<f32> = idx.iter().map(|&k| w[k]).collect();
+            let mut rows = BoundRows::for_kernel(kernel, idx.len(), c);
+            let fresh = f(&xg, &wg, &mut rows)?;
+            out.merge(&fresh);
+            self.scatter(kernel, &idx, &rows, &mut mins);
+        }
+        mins.store(self);
+        self.partials = Some(out.clone());
+        Ok((out, pruned))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bitwise spill codec (the slab's disk ring)
+// ---------------------------------------------------------------------------
+
+const SPILL_MAGIC: u32 = 0xB16F_5AB1;
+const SPILL_VERSION: u8 = 1;
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(b: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(b, vs.len() as u32);
+    for &v in vs {
+        put_f32(b, v);
+    }
+}
+
+fn put_f64s(b: &mut Vec<u8>, vs: &[f64]) {
+    put_u32(b, vs.len() as u32);
+    for &v in vs {
+        put_f64(b, v);
+    }
+}
+
+fn put_u32s(b: &mut Vec<u8>, vs: &[u32]) {
+    put_u32(b, vs.len() as u32);
+    for &v in vs {
+        put_u32(b, v);
+    }
+}
+
+fn put_matrix(b: &mut Vec<u8>, m: &Matrix) {
+    put_u32(b, m.rows() as u32);
+    put_u32(b, m.cols() as u32);
+    for &v in m.as_slice() {
+        put_f32(b, v);
+    }
+}
+
+/// Bounds-checked little-endian reader over a spill image.
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, p: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.p.checked_add(n)?;
+        if end > self.b.len() {
+            return None;
+        }
+        let s = &self.b[self.p..end];
+        self.p = end;
+        Some(s)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        Some(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    fn f32(&mut self) -> Option<f32> {
+        Some(f32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+
+    fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    fn f32s(&mut self) -> Option<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4)?)?;
+        Some(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f64s(&mut self) -> Option<Vec<f64>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(8)?)?;
+        Some(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u32s(&mut self) -> Option<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4)?)?;
+        Some(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn matrix(&mut self) -> Option<Matrix> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let len = rows.checked_mul(cols)?;
+        let raw = self.take(len.checked_mul(4)?)?;
+        let data: Vec<f32> =
+            raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        Some(Matrix::from_vec(data, rows, cols))
+    }
+
+    fn done(&self) -> bool {
+        self.p == self.b.len()
+    }
+}
+
+fn kernel_tag(k: Option<Kernel>) -> u8 {
+    match k {
+        None => 0,
+        Some(Kernel::FcmFast) => 1,
+        Some(Kernel::FcmClassic) => 2,
+        Some(Kernel::FcmClassicPair) => 3,
+        Some(Kernel::KMeans) => 4,
+    }
+}
+
+fn kernel_from_tag(t: u8) -> Option<Option<Kernel>> {
+    Some(match t {
+        0 => None,
+        1 => Some(Kernel::FcmFast),
+        2 => Some(Kernel::FcmClassic),
+        3 => Some(Kernel::FcmClassicPair),
+        4 => Some(Kernel::KMeans),
+        _ => return None,
+    })
+}
+
+impl SlabState for BlockBounds {
+    fn slab_bytes(&self) -> u64 {
+        self.bytes()
+    }
+
+    fn recompute_bytes(&self) -> u64 {
+        self.block_payload_bytes
+    }
+
+    /// Bitwise serialisation: every f32/f64 travels as its exact LE bit
+    /// pattern, so a spill → reload roundtrip reproduces the state — and
+    /// therefore every later pruning decision and replayed contribution —
+    /// identically (pinned by `prop_invariants` and the streaming twin).
+    fn spill(&self) -> Option<Vec<u8>> {
+        let mut b = Vec::with_capacity(self.bytes() as usize + 128);
+        put_u32(&mut b, SPILL_MAGIC);
+        put_u8(&mut b, SPILL_VERSION);
+        put_u8(&mut b, match self.model {
+            BoundModel::DMin => 0,
+            BoundModel::Elkan => 1,
+        });
+        put_u8(&mut b, kernel_tag(self.kernel));
+        put_matrix(&mut b, &self.centers_prev);
+        put_f64s(&mut b, &self.delta);
+        put_f32s(&mut b, &self.d_min);
+        put_f32s(&mut b, &self.margin);
+        put_matrix(&mut b, &self.lb);
+        put_matrix(&mut b, &self.um);
+        put_f32s(&mut b, &self.obj);
+        put_u32s(&mut b, &self.best);
+        put_f32(&mut b, self.d_min_block);
+        put_f32(&mut b, self.margin_block);
+        put_f32s(&mut b, &self.lb_block);
+        match &self.partials {
+            None => put_u8(&mut b, 0),
+            Some(p) => {
+                put_u8(&mut b, 1);
+                put_matrix(&mut b, &p.v_num);
+                put_f64s(&mut b, &p.w_acc);
+                put_f64(&mut b, p.objective);
+            }
+        }
+        put_u64(&mut b, self.live as u64);
+        put_u64(&mut b, self.stale_iters as u64);
+        put_u64(&mut b, self.block_payload_bytes);
+        // FNV-1a trailer, same discipline as the block codec: a corrupt
+        // slot file must fail to decode (the block then refreshes exactly)
+        // rather than replay corrupted bounds into the partials.
+        let sum = fnv1a(&b);
+        put_u64(&mut b, sum);
+        Some(b)
+    }
+
+    fn unspill(bytes: &[u8]) -> Option<Self> {
+        if bytes.len() < 8 {
+            return None;
+        }
+        let (payload, trailer) = bytes.split_at(bytes.len() - 8);
+        if fnv1a(payload) != u64::from_le_bytes(trailer.try_into().ok()?) {
+            return None;
+        }
+        let mut c = Cur::new(payload);
+        if c.u32()? != SPILL_MAGIC || c.u8()? != SPILL_VERSION {
+            return None;
+        }
+        let model = match c.u8()? {
+            0 => BoundModel::DMin,
+            1 => BoundModel::Elkan,
+            _ => return None,
+        };
+        let kernel = kernel_from_tag(c.u8()?)?;
+        let centers_prev = c.matrix()?;
+        let delta = c.f64s()?;
+        let d_min = c.f32s()?;
+        let margin = c.f32s()?;
+        let lb = c.matrix()?;
+        let um = c.matrix()?;
+        let obj = c.f32s()?;
+        let best = c.u32s()?;
+        let d_min_block = c.f32()?;
+        let margin_block = c.f32()?;
+        let lb_block = c.f32s()?;
+        let partials = match c.u8()? {
+            0 => None,
+            1 => {
+                let v_num = c.matrix()?;
+                let w_acc = c.f64s()?;
+                let objective = c.f64()?;
+                Some(Partials { v_num, w_acc, objective })
+            }
+            _ => return None,
+        };
+        let live = c.u64()? as usize;
+        let stale_iters = c.u64()? as usize;
+        let block_payload_bytes = c.u64()?;
+        if !c.done() {
+            return None;
+        }
+        Some(Self {
+            model,
+            kernel,
+            centers_prev,
+            delta,
+            d_min,
+            margin,
+            lb,
+            um,
+            obj,
+            best,
+            d_min_block,
+            margin_block,
+            lb_block,
+            partials,
+            live,
+            stale_iters,
+            block_payload_bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fcm::native::{classic_partials_native, fcm_partials_native, kmeans_partials_native};
+    use crate::fcm::NativeBackend;
+    use crate::prng::Pcg;
+
+    fn rand_case(n: usize, d: usize, c: usize, seed: u64) -> (Matrix, Matrix, Vec<f32>) {
+        let mut rng = Pcg::new(seed);
+        let mut x = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                x.set(i, j, rng.normal() as f32);
+            }
+        }
+        let mut v = Matrix::zeros(c, d);
+        for i in 0..c {
+            for j in 0..d {
+                v.set(i, j, rng.normal() as f32);
+            }
+        }
+        let w = (0..n).map(|_| rng.next_f32() + 0.1).collect();
+        (x, v, w)
+    }
+
+    fn cfg(model: BoundModel) -> BoundConfig {
+        BoundConfig { model, tolerance: 1e-2, refresh_every: 8 }
+    }
+
+    #[test]
+    fn pruned_first_pass_is_exact_refresh() {
+        let (x, v, w) = rand_case(120, 5, 4, 41);
+        for model in [BoundModel::DMin, BoundModel::Elkan] {
+            for m in [1.4, 2.0] {
+                let mut state = BlockBounds::default();
+                let (p, pruned) = NativeBackend
+                    .pruned_partials(Kernel::FcmFast, &x, &v, &w, m, &mut state, &cfg(model))
+                    .unwrap();
+                assert_eq!(pruned, 0, "first pass must refresh, not prune");
+                assert!(state.is_fresh());
+                let exact = fcm_partials_native(&x, &v, &w, m);
+                for (a, b) in p.w_acc.iter().zip(&exact.w_acc) {
+                    assert!((a - b).abs() <= 1e-6 + 1e-4 * b.abs(), "{model:?} m={m}: {a} vs {b}");
+                }
+                let rel = (p.objective - exact.objective).abs() / exact.objective.max(1e-9);
+                assert!(rel < 1e-4, "{model:?} m={m}: objective rel {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn unmoved_centers_prune_whole_block() {
+        for model in [BoundModel::DMin, BoundModel::Elkan] {
+            let (x, v, w) = rand_case(100, 4, 3, 42);
+            let mut state = BlockBounds::default();
+            let (first, _) = NativeBackend
+                .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, &mut state, &cfg(model))
+                .unwrap();
+            // Same centers again: zero shift → whole block served from cache.
+            let (second, pruned) = NativeBackend
+                .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, &mut state, &cfg(model))
+                .unwrap();
+            assert_eq!(pruned, 100, "{model:?}");
+            assert_eq!(first.w_acc, second.w_acc);
+            assert_eq!(first.v_num.as_slice(), second.v_num.as_slice());
+            assert_eq!(first.objective, second.objective);
+        }
+    }
+
+    #[test]
+    fn refresh_cap_forces_exact_pass() {
+        let (x, v, w) = rand_case(80, 3, 3, 43);
+        let cfg = BoundConfig { model: BoundModel::Elkan, tolerance: 1e-2, refresh_every: 2 };
+        let mut state = BlockBounds::default();
+        let run = |st: &mut BlockBounds| {
+            NativeBackend
+                .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, st, &cfg)
+                .unwrap()
+                .1
+        };
+        run(&mut state);
+        assert_eq!(run(&mut state), 80, "within the cap the unmoved block prunes");
+        assert_eq!(run(&mut state), 80);
+        // stale_iters hit the cap: next pass must be a refresh.
+        assert_eq!(run(&mut state), 0, "refresh_every must force an exact pass");
+    }
+
+    #[test]
+    fn zero_tolerance_disables_pruning() {
+        let (x, v, w) = rand_case(64, 3, 3, 44);
+        let cfg = BoundConfig { model: BoundModel::Elkan, tolerance: 0.0, refresh_every: 4 };
+        let mut state = BlockBounds::default();
+        for _ in 0..3 {
+            let (_, pruned) = NativeBackend
+                .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, &mut state, &cfg)
+                .unwrap();
+            assert_eq!(pruned, 0);
+        }
+    }
+
+    #[test]
+    fn kernel_or_model_switch_forces_refresh() {
+        let (x, v, w) = rand_case(60, 3, 3, 45);
+        let mut state = BlockBounds::default();
+        let run = |st: &mut BlockBounds, kernel, model| {
+            NativeBackend.pruned_partials(kernel, &x, &v, &w, 2.0, st, &cfg(model)).unwrap().1
+        };
+        run(&mut state, Kernel::FcmFast, BoundModel::Elkan);
+        assert_eq!(run(&mut state, Kernel::FcmFast, BoundModel::Elkan), 60);
+        // Model switch: no stale cross-model bound may be reused.
+        assert_eq!(run(&mut state, Kernel::FcmFast, BoundModel::DMin), 0);
+        // Kernel switch: cached u^m rows belong to the other formula.
+        assert_eq!(run(&mut state, Kernel::FcmClassic, BoundModel::DMin), 0);
+    }
+
+    #[test]
+    fn small_shift_prunes_and_elkan_dominates_dmin() {
+        // Well-separated blobs → comfortable bounds; a tiny center nudge
+        // must prune most records, the per-center model at least as many
+        // as the single-d_min model (its test is implied per center), and
+        // the pruned partials stay within the perturbation bound.
+        let data = crate::data::synth::blobs(400, 3, 3, 0.2, 45);
+        let x = &data.features;
+        let w = vec![1.0f32; 400];
+        let mut v = Matrix::zeros(3, 3);
+        for i in 0..3 {
+            v.row_mut(i).copy_from_slice(x.row(i * 133));
+        }
+        let mut v2 = v.clone();
+        for val in v2.as_mut_slice().iter_mut() {
+            *val += 1e-5;
+        }
+        let tol = 1e-2;
+        let mut counts = Vec::new();
+        for model in [BoundModel::DMin, BoundModel::Elkan] {
+            let cfg = BoundConfig { model, tolerance: tol, refresh_every: 8 };
+            let mut state = BlockBounds::default();
+            NativeBackend
+                .pruned_partials(Kernel::FcmFast, x, &v, &w, 2.0, &mut state, &cfg)
+                .unwrap();
+            let (pruned_p, pruned_n) = NativeBackend
+                .pruned_partials(Kernel::FcmFast, x, &v2, &w, 2.0, &mut state, &cfg)
+                .unwrap();
+            assert!(pruned_n > 300, "{model:?}: tiny shift should prune most, got {pruned_n}");
+            counts.push(pruned_n);
+            let exact = fcm_partials_native(x, &v2, &w, 2.0);
+            for (a, b) in pruned_p.w_acc.iter().zip(&exact.w_acc) {
+                let rel = (a - b).abs() / b.abs().max(1e-9);
+                assert!(rel < 10.0 * tol, "{model:?}: pruned w_acc drift {rel} vs {b}");
+            }
+            let rel = (pruned_p.objective - exact.objective).abs() / exact.objective.max(1e-9);
+            assert!(rel < 10.0 * tol, "{model:?}: pruned objective drift {rel}");
+        }
+        assert!(counts[1] >= counts[0], "elkan ({}) must dominate dmin ({})", counts[1], counts[0]);
+    }
+
+    #[test]
+    fn classic_pruned_matches_classic_exact_on_refresh() {
+        let (x, v, w) = rand_case(90, 4, 4, 46);
+        for m in [1.3, 2.0] {
+            let mut state = BlockBounds::default();
+            let (p, pruned) = NativeBackend
+                .pruned_partials(Kernel::FcmClassic, &x, &v, &w, m, &mut state, &cfg(BoundModel::Elkan))
+                .unwrap();
+            assert_eq!(pruned, 0);
+            // The pair-loop kernel is the classic oracle.
+            let exact = classic_partials_native(&x, &v, &w, m);
+            for (a, b) in p.w_acc.iter().zip(&exact.w_acc) {
+                assert!((a - b).abs() <= 1e-6 + 1e-4 * b.abs(), "m={m}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn kmeans_pruned_center_update_is_exact_under_small_shift() {
+        // Separated clusters: small center movement cannot flip any
+        // assignment, so pruned w_acc / v_num must equal the exact pass
+        // bit-for-bit (only the objective may lag) — under both models.
+        let (c, d, n) = (3usize, 4usize, 300usize);
+        let mut rng = Pcg::new(47);
+        let mut v = Matrix::zeros(c, d);
+        for i in 0..c {
+            v.set(i, i % d, 10.0 * (i as f32 + 1.0));
+        }
+        let mut x = Matrix::zeros(n, d);
+        for k in 0..n {
+            let home = k % c;
+            for j in 0..d {
+                x.set(k, j, v.get(home, j) + (rng.normal() * 0.2) as f32);
+            }
+        }
+        let w = vec![1.0f32; n];
+        let mut v2 = v.clone();
+        for val in v2.as_mut_slice().iter_mut() {
+            *val += 0.01;
+        }
+        for model in [BoundModel::DMin, BoundModel::Elkan] {
+            let mut state = BlockBounds::default();
+            NativeBackend
+                .pruned_partials(Kernel::KMeans, &x, &v, &w, 0.0, &mut state, &cfg(model))
+                .unwrap();
+            let (pruned_p, pruned_n) = NativeBackend
+                .pruned_partials(Kernel::KMeans, &x, &v2, &w, 0.0, &mut state, &cfg(model))
+                .unwrap();
+            assert!(pruned_n > 0, "{model:?}: margin test should prune on separated data");
+            let exact = kmeans_partials_native(&x, &v2, &w);
+            assert_eq!(pruned_p.w_acc, exact.w_acc, "{model:?}: pruned masses must be exact");
+            for (a, b) in pruned_p.v_num.as_slice().iter().zip(exact.v_num.as_slice()) {
+                assert!((a - b).abs() <= 1e-4 + 1e-5 * b.abs(), "{model:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_charge_per_center_bound_arrays() {
+        // The satellite bugfix: the elkan layout stores an extra n×C lower-
+        // bound matrix the slab accounting must charge — C·4 B/record on
+        // top of the dmin layout, not the flat 8 B/record it assumed.
+        let (n, c) = (50usize, 4usize);
+        let (x, v, w) = rand_case(n, 3, c, 48);
+        let mut dmin = BlockBounds::default();
+        NativeBackend
+            .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, &mut dmin, &cfg(BoundModel::DMin))
+            .unwrap();
+        let mut elkan = BlockBounds::default();
+        NativeBackend
+            .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, &mut elkan, &cfg(BoundModel::Elkan))
+            .unwrap();
+        // dmin stores d_min (n), elkan stores lb (n×C) + lb_block (C).
+        let extra = (n * c * 4 + c * 4) as u64;
+        let dropped = (n * 4) as u64;
+        assert_eq!(elkan.bytes(), dmin.bytes() + extra - dropped);
+        assert!(dmin.bytes() > (n * (4 + 4) + n * c * 4) as u64);
+        let mut st = elkan;
+        st.reset();
+        assert_eq!(st.bytes(), 0);
+        assert!(!st.is_fresh());
+    }
+
+    #[test]
+    fn spill_roundtrip_is_bitwise_and_resumes_identically() {
+        let (x, v, w) = rand_case(80, 4, 3, 49);
+        for (kernel, model) in [
+            (Kernel::FcmFast, BoundModel::Elkan),
+            (Kernel::FcmFast, BoundModel::DMin),
+            (Kernel::KMeans, BoundModel::Elkan),
+        ] {
+            let mut state = BlockBounds::default();
+            NativeBackend
+                .pruned_partials(kernel, &x, &v, &w, 2.0, &mut state, &cfg(model))
+                .unwrap();
+            let mut v2 = v.clone();
+            for val in v2.as_mut_slice().iter_mut() {
+                *val += 2e-4;
+            }
+            NativeBackend
+                .pruned_partials(kernel, &x, &v2, &w, 2.0, &mut state, &cfg(model))
+                .unwrap();
+            let img = state.spill().expect("bounds are spillable");
+            let mut restored = BlockBounds::unspill(&img).expect("image decodes");
+            assert_eq!(img, restored.spill().unwrap(), "{kernel:?}/{model:?}: re-spill differs");
+            assert_eq!(state.slab_bytes(), restored.slab_bytes());
+            assert_eq!(state.recompute_bytes(), restored.recompute_bytes());
+            // The restored state must drive the next pass identically.
+            let mut v3 = v2.clone();
+            for val in v3.as_mut_slice().iter_mut() {
+                *val += 2e-4;
+            }
+            let (pa, na) = NativeBackend
+                .pruned_partials(kernel, &x, &v3, &w, 2.0, &mut state, &cfg(model))
+                .unwrap();
+            let (pb, nb) = NativeBackend
+                .pruned_partials(kernel, &x, &v3, &w, 2.0, &mut restored, &cfg(model))
+                .unwrap();
+            assert_eq!(na, nb, "{kernel:?}/{model:?}: pruning decisions diverged");
+            assert_eq!(pa.w_acc, pb.w_acc);
+            assert_eq!(pa.v_num.as_slice(), pb.v_num.as_slice());
+            assert_eq!(pa.objective, pb.objective);
+        }
+    }
+
+    #[test]
+    fn unspill_rejects_garbage() {
+        assert!(BlockBounds::unspill(&[]).is_none());
+        assert!(BlockBounds::unspill(&[0u8; 16]).is_none());
+        let mut state = BlockBounds::default();
+        let (x, v, w) = rand_case(10, 2, 2, 50);
+        NativeBackend
+            .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, &mut state, &cfg(BoundModel::Elkan))
+            .unwrap();
+        let img = state.spill().unwrap();
+        let mut truncated = img.clone();
+        truncated.truncate(img.len() - 3);
+        assert!(BlockBounds::unspill(&truncated).is_none(), "truncated image must not decode");
+        // A single flipped payload bit must fail the checksum, not decode
+        // into silently wrong bounds.
+        let mut flipped = img.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x40;
+        assert!(BlockBounds::unspill(&flipped).is_none(), "corrupt image must not decode");
+    }
+}

@@ -12,16 +12,17 @@
 //! center shift, iteration cap) lives here in rust, identical for the
 //! native and PJRT backends.
 
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use crate::data::Matrix;
 use crate::error::{Error, Result};
-use crate::fcm::native::BlockPruneState;
-use crate::fcm::{max_center_shift2, ChunkBackend, ClusterResult, Partials};
+use crate::fcm::backend::{BlockBounds, BoundConfig, BoundModel, Kernel, KernelBackend};
+use crate::fcm::{max_center_shift2, ClusterResult, Partials};
 use crate::hdfs::BlockStore;
 use crate::mapreduce::{
     DistributedCache, Engine, JobStats, MapReduceJob, SessionOptions, SimCost, SlabState,
-    StateSlab, TaskCtx, MIB,
+    SpillConfig, StateSlab, TaskCtx, MIB,
 };
 
 /// FCM chunk-math variant.
@@ -53,12 +54,15 @@ impl Default for FcmParams {
 }
 
 fn one_pass(
-    backend: &dyn ChunkBackend,
+    backend: &dyn KernelBackend,
     x: &Matrix,
     v: &Matrix,
     w: &[f32],
     params: &FcmParams,
 ) -> Result<Partials> {
+    // Variant::Classic takes the fused (pair-loop-free) classic kernel;
+    // the O(C²) pair loop is reserved for the Mahout baseline model
+    // (`Kernel::FcmClassicPair`, `crate::baselines`).
     match params.variant {
         Variant::Fast => backend.fcm_partials(x, v, w, params.m),
         Variant::Classic => backend.classic_partials(x, v, w, params.m),
@@ -72,7 +76,7 @@ fn one_pass(
 /// final per-center weights (Σ u^m w) are returned as the center importance
 /// used by downstream WFCM merges (paper Eq. 6).
 pub fn run_fcm(
-    backend: &dyn ChunkBackend,
+    backend: &dyn KernelBackend,
     x: &Matrix,
     w: &[f32],
     v0: Matrix,
@@ -114,7 +118,7 @@ pub fn run_fcm(
 
 /// Lloyd's K-Means to convergence (the Mahout-KM compute model).
 pub fn kmeans_loop(
-    backend: &dyn ChunkBackend,
+    backend: &dyn KernelBackend,
     x: &Matrix,
     v0: Matrix,
     epsilon: f64,
@@ -150,24 +154,38 @@ pub fn kmeans_loop(
 // ---------------------------------------------------------------------------
 
 /// Pruning knobs of an iteration-resident session run.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct PruneConfig {
     /// Master switch; disabled sessions run every pass exactly.
     pub enabled: bool,
+    /// Bound model the sticky state maintains (`cluster.bounds`): `DMin`
+    /// is the single nearest-center bound, `Elkan` the per-record ×
+    /// per-center bounds that keep pruning through mid-shift iterations.
+    pub bounds: BoundModel,
     /// Relative distance-perturbation tolerance: a record replays its
-    /// cached contribution while the accumulated center shift stays below
-    /// `tolerance × d_min(record)`.
+    /// cached contribution while each center's accumulated shift stays
+    /// below `tolerance ×` its bound.
     pub tolerance: f64,
     /// Force an exact (bound-refreshing) pass at least every this many
     /// passes — the drift bound.
     pub refresh_every: usize,
     /// Sticky-slab byte budget (see `cluster.slab_mib`).
     pub slab_bytes: u64,
+    /// Disk spill ring for cold slab state (`cluster.slab_spill_dir`);
+    /// `None` evicts under budget pressure instead.
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for PruneConfig {
     fn default() -> Self {
-        Self { enabled: true, tolerance: 5e-3, refresh_every: 4, slab_bytes: 64 * MIB }
+        Self {
+            enabled: true,
+            bounds: BoundModel::Elkan,
+            tolerance: 5e-3,
+            refresh_every: 4,
+            slab_bytes: 64 * MIB,
+            spill_dir: None,
+        }
     }
 }
 
@@ -177,9 +195,33 @@ impl PruneConfig {
         Self { enabled: false, ..Default::default() }
     }
 
-    /// Budget the slab from the cluster config.
+    /// The PR-3 single-bound arm (the A/B control of the elkan default).
+    pub fn dmin() -> Self {
+        Self { bounds: BoundModel::DMin, ..Default::default() }
+    }
+
+    /// Budget, bound model and spill ring from the cluster config.
     pub fn from_cluster(cluster: &crate::config::ClusterConfig) -> Self {
-        Self { slab_bytes: cluster.slab_mib as u64 * MIB, ..Default::default() }
+        let spill_dir = if cluster.slab_spill_dir.is_empty() {
+            None
+        } else {
+            Some(PathBuf::from(&cluster.slab_spill_dir))
+        };
+        Self {
+            slab_bytes: cluster.slab_mib as u64 * MIB,
+            bounds: cluster.bounds,
+            spill_dir,
+            ..Default::default()
+        }
+    }
+
+    /// The per-pass knobs handed to [`KernelBackend::pruned_partials`].
+    pub fn bound_cfg(&self) -> BoundConfig {
+        BoundConfig {
+            model: self.bounds,
+            tolerance: self.tolerance,
+            refresh_every: self.refresh_every,
+        }
     }
 }
 
@@ -198,16 +240,29 @@ pub enum SessionAlgo {
 /// (overwritten in place each iteration — the cache itself is resident).
 const KEY_SESSION_CENTERS: &str = "session_centers";
 
+/// The session's (algo, variant) choice collapsed onto the backend's
+/// dispatch token — the one place the mapping exists.
+fn session_kernel(algo: SessionAlgo, variant: Variant) -> Kernel {
+    match (algo, variant) {
+        (SessionAlgo::Fcm, Variant::Fast) => Kernel::FcmFast,
+        (SessionAlgo::Fcm, Variant::Classic) => Kernel::FcmClassic,
+        (SessionAlgo::KMeans, _) => Kernel::KMeans,
+    }
+}
+
 /// The per-iteration job: one pass of partials for every block against the
 /// current centers, pruned against the session's sticky slab, merged
-/// pairwise on the pool (tree combine) on the way to the reduce.
+/// pairwise on the pool (tree combine) on the way to the reduce. Dispatch
+/// is one [`Kernel`] token through the object-safe [`KernelBackend`] — no
+/// per-variant match arms, so the same job drives native, PJRT and the
+/// shim.
 struct SessionPartialsJob {
-    algo: SessionAlgo,
-    variant: Variant,
+    kernel: Kernel,
     m: f64,
-    backend: Arc<dyn ChunkBackend>,
-    slab: Arc<StateSlab<BlockPruneState>>,
+    backend: Arc<dyn KernelBackend>,
+    slab: Arc<StateSlab<BlockBounds>>,
     prune: PruneConfig,
+    bound_cfg: BoundConfig,
     /// Shared all-ones weight buffer, grown on demand — per-task weight
     /// allocation would put an O(rows) memset on the whole-block pruned
     /// path, whose entire point is to touch no record.
@@ -216,14 +271,14 @@ struct SessionPartialsJob {
 
 impl SessionPartialsJob {
     fn new(
-        algo: SessionAlgo,
-        variant: Variant,
+        kernel: Kernel,
         m: f64,
-        backend: Arc<dyn ChunkBackend>,
-        slab: Arc<StateSlab<BlockPruneState>>,
+        backend: Arc<dyn KernelBackend>,
+        slab: Arc<StateSlab<BlockBounds>>,
         prune: PruneConfig,
     ) -> Self {
-        Self { algo, variant, m, backend, slab, prune, ones: Mutex::new(Arc::new(Vec::new())) }
+        let bound_cfg = prune.bound_cfg();
+        Self { kernel, m, backend, slab, prune, bound_cfg, ones: Mutex::new(Arc::new(Vec::new())) }
     }
 
     /// All-ones weights of at least `n` entries (callers slice to size).
@@ -233,16 +288,6 @@ impl SessionPartialsJob {
             *buf = Arc::new(vec![1.0f32; n]);
         }
         Arc::clone(&buf)
-    }
-
-    fn exact_pass(&self, block: &Matrix, v: &Matrix, w: &[f32]) -> Result<Partials> {
-        match (self.algo, self.variant) {
-            (SessionAlgo::Fcm, Variant::Fast) => self.backend.fcm_partials(block, v, w, self.m),
-            (SessionAlgo::Fcm, Variant::Classic) => {
-                self.backend.classic_partials(block, v, w, self.m)
-            }
-            (SessionAlgo::KMeans, _) => self.backend.kmeans_partials(block, v, w),
-        }
     }
 }
 
@@ -257,47 +302,29 @@ impl MapReduceJob for SessionPartialsJob {
             .ok_or_else(|| Error::Job("session centers missing from cache".into()))?;
         let ones = self.uniform_weights(block.rows());
         let w = &ones[..block.rows()];
-        // Retried attempts (injected-fault re-execution) bypass the slab:
-        // the engine's combiner contract is idempotence, and a discarded
-        // first attempt already advanced the sticky state — replaying the
-        // pruned path could double-count. An exact pass is always safe and
-        // retries are the rare case by construction.
-        if !self.prune.enabled || ctx.attempt > 0 {
-            return self.exact_pass(block, &v, w);
+        // Doomed and retried attempts (injected-fault re-execution) bypass
+        // the slab entirely: the engine's combiner contract is idempotence,
+        // and a discarded attempt must neither advance the sticky state nor
+        // inflate `records_pruned` with replays whose output is thrown
+        // away. An exact pass is always safe and retries are the rare case
+        // by construction.
+        if !self.prune.enabled || ctx.attempt > 0 || ctx.doomed {
+            return self.backend.exact_partials(self.kernel, block, &v, w, self.m);
         }
         let handle = self.slab.entry(ctx.task_id);
         let mut st = handle.lock().expect("slab state poisoned");
-        let (p, pruned) = match (self.algo, self.variant) {
-            (SessionAlgo::Fcm, Variant::Fast) => self.backend.fcm_partials_pruned(
-                block,
-                &v,
-                w,
-                self.m,
-                &mut st,
-                self.prune.tolerance,
-                self.prune.refresh_every,
-            )?,
-            (SessionAlgo::Fcm, Variant::Classic) => self.backend.classic_partials_pruned(
-                block,
-                &v,
-                w,
-                self.m,
-                &mut st,
-                self.prune.tolerance,
-                self.prune.refresh_every,
-            )?,
-            (SessionAlgo::KMeans, _) => self.backend.kmeans_partials_pruned(
-                block,
-                &v,
-                w,
-                &mut st,
-                self.prune.tolerance,
-                self.prune.refresh_every,
-            )?,
-        };
+        let (p, pruned) = self.backend.pruned_partials(
+            self.kernel,
+            block,
+            &v,
+            w,
+            self.m,
+            &mut st,
+            &self.bound_cfg,
+        )?;
         let bytes = st.slab_bytes();
         drop(st); // never hold a state lock while taking the slab lock
-        self.slab.note_update(ctx.task_id, bytes);
+        self.slab.note_update(ctx.task_id, &handle, bytes);
         if pruned > 0 {
             self.slab.add_records_pruned(pruned as u64);
         }
@@ -329,10 +356,10 @@ impl MapReduceJob for SessionPartialsJob {
     }
 
     fn name(&self) -> &str {
-        match (self.algo, self.variant) {
-            (SessionAlgo::Fcm, Variant::Fast) => "session-fcm-fast",
-            (SessionAlgo::Fcm, Variant::Classic) => "session-fcm-classic",
-            (SessionAlgo::KMeans, _) => "session-kmeans",
+        match self.kernel {
+            Kernel::FcmFast => "session-fcm-fast",
+            Kernel::FcmClassic | Kernel::FcmClassicPair => "session-fcm-classic",
+            Kernel::KMeans => "session-kmeans",
         }
     }
 }
@@ -346,6 +373,10 @@ pub struct SessionRunResult {
     pub jobs: usize,
     /// Map records served from the sticky slab across the whole run.
     pub records_pruned: u64,
+    /// Bytes the slab wrote to its disk spill ring across the run.
+    pub slab_spilled_bytes: u64,
+    /// Slab states reloaded from the spill ring across the run.
+    pub slab_reloads: u64,
     /// Per-iteration job stats, with `records_pruned`, `slab_bytes` and
     /// `slab_evictions` stamped in.
     pub per_iteration: Vec<JobStats>,
@@ -373,7 +404,7 @@ pub struct SessionRunResult {
 pub fn run_fcm_session(
     engine: &mut Engine,
     store: &Arc<BlockStore>,
-    backend: Arc<dyn ChunkBackend>,
+    backend: Arc<dyn KernelBackend>,
     algo: SessionAlgo,
     v0: Matrix,
     params: &FcmParams,
@@ -387,18 +418,21 @@ pub fn run_fcm_session(
         return Err(Error::Clustering("no seed centers".into()));
     }
     let sim_before = engine.clock().cost();
-    let slab = Arc::new(StateSlab::with_budget_bytes(if prune.enabled {
-        prune.slab_bytes
-    } else {
-        0
-    }));
+    let spill = prune
+        .spill_dir
+        .as_ref()
+        .filter(|_| prune.enabled)
+        .map(|dir| SpillConfig::new(dir.clone()));
+    let slab = Arc::new(StateSlab::new(
+        if prune.enabled { prune.slab_bytes } else { 0 },
+        spill,
+    ));
     let job = Arc::new(SessionPartialsJob::new(
-        algo,
-        params.variant,
+        session_kernel(algo, params.variant),
         params.m,
         backend,
         Arc::clone(&slab),
-        *prune,
+        prune.clone(),
     ));
     let mut session = engine.session(store, options);
     let cache = Arc::new(DistributedCache::new());
@@ -410,6 +444,7 @@ pub fn run_fcm_session(
     let mut iterations = 0usize;
     let mut records_pruned_total = 0u64;
     let mut peak_resident_bytes = 0u64;
+    let mut spill_io_charged = 0u64;
     let mut per_iteration: Vec<JobStats> = Vec::new();
     for it in 1..=params.max_iterations {
         iterations = it;
@@ -419,7 +454,18 @@ pub fn run_fcm_session(
         stats.records_pruned = pruned_this;
         stats.slab_bytes = slab.bytes();
         stats.slab_evictions = slab.evictions();
+        stats.slab_spilled_bytes = slab.spilled_bytes();
+        stats.slab_reloads = slab.reloads();
         records_pruned_total += pruned_this;
+        // Spill writes and reloads are real disk transfers: charge this
+        // iteration's delta to the modelled clock at the HDFS rate (the
+        // reread side of the slab's recompute-vs-reread crossover; the
+        // recompute side shows up as kernel compute when a bound is gone).
+        let spill_io = slab.spilled_bytes() + slab.reload_bytes();
+        if spill_io > spill_io_charged {
+            session.charge_scan(spill_io - spill_io_charged);
+            spill_io_charged = spill_io;
+        }
         // The per-job meters reset between iterations; fold each
         // iteration's peak into the loop-wide envelope figure.
         peak_resident_bytes =
@@ -450,6 +496,8 @@ pub fn run_fcm_session(
         result: ClusterResult { centers: v, weights, iterations, objective, converged },
         jobs: iterations,
         records_pruned: records_pruned_total,
+        slab_spilled_bytes: slab.spilled_bytes(),
+        slab_reloads: slab.reloads(),
         per_iteration,
         peak_resident_bytes,
         sim,
@@ -589,7 +637,7 @@ mod tests {
 
     fn session_setup(
         seed: u64,
-    ) -> (Arc<BlockStore>, Matrix, FcmParams, Arc<dyn ChunkBackend>) {
+    ) -> (Arc<BlockStore>, Matrix, FcmParams, Arc<dyn KernelBackend>) {
         let data = blobs(2048, 3, 3, 0.25, seed);
         let store =
             Arc::new(BlockStore::in_memory("t", &data.features, 256, 4).unwrap());
@@ -748,8 +796,7 @@ mod tests {
         let prune = PruneConfig::default();
         let slab = Arc::new(StateSlab::with_budget_bytes(prune.slab_bytes));
         let job = Arc::new(SessionPartialsJob::new(
-            SessionAlgo::Fcm,
-            params.variant,
+            session_kernel(SessionAlgo::Fcm, params.variant),
             params.m,
             Arc::new(NativeBackend),
             Arc::clone(&slab),

@@ -2,23 +2,26 @@
 //! weighted FCM, the block-wise WFCMPB of the paper's Algorithm 2, K-Means,
 //! plus seeding and convergence policy.
 //!
-//! All loops are generic over a [`ChunkBackend`] so the same code drives the
-//! pure-rust native implementation (tests, driver-side small jobs) and the
-//! AOT HLO executables on PJRT (the production hot path).
+//! All loops are generic over a [`KernelBackend`] — the unified contract
+//! of [`backend`] owning exact partials, pruned partials and the per-block
+//! bound state — so the same code drives the pure-rust native
+//! implementation (tests, driver-side small jobs), the AOT HLO executables
+//! on PJRT (the production hot path) and the offline PJRT shim.
 
+pub mod backend;
 pub mod loops;
 pub mod native;
 pub mod seeding;
 pub mod wfcmpb;
 
+pub use backend::{BlockBounds, BoundConfig, BoundModel, BoundRows, Kernel, KernelBackend};
 pub use loops::{
     kmeans_loop, run_fcm, run_fcm_session, FcmParams, PruneConfig, SessionAlgo,
     SessionRunResult, Variant,
 };
-pub use native::{BlockPruneState, NativeBackend};
+pub use native::NativeBackend;
 
 use crate::data::Matrix;
-use crate::error::Result;
 
 /// Partial sufficient statistics of one pass over some records:
 /// un-normalised center numerators, per-cluster weight mass, and the
@@ -81,78 +84,6 @@ impl Partials {
         }
         out
     }
-}
-
-/// Backend executing one pass of per-chunk heavy math.
-pub trait ChunkBackend: Send + Sync {
-    /// Fast-FCM (Kolen–Hutcheson) partials, O(n·c) per record block.
-    fn fcm_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials>;
-
-    /// Classic-FCM partials, O(n·c²) formulation.
-    fn classic_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials>;
-
-    /// Hard K-Means partials (v_num = per-cluster sums, w_acc = counts,
-    /// objective = SSE).
-    fn kmeans_partials(&self, x: &Matrix, v: &Matrix, w: &[f32]) -> Result<Partials>;
-
-    /// Fast-FCM partials with shift-bounded pruning against the block's
-    /// sticky `state` (see [`native::fcm_partials_pruned`]); returns the
-    /// partials and the number of records that reused their cached
-    /// contribution. The default is an exact pass with the state reset —
-    /// backends without bound support (e.g. PJRT) stay correct and no
-    /// stale bound can survive them.
-    #[allow(clippy::too_many_arguments)]
-    fn fcm_partials_pruned(
-        &self,
-        x: &Matrix,
-        v: &Matrix,
-        w: &[f32],
-        m: f64,
-        state: &mut BlockPruneState,
-        tol: f64,
-        refresh_every: usize,
-    ) -> Result<(Partials, usize)> {
-        let _ = (tol, refresh_every);
-        state.reset();
-        Ok((self.fcm_partials(x, v, w, m)?, 0))
-    }
-
-    /// Classic-FCM partials with shift-bounded pruning (same contract as
-    /// [`Self::fcm_partials_pruned`]).
-    #[allow(clippy::too_many_arguments)]
-    fn classic_partials_pruned(
-        &self,
-        x: &Matrix,
-        v: &Matrix,
-        w: &[f32],
-        m: f64,
-        state: &mut BlockPruneState,
-        tol: f64,
-        refresh_every: usize,
-    ) -> Result<(Partials, usize)> {
-        let _ = (tol, refresh_every);
-        state.reset();
-        Ok((self.classic_partials(x, v, w, m)?, 0))
-    }
-
-    /// K-Means partials with shift-bounded (margin-exact) pruning (same
-    /// contract as [`Self::fcm_partials_pruned`]).
-    fn kmeans_partials_pruned(
-        &self,
-        x: &Matrix,
-        v: &Matrix,
-        w: &[f32],
-        state: &mut BlockPruneState,
-        tol: f64,
-        refresh_every: usize,
-    ) -> Result<(Partials, usize)> {
-        let _ = (tol, refresh_every);
-        state.reset();
-        Ok((self.kmeans_partials(x, v, w)?, 0))
-    }
-
-    /// Human name for reports ("native", "pjrt").
-    fn name(&self) -> &'static str;
 }
 
 /// The outcome of a clustering run.

@@ -1,9 +1,17 @@
-//! Pure-rust [`ChunkBackend`] — the same math as the Pallas kernels
+//! Pure-rust [`KernelBackend`] — the same math as the Pallas kernels
 //! (`python/compile/kernels/fcm_pallas.py`), validated against the AOT
 //! golden vectors in `rust/tests/integration_runtime.rs`.
 //!
 //! Used by: the driver job (tiny sample, not worth a PJRT round-trip),
 //! unit tests, and as the `Backend::Native` ablation arm.
+//!
+//! This module owns only the **kernels**: exact partials per [`Kernel`]
+//! (including the fused classic path that skips the O(C²) pair loop, and
+//! the pair-loop variant kept as the Mahout compute model / property-test
+//! oracle) plus the bound-emitting pass behind
+//! [`KernelBackend::partials_with_bounds`]. The pruning protocol itself —
+//! bound state, shift maintenance, replay/gather — lives once, backend-
+//! portably, in [`crate::fcm::backend`].
 //!
 //! ## Kernel layout (EXPERIMENTS.md §Perf)
 //!
@@ -27,8 +35,8 @@
 use crate::data::matrix::dist2;
 use crate::data::Matrix;
 use crate::error::Result;
-use crate::fcm::{ChunkBackend, Partials};
-use crate::mapreduce::session::SlabState;
+use crate::fcm::backend::{BoundRows, Kernel, KernelBackend};
+use crate::fcm::Partials;
 
 const DIST_EPS: f64 = 1e-12;
 
@@ -70,57 +78,33 @@ impl NativeBackend {
     }
 }
 
-impl ChunkBackend for NativeBackend {
-    fn fcm_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
-        Ok(fcm_partials_native(x, v, w, m))
-    }
-
-    fn classic_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
-        Ok(classic_partials_native(x, v, w, m))
-    }
-
-    fn kmeans_partials(&self, x: &Matrix, v: &Matrix, w: &[f32]) -> Result<Partials> {
-        Ok(kmeans_partials_native(x, v, w))
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn fcm_partials_pruned(
+impl KernelBackend for NativeBackend {
+    fn exact_partials(
         &self,
+        kernel: Kernel,
         x: &Matrix,
         v: &Matrix,
         w: &[f32],
         m: f64,
-        state: &mut BlockPruneState,
-        tol: f64,
-        refresh_every: usize,
-    ) -> Result<(Partials, usize)> {
-        Ok(fcm_partials_pruned(x, v, w, m, state, tol, refresh_every))
+    ) -> Result<Partials> {
+        Ok(match kernel {
+            Kernel::FcmFast => fcm_partials_native(x, v, w, m),
+            Kernel::FcmClassic => classic_partials_fused(x, v, w, m),
+            Kernel::FcmClassicPair => classic_partials_native(x, v, w, m),
+            Kernel::KMeans => kmeans_partials_native(x, v, w),
+        })
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn classic_partials_pruned(
+    fn partials_with_bounds(
         &self,
+        kernel: Kernel,
         x: &Matrix,
         v: &Matrix,
         w: &[f32],
         m: f64,
-        state: &mut BlockPruneState,
-        tol: f64,
-        refresh_every: usize,
-    ) -> Result<(Partials, usize)> {
-        Ok(classic_partials_pruned(x, v, w, m, state, tol, refresh_every))
-    }
-
-    fn kmeans_partials_pruned(
-        &self,
-        x: &Matrix,
-        v: &Matrix,
-        w: &[f32],
-        state: &mut BlockPruneState,
-        tol: f64,
-        refresh_every: usize,
-    ) -> Result<(Partials, usize)> {
-        Ok(kmeans_partials_pruned(x, v, w, state, tol, refresh_every))
+        rows: &mut BoundRows,
+    ) -> Result<Partials> {
+        Ok(partials_with_bounds_native(kernel, x, v, w, m, rows))
     }
 
     fn name(&self) -> &'static str {
@@ -295,6 +279,75 @@ pub fn classic_partials_native(x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Par
     out
 }
 
+/// Classic-FCM partials with the pair loop **fused away** (ROADMAP kernel
+/// follow-up): the textbook membership `u_i = 1 / Σ_j (d_i/d_j)^p` is
+/// computed as one reciprocal sum per record — `u_i = nrm_i⁻¹ / Σ_j
+/// nrm_j⁻¹` over the dmin-normalised powered distances — so the per-record
+/// cost drops from O(C²) to O(C) while following the classic formulation
+/// (u first, then uᵐ). Algebraically identical to the pair loop, which is
+/// kept in [`classic_partials_native`] as the Mahout-FKM compute model and
+/// the property-test oracle of this path
+/// (`prop_fused_classic_matches_pair_oracle`).
+pub fn classic_partials_fused(x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Partials {
+    let (c, d) = (v.rows(), v.cols());
+    let mut out = Partials::zeros(c, d);
+    if c == 0 {
+        return out;
+    }
+    let p = 1.0 / (m - 1.0);
+    let m2 = m == 2.0;
+    let panel = v.transposed();
+    let tile = tile_rows_for(d, c);
+    let mut d2t = vec![0.0f32; tile * c];
+    let mut d2v = vec![0.0f64; c];
+    let mut inv = vec![0.0f64; c];
+    for (base, t, rows) in x.iter_row_tiles(tile) {
+        tile_dist2(rows, t, d, &panel, &mut d2t[..t * c]);
+        for r in 0..t {
+            let wk = w[base + r] as f64;
+            if wk == 0.0 {
+                continue; // padding contract
+            }
+            let lane = &d2t[r * c..(r + 1) * c];
+            let mut dmin = f64::INFINITY;
+            for i in 0..c {
+                let d2 = (lane[i] as f64).max(DIST_EPS);
+                d2v[i] = d2;
+                dmin = dmin.min(d2);
+            }
+            // inv[i] = (d_i/dmin)^-p; the dmin normalisation cancels in the
+            // ratio u_i = inv[i] / Σ_j inv[j] and keeps every term ≤ 1.
+            let mut s = 0.0f64;
+            if m2 {
+                for i in 0..c {
+                    let ri = dmin / d2v[i];
+                    inv[i] = ri;
+                    s += ri;
+                }
+            } else {
+                for i in 0..c {
+                    let ri = (dmin / d2v[i]).powf(p);
+                    inv[i] = ri;
+                    s += ri;
+                }
+            }
+            let row = &rows[r * d..(r + 1) * d];
+            for i in 0..c {
+                let u = inv[i] / s;
+                let um = if m2 { u * u * wk } else { u.powf(m) * wk };
+                out.w_acc[i] += um;
+                out.objective += um * d2v[i];
+                let umf = um as f32;
+                let vrow = out.v_num.row_mut(i);
+                for (val, &xj) in vrow.iter_mut().zip(row) {
+                    *val += umf * xj;
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Hard K-Means partials, tiled: per-cluster weighted sums/counts + SSE.
 pub fn kmeans_partials_native(x: &Matrix, v: &Matrix, w: &[f32]) -> Partials {
     let (c, d) = (v.rows(), v.cols());
@@ -335,347 +388,23 @@ pub fn kmeans_partials_native(x: &Matrix, v: &Matrix, w: &[f32]) -> Partials {
 }
 
 // ---------------------------------------------------------------------------
-// Shift-bounded pruning (iteration-resident sessions)
+// Bound-emitting exact pass (the backend primitive behind the portable
+// pruning protocol of `crate::fcm::backend`)
 // ---------------------------------------------------------------------------
 
-/// Which FCM flavor a pruned pass computes.
+/// Private FCM membership flavor of the bound-emitting pass.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum FcmFlavor {
+    /// Kolen–Hutcheson normalised form (the Fast kernel's math).
     Fast,
-    Classic,
+    /// Fused classic: u first via one reciprocal sum, then u^m.
+    ClassicFused,
+    /// Textbook O(C²) ratio sum over hoisted powers (the pair loop).
+    ClassicPair,
 }
 
-/// Sticky per-block state for shift-bounded pruning — Elkan/Hamerly in
-/// spirit, adapted to fuzzy memberships: each record caches its
-/// nearest-center distance `d_min` and its last exactly-computed
-/// contribution; the block caches per-center displacement accumulated
-/// since its last full refresh plus the whole block's latest partials.
-///
-/// The bound: memberships depend only on distance *ratios*, and after the
-/// centers move by accumulated displacements `δ_j` every distance changes
-/// by at most `δ_max = max_j δ_j` (triangle inequality), i.e. by a factor
-/// within `1 ± δ_max / d_min` of its cached value. While
-/// `δ_max ≤ tol × d_min(record)` holds, the record's membership vector is
-/// perturbed by O(tol) and its cached contribution is reused; drift is
-/// bounded by the session's periodic full refresh (`refresh_every`).
-/// `δ_max` accumulates *path length* since the block's last full refresh,
-/// which upper-bounds the movement since any later per-record refresh —
-/// so mixed passes stay conservative. For K-Means the per-record bound is
-/// the classic margin test `2·δ_max ≤ d₂ − d₁`, under which the cached
-/// assignment — and therefore the record's exact `w_acc`/`v_num`
-/// contribution — cannot change (only its objective term is stale).
-///
-/// Lives in a session's [`crate::mapreduce::session::StateSlab`], keyed by
-/// block id and byte-accounted via [`SlabState`].
-#[derive(Clone, Debug)]
-pub struct BlockPruneState {
-    /// Centers seen by the most recent pass (for shift accumulation).
-    centers_prev: Matrix,
-    /// Per-center displacement accumulated since the last full refresh.
-    delta_acc: Vec<f64>,
-    /// Per-record nearest-center distance (Euclidean) at that record's
-    /// last exact pass; `INFINITY` for zero-weight padding records.
-    d_min: Vec<f32>,
-    /// `min` of `d_min` over the block — the whole-block prune bound.
-    d_min_block: f32,
-    /// Per-record cached contribution u^m·w per center (n × C), FCM only.
-    um: Matrix,
-    /// Per-record cached objective contribution.
-    obj: Vec<f32>,
-    /// Per-record cached nearest-center assignment (K-Means only).
-    best: Vec<u32>,
-    /// Per-record runner-up margin `d₂ − d₁` (K-Means only).
-    margin: Vec<f32>,
-    /// `min` of `margin` over the block (K-Means whole-block bound).
-    margin_block: f32,
-    /// The block's latest partials (whole-block prune reuses these).
-    partials: Option<Partials>,
-    /// Live (non-zero-weight) records counted at the last refresh — the
-    /// whole-block pruned count, cached so that path never scans rows.
-    /// (Pruning assumes per-record weights are stable across the session,
-    /// which the session loop's uniform weights guarantee.)
-    live: usize,
-    /// Passes since the last full refresh.
-    stale_iters: usize,
-}
-
-impl Default for BlockPruneState {
-    fn default() -> Self {
-        Self {
-            centers_prev: Matrix::zeros(0, 0),
-            delta_acc: Vec::new(),
-            d_min: Vec::new(),
-            d_min_block: f32::INFINITY,
-            um: Matrix::zeros(0, 0),
-            obj: Vec::new(),
-            best: Vec::new(),
-            margin: Vec::new(),
-            margin_block: f32::INFINITY,
-            partials: None,
-            live: 0,
-            stale_iters: 0,
-        }
-    }
-}
-
-impl BlockPruneState {
-    /// Drop every cached bound: the next pass is exact and refreshing.
-    pub fn reset(&mut self) {
-        *self = Self::default();
-    }
-
-    /// Whether any bounds are currently cached.
-    pub fn is_fresh(&self) -> bool {
-        self.partials.is_some()
-    }
-
-    /// Byte footprint for slab accounting.
-    pub fn bytes(&self) -> u64 {
-        let f32s = self.d_min.len()
-            + self.obj.len()
-            + self.margin.len()
-            + self.um.rows() * self.um.cols()
-            + self.centers_prev.rows() * self.centers_prev.cols();
-        let partials = self.partials.as_ref().map(Partials::encoded_bytes).unwrap_or(0);
-        (f32s * 4 + self.delta_acc.len() * 8 + self.best.len() * 4) as u64 + partials
-    }
-}
-
-impl SlabState for BlockPruneState {
-    fn slab_bytes(&self) -> u64 {
-        self.bytes()
-    }
-}
-
-/// Fast-FCM partials with shift-bounded pruning against `state`. Returns
-/// the partials and how many records reused their cached contribution.
-/// `tol` is the relative distance-perturbation tolerance (≤ 0 disables
-/// pruning — every pass is exact and refreshing); `refresh_every` caps
-/// passes between full refreshes, bounding pruned-vs-exact drift.
-pub fn fcm_partials_pruned(
-    x: &Matrix,
-    v: &Matrix,
-    w: &[f32],
-    m: f64,
-    state: &mut BlockPruneState,
-    tol: f64,
-    refresh_every: usize,
-) -> (Partials, usize) {
-    fcm_like_pruned(x, v, w, m, FcmFlavor::Fast, state, tol, refresh_every)
-}
-
-/// Classic-FCM partials with shift-bounded pruning (see
-/// [`fcm_partials_pruned`]).
-pub fn classic_partials_pruned(
-    x: &Matrix,
-    v: &Matrix,
-    w: &[f32],
-    m: f64,
-    state: &mut BlockPruneState,
-    tol: f64,
-    refresh_every: usize,
-) -> (Partials, usize) {
-    fcm_like_pruned(x, v, w, m, FcmFlavor::Classic, state, tol, refresh_every)
-}
-
-/// Fold the centers' movement since the previous pass into the per-center
-/// accumulated displacement; returns the largest accumulated value. Path
-/// length since the block's last full refresh upper-bounds the movement
-/// since any later per-record refresh, keeping mixed passes conservative.
-fn accumulate_shift(state: &mut BlockPruneState, v: &Matrix) -> f64 {
-    let mut worst = 0.0f64;
-    for j in 0..v.rows() {
-        let step = dist2(state.centers_prev.row(j), v.row(j)).sqrt();
-        state.delta_acc[j] += step;
-        worst = worst.max(state.delta_acc[j]);
-    }
-    state.centers_prev = v.clone();
-    worst
-}
-
-#[allow(clippy::too_many_arguments)]
-fn fcm_like_pruned(
-    x: &Matrix,
-    v: &Matrix,
-    w: &[f32],
-    m: f64,
-    flavor: FcmFlavor,
-    state: &mut BlockPruneState,
-    tol: f64,
-    refresh_every: usize,
-) -> (Partials, usize) {
-    let (n, c, d) = (x.rows(), v.rows(), v.cols());
-    debug_assert_eq!(n, w.len());
-    let refresh_every = refresh_every.max(1);
-    let usable = tol > 0.0
-        && c > 0
-        && state.partials.is_some()
-        && state.d_min.len() == n
-        && state.um.rows() == n
-        && state.um.cols() == c
-        && state.centers_prev.rows() == c
-        && state.centers_prev.cols() == d
-        && state.stale_iters < refresh_every;
-    if !usable {
-        return (fcm_like_refresh(x, v, w, m, flavor, state), 0);
-    }
-    state.stale_iters += 1;
-    let delta_max = accumulate_shift(state, v);
-    // Whole-block bound: every live record's perturbation is within
-    // tolerance — reuse the cached block partials, touching no record
-    // (O(C·d) total: the shift fold plus one partials clone).
-    if delta_max <= tol * state.d_min_block as f64 {
-        let p = state.partials.clone().expect("usable implies cached partials");
-        return (p, state.live);
-    }
-
-    // Mixed pass: records still inside their bound replay their cached
-    // contribution (no distance tile, no powf); the rest are gathered into
-    // compact tiles and recomputed exactly, refreshing their cached state.
-    let p_exp = 1.0 / (m - 1.0);
-    let m2 = m == 2.0;
-    let panel = v.transposed();
-    let tile = tile_rows_for(d, c);
-    let mut out = Partials::zeros(c, d);
-    let mut pruned = 0usize;
-    let mut d2t = vec![0.0f32; tile * c];
-    let mut d2v = vec![0.0f64; c];
-    let mut um_buf = vec![0.0f64; c];
-    let mut scratch = vec![0.0f64; c];
-    let mut batch_rows: Vec<f32> = Vec::with_capacity(tile * d);
-    let mut batch_idx: Vec<usize> = Vec::with_capacity(tile);
-    let mut d_min_block = f32::INFINITY;
-    let thr = delta_max / tol;
-    for k in 0..n {
-        if w[k] == 0.0 {
-            continue; // padding contract
-        }
-        if (state.d_min[k] as f64) >= thr {
-            let row = x.row(k);
-            let um_row = state.um.row(k);
-            for (i, &u) in um_row.iter().enumerate() {
-                out.w_acc[i] += u as f64;
-                let vrow = out.v_num.row_mut(i);
-                for (val, &xj) in vrow.iter_mut().zip(row) {
-                    *val += u * xj;
-                }
-            }
-            out.objective += state.obj[k] as f64;
-            d_min_block = d_min_block.min(state.d_min[k]);
-            pruned += 1;
-        } else {
-            batch_idx.push(k);
-            batch_rows.extend_from_slice(x.row(k));
-            if batch_idx.len() == tile {
-                fcm_flush_batch(
-                    &batch_rows,
-                    &batch_idx,
-                    d,
-                    &panel,
-                    m,
-                    p_exp,
-                    m2,
-                    flavor,
-                    w,
-                    &mut d2t,
-                    &mut d2v,
-                    &mut um_buf,
-                    &mut scratch,
-                    &mut out,
-                    state,
-                    &mut d_min_block,
-                );
-                batch_rows.clear();
-                batch_idx.clear();
-            }
-        }
-    }
-    if !batch_idx.is_empty() {
-        fcm_flush_batch(
-            &batch_rows,
-            &batch_idx,
-            d,
-            &panel,
-            m,
-            p_exp,
-            m2,
-            flavor,
-            w,
-            &mut d2t,
-            &mut d2v,
-            &mut um_buf,
-            &mut scratch,
-            &mut out,
-            state,
-            &mut d_min_block,
-        );
-    }
-    state.d_min_block = d_min_block;
-    state.partials = Some(out.clone());
-    (out, pruned)
-}
-
-/// Exact gathered pass over one batch of unpruned records: distance tile,
-/// membership reduction, accumulation — and a refresh of each record's
-/// cached `d_min`/contribution against the current centers.
-#[allow(clippy::too_many_arguments)]
-fn fcm_flush_batch(
-    rows: &[f32],
-    idx: &[usize],
-    d: usize,
-    panel: &Matrix,
-    m: f64,
-    p_exp: f64,
-    m2: bool,
-    flavor: FcmFlavor,
-    w: &[f32],
-    d2t: &mut [f32],
-    d2v: &mut [f64],
-    um: &mut [f64],
-    scratch: &mut [f64],
-    out: &mut Partials,
-    state: &mut BlockPruneState,
-    d_min_block: &mut f32,
-) {
-    let c = panel.cols();
-    let t = idx.len();
-    tile_dist2(rows, t, d, panel, &mut d2t[..t * c]);
-    for r in 0..t {
-        let k = idx[r];
-        let wk = w[k] as f64;
-        let lane = &d2t[r * c..(r + 1) * c];
-        let mut dmin = f64::INFINITY;
-        for (i, &dl) in lane.iter().enumerate() {
-            let dd = (dl as f64).max(DIST_EPS);
-            d2v[i] = dd;
-            dmin = dmin.min(dd);
-        }
-        compute_um(flavor, p_exp, m, m2, d2v, dmin, wk, um, scratch);
-        let row = &rows[r * d..(r + 1) * d];
-        let mut obj_k = 0.0f64;
-        let um_row = state.um.row_mut(k);
-        for i in 0..c {
-            let u = um[i];
-            out.w_acc[i] += u;
-            obj_k += u * d2v[i];
-            let uf = u as f32;
-            um_row[i] = uf;
-            let vrow = out.v_num.row_mut(i);
-            for (val, &xj) in vrow.iter_mut().zip(row) {
-                *val += uf * xj;
-            }
-        }
-        out.objective += obj_k;
-        state.obj[k] = obj_k as f32;
-        let de = dmin.sqrt() as f32;
-        state.d_min[k] = de;
-        *d_min_block = (*d_min_block).min(de);
-    }
-}
-
-/// Per-record u^m·w weights. Fast = the Kolen–Hutcheson normalised form,
-/// Classic = the textbook O(C²) ratio sum over hoisted powers — matching
-/// the respective exact kernels' math (and their m = 2 fast paths).
+/// Per-record u^m·w weights, matching the respective exact kernels' math
+/// (and their m = 2 fast paths).
 #[allow(clippy::too_many_arguments)]
 fn compute_um(
     flavor: FcmFlavor,
@@ -706,7 +435,19 @@ fn compute_um(
                 };
             }
         }
-        FcmFlavor::Classic => {
+        FcmFlavor::ClassicFused => {
+            let mut s = 0.0f64;
+            for i in 0..c {
+                let inv = if m2 { dmin / d2v[i] } else { (dmin / d2v[i]).powf(p_exp) };
+                scratch[i] = inv;
+                s += inv;
+            }
+            for i in 0..c {
+                let u = scratch[i] / s;
+                um[i] = if m2 { u * u * wk } else { u.powf(m) * wk };
+            }
+        }
+        FcmFlavor::ClassicPair => {
             for i in 0..c {
                 scratch[i] = if m2 { d2v[i] / dmin } else { (d2v[i] / dmin).powf(p_exp) };
             }
@@ -722,34 +463,36 @@ fn compute_um(
     }
 }
 
-/// Full exact pass that (re)builds every cached bound: the fallback for
-/// empty/mismatched state, disabled pruning, and the periodic refresh.
-fn fcm_like_refresh(
+/// Exact tiled pass that also fills [`BoundRows`] — clamped per-center
+/// squared distances, per-record contributions/assignments and objective
+/// terms — for every row, in row order. Zero-weight rows contribute
+/// nothing to the partials (their bound rows hold distances but zeroed
+/// contributions), honouring the padding contract.
+pub fn partials_with_bounds_native(
+    kernel: Kernel,
     x: &Matrix,
     v: &Matrix,
     w: &[f32],
     m: f64,
-    flavor: FcmFlavor,
-    state: &mut BlockPruneState,
+    rows: &mut BoundRows,
 ) -> Partials {
     let (n, c, d) = (x.rows(), v.rows(), v.cols());
-    state.centers_prev = v.clone();
-    state.delta_acc = vec![0.0; c];
-    state.stale_iters = 0;
-    state.d_min = vec![f32::INFINITY; n];
-    state.um = Matrix::zeros(n, c);
-    state.obj = vec![0.0; n];
-    state.best = Vec::new();
-    state.margin = Vec::new();
-    state.margin_block = f32::INFINITY;
-    state.live = w.iter().filter(|&&wk| wk != 0.0).count();
+    debug_assert_eq!(n, w.len());
+    debug_assert_eq!(rows.d2.rows(), n);
+    debug_assert_eq!(rows.d2.cols(), c);
+    debug_assert_eq!(rows.obj.len(), n);
     let mut out = Partials::zeros(c, d);
     if c == 0 {
-        state.d_min_block = f32::INFINITY;
-        state.partials = Some(out.clone());
         return out;
     }
-    let p_exp = 1.0 / (m - 1.0);
+    let kmeans = kernel.is_kmeans();
+    let flavor = match kernel {
+        Kernel::FcmFast => FcmFlavor::Fast,
+        Kernel::FcmClassic => FcmFlavor::ClassicFused,
+        Kernel::FcmClassicPair => FcmFlavor::ClassicPair,
+        Kernel::KMeans => FcmFlavor::Fast, // unused on the K-Means path
+    };
+    let p_exp = if kmeans { 0.0 } else { 1.0 / (m - 1.0) };
     let m2 = m == 2.0;
     let panel = v.transposed();
     let tile = tile_rows_for(d, c);
@@ -757,276 +500,70 @@ fn fcm_like_refresh(
     let mut d2v = vec![0.0f64; c];
     let mut um_buf = vec![0.0f64; c];
     let mut scratch = vec![0.0f64; c];
-    let mut batch_rows: Vec<f32> = Vec::with_capacity(tile * d);
-    let mut batch_idx: Vec<usize> = Vec::with_capacity(tile);
-    let mut d_min_block = f32::INFINITY;
-    for k in 0..n {
-        if w[k] == 0.0 {
-            continue; // padding contract
-        }
-        batch_idx.push(k);
-        batch_rows.extend_from_slice(x.row(k));
-        if batch_idx.len() == tile {
-            fcm_flush_batch(
-                &batch_rows,
-                &batch_idx,
-                d,
-                &panel,
-                m,
-                p_exp,
-                m2,
-                flavor,
-                w,
-                &mut d2t,
-                &mut d2v,
-                &mut um_buf,
-                &mut scratch,
-                &mut out,
-                state,
-                &mut d_min_block,
-            );
-            batch_rows.clear();
-            batch_idx.clear();
-        }
-    }
-    if !batch_idx.is_empty() {
-        fcm_flush_batch(
-            &batch_rows,
-            &batch_idx,
-            d,
-            &panel,
-            m,
-            p_exp,
-            m2,
-            flavor,
-            w,
-            &mut d2t,
-            &mut d2v,
-            &mut um_buf,
-            &mut scratch,
-            &mut out,
-            state,
-            &mut d_min_block,
-        );
-    }
-    state.d_min_block = d_min_block;
-    state.partials = Some(out.clone());
-    out
-}
-
-/// Hard K-Means partials with shift-bounded pruning: while
-/// `2·δ_max ≤ margin` the cached assignment cannot change, making the
-/// pruned `w_acc`/`v_num` contributions *exact* (only the objective term
-/// is stale, refreshed by the periodic exact pass). `tol > 0` merely
-/// enables pruning — the bound itself is absolute.
-pub fn kmeans_partials_pruned(
-    x: &Matrix,
-    v: &Matrix,
-    w: &[f32],
-    state: &mut BlockPruneState,
-    tol: f64,
-    refresh_every: usize,
-) -> (Partials, usize) {
-    let (n, c, d) = (x.rows(), v.rows(), v.cols());
-    debug_assert_eq!(n, w.len());
-    let refresh_every = refresh_every.max(1);
-    let usable = tol > 0.0
-        && c > 0
-        && state.partials.is_some()
-        && state.best.len() == n
-        && state.margin.len() == n
-        && state.obj.len() == n
-        && state.centers_prev.rows() == c
-        && state.centers_prev.cols() == d
-        && state.stale_iters < refresh_every;
-    if !usable {
-        return (kmeans_refresh(x, v, w, state), 0);
-    }
-    state.stale_iters += 1;
-    let delta_max = accumulate_shift(state, v);
-    if 2.0 * delta_max <= state.margin_block as f64 {
-        let p = state.partials.clone().expect("usable implies cached partials");
-        return (p, state.live);
-    }
-
-    let panel = v.transposed();
-    let tile = tile_rows_for(d, c);
-    let mut out = Partials::zeros(c, d);
-    let mut pruned = 0usize;
-    let mut d2t = vec![0.0f32; tile * c];
-    let mut batch_rows: Vec<f32> = Vec::with_capacity(tile * d);
-    let mut batch_idx: Vec<usize> = Vec::with_capacity(tile);
-    let mut margin_block = f32::INFINITY;
-    let two_delta = 2.0 * delta_max;
-    for k in 0..n {
-        if w[k] == 0.0 {
-            continue;
-        }
-        if two_delta <= state.margin[k] as f64 {
+    for (base, t, slab) in x.iter_row_tiles(tile) {
+        tile_dist2(slab, t, d, &panel, &mut d2t[..t * c]);
+        for r in 0..t {
+            let k = base + r;
             let wk = w[k] as f64;
-            let best = state.best[k] as usize;
-            out.w_acc[best] += wk;
-            out.objective += state.obj[k] as f64;
-            let row = x.row(k);
-            let vrow = out.v_num.row_mut(best);
-            for (j, val) in vrow.iter_mut().enumerate() {
-                *val += (wk * row[j] as f64) as f32;
-            }
-            margin_block = margin_block.min(state.margin[k]);
-            pruned += 1;
-        } else {
-            batch_idx.push(k);
-            batch_rows.extend_from_slice(x.row(k));
-            if batch_idx.len() == tile {
-                kmeans_flush_batch(
-                    &batch_rows,
-                    &batch_idx,
-                    d,
-                    &panel,
-                    w,
-                    &mut d2t,
-                    &mut out,
-                    state,
-                    &mut margin_block,
-                );
-                batch_rows.clear();
-                batch_idx.clear();
-            }
-        }
-    }
-    if !batch_idx.is_empty() {
-        kmeans_flush_batch(
-            &batch_rows,
-            &batch_idx,
-            d,
-            &panel,
-            w,
-            &mut d2t,
-            &mut out,
-            state,
-            &mut margin_block,
-        );
-    }
-    state.margin_block = margin_block;
-    state.partials = Some(out.clone());
-    (out, pruned)
-}
-
-/// Exact gathered K-Means batch: argmin + runner-up margin per record,
-/// refreshing the cached assignment bounds.
-#[allow(clippy::too_many_arguments)]
-fn kmeans_flush_batch(
-    rows: &[f32],
-    idx: &[usize],
-    d: usize,
-    panel: &Matrix,
-    w: &[f32],
-    d2t: &mut [f32],
-    out: &mut Partials,
-    state: &mut BlockPruneState,
-    margin_block: &mut f32,
-) {
-    let c = panel.cols();
-    let t = idx.len();
-    tile_dist2(rows, t, d, panel, &mut d2t[..t * c]);
-    for r in 0..t {
-        let k = idx[r];
-        let wk = w[k] as f64;
-        let lane = &d2t[r * c..(r + 1) * c];
-        let mut best = 0usize;
-        let mut best_d = f64::INFINITY;
-        let mut second_d = f64::INFINITY;
-        for (i, &dl) in lane.iter().enumerate() {
-            let dd = (dl as f64).max(DIST_EPS);
-            if dd < best_d {
-                second_d = best_d;
-                best_d = dd;
-                best = i;
-            } else if dd < second_d {
-                second_d = dd;
+            let lane = &d2t[r * c..(r + 1) * c];
+            let row = &slab[r * d..(r + 1) * d];
+            let d2row = rows.d2.row_mut(k);
+            if kmeans {
+                let mut best = 0usize;
+                let mut best_d = f64::INFINITY;
+                for (i, &dl) in lane.iter().enumerate() {
+                    let dd = (dl as f64).max(DIST_EPS);
+                    d2row[i] = dd as f32;
+                    if dd < best_d {
+                        best_d = dd;
+                        best = i;
+                    }
+                }
+                rows.best[k] = best as u32;
+                if wk == 0.0 {
+                    rows.obj[k] = 0.0;
+                    continue;
+                }
+                out.w_acc[best] += wk;
+                let obj_k = wk * best_d;
+                out.objective += obj_k;
+                rows.obj[k] = obj_k as f32;
+                let vrow = out.v_num.row_mut(best);
+                for (j, val) in vrow.iter_mut().enumerate() {
+                    *val += (wk * row[j] as f64) as f32;
+                }
+            } else {
+                let mut dmin = f64::INFINITY;
+                for (i, &dl) in lane.iter().enumerate() {
+                    let dd = (dl as f64).max(DIST_EPS);
+                    d2v[i] = dd;
+                    d2row[i] = dd as f32;
+                    dmin = dmin.min(dd);
+                }
+                let um_row = rows.um.row_mut(k);
+                if wk == 0.0 {
+                    rows.obj[k] = 0.0;
+                    um_row.fill(0.0);
+                    continue;
+                }
+                compute_um(flavor, p_exp, m, m2, &d2v, dmin, wk, &mut um_buf, &mut scratch);
+                let mut obj_k = 0.0f64;
+                for i in 0..c {
+                    let u = um_buf[i];
+                    out.w_acc[i] += u;
+                    obj_k += u * d2v[i];
+                    let uf = u as f32;
+                    um_row[i] = uf;
+                    let vrow = out.v_num.row_mut(i);
+                    for (val, &xj) in vrow.iter_mut().zip(row) {
+                        *val += uf * xj;
+                    }
+                }
+                out.objective += obj_k;
+                rows.obj[k] = obj_k as f32;
             }
         }
-        out.w_acc[best] += wk;
-        out.objective += wk * best_d;
-        let row = &rows[r * d..(r + 1) * d];
-        let vrow = out.v_num.row_mut(best);
-        for (j, val) in vrow.iter_mut().enumerate() {
-            *val += (wk * row[j] as f64) as f32;
-        }
-        state.best[k] = best as u32;
-        let margin = if second_d.is_finite() {
-            (second_d.sqrt() - best_d.sqrt()) as f32
-        } else {
-            f32::INFINITY // C = 1: the assignment can never change
-        };
-        state.margin[k] = margin;
-        state.obj[k] = (wk * best_d) as f32;
-        *margin_block = (*margin_block).min(margin);
     }
-}
-
-/// Full exact K-Means pass that (re)builds every cached assignment bound.
-fn kmeans_refresh(x: &Matrix, v: &Matrix, w: &[f32], state: &mut BlockPruneState) -> Partials {
-    let (n, c, d) = (x.rows(), v.rows(), v.cols());
-    state.centers_prev = v.clone();
-    state.delta_acc = vec![0.0; c];
-    state.stale_iters = 0;
-    state.d_min = Vec::new();
-    state.d_min_block = f32::INFINITY;
-    state.um = Matrix::zeros(0, 0);
-    state.obj = vec![0.0; n];
-    state.best = vec![0; n];
-    state.margin = vec![f32::INFINITY; n];
-    state.live = w.iter().filter(|&&wk| wk != 0.0).count();
-    let mut out = Partials::zeros(c, d);
-    if c == 0 {
-        state.margin_block = f32::INFINITY;
-        state.partials = Some(out.clone());
-        return out;
-    }
-    let panel = v.transposed();
-    let tile = tile_rows_for(d, c);
-    let mut d2t = vec![0.0f32; tile * c];
-    let mut batch_rows: Vec<f32> = Vec::with_capacity(tile * d);
-    let mut batch_idx: Vec<usize> = Vec::with_capacity(tile);
-    let mut margin_block = f32::INFINITY;
-    for k in 0..n {
-        if w[k] == 0.0 {
-            continue;
-        }
-        batch_idx.push(k);
-        batch_rows.extend_from_slice(x.row(k));
-        if batch_idx.len() == tile {
-            kmeans_flush_batch(
-                &batch_rows,
-                &batch_idx,
-                d,
-                &panel,
-                w,
-                &mut d2t,
-                &mut out,
-                state,
-                &mut margin_block,
-            );
-            batch_rows.clear();
-            batch_idx.clear();
-        }
-    }
-    if !batch_idx.is_empty() {
-        kmeans_flush_batch(
-            &batch_rows,
-            &batch_idx,
-            d,
-            &panel,
-            w,
-            &mut d2t,
-            &mut out,
-            state,
-            &mut margin_block,
-        );
-    }
-    state.margin_block = margin_block;
-    state.partials = Some(out.clone());
     out
 }
 
@@ -1419,148 +956,66 @@ mod tests {
     }
 
     #[test]
-    fn pruned_first_pass_is_exact_refresh() {
-        let (x, v, w) = rand_case(120, 5, 4, 41);
-        for m in [1.4, 2.0] {
-            let mut state = BlockPruneState::default();
-            let (p, pruned) = fcm_partials_pruned(&x, &v, &w, m, &mut state, 1e-2, 4);
-            assert_eq!(pruned, 0, "first pass must refresh, not prune");
-            assert!(state.is_fresh());
-            let exact = fcm_partials_native(&x, &v, &w, m);
-            for (a, b) in p.w_acc.iter().zip(&exact.w_acc) {
-                assert!((a - b).abs() <= 1e-6 + 1e-4 * b.abs(), "m={m}: {a} vs {b}");
+    fn fused_classic_matches_pair_loop() {
+        // The fused O(C) path is algebraically the textbook membership;
+        // the pair loop stays as its oracle.
+        let (x, v, w) = rand_case(150, 5, 4, 51);
+        for m in [1.2, 2.0, 2.8] {
+            let a = classic_partials_fused(&x, &v, &w, m);
+            let b = classic_partials_native(&x, &v, &w, m);
+            for (p, q) in a.w_acc.iter().zip(&b.w_acc) {
+                assert!((p - q).abs() <= 1e-6 + 1e-4 * q.abs(), "m={m}: {p} vs {q}");
             }
-            let rel = (p.objective - exact.objective).abs() / exact.objective.max(1e-9);
+            for (p, q) in a.v_num.as_slice().iter().zip(b.v_num.as_slice()) {
+                assert!((p - q).abs() <= 1e-3 + 1e-4 * q.abs(), "m={m}: vnum {p} vs {q}");
+            }
+            let rel = (a.objective - b.objective).abs() / b.objective.max(1e-9);
             assert!(rel < 1e-4, "m={m}: objective rel {rel}");
         }
     }
 
     #[test]
-    fn unmoved_centers_prune_whole_block() {
-        let (x, v, w) = rand_case(100, 4, 3, 42);
-        let mut state = BlockPruneState::default();
-        let (first, _) = fcm_partials_pruned(&x, &v, &w, 2.0, &mut state, 1e-2, 8);
-        // Same centers again: zero shift → whole block served from cache.
-        let (second, pruned) = fcm_partials_pruned(&x, &v, &w, 2.0, &mut state, 1e-2, 8);
-        assert_eq!(pruned, 100);
-        assert_eq!(first.w_acc, second.w_acc);
-        assert_eq!(first.v_num.as_slice(), second.v_num.as_slice());
-        assert_eq!(first.objective, second.objective);
-    }
-
-    #[test]
-    fn refresh_cap_forces_exact_pass() {
-        let (x, v, w) = rand_case(80, 3, 3, 43);
-        let mut state = BlockPruneState::default();
-        fcm_partials_pruned(&x, &v, &w, 2.0, &mut state, 1e-2, 2);
-        let (_, p1) = fcm_partials_pruned(&x, &v, &w, 2.0, &mut state, 1e-2, 2);
-        assert_eq!(p1, 80, "within the cap the unmoved block prunes");
-        let (_, p2) = fcm_partials_pruned(&x, &v, &w, 2.0, &mut state, 1e-2, 2);
-        assert_eq!(p2, 80);
-        // stale_iters hit the cap: next pass must be a refresh.
-        let (_, p3) = fcm_partials_pruned(&x, &v, &w, 2.0, &mut state, 1e-2, 2);
-        assert_eq!(p3, 0, "refresh_every must force an exact pass");
-    }
-
-    #[test]
-    fn zero_tolerance_disables_pruning() {
-        let (x, v, w) = rand_case(64, 3, 3, 44);
-        let mut state = BlockPruneState::default();
-        for _ in 0..3 {
-            let (_, pruned) = fcm_partials_pruned(&x, &v, &w, 2.0, &mut state, 0.0, 4);
-            assert_eq!(pruned, 0);
-        }
-    }
-
-    #[test]
-    fn small_shift_prunes_and_stays_close_to_exact() {
-        // Well-separated blobs → comfortable d_min; a tiny center nudge
-        // must prune most records while the pruned partials stay within
-        // the membership-perturbation bound of the exact ones.
-        let data = crate::data::synth::blobs(400, 3, 3, 0.2, 45);
-        let x = &data.features;
-        let w = vec![1.0f32; 400];
-        let mut v = Matrix::zeros(3, 3);
-        for i in 0..3 {
-            v.row_mut(i).copy_from_slice(x.row(i * 133));
-        }
-        let mut state = BlockPruneState::default();
-        let tol = 1e-2;
-        fcm_partials_pruned(x, &v, &w, 2.0, &mut state, tol, 8);
-        // Nudge every center by a displacement far below tol × d_min.
-        let mut v2 = v.clone();
-        for val in v2.as_mut_slice().iter_mut() {
-            *val += 1e-5;
-        }
-        let (pruned_p, pruned_n) = fcm_partials_pruned(x, &v2, &w, 2.0, &mut state, tol, 8);
-        assert!(pruned_n > 300, "tiny shift should prune most records, got {pruned_n}");
-        let exact = fcm_partials_native(x, &v2, &w, 2.0);
-        for (a, b) in pruned_p.w_acc.iter().zip(&exact.w_acc) {
-            let rel = (a - b).abs() / b.abs().max(1e-9);
-            assert!(rel < 10.0 * tol, "pruned w_acc drift {rel} vs {b}");
-        }
-        let rel = (pruned_p.objective - exact.objective).abs() / exact.objective.max(1e-9);
-        assert!(rel < 10.0 * tol, "pruned objective drift {rel}");
-    }
-
-    #[test]
-    fn classic_pruned_matches_classic_exact_on_refresh() {
-        let (x, v, w) = rand_case(90, 4, 4, 46);
-        for m in [1.3, 2.0] {
-            let mut state = BlockPruneState::default();
-            let (p, pruned) = classic_partials_pruned(&x, &v, &w, m, &mut state, 1e-2, 4);
-            assert_eq!(pruned, 0);
-            let exact = classic_partials_native(&x, &v, &w, m);
-            for (a, b) in p.w_acc.iter().zip(&exact.w_acc) {
-                assert!((a - b).abs() <= 1e-6 + 1e-4 * b.abs(), "m={m}: {a} vs {b}");
+    fn bounds_pass_partials_match_exact_kernels() {
+        use crate::fcm::backend::BoundRows;
+        let (x, v, w) = rand_case(97, 4, 5, 52);
+        for (kernel, m) in [
+            (Kernel::FcmFast, 2.0),
+            (Kernel::FcmFast, 1.7),
+            (Kernel::FcmClassic, 2.0),
+            (Kernel::FcmClassicPair, 2.3),
+            (Kernel::KMeans, 0.0),
+        ] {
+            let mut rows = BoundRows::for_kernel(kernel, x.rows(), v.rows());
+            let a = partials_with_bounds_native(kernel, &x, &v, &w, m, &mut rows);
+            let b = NativeBackend.exact_partials(kernel, &x, &v, &w, m).unwrap();
+            for (p, q) in a.w_acc.iter().zip(&b.w_acc) {
+                assert!((p - q).abs() <= 1e-9 + 1e-7 * q.abs(), "{kernel:?}: {p} vs {q}");
+            }
+            let rel = (a.objective - b.objective).abs() / b.objective.max(1e-9);
+            assert!(rel < 1e-6, "{kernel:?}: objective rel {rel}");
+            // Every bound row carries the clamped distances the kernel used.
+            for k in 0..x.rows() {
+                for (i, &d2) in rows.d2.row(k).iter().enumerate() {
+                    assert!(d2 > 0.0, "{kernel:?}: unclamped d2 at ({k},{i})");
+                }
             }
         }
     }
 
     #[test]
-    fn kmeans_pruned_center_update_is_exact_under_small_shift() {
-        // Separated clusters: small center movement cannot flip any
-        // assignment, so pruned w_acc / v_num must equal the exact pass
-        // bit-for-bit (only the objective may lag).
-        let (c, d, n) = (3usize, 4usize, 300usize);
-        let mut rng = Pcg::new(47);
-        let mut v = Matrix::zeros(c, d);
-        for i in 0..c {
-            v.set(i, i % d, 10.0 * (i as f32 + 1.0));
+    fn bounds_pass_zero_weight_rows_contribute_nothing() {
+        use crate::fcm::backend::BoundRows;
+        let (x, v, mut w) = rand_case(64, 3, 3, 53);
+        for wk in w.iter_mut().skip(40) {
+            *wk = 0.0;
         }
-        let mut x = Matrix::zeros(n, d);
-        for k in 0..n {
-            let home = k % c;
-            for j in 0..d {
-                x.set(k, j, v.get(home, j) + (rng.normal() * 0.2) as f32);
-            }
+        let mut rows = BoundRows::for_kernel(Kernel::FcmFast, 64, 3);
+        let a = partials_with_bounds_native(Kernel::FcmFast, &x, &v, &w, 2.0, &mut rows);
+        let b = fcm_partials_native(&x, &v, &w, 2.0);
+        assert_eq!(a.w_acc, b.w_acc);
+        for k in 40..64 {
+            assert_eq!(rows.obj[k], 0.0);
+            assert!(rows.um.row(k).iter().all(|&u| u == 0.0));
         }
-        let w = vec![1.0f32; n];
-        let mut state = BlockPruneState::default();
-        kmeans_partials_pruned(&x, &v, &w, &mut state, 1e-2, 8);
-        let mut v2 = v.clone();
-        for val in v2.as_mut_slice().iter_mut() {
-            *val += 0.01;
-        }
-        let (pruned_p, pruned_n) = kmeans_partials_pruned(&x, &v2, &w, &mut state, 1e-2, 8);
-        assert!(pruned_n > 0, "margin test should prune on separated data");
-        let exact = kmeans_partials_native(&x, &v2, &w);
-        assert_eq!(pruned_p.w_acc, exact.w_acc, "pruned K-Means masses must be exact");
-        for (a, b) in pruned_p.v_num.as_slice().iter().zip(exact.v_num.as_slice()) {
-            assert!((a - b).abs() <= 1e-4 + 1e-5 * b.abs(), "{a} vs {b}");
-        }
-    }
-
-    #[test]
-    fn pruned_state_tracks_bytes() {
-        let (x, v, w) = rand_case(50, 3, 4, 48);
-        let mut state = BlockPruneState::default();
-        assert_eq!(state.bytes(), 0);
-        fcm_partials_pruned(&x, &v, &w, 2.0, &mut state, 1e-2, 4);
-        // d_min + obj (n each) + um (n×C) + centers + partials, in bytes.
-        assert!(state.bytes() > (50 * (4 + 4) + 50 * 4 * 4) as u64);
-        state.reset();
-        assert_eq!(state.bytes(), 0);
-        assert!(!state.is_fresh());
     }
 }

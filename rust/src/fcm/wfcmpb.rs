@@ -10,7 +10,7 @@
 use crate::data::Matrix;
 use crate::error::{Error, Result};
 use crate::fcm::loops::{run_fcm, FcmParams};
-use crate::fcm::{ChunkBackend, ClusterResult};
+use crate::fcm::{KernelBackend, ClusterResult};
 
 /// Outcome of a WFCMPB run: final merged centers/weights plus per-block
 /// iteration counts (telemetry for the Flag race).
@@ -26,7 +26,7 @@ pub struct WfcmpbResult {
 /// * `block_size` — records per block S_i (from the sampling formula).
 /// * `v_init` — C_intermediate seeds for the first block.
 pub fn wfcmpb(
-    backend: &dyn ChunkBackend,
+    backend: &dyn KernelBackend,
     x: &Matrix,
     v_init: Matrix,
     block_size: usize,

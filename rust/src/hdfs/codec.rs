@@ -12,7 +12,11 @@ use crate::error::{Error, Result};
 
 const MAGIC: &[u8; 8] = b"BFCMBLK1";
 
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// FNV-1a over a byte payload — the checksum discipline every on-disk
+/// artifact of this crate uses (block files here, slab spill images in
+/// `crate::fcm::backend`), so corruption fails loudly instead of feeding
+/// silently wrong numbers back into the math.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for &b in bytes {
         h ^= b as u64;

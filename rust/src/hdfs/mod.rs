@@ -10,7 +10,7 @@
 
 mod codec;
 
-pub use codec::{read_block_file, write_block_file};
+pub use codec::{fnv1a, read_block_file, write_block_file};
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -278,6 +278,15 @@ impl BlockStoreWriter {
             storage: Storage::Disk { dir: self.dir },
         })
     }
+}
+
+/// Slot path of `block` in a spill-ring directory — the on-disk layout of
+/// the session slab's state ring ([`crate::mapreduce::StateSlab`]): one
+/// slot file per block id, overwritten in place on re-spill, the same
+/// block-file-per-id discipline [`BlockStoreWriter`] uses for record
+/// blocks, applied to opaque state images.
+pub fn spill_slot_path(dir: &std::path::Path, block: usize) -> PathBuf {
+    dir.join(format!("slab_{block:06}.sbin"))
 }
 
 fn shard(

@@ -15,12 +15,13 @@ use std::sync::Arc;
 use bigfcm::baselines::{run_baseline, BaselineAlgo};
 use bigfcm::bench::tables::{run_by_id, Ctx};
 use bigfcm::bench::Scale;
-use bigfcm::config::Config;
+use bigfcm::config::{BoundModel, Config};
 use bigfcm::coordinator::BigFcm;
 use bigfcm::data::{builtin, csv};
-use bigfcm::fcm::{assign_hard, ChunkBackend};
+use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo, Variant};
+use bigfcm::fcm::{assign_hard, KernelBackend};
 use bigfcm::hdfs::BlockStore;
-use bigfcm::mapreduce::{Engine, EngineOptions};
+use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions, MIB};
 use bigfcm::metrics::confusion_accuracy;
 use bigfcm::runtime::ResolvedBackend;
 use bigfcm::telemetry::human_duration;
@@ -103,7 +104,7 @@ fn load_config(args: &Args) -> CliResult<Config> {
     Ok(cfg)
 }
 
-fn backend_of(cfg: &Config) -> CliResult<Arc<dyn ChunkBackend>> {
+fn backend_of(cfg: &Config) -> CliResult<Arc<dyn KernelBackend>> {
     Ok(Arc::new(ResolvedBackend::from_config(cfg)?))
 }
 
@@ -209,6 +210,121 @@ fn cmd_baseline(args: &Args) -> CliResult<()> {
     Ok(())
 }
 
+/// `bigfcm session`: the iteration-resident convergence loop (one engine
+/// session spanning every iteration — warm cache/pool/prefetcher, sticky
+/// pruning slab, worker-side tree combine), printing the per-iteration
+/// JobStats session counters.
+fn cmd_session(args: &Args) -> CliResult<()> {
+    let mut cfg = load_config(args)?;
+    let name = args.get_or("dataset", "susy");
+    let n: usize = args.get_or("records", "50000").parse()?;
+    let c: usize = args.get_or("clusters", "2").parse()?;
+    cfg.fcm.clusters = c;
+    let m: f64 = args.get_or("fuzzifier", "2.0").parse()?;
+    let eps: f64 = args.get_or("epsilon", &cfg.fcm.epsilon.to_string()).parse()?;
+    let iters: usize = args.get_or("iters", "50").parse()?;
+    let algo = match args.get_or("algo", "fcm").as_str() {
+        "fcm" => SessionAlgo::Fcm,
+        "km" | "kmeans" => SessionAlgo::KMeans,
+        other => bail!("unknown session algo `{other}` (fcm|kmeans)"),
+    };
+    let variant = match args.get_or("variant", "fast").as_str() {
+        "fast" => Variant::Fast,
+        "classic" => Variant::Classic,
+        other => bail!("unknown variant `{other}` (fast|classic)"),
+    };
+    let mut prune = PruneConfig::from_cluster(&cfg.cluster);
+    match args.get_or("bounds", cfg.cluster.bounds.as_str()).as_str() {
+        "off" => prune.enabled = false,
+        b => prune.bounds = BoundModel::parse(b)?,
+    }
+    if let Some(t) = args.get("tolerance") {
+        prune.tolerance = t.parse()?;
+    }
+    if let Some(s) = args.get("slab-mib") {
+        prune.slab_bytes = s.parse::<u64>()? * MIB;
+    }
+    if let Some(dir) = args.get("spill-dir") {
+        prune.spill_dir = Some(std::path::PathBuf::from(dir));
+    }
+
+    let dataset = builtin::by_name(&name, n, cfg.seed)
+        .ok_or_else(|| format!("unknown dataset `{name}`"))?;
+    let backend = backend_of(&cfg)?;
+    let store = Arc::new(BlockStore::in_memory(
+        dataset.name.clone(),
+        &dataset.features,
+        cfg.cluster.block_records,
+        cfg.cluster.workers,
+    )?);
+    let mut engine = Engine::new(EngineOptions::from_cluster(&cfg.cluster), cfg.overhead.clone());
+    let mut rng = bigfcm::prng::Pcg::new(cfg.seed);
+    let sample = store.sample_records(c.max(2) * 8, &mut rng)?;
+    let v0 = bigfcm::fcm::seeding::random_records(&sample, c, &mut rng);
+    let params = FcmParams { m, epsilon: eps, max_iterations: iters, variant };
+
+    println!(
+        "session: dataset={} records={} C={c} m={m} eps={eps:.0e} algo={algo:?} \
+         variant={variant:?} bounds={} slab={} MiB spill={} backend={}",
+        dataset.name,
+        dataset.rows(),
+        if prune.enabled { prune.bounds.as_str() } else { "off" },
+        prune.slab_bytes / MIB,
+        prune
+            .spill_dir
+            .as_ref()
+            .map(|d| d.display().to_string())
+            .unwrap_or_else(|| "off".into()),
+        backend.name(),
+    );
+    let run = run_fcm_session(
+        &mut engine,
+        &store,
+        backend,
+        algo,
+        v0,
+        &params,
+        &prune,
+        SessionOptions::default(),
+    )?;
+    for (i, s) in run.per_iteration.iter().enumerate() {
+        println!(
+            "  iter {:>3}: pruned {:>8}, reduce parts {:>3} (depth {}), slab {:>7.2} MiB, \
+             evictions {:>4}, spilled {:>7.2} MiB, reloads {:>4}",
+            i + 1,
+            s.records_pruned,
+            s.reduce_parts,
+            s.combine_depth,
+            s.slab_bytes as f64 / MIB as f64,
+            s.slab_evictions,
+            s.slab_spilled_bytes as f64 / MIB as f64,
+            s.slab_reloads,
+        );
+    }
+    println!(
+        "{} iterations ({} engine jobs), converged={}, objective {:.6e}",
+        run.result.iterations, run.jobs, run.result.converged, run.result.objective
+    );
+    println!(
+        "session counters: records_pruned {}, slab_spilled_bytes {}, slab_reloads {}, \
+         peak resident {:.1} MiB",
+        run.records_pruned,
+        run.slab_spilled_bytes,
+        run.slab_reloads,
+        run.peak_resident_bytes as f64 / MIB as f64,
+    );
+    println!(
+        "modelled {} (startup {:.1}s + launch {:.1}s + io {:.1}s + shuffle {:.1}s + compute {:.1}s)",
+        human_duration(std::time::Duration::from_secs_f64(run.sim.total_s())),
+        run.sim.job_startup_s,
+        run.sim.task_launch_s,
+        run.sim.hdfs_io_s,
+        run.sim.shuffle_s,
+        run.sim.compute_s,
+    );
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> CliResult<()> {
     let cfg = load_config(args)?;
     let exp = args.get_or("exp", "all");
@@ -262,20 +378,24 @@ fn main() -> CliResult<()> {
     match args.sub.as_str() {
         "run" => cmd_run(&args),
         "baseline" => cmd_baseline(&args),
+        "session" => cmd_session(&args),
         "bench" => cmd_bench(&args),
         "gen" => cmd_gen(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             println!(
-                "usage: bigfcm <run|baseline|bench|gen|info> [--flags]\n\
+                "usage: bigfcm <run|baseline|session|bench|gen|info> [--flags]\n\
                  \n\
                  run       run BigFCM on a dataset (--dataset --records --clusters --epsilon)\n\
                  baseline  run a Mahout-style baseline (--algo km|fkm ...)\n\
+                 session   iteration-resident convergence loop (--iters N --bounds dmin|elkan|off\n\
+                 \u{20}         --algo fcm|kmeans --variant fast|classic --slab-mib N --spill-dir PATH\n\
+                 \u{20}         --tolerance T) printing the per-iteration session counters\n\
                  bench     regenerate paper tables (--exp table2..table8|ablations|all [--full])\n\
                  gen       write a synthetic dataset to CSV (--dataset --records --out)\n\
                  info      show config + artifact registry\n\
                  \n\
-                 common:   --config file.toml --set sec.key=val --backend native|pjrt|auto\n\
+                 common:   --config file.toml --set sec.key=val --backend native|pjrt|auto|shim\n\
                  \u{20}         --artifacts DIR --seed N"
             );
             Ok(())

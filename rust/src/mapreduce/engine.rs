@@ -142,6 +142,12 @@ pub struct JobStats {
     /// Sticky-slab evictions observed so far in the session (session runs
     /// only).
     pub slab_evictions: u64,
+    /// Bytes written to the slab's disk spill ring so far in the session
+    /// (session runs only; 0 when spilling is off).
+    pub slab_spilled_bytes: u64,
+    /// State reloads served from the slab's spill ring so far in the
+    /// session (session runs only).
+    pub slab_reloads: u64,
     /// Real seconds of the reduce phase. Tree-combined jobs fold most
     /// merge work into the map slots, so this drops from O(blocks) worth
     /// of merging to O(parts).
@@ -427,7 +433,7 @@ impl Engine {
         let reduce_parts = outs.len();
 
         // Reduce phase (single reducer, as the paper's default).
-        let reduce_ctx = TaskCtx { cache: &cache, task_id: usize::MAX, attempt: 0 };
+        let reduce_ctx = TaskCtx { cache: &cache, task_id: usize::MAX, attempt: 0, doomed: false };
         let t0 = Instant::now();
         let output = job.reduce(outs, &reduce_ctx)?;
         let reduce_wall_s = t0.elapsed().as_secs_f64();
@@ -477,6 +483,8 @@ impl Engine {
             records_pruned: 0,
             slab_bytes: 0,
             slab_evictions: 0,
+            slab_spilled_bytes: 0,
+            slab_reloads: 0,
             reduce_wall_s,
             combine_wall_s,
             combine_depth,
@@ -543,7 +551,7 @@ fn run_map_task<J: MapReduceJob>(
     };
     let mut attempt = 0usize;
     loop {
-        let ctx = TaskCtx { cache, task_id: id, attempt };
+        let ctx = TaskCtx { cache, task_id: id, attempt, doomed: attempt < fails };
         let t0 = Instant::now();
         let out = job.map_combine(block.data(), &ctx);
         let compute_wall_s = t0.elapsed().as_secs_f64();

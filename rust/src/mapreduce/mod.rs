@@ -31,7 +31,9 @@
 //!   every iteration of a convergence loop: one job-startup charge, warm
 //!   pool/cache/prefetcher across iterations, and a byte-accounted sticky
 //!   [`session::StateSlab`] where kernels persist per-block derived state
-//!   (the pruning bounds of `crate::fcm::native`) between iterations.
+//!   (the pruning bounds of `crate::fcm::backend`) between iterations —
+//!   spilling cold state to a disk ring instead of evicting it when a
+//!   [`session::SpillConfig`] is set.
 
 pub mod cache;
 pub mod engine;
@@ -40,7 +42,7 @@ pub mod simclock;
 
 pub use cache::{BlockCache, CachedBlock, DistributedCache, ReadSource, MIB};
 pub use engine::{Engine, EngineOptions, JobRunCfg, JobStats};
-pub use session::{IterativeSession, SessionOptions, SlabState, StateSlab};
+pub use session::{IterativeSession, SessionOptions, SlabState, SpillConfig, StateSlab};
 pub use simclock::{SimClock, SimCost};
 
 use crate::data::Matrix;
@@ -54,6 +56,12 @@ pub struct TaskCtx<'a> {
     pub task_id: usize,
     /// Attempt number (0 = first attempt).
     pub attempt: usize,
+    /// This attempt's output will be discarded by the engine's modelled
+    /// fault injection and the task re-executed. Jobs with side-band
+    /// state or counters (the session's sticky slab and `records_pruned`)
+    /// use this to keep doomed attempts from polluting them; the attempt
+    /// still runs and is still charged, like a real failed task.
+    pub doomed: bool,
 }
 
 /// A MapReduce job. `map_combine` is the fused map+combiner the paper runs

@@ -10,23 +10,43 @@
 //! of one loop, charges the modelled job startup once, and gives kernels a
 //! **sticky per-block state slab** ([`StateSlab`]) — keyed by block id,
 //! byte-accounted against its own budget — where derived state (the
-//! shift-bounded pruning bounds of `crate::fcm::native`) persists between
+//! shift-bounded pruning bounds of `crate::fcm::backend`) persists between
 //! iterations.
 //!
 //! The slab deliberately lives *outside* the block cache: per-job cache
 //! meter resets ([`crate::mapreduce::BlockCache::reset_job_meters`]) and
 //! even a full block `clear()` can never invalidate bounds the pruning
-//! path still holds. Slab lifetime is the session's, ended only by its own byte
-//! budget (LRU eviction, surfaced as `slab_evictions`) or an explicit
-//! [`StateSlab::invalidate_all`].
+//! path still holds. Slab lifetime is the session's, ended only by its own
+//! byte budget or an explicit [`StateSlab::invalidate_all`].
+//!
+//! ## The disk spill ring
+//!
+//! Under budget pressure a slab with a [`SpillConfig`] does not evict cold
+//! state — it **spills** it to a disk ring (one slot file per block,
+//! overwritten in place, removed when the slab drops) through the state's
+//! bitwise [`SlabState::spill`]/[`SlabState::unspill`] codec, and reloads
+//! it on the block's next touch. Eviction forces the next pass to
+//! recompute the bounds exactly (a full kernel pass over the block);
+//! rereading costs only the state's own bytes at disk rate — so the slab
+//! applies a modelled recompute-vs-reread crossover
+//! ([`SpillConfig::max_recompute_ratio`] × [`SlabState::recompute_bytes`])
+//! and falls back to eviction for states too large to be worth the round
+//! trip. Spill writes and reloads are metered
+//! ([`StateSlab::spilled_bytes`], [`StateSlab::reloads`]) and charged to
+//! the modelled clock by the session loop, surfacing in
+//! [`crate::mapreduce::JobStats::slab_spilled_bytes`] /
+//! [`crate::mapreduce::JobStats::slab_reloads`]. Because the codec is
+//! bitwise, a spill/reload round trip never changes results — pinned by
+//! `rust/tests/integration_streaming.rs`.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::error::Result;
-use crate::hdfs::BlockStore;
+use crate::hdfs::{spill_slot_path as slot_path, BlockStore};
 use crate::mapreduce::engine::{Engine, JobRunCfg, JobStats};
 use crate::mapreduce::{DistributedCache, MapReduceJob};
 
@@ -62,11 +82,55 @@ impl SessionOptions {
 pub trait SlabState: Send {
     /// Bytes this state is accounted at against the slab budget.
     fn slab_bytes(&self) -> u64;
+
+    /// Modelled bytes an exact recompute of this state would re-read (the
+    /// block payload) — the reread-vs-recompute crossover input of the
+    /// slab's spill policy. 0 (the default) means unknown: always worth
+    /// spilling.
+    fn recompute_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Bitwise serialisation for the slab's disk ring. `None` (the
+    /// default) marks the state unspillable — budget pressure then evicts
+    /// it, exactly the pre-spill behaviour.
+    fn spill(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Restore from a spilled image; `None` on a corrupt or foreign image
+    /// (the slab then starts the block from an empty state).
+    fn unspill(bytes: &[u8]) -> Option<Self>
+    where
+        Self: Sized,
+    {
+        let _ = bytes;
+        None
+    }
 }
 
 impl SlabState for () {
     fn slab_bytes(&self) -> u64 {
         0
+    }
+}
+
+/// Disk ring configuration of a [`StateSlab`] (see the module docs).
+#[derive(Clone, Debug)]
+pub struct SpillConfig {
+    /// Ring directory — created on first spill; one slot file per block,
+    /// overwritten in place on re-spill, removed when the slab drops.
+    pub dir: PathBuf,
+    /// Spill while `slab_bytes ≤ ratio × recompute_bytes`; colder states
+    /// (larger than a few block payloads) evict and recompute instead.
+    /// Rereading also saves the recompute's kernel time, which is why the
+    /// crossover sits above 1.
+    pub max_recompute_ratio: f64,
+}
+
+impl SpillConfig {
+    pub fn new(dir: PathBuf) -> Self {
+        Self { dir, max_recompute_ratio: 4.0 }
     }
 }
 
@@ -76,100 +140,371 @@ struct SlabEntry<S> {
     last_touch: u64,
 }
 
+/// One block's place in the spill ring.
+enum SpillSlot<S> {
+    /// Staged: the state itself is still live behind this Arc while the
+    /// flusher encodes and writes it — so a reload in that window simply
+    /// re-adopts the state (trivially bitwise, no I/O), and neither the
+    /// encode nor the write ever runs under the slab's inner lock. `gen`
+    /// lets the flusher detect that the slot was adopted or re-spilled
+    /// since staging and stand down.
+    InFlight { state: Arc<Mutex<S>>, gen: u64 },
+    /// Image fully written to the ring slot (the write was verified
+    /// still-current before the transition, so the file is exactly the
+    /// latest image).
+    OnDisk,
+}
+
 struct SlabInner<S> {
     entries: HashMap<usize, SlabEntry<S>>,
     bytes: u64,
     tick: u64,
+    /// Monotonic spill-staging counter (the `InFlight` generation source).
+    spill_gen: u64,
+    /// Blocks with state in the ring (staged or written).
+    spilled: HashMap<usize, SpillSlot<S>>,
+    /// Every slot path ever written (removed when the slab drops).
+    spill_paths: HashMap<usize, PathBuf>,
 }
+
+/// A state staged for an off-lock ring write: `(block, generation, state)`.
+type StagedSpill<S> = (usize, u64, Arc<Mutex<S>>);
 
 /// Sticky per-block state, keyed by block id and byte-accounted against a
 /// budget of its own (configured via `cluster.slab_mib`). The global lock
-/// covers only lookup/accounting; each block's state sits behind its own
-/// mutex, so map tasks of different blocks never serialize on the slab.
+/// covers lookup and accounting only — ring **encode and disk I/O never
+/// run under it** (victims are staged as O(1) `InFlight` slots and
+/// encoded + written after the lock drops, serialized by `flush_lock`;
+/// reloads of written slots claim the slot under the lock and read the
+/// file outside it) — so map tasks of different blocks never serialize on
+/// spill-ring traffic.
 ///
-/// Exceeding the budget evicts the least-recently-touched *other* entries
-/// (an evicted block simply recomputes exactly on its next pass); a single
-/// state larger than the whole budget does not stick, mirroring the block
-/// cache's budget semantics.
+/// Exceeding the budget moves the least-recently-touched *other* entries
+/// out — to the disk spill ring when one is configured and the state is
+/// worth the round trip, otherwise by eviction (the block then recomputes
+/// exactly on its next pass). Entries whose state lock is held (a map
+/// task mid-pass) are skipped, and an entry removed while its holder was
+/// still computing is re-inserted fresh by the holder's
+/// [`StateSlab::note_update`] — no update is ever lost and no stale
+/// spilled image can shadow a newer state.
 pub struct StateSlab<S> {
     budget_bytes: u64,
+    spill: Option<SpillConfig>,
     inner: Mutex<SlabInner<S>>,
+    /// Serializes ring writes across callers (never held with `inner`):
+    /// at most the latest staged image per slot ever reaches its file.
+    flush_lock: Mutex<()>,
+    dir_ready: std::sync::atomic::AtomicBool,
     evictions: AtomicU64,
     records_pruned: AtomicU64,
+    spills: AtomicU64,
+    spilled_bytes: AtomicU64,
+    reloads: AtomicU64,
+    reload_bytes: AtomicU64,
 }
 
 impl<S: SlabState + Default> StateSlab<S> {
+    /// Evict-only slab (no spill ring) — the pre-spill behaviour.
     pub fn with_budget_bytes(budget_bytes: u64) -> Self {
+        Self::new(budget_bytes, None)
+    }
+
+    pub fn new(budget_bytes: u64, spill: Option<SpillConfig>) -> Self {
         Self {
             budget_bytes,
-            inner: Mutex::new(SlabInner { entries: HashMap::new(), bytes: 0, tick: 0 }),
+            spill,
+            inner: Mutex::new(SlabInner {
+                entries: HashMap::new(),
+                bytes: 0,
+                tick: 0,
+                spill_gen: 0,
+                spilled: HashMap::new(),
+                spill_paths: HashMap::new(),
+            }),
+            flush_lock: Mutex::new(()),
+            dir_ready: std::sync::atomic::AtomicBool::new(false),
             evictions: AtomicU64::new(0),
             records_pruned: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
+            spilled_bytes: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            reload_bytes: AtomicU64::new(0),
         }
     }
 
-    /// Handle to `block`'s sticky state, created empty on first touch.
-    /// Touching marks the entry most-recently-used.
+    /// Decode a spilled image, counting the reload; a corrupt image
+    /// yields a fresh state (the block recomputes exactly).
+    fn decode_reload(&self, img: &[u8]) -> (S, u64) {
+        match S::unspill(img) {
+            Some(s) => {
+                let bytes = s.slab_bytes();
+                self.reloads.fetch_add(1, Ordering::Relaxed);
+                self.reload_bytes.fetch_add(img.len() as u64, Ordering::Relaxed);
+                (s, bytes)
+            }
+            None => (S::default(), 0),
+        }
+    }
+
+    /// Handle to `block`'s sticky state — created empty on first touch, or
+    /// reloaded from the spill ring when an image is waiting there (from
+    /// the staged in-memory copy when its write is still in flight, from
+    /// the slot file otherwise). Touching marks the entry
+    /// most-recently-used.
     pub fn entry(&self, block: usize) -> Arc<Mutex<S>> {
-        let mut inner = self.inner.lock().expect("state slab poisoned");
-        inner.tick += 1;
-        let tick = inner.tick;
-        let e = inner.entries.entry(block).or_insert_with(|| SlabEntry {
-            state: Arc::new(Mutex::new(S::default())),
-            bytes: 0,
-            last_touch: tick,
-        });
-        e.last_touch = tick;
-        Arc::clone(&e.state)
+        let mut staged: Vec<StagedSpill<S>> = Vec::new();
+        let arc = {
+            let mut inner = self.inner.lock().expect("state slab poisoned");
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.entries.get_mut(&block) {
+                e.last_touch = tick;
+                return Arc::clone(&e.state);
+            }
+            let (arc, bytes) = match inner.spilled.remove(&block) {
+                Some(SpillSlot::InFlight { state, .. }) => {
+                    // The flush has not landed: re-adopt the live state
+                    // directly (no I/O, trivially bitwise); the flusher's
+                    // generation check sees the slot gone and stands down.
+                    // If it is mid-encode it holds the state lock — adopt
+                    // anyway with unknown size; note_update corrects it.
+                    let bytes = state.try_lock().map(|st| st.slab_bytes()).unwrap_or(0);
+                    (state, bytes)
+                }
+                Some(SpillSlot::OnDisk) => {
+                    // Claim the slot, then read outside the lock: the block
+                    // is now in neither map, and only this block's own map
+                    // task calls entry/note_update for it, so nothing can
+                    // race the gap — and the file is complete (OnDisk is
+                    // only set after a verified-current write) and cannot
+                    // be overwritten before a future spill, which needs
+                    // this entry() to finish first.
+                    let path = inner.spill_paths.get(&block).cloned();
+                    drop(inner);
+                    let (state, bytes) = path
+                        .and_then(|p| std::fs::read(p).ok())
+                        .map(|img| self.decode_reload(&img))
+                        .unwrap_or_else(|| (S::default(), 0));
+                    inner = self.inner.lock().expect("state slab poisoned");
+                    (Arc::new(Mutex::new(state)), bytes)
+                }
+                None => (Arc::new(Mutex::new(S::default())), 0),
+            };
+            inner.entries.insert(
+                block,
+                SlabEntry { state: Arc::clone(&arc), bytes, last_touch: tick },
+            );
+            inner.bytes += bytes;
+            // Make room for the reload by moving *others* out; the entry
+            // just handed out is never removed here (its task is about to
+            // run — note_update resolves any remaining overage).
+            self.enforce_budget(&mut inner, block, false, &mut staged);
+            arc
+        };
+        self.flush_spills(staged);
+        arc
     }
 
     /// Record `block`'s new byte size after a mutation (the caller measures
     /// it via [`SlabState::slab_bytes`] and drops the state lock first —
-    /// the slab never locks a state itself, so lock order is always
-    /// state-then-slab). Evicts beyond the budget.
-    pub fn note_update(&self, block: usize, bytes: u64) {
-        let mut inner = self.inner.lock().expect("state slab poisoned");
-        let st = &mut *inner;
-        if let Some(e) = st.entries.get_mut(&block) {
-            st.bytes = st.bytes + bytes - e.bytes;
-            e.bytes = bytes;
+    /// the slab only ever `try_lock`s a state, so lock order can never
+    /// deadlock). If the entry was spilled or evicted while the caller was
+    /// computing, the caller's handle — the freshest state — is re-inserted
+    /// and any stale spilled image dropped. Moves entries out beyond the
+    /// budget.
+    pub fn note_update(&self, block: usize, handle: &Arc<Mutex<S>>, bytes: u64) {
+        let mut staged: Vec<StagedSpill<S>> = Vec::new();
+        {
+            let mut inner = self.inner.lock().expect("state slab poisoned");
+            let st = &mut *inner;
+            st.tick += 1;
+            let tick = st.tick;
+            if let Some(e) = st.entries.get_mut(&block) {
+                st.bytes = st.bytes + bytes - e.bytes;
+                e.bytes = bytes;
+                e.last_touch = tick;
+            } else {
+                // Removed while held: the image (if any) predates this
+                // update — drop it so it can never shadow the fresh state.
+                st.spilled.remove(&block);
+                st.entries.insert(
+                    block,
+                    SlabEntry { state: Arc::clone(handle), bytes, last_touch: tick },
+                );
+                st.bytes += bytes;
+            }
+            self.enforce_budget(st, block, true, &mut staged);
         }
-        // Evict least-recently-touched entries (never the one just
-        // updated) until the budget holds.
-        while st.bytes > self.budget_bytes && st.entries.len() > 1 {
-            let victim = st
-                .entries
-                .iter()
-                .filter(|(id, _)| **id != block)
-                .min_by_key(|(_, e)| e.last_touch)
-                .map(|(id, _)| *id);
-            let Some(v) = victim else { break };
-            if let Some(e) = st.entries.remove(&v) {
-                st.bytes -= e.bytes;
-                self.evictions.fetch_add(1, Ordering::Relaxed);
+        self.flush_spills(staged);
+    }
+
+    /// Move least-recently-touched entries out until the budget holds,
+    /// skipping `exclude` and any entry whose state lock is held. With
+    /// `allow_exclude_removal`, a lone over-budget `exclude` is moved out
+    /// too (mirroring the old "an over-budget state does not stick" rule —
+    /// with a spill ring it sticks on disk instead).
+    fn enforce_budget(
+        &self,
+        inner: &mut SlabInner<S>,
+        exclude: usize,
+        allow_exclude_removal: bool,
+        staged: &mut Vec<StagedSpill<S>>,
+    ) {
+        if inner.bytes <= self.budget_bytes {
+            return;
+        }
+        let mut victims: Vec<(u64, usize)> = inner
+            .entries
+            .iter()
+            .filter(|(id, _)| **id != exclude)
+            .map(|(id, e)| (e.last_touch, *id))
+            .collect();
+        victims.sort_unstable();
+        for (_, id) in victims {
+            if inner.bytes <= self.budget_bytes {
+                return;
+            }
+            self.spill_or_evict(inner, id, staged);
+        }
+        if allow_exclude_removal
+            && inner.bytes > self.budget_bytes
+            && inner.entries.len() == 1
+            && inner.entries.contains_key(&exclude)
+        {
+            self.spill_or_evict(inner, exclude, staged);
+        }
+    }
+
+    /// Stage `id` for the spill ring when configured and worth it, else
+    /// evict it. Staging is O(1) under the inner lock — the encode and the
+    /// disk write both happen in the caller's off-lock flush. Returns
+    /// false (and leaves the entry alone) when the state lock is held — an
+    /// in-flight task's entry is never torn down under it.
+    fn spill_or_evict(
+        &self,
+        inner: &mut SlabInner<S>,
+        id: usize,
+        staged: &mut Vec<StagedSpill<S>>,
+    ) -> bool {
+        let (arc, ebytes) = match inner.entries.get(&id) {
+            Some(e) => (Arc::clone(&e.state), e.bytes),
+            None => return false,
+        };
+        let mut stage = false;
+        if let Some(cfg) = &self.spill {
+            match arc.try_lock() {
+                Ok(st) => {
+                    stage = match st.recompute_bytes() {
+                        0 => true,
+                        rb => st.slab_bytes() as f64 <= cfg.max_recompute_ratio * rb as f64,
+                    };
+                }
+                Err(std::sync::TryLockError::WouldBlock) => return false, // in use: skip
+                Err(std::sync::TryLockError::Poisoned(_)) => {} // torn state: evict
             }
         }
-        if st.bytes > self.budget_bytes {
-            // The updated state alone exceeds the budget: drop it too (its
-            // current holder keeps the Arc alive for the rest of this
-            // iteration; the next pass starts from an empty state).
-            if let Some(e) = st.entries.remove(&block) {
-                st.bytes -= e.bytes;
-                self.evictions.fetch_add(1, Ordering::Relaxed);
+        if stage {
+            inner.spill_gen += 1;
+            let gen = inner.spill_gen;
+            inner
+                .spilled
+                .insert(id, SpillSlot::InFlight { state: Arc::clone(&arc), gen });
+            staged.push((id, gen, arc));
+        } else {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.entries.remove(&id);
+        inner.bytes -= ebytes;
+        true
+    }
+
+    /// Encode and write staged states to the ring — serialized across
+    /// callers by `flush_lock`, **never** under the slab's inner lock, so
+    /// other map tasks' bookkeeping proceeds while a spill encodes and
+    /// writes. Each staged slot is re-checked by generation first (adopted
+    /// or re-spilled slots stand down), so the slot file only ever holds
+    /// the latest still-current image — what makes `OnDisk` reads sound.
+    /// `spills`/`spilled_bytes` count only completed writes; any failure
+    /// (unwritable ring, unspillable state) degrades to a counted
+    /// eviction with the slot dropped, keeping the byte budget honest —
+    /// state is never silently retained in memory.
+    fn flush_spills(&self, staged: Vec<StagedSpill<S>>) {
+        if staged.is_empty() {
+            return;
+        }
+        let Some(cfg) = &self.spill else { return };
+        let _serialized = self.flush_lock.lock().expect("spill flush lock poisoned");
+        if !self.dir_ready.load(Ordering::Relaxed)
+            && std::fs::create_dir_all(&cfg.dir).is_ok()
+        {
+            self.dir_ready.store(true, Ordering::Relaxed);
+        }
+        let dir_ready = self.dir_ready.load(Ordering::Relaxed);
+        for (id, gen, arc) in staged {
+            let ours = |inner: &SlabInner<S>| {
+                matches!(
+                    inner.spilled.get(&id),
+                    Some(SpillSlot::InFlight { gen: g, .. }) if *g == gen
+                )
+            };
+            if !ours(&self.inner.lock().expect("state slab poisoned")) {
+                continue; // adopted back or re-spilled: stand down
+            }
+            // Encode off the inner lock. A concurrent adopter takes the
+            // Arc from the slot map, not this lock — if it beat us to the
+            // state lock its task is already computing and the generation
+            // check below discards our work.
+            let img = match arc.try_lock() {
+                Ok(st) => st.spill(),
+                Err(std::sync::TryLockError::WouldBlock) => continue, // adopted mid-flight
+                Err(std::sync::TryLockError::Poisoned(_)) => None,
+            };
+            let written = match (&img, dir_ready) {
+                (Some(img), true) => {
+                    let path = slot_path(&cfg.dir, id);
+                    if std::fs::write(&path, img).is_ok() {
+                        Some(path)
+                    } else {
+                        None
+                    }
+                }
+                _ => None,
+            };
+            let mut inner = self.inner.lock().expect("state slab poisoned");
+            if !ours(&inner) {
+                continue;
+            }
+            match written {
+                Some(path) => {
+                    inner.spilled.insert(id, SpillSlot::OnDisk);
+                    inner.spill_paths.insert(id, path);
+                    self.spills.fetch_add(1, Ordering::Relaxed);
+                    let bytes = img.expect("written implies img").len() as u64;
+                    self.spilled_bytes.fetch_add(bytes, Ordering::Relaxed);
+                }
+                None => {
+                    // Unwritable ring or unspillable state: degrade to the
+                    // documented no-spill behaviour — drop the slot (and
+                    // with it the state's memory) and count an eviction;
+                    // the block recomputes exactly on its next pass.
+                    inner.spilled.remove(&id);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
             }
         }
     }
 
-    /// Drop every sticky state (e.g. to force the next pass exact). Not
-    /// counted as evictions — this is a deliberate refresh, not budget
-    /// pressure.
+    /// Drop every sticky state — resident and spilled (e.g. to force the
+    /// next pass exact). Not counted as evictions — this is a deliberate
+    /// refresh, not budget pressure.
     pub fn invalidate_all(&self) {
         let mut inner = self.inner.lock().expect("state slab poisoned");
         inner.entries.clear();
         inner.bytes = 0;
+        inner.spilled.clear();
     }
 
-    /// Bytes currently accounted in the slab.
+    /// Bytes currently resident in the slab (spilled state not counted).
     pub fn bytes(&self) -> u64 {
         self.inner.lock().expect("state slab poisoned").bytes
     }
@@ -183,14 +518,35 @@ impl<S: SlabState + Default> StateSlab<S> {
         self.len() == 0
     }
 
-    /// Budget (bytes) this slab evicts against.
+    /// Budget (bytes) this slab holds resident state against.
     pub fn budget_bytes(&self) -> u64 {
         self.budget_bytes
     }
 
-    /// Entries dropped by budget pressure since construction.
+    /// Entries dropped (not spilled) by budget pressure since construction.
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Completed spill-ring writes since construction.
+    pub fn spills(&self) -> u64 {
+        self.spills.load(Ordering::Relaxed)
+    }
+
+    /// Bytes written to the spill ring since construction.
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spilled_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Spill-ring reloads (slot-file reads; in-memory re-adoption of a
+    /// still-in-flight spill is not an I/O event) since construction.
+    pub fn reloads(&self) -> u64 {
+        self.reloads.load(Ordering::Relaxed)
+    }
+
+    /// Bytes read back from the spill ring since construction.
+    pub fn reload_bytes(&self) -> u64 {
+        self.reload_bytes.load(Ordering::Relaxed)
     }
 
     /// Add to the shared pruned-records counter (kernels report how many
@@ -203,6 +559,18 @@ impl<S: SlabState + Default> StateSlab<S> {
     /// iteration's worth and stamps it into that iteration's [`JobStats`]).
     pub fn take_records_pruned(&self) -> u64 {
         self.records_pruned.swap(0, Ordering::Relaxed)
+    }
+}
+
+impl<S> Drop for StateSlab<S> {
+    fn drop(&mut self) {
+        // Remove every ring slot this slab ever wrote; the directory
+        // itself may be shared (user-supplied) and is left alone.
+        if let Ok(inner) = self.inner.lock() {
+            for path in inner.spill_paths.values() {
+                let _ = std::fs::remove_file(path);
+            }
+        }
     }
 }
 
@@ -297,25 +665,57 @@ mod tests {
     struct CounterState {
         passes: usize,
         payload: Vec<u8>,
+        recompute: u64,
     }
 
     impl SlabState for CounterState {
         fn slab_bytes(&self) -> u64 {
             self.payload.len() as u64
         }
+
+        fn recompute_bytes(&self) -> u64 {
+            self.recompute
+        }
+
+        fn spill(&self) -> Option<Vec<u8>> {
+            let mut b = vec![self.passes as u8];
+            b.extend_from_slice(&self.recompute.to_le_bytes());
+            b.extend_from_slice(&self.payload);
+            Some(b)
+        }
+
+        fn unspill(bytes: &[u8]) -> Option<Self> {
+            let (&passes, rest) = bytes.split_first()?;
+            if rest.len() < 8 {
+                return None;
+            }
+            let recompute = u64::from_le_bytes(rest[..8].try_into().ok()?);
+            Some(Self { passes: passes as usize, payload: rest[8..].to_vec(), recompute })
+        }
+    }
+
+    fn touch(slab: &StateSlab<CounterState>, block: usize, payload: usize) {
+        let h = slab.entry(block);
+        let mut st = h.lock().unwrap();
+        st.passes += 1;
+        st.payload = vec![0; payload];
+        let bytes = st.slab_bytes();
+        drop(st);
+        slab.note_update(block, &h, bytes);
+    }
+
+    fn spill_dir(tag: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("bigfcm_slab_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
     }
 
     #[test]
     fn slab_persists_state_across_touches() {
         let slab: StateSlab<CounterState> = StateSlab::with_budget_bytes(1024);
         for _ in 0..3 {
-            let h = slab.entry(7);
-            let mut st = h.lock().unwrap();
-            st.passes += 1;
-            st.payload = vec![0; 100];
-            let bytes = st.slab_bytes();
-            drop(st);
-            slab.note_update(7, bytes);
+            touch(&slab, 7, 100);
         }
         let h = slab.entry(7);
         assert_eq!(h.lock().unwrap().passes, 3);
@@ -327,17 +727,14 @@ mod tests {
     fn slab_evicts_lru_beyond_budget_but_not_the_updater() {
         let slab: StateSlab<CounterState> = StateSlab::with_budget_bytes(250);
         for block in 0..4 {
-            let h = slab.entry(block);
-            let mut st = h.lock().unwrap();
-            st.payload = vec![0; 100];
-            let bytes = st.slab_bytes();
-            drop(st);
-            slab.note_update(block, bytes);
+            touch(&slab, block, 100);
         }
         // Budget holds 2 entries; the two oldest (0, 1) were evicted.
         assert_eq!(slab.len(), 2);
         assert!(slab.bytes() <= 250);
         assert_eq!(slab.evictions(), 2);
+        // No spill ring: nothing was written anywhere.
+        assert_eq!(slab.spills(), 0);
         // Block 3 (just updated) must have survived.
         assert_eq!(slab.entry(3).lock().unwrap().payload.len(), 100);
         // Block 0 restarts empty.
@@ -347,12 +744,110 @@ mod tests {
     #[test]
     fn slab_rejects_single_state_above_budget() {
         let slab: StateSlab<CounterState> = StateSlab::with_budget_bytes(50);
-        let h = slab.entry(0);
-        h.lock().unwrap().payload = vec![0; 100];
-        slab.note_update(0, 100);
+        touch(&slab, 0, 100);
         assert!(slab.is_empty(), "an over-budget state must not stick");
         assert_eq!(slab.bytes(), 0);
         assert_eq!(slab.evictions(), 1);
+    }
+
+    #[test]
+    fn slab_spills_instead_of_evicting_and_reloads() {
+        let dir = spill_dir("ring");
+        let slab: StateSlab<CounterState> =
+            StateSlab::new(250, Some(SpillConfig::new(dir.clone())));
+        for block in 0..4 {
+            touch(&slab, block, 100);
+        }
+        assert_eq!(slab.len(), 2);
+        assert_eq!(slab.evictions(), 0, "spill ring must replace eviction");
+        assert_eq!(slab.spills(), 2);
+        assert!(slab.spilled_bytes() >= 200);
+        // Reload block 0: its pass counter survived the disk round trip.
+        let h = slab.entry(0);
+        assert_eq!(h.lock().unwrap().passes, 1);
+        assert_eq!(h.lock().unwrap().payload.len(), 100);
+        assert_eq!(slab.reloads(), 1);
+        assert!(slab.reload_bytes() > 0);
+        // The ring slot is consumed: a second miss starts empty...
+        slab.invalidate_all();
+        assert_eq!(slab.entry(0).lock().unwrap().passes, 0);
+        drop(slab);
+        // ...and dropping the slab removes its slot files.
+        let leftover = std::fs::read_dir(&dir)
+            .map(|d| d.count())
+            .unwrap_or(0);
+        assert_eq!(leftover, 0, "slab drop must remove its ring slots");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spill_crossover_evicts_states_cheaper_to_recompute() {
+        let dir = spill_dir("crossover");
+        let slab: StateSlab<CounterState> =
+            StateSlab::new(250, Some(SpillConfig::new(dir.clone())));
+        // State of 100 B whose recompute re-reads only 10 B: reread loses
+        // at ratio 4 (100 > 4×10) → evict, not spill.
+        for block in 0..4 {
+            let h = slab.entry(block);
+            let mut st = h.lock().unwrap();
+            st.passes += 1;
+            st.payload = vec![0; 100];
+            st.recompute = 10;
+            let bytes = st.slab_bytes();
+            drop(st);
+            slab.note_update(block, &h, bytes);
+        }
+        assert_eq!(slab.spills(), 0, "cheap-to-recompute states must not spill");
+        assert_eq!(slab.evictions(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn note_update_reinserts_state_spilled_while_held() {
+        let dir = spill_dir("held");
+        let slab: StateSlab<CounterState> =
+            StateSlab::new(250, Some(SpillConfig::new(dir.clone())));
+        // Take block 0's handle as a long-running task would, then force
+        // budget pressure from other blocks while it is "computing".
+        let h = slab.entry(0);
+        h.lock().unwrap().payload = vec![0; 100];
+        slab.note_update(0, &h, 100);
+        for block in 1..4 {
+            touch(&slab, block, 100);
+        }
+        assert!(slab.spills() > 0);
+        // The held task finishes its (newer) state and reports in.
+        let mut st = h.lock().unwrap();
+        st.passes = 42;
+        drop(st);
+        slab.note_update(0, &h, 100);
+        // Its entry is live again with the fresh state — the stale ring
+        // image (if block 0 was the one spilled) must not shadow it.
+        let h2 = slab.entry(0);
+        assert_eq!(h2.lock().unwrap().passes, 42);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn busy_states_are_never_torn_down() {
+        let dir = spill_dir("busy");
+        let slab: StateSlab<CounterState> =
+            StateSlab::new(150, Some(SpillConfig::new(dir.clone())));
+        let h0 = slab.entry(0);
+        let guard = h0.lock().unwrap(); // hold block 0's state lock
+        for block in 1..4 {
+            touch(&slab, block, 100);
+        }
+        // Block 0 was LRU throughout but locked: every round of budget
+        // pressure must have skipped it and taken the next victim.
+        drop(guard);
+        assert_eq!(slab.spills(), 2);
+        assert_eq!(slab.evictions(), 0);
+        assert!(
+            Arc::ptr_eq(&h0, &slab.entry(0)),
+            "locked entry must survive budget pressure in place"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -367,9 +862,7 @@ mod tests {
     #[test]
     fn slab_invalidate_all_is_not_an_eviction() {
         let slab: StateSlab<CounterState> = StateSlab::with_budget_bytes(1024);
-        let h = slab.entry(0);
-        h.lock().unwrap().payload = vec![0; 10];
-        slab.note_update(0, 10);
+        touch(&slab, 0, 10);
         slab.invalidate_all();
         assert!(slab.is_empty());
         assert_eq!(slab.evictions(), 0);

@@ -7,7 +7,7 @@
 //! `(graph, dims, clusters)` on a dedicated device-owner thread
 //! ([`server`]) because the `xla` crate types are `!Send`.
 //!
-//! [`PjrtRuntime`] implements [`crate::fcm::ChunkBackend`]: inputs are split
+//! [`PjrtRuntime`] implements [`crate::fcm::KernelBackend`]: inputs are split
 //! into fixed `chunk`-row pieces (the artifact's lowered shape), the last
 //! piece zero-padded with zero weights (exactly ignored by the kernels —
 //! the padding contract tested in `python/tests/test_kernel.py` and
@@ -27,7 +27,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::data::Matrix;
 use crate::error::{Error, Result};
-use crate::fcm::{ChunkBackend, NativeBackend, Partials};
+use crate::fcm::{BlockBounds, BoundConfig, BoundRows, Kernel, KernelBackend, NativeBackend, Partials};
 
 /// Graph families in the artifact matrix.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -159,21 +159,172 @@ impl Drop for PjrtRuntime {
     }
 }
 
-impl ChunkBackend for PjrtRuntime {
-    fn fcm_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
-        self.run_chunked(Graph::Fcm, x, v, w, m)
+impl KernelBackend for PjrtRuntime {
+    fn exact_partials(
+        &self,
+        kernel: Kernel,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        m: f64,
+    ) -> Result<Partials> {
+        self.run_chunked(graph_of(kernel), x, v, w, m)
     }
 
-    fn classic_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
-        self.run_chunked(Graph::Classic, x, v, w, m)
+    /// The current AOT artifacts lower only the plain partials graphs —
+    /// they return no per-record bound rows. Surfaced as an error rather
+    /// than a silent host-side recompute; [`PjrtRuntime::pruned_partials`]
+    /// opts out of pruning instead.
+    fn partials_with_bounds(
+        &self,
+        _kernel: Kernel,
+        _x: &Matrix,
+        _v: &Matrix,
+        _w: &[f32],
+        _m: f64,
+        _rows: &mut BoundRows,
+    ) -> Result<Partials> {
+        Err(Error::Artifact(
+            "the AOT artifacts do not export per-record bound rows — add the bound-emitting \
+             graphs to python/compile/aot.py and re-run `make artifacts`, or use the \
+             `shim` backend"
+                .into(),
+        ))
     }
 
-    fn kmeans_partials(&self, x: &Matrix, v: &Matrix, w: &[f32]) -> Result<Partials> {
-        self.run_chunked(Graph::Kmeans, x, v, w, 0.0)
+    /// No bound outputs from the artifacts yet: reset the state and run
+    /// exactly — correct (no stale bound can survive), just unpruned.
+    #[allow(clippy::too_many_arguments)]
+    fn pruned_partials(
+        &self,
+        kernel: Kernel,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        m: f64,
+        state: &mut BlockBounds,
+        _cfg: &BoundConfig,
+    ) -> Result<(Partials, usize)> {
+        state.reset();
+        Ok((self.exact_partials(kernel, x, v, w, m)?, 0))
     }
 
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+}
+
+fn graph_of(kernel: Kernel) -> Graph {
+    match kernel {
+        Kernel::FcmFast => Graph::Fcm,
+        // Both classic evaluations lower to the same classic graph — the
+        // pair loop is a host-side compute model, not a different result.
+        Kernel::FcmClassic | Kernel::FcmClassicPair => Graph::Classic,
+        Kernel::KMeans => Graph::Kmeans,
+    }
+}
+
+/// Offline stand-in for a PJRT device backend with the bound-emitting
+/// kernels lowered: reproduces the runtime's execution shape — fixed
+/// `chunk`-row pieces, zero-padded tails with zero weights (the padding
+/// contract), per-chunk partials merged host-side — while computing each
+/// chunk with the native kernels, exactly as `bigfcm::xla` shims the
+/// device client. Because [`KernelBackend::partials_with_bounds`] is
+/// implemented per chunk, the portable pruning protocol runs on it
+/// unchanged — the session layer's bounds survive the backend swap, and
+/// the claim is CI-testable without artifacts
+/// (`rust/tests/integration_streaming.rs`).
+pub struct PjrtShimBackend {
+    chunk: usize,
+    native: NativeBackend,
+}
+
+impl PjrtShimBackend {
+    /// `chunk` is the fixed row count per device execution (the lowered
+    /// shape's leading dimension; `cluster.chunk` in config).
+    pub fn new(chunk: usize) -> Self {
+        Self { chunk: chunk.max(1), native: NativeBackend }
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// The one copy of the padded-chunk marshalling loop: run `f` over
+    /// every fixed `chunk`-row piece of (x, w) — tail zero-padded with
+    /// zero weights (the padding contract) into buffers reused across
+    /// chunks — passing the global row offset and live prefix length, and
+    /// merge the per-chunk partials host-side.
+    fn for_each_padded_chunk<F>(&self, x: &Matrix, v: &Matrix, w: &[f32], mut f: F) -> Result<Partials>
+    where
+        F: FnMut(&Matrix, &[f32], usize, usize) -> Result<Partials>,
+    {
+        let d = x.cols();
+        let mut total = Partials::zeros(v.rows(), d);
+        let mut xc = Matrix::zeros(self.chunk, d);
+        let mut wbuf = vec![0.0f32; self.chunk];
+        let mut start = 0usize;
+        while start < x.rows() {
+            let end = (start + self.chunk).min(x.rows());
+            let live = end - start;
+            let xs = xc.as_mut_slice();
+            xs[..live * d].copy_from_slice(&x.as_slice()[start * d..end * d]);
+            xs[live * d..].fill(0.0);
+            wbuf[..live].copy_from_slice(&w[start..end]);
+            wbuf[live..].fill(0.0);
+            total.merge(&f(&xc, &wbuf, start, live)?);
+            start = end;
+        }
+        Ok(total)
+    }
+}
+
+impl KernelBackend for PjrtShimBackend {
+    fn exact_partials(
+        &self,
+        kernel: Kernel,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        m: f64,
+    ) -> Result<Partials> {
+        self.for_each_padded_chunk(x, v, w, |xc, wc, _start, _live| {
+            self.native.exact_partials(kernel, xc, v, wc, m)
+        })
+    }
+
+    fn partials_with_bounds(
+        &self,
+        kernel: Kernel,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        m: f64,
+        rows: &mut BoundRows,
+    ) -> Result<Partials> {
+        let c = v.rows();
+        self.for_each_padded_chunk(x, v, w, |xc, wc, start, live| {
+            // "Device" output for the whole padded chunk; only the live
+            // prefix is copied back (padding rows carry no information).
+            let mut chunk_rows = BoundRows::for_kernel(kernel, self.chunk, c);
+            let partial =
+                self.native.partials_with_bounds(kernel, xc, v, wc, m, &mut chunk_rows)?;
+            for r in 0..live {
+                let k = start + r;
+                rows.d2.row_mut(k).copy_from_slice(chunk_rows.d2.row(r));
+                rows.obj[k] = chunk_rows.obj[r];
+                if kernel.is_kmeans() {
+                    rows.best[k] = chunk_rows.best[r];
+                } else {
+                    rows.um.row_mut(k).copy_from_slice(chunk_rows.um.row(r));
+                }
+            }
+            Ok(partial)
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-shim"
     }
 }
 
@@ -184,6 +335,8 @@ pub enum ResolvedBackend {
     Native(NativeBackend),
     /// PJRT runtime with native fallback for unsupported shapes.
     Auto(Arc<PjrtRuntime>, NativeBackend),
+    /// Offline PJRT shim (chunked device execution shape, no artifacts).
+    Shim(PjrtShimBackend),
 }
 
 impl ResolvedBackend {
@@ -201,13 +354,15 @@ impl ResolvedBackend {
                 Ok(rt) => Ok(ResolvedBackend::Auto(Arc::new(rt), NativeBackend)),
                 Err(_) => Ok(ResolvedBackend::Native(NativeBackend)),
             },
+            Backend::Shim => Ok(ResolvedBackend::Shim(PjrtShimBackend::new(cfg.cluster.chunk))),
         }
     }
 
-    fn pick(&self, graph: Graph, dims: usize, clusters: usize) -> &dyn ChunkBackend {
+    fn pick(&self, graph: Graph, dims: usize, clusters: usize) -> &dyn KernelBackend {
         match self {
             ResolvedBackend::Pjrt(rt) => rt.as_ref(),
             ResolvedBackend::Native(nb) => nb,
+            ResolvedBackend::Shim(sb) => sb,
             ResolvedBackend::Auto(rt, nb) => {
                 if rt.supports(graph, dims, clusters) {
                     rt.as_ref()
@@ -219,64 +374,48 @@ impl ResolvedBackend {
     }
 }
 
-impl ChunkBackend for ResolvedBackend {
-    fn fcm_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
-        self.pick(Graph::Fcm, x.cols(), v.rows()).fcm_partials(x, v, w, m)
-    }
-
-    fn classic_partials(&self, x: &Matrix, v: &Matrix, w: &[f32], m: f64) -> Result<Partials> {
-        self.pick(Graph::Classic, x.cols(), v.rows()).classic_partials(x, v, w, m)
-    }
-
-    fn kmeans_partials(&self, x: &Matrix, v: &Matrix, w: &[f32]) -> Result<Partials> {
-        self.pick(Graph::Kmeans, x.cols(), v.rows()).kmeans_partials(x, v, w)
-    }
-
-    // Forward the pruned entry points to whatever backend the shape
-    // resolves to, so Auto/Native resolutions keep real shift-bounded
-    // pruning (a PJRT pick falls back to its exact default, which resets
-    // the state — no stale bound can cross a backend switch).
-    #[allow(clippy::too_many_arguments)]
-    fn fcm_partials_pruned(
+// Forward both primitives and the pruned protocol entry to whatever
+// backend the shape resolves to, so Auto/Native/Shim resolutions keep
+// real shift-bounded pruning (a PJRT pick opts out via its own override,
+// which resets the state — no stale bound can cross a backend switch).
+impl KernelBackend for ResolvedBackend {
+    fn exact_partials(
         &self,
+        kernel: Kernel,
         x: &Matrix,
         v: &Matrix,
         w: &[f32],
         m: f64,
-        state: &mut crate::fcm::BlockPruneState,
-        tol: f64,
-        refresh_every: usize,
-    ) -> Result<(Partials, usize)> {
-        self.pick(Graph::Fcm, x.cols(), v.rows())
-            .fcm_partials_pruned(x, v, w, m, state, tol, refresh_every)
+    ) -> Result<Partials> {
+        self.pick(graph_of(kernel), x.cols(), v.rows()).exact_partials(kernel, x, v, w, m)
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn classic_partials_pruned(
+    fn partials_with_bounds(
         &self,
+        kernel: Kernel,
         x: &Matrix,
         v: &Matrix,
         w: &[f32],
         m: f64,
-        state: &mut crate::fcm::BlockPruneState,
-        tol: f64,
-        refresh_every: usize,
-    ) -> Result<(Partials, usize)> {
-        self.pick(Graph::Classic, x.cols(), v.rows())
-            .classic_partials_pruned(x, v, w, m, state, tol, refresh_every)
+        rows: &mut BoundRows,
+    ) -> Result<Partials> {
+        self.pick(graph_of(kernel), x.cols(), v.rows())
+            .partials_with_bounds(kernel, x, v, w, m, rows)
     }
 
-    fn kmeans_partials_pruned(
+    #[allow(clippy::too_many_arguments)]
+    fn pruned_partials(
         &self,
+        kernel: Kernel,
         x: &Matrix,
         v: &Matrix,
         w: &[f32],
-        state: &mut crate::fcm::BlockPruneState,
-        tol: f64,
-        refresh_every: usize,
+        m: f64,
+        state: &mut BlockBounds,
+        cfg: &BoundConfig,
     ) -> Result<(Partials, usize)> {
-        self.pick(Graph::Kmeans, x.cols(), v.rows())
-            .kmeans_partials_pruned(x, v, w, state, tol, refresh_every)
+        self.pick(graph_of(kernel), x.cols(), v.rows())
+            .pruned_partials(kernel, x, v, w, m, state, cfg)
     }
 
     fn name(&self) -> &'static str {
@@ -284,6 +423,7 @@ impl ChunkBackend for ResolvedBackend {
             ResolvedBackend::Pjrt(_) => "pjrt",
             ResolvedBackend::Native(_) => "native",
             ResolvedBackend::Auto(_, _) => "auto",
+            ResolvedBackend::Shim(_) => "pjrt-shim",
         }
     }
 }

@@ -172,7 +172,7 @@ fn multi_reducer_tree_agrees_with_flat() {
 
 #[test]
 fn backend_trait_object_works_via_arc() {
-    // The builder accepts any ChunkBackend behind an Arc.
+    // The builder accepts any KernelBackend behind an Arc.
     let data = blobs(1024, 3, 2, 0.3, 29);
     let run = BigFcm::new(small_cfg())
         .backend(Arc::new(NativeBackend))

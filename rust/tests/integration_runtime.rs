@@ -10,9 +10,9 @@ use bigfcm::config::Config;
 use bigfcm::coordinator::BigFcm;
 use bigfcm::data::synth::blobs;
 use bigfcm::data::Matrix;
-use bigfcm::fcm::{ChunkBackend, NativeBackend};
+use bigfcm::fcm::{KernelBackend, NativeBackend};
 use bigfcm::json;
-use bigfcm::runtime::{Graph, PjrtRuntime};
+use bigfcm::runtime::{Graph, PjrtRuntime, PjrtShimBackend};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -120,7 +120,7 @@ fn pjrt_agrees_with_native_backend() {
 #[test]
 fn full_pipeline_pjrt_vs_native() {
     let dir = require_artifacts!();
-    let rt: Arc<dyn ChunkBackend> = Arc::new(PjrtRuntime::open(&dir).unwrap());
+    let rt: Arc<dyn KernelBackend> = Arc::new(PjrtRuntime::open(&dir).unwrap());
     let data = blobs(6000, 18, 6, 0.6, 9);
     let mut cfg = Config::default();
     cfg.cluster.block_records = 2048;
@@ -171,6 +171,43 @@ fn unsupported_shape_error_is_actionable() {
     let err = rt.fcm_partials(&x, &v, &[1.0; 10], 2.0).unwrap_err();
     let msg = err.to_string();
     assert!(msg.contains("aot.py"), "error should point at the AOT matrix: {msg}");
+}
+
+/// The offline PJRT shim needs no artifacts: its padded-chunk marshalling
+/// (the device execution shape) must agree with the straight native
+/// kernels on every kernel — including the padded tail chunk — and its
+/// bound-emitting pass must let the portable pruning protocol prune.
+#[test]
+fn shim_backend_agrees_with_native_and_prunes() {
+    use bigfcm::fcm::{BlockBounds, BoundConfig, BoundModel, Kernel};
+    let shim = PjrtShimBackend::new(4096);
+    // 5000 rows → one full 4096 chunk + one padded 904-row chunk.
+    let data = blobs(5000, 18, 6, 0.8, 3);
+    let v = data.features.slice_rows(0, 6);
+    let w: Vec<f32> = (0..5000).map(|i| 0.5 + (i % 7) as f32 * 0.2).collect();
+    for kernel in [Kernel::FcmFast, Kernel::FcmClassic, Kernel::FcmClassicPair, Kernel::KMeans] {
+        let a = shim.exact_partials(kernel, &data.features, &v, &w, 2.0).unwrap();
+        let b = NativeBackend.exact_partials(kernel, &data.features, &v, &w, 2.0).unwrap();
+        for (x, y) in a.w_acc.iter().zip(&b.w_acc) {
+            assert!((x - y).abs() <= 1e-6 + 1e-6 * y.abs(), "{kernel:?}: wacc {x} vs {y}");
+        }
+        for (x, y) in a.v_num.as_slice().iter().zip(b.v_num.as_slice()) {
+            assert!((x - y).abs() <= 1e-2 + 1e-4 * y.abs(), "{kernel:?}: vnum {x} vs {y}");
+        }
+    }
+    // Pruning survives the backend swap: same centers twice → the whole
+    // block replays from the shim-refreshed bounds.
+    let cfg = BoundConfig { model: BoundModel::Elkan, tolerance: 1e-2, refresh_every: 8 };
+    let mut state = BlockBounds::default();
+    let uniform = vec![1.0f32; 5000];
+    let (_, p0) = shim
+        .pruned_partials(Kernel::FcmFast, &data.features, &v, &uniform, 2.0, &mut state, &cfg)
+        .unwrap();
+    assert_eq!(p0, 0, "first shim pass refreshes");
+    let (_, p1) = shim
+        .pruned_partials(Kernel::FcmFast, &data.features, &v, &uniform, 2.0, &mut state, &cfg)
+        .unwrap();
+    assert_eq!(p1, 5000, "unmoved centers must whole-block prune on the shim");
 }
 
 /// The runtime is shareable across threads (handle to the device thread).

@@ -12,11 +12,12 @@ use bigfcm::data::synth::blobs;
 use bigfcm::data::Matrix;
 use bigfcm::error::Result;
 use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo};
-use bigfcm::fcm::{max_center_shift2, ChunkBackend, NativeBackend};
+use bigfcm::fcm::{max_center_shift2, KernelBackend, NativeBackend};
 use bigfcm::hdfs::BlockStoreWriter;
 use bigfcm::mapreduce::{
     DistributedCache, Engine, EngineOptions, MapReduceJob, SessionOptions, TaskCtx,
 };
+use bigfcm::runtime::PjrtShimBackend;
 
 /// Sum job whose compute deliberately dominates a tiny block decode (many
 /// passes over the block), so the prefetcher reliably wins its race and the
@@ -140,19 +141,36 @@ fn mini_scale_harness_envelopes_hold() {
 
 /// CI-sized twin of the scale harness's iteration-residency phase: an FCM
 /// convergence loop over an on-disk store through an `IterativeSession`,
-/// with shift-bounded pruning on. Pins the acceptance envelope:
-/// `records_pruned > 0` after iteration 2, final centers within epsilon-
-/// scale distance of the exact (pruning-disabled) run, job startup charged
-/// once, and the byte-budget residency envelope intact throughout.
-#[test]
-fn mini_scale_session_fcm_prunes_and_matches_exact() {
+/// with shift-bounded pruning on — run across **four backends/bound
+/// models** (native-exact, native-dmin, native-elkan, PJRT-shim) through
+/// the one `KernelBackend` interface. Pins the acceptance envelope:
+///
+/// * all four arms converge to centers within 1e-6 (squared shift) of one
+///   another — convergence is only ever accepted from an exact pass;
+/// * `records_pruned(elkan) ≥ records_pruned(dmin) > 0` after iteration 2
+///   (the per-center bound is implied by the single-d_min bound);
+/// * the shim arm prunes too — the session layer's bounds survive the
+///   backend swap;
+/// * job startup charged once per arm, the byte-budget residency envelope
+///   intact throughout.
+struct SessionTwin {
+    store: Arc<bigfcm::hdfs::BlockStore>,
+    dir: std::path::PathBuf,
+    v0: bigfcm::data::Matrix,
+    params: FcmParams,
+    opts: EngineOptions,
+    budget: u64,
+    workers: usize,
+}
+
+fn session_twin_setup(tag: &str) -> SessionTwin {
     let workers = 4usize;
     // One coherent blob structure split across 12 on-disk blocks (the
     // session loop clusters globally, so every block must come from the
     // same mixture).
     let data = blobs(12 * 1024, 6, 3, 0.25, 9100);
     let dir = std::env::temp_dir()
-        .join(format!("bigfcm_scale_mini_session_{}", std::process::id()));
+        .join(format!("bigfcm_scale_mini_session_{tag}_{}", std::process::id()));
     std::fs::remove_dir_all(&dir).ok();
     let mut w = BlockStoreWriter::create("mini", 6, workers, dir.clone()).unwrap();
     for b in 0..12 {
@@ -161,80 +179,122 @@ fn mini_scale_session_fcm_prunes_and_matches_exact() {
     let store = Arc::new(w.finish().unwrap());
     let block_bytes = store.max_block_bytes();
     let budget = 6 * block_bytes;
-
     let mut rng = bigfcm::prng::Pcg::new(9101);
     let v0 = bigfcm::fcm::seeding::random_records(&data.features, 3, &mut rng);
     let params = FcmParams { epsilon: 1e-10, ..Default::default() };
-    let backend: Arc<dyn ChunkBackend> = Arc::new(NativeBackend);
-    let overhead = OverheadConfig::default();
     let opts = EngineOptions { workers, block_cache_bytes: budget, ..Default::default() };
+    SessionTwin { store, dir, v0, params, opts, budget, workers }
+}
 
-    let mut exact_engine = Engine::new(opts.clone(), overhead.clone());
-    let exact = run_fcm_session(
-        &mut exact_engine,
-        &store,
-        Arc::clone(&backend),
-        SessionAlgo::Fcm,
-        v0.clone(),
-        &params,
-        &PruneConfig::disabled(),
-        SessionOptions::default(),
-    )
-    .unwrap();
-
-    let mut engine = Engine::new(opts, overhead.clone());
-    let run = run_fcm_session(
+fn run_twin_arm(
+    twin: &SessionTwin,
+    backend: Arc<dyn KernelBackend>,
+    prune: &PruneConfig,
+) -> bigfcm::fcm::SessionRunResult {
+    let mut engine = Engine::new(twin.opts.clone(), OverheadConfig::default());
+    run_fcm_session(
         &mut engine,
-        &store,
+        &twin.store,
         backend,
         SessionAlgo::Fcm,
-        v0,
-        &params,
-        &PruneConfig::default(),
+        twin.v0.clone(),
+        &twin.params,
+        prune,
         SessionOptions::default(),
     )
-    .unwrap();
+    .unwrap()
+}
 
-    assert!(exact.result.converged && run.result.converged);
-    // Acceptance: pruning live after iteration 2.
-    let pruned_after_two: u64 = run
-        .per_iteration
-        .iter()
-        .skip(2)
-        .map(|s| s.records_pruned)
-        .sum();
-    assert!(
-        pruned_after_two > 0,
-        "no records pruned after iteration 2 across {} iterations",
-        run.jobs
-    );
-    // Acceptance: final centers within epsilon-scale distance of exact.
-    let shift = max_center_shift2(&exact.result.centers, &run.result.centers);
-    assert!(shift < 1e-3, "pruned session drifted from exact: {shift}");
-    // Iteration residency: the whole loop charged startup once.
-    assert!(
-        (run.sim.job_startup_s - overhead.job_startup_s).abs() < 1e-9,
-        "resident loop charged startup more than once: {}",
-        run.sim.job_startup_s
-    );
-    // The streaming envelope holds across all iterations: the run result
-    // carries the max over per-iteration peaks (the session resets the
-    // per-job meters between iterations, so a post-loop gauge read would
-    // only see the last one).
-    assert!(
-        run.peak_resident_bytes <= budget + workers as u64 * block_bytes,
-        "session iterations broke the residency envelope: {} > {budget} + {workers}×{block_bytes}",
-        run.peak_resident_bytes
-    );
-    assert!(run.peak_resident_bytes > 0, "peak meter never observed");
-    // Slab stayed within its own budget and was metered.
-    let last = run.per_iteration.last().unwrap();
+fn pruned_after_two(run: &bigfcm::fcm::SessionRunResult) -> u64 {
+    run.per_iteration.iter().skip(2).map(|s| s.records_pruned).sum()
+}
+
+#[test]
+fn mini_scale_session_backends_agree_and_elkan_dominates() {
+    let twin = session_twin_setup("backends");
+    let native: Arc<dyn KernelBackend> = Arc::new(NativeBackend);
+    let shim: Arc<dyn KernelBackend> = Arc::new(PjrtShimBackend::new(4096));
+
+    let exact = run_twin_arm(&twin, Arc::clone(&native), &PruneConfig::disabled());
+    let dmin = run_twin_arm(&twin, Arc::clone(&native), &PruneConfig::dmin());
+    let elkan = run_twin_arm(&twin, Arc::clone(&native), &PruneConfig::default());
+    let shim_run = run_twin_arm(&twin, shim, &PruneConfig::default());
+
+    let arms =
+        [("exact", &exact), ("dmin", &dmin), ("elkan", &elkan), ("pjrt-shim", &shim_run)];
+    for (name, run) in &arms {
+        assert!(run.result.converged, "{name} arm did not converge in {} iters", run.jobs);
+        let startup = OverheadConfig::default().job_startup_s;
+        assert!(
+            (run.sim.job_startup_s - startup).abs() < 1e-9,
+            "{name}: resident loop charged startup more than once"
+        );
+        assert!(
+            run.peak_resident_bytes <= twin.budget + twin.workers as u64 * twin.store.max_block_bytes(),
+            "{name}: residency envelope broken"
+        );
+    }
+    // Acceptance: every pair of backends/bound models lands within 1e-6.
+    for (na, ra) in &arms {
+        for (nb, rb) in &arms {
+            let shift = max_center_shift2(&ra.result.centers, &rb.result.centers);
+            assert!(shift < 1e-6, "{na} vs {nb}: centers diverged by {shift}");
+        }
+    }
+    // Acceptance: pruning live after iteration 2, per-center bound at
+    // least as deep as the single-d_min bound, shim pruning too.
+    assert_eq!(exact.records_pruned, 0);
+    let d2 = pruned_after_two(&dmin);
+    let e2 = pruned_after_two(&elkan);
+    let s2 = pruned_after_two(&shim_run);
+    assert!(d2 > 0, "dmin arm never pruned after iteration 2");
+    assert!(e2 >= d2, "elkan ({e2}) must prune at least as much as dmin ({d2})");
+    assert!(s2 > 0, "shim arm never pruned — bounds did not survive the backend swap");
+    // Slab metered and within its own budget.
+    let last = elkan.per_iteration.last().unwrap();
     assert!(last.slab_bytes <= PruneConfig::default().slab_bytes);
-    assert!(run.per_iteration.iter().any(|s| s.slab_bytes > 0));
+    assert!(elkan.per_iteration.iter().any(|s| s.slab_bytes > 0));
     // Tree combine funnels few parts into each iteration's reduce.
     assert!(last.reduce_parts < 12, "tree combine inactive: {} parts", last.reduce_parts);
 
-    std::fs::remove_dir_all(dir).ok();
+    std::fs::remove_dir_all(&twin.dir).ok();
+}
+
+/// Acceptance: a slab budget of one block's state forces the disk spill
+/// ring (`slab_spilled_bytes > 0`, `slab_reloads > 0`) without changing
+/// results **bitwise** — the spill codec is exact, so every pruning
+/// decision and replayed contribution is reproduced.
+#[test]
+fn mini_scale_session_slab_spill_is_bitwise() {
+    let twin = session_twin_setup("spill");
+    let native: Arc<dyn KernelBackend> = Arc::new(NativeBackend);
+
+    let roomy = run_twin_arm(&twin, Arc::clone(&native), &PruneConfig::default());
+    assert_eq!(roomy.slab_spilled_bytes, 0);
+    assert_eq!(roomy.slab_reloads, 0);
+
+    // ≈ one block's elkan state: 1024 rows × 4·(2C+2) B + block constants.
+    let one_block_state = 1024 * 4 * (2 * 3 + 2) + 16 * 1024;
+    let spill_dir = twin.dir.join("slab_ring");
+    let tight = PruneConfig {
+        slab_bytes: one_block_state,
+        spill_dir: Some(spill_dir.clone()),
+        ..PruneConfig::default()
+    };
+    let spilled = run_twin_arm(&twin, native, &tight);
+
+    assert!(spilled.slab_spilled_bytes > 0, "1-block budget must spill");
+    assert!(spilled.slab_reloads > 0, "spilled state must reload on the next touch");
+    assert!(spilled.result.converged);
+    assert_eq!(
+        roomy.result.centers.as_slice(),
+        spilled.result.centers.as_slice(),
+        "spill/reload roundtrip changed results — the codec is not bitwise"
+    );
+    assert_eq!(roomy.records_pruned, spilled.records_pruned, "pruning decisions diverged");
+    assert_eq!(roomy.jobs, spilled.jobs);
+
+    std::fs::remove_dir_all(&twin.dir).ok();
 }
 
 #[test]

@@ -13,11 +13,13 @@ use bigfcm::fcm::loops::{
     run_fcm, run_fcm_session, FcmParams, PruneConfig, SessionAlgo, Variant,
 };
 use bigfcm::fcm::native::{
-    classic_partials_native, classic_partials_scalar, fcm_partials_native, fcm_partials_scalar,
-    kmeans_partials_native, kmeans_partials_scalar, memberships,
+    classic_partials_fused, classic_partials_native, classic_partials_scalar,
+    fcm_partials_native, fcm_partials_scalar, kmeans_partials_native, kmeans_partials_scalar,
+    memberships,
 };
+use bigfcm::fcm::{BlockBounds, BoundConfig, BoundModel, Kernel};
 use bigfcm::fcm::seeding::random_records;
-use bigfcm::fcm::{max_center_shift2, ChunkBackend, NativeBackend};
+use bigfcm::fcm::{max_center_shift2, KernelBackend, NativeBackend};
 use bigfcm::hdfs::BlockStore;
 use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions};
 use bigfcm::metrics::hungarian_max;
@@ -313,7 +315,7 @@ fn prop_pruned_session_converges_to_exact_centers() {
             let mut rng = Pcg::new(51_000 + case);
             let v0 = random_records(&data.features, 3, &mut rng);
             let params = FcmParams { epsilon: 1e-10, variant, ..Default::default() };
-            let backend: Arc<dyn ChunkBackend> = Arc::new(NativeBackend);
+            let backend: Arc<dyn KernelBackend> = Arc::new(NativeBackend);
             let mut e1 = Engine::new(EngineOptions::default(), Config::default().overhead);
             let exact = run_fcm_session(
                 &mut e1,
@@ -645,7 +647,7 @@ fn prop_variants_converge_same_on_imbalanced_mixtures() {
     }
 }
 
-/// Backend object safety: the pipeline accepts Arc<dyn ChunkBackend> of any
+/// Backend object safety: the pipeline accepts Arc<dyn KernelBackend> of any
 /// implementation and produces finite results.
 #[test]
 fn prop_pipeline_finite_for_random_configs() {
@@ -659,7 +661,7 @@ fn prop_pipeline_finite_for_random_configs() {
         cfg.fcm.fuzzifier = [1.2, 2.0, 2.8][rng.next_index(3)];
         cfg.fcm.epsilon = [5e-3, 5e-7, 5e-11][rng.next_index(3)];
         cfg.seed = rng.next_u64();
-        let backend: Arc<dyn ChunkBackend> = Arc::new(NativeBackend);
+        let backend: Arc<dyn KernelBackend> = Arc::new(NativeBackend);
         let run = BigFcm::new(cfg)
             .backend(backend)
             .clusters(c)
@@ -668,5 +670,166 @@ fn prop_pipeline_finite_for_random_configs() {
         assert!(run.centers.as_slice().iter().all(|v| v.is_finite()), "case {case}");
         assert!(run.weights.iter().all(|w| w.is_finite() && *w >= 0.0), "case {case}");
         assert_eq!(run.centers.rows(), c);
+    }
+}
+
+/// The fused (pair-loop-free) classic kernel agrees with the textbook
+/// per-pair-powf scalar oracle — the oracle contract of the ROADMAP's
+/// "skip the O(C²) pair loop" follow-up, across the fuzzifier regimes.
+#[test]
+fn prop_fused_classic_matches_pair_oracle() {
+    for case in 0..CASES {
+        let mut rng = Pcg::new(23_000 + case);
+        let n = 1 + rng.next_index(200);
+        let d = 1 + rng.next_index(10);
+        let c = 1 + rng.next_index(7);
+        let x = rand_matrix(&mut rng, n, d, 1.5);
+        let v = rand_matrix(&mut rng, c, d, 1.5);
+        let w = rand_weights(&mut rng, n);
+        for m in [1.2, 2.0, 2.8] {
+            let a = classic_partials_fused(&x, &v, &w, m);
+            let b = classic_partials_scalar(&x, &v, &w, m);
+            for (p, q) in a.w_acc.iter().zip(&b.w_acc) {
+                assert!(
+                    (p - q).abs() <= 1e-6 + 1e-4 * q.abs(),
+                    "case {case}: wacc {p} vs {q} (m={m})"
+                );
+            }
+            for (p, q) in a.v_num.as_slice().iter().zip(b.v_num.as_slice()) {
+                assert!((p - q).abs() <= 1e-3 + 1e-4 * q.abs(), "case {case}: vnum");
+            }
+            let rel = (a.objective - b.objective).abs() / b.objective.max(1e-9);
+            assert!(rel < 1e-4, "case {case}: objective rel {rel} (m={m})");
+        }
+    }
+}
+
+/// Bound-model equivalence: over a sequence of small center shifts, the
+/// dmin- and elkan-pruned partials both stay within the perturbation
+/// tolerance of the exact pass — for the Fast and (fused) Classic kernels
+/// at m = 2 and m ≠ 2 — and the per-center elkan bound prunes at least as
+/// many records as the single-d_min bound on the pass right after a
+/// common refresh (where domination is exact: δ_j ≤ δ_max and
+/// lb_j ≥ d_min), and in total.
+#[test]
+fn prop_elkan_vs_dmin_vs_exact_partials_equivalence() {
+    for case in 0..4u64 {
+        for kernel in [Kernel::FcmFast, Kernel::FcmClassic] {
+            for m in [2.0, 1.7] {
+                let data = blobs(400, 3, 3, 0.2, 80_000 + case);
+                let x = &data.features;
+                let w = vec![1.0f32; 400];
+                // Settle centers first so records hold comfortable bounds,
+                // then drift them in small steps (the mid/late-shift
+                // regime pruning targets).
+                let mut rng = Pcg::new(81_000 + case);
+                let v0 = random_records(x, 3, &mut rng);
+                let params = FcmParams { epsilon: 1e-8, m, ..Default::default() };
+                let settled = run_fcm(&NativeBackend, x, &w, v0, &params).unwrap().centers;
+                let tol = 1e-2;
+                let cfg = |model| BoundConfig { model, tolerance: tol, refresh_every: 16 };
+                let mut st_dmin = BlockBounds::default();
+                let mut st_elkan = BlockBounds::default();
+                let (mut dmin_first, mut elkan_first) = (0usize, 0usize);
+                let (mut dmin_total, mut elkan_total) = (0usize, 0usize);
+                let mut v = settled.clone();
+                for t in 0..6 {
+                    let (pd, nd) = NativeBackend
+                        .pruned_partials(kernel, x, &v, &w, m, &mut st_dmin, &cfg(BoundModel::DMin))
+                        .unwrap();
+                    let (pe, ne) = NativeBackend
+                        .pruned_partials(kernel, x, &v, &w, m, &mut st_elkan, &cfg(BoundModel::Elkan))
+                        .unwrap();
+                    let exact = NativeBackend.exact_partials(kernel, x, &v, &w, m).unwrap();
+                    for arm in [&pd, &pe] {
+                        for (a, b) in arm.w_acc.iter().zip(&exact.w_acc) {
+                            let rel = (a - b).abs() / b.abs().max(1e-9);
+                            assert!(
+                                rel < 10.0 * tol,
+                                "case {case} {kernel:?} m={m} t={t}: w_acc drift {rel}"
+                            );
+                        }
+                        let rel =
+                            (arm.objective - exact.objective).abs() / exact.objective.max(1e-9);
+                        assert!(
+                            rel < 10.0 * tol,
+                            "case {case} {kernel:?} m={m} t={t}: objective drift {rel}"
+                        );
+                    }
+                    if t == 1 {
+                        dmin_first = nd;
+                        elkan_first = ne;
+                    }
+                    dmin_total += nd;
+                    elkan_total += ne;
+                    // The mid-shift regime: one center keeps drifting while
+                    // the others are all but settled. The single-d_min
+                    // bound pays the worst center's shift everywhere; the
+                    // per-center bound only charges center 0's drift
+                    // against records actually near center 0.
+                    for val in v.row_mut(0).iter_mut() {
+                        *val += 4e-4;
+                    }
+                    for j in 1..3 {
+                        for val in v.row_mut(j).iter_mut() {
+                            *val += 2e-5;
+                        }
+                    }
+                }
+                assert!(
+                    dmin_first > 0,
+                    "case {case} {kernel:?} m={m}: dmin never pruned after refresh"
+                );
+                assert!(
+                    elkan_first >= dmin_first,
+                    "case {case} {kernel:?} m={m}: elkan ({elkan_first}) under dmin ({dmin_first}) right after refresh"
+                );
+                assert!(
+                    elkan_total >= dmin_total,
+                    "case {case} {kernel:?} m={m}: elkan total {elkan_total} under dmin {dmin_total}"
+                );
+            }
+        }
+    }
+}
+
+/// The slab spill codec is bitwise under random shapes and both bound
+/// models: a spilled-and-reloaded state re-serialises to the identical
+/// image and drives the next pruned pass to identical partials and
+/// pruning decisions.
+#[test]
+fn prop_spill_roundtrip_preserves_pruning_bitwise() {
+    use bigfcm::mapreduce::SlabState;
+    for case in 0..8u64 {
+        let mut rng = Pcg::new(90_000 + case);
+        let n = 32 + rng.next_index(200);
+        let d = 1 + rng.next_index(8);
+        let c = 2 + rng.next_index(5);
+        let kernel = [Kernel::FcmFast, Kernel::FcmClassic, Kernel::KMeans][rng.next_index(3)];
+        let model = [BoundModel::DMin, BoundModel::Elkan][rng.next_index(2)];
+        let x = rand_matrix(&mut rng, n, d, 2.0);
+        let mut v = rand_matrix(&mut rng, c, d, 2.0);
+        let w = rand_weights(&mut rng, n);
+        let cfg = BoundConfig { model, tolerance: 1e-2, refresh_every: 8 };
+        let mut state = BlockBounds::default();
+        for _ in 0..2 {
+            NativeBackend.pruned_partials(kernel, &x, &v, &w, 2.0, &mut state, &cfg).unwrap();
+            for val in v.as_mut_slice().iter_mut() {
+                *val += 1e-4;
+            }
+        }
+        let img = state.spill().expect("case {case}: bounds must be spillable");
+        let mut restored = BlockBounds::unspill(&img)
+            .unwrap_or_else(|| panic!("case {case}: image failed to decode"));
+        assert_eq!(img, restored.spill().unwrap(), "case {case}: re-spill differs");
+        let (pa, na) =
+            NativeBackend.pruned_partials(kernel, &x, &v, &w, 2.0, &mut state, &cfg).unwrap();
+        let (pb, nb) = NativeBackend
+            .pruned_partials(kernel, &x, &v, &w, 2.0, &mut restored, &cfg)
+            .unwrap();
+        assert_eq!(na, nb, "case {case}: pruning decisions diverged after reload");
+        assert_eq!(pa.w_acc, pb.w_acc, "case {case}");
+        assert_eq!(pa.v_num.as_slice(), pb.v_num.as_slice(), "case {case}");
+        assert_eq!(pa.objective, pb.objective, "case {case}");
     }
 }

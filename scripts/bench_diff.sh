@@ -86,9 +86,14 @@ if cur_sess:
         "per_job_reduce_wall_s",
         "session_reduce_wall_s",
         "records_pruned",
+        "records_pruned_dmin",
+        "records_pruned_elkan",
+        "slab_spilled_bytes",
+        "slab_reloads",
         "combine_depth",
         "per_job_modelled_s",
         "session_modelled_s",
+        "dmin_modelled_s",
     ]
     print(f"{'counter':<26} {'baseline':>14} {'now':>14}")
     for key in keys:
@@ -102,6 +107,9 @@ if cur_sess:
         print(f"reduce-wall ratio (session / per-job): {se / pj:.2f}x")
     if not cur_sess.get("records_pruned"):
         print("note: records_pruned == 0 this run — pruning never engaged; investigate")
+    pd, pe = cur_sess.get("records_pruned_dmin"), cur_sess.get("records_pruned_elkan")
+    if pd is not None and pe is not None and pe < pd:
+        print(f"note: elkan pruned fewer records than dmin ({pe} < {pd}) — bound regression; investigate")
 EOF
 
 exit 0
