@@ -1,0 +1,143 @@
+//! End-to-end serving walkthrough: train → persist a model bundle →
+//! answer concurrent online membership queries → bulk-label a store.
+//!
+//! ```bash
+//! cargo run --release --example online_serving
+//! ```
+//!
+//! Mirrors the production shape: the training half runs the
+//! iteration-resident session loop; the serving half never touches the
+//! training data again — everything it needs travels through the
+//! checksummed `ModelBundle` file, exactly what `bigfcm run --save-model`
+//! writes and `bigfcm serve-bench` / `bigfcm score` load.
+
+use std::sync::Arc;
+
+use bigfcm::config::OverheadConfig;
+use bigfcm::data::normalize::Scaler;
+use bigfcm::data::synth::blobs;
+use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo, Variant};
+use bigfcm::fcm::{KernelBackend, NativeBackend};
+use bigfcm::hdfs::BlockStore;
+use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions};
+use bigfcm::serve::{dense_from_top_k, run_score_job, ModelBundle, ScoreService, ServeOptions};
+
+fn main() {
+    let tmp = std::env::temp_dir().join(format!("bigfcm_serving_{}", std::process::id()));
+    std::fs::remove_dir_all(&tmp).ok();
+    std::fs::create_dir_all(&tmp).expect("create scratch dir");
+
+    // ---- Train (the first half of the two-phase shape) -----------------
+    let data = blobs(8_192, 6, 4, 0.25, 42);
+    let scaler = Scaler::min_max(&data.features);
+    let mut normalized = data.features.clone();
+    scaler.apply(&mut normalized);
+    let store = Arc::new(BlockStore::in_memory("blobs", &normalized, 1_024, 4).unwrap());
+    let backend: Arc<dyn KernelBackend> = Arc::new(NativeBackend);
+    let mut engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+    let mut rng = bigfcm::prng::Pcg::new(43);
+    let v0 = bigfcm::fcm::seeding::random_records(&normalized, 4, &mut rng);
+    let params = FcmParams { epsilon: 1e-9, max_iterations: 60, ..Default::default() };
+    let run = run_fcm_session(
+        &mut engine,
+        &store,
+        Arc::clone(&backend),
+        SessionAlgo::Fcm,
+        v0,
+        &params,
+        &PruneConfig::default(),
+        SessionOptions::default(),
+    )
+    .expect("training session");
+    println!(
+        "trained: {} iterations, converged={}, records_pruned={}",
+        run.result.iterations, run.result.converged, run.records_pruned
+    );
+
+    // ---- Persist + reload the bundle ----------------------------------
+    let mut bundle =
+        ModelBundle::new(run.result.centers.clone(), SessionAlgo::Fcm, Variant::Fast, params.m);
+    bundle.weights = run.result.weights.clone();
+    bundle.scaler = Some(scaler);
+    bundle.dataset = "blobs".into();
+    bundle.seed = 42;
+    bundle.trained_rows = data.features.rows() as u64;
+    bundle.iterations = run.result.iterations as u64;
+    bundle.objective = run.result.objective;
+    bundle.converged = run.result.converged;
+    bundle.records_pruned = run.records_pruned;
+    let model_path = tmp.join("model.bfm");
+    let bytes = bundle.save(&model_path).expect("save bundle");
+    let reloaded = ModelBundle::load(&model_path).expect("load bundle");
+    assert_eq!(reloaded.encode(), bundle.encode(), "bundle roundtrip must be bitwise");
+    println!("bundle: {} B at {}\n{}", bytes, model_path.display(), reloaded.summary());
+
+    // ---- Online service: concurrent clients, micro-batched scoring ----
+    let service = Arc::new(
+        ScoreService::new(
+            reloaded.clone(),
+            Arc::clone(&backend),
+            ServeOptions { linger: std::time::Duration::from_millis(2), ..Default::default() },
+        )
+        .expect("score service"),
+    );
+    let raw = Arc::new(data.features.clone());
+    let clients = 4usize;
+    let per_client = 200usize;
+    let handles: Vec<_> = (0..clients)
+        .map(|ci| {
+            let svc = Arc::clone(&service);
+            let x = Arc::clone(&raw);
+            std::thread::spawn(move || {
+                for r in 0..per_client {
+                    let u = svc.score(x.row((ci * 2048 + r) % x.rows())).expect("score");
+                    let s: f32 = u.iter().sum();
+                    assert!((s - 1.0).abs() < 1e-5, "membership row sums to {s}");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let stats = service.stats();
+    println!(
+        "online: {} requests over {} batches (fill {:.2}), p50 {} us / p95 {} us / p99 {} us",
+        stats.requests, stats.batches, stats.batch_fill, stats.p50_us, stats.p95_us, stats.p99_us
+    );
+    assert!(stats.batch_fill > 1.0, "concurrent clients should coalesce");
+
+    // ---- Bulk ScoreJob: label the whole store -------------------------
+    let raw_store = Arc::new(BlockStore::in_memory("blobs-raw", &data.features, 1_024, 4).unwrap());
+    let out_dir = tmp.join("memberships");
+    let outcome = run_score_job(
+        &mut engine,
+        &raw_store,
+        Arc::new(reloaded),
+        backend,
+        2,
+        out_dir.clone(),
+    )
+    .expect("bulk score job");
+    println!(
+        "bulk: labeled {} records into {} blocks at {} (mean top-1 {:.3})",
+        outcome.totals.rows,
+        outcome.store.num_blocks(),
+        out_dir.display(),
+        outcome.totals.top1_mass / outcome.totals.rows as f64,
+    );
+    // Spot-check one labeled row against the online service.
+    let first = outcome.store.read_block(0).expect("read membership block");
+    let dense = dense_from_top_k(first.row(0), 4);
+    let online = service.score(data.features.row(0)).expect("online row 0");
+    let top = online
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    assert!((dense[top] - online[top]).abs() < 1e-6, "bulk and online disagree");
+    println!("bulk row 0 agrees with the online service on the top membership");
+
+    std::fs::remove_dir_all(&tmp).ok();
+}

@@ -105,7 +105,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: scale_susy [--bytes SIZE] [--cache-mib N] [--workers N] \
          [--block-rows N] [--max-wall-s S] [--session-iters N] \
-         [--slab-mib N] [--bounds dmin|elkan] [--spill-dir PATH] \
+         [--slab-mib N] [--bounds dmin|elkan|hamerly] [--spill-dir PATH] \
          [--dir PATH] [--keep] [--seed N]\n\
          SIZE accepts GiB/MiB/KiB suffixes, e.g. --bytes 2GiB; \
          --slab-mib 0 auto-sizes the pruning slab to the store and the \
@@ -311,6 +311,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let per_record = match args.bounds {
             BoundModel::DMin => 4 * (cfg.fcm.clusters as u64 + 2),
             BoundModel::Elkan => 4 * (2 * cfg.fcm.clusters as u64 + 2),
+            // Elkan's layout plus the per-record single fast bound.
+            BoundModel::Hamerly => 4 * (2 * cfg.fcm.clusters as u64 + 3),
         };
         let per_block = args.block_rows as u64 * per_record + 4096;
         if args.slab_mib > 0 {

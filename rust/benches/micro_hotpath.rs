@@ -15,13 +15,14 @@ use std::time::Instant;
 
 use bigfcm::config::OverheadConfig;
 use bigfcm::data::synth::susy_like;
+use bigfcm::data::Matrix;
 use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo};
 use bigfcm::fcm::native::{fcm_partials_native, fcm_partials_scalar};
-use bigfcm::fcm::{KernelBackend, NativeBackend};
+use bigfcm::fcm::{Kernel, KernelBackend, NativeBackend};
 use bigfcm::hdfs::BlockStore;
 use bigfcm::json;
 use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions};
-use bigfcm::runtime::PjrtRuntime;
+use bigfcm::runtime::{PjrtRuntime, PjrtShimBackend};
 
 const N: usize = 65_536;
 
@@ -78,6 +79,22 @@ fn main() {
         std::hint::black_box(fcm_partials_native(&data.features, &v, &w, 2.8));
     });
     rows_out.push(Row { key: "tiled_fcm_65536_m2.8", best_s: t_m28, rows: N });
+
+    // Serving-path kernel (`score_chunk`, crate::serve hot path): the
+    // native direct membership kernel vs the shim's padded-chunk
+    // derivation over the same rows.
+    let mut u = Matrix::zeros(N, 6);
+    let t_score = bench("score_chunk 65536 rows (native)", 5, || {
+        NativeBackend.score_chunk(Kernel::FcmFast, &data.features, &v, 2.0, &mut u).unwrap();
+        std::hint::black_box(u.get(0, 0));
+    });
+    rows_out.push(Row { key: "score_fcm_65536", best_s: t_score, rows: N });
+    let shim = PjrtShimBackend::new(4096);
+    let t_score_shim = bench("score_chunk 65536 rows (pjrt-shim)", 3, || {
+        shim.score_chunk(Kernel::FcmFast, &data.features, &v, 2.0, &mut u).unwrap();
+        std::hint::black_box(u.get(0, 0));
+    });
+    rows_out.push(Row { key: "score_fcm_shim_65536", best_s: t_score_shim, rows: N });
 
     // Throughput summary of the A/B.
     let t_tiled = rows_out

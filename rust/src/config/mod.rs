@@ -25,6 +25,14 @@ pub enum BoundModel {
     /// iterations (one center still moving, the rest settled) keep
     /// pruning where the single `d_min` bound stalls.
     Elkan,
+    /// Elkan's per-center lower bounds plus a Hamerly-style single bound
+    /// per record checked first: the cheap O(1) test (`δ_max ≤ tol ×
+    /// d_min` for FCM, the refined `δ_best + max_{j≠best} δ_j ≤ margin`
+    /// test for K-Means) prunes the common case without touching the C
+    /// per-center bounds, which remain as the exact fallback — so the
+    /// pruned set contains Elkan's while the per-record check usually
+    /// costs what DMin's does.
+    Hamerly,
 }
 
 impl BoundModel {
@@ -32,6 +40,7 @@ impl BoundModel {
         match s {
             "dmin" => Ok(BoundModel::DMin),
             "elkan" => Ok(BoundModel::Elkan),
+            "hamerly" => Ok(BoundModel::Hamerly),
             other => Err(Error::Config(format!("unknown bound model `{other}`"))),
         }
     }
@@ -40,7 +49,21 @@ impl BoundModel {
         match self {
             BoundModel::DMin => "dmin",
             BoundModel::Elkan => "elkan",
+            BoundModel::Hamerly => "hamerly",
         }
+    }
+
+    /// Whether this model's block state carries the per-record × per-center
+    /// lower-bound matrix (the Elkan layout).
+    pub fn keeps_lb(&self) -> bool {
+        !matches!(self, BoundModel::DMin)
+    }
+
+    /// Whether this model's block state carries the per-record single
+    /// nearest-center bound (the DMin layout; Hamerly keeps it as its O(1)
+    /// fast test on top of the lower bounds).
+    pub fn keeps_dmin(&self) -> bool {
+        !matches!(self, BoundModel::Elkan)
     }
 }
 
@@ -74,6 +97,10 @@ pub struct ClusterConfig {
     /// touch instead of being evicted and recomputed. Empty disables
     /// spilling (budget pressure evicts, as before).
     pub slab_spill_dir: String,
+    /// Scale a session's refresh cap (`PruneConfig::refresh_every`) by the
+    /// observed per-iteration shift trajectory: steady geometric shrink
+    /// doubles the cap (up to 8× the base), any shift growth snaps it back.
+    pub adaptive_refresh: bool,
 }
 
 impl Default for ClusterConfig {
@@ -89,7 +116,34 @@ impl Default for ClusterConfig {
             slab_mib: 64,
             bounds: BoundModel::Elkan,
             slab_spill_dir: String::new(),
+            adaptive_refresh: true,
         }
+    }
+}
+
+/// Serving-layer settings: the micro-batching score service and the bulk
+/// ScoreJob (see `crate::serve`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Max live records coalesced into one micro-batch.
+    pub max_batch: usize,
+    /// Batches are zero-padded up to a multiple of this row count (the
+    /// fixed-shape discipline a lowered device kernel wants).
+    pub pad_rows: usize,
+    /// Bounded admission-queue capacity; a full queue blocks enqueuers
+    /// (backpressure, counted in the service stats).
+    pub queue_cap: usize,
+    /// Microseconds the batcher lingers after the first request of a batch
+    /// to let concurrent requests coalesce (0 disables micro-batching).
+    pub linger_us: u64,
+    /// Memberships kept per record by the bulk ScoreJob's sparse output
+    /// rows (clamped to the model's cluster count).
+    pub top_k: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { max_batch: 64, pad_rows: 8, queue_cap: 1024, linger_us: 200, top_k: 3 }
     }
 }
 
@@ -233,6 +287,7 @@ pub struct Config {
     pub cluster: ClusterConfig,
     pub overhead: OverheadConfig,
     pub fcm: FcmConfig,
+    pub serve: ServeConfig,
     pub backend: Backend,
     /// Directory containing `manifest.json` + `*.hlo.txt`.
     pub artifacts_dir: PathBuf,
@@ -248,6 +303,7 @@ impl Default for Config {
             cluster: ClusterConfig::default(),
             overhead: OverheadConfig::default(),
             fcm: FcmConfig::default(),
+            serve: ServeConfig::default(),
             backend: Backend::Auto,
             artifacts_dir: PathBuf::from("artifacts"),
             data_dir: PathBuf::from("data_cache"),
@@ -307,6 +363,15 @@ impl Config {
             "cluster.slab_mib" => self.cluster.slab_mib = num!(usize),
             "cluster.bounds" => self.cluster.bounds = BoundModel::parse(value)?,
             "cluster.slab_spill_dir" => self.cluster.slab_spill_dir = value.to_string(),
+            "cluster.adaptive_refresh" => {
+                self.cluster.adaptive_refresh =
+                    value.parse::<bool>().map_err(|_| bad(key, value))?
+            }
+            "serve.max_batch" => self.serve.max_batch = num!(usize),
+            "serve.pad_rows" => self.serve.pad_rows = num!(usize),
+            "serve.queue_cap" => self.serve.queue_cap = num!(usize),
+            "serve.linger_us" => self.serve.linger_us = num!(u64),
+            "serve.top_k" => self.serve.top_k = num!(usize),
             "overhead.job_startup_s" => self.overhead.job_startup_s = num!(f64),
             "overhead.task_launch_s" => self.overhead.task_launch_s = num!(f64),
             "overhead.shuffle_s_per_mib" => self.overhead.shuffle_s_per_mib = num!(f64),
@@ -350,6 +415,12 @@ impl Config {
         if self.fcm.epsilon <= 0.0 || self.fcm.driver_epsilon <= 0.0 {
             return Err(Error::Config("epsilons must be positive".into()));
         }
+        if self.serve.max_batch == 0 || self.serve.pad_rows == 0 || self.serve.queue_cap == 0 {
+            return Err(Error::Config("serve sizes must be positive".into()));
+        }
+        if self.serve.top_k == 0 {
+            return Err(Error::Config("serve.top_k must be positive".into()));
+        }
         Ok(())
     }
 }
@@ -376,6 +447,10 @@ mod tests {
         c.set_kv("cluster.slab_mib=16").unwrap();
         c.set_kv("cluster.bounds=dmin").unwrap();
         c.set_kv("cluster.slab_spill_dir=/tmp/slab").unwrap();
+        c.set_kv("cluster.adaptive_refresh=false").unwrap();
+        c.set_kv("serve.max_batch=16").unwrap();
+        c.set_kv("serve.linger_us=500").unwrap();
+        c.set_kv("serve.top_k=2").unwrap();
         c.set_kv("fcm.epsilon=5e-3").unwrap();
         c.set_kv("fcm.driver_preclustering=false").unwrap();
         c.set_kv("runtime.backend=native").unwrap();
@@ -386,9 +461,26 @@ mod tests {
         assert_eq!(c.cluster.slab_mib, 16);
         assert_eq!(c.cluster.bounds, BoundModel::DMin);
         assert_eq!(c.cluster.slab_spill_dir, "/tmp/slab");
+        assert!(!c.cluster.adaptive_refresh);
+        assert_eq!(c.serve.max_batch, 16);
+        assert_eq!(c.serve.linger_us, 500);
+        assert_eq!(c.serve.top_k, 2);
         assert_eq!(c.fcm.epsilon, 5e-3);
         assert!(!c.fcm.driver_preclustering);
         assert_eq!(c.backend, Backend::Native);
+    }
+
+    #[test]
+    fn bound_model_parse_roundtrips() {
+        for model in [BoundModel::DMin, BoundModel::Elkan, BoundModel::Hamerly] {
+            assert_eq!(BoundModel::parse(model.as_str()).unwrap(), model);
+        }
+        assert!(BoundModel::parse("nope").is_err());
+        // Layout flags: hamerly carries both the lb matrix and the single
+        // per-record bound.
+        assert!(BoundModel::Hamerly.keeps_lb() && BoundModel::Hamerly.keeps_dmin());
+        assert!(!BoundModel::DMin.keeps_lb() && BoundModel::DMin.keeps_dmin());
+        assert!(BoundModel::Elkan.keeps_lb() && !BoundModel::Elkan.keeps_dmin());
     }
 
     #[test]

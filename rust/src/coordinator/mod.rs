@@ -47,6 +47,12 @@ pub struct BigFcmRun {
     pub sim: SimCost,
     /// Reducer iterations (WFCM merge convergence).
     pub reduce_iterations: usize,
+    /// Final reducer objective (stored into saved model bundles).
+    pub objective: f64,
+    /// Whether the WFCM reduce met its epsilon criterion (stored into
+    /// saved model bundles — a capped, unconverged reduce must not be
+    /// persisted as converged provenance).
+    pub converged: bool,
 }
 
 impl BigFcmRun {
@@ -167,6 +173,8 @@ impl BigFcm {
             wall: started.elapsed(),
             sim: engine.clock().cost(),
             reduce_iterations: reduced.result.iterations,
+            objective: reduced.result.objective,
+            converged: reduced.result.converged,
             job: stats,
         })
     }

@@ -13,7 +13,30 @@ pub struct Scaler {
 }
 
 impl Scaler {
-    /// Min-max scaler mapping each feature to [0, 1].
+    /// Degenerate-column guard shared by both fitters: a constant column
+    /// (`range == 0`), an empty fit, or non-finite statistics (±∞ from an
+    /// empty scan, NaN from poisoned inputs) would otherwise put NaN/∞
+    /// into every normalized value — and a NaN feature poisons every
+    /// distance, membership and center downstream (the serving layer
+    /// scores through persisted scalers, so the guard is load-bearing
+    /// there too). Such columns collapse to the safe affine `(x − o) / 1`
+    /// with a finite `o` (0 when even the offset statistic is unusable).
+    fn guarded(offset: f32, range: f32) -> (f32, f32) {
+        let offset = if offset.is_finite() { offset } else { 0.0 };
+        if range.is_finite() && range > 0.0 {
+            (offset, range)
+        } else {
+            (offset, 1.0)
+        }
+    }
+
+    /// Identity transform over `d` features (bundles without stats).
+    pub fn identity(d: usize) -> Scaler {
+        Scaler { offset: vec![0.0; d], scale: vec![1.0; d] }
+    }
+
+    /// Min-max scaler mapping each feature to [0, 1]; zero-range columns
+    /// map to 0 (see [`Self::guarded`]).
     pub fn min_max(m: &Matrix) -> Scaler {
         let d = m.cols();
         let mut lo = vec![f32::INFINITY; d];
@@ -24,15 +47,18 @@ impl Scaler {
                 hi[j] = hi[j].max(row[j]);
             }
         }
-        let scale = lo
-            .iter()
-            .zip(&hi)
-            .map(|(&l, &h)| if h > l { h - l } else { 1.0 })
-            .collect();
-        Scaler { offset: lo, scale }
+        let mut offset = Vec::with_capacity(d);
+        let mut scale = Vec::with_capacity(d);
+        for (&l, &h) in lo.iter().zip(&hi) {
+            let (o, s) = Self::guarded(l, h - l);
+            offset.push(o);
+            scale.push(s);
+        }
+        Scaler { offset, scale }
     }
 
-    /// Z-score scaler (mean 0, std 1).
+    /// Z-score scaler (mean 0, std 1); zero-σ columns map to 0 (see
+    /// [`Self::guarded`]).
     pub fn z_score(m: &Matrix) -> Scaler {
         let d = m.cols();
         let n = m.rows().max(1) as f64;
@@ -52,18 +78,23 @@ impl Scaler {
                 var[j] += diff * diff;
             }
         }
-        let scale = var
-            .iter()
-            .map(|&v| {
-                let s = (v / n).sqrt() as f32;
-                if s > 0.0 {
-                    s
-                } else {
-                    1.0
-                }
-            })
-            .collect();
-        Scaler { offset: mean.iter().map(|&x| x as f32).collect(), scale }
+        let mut offset = Vec::with_capacity(d);
+        let mut scale = Vec::with_capacity(d);
+        for (&mu, &v) in mean.iter().zip(&var) {
+            let (o, s) = Self::guarded(mu as f32, (v / n).sqrt() as f32);
+            offset.push(o);
+            scale.push(s);
+        }
+        Scaler { offset, scale }
+    }
+
+    /// Apply to one record in place (the serving layer's per-request
+    /// transform — one row, no matrix wrapper).
+    pub fn apply_row(&self, row: &mut [f32]) {
+        assert_eq!(row.len(), self.offset.len(), "scaler dims mismatch");
+        for ((x, &o), &s) in row.iter_mut().zip(&self.offset).zip(&self.scale) {
+            *x = (*x - o) / s;
+        }
     }
 
     /// Apply in place.
@@ -71,10 +102,7 @@ impl Scaler {
         let d = m.cols();
         assert_eq!(d, self.offset.len(), "scaler dims mismatch");
         for i in 0..m.rows() {
-            let row = m.row_mut(i);
-            for j in 0..d {
-                row[j] = (row[j] - self.offset[j]) / self.scale[j];
-            }
+            self.apply_row(m.row_mut(i));
         }
     }
 
@@ -118,6 +146,67 @@ mod tests {
         let s = Scaler::min_max(&m);
         s.apply(&mut m);
         assert!(m.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn zero_range_and_zero_sigma_columns_normalize_to_zero() {
+        // The regression the serving layer depends on: a constant column
+        // next to a live one must come out as exactly 0, never NaN, under
+        // both fitters — and must stay finite on *unseen* records too.
+        let rows = vec![vec![7.0, 1.0], vec![7.0, 2.0], vec![7.0, 3.0]];
+        for fit in [Scaler::min_max, Scaler::z_score] {
+            let m = Matrix::from_rows(&rows);
+            let s = fit(&m);
+            let mut t = m.clone();
+            s.apply(&mut t);
+            for i in 0..3 {
+                assert!(t.row(i).iter().all(|v| v.is_finite()), "non-finite at row {i}");
+                assert_eq!(t.get(i, 0), 0.0, "constant column must map to 0");
+            }
+            // A record the fit never saw, off the constant value.
+            let mut unseen = vec![9.5f32, 2.5];
+            s.apply_row(&mut unseen);
+            assert!(unseen.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn non_finite_statistics_are_guarded() {
+        // NaN/∞ feature values poison the fitted statistics; the guard
+        // must still produce a finite affine map (offset 0, scale 1 for
+        // fully poisoned columns), not NaN normalized output.
+        let rows = vec![
+            vec![f32::NAN, 1.0, f32::INFINITY],
+            vec![f32::NAN, 2.0, f32::INFINITY],
+        ];
+        for fit in [Scaler::min_max, Scaler::z_score] {
+            let s = fit(&Matrix::from_rows(&rows));
+            assert!(s.offset.iter().all(|v| v.is_finite()), "offset not guarded");
+            assert!(s.scale.iter().all(|v| v.is_finite() && *v > 0.0), "scale not guarded");
+            let mut clean = vec![5.0f32, 1.5, 3.0];
+            s.apply_row(&mut clean);
+            assert!(clean.iter().all(|v| v.is_finite()));
+        }
+        // Empty fit (0 rows): ±∞ min/max stats must be guarded too.
+        let s = Scaler::min_max(&Matrix::zeros(0, 2));
+        let mut row = vec![1.0f32, 2.0];
+        s.apply_row(&mut row);
+        assert!(row.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn apply_row_matches_apply_and_identity_is_noop() {
+        let m = Matrix::from_rows(&[vec![2.0, -1.0], vec![8.0, 3.0]]);
+        let s = Scaler::min_max(&m);
+        let mut whole = m.clone();
+        s.apply(&mut whole);
+        let mut row = m.row(1).to_vec();
+        s.apply_row(&mut row);
+        assert_eq!(row.as_slice(), whole.row(1));
+        let id = Scaler::identity(2);
+        let mut same = m.row(0).to_vec();
+        id.apply_row(&mut same);
+        assert_eq!(same.as_slice(), m.row(0));
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub enum Error {
     BlockStore(String),
     Job(String),
     Clustering(String),
+    Bundle(String),
 }
 
 impl fmt::Display for Error {
@@ -38,6 +39,7 @@ impl fmt::Display for Error {
             Error::BlockStore(m) => write!(f, "hdfs block store: {m}"),
             Error::Job(m) => write!(f, "mapreduce job failed: {m}"),
             Error::Clustering(m) => write!(f, "clustering did not produce a result: {m}"),
+            Error::Bundle(m) => write!(f, "model bundle: {m}"),
         }
     }
 }

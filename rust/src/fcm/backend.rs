@@ -39,12 +39,22 @@
 //!   iterations where one center's drift freezes the `d_min` bound. The
 //!   per-record check is O(C) and the slab state grows by C·4 B/record
 //!   (charged — see [`BlockBounds::bytes`]).
+//! * **`hamerly`**: the `elkan` lower bounds plus a Hamerly-style single
+//!   bound per record checked *first*: the O(1) `δ_max ≤ tol × d_min`
+//!   test prunes the common case without touching the C per-center
+//!   bounds, which remain as the exact fallback — the pruned set contains
+//!   `elkan`'s while the per-record check usually costs what `dmin`'s
+//!   does (the ROADMAP "one-upper-bound tightening" follow-up).
 //!
 //! For K-Means the bound is not a tolerance but the exact assignment
 //! margin: `dmin` uses the classic `2·δ_max ≤ d₂ − d₁` test, `elkan` the
 //! per-center generalization `lb_j − δ_j ≥ lb_b + δ_b` for every rival
-//! `j` — under either, the cached assignment (and therefore the record's
-//! exact `w_acc`/`v_num` contribution) cannot have changed.
+//! `j`, and `hamerly` the refined single test `δ_b + max_{j≠b} δ_j ≤
+//! d₂ − d₁` (sound because every rival satisfies `d_j − δ_j ≥ d₂ −
+//! max_{j≠b} δ_j` while the best drifts at most `δ_b`) with the
+//! per-center test as fallback — under any of them, the cached assignment
+//! (and therefore the record's exact `w_acc`/`v_num` contribution) cannot
+//! have changed.
 //!
 //! `δ_j` accumulates center `j`'s *path length* since the block's last
 //! full refresh, which upper-bounds its movement since any later
@@ -218,6 +228,88 @@ pub trait KernelBackend: Send + Sync {
     fn kmeans_partials(&self, x: &Matrix, v: &Matrix, w: &[f32]) -> Result<Partials> {
         self.exact_partials(Kernel::KMeans, x, v, w, 0.0)
     }
+
+    /// Membership rows `u` (n × C) of `x` against centers `v` — the
+    /// serving primitive behind [`crate::serve`] (the micro-batched score
+    /// service and the bulk ScoreJob). Provided generically from
+    /// [`Self::partials_with_bounds`]'s clamped per-center distances, so
+    /// every backend that can emit bound rows serves memberships with its
+    /// own execution shape (the PJRT shim keeps its padded fixed-row
+    /// chunks); backends with a direct kernel override (native). K-Means
+    /// rows are the one-hot assignment; FCM rows are the textbook
+    /// distribution, identical for every FCM kernel.
+    fn score_chunk(
+        &self,
+        kernel: Kernel,
+        x: &Matrix,
+        v: &Matrix,
+        m: f64,
+        u: &mut Matrix,
+    ) -> Result<()> {
+        let (n, c) = (x.rows(), v.rows());
+        debug_assert_eq!(u.rows(), n);
+        debug_assert_eq!(u.cols(), c);
+        if n == 0 || c == 0 {
+            return Ok(());
+        }
+        let w = vec![1.0f32; n];
+        let mut rows = BoundRows::for_kernel(kernel, n, c);
+        self.partials_with_bounds(kernel, x, v, &w, m, &mut rows)?;
+        memberships_from_bounds(kernel, &rows, m, u);
+        Ok(())
+    }
+}
+
+/// One record's FCM membership row from *clamped* squared distances —
+/// the single copy of the fused formulation `u_i = (dmin/d_i)^p / Σ_j
+/// (dmin/d_j)^p` (the dmin normalisation keeps every term ≤ 1, exactly
+/// like the kernels) that every serving path evaluates:
+/// [`memberships_from_bounds`] here and the tiled
+/// `fcm::native::score_rows_native`. The scalar `fcm::native::memberships`
+/// deliberately stays an *independent* evaluation (the num form) so it
+/// can serve as these paths' test oracle.
+pub(crate) fn membership_row_from_d2(d2: &[f64], p: f64, m2: bool, inv: &mut [f64], out: &mut [f32]) {
+    let mut dmin = f64::INFINITY;
+    for &v in d2 {
+        dmin = dmin.min(v);
+    }
+    let mut s = 0.0f64;
+    for (ri, &v) in inv.iter_mut().zip(d2) {
+        let r = dmin / v;
+        *ri = if m2 { r } else { r.powf(p) };
+        s += *ri;
+    }
+    for (ui, &ri) in out.iter_mut().zip(inv.iter()) {
+        *ui = (ri / s) as f32;
+    }
+}
+
+/// Derive membership rows from a bound-emitting pass's clamped per-center
+/// distances: the backend-portable half of the default
+/// [`KernelBackend::score_chunk`]. FCM rows go through
+/// [`membership_row_from_d2`], K-Means rows are the one-hot assignment.
+pub fn memberships_from_bounds(kernel: Kernel, rows: &BoundRows, m: f64, u: &mut Matrix) {
+    let (n, c) = (u.rows(), u.cols());
+    debug_assert_eq!(rows.d2.rows(), n);
+    debug_assert_eq!(rows.d2.cols(), c);
+    if kernel.is_kmeans() {
+        for k in 0..n {
+            let urow = u.row_mut(k);
+            urow.fill(0.0);
+            urow[rows.best[k] as usize] = 1.0;
+        }
+        return;
+    }
+    let p = 1.0 / (m - 1.0);
+    let m2 = m == 2.0;
+    let mut inv = vec![0.0f64; c];
+    let mut d2v = vec![0.0f64; c];
+    for k in 0..n {
+        for (dv, &d2) in d2v.iter_mut().zip(rows.d2.row(k)) {
+            *dv = d2 as f64;
+        }
+        membership_row_from_d2(&d2v, p, m2, &mut inv, u.row_mut(k));
+    }
 }
 
 /// Per-block sticky bound state — layout owned here, maintained by the
@@ -289,6 +381,50 @@ impl Default for BlockBounds {
     }
 }
 
+/// Hoisted per-pass shift thresholds of the record-level bound tests.
+struct ShiftInfo {
+    /// δ_max / tol — the FCM single-bound test in distance units.
+    thr_dmin: f64,
+    /// 2 · δ_max — the K-Means `dmin` margin test.
+    two_delta: f64,
+    /// Largest per-center accumulated shift, the center attaining it, and
+    /// the runner-up (the K-Means `hamerly` test's `max_{j≠best} δ_j`).
+    delta_top: f64,
+    delta_top_idx: usize,
+    delta_second: f64,
+}
+
+impl ShiftInfo {
+    fn new(delta: &[f64], delta_max: f64, tol: f64) -> Self {
+        let (mut top, mut second, mut idx) = (0.0f64, 0.0f64, 0usize);
+        for (j, &d) in delta.iter().enumerate() {
+            if d > top {
+                second = top;
+                top = d;
+                idx = j;
+            } else if d > second {
+                second = d;
+            }
+        }
+        Self {
+            thr_dmin: delta_max / tol,
+            two_delta: 2.0 * delta_max,
+            delta_top: top,
+            delta_top_idx: idx,
+            delta_second: second,
+        }
+    }
+
+    /// `max_{j≠b} δ_j` in O(1).
+    fn max_other(&self, b: usize) -> f64 {
+        if b == self.delta_top_idx {
+            self.delta_second
+        } else {
+            self.delta_top
+        }
+    }
+}
+
 /// Running block minima of one pass (replayed records fold their cached
 /// bounds, recomputed records their fresh ones).
 struct Mins {
@@ -299,7 +435,7 @@ struct Mins {
 
 impl Mins {
     fn new(kernel: Kernel, model: BoundModel, c: usize) -> Self {
-        let lb = if model == BoundModel::Elkan && !kernel.is_kmeans() {
+        let lb = if model.keeps_lb() && !kernel.is_kmeans() {
             vec![f32::INFINITY; c]
         } else {
             Vec::new()
@@ -310,11 +446,14 @@ impl Mins {
     fn fold_cached(&mut self, st: &BlockBounds, kernel: Kernel, k: usize) {
         if kernel.is_kmeans() {
             self.margin = self.margin.min(st.margin[k]);
-        } else if st.model == BoundModel::Elkan {
+            return;
+        }
+        if st.model.keeps_lb() {
             for (m, &lb) in self.lb.iter_mut().zip(st.lb.row(k)) {
                 *m = (*m).min(lb);
             }
-        } else {
+        }
+        if st.model.keeps_dmin() {
             self.d_min = self.d_min.min(st.d_min[k]);
         }
     }
@@ -373,13 +512,15 @@ impl BlockBounds {
             let km = self.best.len() == n && self.margin.len() == n;
             match cfg.model {
                 BoundModel::DMin => km,
-                BoundModel::Elkan => km && lb_ok,
+                BoundModel::Elkan | BoundModel::Hamerly => km && lb_ok,
             }
         } else {
             let fcm = self.um.rows() == n && self.um.cols() == c;
+            let elkan_ok = fcm && lb_ok && self.lb_block.len() == c;
             match cfg.model {
                 BoundModel::DMin => fcm && self.d_min.len() == n,
-                BoundModel::Elkan => fcm && lb_ok && self.lb_block.len() == c,
+                BoundModel::Elkan => elkan_ok,
+                BoundModel::Hamerly => elkan_ok && self.d_min.len() == n,
             }
         }
     }
@@ -401,51 +542,57 @@ impl BlockBounds {
     /// cached block partials replay without touching a record.
     fn block_prunable(&self, kernel: Kernel, delta_max: f64, tol: f64) -> bool {
         if kernel.is_kmeans() {
-            2.0 * delta_max <= self.margin_block as f64
-        } else {
-            match self.model {
-                BoundModel::DMin => delta_max <= tol * self.d_min_block as f64,
-                BoundModel::Elkan => self
-                    .lb_block
-                    .iter()
-                    .zip(&self.delta)
-                    .all(|(&lb, &dj)| dj <= tol * lb as f64),
-            }
+            return 2.0 * delta_max <= self.margin_block as f64;
+        }
+        let dmin_ok = |st: &Self| delta_max <= tol * st.d_min_block as f64;
+        let lb_ok = |st: &Self| {
+            st.lb_block.iter().zip(&st.delta).all(|(&lb, &dj)| dj <= tol * lb as f64)
+        };
+        match self.model {
+            BoundModel::DMin => dmin_ok(self),
+            BoundModel::Elkan => lb_ok(self),
+            BoundModel::Hamerly => dmin_ok(self) || lb_ok(self),
         }
     }
 
-    /// Per-record bound test. `thr_dmin = δ_max / tol` and
-    /// `two_delta = 2·δ_max` are hoisted by the caller.
-    fn record_prunable(
-        &self,
-        kernel: Kernel,
-        k: usize,
-        tol: f64,
-        thr_dmin: f64,
-        two_delta: f64,
-    ) -> bool {
+    /// The elkan per-center FCM test for record `k`.
+    fn elkan_fcm_ok(&self, k: usize, tol: f64) -> bool {
+        self.lb.row(k).iter().zip(&self.delta).all(|(&lb, &dj)| dj <= tol * lb as f64)
+    }
+
+    /// The elkan per-center K-Means margin test for record `k`.
+    fn elkan_kmeans_ok(&self, k: usize) -> bool {
+        let lbr = self.lb.row(k);
+        let b = self.best[k] as usize;
+        let rival_floor = lbr[b] as f64 + self.delta[b];
+        lbr.iter()
+            .zip(&self.delta)
+            .enumerate()
+            .all(|(j, (&lb, &dj))| j == b || lb as f64 - dj >= rival_floor)
+    }
+
+    /// Per-record bound test, against the pass's hoisted [`ShiftInfo`].
+    fn record_prunable(&self, kernel: Kernel, k: usize, tol: f64, shift: &ShiftInfo) -> bool {
         if kernel.is_kmeans() {
             match self.model {
-                BoundModel::DMin => two_delta <= self.margin[k] as f64,
-                BoundModel::Elkan => {
-                    let lbr = self.lb.row(k);
+                BoundModel::DMin => shift.two_delta <= self.margin[k] as f64,
+                BoundModel::Elkan => self.elkan_kmeans_ok(k),
+                BoundModel::Hamerly => {
+                    // Hamerly fast test: the best center drifts at most
+                    // δ_b while every rival keeps d_j − δ_j ≥ d₂ −
+                    // max_{j≠b} δ_j — one comparison in the common case.
                     let b = self.best[k] as usize;
-                    let rival_floor = lbr[b] as f64 + self.delta[b];
-                    lbr.iter()
-                        .zip(&self.delta)
-                        .enumerate()
-                        .all(|(j, (&lb, &dj))| j == b || lb as f64 - dj >= rival_floor)
+                    self.delta[b] + shift.max_other(b) <= self.margin[k] as f64
+                        || self.elkan_kmeans_ok(k)
                 }
             }
         } else {
             match self.model {
-                BoundModel::DMin => self.d_min[k] as f64 >= thr_dmin,
-                BoundModel::Elkan => self
-                    .lb
-                    .row(k)
-                    .iter()
-                    .zip(&self.delta)
-                    .all(|(&lb, &dj)| dj <= tol * lb as f64),
+                BoundModel::DMin => self.d_min[k] as f64 >= shift.thr_dmin,
+                BoundModel::Elkan => self.elkan_fcm_ok(k, tol),
+                BoundModel::Hamerly => {
+                    self.d_min[k] as f64 >= shift.thr_dmin || self.elkan_fcm_ok(k, tol)
+                }
             }
         }
     }
@@ -480,7 +627,8 @@ impl BlockBounds {
     /// Scatter one gathered pass's [`BoundRows`] back into the per-record
     /// state, folding fresh block minima.
     fn scatter(&mut self, kernel: Kernel, idx: &[usize], rows: &BoundRows, mins: &mut Mins) {
-        let elkan = self.model == BoundModel::Elkan;
+        let keeps_lb = self.model.keeps_lb();
+        let keeps_dmin = self.model.keeps_dmin();
         for (r, &k) in idx.iter().enumerate() {
             self.obj[k] = rows.obj[r];
             let d2r = rows.d2.row(r);
@@ -502,26 +650,29 @@ impl BlockBounds {
                 };
                 self.margin[k] = margin;
                 mins.margin = mins.margin.min(margin);
-                if elkan {
+                if keeps_lb {
                     for (lb, &d2) in self.lb.row_mut(k).iter_mut().zip(d2r) {
                         *lb = (d2 as f64).sqrt() as f32;
                     }
                 }
             } else {
                 self.um.row_mut(k).copy_from_slice(rows.um.row(r));
-                if elkan {
+                let mut dmin = f64::INFINITY;
+                if keeps_lb {
                     for ((lb, m), &d2) in
                         self.lb.row_mut(k).iter_mut().zip(mins.lb.iter_mut()).zip(d2r)
                     {
                         let de = (d2 as f64).sqrt() as f32;
                         *lb = de;
                         *m = (*m).min(de);
+                        dmin = dmin.min(d2 as f64);
                     }
                 } else {
-                    let mut dmin = f64::INFINITY;
                     for &d2 in d2r {
                         dmin = dmin.min(d2 as f64);
                     }
+                }
+                if keeps_dmin {
                     let de = dmin.sqrt() as f32;
                     self.d_min[k] = de;
                     mins.d_min = mins.d_min.min(de);
@@ -555,7 +706,6 @@ impl BlockBounds {
         self.stale_iters = 0;
         self.obj = vec![0.0; n];
         self.block_payload_bytes = (n * d * 4) as u64;
-        let elkan = model == BoundModel::Elkan;
         if kernel.is_kmeans() {
             self.um = Matrix::zeros(0, 0);
             self.d_min = Vec::new();
@@ -565,9 +715,9 @@ impl BlockBounds {
             self.um = Matrix::zeros(n, c);
             self.best = Vec::new();
             self.margin = Vec::new();
-            self.d_min = if elkan { Vec::new() } else { vec![f32::INFINITY; n] };
+            self.d_min = if model.keeps_dmin() { vec![f32::INFINITY; n] } else { Vec::new() };
         }
-        self.lb = if elkan {
+        self.lb = if model.keeps_lb() {
             let mut lb = Matrix::zeros(n, c);
             lb.as_mut_slice().fill(f32::INFINITY);
             lb
@@ -634,8 +784,7 @@ impl BlockBounds {
             let p = self.partials.clone().expect("usable implies cached partials");
             return Ok((p, self.live));
         }
-        let thr_dmin = delta_max / tol;
-        let two_delta = 2.0 * delta_max;
+        let shift = ShiftInfo::new(&self.delta, delta_max, tol);
         let mut out = Partials::zeros(c, d);
         let mut pruned = 0usize;
         let mut idx: Vec<usize> = Vec::new();
@@ -645,7 +794,7 @@ impl BlockBounds {
             if w[k] == 0.0 {
                 continue; // padding contract
             }
-            if self.record_prunable(kernel, k, tol, thr_dmin, two_delta) {
+            if self.record_prunable(kernel, k, tol, &shift) {
                 self.replay(kernel, k, x, w, &mut out);
                 mins.fold_cached(self, kernel, k);
                 pruned += 1;
@@ -669,54 +818,56 @@ impl BlockBounds {
 }
 
 // ---------------------------------------------------------------------------
-// Bitwise spill codec (the slab's disk ring)
+// Bitwise LE codec primitives — shared by the slab's disk-ring spill images
+// here and the persisted model bundles of `crate::serve::bundle` (the same
+// checksummed write/read discipline, crate-internal).
 // ---------------------------------------------------------------------------
 
 const SPILL_MAGIC: u32 = 0xB16F_5AB1;
 const SPILL_VERSION: u8 = 1;
 
-fn put_u8(b: &mut Vec<u8>, v: u8) {
+pub(crate) fn put_u8(b: &mut Vec<u8>, v: u8) {
     b.push(v);
 }
 
-fn put_u32(b: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(b: &mut Vec<u8>, v: u32) {
     b.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(b: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(b: &mut Vec<u8>, v: u64) {
     b.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f32(b: &mut Vec<u8>, v: f32) {
+pub(crate) fn put_f32(b: &mut Vec<u8>, v: f32) {
     b.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f64(b: &mut Vec<u8>, v: f64) {
+pub(crate) fn put_f64(b: &mut Vec<u8>, v: f64) {
     b.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f32s(b: &mut Vec<u8>, vs: &[f32]) {
+pub(crate) fn put_f32s(b: &mut Vec<u8>, vs: &[f32]) {
     put_u32(b, vs.len() as u32);
     for &v in vs {
         put_f32(b, v);
     }
 }
 
-fn put_f64s(b: &mut Vec<u8>, vs: &[f64]) {
+pub(crate) fn put_f64s(b: &mut Vec<u8>, vs: &[f64]) {
     put_u32(b, vs.len() as u32);
     for &v in vs {
         put_f64(b, v);
     }
 }
 
-fn put_u32s(b: &mut Vec<u8>, vs: &[u32]) {
+pub(crate) fn put_u32s(b: &mut Vec<u8>, vs: &[u32]) {
     put_u32(b, vs.len() as u32);
     for &v in vs {
         put_u32(b, v);
     }
 }
 
-fn put_matrix(b: &mut Vec<u8>, m: &Matrix) {
+pub(crate) fn put_matrix(b: &mut Vec<u8>, m: &Matrix) {
     put_u32(b, m.rows() as u32);
     put_u32(b, m.cols() as u32);
     for &v in m.as_slice() {
@@ -724,18 +875,24 @@ fn put_matrix(b: &mut Vec<u8>, m: &Matrix) {
     }
 }
 
-/// Bounds-checked little-endian reader over a spill image.
-struct Cur<'a> {
+/// Length-prefixed byte blob (utf-8 names in model bundles).
+pub(crate) fn put_blob(b: &mut Vec<u8>, bytes: &[u8]) {
+    put_u32(b, bytes.len() as u32);
+    b.extend_from_slice(bytes);
+}
+
+/// Bounds-checked little-endian reader over a codec image.
+pub(crate) struct Cur<'a> {
     b: &'a [u8],
     p: usize,
 }
 
 impl<'a> Cur<'a> {
-    fn new(b: &'a [u8]) -> Self {
+    pub(crate) fn new(b: &'a [u8]) -> Self {
         Self { b, p: 0 }
     }
 
-    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> Option<&'a [u8]> {
         let end = self.p.checked_add(n)?;
         if end > self.b.len() {
             return None;
@@ -745,45 +902,45 @@ impl<'a> Cur<'a> {
         Some(s)
     }
 
-    fn u8(&mut self) -> Option<u8> {
+    pub(crate) fn u8(&mut self) -> Option<u8> {
         Some(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Option<u32> {
+    pub(crate) fn u32(&mut self) -> Option<u32> {
         Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
     }
 
-    fn u64(&mut self) -> Option<u64> {
+    pub(crate) fn u64(&mut self) -> Option<u64> {
         Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
     }
 
-    fn f32(&mut self) -> Option<f32> {
+    pub(crate) fn f32(&mut self) -> Option<f32> {
         Some(f32::from_le_bytes(self.take(4)?.try_into().ok()?))
     }
 
-    fn f64(&mut self) -> Option<f64> {
+    pub(crate) fn f64(&mut self) -> Option<f64> {
         Some(f64::from_le_bytes(self.take(8)?.try_into().ok()?))
     }
 
-    fn f32s(&mut self) -> Option<Vec<f32>> {
+    pub(crate) fn f32s(&mut self) -> Option<Vec<f32>> {
         let n = self.u32()? as usize;
         let raw = self.take(n.checked_mul(4)?)?;
         Some(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
-    fn f64s(&mut self) -> Option<Vec<f64>> {
+    pub(crate) fn f64s(&mut self) -> Option<Vec<f64>> {
         let n = self.u32()? as usize;
         let raw = self.take(n.checked_mul(8)?)?;
         Some(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
-    fn u32s(&mut self) -> Option<Vec<u32>> {
+    pub(crate) fn u32s(&mut self) -> Option<Vec<u32>> {
         let n = self.u32()? as usize;
         let raw = self.take(n.checked_mul(4)?)?;
         Some(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
-    fn matrix(&mut self) -> Option<Matrix> {
+    pub(crate) fn matrix(&mut self) -> Option<Matrix> {
         let rows = self.u32()? as usize;
         let cols = self.u32()? as usize;
         let len = rows.checked_mul(cols)?;
@@ -793,7 +950,12 @@ impl<'a> Cur<'a> {
         Some(Matrix::from_vec(data, rows, cols))
     }
 
-    fn done(&self) -> bool {
+    pub(crate) fn blob(&mut self) -> Option<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    pub(crate) fn done(&self) -> bool {
         self.p == self.b.len()
     }
 }
@@ -839,6 +1001,7 @@ impl SlabState for BlockBounds {
         put_u8(&mut b, match self.model {
             BoundModel::DMin => 0,
             BoundModel::Elkan => 1,
+            BoundModel::Hamerly => 2,
         });
         put_u8(&mut b, kernel_tag(self.kernel));
         put_matrix(&mut b, &self.centers_prev);
@@ -887,6 +1050,7 @@ impl SlabState for BlockBounds {
         let model = match c.u8()? {
             0 => BoundModel::DMin,
             1 => BoundModel::Elkan,
+            2 => BoundModel::Hamerly,
             _ => return None,
         };
         let kernel = kernel_from_tag(c.u8()?)?;
@@ -991,7 +1155,7 @@ mod tests {
 
     #[test]
     fn unmoved_centers_prune_whole_block() {
-        for model in [BoundModel::DMin, BoundModel::Elkan] {
+        for model in [BoundModel::DMin, BoundModel::Elkan, BoundModel::Hamerly] {
             let (x, v, w) = rand_case(100, 4, 3, 42);
             let mut state = BlockBounds::default();
             let (first, _) = NativeBackend
@@ -1073,7 +1237,7 @@ mod tests {
         }
         let tol = 1e-2;
         let mut counts = Vec::new();
-        for model in [BoundModel::DMin, BoundModel::Elkan] {
+        for model in [BoundModel::DMin, BoundModel::Elkan, BoundModel::Hamerly] {
             let cfg = BoundConfig { model, tolerance: tol, refresh_every: 8 };
             let mut state = BlockBounds::default();
             NativeBackend
@@ -1093,6 +1257,14 @@ mod tests {
             assert!(rel < 10.0 * tol, "{model:?}: pruned objective drift {rel}");
         }
         assert!(counts[1] >= counts[0], "elkan ({}) must dominate dmin ({})", counts[1], counts[0]);
+        // The hamerly fast test falls back to the elkan per-center test, so
+        // its pruned set contains elkan's.
+        assert!(
+            counts[2] >= counts[1],
+            "hamerly ({}) must dominate elkan ({})",
+            counts[2],
+            counts[1]
+        );
     }
 
     #[test]
@@ -1135,7 +1307,7 @@ mod tests {
         for val in v2.as_mut_slice().iter_mut() {
             *val += 0.01;
         }
-        for model in [BoundModel::DMin, BoundModel::Elkan] {
+        for model in [BoundModel::DMin, BoundModel::Elkan, BoundModel::Hamerly] {
             let mut state = BlockBounds::default();
             NativeBackend
                 .pruned_partials(Kernel::KMeans, &x, &v, &w, 0.0, &mut state, &cfg(model))
@@ -1179,12 +1351,106 @@ mod tests {
     }
 
     #[test]
+    fn hamerly_kmeans_fast_test_beats_dmin_when_far_center_drifts() {
+        // Separated clusters; only the *last* center drifts. The dmin
+        // margin test pays 2·δ_max everywhere; hamerly charges records of
+        // other clusters δ_b (≈0) + max_other, so it must prune at least
+        // as many — and the partials stay assignment-exact.
+        let (c, d, n) = (3usize, 3usize, 240usize);
+        let mut rng = Pcg::new(57);
+        let mut v = Matrix::zeros(c, d);
+        for i in 0..c {
+            v.set(i, i % d, 6.0 * (i as f32 + 1.0));
+        }
+        let mut x = Matrix::zeros(n, d);
+        for k in 0..n {
+            let home = k % c;
+            for j in 0..d {
+                x.set(k, j, v.get(home, j) + (rng.normal() * 0.2) as f32);
+            }
+        }
+        let w = vec![1.0f32; n];
+        let mut v2 = v.clone();
+        for val in v2.row_mut(c - 1).iter_mut() {
+            *val += 0.4; // one drifting center
+        }
+        let mut counts = Vec::new();
+        for model in [BoundModel::DMin, BoundModel::Hamerly] {
+            let mut state = BlockBounds::default();
+            NativeBackend
+                .pruned_partials(Kernel::KMeans, &x, &v, &w, 0.0, &mut state, &cfg(model))
+                .unwrap();
+            let (p, pruned) = NativeBackend
+                .pruned_partials(Kernel::KMeans, &x, &v2, &w, 0.0, &mut state, &cfg(model))
+                .unwrap();
+            counts.push(pruned);
+            let exact = kmeans_partials_native(&x, &v2, &w);
+            assert_eq!(p.w_acc, exact.w_acc, "{model:?}: pruned masses must stay exact");
+        }
+        assert!(
+            counts[1] >= counts[0],
+            "hamerly ({}) must prune at least as much as dmin ({})",
+            counts[1],
+            counts[0]
+        );
+        assert!(counts[1] > 0, "hamerly never pruned on separated data");
+    }
+
+    #[test]
+    fn hamerly_bytes_charge_the_extra_single_bound() {
+        // Hamerly stores the elkan layout plus the per-record d_min fast
+        // bound — n·4 extra bytes the slab accounting must see.
+        let (n, c) = (50usize, 4usize);
+        let (x, v, w) = rand_case(n, 3, c, 58);
+        let mut elkan = BlockBounds::default();
+        NativeBackend
+            .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, &mut elkan, &cfg(BoundModel::Elkan))
+            .unwrap();
+        let mut hamerly = BlockBounds::default();
+        NativeBackend
+            .pruned_partials(
+                Kernel::FcmFast,
+                &x,
+                &v,
+                &w,
+                2.0,
+                &mut hamerly,
+                &cfg(BoundModel::Hamerly),
+            )
+            .unwrap();
+        assert_eq!(hamerly.bytes(), elkan.bytes() + (n * 4) as u64);
+    }
+
+    #[test]
+    fn score_chunk_rows_are_distributions_and_kmeans_one_hot() {
+        let (x, v, _) = rand_case(96, 4, 5, 59);
+        for (kernel, m) in [(Kernel::FcmFast, 2.0), (Kernel::FcmClassic, 1.6)] {
+            let mut u = Matrix::zeros(96, 5);
+            NativeBackend.score_chunk(kernel, &x, &v, m, &mut u).unwrap();
+            for k in 0..96 {
+                let s: f32 = u.row(k).iter().sum();
+                assert!((s - 1.0).abs() < 1e-6, "{kernel:?} row {k} sums to {s}");
+                assert!(u.row(k).iter().all(|&ui| (0.0..=1.0 + 1e-6).contains(&ui)));
+            }
+        }
+        let mut u = Matrix::zeros(96, 5);
+        NativeBackend.score_chunk(Kernel::KMeans, &x, &v, 0.0, &mut u).unwrap();
+        for k in 0..96 {
+            let ones = u.row(k).iter().filter(|&&ui| ui == 1.0).count();
+            let zeros = u.row(k).iter().filter(|&&ui| ui == 0.0).count();
+            assert_eq!((ones, zeros), (1, 4), "K-Means row {k} is not one-hot");
+        }
+    }
+
+    #[test]
     fn spill_roundtrip_is_bitwise_and_resumes_identically() {
         let (x, v, w) = rand_case(80, 4, 3, 49);
         for (kernel, model) in [
             (Kernel::FcmFast, BoundModel::Elkan),
             (Kernel::FcmFast, BoundModel::DMin),
+            (Kernel::FcmFast, BoundModel::Hamerly),
             (Kernel::KMeans, BoundModel::Elkan),
+            (Kernel::KMeans, BoundModel::Hamerly),
         ] {
             let mut state = BlockBounds::default();
             NativeBackend

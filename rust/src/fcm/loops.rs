@@ -13,6 +13,7 @@
 //! native and PJRT backends.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::data::Matrix;
@@ -167,8 +168,18 @@ pub struct PruneConfig {
     /// below `tolerance ×` its bound.
     pub tolerance: f64,
     /// Force an exact (bound-refreshing) pass at least every this many
-    /// passes — the drift bound.
+    /// passes — the drift bound (the *base* cap when
+    /// [`Self::adaptive_refresh`] is on).
     pub refresh_every: usize,
+    /// Scale the drift cap by the observed per-iteration shift trajectory
+    /// (`cluster.adaptive_refresh`, ROADMAP iteration-residency item):
+    /// while the max center shift keeps shrinking geometrically the cap
+    /// doubles (up to 8× the base — late iterations barely move the
+    /// bounds, so periodic refreshes there are pure overhead), and any
+    /// shift growth snaps it back to the base. The per-center tolerance
+    /// test stays in force at every staleness, so the cap only trades
+    /// refresh cadence, never bound soundness.
+    pub adaptive_refresh: bool,
     /// Sticky-slab byte budget (see `cluster.slab_mib`).
     pub slab_bytes: u64,
     /// Disk spill ring for cold slab state (`cluster.slab_spill_dir`);
@@ -183,6 +194,7 @@ impl Default for PruneConfig {
             bounds: BoundModel::Elkan,
             tolerance: 5e-3,
             refresh_every: 4,
+            adaptive_refresh: true,
             slab_bytes: 64 * MIB,
             spill_dir: None,
         }
@@ -210,6 +222,7 @@ impl PruneConfig {
         Self {
             slab_bytes: cluster.slab_mib as u64 * MIB,
             bounds: cluster.bounds,
+            adaptive_refresh: cluster.adaptive_refresh,
             spill_dir,
             ..Default::default()
         }
@@ -236,19 +249,30 @@ pub enum SessionAlgo {
     KMeans,
 }
 
+impl SessionAlgo {
+    /// The (algo, variant) choice collapsed onto the backend's dispatch
+    /// token — the one place the mapping exists (the session loop and the
+    /// serving layer's [`crate::serve::ModelBundle`] both dispatch through
+    /// it).
+    pub fn kernel(&self, variant: Variant) -> Kernel {
+        match (self, variant) {
+            (SessionAlgo::Fcm, Variant::Fast) => Kernel::FcmFast,
+            (SessionAlgo::Fcm, Variant::Classic) => Kernel::FcmClassic,
+            (SessionAlgo::KMeans, _) => Kernel::KMeans,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SessionAlgo::Fcm => "fcm",
+            SessionAlgo::KMeans => "kmeans",
+        }
+    }
+}
+
 /// Distributed-cache key the session loop publishes the centers under
 /// (overwritten in place each iteration — the cache itself is resident).
 const KEY_SESSION_CENTERS: &str = "session_centers";
-
-/// The session's (algo, variant) choice collapsed onto the backend's
-/// dispatch token — the one place the mapping exists.
-fn session_kernel(algo: SessionAlgo, variant: Variant) -> Kernel {
-    match (algo, variant) {
-        (SessionAlgo::Fcm, Variant::Fast) => Kernel::FcmFast,
-        (SessionAlgo::Fcm, Variant::Classic) => Kernel::FcmClassic,
-        (SessionAlgo::KMeans, _) => Kernel::KMeans,
-    }
-}
 
 /// The per-iteration job: one pass of partials for every block against the
 /// current centers, pruned against the session's sticky slab, merged
@@ -263,6 +287,10 @@ struct SessionPartialsJob {
     slab: Arc<StateSlab<BlockBounds>>,
     prune: PruneConfig,
     bound_cfg: BoundConfig,
+    /// Effective refresh cap of the *next* pass — the session loop's
+    /// adaptive-refresh policy writes it between iterations (map tasks
+    /// only read it), overriding `bound_cfg.refresh_every`.
+    refresh_cap: AtomicUsize,
     /// Shared all-ones weight buffer, grown on demand — per-task weight
     /// allocation would put an O(rows) memset on the whole-block pruned
     /// path, whose entire point is to touch no record.
@@ -278,7 +306,22 @@ impl SessionPartialsJob {
         prune: PruneConfig,
     ) -> Self {
         let bound_cfg = prune.bound_cfg();
-        Self { kernel, m, backend, slab, prune, bound_cfg, ones: Mutex::new(Arc::new(Vec::new())) }
+        let refresh_cap = AtomicUsize::new(bound_cfg.refresh_every);
+        Self {
+            kernel,
+            m,
+            backend,
+            slab,
+            prune,
+            bound_cfg,
+            refresh_cap,
+            ones: Mutex::new(Arc::new(Vec::new())),
+        }
+    }
+
+    /// Set the refresh cap the next iteration's pruned passes run under.
+    fn set_refresh_cap(&self, cap: usize) {
+        self.refresh_cap.store(cap, Ordering::Relaxed);
     }
 
     /// All-ones weights of at least `n` entries (callers slice to size).
@@ -311,6 +354,10 @@ impl MapReduceJob for SessionPartialsJob {
         if !self.prune.enabled || ctx.attempt > 0 || ctx.doomed {
             return self.backend.exact_partials(self.kernel, block, &v, w, self.m);
         }
+        let bound_cfg = BoundConfig {
+            refresh_every: self.refresh_cap.load(Ordering::Relaxed),
+            ..self.bound_cfg
+        };
         let handle = self.slab.entry(ctx.task_id);
         let mut st = handle.lock().expect("slab state poisoned");
         let (p, pruned) = self.backend.pruned_partials(
@@ -320,7 +367,7 @@ impl MapReduceJob for SessionPartialsJob {
             w,
             self.m,
             &mut st,
-            &self.bound_cfg,
+            &bound_cfg,
         )?;
         let bytes = st.slab_bytes();
         drop(st); // never hold a state lock while taking the slab lock
@@ -428,7 +475,7 @@ pub fn run_fcm_session(
         spill,
     ));
     let job = Arc::new(SessionPartialsJob::new(
-        session_kernel(algo, params.variant),
+        algo.kernel(params.variant),
         params.m,
         backend,
         Arc::clone(&slab),
@@ -446,11 +493,20 @@ pub fn run_fcm_session(
     let mut peak_resident_bytes = 0u64;
     let mut spill_io_charged = 0u64;
     let mut per_iteration: Vec<JobStats> = Vec::new();
+    // Adaptive refresh cap (ROADMAP iteration-residency item): while the
+    // shift trajectory keeps shrinking geometrically the cap doubles (up
+    // to 8× the base), so settled tails are not interrupted by periodic
+    // refreshes; any shift growth snaps it back to the configured base.
+    let base_cap = prune.refresh_every.max(1);
+    let mut refresh_cap = base_cap;
+    let mut shrink_streak = 0usize;
+    let mut prev_shift = f64::INFINITY;
     for it in 1..=params.max_iterations {
         iterations = it;
         cache.put_matrix(KEY_SESSION_CENTERS, v.clone());
         let (partials, mut stats) = session.run_iteration(Arc::clone(&job), Arc::clone(&cache))?;
         let pruned_this = slab.take_records_pruned();
+        stats.refresh_cap = refresh_cap;
         stats.records_pruned = pruned_this;
         stats.slab_bytes = slab.bytes();
         stats.slab_evictions = slab.evictions();
@@ -475,6 +531,21 @@ pub fn run_fcm_session(
         let v_new = partials.into_centers(&v);
         let shift = max_center_shift2(&v, &v_new);
         v = v_new;
+        if prune.enabled && prune.adaptive_refresh {
+            if shift <= 0.5 * prev_shift {
+                shrink_streak += 1;
+                if shrink_streak >= 2 {
+                    refresh_cap = (refresh_cap * 2).min(base_cap * 8);
+                }
+            } else {
+                shrink_streak = 0;
+                if shift > prev_shift {
+                    refresh_cap = base_cap;
+                }
+            }
+            job.set_refresh_cap(refresh_cap);
+        }
+        prev_shift = shift;
         per_iteration.push(stats);
         if shift <= params.epsilon {
             if prune.enabled && pruned_this > 0 {
@@ -796,7 +867,7 @@ mod tests {
         let prune = PruneConfig::default();
         let slab = Arc::new(StateSlab::with_budget_bytes(prune.slab_bytes));
         let job = Arc::new(SessionPartialsJob::new(
-            session_kernel(SessionAlgo::Fcm, params.variant),
+            SessionAlgo::Fcm.kernel(params.variant),
             params.m,
             Arc::new(NativeBackend),
             Arc::clone(&slab),
@@ -833,6 +904,65 @@ mod tests {
             }
         }
         (v, pruned_total, converged)
+    }
+
+    #[test]
+    fn adaptive_refresh_extends_cap_on_smooth_convergence_and_stays_exact() {
+        let (store, v0, params, backend) = session_setup(97);
+        let mut exact_engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let exact = run_fcm_session(
+            &mut exact_engine,
+            &store,
+            Arc::clone(&backend),
+            SessionAlgo::Fcm,
+            v0.clone(),
+            &params,
+            &PruneConfig::disabled(),
+            SessionOptions::default(),
+        )
+        .unwrap();
+        let prune = PruneConfig { adaptive_refresh: true, ..PruneConfig::default() };
+        let mut engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let adaptive = run_fcm_session(
+            &mut engine,
+            &store,
+            Arc::clone(&backend),
+            SessionAlgo::Fcm,
+            v0.clone(),
+            &params,
+            &prune,
+            SessionOptions::default(),
+        )
+        .unwrap();
+        assert!(adaptive.result.converged);
+        let base = prune.refresh_every.max(1);
+        let max_cap = adaptive.per_iteration.iter().map(|s| s.refresh_cap).max().unwrap();
+        assert!(
+            max_cap > base,
+            "smoothly converging loop never extended the drift cap (max {max_cap}, base {base})"
+        );
+        assert!(
+            adaptive.per_iteration.iter().all(|s| s.refresh_cap <= base * 8),
+            "cap exceeded its 8× ceiling"
+        );
+        let shift = max_center_shift2(&exact.result.centers, &adaptive.result.centers);
+        assert!(shift < 1e-3, "adaptive-cap run drifted from exact: {shift}");
+
+        // The fixed-cap control: adaptivity off pins the cap to the base.
+        let fixed = PruneConfig { adaptive_refresh: false, ..PruneConfig::default() };
+        let mut fixed_engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let fixed_run = run_fcm_session(
+            &mut fixed_engine,
+            &store,
+            backend,
+            SessionAlgo::Fcm,
+            v0,
+            &params,
+            &fixed,
+            SessionOptions::default(),
+        )
+        .unwrap();
+        assert!(fixed_run.per_iteration.iter().all(|s| s.refresh_cap == base));
     }
 
     #[test]

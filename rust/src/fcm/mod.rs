@@ -14,7 +14,10 @@ pub mod native;
 pub mod seeding;
 pub mod wfcmpb;
 
-pub use backend::{BlockBounds, BoundConfig, BoundModel, BoundRows, Kernel, KernelBackend};
+pub use backend::{
+    memberships_from_bounds, BlockBounds, BoundConfig, BoundModel, BoundRows, Kernel,
+    KernelBackend,
+};
 pub use loops::{
     kmeans_loop, run_fcm, run_fcm_session, FcmParams, PruneConfig, SessionAlgo,
     SessionRunResult, Variant,

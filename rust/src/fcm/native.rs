@@ -107,6 +107,20 @@ impl KernelBackend for NativeBackend {
         Ok(partials_with_bounds_native(kernel, x, v, w, m, rows))
     }
 
+    /// Direct tiled membership kernel — skips the generic default's
+    /// partials accumulation and bound-row marshalling.
+    fn score_chunk(
+        &self,
+        kernel: Kernel,
+        x: &Matrix,
+        v: &Matrix,
+        m: f64,
+        u: &mut Matrix,
+    ) -> Result<()> {
+        score_rows_native(kernel, x, v, m, u);
+        Ok(())
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }
@@ -688,6 +702,55 @@ pub fn kmeans_partials_scalar(x: &Matrix, v: &Matrix, w: &[f32]) -> Partials {
     out
 }
 
+/// Tiled membership rows — the native [`KernelBackend::score_chunk`]
+/// override (the serving hot path of `crate::serve`): the f32-lane tile
+/// distance pass feeding one membership normalisation per record, no
+/// partials accumulation, no weights. Every FCM kernel yields the textbook
+/// distribution (the fused `u_i = (dmin/d_i)^p / Σ_j (dmin/d_j)^p` form,
+/// m = 2 transcendental-free); K-Means rows are the one-hot assignment.
+pub fn score_rows_native(kernel: Kernel, x: &Matrix, v: &Matrix, m: f64, u: &mut Matrix) {
+    let (n, c, d) = (x.rows(), v.rows(), v.cols());
+    debug_assert_eq!(u.rows(), n);
+    debug_assert_eq!(u.cols(), c);
+    if n == 0 || c == 0 {
+        return;
+    }
+    let kmeans = kernel.is_kmeans();
+    let p = if kmeans { 0.0 } else { 1.0 / (m - 1.0) };
+    let m2 = m == 2.0;
+    let panel = v.transposed();
+    let tile = tile_rows_for(d, c);
+    let mut d2t = vec![0.0f32; tile * c];
+    let mut inv = vec![0.0f64; c];
+    let mut d2v = vec![0.0f64; c];
+    for (base, t, rows) in x.iter_row_tiles(tile) {
+        tile_dist2(rows, t, d, &panel, &mut d2t[..t * c]);
+        for r in 0..t {
+            let lane = &d2t[r * c..(r + 1) * c];
+            let urow = u.row_mut(base + r);
+            if kmeans {
+                let mut best = 0usize;
+                let mut best_d = f64::INFINITY;
+                for (i, &d2) in lane.iter().enumerate() {
+                    let dd = (d2 as f64).max(DIST_EPS);
+                    if dd < best_d {
+                        best_d = dd;
+                        best = i;
+                    }
+                }
+                urow.fill(0.0);
+                urow[best] = 1.0;
+                continue;
+            }
+            for (dv, &d2) in d2v.iter_mut().zip(lane) {
+                *dv = (d2 as f64).max(DIST_EPS);
+            }
+            // The one shared copy of the fused membership formula.
+            crate::fcm::backend::membership_row_from_d2(&d2v, p, m2, &mut inv, urow);
+        }
+    }
+}
+
 /// Full membership matrix (N, C) — used by quality metrics, not the hot
 /// path. Still worth the m=2 fast path: silhouette/confusion passes over
 /// large N would otherwise pay a `powf` per (record, cluster).
@@ -998,6 +1061,72 @@ mod tests {
                 for (i, &d2) in rows.d2.row(k).iter().enumerate() {
                     assert!(d2 > 0.0, "{kernel:?}: unclamped d2 at ({k},{i})");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn score_rows_match_memberships_oracle() {
+        // The tiled scoring kernel is the serving path; the scalar
+        // memberships() is its oracle (identical distribution, different
+        // evaluation order).
+        let (x, v, _) = rand_case(120, 5, 4, 61);
+        for m in [1.4, 2.0, 2.7] {
+            for kernel in [Kernel::FcmFast, Kernel::FcmClassic, Kernel::FcmClassicPair] {
+                let mut u = Matrix::zeros(120, 4);
+                score_rows_native(kernel, &x, &v, m, &mut u);
+                let oracle = memberships(&x, &v, m);
+                for (a, b) in u.as_slice().iter().zip(oracle.as_slice()) {
+                    assert!((a - b).abs() < 1e-6, "{kernel:?} m={m}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn default_score_chunk_matches_native_override() {
+        // A backend that only implements the two primitives gets scoring
+        // through the provided default — it must agree with the native
+        // direct kernel to f32 rounding.
+        struct DefaultScore;
+        impl KernelBackend for DefaultScore {
+            fn exact_partials(
+                &self,
+                kernel: Kernel,
+                x: &Matrix,
+                v: &Matrix,
+                w: &[f32],
+                m: f64,
+            ) -> Result<crate::fcm::Partials> {
+                NativeBackend.exact_partials(kernel, x, v, w, m)
+            }
+
+            fn partials_with_bounds(
+                &self,
+                kernel: Kernel,
+                x: &Matrix,
+                v: &Matrix,
+                w: &[f32],
+                m: f64,
+                rows: &mut BoundRows,
+            ) -> Result<crate::fcm::Partials> {
+                NativeBackend.partials_with_bounds(kernel, x, v, w, m, rows)
+            }
+
+            fn name(&self) -> &'static str {
+                "default-score"
+            }
+        }
+        let (x, v, _) = rand_case(90, 4, 3, 62);
+        for (kernel, m) in
+            [(Kernel::FcmFast, 2.0), (Kernel::FcmClassic, 1.7), (Kernel::KMeans, 0.0)]
+        {
+            let mut direct = Matrix::zeros(90, 3);
+            NativeBackend.score_chunk(kernel, &x, &v, m, &mut direct).unwrap();
+            let mut derived = Matrix::zeros(90, 3);
+            DefaultScore.score_chunk(kernel, &x, &v, m, &mut derived).unwrap();
+            for (a, b) in direct.as_slice().iter().zip(derived.as_slice()) {
+                assert!((a - b).abs() < 1e-6, "{kernel:?}: {a} vs {b}");
             }
         }
     }

@@ -47,6 +47,32 @@ pub fn write_block_file(path: &Path, m: &Matrix) -> Result<u64> {
     Ok(encoded_size(m))
 }
 
+/// Read only a block file's header — magic plus (rows, cols) — and verify
+/// the file length against the declared shape, without the full payload
+/// checksum pass. Manifest recovery for [`crate::hdfs::BlockStore::open_disk`]:
+/// opening a store of thousands of blocks reads 16 bytes per block instead
+/// of the whole store; corruption inside the payload still fails loudly at
+/// [`read_block_file`] time, exactly like HDFS verifying CRCs on read.
+pub fn read_block_header(path: &Path) -> Result<(usize, usize, u64)> {
+    let mut f = std::fs::File::open(path).map_err(|e| Error::io(path, e))?;
+    let mut head = [0u8; 16];
+    f.read_exact(&mut head).map_err(|e| Error::io(path, e))?;
+    if &head[..8] != MAGIC {
+        return Err(Error::BlockStore(format!("{}: bad magic", path.display())));
+    }
+    let rows = u32::from_le_bytes(head[8..12].try_into().unwrap()) as usize;
+    let cols = u32::from_le_bytes(head[12..16].try_into().unwrap()) as usize;
+    let len = f.metadata().map_err(|e| Error::io(path, e))?.len();
+    let expect = (8 + 4 + 4 + rows * cols * 4 + 8) as u64;
+    if len != expect {
+        return Err(Error::BlockStore(format!(
+            "{}: file is {len} B, header shape ({rows} x {cols}) implies {expect}",
+            path.display()
+        )));
+    }
+    Ok((rows, cols, len))
+}
+
 /// Read and verify a block file.
 pub fn read_block_file(path: &Path) -> Result<Matrix> {
     let mut bytes = Vec::new();
@@ -109,6 +135,20 @@ mod tests {
         bytes[mid] ^= 0xFF;
         std::fs::write(&p, &bytes).unwrap();
         assert!(read_block_file(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn header_read_recovers_shape_without_payload_pass() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let p = tmp("head.bfb");
+        let bytes = write_block_file(&p, &m).unwrap();
+        let (rows, cols, len) = read_block_header(&p).unwrap();
+        assert_eq!((rows, cols, len), (2, 3, bytes));
+        // Truncated payload: the length check must fail loudly.
+        let img = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &img[..img.len() - 4]).unwrap();
+        assert!(read_block_header(&p).is_err());
         std::fs::remove_file(p).ok();
     }
 

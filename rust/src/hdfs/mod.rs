@@ -10,7 +10,7 @@
 
 mod codec;
 
-pub use codec::{fnv1a, read_block_file, write_block_file};
+pub use codec::{fnv1a, read_block_file, read_block_header, write_block_file};
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -97,6 +97,73 @@ impl BlockStore {
             start = end;
         }
         writer.finish()
+    }
+
+    /// Reopen a store previously written under `dir` (by
+    /// [`BlockStoreWriter`] or [`BlockStore::on_disk`]) from its block
+    /// files alone — the manifest is recovered from per-block headers
+    /// ([`read_block_header`], 16 bytes each), so a labeled membership
+    /// store written by the bulk ScoreJob (or any block store) can be
+    /// served again in a later process without rewriting anything.
+    pub fn open_disk(name: impl Into<String>, workers: usize, dir: PathBuf) -> Result<Self> {
+        let workers = workers.max(1);
+        let mut metas = Vec::new();
+        let mut cols = 0usize;
+        let mut total_rows = 0usize;
+        loop {
+            let id = metas.len();
+            let path = dir.join(format!("block_{id:06}.bfb"));
+            if !path.exists() {
+                break;
+            }
+            let (rows, bcols, bytes) = codec::read_block_header(&path)?;
+            if id == 0 {
+                cols = bcols;
+            } else if bcols != cols {
+                return Err(Error::BlockStore(format!(
+                    "{}: block {id} has {bcols} cols, store has {cols}",
+                    dir.display()
+                )));
+            }
+            metas.push(BlockMeta { id, rows, preferred_worker: id % workers, bytes });
+            total_rows += rows;
+        }
+        if metas.is_empty() {
+            return Err(Error::BlockStore(format!(
+                "{}: no block files (block_000000.bfb missing)",
+                dir.display()
+            )));
+        }
+        // A gap must fail loudly, not silently truncate the store: a
+        // partially copied or corrupted directory can be missing one
+        // mid-range block while later blocks survive — serving the prefix
+        // as if it were the whole store would be silent data loss.
+        for entry in std::fs::read_dir(&dir).map_err(|e| Error::io(&dir, e))? {
+            let entry = entry.map_err(|e| Error::io(&dir, e))?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(id) = name
+                .strip_prefix("block_")
+                .and_then(|s| s.strip_suffix(".bfb"))
+                .and_then(|s| s.parse::<usize>().ok())
+            {
+                if id >= metas.len() {
+                    return Err(Error::BlockStore(format!(
+                        "{}: found {name} but block_{:06}.bfb is missing — the store has a gap",
+                        dir.display(),
+                        metas.len()
+                    )));
+                }
+            }
+        }
+        Ok(Self {
+            uid: NEXT_STORE_UID.fetch_add(1, Ordering::Relaxed),
+            name: name.into(),
+            cols,
+            total_rows,
+            blocks: metas,
+            storage: Storage::Disk { dir },
+        })
     }
 
     /// Process-unique store id (block-cache key component).
@@ -423,6 +490,31 @@ mod tests {
         assert!(w.append(&Matrix::zeros(0, 3)).is_err(), "empty block");
         let empty = BlockStoreWriter::create("t", 3, 2, dir.clone()).unwrap();
         assert!(empty.finish().is_err(), "store with no blocks");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn open_disk_recovers_manifest_from_block_files() {
+        let d = blobs(500, 3, 2, 0.3, 12);
+        let dir = std::env::temp_dir().join(format!("bigfcm_bso_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let written = BlockStore::on_disk("t", &d.features, 128, 2, dir.clone()).unwrap();
+        let reopened = BlockStore::open_disk("t2", 3, dir.clone()).unwrap();
+        assert_eq!(reopened.num_blocks(), written.num_blocks());
+        assert_eq!(reopened.cols(), 3);
+        assert_eq!(reopened.total_rows(), 500);
+        assert_eq!(reopened.total_bytes(), written.total_bytes());
+        assert_eq!(reopened.blocks()[2].preferred_worker, 2 % 3);
+        for b in 0..reopened.num_blocks() {
+            assert_eq!(reopened.read_block(b).unwrap(), written.read_block(b).unwrap());
+        }
+        assert!(BlockStore::open_disk("empty", 2, dir.join("nope")).is_err());
+        // A mid-range gap must fail loudly, never silently truncate.
+        std::fs::remove_file(dir.join("block_000001.bfb")).unwrap();
+        assert!(
+            BlockStore::open_disk("gap", 2, dir.clone()).is_err(),
+            "store with a missing mid-range block must not open as a prefix"
+        );
         std::fs::remove_dir_all(dir).ok();
     }
 

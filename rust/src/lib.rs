@@ -47,6 +47,7 @@ pub mod metrics;
 pub mod prng;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod telemetry;
 pub mod threadpool;
 pub mod xla;

@@ -1,29 +1,36 @@
 //! The `bigfcm` launcher.
 //!
 //! ```text
-//! bigfcm run    --dataset susy --records 100000 --clusters 6 [--epsilon 5e-11]
-//! bigfcm bench  --exp table4 [--full] [--backend native|pjrt|auto]
-//! bigfcm gen    --dataset higgs --records 1000000 --out higgs.csv
-//! bigfcm info   [--artifacts artifacts]
+//! bigfcm run         --dataset susy --records 100000 --clusters 6 [--save-model m.bfm]
+//! bigfcm session     --iters 50 --bounds elkan [--save-model m.bfm]
+//! bigfcm serve-bench --clients 4 --records 500 [--model m.bfm] [--json BENCH_serve.json]
+//! bigfcm score       --model m.bfm --out DIR [--store DIR | --dataset susy]
+//! bigfcm bench       --exp table4 [--full] [--backend native|pjrt|auto]
+//! bigfcm gen         --dataset higgs --records 1000000 --out higgs.csv
+//! bigfcm info        [--artifacts artifacts] [--model m.bfm]
 //! ```
 //!
 //! Every flag can also be set via `--config file.toml` and repeated
 //! `--set section.key=value` overrides (see `rust/src/config`).
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use bigfcm::baselines::{run_baseline, BaselineAlgo};
 use bigfcm::bench::tables::{run_by_id, Ctx};
 use bigfcm::bench::Scale;
 use bigfcm::config::{BoundModel, Config};
 use bigfcm::coordinator::BigFcm;
+use bigfcm::data::normalize::Scaler;
 use bigfcm::data::{builtin, csv};
 use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo, Variant};
 use bigfcm::fcm::{assign_hard, KernelBackend};
 use bigfcm::hdfs::BlockStore;
+use bigfcm::json;
 use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions, MIB};
 use bigfcm::metrics::confusion_accuracy;
 use bigfcm::runtime::ResolvedBackend;
+use bigfcm::serve::{run_score_job, ModelBundle, ScoreService, ServeOptions};
 use bigfcm::telemetry::human_duration;
 
 /// CLI result: any error renders via Display at top level (offline build —
@@ -170,6 +177,18 @@ fn cmd_run(args: &Args) -> CliResult<()> {
         let acc = confusion_accuracy(&assign_hard(&dataset.features, &run.centers), labels, c);
         println!("confusion accuracy: {:.1}%", acc * 100.0);
     }
+    if let Some(path) = args.get("save-model") {
+        let mut bundle = ModelBundle::new(run.centers.clone(), SessionAlgo::Fcm, Variant::Fast, m);
+        bundle.weights = run.weights.clone();
+        bundle.seed = cfg.seed;
+        bundle.dataset = dataset.name.clone();
+        bundle.trained_rows = dataset.rows() as u64;
+        bundle.iterations = run.reduce_iterations as u64;
+        bundle.objective = run.objective;
+        bundle.converged = run.converged;
+        let bytes = bundle.save(std::path::Path::new(path))?;
+        println!("saved model bundle: {path} ({bytes} B)");
+    }
     Ok(())
 }
 
@@ -289,10 +308,11 @@ fn cmd_session(args: &Args) -> CliResult<()> {
     )?;
     for (i, s) in run.per_iteration.iter().enumerate() {
         println!(
-            "  iter {:>3}: pruned {:>8}, reduce parts {:>3} (depth {}), slab {:>7.2} MiB, \
-             evictions {:>4}, spilled {:>7.2} MiB, reloads {:>4}",
+            "  iter {:>3}: pruned {:>8}, cap {:>3}, reduce parts {:>3} (depth {}), slab {:>7.2} \
+             MiB, evictions {:>4}, spilled {:>7.2} MiB, reloads {:>4}",
             i + 1,
             s.records_pruned,
+            s.refresh_cap,
             s.reduce_parts,
             s.combine_depth,
             s.slab_bytes as f64 / MIB as f64,
@@ -321,6 +341,269 @@ fn cmd_session(args: &Args) -> CliResult<()> {
         run.sim.hdfs_io_s,
         run.sim.shuffle_s,
         run.sim.compute_s,
+    );
+    if let Some(path) = args.get("save-model") {
+        let mut bundle = ModelBundle::new(run.result.centers.clone(), algo, variant, m);
+        bundle.weights = run.result.weights.clone();
+        bundle.seed = cfg.seed;
+        bundle.dataset = dataset.name.clone();
+        bundle.trained_rows = dataset.rows() as u64;
+        bundle.iterations = run.result.iterations as u64;
+        bundle.objective = run.result.objective;
+        bundle.converged = run.result.converged;
+        bundle.records_pruned = run.records_pruned;
+        let bytes = bundle.save(std::path::Path::new(path))?;
+        println!("saved model bundle: {path} ({bytes} B)");
+    }
+    Ok(())
+}
+
+/// Quick training path for serving commands invoked without `--model`:
+/// min-max normalize the dataset, run a short iteration-resident session,
+/// and wrap the result (scaler included) into a bundle.
+fn train_quick_bundle(
+    cfg: &Config,
+    dataset: &bigfcm::data::Dataset,
+    c: usize,
+    m: f64,
+    backend: Arc<dyn KernelBackend>,
+) -> CliResult<ModelBundle> {
+    let scaler = Scaler::min_max(&dataset.features);
+    let mut features = dataset.features.clone();
+    scaler.apply(&mut features);
+    let store = Arc::new(BlockStore::in_memory(
+        dataset.name.clone(),
+        &features,
+        cfg.cluster.block_records,
+        cfg.cluster.workers,
+    )?);
+    let mut engine = Engine::new(EngineOptions::from_cluster(&cfg.cluster), cfg.overhead.clone());
+    let mut rng = bigfcm::prng::Pcg::new(cfg.seed);
+    let sample = store.sample_records(c.max(2) * 8, &mut rng)?;
+    let v0 = bigfcm::fcm::seeding::random_records(&sample, c, &mut rng);
+    let params = FcmParams { m, epsilon: 1e-8, max_iterations: 40, variant: Variant::Fast };
+    let run = run_fcm_session(
+        &mut engine,
+        &store,
+        backend,
+        SessionAlgo::Fcm,
+        v0,
+        &params,
+        &PruneConfig::from_cluster(&cfg.cluster),
+        SessionOptions::default(),
+    )?;
+    let mut bundle =
+        ModelBundle::new(run.result.centers.clone(), SessionAlgo::Fcm, Variant::Fast, m);
+    bundle.weights = run.result.weights.clone();
+    bundle.scaler = Some(scaler);
+    bundle.seed = cfg.seed;
+    bundle.dataset = dataset.name.clone();
+    bundle.trained_rows = dataset.rows() as u64;
+    bundle.iterations = run.result.iterations as u64;
+    bundle.objective = run.result.objective;
+    bundle.converged = run.result.converged;
+    bundle.records_pruned = run.records_pruned;
+    Ok(bundle)
+}
+
+/// `bigfcm serve-bench`: closed-loop load harness against the online
+/// scoring service — N client threads each scoring R records
+/// back-to-back, reporting throughput, batch fill and p50/p95/p99 into
+/// the console and (optionally) a bench JSON.
+fn cmd_serve_bench(args: &Args) -> CliResult<()> {
+    let cfg = load_config(args)?;
+    let clients: usize = args.get_or("clients", "4").parse()?;
+    let per_client: usize = args.get_or("records", "500").parse()?;
+    let name = args.get_or("dataset", "susy");
+    let dataset_records: usize = args.get_or("dataset-records", "20000").parse()?;
+    let c: usize = args.get_or("clusters", "4").parse()?;
+    let m: f64 = args.get_or("fuzzifier", "2.0").parse()?;
+    if clients == 0 || per_client == 0 {
+        bail!("--clients and --records must be positive");
+    }
+    let dataset = builtin::by_name(&name, dataset_records, cfg.seed)
+        .ok_or_else(|| format!("unknown dataset `{name}`"))?;
+    let backend = backend_of(&cfg)?;
+    let bundle = match args.get("model") {
+        Some(path) => {
+            let b = ModelBundle::load(std::path::Path::new(path))?;
+            if b.dims() != dataset.dims() {
+                bail!(
+                    "model expects {} features, dataset `{}` has {}",
+                    b.dims(),
+                    name,
+                    dataset.dims()
+                );
+            }
+            b
+        }
+        None => train_quick_bundle(&cfg, &dataset, c, m, Arc::clone(&backend))?,
+    };
+    let mut opts = ServeOptions::from_config(&cfg.serve);
+    if let Some(v) = args.get("max-batch") {
+        opts.max_batch = v.parse::<usize>()?.max(1);
+    }
+    if let Some(v) = args.get("linger-us") {
+        opts.linger = std::time::Duration::from_micros(v.parse::<u64>()?);
+    }
+    if let Some(v) = args.get("queue-cap") {
+        opts.queue_cap = v.parse::<usize>()?.max(1);
+    }
+    println!(
+        "serve-bench: model C={} d={} algo={} backend={} | clients={clients} x {per_client} \
+         requests, max_batch={}, pad={}, linger={:?}, queue_cap={}",
+        bundle.clusters(),
+        bundle.dims(),
+        bundle.algo.as_str(),
+        backend.name(),
+        opts.max_batch,
+        opts.pad_rows,
+        opts.linger,
+        opts.queue_cap,
+    );
+    let service = Arc::new(ScoreService::new(bundle, backend, opts)?);
+    let features = Arc::new(dataset.features);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|ci| {
+            let svc = Arc::clone(&service);
+            let x = Arc::clone(&features);
+            std::thread::spawn(move || -> Result<(), String> {
+                let n = x.rows();
+                for r in 0..per_client {
+                    let row = x.row((ci * per_client + r * 7) % n);
+                    let u = svc.score(row).map_err(|e| e.to_string())?;
+                    let s: f32 = u.iter().sum();
+                    if (s - 1.0).abs() > 1e-4 {
+                        return Err(format!("membership row sums to {s}"));
+                    }
+                }
+                Ok(())
+            })
+        })
+        .collect();
+    for (ci, h) in handles.into_iter().enumerate() {
+        h.join()
+            .map_err(|_| format!("client {ci} panicked"))?
+            .map_err(|e| format!("client {ci}: {e}"))?;
+    }
+    let wall = t0.elapsed();
+    let stats = service.stats();
+    let total = (clients * per_client) as f64;
+    let rps = total / wall.as_secs_f64().max(1e-9);
+    println!(
+        "served {} requests in {} -> {:.0} req/s across {} batches",
+        stats.requests,
+        human_duration(wall),
+        rps,
+        stats.batches,
+    );
+    println!(
+        "batch fill {:.2} (pad utilization {:.2}), queue peak {}, backpressure waits {}",
+        stats.batch_fill, stats.pad_utilization, stats.queue_peak, stats.backpressure_waits,
+    );
+    println!(
+        "latency: p50 {} us, p95 {} us, p99 {} us (mean {:.1} us, max {} us)",
+        stats.p50_us, stats.p95_us, stats.p99_us, stats.mean_us, stats.max_us,
+    );
+    let coalesced = stats.batch_fill > 1.0;
+    println!("coalescing: {}", if coalesced { "yes (batch fill > 1)" } else { "NO" });
+    let json_path = args.get_or("json", "none");
+    if json_path != "none" {
+        let mut obj = match stats.to_json() {
+            json::Value::Object(o) => o,
+            _ => unreachable!("ServeStats::to_json returns an object"),
+        };
+        obj.insert("throughput_rps".into(), json::num(rps));
+        obj.insert("clients".into(), json::num(clients as f64));
+        obj.insert("records_per_client".into(), json::num(per_client as f64));
+        obj.insert("wall_s".into(), json::num(wall.as_secs_f64()));
+        let doc = json::obj(vec![
+            ("bench", json::s("serve_bench")),
+            ("workload", json::s(format!("{name} {dataset_records} records"))),
+            ("serve", json::Value::Object(obj)),
+        ]);
+        std::fs::write(&json_path, json::to_string(&doc))
+            .map_err(|e| format!("writing {json_path}: {e}"))?;
+        println!("wrote {json_path}");
+    }
+    if args.has("require-coalescing") && !coalesced {
+        bail!(
+            "micro-batching did not coalesce (batch fill {:.2} <= 1)",
+            stats.batch_fill
+        );
+    }
+    Ok(())
+}
+
+/// `bigfcm score`: bulk ScoreJob — label every record of a store with
+/// top-k sparse membership rows written to a new block store.
+fn cmd_score(args: &Args) -> CliResult<()> {
+    let cfg = load_config(args)?;
+    let out_dir = args
+        .get("out")
+        .ok_or("`bigfcm score` needs --out DIR for the membership store")?
+        .to_string();
+    let top_k: usize = args.get_or("topk", &cfg.serve.top_k.to_string()).parse()?;
+    let backend = backend_of(&cfg)?;
+    let store = match args.get("store") {
+        Some(dir) => Arc::new(BlockStore::open_disk(
+            dir.to_string(),
+            cfg.cluster.workers,
+            std::path::PathBuf::from(dir),
+        )?),
+        None => {
+            let name = args.get_or("dataset", "susy");
+            let n: usize = args.get_or("records", "50000").parse()?;
+            let dataset = builtin::by_name(&name, n, cfg.seed)
+                .ok_or_else(|| format!("unknown dataset `{name}`"))?;
+            Arc::new(BlockStore::in_memory(
+                dataset.name.clone(),
+                &dataset.features,
+                cfg.cluster.block_records,
+                cfg.cluster.workers,
+            )?)
+        }
+    };
+    let bundle = match args.get("model") {
+        Some(path) => Arc::new(ModelBundle::load(std::path::Path::new(path))?),
+        None => bail!("`bigfcm score` needs --model PATH (save one with run/session --save-model)"),
+    };
+    println!(
+        "score: store={} ({} blocks, {} records x {} features) model C={} top_k={top_k} backend={}",
+        store.name(),
+        store.num_blocks(),
+        store.total_rows(),
+        store.cols(),
+        bundle.clusters(),
+        backend.name(),
+    );
+    let mut engine = Engine::new(EngineOptions::from_cluster(&cfg.cluster), cfg.overhead.clone());
+    let outcome = run_score_job(
+        &mut engine,
+        &store,
+        bundle,
+        backend,
+        top_k,
+        std::path::PathBuf::from(&out_dir),
+    )?;
+    println!(
+        "labeled {} records -> {} ({} blocks, {} B, k={}), mean top-1 membership {:.4}",
+        outcome.totals.rows,
+        out_dir,
+        outcome.store.num_blocks(),
+        outcome.store.total_bytes(),
+        outcome.top_k,
+        outcome.totals.top1_mass / outcome.totals.rows.max(1) as f64,
+    );
+    println!(
+        "job: {} map tasks, locality {}+{}, prefetch hits {}, wall {}, modelled {}",
+        outcome.stats.map_tasks,
+        outcome.stats.locality_hits,
+        outcome.stats.locality_steals,
+        outcome.stats.prefetch_hits,
+        human_duration(outcome.stats.wall),
+        human_duration(std::time::Duration::from_secs_f64(engine.clock().total_s())),
     );
     Ok(())
 }
@@ -355,6 +638,12 @@ fn cmd_info(args: &Args) -> CliResult<()> {
     println!("bigfcm {} — BigFCM on a MapReduce substrate", env!("CARGO_PKG_VERSION"));
     println!("config: workers={} chunk={} block_records={}",
         cfg.cluster.workers, cfg.cluster.chunk, cfg.cluster.block_records);
+    if let Some(path) = args.get("model") {
+        match ModelBundle::load(std::path::Path::new(path)) {
+            Ok(b) => println!("model bundle {path} (checksum ok):\n{}", b.summary()),
+            Err(e) => println!("model bundle {path}: unreadable ({e})"),
+        }
+    }
     match bigfcm::runtime::PjrtRuntime::open(&cfg.artifacts_dir) {
         Ok(rt) => {
             println!(
@@ -379,24 +668,34 @@ fn main() -> CliResult<()> {
         "run" => cmd_run(&args),
         "baseline" => cmd_baseline(&args),
         "session" => cmd_session(&args),
+        "serve-bench" => cmd_serve_bench(&args),
+        "score" => cmd_score(&args),
         "bench" => cmd_bench(&args),
         "gen" => cmd_gen(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             println!(
-                "usage: bigfcm <run|baseline|session|bench|gen|info> [--flags]\n\
+                "usage: bigfcm <run|baseline|session|serve-bench|score|bench|gen|info> [--flags]\n\
                  \n\
-                 run       run BigFCM on a dataset (--dataset --records --clusters --epsilon)\n\
-                 baseline  run a Mahout-style baseline (--algo km|fkm ...)\n\
-                 session   iteration-resident convergence loop (--iters N --bounds dmin|elkan|off\n\
-                 \u{20}         --algo fcm|kmeans --variant fast|classic --slab-mib N --spill-dir PATH\n\
-                 \u{20}         --tolerance T) printing the per-iteration session counters\n\
-                 bench     regenerate paper tables (--exp table2..table8|ablations|all [--full])\n\
-                 gen       write a synthetic dataset to CSV (--dataset --records --out)\n\
-                 info      show config + artifact registry\n\
+                 run         run BigFCM on a dataset (--dataset --records --clusters --epsilon\n\
+                 \u{20}           --save-model PATH)\n\
+                 baseline    run a Mahout-style baseline (--algo km|fkm ...)\n\
+                 session     iteration-resident convergence loop (--iters N\n\
+                 \u{20}           --bounds dmin|elkan|hamerly|off --algo fcm|kmeans\n\
+                 \u{20}           --variant fast|classic --slab-mib N --spill-dir PATH\n\
+                 \u{20}           --tolerance T --save-model PATH) with per-iteration counters\n\
+                 serve-bench closed-loop load harness for the online scoring service\n\
+                 \u{20}           (--clients N --records R [--model PATH] [--max-batch B]\n\
+                 \u{20}           [--linger-us U] [--json PATH|none] [--require-coalescing])\n\
+                 score       bulk ScoreJob: label a store with top-k memberships\n\
+                 \u{20}           (--model PATH --out DIR [--store DIR | --dataset D --records N]\n\
+                 \u{20}           [--topk K])\n\
+                 bench       regenerate paper tables (--exp table2..table8|ablations|all [--full])\n\
+                 gen         write a synthetic dataset to CSV (--dataset --records --out)\n\
+                 info        show config + artifact registry [--model PATH]\n\
                  \n\
-                 common:   --config file.toml --set sec.key=val --backend native|pjrt|auto|shim\n\
-                 \u{20}         --artifacts DIR --seed N"
+                 common:     --config file.toml --set sec.key=val --backend native|pjrt|auto|shim\n\
+                 \u{20}           --artifacts DIR --seed N"
             );
             Ok(())
         }

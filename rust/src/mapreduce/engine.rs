@@ -148,6 +148,10 @@ pub struct JobStats {
     /// State reloads served from the slab's spill ring so far in the
     /// session (session runs only).
     pub slab_reloads: u64,
+    /// Effective refresh cap (`refresh_every`) this job's pruned passes
+    /// ran under — the session loop's adaptive-refresh policy stamps it
+    /// (session runs only; 0 for ordinary jobs).
+    pub refresh_cap: usize,
     /// Real seconds of the reduce phase. Tree-combined jobs fold most
     /// merge work into the map slots, so this drops from O(blocks) worth
     /// of merging to O(parts).
@@ -485,6 +489,7 @@ impl Engine {
             slab_evictions: 0,
             slab_spilled_bytes: 0,
             slab_reloads: 0,
+            refresh_cap: 0,
             reduce_wall_s,
             combine_wall_s,
             combine_depth,

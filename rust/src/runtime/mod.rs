@@ -192,6 +192,26 @@ impl KernelBackend for PjrtRuntime {
         ))
     }
 
+    /// The artifacts lower only the partials graphs — no membership rows
+    /// either; surfaced as an error (the generic default would bounce off
+    /// [`Self::partials_with_bounds`] with a bound-row message that
+    /// misleads a serving caller).
+    fn score_chunk(
+        &self,
+        _kernel: Kernel,
+        _x: &Matrix,
+        _v: &Matrix,
+        _m: f64,
+        _u: &mut Matrix,
+    ) -> Result<()> {
+        Err(Error::Artifact(
+            "the AOT artifacts do not export membership rows — lower a scoring graph in \
+             python/compile/aot.py and re-run `make artifacts`, or serve through the `shim` \
+             backend"
+                .into(),
+        ))
+    }
+
     /// No bound outputs from the artifacts yet: reset the state and run
     /// exactly — correct (no stale bound can survive), just unpruned.
     #[allow(clippy::too_many_arguments)]
@@ -416,6 +436,20 @@ impl KernelBackend for ResolvedBackend {
     ) -> Result<(Partials, usize)> {
         self.pick(graph_of(kernel), x.cols(), v.rows())
             .pruned_partials(kernel, x, v, w, m, state, cfg)
+    }
+
+    /// Forwarded (not defaulted) so a native resolution serves through its
+    /// direct tiled membership kernel instead of the generic bound-row
+    /// derivation.
+    fn score_chunk(
+        &self,
+        kernel: Kernel,
+        x: &Matrix,
+        v: &Matrix,
+        m: f64,
+        u: &mut Matrix,
+    ) -> Result<()> {
+        self.pick(graph_of(kernel), x.cols(), v.rows()).score_chunk(kernel, x, v, m, u)
     }
 
     fn name(&self) -> &'static str {

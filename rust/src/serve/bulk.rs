@@ -1,0 +1,274 @@
+//! Bulk ScoreJob: label an entire block store with memberships as one
+//! MapReduce job.
+//!
+//! The paper sells the membership matrix as "a preprocessing step in many
+//! data mining process implementations" — which means the common offline
+//! workload is *score everything*: stream every block of a (possibly
+//! multi-GiB) store against a trained [`ModelBundle`] and write the
+//! memberships back out. This job does exactly that through the engine's
+//! existing streaming path — blocks arrive via the byte-budgeted cache,
+//! locality queues and prefetcher, are normalized with the bundle's
+//! scaler, scored in one [`crate::fcm::KernelBackend::score_chunk`] call,
+//! compressed to **top-k sparse rows** (`[idx₀, u₀, idx₁, u₁, …]`,
+//! descending membership; k ≪ C keeps output bytes per record at 8k
+//! regardless of C), and appended to a [`BlockStoreWriter`] output store.
+//!
+//! Map tasks finish out of order but output block `i` must be block `i`
+//! of the membership store (records line up positionally with the input
+//! store), so completed blocks pass through a bounded **reorder buffer**:
+//! each task inserts its block under the writer lock and drains the
+//! in-order prefix — pending out-of-order blocks are bounded by worker
+//! count plus straggler skew, never O(store). Doomed (fault-injected)
+//! attempts skip the write exactly like they skip the pruning slab, so
+//! Hadoop-style re-execution never duplicates an append.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+use crate::fcm::KernelBackend;
+use crate::hdfs::{BlockStore, BlockStoreWriter};
+use crate::mapreduce::{DistributedCache, Engine, JobStats, MapReduceJob, TaskCtx};
+use crate::serve::bundle::ModelBundle;
+
+/// Mergeable per-block aggregates the reduce folds (the actual membership
+/// rows go to disk in the map phase, not through the shuffle).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScoreJobTotals {
+    /// Records scored.
+    pub rows: u64,
+    /// Σ top-1 membership over all records — mean top-1 confidence is
+    /// `top1_mass / rows`, a cheap model-quality aggregate.
+    pub top1_mass: f64,
+}
+
+impl ScoreJobTotals {
+    fn merged(self, other: ScoreJobTotals) -> ScoreJobTotals {
+        ScoreJobTotals {
+            rows: self.rows + other.rows,
+            top1_mass: self.top1_mass + other.top1_mass,
+        }
+    }
+}
+
+/// Everything a bulk scoring run produces.
+pub struct ScoreJobOutcome {
+    /// The membership store (2k columns: k `(center, membership)` pairs
+    /// per record, descending membership), reopenable later via
+    /// [`BlockStore::open_disk`].
+    pub store: BlockStore,
+    pub totals: ScoreJobTotals,
+    /// Stats of the underlying engine job (cache/locality/prefetch meters
+    /// included).
+    pub stats: JobStats,
+    /// Memberships kept per record (top_k clamped to C).
+    pub top_k: usize,
+}
+
+/// In-order writer behind the job: map tasks insert finished blocks, the
+/// in-order prefix drains to the [`BlockStoreWriter`].
+struct Reorder {
+    writer: Option<BlockStoreWriter>,
+    next: usize,
+    pending: BTreeMap<usize, Matrix>,
+}
+
+struct BulkScoreJob {
+    bundle: Arc<ModelBundle>,
+    backend: Arc<dyn KernelBackend>,
+    k: usize,
+    reorder: Mutex<Reorder>,
+}
+
+impl BulkScoreJob {
+    /// Insert block `id`'s sparse rows and flush the in-order prefix.
+    fn push_block(&self, id: usize, rows: Matrix) -> Result<()> {
+        let mut guard = self.reorder.lock().expect("score reorder poisoned");
+        let st = &mut *guard;
+        st.pending.insert(id, rows);
+        loop {
+            let next = st.next;
+            let Some(block) = st.pending.remove(&next) else { break };
+            let writer = st
+                .writer
+                .as_mut()
+                .ok_or_else(|| Error::Job("score writer already finished".into()))?;
+            writer.append(&block)?;
+            st.next += 1;
+        }
+        Ok(())
+    }
+}
+
+impl MapReduceJob for BulkScoreJob {
+    type MapOut = ScoreJobTotals;
+    type Output = ScoreJobTotals;
+
+    fn map_combine(&self, block: &Matrix, ctx: &TaskCtx) -> Result<ScoreJobTotals> {
+        let c = self.bundle.clusters();
+        let mut u = Matrix::zeros(block.rows(), c);
+        let kernel = self.bundle.kernel();
+        // Only scaler-carrying bundles pay a block copy; raw-space models
+        // (the `--save-model` default) score the cached block in place —
+        // on the multi-GiB stores this job exists for, an unconditional
+        // clone would be gigabytes of pure memcpy.
+        if self.bundle.scaler.is_some() {
+            let mut x = block.clone();
+            self.bundle.normalize_block(&mut x);
+            self.backend.score_chunk(kernel, &x, &self.bundle.centers, self.bundle.m, &mut u)?;
+        } else {
+            self.backend.score_chunk(kernel, block, &self.bundle.centers, self.bundle.m, &mut u)?;
+        }
+        let sparse = top_k_rows(&u, self.k);
+        // Column 1 of every sparse row is the top-1 membership.
+        let mut top1_mass = 0.0f64;
+        for i in 0..sparse.rows() {
+            top1_mass += sparse.get(i, 1) as f64;
+        }
+        // Doomed attempts are discarded by the engine's fault injection and
+        // re-executed; writing from one would duplicate the append (the
+        // same side-band rule as the session slab).
+        if !ctx.doomed {
+            self.push_block(ctx.task_id, sparse)?;
+        }
+        Ok(ScoreJobTotals { rows: block.rows() as u64, top1_mass })
+    }
+
+    fn reduce(&self, parts: Vec<ScoreJobTotals>, _ctx: &TaskCtx) -> Result<ScoreJobTotals> {
+        Ok(parts.into_iter().fold(ScoreJobTotals::default(), ScoreJobTotals::merged))
+    }
+
+    fn supports_combine(&self) -> bool {
+        true
+    }
+
+    fn combine(&self, left: ScoreJobTotals, right: ScoreJobTotals) -> Result<ScoreJobTotals> {
+        Ok(left.merged(right))
+    }
+
+    fn shuffle_bytes(&self, _part: &ScoreJobTotals) -> u64 {
+        16
+    }
+
+    fn name(&self) -> &str {
+        "bulk-score"
+    }
+}
+
+/// Top-k sparse rows of a dense membership matrix: `[idx₀, u₀, idx₁, u₁,
+/// …]`, memberships descending (ties broken toward the lower center
+/// index).
+fn top_k_rows(u: &Matrix, k: usize) -> Matrix {
+    let (n, c) = (u.rows(), u.cols());
+    debug_assert!(k >= 1 && k <= c);
+    let mut out = Matrix::zeros(n, 2 * k);
+    let mut order: Vec<usize> = Vec::with_capacity(c);
+    for i in 0..n {
+        let urow = u.row(i);
+        order.clear();
+        order.extend(0..c);
+        order.sort_by(|&a, &b| {
+            urow[b]
+                .partial_cmp(&urow[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let orow = out.row_mut(i);
+        for (slot, &ci) in order.iter().take(k).enumerate() {
+            orow[2 * slot] = ci as f32;
+            orow[2 * slot + 1] = urow[ci];
+        }
+    }
+    out
+}
+
+/// Reconstruct the dense membership row (length `c`, zeros outside the
+/// kept entries) from one sparse top-k row.
+pub fn dense_from_top_k(sparse: &[f32], c: usize) -> Vec<f32> {
+    debug_assert_eq!(sparse.len() % 2, 0);
+    let mut out = vec![0.0f32; c];
+    for pair in sparse.chunks_exact(2) {
+        let idx = pair[0] as usize;
+        debug_assert!(idx < c, "sparse row names center {idx} of {c}");
+        out[idx] = pair[1];
+    }
+    out
+}
+
+/// Score every block of `store` against `bundle` and write top-k sparse
+/// membership rows to a new block store under `out_dir` (see the module
+/// docs). The output store's modelled write cost is charged to the
+/// engine's clock at the HDFS rate, mirroring the input-scan charges.
+pub fn run_score_job(
+    engine: &mut Engine,
+    store: &Arc<BlockStore>,
+    bundle: Arc<ModelBundle>,
+    backend: Arc<dyn KernelBackend>,
+    top_k: usize,
+    out_dir: PathBuf,
+) -> Result<ScoreJobOutcome> {
+    bundle.validate()?;
+    if store.cols() != bundle.dims() {
+        return Err(Error::Bundle(format!(
+            "store has {} features, model expects {}",
+            store.cols(),
+            bundle.dims()
+        )));
+    }
+    let k = top_k.max(1).min(bundle.clusters());
+    let writer = BlockStoreWriter::create(
+        format!("{}-memberships", store.name()),
+        2 * k,
+        engine.workers(),
+        out_dir,
+    )?;
+    let job = Arc::new(BulkScoreJob {
+        bundle,
+        backend,
+        k,
+        reorder: Mutex::new(Reorder { writer: Some(writer), next: 0, pending: BTreeMap::new() }),
+    });
+    let (totals, stats) =
+        engine.run_job(Arc::clone(&job), store, Arc::new(DistributedCache::new()))?;
+    let mut guard = job.reorder.lock().expect("score reorder poisoned");
+    let st = &mut *guard;
+    if !st.pending.is_empty() || st.next != store.num_blocks() {
+        return Err(Error::Job(format!(
+            "score job wrote {} of {} blocks ({} stranded in the reorder buffer)",
+            st.next,
+            store.num_blocks(),
+            st.pending.len()
+        )));
+    }
+    let writer = st.writer.take().expect("writer present until finish");
+    engine.charge_scan(writer.total_bytes());
+    let out = writer.finish()?;
+    Ok(ScoreJobOutcome { store: out, totals, stats, top_k: k })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_rows_keep_largest_descending() {
+        let u = Matrix::from_rows(&[
+            vec![0.1, 0.6, 0.3],
+            vec![0.5, 0.2, 0.3],
+            vec![0.25, 0.25, 0.5],
+        ]);
+        let s = top_k_rows(&u, 2);
+        assert_eq!(s.row(0), &[1.0, 0.6, 2.0, 0.3]);
+        assert_eq!(s.row(1), &[0.0, 0.5, 2.0, 0.3]);
+        // Tie between centers 0 and 1 breaks toward the lower index.
+        assert_eq!(s.row(2), &[2.0, 0.5, 0.0, 0.25]);
+    }
+
+    #[test]
+    fn dense_reconstruction_zero_fills() {
+        let dense = dense_from_top_k(&[2.0, 0.7, 0.0, 0.2], 4);
+        assert_eq!(dense, vec![0.2, 0.0, 0.7, 0.0]);
+    }
+}

@@ -1,0 +1,401 @@
+//! Persisted model bundles: everything membership scoring needs, behind a
+//! checksummed bitwise LE codec.
+//!
+//! A bundle is the contract between the training half of the system (the
+//! BigFCM pipeline, the iteration-resident session loop) and the serving
+//! half ([`crate::serve::service`], [`crate::serve::bulk`]): final
+//! centers and their weight mass, the [`Scaler`] that normalized the
+//! training data (raw records at serve time go through the *same* affine
+//! map, or memberships are computed in the wrong space), the algorithm /
+//! chunk-math variant / fuzzifier that define the membership formula, and
+//! the provenance counters a `bigfcm info --model` inspection reports
+//! (seed, dataset, rows, iterations, objective, convergence,
+//! records_pruned).
+//!
+//! The codec follows the slab spill images bit for bit in discipline:
+//! little-endian fixed-width fields through the shared
+//! [`crate::fcm::backend`] codec primitives, an FNV-1a trailer over the
+//! payload, decode failing loudly on any corruption — a truncated or
+//! bit-flipped bundle must never score traffic with silently wrong
+//! centers. Because every f32/f64 travels as its exact bit pattern, a
+//! save → load roundtrip reproduces scoring decisions identically
+//! (pinned by `rust/tests/integration_serving.rs`).
+
+use std::path::Path;
+
+use crate::data::normalize::Scaler;
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+use crate::fcm::backend::{
+    put_blob, put_f32s, put_f64, put_f64s, put_matrix, put_u32, put_u64, put_u8, Cur,
+};
+use crate::fcm::{Kernel, SessionAlgo, Variant};
+use crate::hdfs::fnv1a;
+
+const BUNDLE_MAGIC: u32 = 0xB16F_40DE;
+const BUNDLE_VERSION: u8 = 1;
+
+/// A trained clustering model plus the context scoring needs.
+#[derive(Clone, Debug)]
+pub struct ModelBundle {
+    /// Final centers (C, d) — in *normalized* feature space when
+    /// [`Self::scaler`] is set.
+    pub centers: Matrix,
+    /// Per-center weight mass at convergence (Σ u^m w); empty when the
+    /// trainer did not report it.
+    pub weights: Vec<f64>,
+    /// The normalization fitted on the training data; raw records are
+    /// pushed through it before scoring. `None` means the model was
+    /// trained on raw features.
+    pub scaler: Option<Scaler>,
+    /// Which algorithm produced (and therefore scores against) the model.
+    pub algo: SessionAlgo,
+    /// FCM chunk-math variant (ignored by K-Means).
+    pub variant: Variant,
+    /// Fuzzifier m (> 1 for FCM; ignored by K-Means).
+    pub m: f64,
+    /// Master seed of the training run.
+    pub seed: u64,
+    /// Dataset name the model was trained on (provenance only).
+    pub dataset: String,
+    /// Records the trainer saw.
+    pub trained_rows: u64,
+    /// Training iterations executed.
+    pub iterations: u64,
+    /// Final training objective.
+    pub objective: f64,
+    /// Whether training met its epsilon criterion.
+    pub converged: bool,
+    /// Records served from the pruning slab across training (0 when
+    /// pruning was off).
+    pub records_pruned: u64,
+}
+
+impl ModelBundle {
+    /// A bundle with the given model and neutral provenance; callers fill
+    /// the public counter fields they know.
+    pub fn new(centers: Matrix, algo: SessionAlgo, variant: Variant, m: f64) -> Self {
+        Self {
+            centers,
+            weights: Vec::new(),
+            scaler: None,
+            algo,
+            variant,
+            m,
+            seed: 0,
+            dataset: String::new(),
+            trained_rows: 0,
+            iterations: 0,
+            objective: 0.0,
+            converged: false,
+            records_pruned: 0,
+        }
+    }
+
+    /// Cluster count C.
+    pub fn clusters(&self) -> usize {
+        self.centers.rows()
+    }
+
+    /// Feature count d (of the *raw* record space; the scaler is affine,
+    /// so normalized and raw dimensionality coincide).
+    pub fn dims(&self) -> usize {
+        self.centers.cols()
+    }
+
+    /// The backend dispatch token scoring runs under.
+    pub fn kernel(&self) -> Kernel {
+        self.algo.kernel(self.variant)
+    }
+
+    /// Normalize one raw record in place (no-op without a scaler).
+    pub fn normalize_row(&self, row: &mut [f32]) {
+        if let Some(s) = &self.scaler {
+            s.apply_row(row);
+        }
+    }
+
+    /// Normalize a block of raw records in place (no-op without a scaler).
+    pub fn normalize_block(&self, block: &mut Matrix) {
+        if let Some(s) = &self.scaler {
+            s.apply(block);
+        }
+    }
+
+    /// Structural invariants every encode/decode endpoint enforces.
+    pub fn validate(&self) -> Result<()> {
+        let err = |m: String| Err(Error::Bundle(m));
+        if self.centers.rows() == 0 || self.centers.cols() == 0 {
+            return err(format!(
+                "centers must be non-empty, got {} x {}",
+                self.centers.rows(),
+                self.centers.cols()
+            ));
+        }
+        if !self.weights.is_empty() && self.weights.len() != self.centers.rows() {
+            return err(format!(
+                "{} weights for {} centers",
+                self.weights.len(),
+                self.centers.rows()
+            ));
+        }
+        if self.algo == SessionAlgo::Fcm && !(self.m > 1.0) {
+            return err(format!("fuzzifier must be > 1 for FCM, got {}", self.m));
+        }
+        if let Some(s) = &self.scaler {
+            if s.offset.len() != self.centers.cols() || s.scale.len() != self.centers.cols() {
+                return err(format!(
+                    "scaler covers {} features, centers have {}",
+                    s.offset.len(),
+                    self.centers.cols()
+                ));
+            }
+            if s.scale.iter().any(|&v| !(v.is_finite() && v != 0.0))
+                || s.offset.iter().any(|v| !v.is_finite())
+            {
+                return err("scaler carries non-finite or zero terms".into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Bitwise serialisation (checksummed; see the module docs).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(
+            64 + self.dataset.len()
+                + self.centers.rows() * self.centers.cols() * 4
+                + self.weights.len() * 8,
+        );
+        put_u32(&mut b, BUNDLE_MAGIC);
+        put_u8(&mut b, BUNDLE_VERSION);
+        put_u8(&mut b, match self.algo {
+            SessionAlgo::Fcm => 0,
+            SessionAlgo::KMeans => 1,
+        });
+        put_u8(&mut b, match self.variant {
+            Variant::Fast => 0,
+            Variant::Classic => 1,
+        });
+        put_f64(&mut b, self.m);
+        put_u64(&mut b, self.seed);
+        put_blob(&mut b, self.dataset.as_bytes());
+        put_u64(&mut b, self.trained_rows);
+        put_u64(&mut b, self.iterations);
+        put_f64(&mut b, self.objective);
+        put_u8(&mut b, self.converged as u8);
+        put_u64(&mut b, self.records_pruned);
+        put_matrix(&mut b, &self.centers);
+        put_f64s(&mut b, &self.weights);
+        match &self.scaler {
+            None => put_u8(&mut b, 0),
+            Some(s) => {
+                put_u8(&mut b, 1);
+                put_f32s(&mut b, &s.offset);
+                put_f32s(&mut b, &s.scale);
+            }
+        }
+        let sum = fnv1a(&b);
+        put_u64(&mut b, sum);
+        b
+    }
+
+    /// Decode and validate an image; any corruption fails loudly.
+    pub fn decode(bytes: &[u8]) -> Result<ModelBundle> {
+        let err = |m: &str| Error::Bundle(m.to_string());
+        if bytes.len() < 16 {
+            return Err(err("image too short"));
+        }
+        let (payload, trailer) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(trailer.try_into().expect("8-byte trailer"));
+        if fnv1a(payload) != stored {
+            return Err(err("checksum mismatch"));
+        }
+        let mut c = Cur::new(payload);
+        if c.u32().ok_or_else(|| err("truncated magic"))? != BUNDLE_MAGIC {
+            return Err(err("bad magic"));
+        }
+        if c.u8().ok_or_else(|| err("truncated version"))? != BUNDLE_VERSION {
+            return Err(err("unsupported version"));
+        }
+        let algo = match c.u8().ok_or_else(|| err("truncated algo"))? {
+            0 => SessionAlgo::Fcm,
+            1 => SessionAlgo::KMeans,
+            _ => return Err(err("unknown algo tag")),
+        };
+        let variant = match c.u8().ok_or_else(|| err("truncated variant"))? {
+            0 => Variant::Fast,
+            1 => Variant::Classic,
+            _ => return Err(err("unknown variant tag")),
+        };
+        let m = c.f64().ok_or_else(|| err("truncated fuzzifier"))?;
+        let seed = c.u64().ok_or_else(|| err("truncated seed"))?;
+        let dataset = String::from_utf8(
+            c.blob().ok_or_else(|| err("truncated dataset name"))?.to_vec(),
+        )
+        .map_err(|_| err("dataset name is not utf-8"))?;
+        let trained_rows = c.u64().ok_or_else(|| err("truncated trained_rows"))?;
+        let iterations = c.u64().ok_or_else(|| err("truncated iterations"))?;
+        let objective = c.f64().ok_or_else(|| err("truncated objective"))?;
+        let converged = match c.u8().ok_or_else(|| err("truncated converged"))? {
+            0 => false,
+            1 => true,
+            _ => return Err(err("bad converged flag")),
+        };
+        let records_pruned = c.u64().ok_or_else(|| err("truncated records_pruned"))?;
+        let centers = c.matrix().ok_or_else(|| err("truncated centers"))?;
+        let weights = c.f64s().ok_or_else(|| err("truncated weights"))?;
+        let scaler = match c.u8().ok_or_else(|| err("truncated scaler flag"))? {
+            0 => None,
+            1 => {
+                let offset = c.f32s().ok_or_else(|| err("truncated scaler offset"))?;
+                let scale = c.f32s().ok_or_else(|| err("truncated scaler scale"))?;
+                Some(Scaler { offset, scale })
+            }
+            _ => return Err(err("bad scaler flag")),
+        };
+        if !c.done() {
+            return Err(err("trailing bytes"));
+        }
+        let bundle = ModelBundle {
+            centers,
+            weights,
+            scaler,
+            algo,
+            variant,
+            m,
+            seed,
+            dataset,
+            trained_rows,
+            iterations,
+            objective,
+            converged,
+            records_pruned,
+        };
+        bundle.validate()?;
+        Ok(bundle)
+    }
+
+    /// Save to a file; returns bytes written.
+    pub fn save(&self, path: &Path) -> Result<u64> {
+        self.validate()?;
+        let img = self.encode();
+        std::fs::write(path, &img).map_err(|e| Error::io(path, e))?;
+        Ok(img.len() as u64)
+    }
+
+    /// Load and verify from a file.
+    pub fn load(path: &Path) -> Result<ModelBundle> {
+        let bytes = std::fs::read(path).map_err(|e| Error::io(path, e))?;
+        Self::decode(&bytes)
+    }
+
+    /// Human-readable report for `bigfcm info --model`.
+    pub fn summary(&self) -> String {
+        format!(
+            "algo={} variant={:?} C={} d={} m={} scaler={} seed={:#x}\n\
+             trained: dataset={} rows={} iterations={} objective={:.6e} converged={} \
+             records_pruned={}",
+            self.algo.as_str(),
+            self.variant,
+            self.clusters(),
+            self.dims(),
+            self.m,
+            if self.scaler.is_some() { "yes" } else { "no" },
+            self.seed,
+            if self.dataset.is_empty() { "?" } else { &self.dataset },
+            self.trained_rows,
+            self.iterations,
+            self.objective,
+            self.converged,
+            self.records_pruned,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg;
+
+    fn sample_bundle(seed: u64) -> ModelBundle {
+        let mut rng = Pcg::new(seed);
+        let (c, d) = (2 + rng.next_index(4), 1 + rng.next_index(6));
+        let mut centers = Matrix::zeros(c, d);
+        for v in centers.as_mut_slice() {
+            *v = rng.normal() as f32;
+        }
+        let mut b = ModelBundle::new(centers, SessionAlgo::Fcm, Variant::Fast, 2.0);
+        b.weights = (0..c).map(|_| rng.next_f64() * 100.0).collect();
+        b.scaler = Some(Scaler {
+            offset: (0..d).map(|_| rng.normal() as f32).collect(),
+            scale: (0..d).map(|_| rng.next_f32() + 0.5).collect(),
+        });
+        b.seed = seed;
+        b.dataset = format!("synthetic-{seed}");
+        b.trained_rows = 10_000 + seed;
+        b.iterations = 17;
+        b.objective = 123.456;
+        b.converged = true;
+        b.records_pruned = 42;
+        b
+    }
+
+    #[test]
+    fn encode_decode_roundtrips_bitwise() {
+        for seed in 0..6 {
+            let b = sample_bundle(seed);
+            let img = b.encode();
+            let back = ModelBundle::decode(&img).unwrap();
+            assert_eq!(back.encode(), img, "seed {seed}: re-encode differs");
+            assert_eq!(back.centers, b.centers);
+            assert_eq!(back.weights, b.weights);
+            assert_eq!(back.m, b.m);
+            assert_eq!(back.dataset, b.dataset);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let b = sample_bundle(9);
+        let img = b.encode();
+        assert!(ModelBundle::decode(&[]).is_err());
+        let mut flipped = img.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x10;
+        assert!(ModelBundle::decode(&flipped).is_err(), "bit flip must not decode");
+        let mut truncated = img.clone();
+        truncated.truncate(img.len() - 5);
+        assert!(ModelBundle::decode(&truncated).is_err(), "truncation must not decode");
+    }
+
+    #[test]
+    fn validate_catches_structural_errors() {
+        let mut b = sample_bundle(3);
+        b.weights = vec![1.0];
+        assert!(b.validate().is_err(), "weights/centers mismatch");
+        let mut b = sample_bundle(4);
+        b.m = 1.0;
+        assert!(b.validate().is_err(), "FCM fuzzifier must be > 1");
+        b.algo = SessionAlgo::KMeans;
+        assert!(b.validate().is_ok(), "K-Means ignores the fuzzifier");
+        let mut b = sample_bundle(5);
+        b.scaler = Some(Scaler { offset: vec![0.0], scale: vec![1.0] });
+        assert!(b.validate().is_err(), "scaler dims mismatch");
+        let mut b = sample_bundle(6);
+        if let Some(s) = &mut b.scaler {
+            s.scale[0] = 0.0;
+        }
+        assert!(b.validate().is_err(), "zero scale must be rejected");
+    }
+
+    #[test]
+    fn kernel_dispatch_matches_algo() {
+        let b = sample_bundle(7);
+        assert_eq!(b.kernel(), Kernel::FcmFast);
+        let mut b = sample_bundle(8);
+        b.variant = Variant::Classic;
+        assert_eq!(b.kernel(), Kernel::FcmClassic);
+        b.algo = SessionAlgo::KMeans;
+        assert_eq!(b.kernel(), Kernel::KMeans);
+    }
+}

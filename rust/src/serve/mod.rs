@@ -1,0 +1,55 @@
+//! Online membership-serving subsystem — the paper's actual deliverable.
+//!
+//! BigFCM positions the membership matrix "as a preprocessing step in many
+//! data mining process implementations": training fast is only half the
+//! system, the other half is *answering membership queries* against the
+//! trained model. This module is that second phase (the same two-phase
+//! shape as CFM-BD in PAPERS.md — distributed fit, then a compact model
+//! served for classification), in three layers:
+//!
+//! * **[`bundle`]** — a [`ModelBundle`] persists everything scoring needs
+//!   (centers, the [`crate::data::normalize::Scaler`] that normalized the
+//!   training data, algorithm/variant/fuzzifier, seed and training
+//!   counters) behind a checksummed bitwise LE codec, the same write/read
+//!   discipline as the slab spill images and `.bfb` block files. Saved by
+//!   `bigfcm run/session --save-model`, inspected by `bigfcm info
+//!   --model`.
+//! * **[`service`]** — a [`ScoreService`] answers concurrent single-record
+//!   membership queries online: requests enter a bounded admission queue
+//!   (backpressure when full), a batcher thread coalesces them into
+//!   zero-padded micro-batches and executes each batch through one
+//!   [`crate::fcm::KernelBackend::score_chunk`] call — so the device-shape
+//!   backends (the PJRT shim today, lowered scoring artifacts tomorrow)
+//!   serve traffic through exactly the kernels that trained the model.
+//!   Queue depth, batch fill and p50/p95/p99 latency are metered
+//!   ([`ServeStats`]); `bigfcm serve-bench` drives a closed-loop load
+//!   harness against it.
+//! * **[`bulk`]** — [`run_score_job`] labels an entire
+//!   [`crate::hdfs::BlockStore`] as one MapReduce job through the engine's
+//!   cache/locality/prefetch path, writing top-k sparse membership rows
+//!   back out block-by-block via [`crate::hdfs::BlockStoreWriter`] (a
+//!   bounded reorder buffer keeps appends in block order while map tasks
+//!   finish out of order), so multi-GiB stores are labeled end-to-end
+//!   without materializing the membership matrix.
+//!
+//! ```text
+//!      bigfcm run/session --save-model      bigfcm serve-bench / score
+//!                 │                                   │
+//!                 ▼                                   ▼
+//!           ModelBundle  ──────────────►  ScoreService        run_score_job
+//!        (centers·scaler·m·counters,      (bounded queue →    (MR job over a
+//!         checksummed bitwise codec)       micro-batches)      BlockStore)
+//!                                                │                  │
+//!                                                └── score_chunk ───┘
+//!                                                 (one KernelBackend
+//!                                                  primitive: native,
+//!                                                  shim, PJRT-ready)
+//! ```
+
+pub mod bulk;
+pub mod bundle;
+pub mod service;
+
+pub use bulk::{dense_from_top_k, run_score_job, ScoreJobOutcome, ScoreJobTotals};
+pub use bundle::ModelBundle;
+pub use service::{ScoreService, ServeOptions, ServeStats};

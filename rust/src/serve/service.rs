@@ -1,0 +1,522 @@
+//! The online scoring service: bounded admission, micro-batched execution.
+//!
+//! One request is one raw record; the response is its membership row. The
+//! paper's serving regime ("heavy traffic from millions of users" — the
+//! ROADMAP north star) is throughput-bound on kernel dispatch, not on any
+//! single record's math, so the service never scores records one at a
+//! time: a batcher thread pops the first waiting request, lingers a
+//! configurable few hundred microseconds for concurrent requests to pile
+//! in ([`ServeOptions::linger`], the standard micro-batching trade — a
+//! bounded latency tax buys multiplicative throughput), zero-pads the
+//! batch up to a row multiple ([`ServeOptions::pad_rows`], the fixed-shape
+//! discipline a lowered device kernel wants; padding rows are discarded,
+//! the same contract as the chunked runtime) and executes it as **one**
+//! [`KernelBackend::score_chunk`] call. The admission queue is bounded:
+//! a full queue blocks the caller (backpressure, counted) instead of
+//! growing without limit.
+//!
+//! Metering is part of the contract: queue depth peak, batch fill (mean
+//! live records per executed batch — > 1 means coalescing actually
+//! happens), pad utilization, and the full request-latency distribution
+//! (p50/p95/p99, enqueue → response) surface in [`ServeStats`] and feed
+//! the `bigfcm serve-bench` JSON.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+use crate::fcm::KernelBackend;
+use crate::json::{self, Value};
+use crate::serve::bundle::ModelBundle;
+
+/// Knobs of one [`ScoreService`].
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Max live records coalesced into one micro-batch.
+    pub max_batch: usize,
+    /// Batches are zero-padded up to a multiple of this row count.
+    pub pad_rows: usize,
+    /// Bounded admission-queue capacity (full queue blocks enqueuers).
+    pub queue_cap: usize,
+    /// How long the batcher waits after a batch's first request for
+    /// concurrent requests to coalesce; zero scores singles immediately.
+    pub linger: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            max_batch: 64,
+            pad_rows: 8,
+            queue_cap: 1024,
+            linger: Duration::from_micros(200),
+        }
+    }
+}
+
+impl ServeOptions {
+    pub fn from_config(cfg: &ServeConfig) -> Self {
+        Self {
+            max_batch: cfg.max_batch.max(1),
+            pad_rows: cfg.pad_rows.max(1),
+            queue_cap: cfg.queue_cap.max(1),
+            linger: Duration::from_micros(cfg.linger_us),
+        }
+    }
+}
+
+/// Snapshot of a service's meters.
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    /// Requests answered (successfully or with a batch error).
+    pub requests: u64,
+    /// Micro-batches executed.
+    pub batches: u64,
+    /// Requests that received a batch-execution error.
+    pub errors: u64,
+    /// Mean live records per executed batch — > 1 means concurrent
+    /// requests actually coalesced.
+    pub batch_fill: f64,
+    /// live rows / padded rows across all batches (cost of the fixed-shape
+    /// padding).
+    pub pad_utilization: f64,
+    /// Deepest the admission queue ever got.
+    pub queue_peak: u64,
+    /// Times an enqueuer blocked on a full queue.
+    pub backpressure_waits: u64,
+    /// Request latency percentiles, enqueue → response, microseconds.
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+    pub max_us: u64,
+}
+
+impl ServeStats {
+    /// JSON object for the serve-bench emission / bench_diff tracking.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("requests", json::num(self.requests as f64)),
+            ("batches", json::num(self.batches as f64)),
+            ("errors", json::num(self.errors as f64)),
+            ("batch_fill", json::num(self.batch_fill)),
+            ("pad_utilization", json::num(self.pad_utilization)),
+            ("queue_peak", json::num(self.queue_peak as f64)),
+            ("backpressure_waits", json::num(self.backpressure_waits as f64)),
+            ("p50_us", json::num(self.p50_us as f64)),
+            ("p95_us", json::num(self.p95_us as f64)),
+            ("p99_us", json::num(self.p99_us as f64)),
+            ("mean_us", json::num(self.mean_us)),
+            ("max_us", json::num(self.max_us as f64)),
+        ])
+    }
+}
+
+/// One admitted request: the normalized record and its response channel.
+struct Pending {
+    row: Vec<f32>,
+    tx: Sender<Result<Vec<f32>>>,
+}
+
+/// Latency samples the reservoir keeps resident — enough for stable
+/// p50/p95/p99 while bounding a long-lived server's metric memory (a
+/// production service answers requests indefinitely; an unbounded log
+/// would leak 8 B per request forever and make every stats() snapshot
+/// sort the whole history).
+const LATENCY_RESERVOIR: usize = 65_536;
+
+/// Algorithm-R reservoir over request latencies: the first
+/// [`LATENCY_RESERVOIR`] samples are kept verbatim, after which each new
+/// sample replaces a uniformly drawn slot with probability cap/seen —
+/// every sample ever recorded has equal probability of being resident, so
+/// the percentile estimates stay unbiased at O(1) memory.
+struct LatencyLog {
+    samples: Vec<u64>,
+    seen: u64,
+    rng: crate::prng::Pcg,
+}
+
+impl LatencyLog {
+    fn new() -> Self {
+        Self {
+            samples: Vec::new(),
+            seen: 0,
+            rng: crate::prng::Pcg::new(0x5C0_4E1A),
+        }
+    }
+
+    fn record(&mut self, us: u64) {
+        self.seen += 1;
+        if self.samples.len() < LATENCY_RESERVOIR {
+            self.samples.push(us);
+        } else {
+            let j = self.rng.next_below(self.seen) as usize;
+            if j < LATENCY_RESERVOIR {
+                self.samples[j] = us;
+            }
+        }
+    }
+}
+
+struct QueueInner {
+    items: VecDeque<Pending>,
+    closed: bool,
+}
+
+struct Shared {
+    bundle: ModelBundle,
+    backend: Arc<dyn KernelBackend>,
+    opts: ServeOptions,
+    queue: Mutex<QueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    requests: AtomicU64,
+    batches: AtomicU64,
+    live_rows: AtomicU64,
+    padded_rows: AtomicU64,
+    queue_peak: AtomicU64,
+    backpressure_waits: AtomicU64,
+    errors: AtomicU64,
+    latencies_us: Mutex<LatencyLog>,
+}
+
+/// The micro-batching membership service (see the module docs). Share it
+/// behind an `Arc` and call [`Self::score`] from any number of client
+/// threads; one batcher thread owns execution.
+pub struct ScoreService {
+    shared: Arc<Shared>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ScoreService {
+    pub fn new(
+        bundle: ModelBundle,
+        backend: Arc<dyn KernelBackend>,
+        opts: ServeOptions,
+    ) -> Result<ScoreService> {
+        bundle.validate()?;
+        let shared = Arc::new(Shared {
+            bundle,
+            backend,
+            opts,
+            queue: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            live_rows: AtomicU64::new(0),
+            padded_rows: AtomicU64::new(0),
+            queue_peak: AtomicU64::new(0),
+            backpressure_waits: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            latencies_us: Mutex::new(LatencyLog::new()),
+        });
+        let for_worker = Arc::clone(&shared);
+        let worker = std::thread::Builder::new()
+            .name("bigfcm-score".to_string())
+            .spawn(move || worker_loop(for_worker))
+            .map_err(|e| Error::Job(format!("spawning the score batcher thread: {e}")))?;
+        Ok(ScoreService { shared, worker: Mutex::new(Some(worker)) })
+    }
+
+    /// The model this service scores against.
+    pub fn bundle(&self) -> &ModelBundle {
+        &self.shared.bundle
+    }
+
+    /// Score one raw record: normalize, enqueue, block for the response.
+    /// Latency (enqueue → response, including queue wait and batch
+    /// compute) is recorded per request.
+    pub fn score(&self, record: &[f32]) -> Result<Vec<f32>> {
+        let sh = &self.shared;
+        if record.len() != sh.bundle.dims() {
+            return Err(Error::InvalidArgument(format!(
+                "record has {} features, model expects {}",
+                record.len(),
+                sh.bundle.dims()
+            )));
+        }
+        let mut row = record.to_vec();
+        sh.bundle.normalize_row(&mut row);
+        let t0 = Instant::now();
+        let (tx, rx) = channel();
+        {
+            let mut q = sh.queue.lock().expect("score queue poisoned");
+            while q.items.len() >= sh.opts.queue_cap && !q.closed {
+                sh.backpressure_waits.fetch_add(1, Ordering::Relaxed);
+                q = sh.not_full.wait(q).expect("score queue poisoned");
+            }
+            if q.closed {
+                return Err(Error::Job("score service is closed".into()));
+            }
+            q.items.push_back(Pending { row, tx });
+            sh.queue_peak.fetch_max(q.items.len() as u64, Ordering::Relaxed);
+            sh.not_empty.notify_one();
+        }
+        let out = rx
+            .recv()
+            .map_err(|_| Error::Job("score service dropped the request".into()))?;
+        let us = t0.elapsed().as_micros() as u64;
+        sh.latencies_us.lock().expect("latency log poisoned").record(us);
+        sh.requests.fetch_add(1, Ordering::Relaxed);
+        out
+    }
+
+    /// Meter snapshot: percentiles by nearest rank over the latency
+    /// reservoir (exact until [`LATENCY_RESERVOIR`] requests, an unbiased
+    /// uniform sample of the whole history after).
+    pub fn stats(&self) -> ServeStats {
+        let sh = &self.shared;
+        let mut lat = sh.latencies_us.lock().expect("latency log poisoned").samples.clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lat.is_empty() {
+                return 0;
+            }
+            let rank = ((lat.len() as f64) * p).ceil() as usize;
+            lat[rank.clamp(1, lat.len()) - 1]
+        };
+        let batches = sh.batches.load(Ordering::Relaxed);
+        let live = sh.live_rows.load(Ordering::Relaxed);
+        let padded = sh.padded_rows.load(Ordering::Relaxed);
+        ServeStats {
+            requests: sh.requests.load(Ordering::Relaxed),
+            batches,
+            errors: sh.errors.load(Ordering::Relaxed),
+            batch_fill: if batches > 0 { live as f64 / batches as f64 } else { 0.0 },
+            pad_utilization: if padded > 0 { live as f64 / padded as f64 } else { 0.0 },
+            queue_peak: sh.queue_peak.load(Ordering::Relaxed),
+            backpressure_waits: sh.backpressure_waits.load(Ordering::Relaxed),
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            mean_us: if lat.is_empty() {
+                0.0
+            } else {
+                lat.iter().sum::<u64>() as f64 / lat.len() as f64
+            },
+            max_us: lat.last().copied().unwrap_or(0),
+        }
+    }
+
+    /// Stop admitting requests; queued-but-unscored requests error out.
+    /// The batcher drains and exits (joined on drop).
+    pub fn close(&self) {
+        let sh = &self.shared;
+        let mut q = sh.queue.lock().expect("score queue poisoned");
+        q.closed = true;
+        while let Some(p) = q.items.pop_front() {
+            let _ = p.tx.send(Err(Error::Job("score service is closed".into())));
+        }
+        sh.not_empty.notify_all();
+        sh.not_full.notify_all();
+    }
+}
+
+impl Drop for ScoreService {
+    fn drop(&mut self) {
+        self.close();
+        if let Some(h) = self.worker.get_mut().expect("worker handle poisoned").take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Batcher thread: pop the first waiting request, linger for company, cut
+/// the batch at `max_batch` or the linger deadline, execute off-lock.
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let mut batch: Vec<Pending> = Vec::new();
+        {
+            let mut q = sh.queue.lock().expect("score queue poisoned");
+            loop {
+                if let Some(p) = q.items.pop_front() {
+                    batch.push(p);
+                    break;
+                }
+                if q.closed {
+                    return;
+                }
+                q = sh.not_empty.wait(q).expect("score queue poisoned");
+            }
+            let deadline = Instant::now() + sh.opts.linger;
+            loop {
+                while batch.len() < sh.opts.max_batch {
+                    match q.items.pop_front() {
+                        Some(p) => batch.push(p),
+                        None => break,
+                    }
+                }
+                if batch.len() >= sh.opts.max_batch || q.closed {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, wait) = sh
+                    .not_empty
+                    .wait_timeout(q, deadline - now)
+                    .expect("score queue poisoned");
+                q = guard;
+                if wait.timed_out() && q.items.is_empty() {
+                    break;
+                }
+            }
+            sh.not_full.notify_all();
+        }
+        execute_batch(&sh, batch);
+    }
+}
+
+/// Score one coalesced batch through a single `score_chunk` call and fan
+/// the rows back out to their requesters.
+fn execute_batch(sh: &Shared, batch: Vec<Pending>) {
+    let live = batch.len();
+    if live == 0 {
+        return;
+    }
+    let d = sh.bundle.dims();
+    let c = sh.bundle.clusters();
+    let pad = sh.opts.pad_rows.max(1);
+    let padded = live.div_ceil(pad) * pad;
+    let mut x = Matrix::zeros(padded, d);
+    for (i, p) in batch.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(&p.row);
+    }
+    let mut u = Matrix::zeros(padded, c);
+    match sh
+        .backend
+        .score_chunk(sh.bundle.kernel(), &x, &sh.bundle.centers, sh.bundle.m, &mut u)
+    {
+        Ok(()) => {
+            for (i, p) in batch.iter().enumerate() {
+                let _ = p.tx.send(Ok(u.row(i).to_vec()));
+            }
+        }
+        Err(e) => {
+            sh.errors.fetch_add(live as u64, Ordering::Relaxed);
+            let msg = e.to_string();
+            for p in &batch {
+                let _ = p.tx.send(Err(Error::Job(format!("score batch failed: {msg}"))));
+            }
+        }
+    }
+    sh.batches.fetch_add(1, Ordering::Relaxed);
+    sh.live_rows.fetch_add(live as u64, Ordering::Relaxed);
+    sh.padded_rows.fetch_add(padded as u64, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+    use crate::fcm::native::memberships;
+    use crate::fcm::{NativeBackend, SessionAlgo, Variant};
+
+    fn bundle_from_blobs(seed: u64) -> (ModelBundle, Matrix) {
+        let data = blobs(256, 3, 3, 0.3, seed);
+        let mut centers = Matrix::zeros(3, 3);
+        for i in 0..3 {
+            centers.row_mut(i).copy_from_slice(data.features.row(i * 80));
+        }
+        let b = ModelBundle::new(centers, SessionAlgo::Fcm, Variant::Fast, 2.0);
+        (b, data.features)
+    }
+
+    #[test]
+    fn single_requests_match_the_membership_oracle() {
+        let (bundle, x) = bundle_from_blobs(11);
+        let centers = bundle.centers.clone();
+        let svc = ScoreService::new(
+            bundle,
+            Arc::new(NativeBackend),
+            ServeOptions { linger: Duration::from_micros(0), ..Default::default() },
+        )
+        .unwrap();
+        let oracle = memberships(&x, &centers, 2.0);
+        for k in [0usize, 17, 103, 255] {
+            let u = svc.score(x.row(k)).unwrap();
+            let s: f32 = u.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "row {k} sums to {s}");
+            for (a, b) in u.iter().zip(oracle.row(k)) {
+                assert!((a - b).abs() < 1e-6, "row {k}: {a} vs {b}");
+            }
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.requests, 4);
+        assert!(stats.batches >= 1 && stats.batches <= 4);
+        assert!(stats.p50_us <= stats.p95_us && stats.p95_us <= stats.p99_us);
+    }
+
+    #[test]
+    fn concurrent_clients_coalesce_into_micro_batches() {
+        let (bundle, x) = bundle_from_blobs(12);
+        let svc = Arc::new(
+            ScoreService::new(
+                bundle,
+                Arc::new(NativeBackend),
+                ServeOptions {
+                    max_batch: 8,
+                    linger: Duration::from_millis(50),
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        );
+        let x = Arc::new(x);
+        let handles: Vec<_> = (0..4)
+            .map(|ci| {
+                let svc = Arc::clone(&svc);
+                let x = Arc::clone(&x);
+                std::thread::spawn(move || {
+                    for r in 0..5usize {
+                        let u = svc.score(x.row(ci * 50 + r)).unwrap();
+                        let s: f32 = u.iter().sum();
+                        assert!((s - 1.0).abs() < 1e-6);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.requests, 20);
+        assert!(
+            stats.batch_fill > 1.0,
+            "4 concurrent closed-loop clients under a 50ms linger must coalesce \
+             (fill {}, {} batches)",
+            stats.batch_fill,
+            stats.batches
+        );
+        assert!(stats.pad_utilization > 0.0 && stats.pad_utilization <= 1.0);
+    }
+
+    #[test]
+    fn closed_service_rejects_and_wrong_dims_error() {
+        let (bundle, x) = bundle_from_blobs(13);
+        let svc =
+            ScoreService::new(bundle, Arc::new(NativeBackend), ServeOptions::default()).unwrap();
+        assert!(svc.score(&[1.0, 2.0]).is_err(), "2 features against a 3-feature model");
+        svc.close();
+        assert!(svc.score(x.row(0)).is_err(), "closed service must reject");
+    }
+
+    #[test]
+    fn kmeans_service_returns_one_hot_rows() {
+        let (mut bundle, x) = bundle_from_blobs(14);
+        bundle.algo = SessionAlgo::KMeans;
+        let svc =
+            ScoreService::new(bundle, Arc::new(NativeBackend), ServeOptions::default()).unwrap();
+        let u = svc.score(x.row(5)).unwrap();
+        assert_eq!(u.iter().filter(|&&v| v == 1.0).count(), 1);
+        assert_eq!(u.iter().filter(|&&v| v == 0.0).count(), 2);
+    }
+}

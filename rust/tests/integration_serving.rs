@@ -1,0 +1,326 @@
+//! Serving-subsystem acceptance tests: persisted bundles roundtrip
+//! bitwise, the online service's rows match the single-shot membership
+//! oracle within 1e-6 (and sum to 1), micro-batching actually coalesces,
+//! and the bulk ScoreJob labels a store identically to the single-shot
+//! path — on both the native and PJRT-shim backends, with fault-injected
+//! re-execution never corrupting the output store.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bigfcm::config::OverheadConfig;
+use bigfcm::data::normalize::Scaler;
+use bigfcm::data::synth::blobs;
+use bigfcm::data::Matrix;
+use bigfcm::fcm::native::memberships;
+use bigfcm::fcm::{KernelBackend, NativeBackend, SessionAlgo, Variant};
+use bigfcm::hdfs::BlockStore;
+use bigfcm::mapreduce::{Engine, EngineOptions};
+use bigfcm::prng::Pcg;
+use bigfcm::runtime::PjrtShimBackend;
+use bigfcm::serve::{dense_from_top_k, run_score_job, ModelBundle, ScoreService, ServeOptions};
+
+/// A deterministic trained-ish bundle over blobs: centers picked from the
+/// (normalized) data, min-max scaler attached.
+fn fixture(seed: u64, n: usize, d: usize, c: usize) -> (ModelBundle, Matrix) {
+    let data = blobs(n, d, c, 0.25, seed);
+    let scaler = Scaler::min_max(&data.features);
+    let mut normalized = data.features.clone();
+    scaler.apply(&mut normalized);
+    let mut centers = Matrix::zeros(c, d);
+    for i in 0..c {
+        centers.row_mut(i).copy_from_slice(normalized.row(i * (n / c)));
+    }
+    let mut bundle = ModelBundle::new(centers, SessionAlgo::Fcm, Variant::Fast, 2.0);
+    bundle.scaler = Some(scaler);
+    bundle.dataset = "blobs".into();
+    bundle.trained_rows = n as u64;
+    (bundle, data.features)
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("bigfcm_serving_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn bundle_codec_roundtrips_bitwise_under_random_shapes() {
+    for case in 0..8u64 {
+        let mut rng = Pcg::new(5_000 + case);
+        let c = 2 + rng.next_index(6);
+        let d = 1 + rng.next_index(9);
+        let mut centers = Matrix::zeros(c, d);
+        for v in centers.as_mut_slice() {
+            *v = rng.normal() as f32;
+        }
+        let algo = if case % 3 == 0 { SessionAlgo::KMeans } else { SessionAlgo::Fcm };
+        let variant = if case % 2 == 0 { Variant::Fast } else { Variant::Classic };
+        let mut b = ModelBundle::new(centers, algo, variant, 1.2 + rng.next_f64());
+        b.weights = (0..c).map(|_| rng.next_f64() * 1e4).collect();
+        if case % 2 == 1 {
+            b.scaler = Some(Scaler {
+                offset: (0..d).map(|_| rng.normal() as f32).collect(),
+                scale: (0..d).map(|_| rng.next_f32() + 0.25).collect(),
+            });
+        }
+        b.seed = case;
+        b.dataset = format!("case-{case}");
+        b.trained_rows = rng.next_u64() % 1_000_000;
+        b.iterations = rng.next_u64() % 1_000;
+        b.objective = rng.normal();
+        b.converged = case % 2 == 0;
+        b.records_pruned = rng.next_u64() % 1_000_000;
+        let img = b.encode();
+        let back = ModelBundle::decode(&img)
+            .unwrap_or_else(|e| panic!("case {case}: decode failed: {e}"));
+        assert_eq!(back.encode(), img, "case {case}: roundtrip is not bitwise");
+    }
+}
+
+#[test]
+fn bundle_save_load_detects_file_corruption() {
+    let (bundle, _) = fixture(6_001, 400, 4, 3);
+    let dir = tmp_dir("bundle");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.bfm");
+    let bytes = bundle.save(&path).unwrap();
+    let back = ModelBundle::load(&path).unwrap();
+    assert_eq!(back.encode(), bundle.encode());
+    let mut img = std::fs::read(&path).unwrap();
+    assert_eq!(img.len() as u64, bytes);
+    let mid = img.len() / 3;
+    img[mid] ^= 0x04;
+    std::fs::write(&path, &img).unwrap();
+    assert!(ModelBundle::load(&path).is_err(), "flipped bit must fail the checksum");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance: service rows sum to 1 within 1e-6 and match the single-shot
+/// `memberships()` oracle within 1e-6 — native and shim backends.
+#[test]
+fn service_rows_match_single_shot_on_native_and_shim() {
+    let (bundle, raw) = fixture(6_100, 600, 5, 3);
+    let centers = bundle.centers.clone();
+    let scaler = bundle.scaler.clone().unwrap();
+    let mut normalized = raw.clone();
+    scaler.apply(&mut normalized);
+    let oracle = memberships(&normalized, &centers, 2.0);
+    let backends: Vec<(&str, Arc<dyn KernelBackend>)> = vec![
+        ("native", Arc::new(NativeBackend)),
+        ("pjrt-shim", Arc::new(PjrtShimBackend::new(128))),
+    ];
+    for (name, backend) in backends {
+        let svc = ScoreService::new(bundle.clone(), backend, ServeOptions::default()).unwrap();
+        for k in (0..600).step_by(37) {
+            let u = svc.score(raw.row(k)).unwrap();
+            let s: f32 = u.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "{name} row {k}: sums to {s}");
+            for (i, (a, b)) in u.iter().zip(oracle.row(k)).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-6,
+                    "{name} row {k} center {i}: {a} vs oracle {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn concurrent_clients_coalesce_and_percentiles_are_ordered() {
+    let (bundle, raw) = fixture(6_200, 512, 4, 3);
+    let svc = Arc::new(
+        ScoreService::new(
+            bundle,
+            Arc::new(NativeBackend),
+            ServeOptions { max_batch: 16, linger: Duration::from_millis(40), ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let raw = Arc::new(raw);
+    let handles: Vec<_> = (0..6)
+        .map(|ci| {
+            let svc = Arc::clone(&svc);
+            let x = Arc::clone(&raw);
+            std::thread::spawn(move || {
+                for r in 0..4usize {
+                    svc.score(x.row((ci * 80 + r) % x.rows())).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.requests, 24);
+    assert!(
+        stats.batch_fill > 1.0,
+        "6 concurrent clients under a 40ms linger must coalesce (fill {}, {} batches)",
+        stats.batch_fill,
+        stats.batches
+    );
+    assert!(stats.p50_us <= stats.p95_us && stats.p95_us <= stats.p99_us);
+    assert!(stats.p99_us <= stats.max_us);
+    assert!(stats.queue_peak >= 1);
+}
+
+/// Acceptance: the bulk ScoreJob's output matches the single-shot
+/// membership path within 1e-6 on every sampled record — native and shim.
+#[test]
+fn bulk_score_job_matches_single_shot_on_both_backends() {
+    let (bundle, raw) = fixture(6_300, 2_048, 4, 4);
+    let store = Arc::new(BlockStore::in_memory("raw", &raw, 256, 4).unwrap());
+    let scaler = bundle.scaler.clone().unwrap();
+    let mut normalized = raw.clone();
+    scaler.apply(&mut normalized);
+    let oracle = memberships(&normalized, &bundle.centers, 2.0);
+    let backends: Vec<(&str, Arc<dyn KernelBackend>)> = vec![
+        ("native", Arc::new(NativeBackend)),
+        ("pjrt-shim", Arc::new(PjrtShimBackend::new(100))),
+    ];
+    for (name, backend) in backends {
+        let dir = tmp_dir(&format!("bulk_{name}"));
+        let mut engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let outcome = run_score_job(
+            &mut engine,
+            &store,
+            Arc::new(bundle.clone()),
+            backend,
+            4, // k = C: the sparse rows carry the full distribution
+            dir.clone(),
+        )
+        .unwrap();
+        assert_eq!(outcome.totals.rows, 2_048, "{name}: row count");
+        assert_eq!(outcome.store.num_blocks(), store.num_blocks(), "{name}: block count");
+        for global in (0..2_048).step_by(111) {
+            let (block, local) = (global / 256, global % 256);
+            let rows = outcome.store.read_block(block).unwrap();
+            let dense = dense_from_top_k(rows.row(local), 4);
+            let s: f32 = dense.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "{name} record {global}: sums to {s}");
+            for (i, (a, b)) in dense.iter().zip(oracle.row(global)).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-6,
+                    "{name} record {global} center {i}: bulk {a} vs single-shot {b}"
+                );
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn bulk_top_k_rows_are_the_descending_prefix_of_the_dense_row() {
+    let (bundle, raw) = fixture(6_400, 1_024, 3, 4);
+    let store = Arc::new(BlockStore::in_memory("raw", &raw, 128, 4).unwrap());
+    let scaler = bundle.scaler.clone().unwrap();
+    let mut normalized = raw.clone();
+    scaler.apply(&mut normalized);
+    let oracle = memberships(&normalized, &bundle.centers, 2.0);
+    let dir = tmp_dir("topk");
+    let mut engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+    let outcome = run_score_job(
+        &mut engine,
+        &store,
+        Arc::new(bundle),
+        Arc::new(NativeBackend),
+        2,
+        dir.clone(),
+    )
+    .unwrap();
+    assert_eq!(outcome.top_k, 2);
+    assert_eq!(outcome.store.cols(), 4, "2 (center, membership) pairs per record");
+    for global in (0..1_024).step_by(97) {
+        let (block, local) = (global / 128, global % 128);
+        let sparse = outcome.store.read_block(block).unwrap().row(local).to_vec();
+        assert!(sparse[1] >= sparse[3], "record {global}: pairs not descending");
+        // The kept entries are the two largest of the dense oracle row.
+        let mut want: Vec<f32> = oracle.row(global).to_vec();
+        want.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert!((sparse[1] - want[0]).abs() < 1e-6, "record {global}: top-1 mismatch");
+        assert!((sparse[3] - want[1]).abs() < 1e-6, "record {global}: top-2 mismatch");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bulk_score_job_survives_fault_injection_and_reopens() {
+    let (bundle, raw) = fixture(6_500, 1_536, 4, 3);
+    let store = Arc::new(BlockStore::in_memory("raw", &raw, 128, 4).unwrap());
+    let bundle = Arc::new(bundle);
+    let clean_dir = tmp_dir("clean");
+    let mut clean_engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+    let clean = run_score_job(
+        &mut clean_engine,
+        &store,
+        Arc::clone(&bundle),
+        Arc::new(NativeBackend),
+        3,
+        clean_dir.clone(),
+    )
+    .unwrap();
+    let faulty_dir = tmp_dir("faulty");
+    let opts = EngineOptions { fault_rate: 0.4, fault_seed: 11, ..Default::default() };
+    let mut faulty_engine = Engine::new(opts, OverheadConfig::default());
+    let faulty = run_score_job(
+        &mut faulty_engine,
+        &store,
+        Arc::clone(&bundle),
+        Arc::new(NativeBackend),
+        3,
+        faulty_dir.clone(),
+    )
+    .unwrap();
+    assert!(faulty.stats.attempts > faulty.stats.map_tasks, "faults must have fired");
+    assert_eq!(faulty.store.num_blocks(), clean.store.num_blocks());
+    for b in 0..clean.store.num_blocks() {
+        assert_eq!(
+            faulty.store.read_block(b).unwrap(),
+            clean.store.read_block(b).unwrap(),
+            "block {b}: re-executed attempts corrupted the output store"
+        );
+    }
+    // The labeled store is a first-class block store: reopenable from its
+    // files alone and identical after the round trip.
+    let reopened = BlockStore::open_disk("memberships", 4, faulty_dir.clone()).unwrap();
+    assert_eq!(reopened.num_blocks(), clean.store.num_blocks());
+    assert_eq!(reopened.read_block(0).unwrap(), clean.store.read_block(0).unwrap());
+    std::fs::remove_dir_all(&clean_dir).ok();
+    std::fs::remove_dir_all(&faulty_dir).ok();
+}
+
+/// The scaler-guard satellite end-to-end: a constant feature column must
+/// not poison serving (regression for the NaN-normalization hazard).
+#[test]
+fn constant_feature_columns_serve_finite_memberships() {
+    let n = 300usize;
+    let base = blobs(n, 3, 2, 0.3, 6_600);
+    // Append a constant column to every record.
+    let mut rows: Vec<Vec<f32>> = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut r = base.features.row(i).to_vec();
+        r.push(7.5);
+        rows.push(r);
+    }
+    let features = Matrix::from_rows(&rows);
+    for fit in [Scaler::min_max, Scaler::z_score] {
+        let scaler = fit(&features);
+        let mut normalized = features.clone();
+        scaler.apply(&mut normalized);
+        assert!(normalized.as_slice().iter().all(|v| v.is_finite()));
+        let mut centers = Matrix::zeros(2, 4);
+        centers.row_mut(0).copy_from_slice(normalized.row(0));
+        centers.row_mut(1).copy_from_slice(normalized.row(n / 2));
+        let mut bundle = ModelBundle::new(centers, SessionAlgo::Fcm, Variant::Fast, 2.0);
+        bundle.scaler = Some(scaler);
+        let svc =
+            ScoreService::new(bundle, Arc::new(NativeBackend), ServeOptions::default()).unwrap();
+        for k in [1usize, 57, 299] {
+            let u = svc.score(features.row(k)).unwrap();
+            assert!(u.iter().all(|v| v.is_finite()), "row {k} carries non-finite memberships");
+            let s: f32 = u.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "row {k} sums to {s}");
+        }
+    }
+}

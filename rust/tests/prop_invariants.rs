@@ -793,6 +793,86 @@ fn prop_elkan_vs_dmin_vs_exact_partials_equivalence() {
     }
 }
 
+/// Hamerly bound model (single fast bound over the elkan lower bounds):
+/// over a drifting-center sequence the pruned partials stay within the
+/// perturbation tolerance of the exact pass — Fast and fused Classic
+/// kernels, m = 2 and m ≠ 2 — and because the fast test falls back to the
+/// per-center elkan test, the hamerly-pruned set contains elkan's on
+/// every pass.
+#[test]
+fn prop_hamerly_matches_exact_and_contains_elkan() {
+    for case in 0..4u64 {
+        for kernel in [Kernel::FcmFast, Kernel::FcmClassic] {
+            for m in [2.0, 1.7] {
+                let data = blobs(400, 3, 3, 0.2, 85_000 + case);
+                let x = &data.features;
+                let w = vec![1.0f32; 400];
+                let mut rng = Pcg::new(86_000 + case);
+                let v0 = random_records(x, 3, &mut rng);
+                let params = FcmParams { epsilon: 1e-8, m, ..Default::default() };
+                let settled = run_fcm(&NativeBackend, x, &w, v0, &params).unwrap().centers;
+                let tol = 1e-2;
+                let cfg = |model| BoundConfig { model, tolerance: tol, refresh_every: 16 };
+                let mut st_elkan = BlockBounds::default();
+                let mut st_ham = BlockBounds::default();
+                let (mut elkan_total, mut ham_total) = (0usize, 0usize);
+                let mut v = settled.clone();
+                for t in 0..6 {
+                    let (_, ne) = NativeBackend
+                        .pruned_partials(kernel, x, &v, &w, m, &mut st_elkan, &cfg(BoundModel::Elkan))
+                        .unwrap();
+                    let (ph, nh) = NativeBackend
+                        .pruned_partials(
+                            kernel,
+                            x,
+                            &v,
+                            &w,
+                            m,
+                            &mut st_ham,
+                            &cfg(BoundModel::Hamerly),
+                        )
+                        .unwrap();
+                    assert!(
+                        nh >= ne,
+                        "case {case} {kernel:?} m={m} t={t}: hamerly ({nh}) under elkan ({ne})"
+                    );
+                    elkan_total += ne;
+                    ham_total += nh;
+                    let exact = NativeBackend.exact_partials(kernel, x, &v, &w, m).unwrap();
+                    for (a, b) in ph.w_acc.iter().zip(&exact.w_acc) {
+                        let rel = (a - b).abs() / b.abs().max(1e-9);
+                        assert!(
+                            rel < 10.0 * tol,
+                            "case {case} {kernel:?} m={m} t={t}: w_acc drift {rel}"
+                        );
+                    }
+                    let rel =
+                        (ph.objective - exact.objective).abs() / exact.objective.max(1e-9);
+                    assert!(
+                        rel < 10.0 * tol,
+                        "case {case} {kernel:?} m={m} t={t}: objective drift {rel}"
+                    );
+                    // One center drifts, the rest barely move (the regime
+                    // the per-center fallback exists for).
+                    for val in v.row_mut(0).iter_mut() {
+                        *val += 4e-4;
+                    }
+                    for j in 1..3 {
+                        for val in v.row_mut(j).iter_mut() {
+                            *val += 2e-5;
+                        }
+                    }
+                }
+                assert!(
+                    ham_total >= elkan_total,
+                    "case {case} {kernel:?} m={m}: hamerly total {ham_total} under elkan {elkan_total}"
+                );
+                assert!(ham_total > 0, "case {case} {kernel:?} m={m}: hamerly never pruned");
+            }
+        }
+    }
+}
+
 /// The slab spill codec is bitwise under random shapes and both bound
 /// models: a spilled-and-reloaded state re-serialises to the identical
 /// image and drives the next pruned pass to identical partials and
@@ -806,7 +886,8 @@ fn prop_spill_roundtrip_preserves_pruning_bitwise() {
         let d = 1 + rng.next_index(8);
         let c = 2 + rng.next_index(5);
         let kernel = [Kernel::FcmFast, Kernel::FcmClassic, Kernel::KMeans][rng.next_index(3)];
-        let model = [BoundModel::DMin, BoundModel::Elkan][rng.next_index(2)];
+        let model =
+            [BoundModel::DMin, BoundModel::Elkan, BoundModel::Hamerly][rng.next_index(3)];
         let x = rand_matrix(&mut rng, n, d, 2.0);
         let mut v = rand_matrix(&mut rng, c, d, 2.0);
         let w = rand_weights(&mut rng, n);

@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
 # Perf-trajectory tracker: run the micro_hotpath bench, emit
 # BENCH_micro_hotpath.json, and diff it against the committed baseline
-# (rust/benches/BENCH_micro_hotpath.baseline.json).
+# (rust/benches/BENCH_micro_hotpath.baseline.json). Then run the serve
+# load harness (`bigfcm serve-bench`), emit BENCH_serve.json, and diff
+# its throughput/latency counters against
+# rust/benches/BENCH_serve.baseline.json.
 #
 # FAIL-SOFT BY DESIGN: this script always exits 0. Micro-benchmarks flake
 # on shared CI runners; the diff is a comment-style report for humans (and
@@ -110,6 +113,89 @@ if cur_sess:
     pd, pe = cur_sess.get("records_pruned_dmin"), cur_sess.get("records_pruned_elkan")
     if pd is not None and pe is not None and pe < pd:
         print(f"note: elkan pruned fewer records than dmin ({pe} < {pd}) — bound regression; investigate")
+EOF
+
+# ---------------------------------------------------------------------------
+# Serving-layer counters (bigfcm serve-bench) — same fail-soft discipline.
+# ---------------------------------------------------------------------------
+
+SERVE_BASELINE="benches/BENCH_serve.baseline.json"
+SERVE_CURRENT="BENCH_serve.json"
+
+echo ""
+echo "== bigfcm serve-bench =="
+if ! cargo run --release --bin bigfcm -- serve-bench \
+        --clients 4 --records 500 --dataset-records 16384 --clusters 4 \
+        --json "$SERVE_CURRENT"; then
+    echo "serve-bench run failed (soft): nothing to diff"
+    exit 0
+fi
+
+if [ ! -f "$SERVE_CURRENT" ]; then
+    echo "serve-bench completed but $SERVE_CURRENT was not emitted (soft)"
+    exit 0
+fi
+
+if [ ! -f "$SERVE_BASELINE" ]; then
+    echo ""
+    echo "no committed serve baseline at rust/$SERVE_BASELINE — serving trajectory starts here."
+    echo "to begin tracking, commit this run as the baseline:"
+    echo "    cp rust/$SERVE_CURRENT rust/$SERVE_BASELINE && git add rust/$SERVE_BASELINE"
+    exit 0
+fi
+
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "python3 unavailable (soft): skipping serve diff"
+    exit 0
+fi
+
+python3 - "$SERVE_BASELINE" "$SERVE_CURRENT" "$THRESHOLD" <<'EOF'
+import json
+import sys
+
+base_path, cur_path, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
+base = json.load(open(base_path)).get("serve") or {}
+cur = json.load(open(cur_path)).get("serve") or {}
+
+print()
+print("== serve-bench vs committed baseline ==")
+keys = [
+    "throughput_rps",
+    "batch_fill",
+    "pad_utilization",
+    "p50_us",
+    "p95_us",
+    "p99_us",
+    "queue_peak",
+    "backpressure_waits",
+    "errors",
+]
+print(f"{'counter':<22} {'baseline':>14} {'now':>14}")
+for key in keys:
+    b, c = base.get(key), cur.get(key)
+    bs = f"{b:.6g}" if isinstance(b, (int, float)) else "-"
+    cs = f"{c:.6g}" if isinstance(c, (int, float)) else "-"
+    print(f"{key:<22} {bs:>14} {cs:>14}")
+
+issues = []
+bt, ct = base.get("throughput_rps"), cur.get("throughput_rps")
+if bt and ct and (ct - bt) / bt < -threshold:
+    issues.append(f"throughput {ct:.0f} rps vs baseline {bt:.0f} ({(ct - bt) / bt:+.1%})")
+fill = cur.get("batch_fill")
+if fill is not None and fill <= 1.0:
+    issues.append(f"batch fill {fill:.2f} <= 1 — micro-batching is not coalescing")
+bp, cp = base.get("p95_us"), cur.get("p95_us")
+if bp and cp and (cp - bp) / bp > threshold:
+    issues.append(f"p95 latency {cp:.0f} us vs baseline {bp:.0f} ({(cp - bp) / bp:+.1%})")
+if cur.get("errors"):
+    issues.append(f"{cur['errors']:.0f} request(s) errored")
+
+print()
+if issues:
+    print("report: " + "; ".join(issues))
+    print("(fail-soft: not failing the build; investigate or refresh the baseline)")
+else:
+    print(f"report: serve counters within {threshold:.0%} of baseline, batch fill > 1")
 EOF
 
 exit 0

@@ -22,4 +22,13 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== serve smoke (bigfcm serve-bench) =="
+# The serving-layer acceptance in miniature: 2+ concurrent closed-loop
+# clients must coalesce into micro-batches (batch fill > 1) and the p50/
+# p95/p99 report must come out. A generous linger keeps this robust on
+# loaded CI runners; --require-coalescing makes fill <= 1 a hard failure.
+cargo run --release --bin bigfcm -- serve-bench \
+    --clients 2 --records 200 --dataset-records 4096 --clusters 3 \
+    --max-batch 32 --linger-us 2000 --json none --require-coalescing
+
 echo "verify: OK"
