@@ -29,13 +29,13 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
-use bigfcm::config::{BoundModel, Config, FlagPolicy};
+use bigfcm::config::{BoundModel, Config, FlagPolicy, QuantMode};
 use bigfcm::coordinator::BigFcm;
 use bigfcm::data::synth::susy_like;
 use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo};
-use bigfcm::fcm::{KernelBackend, NativeBackend};
+use bigfcm::fcm::{BlockBounds, BoundConfig, Kernel, KernelBackend, NativeBackend};
 use bigfcm::hdfs::BlockStoreWriter;
-use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions, MIB};
+use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions, SlabState, MIB};
 
 struct Args {
     /// Target on-disk store size in bytes.
@@ -54,6 +54,8 @@ struct Args {
     slab_mib: u64,
     /// Bound model of the session phase ("dmin" | "elkan").
     bounds: BoundModel,
+    /// Quantized distance pre-pass of the session phase ("off" | "i8").
+    quant: QuantMode,
     /// Spill cold slab state to this disk ring instead of evicting it.
     spill_dir: Option<PathBuf>,
     /// Keep the generated store (for re-runs) instead of deleting it.
@@ -73,6 +75,7 @@ impl Default for Args {
             session_iters: 8,
             slab_mib: 0,
             bounds: BoundModel::Elkan,
+            quant: QuantMode::Off,
             spill_dir: None,
             keep: false,
             dir: None,
@@ -105,8 +108,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: scale_susy [--bytes SIZE] [--cache-mib N] [--workers N] \
          [--block-rows N] [--max-wall-s S] [--session-iters N] \
-         [--slab-mib N] [--bounds dmin|elkan|hamerly] [--spill-dir PATH] \
-         [--dir PATH] [--keep] [--seed N]\n\
+         [--slab-mib N] [--bounds dmin|elkan|hamerly] [--quant off|i8] \
+         [--spill-dir PATH] [--dir PATH] [--keep] [--seed N]\n\
          SIZE accepts GiB/MiB/KiB suffixes, e.g. --bytes 2GiB; \
          --slab-mib 0 auto-sizes the pruning slab to the store and the \
          bound model; --spill-dir rides out undersized slabs on disk"
@@ -149,6 +152,9 @@ fn parse_args() -> Args {
             "--bounds" => {
                 args.bounds = BoundModel::parse(&val("--bounds")).unwrap_or_else(|_| usage());
             }
+            "--quant" => {
+                args.quant = QuantMode::parse(&val("--quant")).unwrap_or_else(|_| usage());
+            }
             "--spill-dir" => args.spill_dir = Some(PathBuf::from(val("--spill-dir"))),
             "--dir" => args.dir = Some(PathBuf::from(val("--dir"))),
             "--keep" => args.keep = true,
@@ -164,6 +170,42 @@ fn parse_args() -> Args {
 
 fn mib(b: u64) -> f64 {
     b as f64 / MIB as f64
+}
+
+/// In-harness regression check: run one refreshed pruned pass over a
+/// synthetic 512-record block under the exact `(bounds, quant)` pair the
+/// harness will use, then compare the sizer's `per_record` formula against
+/// the bytes `BlockBounds` actually accounts. Fails fast — before the
+/// multi-GiB run — if the layout ever grows a term the formula misses.
+fn assert_sizer_covers(
+    bounds: BoundModel,
+    quant: QuantMode,
+    clusters: usize,
+    dims: usize,
+    per_record: u64,
+) {
+    let n = 512usize;
+    let x = susy_like(n, 0xB16F).features;
+    let v = x.slice_rows(0, clusters);
+    let w = vec![1.0f32; n];
+    let mut st = BlockBounds::default();
+    let cfg = BoundConfig { model: bounds, tolerance: 5e-3, refresh_every: 4, quant };
+    NativeBackend
+        .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, &mut st, &cfg)
+        .expect("sizer probe pass");
+    let actual = st.slab_bytes();
+    let budget = per_record * n as u64 + 4096;
+    assert!(
+        budget >= actual,
+        "slab auto-sizer undercharges: formula {} B < accounted {} B \
+         (bounds {}, quant {}, C={}, d={})",
+        budget,
+        actual,
+        bounds.as_str(),
+        quant.as_str(),
+        clusters,
+        dims
+    );
 }
 
 /// Deletes the generated store on every exit path (success, error or
@@ -307,14 +349,33 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         // slab_reloads) at unchanged results.
         let mut prune = PruneConfig::from_cluster(&cfg.cluster);
         prune.bounds = args.bounds;
+        prune.quant = args.quant;
         prune.spill_dir = args.spill_dir.clone();
-        let per_record = match args.bounds {
+        let mut per_record = match args.bounds {
             BoundModel::DMin => 4 * (cfg.fcm.clusters as u64 + 2),
             BoundModel::Elkan => 4 * (2 * cfg.fcm.clusters as u64 + 2),
             // Elkan's layout plus the per-record single fast bound.
             BoundModel::Hamerly => 4 * (2 * cfg.fcm.clusters as u64 + 3),
         };
+        if args.quant.enabled() {
+            // The certified pre-pass widens every model to the lb-carrying
+            // layout (dmin otherwise has none) and adds the i8 sidecar
+            // codes (1 B × d per record; scales ride the block constant).
+            if matches!(args.bounds, BoundModel::DMin) {
+                per_record += 4 * cfg.fcm.clusters as u64;
+            }
+            per_record += dims as u64;
+        }
         let per_block = args.block_rows as u64 * per_record + 4096;
+        // Regression guard: the formula above must cover the real
+        // accounted layout, otherwise auto-sized slabs thrash (exactly
+        // how the missing hamerly term slipped through before: the
+        // 4·(2C+2) elkan formula didn't charge hamerly's extra fast-bound
+        // scalar, hamerly runs undersized the slab and evicted on every
+        // pass). Measured against BlockBounds' own byte accounting on a
+        // synthetic block, so the layout and the sizer cannot drift apart
+        // silently again.
+        assert_sizer_covers(args.bounds, args.quant, cfg.fcm.clusters, dims, per_record);
         if args.slab_mib > 0 {
             prune.slab_bytes = args.slab_mib * MIB;
         } else {
@@ -322,11 +383,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             prune.slab_bytes = prune.slab_bytes.max(auto);
         }
         println!(
-            "slab budget {:.0} MiB ({} blocks × ≈{:.2} MiB {} pruning state)",
+            "slab budget {:.0} MiB ({} blocks × ≈{:.2} MiB {} pruning state, quant {})",
             mib(prune.slab_bytes),
             n_blocks,
             mib(per_block),
-            args.bounds.as_str()
+            args.bounds.as_str(),
+            args.quant.as_str()
         );
         let t2 = Instant::now();
         let srun = run_fcm_session(
@@ -342,11 +404,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let session_wall = t2.elapsed().as_secs_f64();
         for (i, s) in srun.per_iteration.iter().enumerate() {
             println!(
-                "  iter {:>2}: pruned {:>9} records, reduce parts {:>2} (depth {}), \
-                 reduce wall {:.3} ms, slab {:.1} MiB ({} evictions, {:.1} MiB spilled, \
-                 {} reloads)",
+                "  iter {:>2}: pruned {:>9} records ({:>8} via quant), reduce parts {:>2} \
+                 (depth {}), reduce wall {:.3} ms, slab {:.1} MiB ({} evictions, \
+                 {:.1} MiB spilled, {} reloads)",
                 i + 1,
                 s.records_pruned,
+                s.records_pruned_quant,
                 s.reduce_parts,
                 s.combine_depth,
                 s.reduce_wall_s * 1e3,
@@ -358,10 +421,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         }
         println!(
             "session: {} iterations in {session_wall:.1}s wall ({:.1} MiB/s·iter), \
-             {} records pruned total, startup charged once: {}",
+             {} records pruned total ({} via quant, sidecar peak {:.1} MiB, \
+             built in {:.2}s), startup charged once: {}",
             srun.jobs,
             mib(store.total_bytes()) * srun.jobs as f64 / session_wall.max(1e-9),
             srun.records_pruned,
+            srun.records_pruned_quant,
+            mib(srun.quant_sidecar_bytes),
+            srun.quant_build_s,
             (srun.sim.job_startup_s - cfg.overhead.job_startup_s).abs() < 1e-9
         );
         session_run = Some(srun);

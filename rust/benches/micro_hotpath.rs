@@ -13,7 +13,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
-use bigfcm::config::OverheadConfig;
+use bigfcm::config::{params_hash, OverheadConfig, QuantMode};
 use bigfcm::data::synth::susy_like;
 use bigfcm::data::Matrix;
 use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo};
@@ -184,14 +184,31 @@ fn main() {
     let session = run_fcm_session(
         &mut session_engine,
         &store,
-        backend,
+        Arc::clone(&backend),
         SessionAlgo::Fcm,
-        v0,
+        v0.clone(),
         &params,
         &PruneConfig::default(), // elkan bounds
         SessionOptions::default(),
     )
     .expect("session arm");
+
+    // Quant A/B arm: same elkan bounds plus the certified i8 pre-pass.
+    // The second-chance test only runs on records the shift bound
+    // abandons, so its prune count dominates the plain-elkan arm's by
+    // construction — bench_diff.sh flags any run where it does not.
+    let mut quant_engine = Engine::new(EngineOptions::default(), overhead.clone());
+    let session_quant = run_fcm_session(
+        &mut quant_engine,
+        &store,
+        backend,
+        SessionAlgo::Fcm,
+        v0,
+        &params,
+        &PruneConfig { quant: QuantMode::I8, ..PruneConfig::default() },
+        SessionOptions::default(),
+    )
+    .expect("quant session arm");
 
     let wall_sum = |runs: &[bigfcm::mapreduce::JobStats]| -> f64 {
         runs.iter().map(|s| s.reduce_wall_s).sum()
@@ -238,6 +255,15 @@ fn main() {
         "bounds A/B: dmin pruned {} over {} jobs, elkan pruned {} over {} jobs",
         session_dmin.records_pruned, session_dmin.jobs, session.records_pruned, session.jobs,
     );
+    println!(
+        "quant A/B: elkan+i8 pruned {} ({} via quant second chance) over {} jobs, \
+         sidecar peak {} B built in {:.3}s",
+        session_quant.records_pruned,
+        session_quant.records_pruned_quant,
+        session_quant.jobs,
+        session_quant.quant_sidecar_bytes,
+        session_quant.quant_build_s,
+    );
 
     // Machine-readable emission for cross-PR tracking.
     let results = json::Value::Object(
@@ -264,6 +290,12 @@ fn main() {
         ("records_pruned", json::num(session.records_pruned as f64)),
         ("records_pruned_dmin", json::num(session_dmin.records_pruned as f64)),
         ("records_pruned_elkan", json::num(session.records_pruned as f64)),
+        ("records_pruned_elkan_quant", json::num(session_quant.records_pruned as f64)),
+        ("records_pruned_quant", json::num(session_quant.records_pruned_quant as f64)),
+        ("quant_sidecar_bytes", json::num(session_quant.quant_sidecar_bytes as f64)),
+        ("quant_build_s", json::num(session_quant.quant_build_s)),
+        ("quant_modelled_s", json::num(session_quant.sim.total_s())),
+        ("quant_objective", json::num(session_quant.result.objective)),
         ("dmin_modelled_s", json::num(session_dmin.sim.total_s())),
         ("slab_spilled_bytes", json::num(session.slab_spilled_bytes as f64)),
         ("slab_reloads", json::num(session.slab_reloads as f64)),
@@ -271,9 +303,14 @@ fn main() {
         ("per_job_objective", json::num(per_job.result.objective)),
         ("session_objective", json::num(session.result.objective)),
     ]);
+    // Config/params fingerprint: bench_diff.sh refuses to diff two BENCH
+    // files whose hashes disagree (apples-to-oranges guard). The hash
+    // covers the hard-coded workload knobs of the session A/B above.
+    let hash = params_hash("fcm", "elkan", QuantMode::I8.as_str(), 4, 0xAB);
     let doc = json::obj(vec![
         ("bench", json::s("micro_hotpath")),
         ("workload", json::s("susy_like 65536x18 C=6")),
+        ("config_hash", json::s(&hash)),
         ("results", results),
         ("session", session_obj),
     ]);

@@ -67,6 +67,54 @@ impl BoundModel {
     }
 }
 
+/// Whether a session's pruned kernels run the quantized distance pre-pass
+/// before the exact f32 math (see `fcm::quant`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    /// No pre-pass: records that fail the bound test go straight to the
+    /// exact gather path.
+    Off,
+    /// i8 per-block sidecar with symmetric per-column scales: an
+    /// i32-accumulating kernel computes approximate distances plus a
+    /// certified error radius, and records whose interval certifies the
+    /// bound test's conclusion are replayed from cache instead of being
+    /// gathered — exact math runs only for survivors.
+    I8,
+}
+
+impl QuantMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(QuantMode::Off),
+            "i8" => Ok(QuantMode::I8),
+            other => Err(Error::Config(format!("unknown quant mode `{other}`"))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            QuantMode::Off => "off",
+            QuantMode::I8 => "i8",
+        }
+    }
+
+    /// Whether the pre-pass runs at all (and therefore whether block state
+    /// carries a sidecar plus the lower-bound matrix the certified test
+    /// compares against).
+    pub fn enabled(&self) -> bool {
+        !matches!(self, QuantMode::Off)
+    }
+}
+
+/// FNV-1a hash of the parameters that make two benchmark runs comparable,
+/// as a hex string. `bench_diff.sh` refuses to diff JSONs whose hashes
+/// differ — a 10% "regression" between an elkan run and a dmin run is not
+/// a regression, it's a config change.
+pub fn params_hash(algo: &str, bounds: &str, quant: &str, workers: usize, seed: u64) -> String {
+    let canon = format!("algo={algo};bounds={bounds};quant={quant};workers={workers};seed={seed}");
+    format!("{:016x}", crate::hdfs::fnv1a(canon.as_bytes()))
+}
+
 /// Cluster-shape settings: how the single-machine run models the paper's
 /// Hadoop deployment.
 #[derive(Clone, Debug, PartialEq)]
@@ -92,6 +140,9 @@ pub struct ClusterConfig {
     pub slab_mib: usize,
     /// Bound model of the session's pruned kernels.
     pub bounds: BoundModel,
+    /// Quantized distance pre-pass of the session's pruned kernels
+    /// (default off until the CI A/B matrix lands).
+    pub quant: QuantMode,
     /// Directory for the slab's disk spill ring: cold per-block bound
     /// state beyond `slab_mib` is written there and reloaded on the next
     /// touch instead of being evicted and recomputed. Empty disables
@@ -115,6 +166,7 @@ impl Default for ClusterConfig {
             tree_combine: true,
             slab_mib: 64,
             bounds: BoundModel::Elkan,
+            quant: QuantMode::Off,
             slab_spill_dir: String::new(),
             adaptive_refresh: true,
         }
@@ -362,6 +414,7 @@ impl Config {
             }
             "cluster.slab_mib" => self.cluster.slab_mib = num!(usize),
             "cluster.bounds" => self.cluster.bounds = BoundModel::parse(value)?,
+            "cluster.quant" => self.cluster.quant = QuantMode::parse(value)?,
             "cluster.slab_spill_dir" => self.cluster.slab_spill_dir = value.to_string(),
             "cluster.adaptive_refresh" => {
                 self.cluster.adaptive_refresh =
@@ -446,6 +499,7 @@ mod tests {
         c.set_kv("cluster.tree_combine=false").unwrap();
         c.set_kv("cluster.slab_mib=16").unwrap();
         c.set_kv("cluster.bounds=dmin").unwrap();
+        c.set_kv("cluster.quant=i8").unwrap();
         c.set_kv("cluster.slab_spill_dir=/tmp/slab").unwrap();
         c.set_kv("cluster.adaptive_refresh=false").unwrap();
         c.set_kv("serve.max_batch=16").unwrap();
@@ -460,6 +514,7 @@ mod tests {
         assert!(!c.cluster.tree_combine);
         assert_eq!(c.cluster.slab_mib, 16);
         assert_eq!(c.cluster.bounds, BoundModel::DMin);
+        assert_eq!(c.cluster.quant, QuantMode::I8);
         assert_eq!(c.cluster.slab_spill_dir, "/tmp/slab");
         assert!(!c.cluster.adaptive_refresh);
         assert_eq!(c.serve.max_batch, 16);
@@ -481,6 +536,25 @@ mod tests {
         assert!(BoundModel::Hamerly.keeps_lb() && BoundModel::Hamerly.keeps_dmin());
         assert!(!BoundModel::DMin.keeps_lb() && BoundModel::DMin.keeps_dmin());
         assert!(BoundModel::Elkan.keeps_lb() && !BoundModel::Elkan.keeps_dmin());
+    }
+
+    #[test]
+    fn quant_mode_parse_roundtrips() {
+        for mode in [QuantMode::Off, QuantMode::I8] {
+            assert_eq!(QuantMode::parse(mode.as_str()).unwrap(), mode);
+        }
+        assert!(QuantMode::parse("f16").is_err());
+        assert!(QuantMode::I8.enabled() && !QuantMode::Off.enabled());
+    }
+
+    #[test]
+    fn params_hash_separates_configs() {
+        let a = params_hash("fcm", "elkan", "off", 4, 42);
+        let b = params_hash("fcm", "elkan", "i8", 4, 42);
+        let c = params_hash("fcm", "elkan", "off", 4, 42);
+        assert_eq!(a, c);
+        assert_ne!(a, b);
+        assert_eq!(a.len(), 16);
     }
 
     #[test]

@@ -60,6 +60,13 @@
 //! full refresh, which upper-bounds its movement since any later
 //! per-record refresh — so mixed passes stay conservative.
 //!
+//! Underneath all three models sits the optional **quantized pre-pass**
+//! (`cluster.quant = i8`, see [`crate::fcm::quant`]): records the shift
+//! bound abandons get a second chance from an i8 sidecar's certified
+//! distance interval before any exact f32 math runs. The pre-pass only
+//! ever *adds* replays, so each model's pruned set with quant on contains
+//! its pruned set with quant off.
+//!
 //! [`BlockBounds`] lives in a session's
 //! [`crate::mapreduce::session::StateSlab`], byte-accounted and — via its
 //! bitwise [`SlabState::spill`]/[`SlabState::unspill`] codec — spillable
@@ -68,11 +75,13 @@
 use crate::data::matrix::dist2;
 use crate::data::Matrix;
 use crate::error::Result;
+use crate::fcm::native::DIST_EPS;
+use crate::fcm::quant::{QuantCenters, QuantSidecar};
 use crate::fcm::Partials;
 use crate::hdfs::fnv1a;
 use crate::mapreduce::session::SlabState;
 
-pub use crate::config::BoundModel;
+pub use crate::config::{BoundModel, QuantMode};
 
 /// Which partials pass a backend computes — the dispatch token that
 /// replaced the per-variant match arms of the session/baseline layers.
@@ -120,6 +129,27 @@ pub struct BoundConfig {
     /// Force an exact (bound-refreshing) pass at least every this many
     /// passes — the drift cap.
     pub refresh_every: usize,
+    /// Quantized distance pre-pass: records the shift bound abandons get
+    /// a second chance from the sidecar's certified interval before the
+    /// exact gather (see [`crate::fcm::quant`]).
+    pub quant: QuantMode,
+}
+
+/// What one pruned pass did — the counters [`KernelBackend::pruned_partials`]
+/// returns next to the partials and the session layer folds into
+/// `JobStats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PruneStats {
+    /// Records that replayed their cached contribution (any test).
+    pub pruned: usize,
+    /// Subset of `pruned` admitted by the quantized second-chance test
+    /// after the shift bound failed.
+    pub quant: usize,
+    /// Bytes of the block's quant sidecar (0 with quant off).
+    pub sidecar_bytes: u64,
+    /// Seconds spent building the sidecar, non-zero only on the one pass
+    /// that built it.
+    pub sidecar_build_s: f64,
 }
 
 /// Per-row outputs of a bound-refreshing exact pass, in gathered-row
@@ -187,12 +217,14 @@ pub trait KernelBackend: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// One pruned pass against the block's sticky `state`: records whose
-    /// bound still holds replay their cached contribution, the rest are
-    /// gathered and recomputed exactly through
-    /// [`Self::partials_with_bounds`]. Returns the partials and how many
-    /// records replayed. Provided generically — backends only override to
-    /// opt *out* (e.g. device artifacts without the bound outputs reset
-    /// the state and run exactly, so no stale bound can survive them).
+    /// bound still holds replay their cached contribution, records the
+    /// bound abandons may be re-certified by the quantized pre-pass (when
+    /// `cfg.quant` enables it), and the rest are gathered and recomputed
+    /// exactly through [`Self::partials_with_bounds`]. Returns the
+    /// partials and the pass's [`PruneStats`]. Provided generically —
+    /// backends only override to opt *out* (e.g. device artifacts without
+    /// the bound outputs reset the state and run exactly, so no stale
+    /// bound can survive them).
     #[allow(clippy::too_many_arguments)]
     fn pruned_partials(
         &self,
@@ -203,7 +235,7 @@ pub trait KernelBackend: Send + Sync {
         m: f64,
         state: &mut BlockBounds,
         cfg: &BoundConfig,
-    ) -> Result<(Partials, usize)> {
+    ) -> Result<(Partials, PruneStats)> {
         state.pruned_pass(kernel, x, v, w, cfg, &mut |xg: &Matrix, wg: &[f32], rows: &mut BoundRows| {
             self.partials_with_bounds(kernel, xg, v, wg, m, rows)
         })
@@ -355,6 +387,14 @@ pub struct BlockBounds {
     /// of this state pays, the reread-vs-recompute crossover input of the
     /// slab's spill policy.
     block_payload_bytes: u64,
+    /// Quant mode the cached arrays belong to (a mode switch refreshes —
+    /// the lb layout differs and the second-chance test must not consult
+    /// bounds a quant-off pass maintained, or vice versa).
+    quant: QuantMode,
+    /// The block's i8 quantization, built lazily on the first
+    /// quant-enabled pass. Depends only on the block payload: it survives
+    /// bound refreshes and spills with the rest of the state.
+    sidecar: Option<QuantSidecar>,
 }
 
 impl Default for BlockBounds {
@@ -377,6 +417,8 @@ impl Default for BlockBounds {
             live: 0,
             stale_iters: 0,
             block_payload_bytes: 0,
+            quant: QuantMode::Off,
+            sidecar: None,
         }
     }
 }
@@ -434,8 +476,8 @@ struct Mins {
 }
 
 impl Mins {
-    fn new(kernel: Kernel, model: BoundModel, c: usize) -> Self {
-        let lb = if model.keeps_lb() && !kernel.is_kmeans() {
+    fn new(kernel: Kernel, keep_lb: bool, c: usize) -> Self {
+        let lb = if keep_lb && !kernel.is_kmeans() {
             vec![f32::INFINITY; c]
         } else {
             Vec::new()
@@ -448,7 +490,7 @@ impl Mins {
             self.margin = self.margin.min(st.margin[k]);
             return;
         }
-        if st.model.keeps_lb() {
+        if st.keeps_lb_eff() {
             for (m, &lb) in self.lb.iter_mut().zip(st.lb.row(k)) {
                 *m = (*m).min(lb);
             }
@@ -478,7 +520,8 @@ impl BlockBounds {
 
     /// Byte footprint for slab accounting. Charges **every** per-record
     /// array — including the `elkan` model's per-center lower bounds
-    /// (C·4 B/record on top of the `dmin` layout's flat 8 B/record), which
+    /// (C·4 B/record on top of the `dmin` layout's flat 8 B/record) and
+    /// the quant sidecar (d B/record of i8 codes plus the scales), which
     /// the slab sizing rules must budget for (see `examples/scale_susy`).
     pub fn bytes(&self) -> u64 {
         let f32s = self.d_min.len()
@@ -489,7 +532,22 @@ impl BlockBounds {
             + self.lb.rows() * self.lb.cols()
             + self.centers_prev.rows() * self.centers_prev.cols();
         let partials = self.partials.as_ref().map(Partials::encoded_bytes).unwrap_or(0);
-        (f32s * 4 + self.delta.len() * 8 + self.best.len() * 4) as u64 + partials
+        let sidecar = self.sidecar.as_ref().map(QuantSidecar::bytes).unwrap_or(0);
+        (f32s * 4 + self.delta.len() * 8 + self.best.len() * 4) as u64 + partials + sidecar
+    }
+
+    /// Sidecar bytes currently held (0 without one) — surfaced through
+    /// [`PruneStats`] into the session's `JobStats`.
+    pub fn quant_sidecar_bytes(&self) -> u64 {
+        self.sidecar.as_ref().map(QuantSidecar::bytes).unwrap_or(0)
+    }
+
+    /// Whether the cached layout carries the per-record × per-center
+    /// lower bounds. The quant second chance certifies *against* those
+    /// refresh-time distances, so enabling quant widens every model to
+    /// the lb-carrying layout (dmin included — byte-accounted above).
+    fn keeps_lb_eff(&self) -> bool {
+        self.model.keeps_lb() || self.quant.enabled()
     }
 
     /// Whether the cached state can bound a pass of `kernel` under `cfg`.
@@ -498,6 +556,7 @@ impl BlockBounds {
             && c > 0
             && self.kernel == Some(kernel)
             && self.model == cfg.model
+            && self.quant == cfg.quant
             && self.partials.is_some()
             && self.stale_iters < cfg.refresh_every.max(1)
             && self.centers_prev.rows() == c
@@ -507,21 +566,20 @@ impl BlockBounds {
         if !base {
             return false;
         }
+        if cfg.quant.enabled() && !self.sidecar.as_ref().map_or(false, |s| s.matches(n, d)) {
+            return false;
+        }
         let lb_ok = self.lb.rows() == n && self.lb.cols() == c;
+        // Quant widens every model to the lb-carrying layout: the second
+        // chance certifies against the refresh-time per-center distances.
+        let lb_need = cfg.model.keeps_lb() || cfg.quant.enabled();
         if kernel.is_kmeans() {
             let km = self.best.len() == n && self.margin.len() == n;
-            match cfg.model {
-                BoundModel::DMin => km,
-                BoundModel::Elkan | BoundModel::Hamerly => km && lb_ok,
-            }
+            km && (!lb_need || lb_ok)
         } else {
             let fcm = self.um.rows() == n && self.um.cols() == c;
-            let elkan_ok = fcm && lb_ok && self.lb_block.len() == c;
-            match cfg.model {
-                BoundModel::DMin => fcm && self.d_min.len() == n,
-                BoundModel::Elkan => elkan_ok,
-                BoundModel::Hamerly => elkan_ok && self.d_min.len() == n,
-            }
+            fcm && (!lb_need || (lb_ok && self.lb_block.len() == c))
+                && (!cfg.model.keeps_dmin() || self.d_min.len() == n)
         }
     }
 
@@ -627,7 +685,7 @@ impl BlockBounds {
     /// Scatter one gathered pass's [`BoundRows`] back into the per-record
     /// state, folding fresh block minima.
     fn scatter(&mut self, kernel: Kernel, idx: &[usize], rows: &BoundRows, mins: &mut Mins) {
-        let keeps_lb = self.model.keeps_lb();
+        let keeps_lb = self.keeps_lb_eff();
         let keeps_dmin = self.model.keeps_dmin();
         for (r, &k) in idx.iter().enumerate() {
             self.obj[k] = rows.obj[r];
@@ -692,6 +750,7 @@ impl BlockBounds {
         v: &Matrix,
         w: &[f32],
         model: BoundModel,
+        quant: QuantMode,
         f: &mut F,
     ) -> Result<Partials>
     where
@@ -701,11 +760,16 @@ impl BlockBounds {
         debug_assert_eq!(n, w.len());
         self.kernel = Some(kernel);
         self.model = model;
+        self.quant = quant;
+        if !quant.enabled() {
+            self.sidecar = None;
+        }
         self.centers_prev = v.clone();
         self.delta = vec![0.0; c];
         self.stale_iters = 0;
         self.obj = vec![0.0; n];
         self.block_payload_bytes = (n * d * 4) as u64;
+        let keep_lb = self.keeps_lb_eff();
         if kernel.is_kmeans() {
             self.um = Matrix::zeros(0, 0);
             self.d_min = Vec::new();
@@ -717,7 +781,7 @@ impl BlockBounds {
             self.margin = Vec::new();
             self.d_min = if model.keeps_dmin() { vec![f32::INFINITY; n] } else { Vec::new() };
         }
-        self.lb = if model.keeps_lb() {
+        self.lb = if keep_lb {
             let mut lb = Matrix::zeros(n, c);
             lb.as_mut_slice().fill(f32::INFINITY);
             lb
@@ -726,7 +790,7 @@ impl BlockBounds {
         };
         self.live = w.iter().filter(|&&wk| wk != 0.0).count();
         let mut out = Partials::zeros(c, d);
-        let mut mins = Mins::new(kernel, model, c);
+        let mut mins = Mins::new(kernel, keep_lb, c);
         if c > 0 && self.live > 0 {
             if self.live == n {
                 // Uniform-weight fast path: no gather copy.
@@ -755,10 +819,68 @@ impl BlockBounds {
         Ok(out)
     }
 
+    /// Quantized second chance for record `k` after the shift bound
+    /// failed: the sidecar's certified interval `[lo_j, hi_j]` on the
+    /// *current* distance either re-certifies the replay contract per
+    /// center (FCM: every distance provably within `tol` of its cached
+    /// refresh-time value, the same perturbation contract as the elkan
+    /// test) or eliminates every rival exactly (K-Means: `lo_j > hi_b`
+    /// means the assignment provably didn't change). Memoryless in δ —
+    /// this is where path-length overcharge gets repaid.
+    fn quant_replayable(
+        &self,
+        kernel: Kernel,
+        k: usize,
+        tol: f64,
+        qc: &QuantCenters,
+        d2: &mut [f64],
+        err: &mut [f64],
+    ) -> bool {
+        let sidecar = self.sidecar.as_ref().expect("quant pass holds a sidecar");
+        sidecar.row_distances(k, qc, d2, err);
+        let lbr = self.lb.row(k);
+        if kernel.is_kmeans() {
+            let b = self.best[k] as usize;
+            let hi_b = (d2[b] + err[b]).max(DIST_EPS).sqrt();
+            let rival_floor = lbr[b] as f64 + self.delta[b];
+            for j in 0..d2.len() {
+                if j == b {
+                    continue;
+                }
+                // Per-rival: the elkan shift test or a certified strict
+                // separation right now (strict, so argmin tie-breaks
+                // can't flip the assignment either way).
+                if lbr[j] as f64 - self.delta[j] >= rival_floor {
+                    continue;
+                }
+                if (d2[j] - err[j]).max(DIST_EPS).sqrt() > hi_b {
+                    continue;
+                }
+                return false;
+            }
+            true
+        } else {
+            for (j, (&lb, &dj)) in lbr.iter().zip(&self.delta).enumerate() {
+                let lb = lb as f64;
+                if dj <= tol * lb {
+                    continue;
+                }
+                let lo = (d2[j] - err[j]).max(DIST_EPS).sqrt();
+                let hi = (d2[j] + err[j]).max(DIST_EPS).sqrt();
+                if hi <= (1.0 + tol) * lb && lo >= (1.0 - tol) * lb {
+                    continue;
+                }
+                return false;
+            }
+            true
+        }
+    }
+
     /// One pruned pass (the protocol behind
     /// [`KernelBackend::pruned_partials`]): whole-block replay when the
-    /// block bound holds, otherwise per-record replay + a gathered exact
-    /// recompute of the rest through `f`.
+    /// block bound holds, otherwise per-record replay (shift bound, then
+    /// the quantized second chance) + a gathered exact recompute of the
+    /// rest through `f`.
     pub fn pruned_pass<F>(
         &mut self,
         kernel: Kernel,
@@ -767,37 +889,65 @@ impl BlockBounds {
         w: &[f32],
         cfg: &BoundConfig,
         f: &mut F,
-    ) -> Result<(Partials, usize)>
+    ) -> Result<(Partials, PruneStats)>
     where
         F: FnMut(&Matrix, &[f32], &mut BoundRows) -> Result<Partials>,
     {
         let (n, c, d) = (x.rows(), v.rows(), v.cols());
         debug_assert_eq!(n, w.len());
+        let mut stats = PruneStats::default();
+        // Lazy one-time sidecar: built on the block's first quant-enabled
+        // touch (before the usability check — an unusable state still
+        // keeps its sidecar through the refresh).
+        if cfg.quant.enabled() {
+            if !self.sidecar.as_ref().map_or(false, |s| s.matches(n, d)) {
+                let t0 = std::time::Instant::now();
+                self.sidecar = Some(QuantSidecar::build(x));
+                stats.sidecar_build_s = t0.elapsed().as_secs_f64();
+            }
+            stats.sidecar_bytes = self.quant_sidecar_bytes();
+        }
         if !self.usable(kernel, n, c, d, cfg) {
-            let p = self.refresh(kernel, x, v, w, cfg.model, f)?;
-            return Ok((p, 0));
+            let p = self.refresh(kernel, x, v, w, cfg.model, cfg.quant, f)?;
+            return Ok((p, stats));
         }
         self.stale_iters += 1;
         let delta_max = self.accumulate_shift(v);
         let tol = cfg.tolerance;
         if self.block_prunable(kernel, delta_max, tol) {
             let p = self.partials.clone().expect("usable implies cached partials");
-            return Ok((p, self.live));
+            stats.pruned = self.live;
+            return Ok((p, stats));
         }
         let shift = ShiftInfo::new(&self.delta, delta_max, tol);
+        let qc = if cfg.quant.enabled() {
+            self.sidecar.as_ref().map(|s| s.prep_centers(v))
+        } else {
+            None
+        };
+        let mut d2q = vec![0.0f64; c];
+        let mut errq = vec![0.0f64; c];
         let mut out = Partials::zeros(c, d);
-        let mut pruned = 0usize;
         let mut idx: Vec<usize> = Vec::new();
         let mut buf: Vec<f32> = Vec::new();
-        let mut mins = Mins::new(kernel, self.model, c);
+        let mut mins = Mins::new(kernel, self.keeps_lb_eff(), c);
         for k in 0..n {
             if w[k] == 0.0 {
                 continue; // padding contract
             }
-            if self.record_prunable(kernel, k, tol, &shift) {
+            let replayable = if self.record_prunable(kernel, k, tol, &shift) {
+                true
+            } else if let Some(qc) = &qc {
+                let ok = self.quant_replayable(kernel, k, tol, qc, &mut d2q, &mut errq);
+                stats.quant += ok as usize;
+                ok
+            } else {
+                false
+            };
+            if replayable {
                 self.replay(kernel, k, x, w, &mut out);
                 mins.fold_cached(self, kernel, k);
-                pruned += 1;
+                stats.pruned += 1;
             } else {
                 idx.push(k);
                 buf.extend_from_slice(x.row(k));
@@ -813,7 +963,7 @@ impl BlockBounds {
         }
         mins.store(self);
         self.partials = Some(out.clone());
-        Ok((out, pruned))
+        Ok((out, stats))
     }
 }
 
@@ -824,7 +974,10 @@ impl BlockBounds {
 // ---------------------------------------------------------------------------
 
 const SPILL_MAGIC: u32 = 0xB16F_5AB1;
-const SPILL_VERSION: u8 = 1;
+/// v2 appended the quant mode tag + optional sidecar section. Old images
+/// simply fail to decode, which the slab answers with an exact refresh —
+/// sound, and the ring never persists across sessions anyway.
+const SPILL_VERSION: u8 = 2;
 
 pub(crate) fn put_u8(b: &mut Vec<u8>, v: u8) {
     b.push(v);
@@ -1027,6 +1180,17 @@ impl SlabState for BlockBounds {
         put_u64(&mut b, self.live as u64);
         put_u64(&mut b, self.stale_iters as u64);
         put_u64(&mut b, self.block_payload_bytes);
+        put_u8(&mut b, match self.quant {
+            QuantMode::Off => 0,
+            QuantMode::I8 => 1,
+        });
+        match &self.sidecar {
+            None => put_u8(&mut b, 0),
+            Some(s) => {
+                put_u8(&mut b, 1);
+                s.encode(&mut b);
+            }
+        }
         // FNV-1a trailer, same discipline as the block codec: a corrupt
         // slot file must fail to decode (the block then refreshes exactly)
         // rather than replay corrupted bounds into the partials.
@@ -1078,6 +1242,16 @@ impl SlabState for BlockBounds {
         let live = c.u64()? as usize;
         let stale_iters = c.u64()? as usize;
         let block_payload_bytes = c.u64()?;
+        let quant = match c.u8()? {
+            0 => QuantMode::Off,
+            1 => QuantMode::I8,
+            _ => return None,
+        };
+        let sidecar = match c.u8()? {
+            0 => None,
+            1 => Some(QuantSidecar::decode(&mut c)?),
+            _ => return None,
+        };
         if !c.done() {
             return None;
         }
@@ -1099,6 +1273,8 @@ impl SlabState for BlockBounds {
             live,
             stale_iters,
             block_payload_bytes,
+            quant,
+            sidecar,
         })
     }
 }
@@ -1129,7 +1305,11 @@ mod tests {
     }
 
     fn cfg(model: BoundModel) -> BoundConfig {
-        BoundConfig { model, tolerance: 1e-2, refresh_every: 8 }
+        BoundConfig { model, tolerance: 1e-2, refresh_every: 8, quant: QuantMode::Off }
+    }
+
+    fn cfg_q(model: BoundModel, tolerance: f64) -> BoundConfig {
+        BoundConfig { model, tolerance, refresh_every: 8, quant: QuantMode::I8 }
     }
 
     #[test]
@@ -1138,10 +1318,10 @@ mod tests {
         for model in [BoundModel::DMin, BoundModel::Elkan] {
             for m in [1.4, 2.0] {
                 let mut state = BlockBounds::default();
-                let (p, pruned) = NativeBackend
+                let (p, stats) = NativeBackend
                     .pruned_partials(Kernel::FcmFast, &x, &v, &w, m, &mut state, &cfg(model))
                     .unwrap();
-                assert_eq!(pruned, 0, "first pass must refresh, not prune");
+                assert_eq!(stats.pruned, 0, "first pass must refresh, not prune");
                 assert!(state.is_fresh());
                 let exact = fcm_partials_native(&x, &v, &w, m);
                 for (a, b) in p.w_acc.iter().zip(&exact.w_acc) {
@@ -1162,10 +1342,10 @@ mod tests {
                 .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, &mut state, &cfg(model))
                 .unwrap();
             // Same centers again: zero shift → whole block served from cache.
-            let (second, pruned) = NativeBackend
+            let (second, stats) = NativeBackend
                 .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, &mut state, &cfg(model))
                 .unwrap();
-            assert_eq!(pruned, 100, "{model:?}");
+            assert_eq!(stats.pruned, 100, "{model:?}");
             assert_eq!(first.w_acc, second.w_acc);
             assert_eq!(first.v_num.as_slice(), second.v_num.as_slice());
             assert_eq!(first.objective, second.objective);
@@ -1175,13 +1355,19 @@ mod tests {
     #[test]
     fn refresh_cap_forces_exact_pass() {
         let (x, v, w) = rand_case(80, 3, 3, 43);
-        let cfg = BoundConfig { model: BoundModel::Elkan, tolerance: 1e-2, refresh_every: 2 };
+        let cfg = BoundConfig {
+            model: BoundModel::Elkan,
+            tolerance: 1e-2,
+            refresh_every: 2,
+            quant: QuantMode::Off,
+        };
         let mut state = BlockBounds::default();
         let run = |st: &mut BlockBounds| {
             NativeBackend
                 .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, st, &cfg)
                 .unwrap()
                 .1
+                .pruned
         };
         run(&mut state);
         assert_eq!(run(&mut state), 80, "within the cap the unmoved block prunes");
@@ -1193,13 +1379,18 @@ mod tests {
     #[test]
     fn zero_tolerance_disables_pruning() {
         let (x, v, w) = rand_case(64, 3, 3, 44);
-        let cfg = BoundConfig { model: BoundModel::Elkan, tolerance: 0.0, refresh_every: 4 };
+        let cfg = BoundConfig {
+            model: BoundModel::Elkan,
+            tolerance: 0.0,
+            refresh_every: 4,
+            quant: QuantMode::Off,
+        };
         let mut state = BlockBounds::default();
         for _ in 0..3 {
-            let (_, pruned) = NativeBackend
+            let (_, stats) = NativeBackend
                 .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, &mut state, &cfg)
                 .unwrap();
-            assert_eq!(pruned, 0);
+            assert_eq!(stats.pruned, 0);
         }
     }
 
@@ -1208,7 +1399,7 @@ mod tests {
         let (x, v, w) = rand_case(60, 3, 3, 45);
         let mut state = BlockBounds::default();
         let run = |st: &mut BlockBounds, kernel, model| {
-            NativeBackend.pruned_partials(kernel, &x, &v, &w, 2.0, st, &cfg(model)).unwrap().1
+            NativeBackend.pruned_partials(kernel, &x, &v, &w, 2.0, st, &cfg(model)).unwrap().1.pruned
         };
         run(&mut state, Kernel::FcmFast, BoundModel::Elkan);
         assert_eq!(run(&mut state, Kernel::FcmFast, BoundModel::Elkan), 60);
@@ -1238,14 +1429,16 @@ mod tests {
         let tol = 1e-2;
         let mut counts = Vec::new();
         for model in [BoundModel::DMin, BoundModel::Elkan, BoundModel::Hamerly] {
-            let cfg = BoundConfig { model, tolerance: tol, refresh_every: 8 };
+            let cfg =
+                BoundConfig { model, tolerance: tol, refresh_every: 8, quant: QuantMode::Off };
             let mut state = BlockBounds::default();
             NativeBackend
                 .pruned_partials(Kernel::FcmFast, x, &v, &w, 2.0, &mut state, &cfg)
                 .unwrap();
-            let (pruned_p, pruned_n) = NativeBackend
+            let (pruned_p, stats) = NativeBackend
                 .pruned_partials(Kernel::FcmFast, x, &v2, &w, 2.0, &mut state, &cfg)
                 .unwrap();
+            let pruned_n = stats.pruned;
             assert!(pruned_n > 300, "{model:?}: tiny shift should prune most, got {pruned_n}");
             counts.push(pruned_n);
             let exact = fcm_partials_native(x, &v2, &w, 2.0);
@@ -1272,10 +1465,10 @@ mod tests {
         let (x, v, w) = rand_case(90, 4, 4, 46);
         for m in [1.3, 2.0] {
             let mut state = BlockBounds::default();
-            let (p, pruned) = NativeBackend
+            let (p, stats) = NativeBackend
                 .pruned_partials(Kernel::FcmClassic, &x, &v, &w, m, &mut state, &cfg(BoundModel::Elkan))
                 .unwrap();
-            assert_eq!(pruned, 0);
+            assert_eq!(stats.pruned, 0);
             // The pair-loop kernel is the classic oracle.
             let exact = classic_partials_native(&x, &v, &w, m);
             for (a, b) in p.w_acc.iter().zip(&exact.w_acc) {
@@ -1312,10 +1505,10 @@ mod tests {
             NativeBackend
                 .pruned_partials(Kernel::KMeans, &x, &v, &w, 0.0, &mut state, &cfg(model))
                 .unwrap();
-            let (pruned_p, pruned_n) = NativeBackend
+            let (pruned_p, stats) = NativeBackend
                 .pruned_partials(Kernel::KMeans, &x, &v2, &w, 0.0, &mut state, &cfg(model))
                 .unwrap();
-            assert!(pruned_n > 0, "{model:?}: margin test should prune on separated data");
+            assert!(stats.pruned > 0, "{model:?}: margin test should prune on separated data");
             let exact = kmeans_partials_native(&x, &v2, &w);
             assert_eq!(pruned_p.w_acc, exact.w_acc, "{model:?}: pruned masses must be exact");
             for (a, b) in pruned_p.v_num.as_slice().iter().zip(exact.v_num.as_slice()) {
@@ -1380,10 +1573,10 @@ mod tests {
             NativeBackend
                 .pruned_partials(Kernel::KMeans, &x, &v, &w, 0.0, &mut state, &cfg(model))
                 .unwrap();
-            let (p, pruned) = NativeBackend
+            let (p, stats) = NativeBackend
                 .pruned_partials(Kernel::KMeans, &x, &v2, &w, 0.0, &mut state, &cfg(model))
                 .unwrap();
-            counts.push(pruned);
+            counts.push(stats.pruned);
             let exact = kmeans_partials_native(&x, &v2, &w);
             assert_eq!(p.w_acc, exact.w_acc, "{model:?}: pruned masses must stay exact");
         }
@@ -1445,45 +1638,226 @@ mod tests {
     #[test]
     fn spill_roundtrip_is_bitwise_and_resumes_identically() {
         let (x, v, w) = rand_case(80, 4, 3, 49);
-        for (kernel, model) in [
-            (Kernel::FcmFast, BoundModel::Elkan),
-            (Kernel::FcmFast, BoundModel::DMin),
-            (Kernel::FcmFast, BoundModel::Hamerly),
-            (Kernel::KMeans, BoundModel::Elkan),
-            (Kernel::KMeans, BoundModel::Hamerly),
+        for (kernel, model, quant) in [
+            (Kernel::FcmFast, BoundModel::Elkan, QuantMode::Off),
+            (Kernel::FcmFast, BoundModel::DMin, QuantMode::Off),
+            (Kernel::FcmFast, BoundModel::Hamerly, QuantMode::Off),
+            (Kernel::KMeans, BoundModel::Elkan, QuantMode::Off),
+            (Kernel::KMeans, BoundModel::Hamerly, QuantMode::Off),
+            (Kernel::FcmFast, BoundModel::Elkan, QuantMode::I8),
+            (Kernel::FcmFast, BoundModel::DMin, QuantMode::I8),
+            (Kernel::KMeans, BoundModel::Hamerly, QuantMode::I8),
         ] {
+            let cfg = BoundConfig { model, tolerance: 1e-2, refresh_every: 8, quant };
             let mut state = BlockBounds::default();
-            NativeBackend
-                .pruned_partials(kernel, &x, &v, &w, 2.0, &mut state, &cfg(model))
-                .unwrap();
+            NativeBackend.pruned_partials(kernel, &x, &v, &w, 2.0, &mut state, &cfg).unwrap();
             let mut v2 = v.clone();
             for val in v2.as_mut_slice().iter_mut() {
                 *val += 2e-4;
             }
-            NativeBackend
-                .pruned_partials(kernel, &x, &v2, &w, 2.0, &mut state, &cfg(model))
-                .unwrap();
+            NativeBackend.pruned_partials(kernel, &x, &v2, &w, 2.0, &mut state, &cfg).unwrap();
             let img = state.spill().expect("bounds are spillable");
             let mut restored = BlockBounds::unspill(&img).expect("image decodes");
             assert_eq!(img, restored.spill().unwrap(), "{kernel:?}/{model:?}: re-spill differs");
             assert_eq!(state.slab_bytes(), restored.slab_bytes());
             assert_eq!(state.recompute_bytes(), restored.recompute_bytes());
+            assert_eq!(state.quant_sidecar_bytes(), restored.quant_sidecar_bytes());
             // The restored state must drive the next pass identically.
             let mut v3 = v2.clone();
             for val in v3.as_mut_slice().iter_mut() {
                 *val += 2e-4;
             }
             let (pa, na) = NativeBackend
-                .pruned_partials(kernel, &x, &v3, &w, 2.0, &mut state, &cfg(model))
+                .pruned_partials(kernel, &x, &v3, &w, 2.0, &mut state, &cfg)
                 .unwrap();
             let (pb, nb) = NativeBackend
-                .pruned_partials(kernel, &x, &v3, &w, 2.0, &mut restored, &cfg(model))
+                .pruned_partials(kernel, &x, &v3, &w, 2.0, &mut restored, &cfg)
                 .unwrap();
             assert_eq!(na, nb, "{kernel:?}/{model:?}: pruning decisions diverged");
             assert_eq!(pa.w_acc, pb.w_acc);
             assert_eq!(pa.v_num.as_slice(), pb.v_num.as_slice());
             assert_eq!(pa.objective, pb.objective);
         }
+    }
+
+    /// Well-separated clusters on axis spikes: record `k` sits σ-noise
+    /// away from center `k % c`. The geometry every quant test wants —
+    /// inter-center distances dwarf both the noise and the i8 step.
+    fn grid_case(n: usize, d: usize, c: usize, sigma: f32, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Pcg::new(seed);
+        let mut v = Matrix::zeros(c, d);
+        for i in 0..c {
+            v.set(i, i % d, 6.0 * (i as f32 + 1.0));
+        }
+        let mut x = Matrix::zeros(n, d);
+        for k in 0..n {
+            let home = k % c;
+            for j in 0..d {
+                x.set(k, j, v.get(home, j) + rng.normal() as f32 * sigma);
+            }
+        }
+        (x, v)
+    }
+
+    #[test]
+    fn quant_second_chance_rescues_fcm_when_path_bound_overcharges() {
+        // δ_j is *path length* since refresh: a center that wandered and
+        // came back keeps a huge δ although no distance changed. The δ
+        // test abandons every record; the sidecar's certified interval —
+        // memoryless in δ — re-certifies them, and because the centers
+        // really are at their refresh positions the replayed partials
+        // match the exact pass.
+        let (x, vt) = grid_case(240, 3, 3, 0.2, 61);
+        let n = x.rows();
+        // Centers offset from the data spikes so every record keeps a
+        // distance comfortably above the i8 certification floor.
+        let mut v = vt.clone();
+        for val in v.as_mut_slice().iter_mut() {
+            *val += 1.0;
+        }
+        let w = vec![1.0f32; n];
+        for (model, m) in [
+            (BoundModel::Elkan, 2.0),
+            (BoundModel::DMin, 2.0),
+            (BoundModel::Hamerly, 1.6),
+        ] {
+            let cfg = cfg_q(model, 0.3);
+            let mut state = BlockBounds::default();
+            let (_, s0) = NativeBackend
+                .pruned_partials(Kernel::FcmFast, &x, &v, &w, m, &mut state, &cfg)
+                .unwrap();
+            assert_eq!(s0.pruned, 0);
+            assert!(s0.sidecar_bytes > 0 && s0.sidecar_build_s >= 0.0);
+            // Simulate a wander-and-return trajectory: path length blows
+            // up, net displacement is zero.
+            state.delta = vec![100.0; 3];
+            let (p, stats) = NativeBackend
+                .pruned_partials(Kernel::FcmFast, &x, &v, &w, m, &mut state, &cfg)
+                .unwrap();
+            assert_eq!(
+                (stats.pruned, stats.quant),
+                (n, n),
+                "{model:?}: quant must rescue every abandoned record"
+            );
+            let exact = fcm_partials_native(&x, &v, &w, m);
+            for (a, b) in p.w_acc.iter().zip(&exact.w_acc) {
+                assert!((a - b).abs() / b.abs().max(1e-9) < 1e-6, "{model:?}: {a} vs {b}");
+            }
+            for (a, b) in p.v_num.as_slice().iter().zip(exact.v_num.as_slice()) {
+                assert!((a - b).abs() <= 1e-6 + 1e-4 * b.abs(), "{model:?}: {a} vs {b}");
+            }
+            let rel = (p.objective - exact.objective).abs() / exact.objective.max(1e-9);
+            assert!(rel < 1e-4, "{model:?}: objective rel {rel}");
+            // Same trajectory with quant off: the δ bound gathers all.
+            let off = BoundConfig { model, tolerance: 0.3, refresh_every: 8, quant: QuantMode::Off };
+            let mut plain = BlockBounds::default();
+            NativeBackend
+                .pruned_partials(Kernel::FcmFast, &x, &v, &w, m, &mut plain, &off)
+                .unwrap();
+            plain.delta = vec![100.0; 3];
+            let (_, soff) = NativeBackend
+                .pruned_partials(Kernel::FcmFast, &x, &v, &w, m, &mut plain, &off)
+                .unwrap();
+            assert_eq!((soff.pruned, soff.quant), (0, 0), "{model:?}");
+        }
+    }
+
+    #[test]
+    fn quant_rival_elimination_is_assignment_exact_for_kmeans() {
+        let (x, v) = grid_case(240, 3, 3, 0.2, 62);
+        let n = x.rows();
+        let w = vec![1.0f32; n];
+        for model in [BoundModel::DMin, BoundModel::Elkan, BoundModel::Hamerly] {
+            let cfg = cfg_q(model, 1e-2);
+            let mut state = BlockBounds::default();
+            NativeBackend
+                .pruned_partials(Kernel::KMeans, &x, &v, &w, 0.0, &mut state, &cfg)
+                .unwrap();
+            // Path length far beyond every margin: the shift tests die,
+            // the certified rival elimination doesn't (the clusters are
+            // still separated *now*).
+            state.delta = vec![100.0; 3];
+            let (p, stats) = NativeBackend
+                .pruned_partials(Kernel::KMeans, &x, &v, &w, 0.0, &mut state, &cfg)
+                .unwrap();
+            assert_eq!((stats.pruned, stats.quant), (n, n), "{model:?}");
+            let exact = kmeans_partials_native(&x, &v, &w);
+            assert_eq!(p.w_acc, exact.w_acc, "{model:?}: replayed masses must be exact");
+            for (a, b) in p.v_num.as_slice().iter().zip(exact.v_num.as_slice()) {
+                assert!((a - b).abs() <= 1e-4 + 1e-5 * b.abs(), "{model:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_mode_switch_forces_refresh_and_drops_sidecar() {
+        let (x, v, w) = rand_case(90, 4, 3, 63);
+        let mut state = BlockBounds::default();
+        NativeBackend
+            .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, &mut state, &cfg(BoundModel::Elkan))
+            .unwrap();
+        let bytes_off = state.bytes();
+        assert_eq!(state.quant_sidecar_bytes(), 0);
+        // off → i8: the cached bounds may not be reused across the layout
+        // switch; the refresh pass builds and charges the sidecar.
+        let (_, s1) = NativeBackend
+            .pruned_partials(
+                Kernel::FcmFast,
+                &x,
+                &v,
+                &w,
+                2.0,
+                &mut state,
+                &cfg_q(BoundModel::Elkan, 1e-2),
+            )
+            .unwrap();
+        assert_eq!(s1.pruned, 0, "mode switch must refresh");
+        assert!(s1.sidecar_bytes > 0 && s1.sidecar_build_s > 0.0);
+        assert_eq!(state.bytes(), bytes_off + s1.sidecar_bytes);
+        // Steady i8 pass: the sidecar is not rebuilt.
+        let (_, s2) = NativeBackend
+            .pruned_partials(
+                Kernel::FcmFast,
+                &x,
+                &v,
+                &w,
+                2.0,
+                &mut state,
+                &cfg_q(BoundModel::Elkan, 1e-2),
+            )
+            .unwrap();
+        assert_eq!(s2.pruned, 90);
+        assert_eq!(s2.sidecar_bytes, s1.sidecar_bytes);
+        assert_eq!(s2.sidecar_build_s, 0.0, "sidecar must be built exactly once");
+        // i8 → off: refresh again, sidecar dropped and de-charged.
+        let (_, s3) = NativeBackend
+            .pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, &mut state, &cfg(BoundModel::Elkan))
+            .unwrap();
+        assert_eq!((s3.pruned, s3.sidecar_bytes), (0, 0));
+        assert_eq!(state.bytes(), bytes_off);
+        assert_eq!(state.quant_sidecar_bytes(), 0);
+    }
+
+    #[test]
+    fn quant_bytes_charge_sidecar_and_widened_dmin_layout() {
+        let (n, c, d) = (50usize, 4usize, 3usize);
+        let (x, v, w) = rand_case(n, d, c, 64);
+        let run = |quant: QuantMode, model: BoundModel| {
+            let mut st = BlockBounds::default();
+            let cfg = BoundConfig { model, tolerance: 1e-2, refresh_every: 8, quant };
+            NativeBackend.pruned_partials(Kernel::FcmFast, &x, &v, &w, 2.0, &mut st, &cfg).unwrap();
+            st
+        };
+        let elkan_off = run(QuantMode::Off, BoundModel::Elkan);
+        let elkan_i8 = run(QuantMode::I8, BoundModel::Elkan);
+        let sidecar = elkan_i8.quant_sidecar_bytes();
+        assert_eq!(sidecar, (n * d + 4 * d + 16) as u64);
+        assert_eq!(elkan_i8.bytes(), elkan_off.bytes() + sidecar);
+        // dmin gains the lb matrix + block minima under quant (the second
+        // chance certifies against them) — charged, on top of the sidecar.
+        let dmin_off = run(QuantMode::Off, BoundModel::DMin);
+        let dmin_i8 = run(QuantMode::I8, BoundModel::DMin);
+        assert_eq!(dmin_i8.bytes(), dmin_off.bytes() + sidecar + ((n * c + c) * 4) as u64);
     }
 
     #[test]

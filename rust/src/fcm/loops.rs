@@ -18,7 +18,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::data::Matrix;
 use crate::error::{Error, Result};
-use crate::fcm::backend::{BlockBounds, BoundConfig, BoundModel, Kernel, KernelBackend};
+use crate::fcm::backend::{BlockBounds, BoundConfig, BoundModel, Kernel, KernelBackend, QuantMode};
 use crate::fcm::{max_center_shift2, ClusterResult, Partials};
 use crate::hdfs::BlockStore;
 use crate::mapreduce::{
@@ -180,6 +180,11 @@ pub struct PruneConfig {
     /// test stays in force at every staleness, so the cap only trades
     /// refresh cadence, never bound soundness.
     pub adaptive_refresh: bool,
+    /// Quantized distance pre-pass (`cluster.quant`): when enabled, each
+    /// cached block carries a one-time i8 sidecar whose certified error
+    /// radius gives records the bound tests abandon a second chance to
+    /// replay — exact math runs only for records neither test certifies.
+    pub quant: QuantMode,
     /// Sticky-slab byte budget (see `cluster.slab_mib`).
     pub slab_bytes: u64,
     /// Disk spill ring for cold slab state (`cluster.slab_spill_dir`);
@@ -195,6 +200,7 @@ impl Default for PruneConfig {
             tolerance: 5e-3,
             refresh_every: 4,
             adaptive_refresh: true,
+            quant: QuantMode::Off,
             slab_bytes: 64 * MIB,
             spill_dir: None,
         }
@@ -223,6 +229,7 @@ impl PruneConfig {
             slab_bytes: cluster.slab_mib as u64 * MIB,
             bounds: cluster.bounds,
             adaptive_refresh: cluster.adaptive_refresh,
+            quant: cluster.quant,
             spill_dir,
             ..Default::default()
         }
@@ -234,6 +241,7 @@ impl PruneConfig {
             model: self.bounds,
             tolerance: self.tolerance,
             refresh_every: self.refresh_every,
+            quant: self.quant,
         }
     }
 }
@@ -360,7 +368,7 @@ impl MapReduceJob for SessionPartialsJob {
         };
         let handle = self.slab.entry(ctx.task_id);
         let mut st = handle.lock().expect("slab state poisoned");
-        let (p, pruned) = self.backend.pruned_partials(
+        let (p, pstats) = self.backend.pruned_partials(
             self.kernel,
             block,
             &v,
@@ -372,8 +380,17 @@ impl MapReduceJob for SessionPartialsJob {
         let bytes = st.slab_bytes();
         drop(st); // never hold a state lock while taking the slab lock
         self.slab.note_update(ctx.task_id, &handle, bytes);
-        if pruned > 0 {
-            self.slab.add_records_pruned(pruned as u64);
+        if pstats.pruned > 0 {
+            self.slab.add_records_pruned(pstats.pruned as u64);
+        }
+        if pstats.quant > 0 {
+            self.slab.add_records_pruned_quant(pstats.quant as u64);
+        }
+        if pstats.sidecar_bytes > 0 {
+            self.slab.add_quant_sidecar_bytes(pstats.sidecar_bytes);
+        }
+        if pstats.sidecar_build_s > 0.0 {
+            self.slab.add_quant_build_ns((pstats.sidecar_build_s * 1e9) as u64);
         }
         Ok(p)
     }
@@ -420,6 +437,14 @@ pub struct SessionRunResult {
     pub jobs: usize,
     /// Map records served from the sticky slab across the whole run.
     pub records_pruned: u64,
+    /// Subset of `records_pruned` certified by the quantized pre-pass
+    /// after the primary bound test gave up (0 with `cluster.quant=off`).
+    pub records_pruned_quant: u64,
+    /// Peak per-iteration quant-sidecar footprint across the run.
+    pub quant_sidecar_bytes: u64,
+    /// Total real seconds spent building quant sidecars (one-time per
+    /// block; all of it lands in the first quant-enabled iteration).
+    pub quant_build_s: f64,
     /// Bytes the slab wrote to its disk spill ring across the run.
     pub slab_spilled_bytes: u64,
     /// Slab states reloaded from the spill ring across the run.
@@ -490,6 +515,9 @@ pub fn run_fcm_session(
     let mut converged = false;
     let mut iterations = 0usize;
     let mut records_pruned_total = 0u64;
+    let mut records_pruned_quant_total = 0u64;
+    let mut quant_sidecar_peak = 0u64;
+    let mut quant_build_s_total = 0.0f64;
     let mut peak_resident_bytes = 0u64;
     let mut spill_io_charged = 0u64;
     let mut per_iteration: Vec<JobStats> = Vec::new();
@@ -506,13 +534,22 @@ pub fn run_fcm_session(
         cache.put_matrix(KEY_SESSION_CENTERS, v.clone());
         let (partials, mut stats) = session.run_iteration(Arc::clone(&job), Arc::clone(&cache))?;
         let pruned_this = slab.take_records_pruned();
+        let pruned_quant_this = slab.take_records_pruned_quant();
+        let sidecar_bytes_this = slab.take_quant_sidecar_bytes();
+        let quant_build_s_this = slab.take_quant_build_ns() as f64 * 1e-9;
         stats.refresh_cap = refresh_cap;
         stats.records_pruned = pruned_this;
+        stats.records_pruned_quant = pruned_quant_this;
+        stats.quant_sidecar_bytes = sidecar_bytes_this;
+        stats.quant_build_s = quant_build_s_this;
         stats.slab_bytes = slab.bytes();
         stats.slab_evictions = slab.evictions();
         stats.slab_spilled_bytes = slab.spilled_bytes();
         stats.slab_reloads = slab.reloads();
         records_pruned_total += pruned_this;
+        records_pruned_quant_total += pruned_quant_this;
+        quant_sidecar_peak = quant_sidecar_peak.max(sidecar_bytes_this);
+        quant_build_s_total += quant_build_s_this;
         // Spill writes and reloads are real disk transfers: charge this
         // iteration's delta to the modelled clock at the HDFS rate (the
         // reread side of the slab's recompute-vs-reread crossover; the
@@ -567,6 +604,9 @@ pub fn run_fcm_session(
         result: ClusterResult { centers: v, weights, iterations, objective, converged },
         jobs: iterations,
         records_pruned: records_pruned_total,
+        records_pruned_quant: records_pruned_quant_total,
+        quant_sidecar_bytes: quant_sidecar_peak,
+        quant_build_s: quant_build_s_total,
         slab_spilled_bytes: slab.spilled_bytes(),
         slab_reloads: slab.reloads(),
         per_iteration,

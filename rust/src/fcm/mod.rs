@@ -11,13 +11,15 @@
 pub mod backend;
 pub mod loops;
 pub mod native;
+pub mod quant;
 pub mod seeding;
 pub mod wfcmpb;
 
 pub use backend::{
     memberships_from_bounds, BlockBounds, BoundConfig, BoundModel, BoundRows, Kernel,
-    KernelBackend,
+    KernelBackend, PruneStats, QuantMode,
 };
+pub use quant::{QuantCenters, QuantSidecar};
 pub use loops::{
     kmeans_loop, run_fcm, run_fcm_session, FcmParams, PruneConfig, SessionAlgo,
     SessionRunResult, Variant,

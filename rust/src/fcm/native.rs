@@ -38,7 +38,10 @@ use crate::error::Result;
 use crate::fcm::backend::{BoundRows, Kernel, KernelBackend};
 use crate::fcm::Partials;
 
-const DIST_EPS: f64 = 1e-12;
+/// Squared-distance clamp floor of every membership evaluation — shared
+/// with the quant pre-pass, whose certified intervals must live in the
+/// same clamped domain as the exact kernels' distances.
+pub(crate) const DIST_EPS: f64 = 1e-12;
 
 /// Default row-tile height of the tiled distance pass — the proven
 /// mid-shape choice [`tile_rows_for`] falls back to. 8 rows × C f32 lanes

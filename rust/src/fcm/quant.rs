@@ -1,0 +1,326 @@
+//! Quantized distance pre-pass: i8 block sidecars with certified error
+//! radii, the layer *underneath* the bound models of [`super::backend`].
+//!
+//! ## The idea
+//!
+//! The shift-bounded tests (`dmin`/`elkan`/`hamerly`) compare a center's
+//! accumulated **path length** δ_j against the refresh-time distances.
+//! Path length overcharges net displacement — a center that wanders and
+//! returns keeps a large δ_j forever (until the refresh cap) even though
+//! no distance actually changed. The pre-pass gives those records a
+//! second chance: an i8-quantized copy of the block (one-time sidecar,
+//! symmetric per-column scales) yields *current* approximate distances
+//! d̃² plus a certified radius E with `|d² − d̃²| ≤ E`, so a record can be
+//! re-certified against the cached bounds from the interval
+//! `[√(d̃²−E), √(d̃²+E)]` alone — no f32 row math, no powf. Exact math
+//! runs only for records neither the δ bound nor the interval clears.
+//!
+//! ## The certificate
+//!
+//! Per column `t` the sidecar stores a scale `s_t = max_i|x_it|/127` and
+//! codes `q_it = round(x_it/s_t)` (exact in i8: `|x/s| ≤ 127` by
+//! construction), so `x_it = s_t·q_it + e_it` with `|e_it| ≤ s_t/2`. Per
+//! pass each center row is coded once as `c_jt = round(v_jt/s_t)`
+//! (clamped i16) with the **exact** residual `f_jt = v_jt − s_t·c_jt`
+//! kept — the bound below uses the actual `|f_jt|`, so clamping never
+//! breaks soundness. Writing the per-coordinate difference as
+//! `s_t·Δq + (e − f)` with `|e − f| ≤ g_jt := s_t/2 + |f_jt|`:
+//!
+//! ```text
+//! |d² − d̃²| ≤ Σ_t 2·s_t·g_jt·|Δq_t|  +  Σ_t g_jt²      (= A + G_j)
+//! ```
+//!
+//! where `d̃² = Σ_t s_t²·Δq_t²`. The kernel accumulates `Δq` in exact i32
+//! and the weighted sums in f64; `E` is then inflated by generous float
+//! headroom (`1e-9` relative on `A + G`, `1e-6` relative on `d̃²` — the
+//! exact kernels subtract coordinates in f32, a `2⁻²⁴`-relative effect
+//! the inflation dominates) so the certificate also covers the *computed*
+//! distances the cached bounds came from. `prop_invariants` pins the
+//! inequality against random shapes and scales.
+
+use crate::data::Matrix;
+use crate::fcm::backend::{put_blob, put_f32s, put_u32, Cur};
+
+/// One block's i8 quantization: row-major codes plus symmetric per-column
+/// scales. Built lazily on a block's first quant-enabled pass, owned by
+/// the block's [`super::BlockBounds`] (byte-accounted, spillable), and
+/// immutable thereafter — it depends only on the block payload, so it
+/// survives bound refreshes and center movement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantSidecar {
+    n: usize,
+    d: usize,
+    /// Row-major i8 codes, n × d.
+    codes: Vec<i8>,
+    /// Per-column scale `s_t = max_i|x_it|/127` (0 for an all-zero column).
+    scales: Vec<f32>,
+}
+
+/// Per-pass quantization of one center matrix against a sidecar's scales:
+/// i16 codes plus the exact-residual error terms of the certificate. Tiny
+/// (O(C·d)) and rebuilt every pass — centers move, the sidecar doesn't.
+pub struct QuantCenters {
+    c: usize,
+    d: usize,
+    /// Row-major i16 codes, C × d (0 where the column scale is 0).
+    codes: Vec<i16>,
+    /// `a_jt = 2·s_t·g_jt` — the |Δq| weights of the error sum, C × d.
+    a: Vec<f64>,
+    /// `G_j = Σ_t g_jt²` — the Δq-independent error floor, length C.
+    g2: Vec<f64>,
+    /// `s_t²` in f64 (exact squares of the f32 scales), length d.
+    s2: Vec<f64>,
+}
+
+impl QuantCenters {
+    pub fn clusters(&self) -> usize {
+        self.c
+    }
+}
+
+impl QuantSidecar {
+    /// Quantize a block: one pass for the column maxima, one for the codes.
+    pub fn build(x: &Matrix) -> Self {
+        let (n, d) = (x.rows(), x.cols());
+        let mut scales = vec![0.0f32; d];
+        for row in x.iter_rows() {
+            for (s, &xv) in scales.iter_mut().zip(row) {
+                *s = s.max(xv.abs());
+            }
+        }
+        for s in scales.iter_mut() {
+            *s /= 127.0;
+        }
+        let mut codes = vec![0i8; n * d];
+        for (chunk, row) in codes.chunks_exact_mut(d.max(1)).zip(x.iter_rows()) {
+            for ((q, &xv), &s) in chunk.iter_mut().zip(row).zip(&scales) {
+                if s > 0.0 {
+                    *q = (xv / s).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+        Self { n, d, codes, scales }
+    }
+
+    /// Whether this sidecar quantizes a block of the given shape.
+    pub fn matches(&self, n: usize, d: usize) -> bool {
+        self.n == n && self.d == d
+    }
+
+    /// Byte footprint for slab accounting: codes + scales + header.
+    pub fn bytes(&self) -> u64 {
+        (self.codes.len() + self.scales.len() * 4 + 16) as u64
+    }
+
+    /// Code one center matrix against this sidecar's scales, precomputing
+    /// every Δq-independent term of the error certificate.
+    pub fn prep_centers(&self, v: &Matrix) -> QuantCenters {
+        debug_assert_eq!(v.cols(), self.d);
+        let (c, d) = (v.rows(), self.d);
+        let mut codes = vec![0i16; c * d];
+        let mut a = vec![0.0f64; c * d];
+        let mut g2 = vec![0.0f64; c];
+        for j in 0..c {
+            let vrow = v.row(j);
+            let crow = &mut codes[j * d..(j + 1) * d];
+            let arow = &mut a[j * d..(j + 1) * d];
+            let mut acc = 0.0f64;
+            for t in 0..d {
+                let s = self.scales[t] as f64;
+                let vjt = vrow[t] as f64;
+                let code =
+                    if s > 0.0 { (vjt / s).round().clamp(-32767.0, 32767.0) as i16 } else { 0 };
+                crow[t] = code;
+                // Exact residual after the (possibly clamped) rounding —
+                // the certificate uses the actual |f|, so an out-of-range
+                // center only widens its own interval.
+                let f = vjt - s * code as f64;
+                let g = 0.5 * s + f.abs();
+                arow[t] = 2.0 * s * g;
+                acc += g * g;
+            }
+            g2[j] = acc;
+        }
+        let s2 = self.scales.iter().map(|&s| s as f64 * s as f64).collect();
+        QuantCenters { c, d, codes, a, g2, s2 }
+    }
+
+    /// Approximate squared distances of record `k` to every center plus
+    /// the certified radius: `|d²_j − d2[j]| ≤ err[j]` for the exact
+    /// kernels' computed (pre-clamp) distances. Δq runs in exact i32; the
+    /// scale-weighted sums accumulate in f64.
+    pub fn row_distances(&self, k: usize, qc: &QuantCenters, d2: &mut [f64], err: &mut [f64]) {
+        debug_assert_eq!(qc.d, self.d);
+        debug_assert_eq!(d2.len(), qc.c);
+        debug_assert_eq!(err.len(), qc.c);
+        let q = &self.codes[k * self.d..(k + 1) * self.d];
+        for j in 0..qc.c {
+            let cj = &qc.codes[j * self.d..(j + 1) * self.d];
+            let aj = &qc.a[j * self.d..(j + 1) * self.d];
+            let mut approx = 0.0f64;
+            let mut spread = 0.0f64;
+            for t in 0..self.d {
+                let dq = q[t] as i32 - cj[t] as i32;
+                approx += qc.s2[t] * (dq * dq) as f64;
+                spread += aj[t] * dq.unsigned_abs() as f64;
+            }
+            d2[j] = approx;
+            err[j] = (spread + qc.g2[j]) * (1.0 + 1e-9) + 1e-6 * approx + 1e-12;
+        }
+    }
+
+    /// Approximate squared distances only — the candidate-selection form
+    /// the bulk scorer uses, where top-k slack absorbs the error instead
+    /// of a per-center certificate.
+    pub fn row_approx(&self, k: usize, qc: &QuantCenters, d2: &mut [f64]) {
+        debug_assert_eq!(qc.d, self.d);
+        debug_assert_eq!(d2.len(), qc.c);
+        let q = &self.codes[k * self.d..(k + 1) * self.d];
+        for j in 0..qc.c {
+            let cj = &qc.codes[j * self.d..(j + 1) * self.d];
+            let mut approx = 0.0f64;
+            for t in 0..self.d {
+                let dq = q[t] as i32 - cj[t] as i32;
+                approx += qc.s2[t] * (dq * dq) as f64;
+            }
+            d2[j] = approx;
+        }
+    }
+
+    /// Append this sidecar to a spill image (codes travel as raw bytes,
+    /// scales as exact LE bit patterns — the roundtrip is bitwise).
+    pub(crate) fn encode(&self, b: &mut Vec<u8>) {
+        put_u32(b, self.n as u32);
+        put_u32(b, self.d as u32);
+        let raw: Vec<u8> = self.codes.iter().map(|&q| q as u8).collect();
+        put_blob(b, &raw);
+        put_f32s(b, &self.scales);
+    }
+
+    pub(crate) fn decode(c: &mut Cur) -> Option<Self> {
+        let n = c.u32()? as usize;
+        let d = c.u32()? as usize;
+        let raw = c.blob()?;
+        if raw.len() != n.checked_mul(d)? {
+            return None;
+        }
+        let codes: Vec<i8> = raw.iter().map(|&b| b as i8).collect();
+        let scales = c.f32s()?;
+        if scales.len() != d {
+            return None;
+        }
+        Some(Self { n, d, codes, scales })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg;
+
+    fn rand_block(n: usize, d: usize, scale: f32, seed: u64) -> Matrix {
+        let mut rng = Pcg::new(seed);
+        let mut x = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                x.set(i, j, rng.normal() as f32 * scale);
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn codes_reconstruct_within_half_step() {
+        let x = rand_block(64, 5, 3.0, 7);
+        let q = QuantSidecar::build(&x);
+        for k in 0..64 {
+            for t in 0..5 {
+                let s = q.scales[t];
+                let back = s * q.codes[k * 5 + t] as f32;
+                assert!(
+                    (x.get(k, t) - back).abs() <= 0.5 * s + 1e-6,
+                    "record {k} col {t}: {} vs {back} (s={s})",
+                    x.get(k, t)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_column_gets_zero_scale_and_codes() {
+        let mut x = rand_block(20, 3, 1.0, 8);
+        for k in 0..20 {
+            x.set(k, 1, 0.0);
+        }
+        let q = QuantSidecar::build(&x);
+        assert_eq!(q.scales[1], 0.0);
+        assert!((0..20).all(|k| q.codes[k * 3 + 1] == 0));
+        // A center with mass in the dead column still gets a sound (wide)
+        // interval: g absorbs the whole coordinate.
+        let v = Matrix::from_rows(&[vec![0.5, 2.0, -0.25]]);
+        let qc = q.prep_centers(&v);
+        let (mut d2, mut err) = (vec![0.0], vec![0.0]);
+        for k in 0..20 {
+            q.row_distances(k, &qc, &mut d2, &mut err);
+            let exact = x.row_dist2(k, v.row(0));
+            assert!((exact - d2[0]).abs() <= err[0], "k={k}: |{exact}-{}| > {}", d2[0], err[0]);
+        }
+    }
+
+    #[test]
+    fn certificate_contains_exact_distance() {
+        for (seed, n, d, c, xs, vs) in
+            [(11u64, 80, 4, 3, 1.0f32, 1.0f32), (12, 50, 7, 5, 40.0, 55.0), (13, 30, 2, 4, 0.01, 3.0)]
+        {
+            let x = rand_block(n, d, xs, seed);
+            let v = rand_block(c, d, vs, seed ^ 0xFF);
+            let q = QuantSidecar::build(&x);
+            let qc = q.prep_centers(&v);
+            let mut d2 = vec![0.0; c];
+            let mut err = vec![0.0; c];
+            for k in 0..n {
+                q.row_distances(k, &qc, &mut d2, &mut err);
+                for j in 0..c {
+                    let exact = x.row_dist2(k, v.row(j));
+                    assert!(
+                        (exact - d2[j]).abs() <= err[j],
+                        "seed {seed} k={k} j={j}: |{exact} - {}| > {}",
+                        d2[j],
+                        err[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn approx_matches_certified_distances() {
+        let x = rand_block(40, 6, 2.0, 21);
+        let v = rand_block(4, 6, 2.0, 22);
+        let q = QuantSidecar::build(&x);
+        let qc = q.prep_centers(&v);
+        let mut a = vec![0.0; 4];
+        let mut d2 = vec![0.0; 4];
+        let mut err = vec![0.0; 4];
+        for k in 0..40 {
+            q.row_approx(k, &qc, &mut a);
+            q.row_distances(k, &qc, &mut d2, &mut err);
+            assert_eq!(a, d2);
+        }
+    }
+
+    #[test]
+    fn codec_roundtrip_is_bitwise() {
+        let x = rand_block(33, 5, 4.0, 31);
+        let q = QuantSidecar::build(&x);
+        let mut img = Vec::new();
+        q.encode(&mut img);
+        let mut cur = Cur::new(&img);
+        let back = QuantSidecar::decode(&mut cur).expect("image decodes");
+        assert!(cur.done());
+        assert_eq!(q, back);
+        let mut img2 = Vec::new();
+        back.encode(&mut img2);
+        assert_eq!(img, img2);
+    }
+}

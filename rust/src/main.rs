@@ -19,7 +19,7 @@ use std::time::Instant;
 use bigfcm::baselines::{run_baseline, BaselineAlgo};
 use bigfcm::bench::tables::{run_by_id, Ctx};
 use bigfcm::bench::Scale;
-use bigfcm::config::{BoundModel, Config};
+use bigfcm::config::{params_hash, BoundModel, Config, QuantMode};
 use bigfcm::coordinator::BigFcm;
 use bigfcm::data::normalize::Scaler;
 use bigfcm::data::{builtin, csv};
@@ -257,6 +257,9 @@ fn cmd_session(args: &Args) -> CliResult<()> {
         "off" => prune.enabled = false,
         b => prune.bounds = BoundModel::parse(b)?,
     }
+    if let Some(q) = args.get("quant") {
+        prune.quant = QuantMode::parse(q)?;
+    }
     if let Some(t) = args.get("tolerance") {
         prune.tolerance = t.parse()?;
     }
@@ -284,10 +287,11 @@ fn cmd_session(args: &Args) -> CliResult<()> {
 
     println!(
         "session: dataset={} records={} C={c} m={m} eps={eps:.0e} algo={algo:?} \
-         variant={variant:?} bounds={} slab={} MiB spill={} backend={}",
+         variant={variant:?} bounds={} quant={} slab={} MiB spill={} backend={}",
         dataset.name,
         dataset.rows(),
         if prune.enabled { prune.bounds.as_str() } else { "off" },
+        prune.quant.as_str(),
         prune.slab_bytes / MIB,
         prune
             .spill_dir
@@ -308,10 +312,11 @@ fn cmd_session(args: &Args) -> CliResult<()> {
     )?;
     for (i, s) in run.per_iteration.iter().enumerate() {
         println!(
-            "  iter {:>3}: pruned {:>8}, cap {:>3}, reduce parts {:>3} (depth {}), slab {:>7.2} \
-             MiB, evictions {:>4}, spilled {:>7.2} MiB, reloads {:>4}",
+            "  iter {:>3}: pruned {:>8} (quant {:>7}), cap {:>3}, reduce parts {:>3} (depth {}), \
+             slab {:>7.2} MiB, evictions {:>4}, spilled {:>7.2} MiB, reloads {:>4}",
             i + 1,
             s.records_pruned,
+            s.records_pruned_quant,
             s.refresh_cap,
             s.reduce_parts,
             s.combine_depth,
@@ -326,9 +331,12 @@ fn cmd_session(args: &Args) -> CliResult<()> {
         run.result.iterations, run.jobs, run.result.converged, run.result.objective
     );
     println!(
-        "session counters: records_pruned {}, slab_spilled_bytes {}, slab_reloads {}, \
-         peak resident {:.1} MiB",
+        "session counters: records_pruned {}, records_pruned_quant {}, quant_sidecar_bytes {}, \
+         quant_build_s {:.3}, slab_spilled_bytes {}, slab_reloads {}, peak resident {:.1} MiB",
         run.records_pruned,
+        run.records_pruned_quant,
+        run.quant_sidecar_bytes,
+        run.quant_build_s,
         run.slab_spilled_bytes,
         run.slab_reloads,
         run.peak_resident_bytes as f64 / MIB as f64,
@@ -461,6 +469,7 @@ fn cmd_serve_bench(args: &Args) -> CliResult<()> {
         opts.linger,
         opts.queue_cap,
     );
+    let bundle_algo = bundle.algo;
     let service = Arc::new(ScoreService::new(bundle, backend, opts)?);
     let features = Arc::new(dataset.features);
     let t0 = Instant::now();
@@ -518,9 +527,20 @@ fn cmd_serve_bench(args: &Args) -> CliResult<()> {
         obj.insert("clients".into(), json::num(clients as f64));
         obj.insert("records_per_client".into(), json::num(per_client as f64));
         obj.insert("wall_s".into(), json::num(wall.as_secs_f64()));
+        // Config identity: bench_diff.sh refuses to diff JSONs whose
+        // hashes disagree instead of reporting bogus regressions across
+        // incomparable configs.
+        let hash = params_hash(
+            bundle_algo.as_str(),
+            cfg.cluster.bounds.as_str(),
+            cfg.cluster.quant.as_str(),
+            cfg.cluster.workers,
+            cfg.seed,
+        );
         let doc = json::obj(vec![
             ("bench", json::s("serve_bench")),
             ("workload", json::s(format!("{name} {dataset_records} records"))),
+            ("config_hash", json::s(hash)),
             ("serve", json::Value::Object(obj)),
         ]);
         std::fs::write(&json_path, json::to_string(&doc))
@@ -545,6 +565,7 @@ fn cmd_score(args: &Args) -> CliResult<()> {
         .ok_or("`bigfcm score` needs --out DIR for the membership store")?
         .to_string();
     let top_k: usize = args.get_or("topk", &cfg.serve.top_k.to_string()).parse()?;
+    let quant = QuantMode::parse(&args.get_or("quant", cfg.cluster.quant.as_str()))?;
     let backend = backend_of(&cfg)?;
     let store = match args.get("store") {
         Some(dir) => Arc::new(BlockStore::open_disk(
@@ -570,12 +591,14 @@ fn cmd_score(args: &Args) -> CliResult<()> {
         None => bail!("`bigfcm score` needs --model PATH (save one with run/session --save-model)"),
     };
     println!(
-        "score: store={} ({} blocks, {} records x {} features) model C={} top_k={top_k} backend={}",
+        "score: store={} ({} blocks, {} records x {} features) model C={} top_k={top_k} quant={} \
+         backend={}",
         store.name(),
         store.num_blocks(),
         store.total_rows(),
         store.cols(),
         bundle.clusters(),
+        quant.as_str(),
         backend.name(),
     );
     let mut engine = Engine::new(EngineOptions::from_cluster(&cfg.cluster), cfg.overhead.clone());
@@ -585,6 +608,7 @@ fn cmd_score(args: &Args) -> CliResult<()> {
         bundle,
         backend,
         top_k,
+        quant,
         std::path::PathBuf::from(&out_dir),
     )?;
     println!(
@@ -605,6 +629,14 @@ fn cmd_score(args: &Args) -> CliResult<()> {
         human_duration(outcome.stats.wall),
         human_duration(std::time::Duration::from_secs_f64(engine.clock().total_s())),
     );
+    if quant.enabled() {
+        println!(
+            "quant pre-pass: {} rows via candidates, sidecar {} B, build {:.3}s",
+            outcome.stats.records_pruned_quant,
+            outcome.stats.quant_sidecar_bytes,
+            outcome.stats.quant_build_s,
+        );
+    }
     Ok(())
 }
 
@@ -681,15 +713,16 @@ fn main() -> CliResult<()> {
                  \u{20}           --save-model PATH)\n\
                  baseline    run a Mahout-style baseline (--algo km|fkm ...)\n\
                  session     iteration-resident convergence loop (--iters N\n\
-                 \u{20}           --bounds dmin|elkan|hamerly|off --algo fcm|kmeans\n\
-                 \u{20}           --variant fast|classic --slab-mib N --spill-dir PATH\n\
-                 \u{20}           --tolerance T --save-model PATH) with per-iteration counters\n\
+                 \u{20}           --bounds dmin|elkan|hamerly|off --quant off|i8\n\
+                 \u{20}           --algo fcm|kmeans --variant fast|classic --slab-mib N\n\
+                 \u{20}           --spill-dir PATH --tolerance T --save-model PATH)\n\
+                 \u{20}           with per-iteration counters\n\
                  serve-bench closed-loop load harness for the online scoring service\n\
                  \u{20}           (--clients N --records R [--model PATH] [--max-batch B]\n\
                  \u{20}           [--linger-us U] [--json PATH|none] [--require-coalescing])\n\
                  score       bulk ScoreJob: label a store with top-k memberships\n\
                  \u{20}           (--model PATH --out DIR [--store DIR | --dataset D --records N]\n\
-                 \u{20}           [--topk K])\n\
+                 \u{20}           [--topk K] [--quant off|i8])\n\
                  bench       regenerate paper tables (--exp table2..table8|ablations|all [--full])\n\
                  gen         write a synthetic dataset to CSV (--dataset --records --out)\n\
                  info        show config + artifact registry [--model PATH]\n\

@@ -136,6 +136,16 @@ pub struct JobStats {
     /// slab instead of a full distance pass. Filled by the session layer
     /// (`crate::fcm::loops::run_fcm_session`); 0 for ordinary jobs.
     pub records_pruned: u64,
+    /// Subset of `records_pruned` the primary bound test abandoned and the
+    /// certified i8 pre-pass rescued (session runs with `cluster.quant`
+    /// only; 0 otherwise).
+    pub records_pruned_quant: u64,
+    /// Resident quant-sidecar bytes summed over the blocks this job's
+    /// pruned passes touched (session runs with `cluster.quant` only).
+    pub quant_sidecar_bytes: u64,
+    /// Real seconds spent building quant sidecars during this job (lazy
+    /// one-time cost per block; amortises to 0 on warm iterations).
+    pub quant_build_s: f64,
     /// Bytes resident in the session's sticky state slab after this job
     /// (session runs only).
     pub slab_bytes: u64,
@@ -485,6 +495,9 @@ impl Engine {
             prefetch_hits: self.block_cache.prefetch_hits() - prefetch_hits_before,
             prefetch_wasted_bytes,
             records_pruned: 0,
+            records_pruned_quant: 0,
+            quant_sidecar_bytes: 0,
+            quant_build_s: 0.0,
             slab_bytes: 0,
             slab_evictions: 0,
             slab_spilled_bytes: 0,

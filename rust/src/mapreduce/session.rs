@@ -197,6 +197,9 @@ pub struct StateSlab<S> {
     dir_ready: std::sync::atomic::AtomicBool,
     evictions: AtomicU64,
     records_pruned: AtomicU64,
+    records_pruned_quant: AtomicU64,
+    quant_sidecar_bytes: AtomicU64,
+    quant_build_ns: AtomicU64,
     spills: AtomicU64,
     spilled_bytes: AtomicU64,
     reloads: AtomicU64,
@@ -225,6 +228,9 @@ impl<S: SlabState + Default> StateSlab<S> {
             dir_ready: std::sync::atomic::AtomicBool::new(false),
             evictions: AtomicU64::new(0),
             records_pruned: AtomicU64::new(0),
+            records_pruned_quant: AtomicU64::new(0),
+            quant_sidecar_bytes: AtomicU64::new(0),
+            quant_build_ns: AtomicU64::new(0),
             spills: AtomicU64::new(0),
             spilled_bytes: AtomicU64::new(0),
             reloads: AtomicU64::new(0),
@@ -560,6 +566,41 @@ impl<S: SlabState + Default> StateSlab<S> {
     pub fn take_records_pruned(&self) -> u64 {
         self.records_pruned.swap(0, Ordering::Relaxed)
     }
+
+    /// Add to the quant-rescued subset of the pruned counter (records the
+    /// primary bound test abandoned and the certified i8 interval replayed).
+    pub fn add_records_pruned_quant(&self, n: u64) {
+        self.records_pruned_quant.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Drain the quant-rescued counter (per-iteration, like
+    /// [`Self::take_records_pruned`]).
+    pub fn take_records_pruned_quant(&self) -> u64 {
+        self.records_pruned_quant.swap(0, Ordering::Relaxed)
+    }
+
+    /// Add one pass's resident quant-sidecar footprint. Summed across the
+    /// blocks of one iteration this is the iteration's sidecar gauge; the
+    /// session loop drains it every iteration, so it never double-counts
+    /// across iterations.
+    pub fn add_quant_sidecar_bytes(&self, n: u64) {
+        self.quant_sidecar_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Drain the per-iteration sidecar-bytes gauge.
+    pub fn take_quant_sidecar_bytes(&self) -> u64 {
+        self.quant_sidecar_bytes.swap(0, Ordering::Relaxed)
+    }
+
+    /// Add time spent building quant sidecars (one-time per block).
+    pub fn add_quant_build_ns(&self, n: u64) {
+        self.quant_build_ns.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Drain the sidecar build-time counter (per-iteration).
+    pub fn take_quant_build_ns(&self) -> u64 {
+        self.quant_build_ns.swap(0, Ordering::Relaxed)
+    }
 }
 
 impl<S> Drop for StateSlab<S> {
@@ -857,6 +898,17 @@ mod tests {
         slab.add_records_pruned(7);
         assert_eq!(slab.take_records_pruned(), 12);
         assert_eq!(slab.take_records_pruned(), 0);
+        // The quant-side counters drain independently of the primary one.
+        slab.add_records_pruned_quant(3);
+        slab.add_quant_sidecar_bytes(1024);
+        slab.add_quant_build_ns(2_000_000);
+        assert_eq!(slab.take_records_pruned(), 0);
+        assert_eq!(slab.take_records_pruned_quant(), 3);
+        assert_eq!(slab.take_records_pruned_quant(), 0);
+        assert_eq!(slab.take_quant_sidecar_bytes(), 1024);
+        assert_eq!(slab.take_quant_sidecar_bytes(), 0);
+        assert_eq!(slab.take_quant_build_ns(), 2_000_000);
+        assert_eq!(slab.take_quant_build_ns(), 0);
     }
 
     #[test]

@@ -27,7 +27,9 @@ use std::sync::{Arc, Mutex};
 
 use crate::data::Matrix;
 use crate::error::{Error, Result};
-use crate::fcm::{BlockBounds, BoundConfig, BoundRows, Kernel, KernelBackend, NativeBackend, Partials};
+use crate::fcm::{
+    BlockBounds, BoundConfig, BoundRows, Kernel, KernelBackend, NativeBackend, Partials, PruneStats,
+};
 
 /// Graph families in the artifact matrix.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -224,9 +226,9 @@ impl KernelBackend for PjrtRuntime {
         m: f64,
         state: &mut BlockBounds,
         _cfg: &BoundConfig,
-    ) -> Result<(Partials, usize)> {
+    ) -> Result<(Partials, PruneStats)> {
         state.reset();
-        Ok((self.exact_partials(kernel, x, v, w, m)?, 0))
+        Ok((self.exact_partials(kernel, x, v, w, m)?, PruneStats::default()))
     }
 
     fn name(&self) -> &'static str {
@@ -433,7 +435,7 @@ impl KernelBackend for ResolvedBackend {
         m: f64,
         state: &mut BlockBounds,
         cfg: &BoundConfig,
-    ) -> Result<(Partials, usize)> {
+    ) -> Result<(Partials, PruneStats)> {
         self.pick(graph_of(kernel), x.cols(), v.rows())
             .pruned_partials(kernel, x, v, w, m, state, cfg)
     }

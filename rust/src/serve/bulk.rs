@@ -24,11 +24,14 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::data::Matrix;
 use crate::error::{Error, Result};
-use crate::fcm::KernelBackend;
+use crate::fcm::backend::membership_row_from_d2;
+use crate::fcm::native::DIST_EPS;
+use crate::fcm::{Kernel, KernelBackend, QuantMode, QuantSidecar};
 use crate::hdfs::{BlockStore, BlockStoreWriter};
 use crate::mapreduce::{DistributedCache, Engine, JobStats, MapReduceJob, TaskCtx};
 use crate::serve::bundle::ModelBundle;
@@ -79,6 +82,15 @@ struct BulkScoreJob {
     bundle: Arc<ModelBundle>,
     backend: Arc<dyn KernelBackend>,
     k: usize,
+    /// Quantized candidate pre-pass (`--quant i8`): approximate i8
+    /// distances rank the centers per record, exact f32 math runs only
+    /// for the `2k` nearest candidates (slack = k); the losers keep their
+    /// approximate distance in the membership denominator, where their
+    /// mass is negligible by construction.
+    quant: QuantMode,
+    rows_quant: AtomicU64,
+    quant_sidecar_bytes: AtomicU64,
+    quant_build_ns: AtomicU64,
     reorder: Mutex<Reorder>,
 }
 
@@ -100,6 +112,64 @@ impl BulkScoreJob {
         }
         Ok(())
     }
+
+    /// Whether the candidate pre-pass can beat full scoring for this
+    /// model: with `2k ≥ C` every center would be a candidate anyway.
+    fn quant_applicable(&self) -> bool {
+        self.quant.enabled() && 2 * self.k < self.bundle.clusters()
+    }
+
+    /// Score one (already normalized) block through the quantized
+    /// candidate pre-pass: a transient i8 sidecar ranks every center by
+    /// approximate distance, the `2k` nearest get exact f32 distances,
+    /// and the membership row is computed over the mixed distance vector
+    /// (K-Means rows are the one-hot argmin, which exact candidates
+    /// dominate). The sidecar lives only for this block — bulk scoring
+    /// streams each block once, so there is nothing to amortise across
+    /// iterations like the session slab does.
+    fn score_quant(&self, x: &Matrix, kernel: Kernel, u: &mut Matrix) {
+        let v = &self.bundle.centers;
+        let c = v.rows();
+        let t0 = std::time::Instant::now();
+        let sidecar = QuantSidecar::build(x);
+        self.quant_build_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.quant_sidecar_bytes.fetch_add(sidecar.bytes(), Ordering::Relaxed);
+        let qc = sidecar.prep_centers(v);
+        let keep = 2 * self.k;
+        let p = 1.0 / (self.bundle.m - 1.0);
+        let m2 = self.bundle.m == 2.0;
+        let mut d2 = vec![0.0f64; c];
+        let mut inv = vec![0.0f64; c];
+        let mut order: Vec<usize> = Vec::with_capacity(c);
+        for i in 0..x.rows() {
+            sidecar.row_approx(i, &qc, &mut d2);
+            order.clear();
+            order.extend(0..c);
+            order.sort_unstable_by(|&a, &b| {
+                d2[a].partial_cmp(&d2[b]).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            for &j in order.iter().take(keep) {
+                d2[j] = x.row_dist2(i, v.row(j));
+            }
+            for dv in d2.iter_mut() {
+                *dv = dv.max(DIST_EPS);
+            }
+            if kernel.is_kmeans() {
+                let mut best = 0usize;
+                for j in 1..c {
+                    if d2[j] < d2[best] {
+                        best = j;
+                    }
+                }
+                let urow = u.row_mut(i);
+                urow.fill(0.0);
+                urow[best] = 1.0;
+            } else {
+                membership_row_from_d2(&d2, p, m2, &mut inv, u.row_mut(i));
+            }
+        }
+        self.rows_quant.fetch_add(x.rows() as u64, Ordering::Relaxed);
+    }
 }
 
 impl MapReduceJob for BulkScoreJob {
@@ -114,12 +184,16 @@ impl MapReduceJob for BulkScoreJob {
         // (the `--save-model` default) score the cached block in place —
         // on the multi-GiB stores this job exists for, an unconditional
         // clone would be gigabytes of pure memcpy.
-        if self.bundle.scaler.is_some() {
+        let normalized = self.bundle.scaler.is_some().then(|| {
             let mut x = block.clone();
             self.bundle.normalize_block(&mut x);
-            self.backend.score_chunk(kernel, &x, &self.bundle.centers, self.bundle.m, &mut u)?;
+            x
+        });
+        let x = normalized.as_ref().unwrap_or(block);
+        if self.quant_applicable() {
+            self.score_quant(x, kernel, &mut u);
         } else {
-            self.backend.score_chunk(kernel, block, &self.bundle.centers, self.bundle.m, &mut u)?;
+            self.backend.score_chunk(kernel, x, &self.bundle.centers, self.bundle.m, &mut u)?;
         }
         let sparse = top_k_rows(&u, self.k);
         // Column 1 of every sparse row is the top-1 membership.
@@ -201,12 +275,17 @@ pub fn dense_from_top_k(sparse: &[f32], c: usize) -> Vec<f32> {
 /// membership rows to a new block store under `out_dir` (see the module
 /// docs). The output store's modelled write cost is charged to the
 /// engine's clock at the HDFS rate, mirroring the input-scan charges.
+/// With `quant` on (and `2·top_k < C`) each block goes through the
+/// quantized candidate pre-pass instead of a full `score_chunk`; the
+/// returned stats carry `records_pruned_quant` (rows scored through the
+/// pre-pass), `quant_sidecar_bytes` and `quant_build_s`.
 pub fn run_score_job(
     engine: &mut Engine,
     store: &Arc<BlockStore>,
     bundle: Arc<ModelBundle>,
     backend: Arc<dyn KernelBackend>,
     top_k: usize,
+    quant: QuantMode,
     out_dir: PathBuf,
 ) -> Result<ScoreJobOutcome> {
     bundle.validate()?;
@@ -228,10 +307,17 @@ pub fn run_score_job(
         bundle,
         backend,
         k,
+        quant,
+        rows_quant: AtomicU64::new(0),
+        quant_sidecar_bytes: AtomicU64::new(0),
+        quant_build_ns: AtomicU64::new(0),
         reorder: Mutex::new(Reorder { writer: Some(writer), next: 0, pending: BTreeMap::new() }),
     });
-    let (totals, stats) =
+    let (totals, mut stats) =
         engine.run_job(Arc::clone(&job), store, Arc::new(DistributedCache::new()))?;
+    stats.records_pruned_quant = job.rows_quant.load(Ordering::Relaxed);
+    stats.quant_sidecar_bytes = job.quant_sidecar_bytes.load(Ordering::Relaxed);
+    stats.quant_build_s = job.quant_build_ns.load(Ordering::Relaxed) as f64 * 1e-9;
     let mut guard = job.reorder.lock().expect("score reorder poisoned");
     let st = &mut *guard;
     if !st.pending.is_empty() || st.next != store.num_blocks() {

@@ -179,7 +179,7 @@ fn unsupported_shape_error_is_actionable() {
 /// bound-emitting pass must let the portable pruning protocol prune.
 #[test]
 fn shim_backend_agrees_with_native_and_prunes() {
-    use bigfcm::fcm::{BlockBounds, BoundConfig, BoundModel, Kernel};
+    use bigfcm::fcm::{BlockBounds, BoundConfig, BoundModel, Kernel, QuantMode};
     let shim = PjrtShimBackend::new(4096);
     // 5000 rows → one full 4096 chunk + one padded 904-row chunk.
     let data = blobs(5000, 18, 6, 0.8, 3);
@@ -197,17 +197,22 @@ fn shim_backend_agrees_with_native_and_prunes() {
     }
     // Pruning survives the backend swap: same centers twice → the whole
     // block replays from the shim-refreshed bounds.
-    let cfg = BoundConfig { model: BoundModel::Elkan, tolerance: 1e-2, refresh_every: 8 };
+    let cfg = BoundConfig {
+        model: BoundModel::Elkan,
+        tolerance: 1e-2,
+        refresh_every: 8,
+        quant: QuantMode::Off,
+    };
     let mut state = BlockBounds::default();
     let uniform = vec![1.0f32; 5000];
     let (_, p0) = shim
         .pruned_partials(Kernel::FcmFast, &data.features, &v, &uniform, 2.0, &mut state, &cfg)
         .unwrap();
-    assert_eq!(p0, 0, "first shim pass refreshes");
+    assert_eq!(p0.pruned, 0, "first shim pass refreshes");
     let (_, p1) = shim
         .pruned_partials(Kernel::FcmFast, &data.features, &v, &uniform, 2.0, &mut state, &cfg)
         .unwrap();
-    assert_eq!(p1, 5000, "unmoved centers must whole-block prune on the shim");
+    assert_eq!(p1.pruned, 5000, "unmoved centers must whole-block prune on the shim");
 }
 
 /// The runtime is shareable across threads (handle to the device thread).

@@ -13,7 +13,7 @@ use bigfcm::data::normalize::Scaler;
 use bigfcm::data::synth::blobs;
 use bigfcm::data::Matrix;
 use bigfcm::fcm::native::memberships;
-use bigfcm::fcm::{KernelBackend, NativeBackend, SessionAlgo, Variant};
+use bigfcm::fcm::{KernelBackend, NativeBackend, QuantMode, SessionAlgo, Variant};
 use bigfcm::hdfs::BlockStore;
 use bigfcm::mapreduce::{Engine, EngineOptions};
 use bigfcm::prng::Pcg;
@@ -188,6 +188,7 @@ fn bulk_score_job_matches_single_shot_on_both_backends() {
             Arc::new(bundle.clone()),
             backend,
             4, // k = C: the sparse rows carry the full distribution
+            QuantMode::Off,
             dir.clone(),
         )
         .unwrap();
@@ -226,6 +227,7 @@ fn bulk_top_k_rows_are_the_descending_prefix_of_the_dense_row() {
         Arc::new(bundle),
         Arc::new(NativeBackend),
         2,
+        QuantMode::Off,
         dir.clone(),
     )
     .unwrap();
@@ -244,6 +246,69 @@ fn bulk_top_k_rows_are_the_descending_prefix_of_the_dense_row() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The quantized candidate pre-pass: with C=8 centers and k=2, only the 4
+/// approximately-nearest centers get exact math per record, yet the kept
+/// top-k entries must stay close to the exact run — the skipped centers
+/// only ever contribute far-tail membership mass.
+#[test]
+fn bulk_score_job_quant_candidates_match_exact_topk() {
+    let (bundle, raw) = fixture(6_700, 1_024, 4, 8);
+    let store = Arc::new(BlockStore::in_memory("raw", &raw, 128, 4).unwrap());
+    let bundle = Arc::new(bundle);
+    let exact_dir = tmp_dir("quant_exact");
+    let mut exact_engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+    let exact = run_score_job(
+        &mut exact_engine,
+        &store,
+        Arc::clone(&bundle),
+        Arc::new(NativeBackend),
+        2,
+        QuantMode::Off,
+        exact_dir.clone(),
+    )
+    .unwrap();
+    assert_eq!(exact.stats.records_pruned_quant, 0);
+    assert_eq!(exact.stats.quant_sidecar_bytes, 0);
+    let quant_dir = tmp_dir("quant_i8");
+    let mut quant_engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
+    let quant = run_score_job(
+        &mut quant_engine,
+        &store,
+        Arc::clone(&bundle),
+        Arc::new(NativeBackend),
+        2,
+        QuantMode::I8,
+        quant_dir.clone(),
+    )
+    .unwrap();
+    assert_eq!(quant.stats.records_pruned_quant, 1_024, "every row goes through the pre-pass");
+    assert!(quant.stats.quant_sidecar_bytes > 0);
+    assert!(quant.stats.quant_build_s > 0.0);
+    assert_eq!(quant.store.num_blocks(), exact.store.num_blocks());
+    let mut top1_agree = 0usize;
+    for b in 0..exact.store.num_blocks() {
+        let (eb, qb) = (exact.store.read_block(b).unwrap(), quant.store.read_block(b).unwrap());
+        for r in 0..eb.rows() {
+            let (er, qr) = (eb.row(r), qb.row(r));
+            top1_agree += (er[0] == qr[0]) as usize;
+            // Kept memberships differ only by the quantized far-tail of
+            // the denominator.
+            assert!(
+                (er[1] - qr[1]).abs() < 1e-2,
+                "block {b} row {r}: top-1 membership {} vs exact {}",
+                qr[1],
+                er[1]
+            );
+        }
+    }
+    assert!(
+        top1_agree as f64 >= 0.99 * 1_024.0,
+        "quant candidate selection flipped too many top-1 centers ({top1_agree}/1024)"
+    );
+    std::fs::remove_dir_all(&exact_dir).ok();
+    std::fs::remove_dir_all(&quant_dir).ok();
+}
+
 #[test]
 fn bulk_score_job_survives_fault_injection_and_reopens() {
     let (bundle, raw) = fixture(6_500, 1_536, 4, 3);
@@ -257,6 +322,7 @@ fn bulk_score_job_survives_fault_injection_and_reopens() {
         Arc::clone(&bundle),
         Arc::new(NativeBackend),
         3,
+        QuantMode::Off,
         clean_dir.clone(),
     )
     .unwrap();
@@ -269,6 +335,7 @@ fn bulk_score_job_survives_fault_injection_and_reopens() {
         Arc::clone(&bundle),
         Arc::new(NativeBackend),
         3,
+        QuantMode::Off,
         faulty_dir.clone(),
     )
     .unwrap();

@@ -17,7 +17,7 @@ use bigfcm::fcm::native::{
     fcm_partials_native, fcm_partials_scalar, kmeans_partials_native, kmeans_partials_scalar,
     memberships,
 };
-use bigfcm::fcm::{BlockBounds, BoundConfig, BoundModel, Kernel};
+use bigfcm::fcm::{BlockBounds, BoundConfig, BoundModel, Kernel, QuantMode};
 use bigfcm::fcm::seeding::random_records;
 use bigfcm::fcm::{max_center_shift2, KernelBackend, NativeBackend};
 use bigfcm::hdfs::BlockStore;
@@ -727,7 +727,12 @@ fn prop_elkan_vs_dmin_vs_exact_partials_equivalence() {
                 let params = FcmParams { epsilon: 1e-8, m, ..Default::default() };
                 let settled = run_fcm(&NativeBackend, x, &w, v0, &params).unwrap().centers;
                 let tol = 1e-2;
-                let cfg = |model| BoundConfig { model, tolerance: tol, refresh_every: 16 };
+                let cfg = |model| BoundConfig {
+                    model,
+                    tolerance: tol,
+                    refresh_every: 16,
+                    quant: QuantMode::Off,
+                };
                 let mut st_dmin = BlockBounds::default();
                 let mut st_elkan = BlockBounds::default();
                 let (mut dmin_first, mut elkan_first) = (0usize, 0usize);
@@ -737,9 +742,11 @@ fn prop_elkan_vs_dmin_vs_exact_partials_equivalence() {
                     let (pd, nd) = NativeBackend
                         .pruned_partials(kernel, x, &v, &w, m, &mut st_dmin, &cfg(BoundModel::DMin))
                         .unwrap();
+                    let nd = nd.pruned;
                     let (pe, ne) = NativeBackend
                         .pruned_partials(kernel, x, &v, &w, m, &mut st_elkan, &cfg(BoundModel::Elkan))
                         .unwrap();
+                    let ne = ne.pruned;
                     let exact = NativeBackend.exact_partials(kernel, x, &v, &w, m).unwrap();
                     for arm in [&pd, &pe] {
                         for (a, b) in arm.w_acc.iter().zip(&exact.w_acc) {
@@ -812,7 +819,12 @@ fn prop_hamerly_matches_exact_and_contains_elkan() {
                 let params = FcmParams { epsilon: 1e-8, m, ..Default::default() };
                 let settled = run_fcm(&NativeBackend, x, &w, v0, &params).unwrap().centers;
                 let tol = 1e-2;
-                let cfg = |model| BoundConfig { model, tolerance: tol, refresh_every: 16 };
+                let cfg = |model| BoundConfig {
+                    model,
+                    tolerance: tol,
+                    refresh_every: 16,
+                    quant: QuantMode::Off,
+                };
                 let mut st_elkan = BlockBounds::default();
                 let mut st_ham = BlockBounds::default();
                 let (mut elkan_total, mut ham_total) = (0usize, 0usize);
@@ -821,6 +833,7 @@ fn prop_hamerly_matches_exact_and_contains_elkan() {
                     let (_, ne) = NativeBackend
                         .pruned_partials(kernel, x, &v, &w, m, &mut st_elkan, &cfg(BoundModel::Elkan))
                         .unwrap();
+                    let ne = ne.pruned;
                     let (ph, nh) = NativeBackend
                         .pruned_partials(
                             kernel,
@@ -832,6 +845,7 @@ fn prop_hamerly_matches_exact_and_contains_elkan() {
                             &cfg(BoundModel::Hamerly),
                         )
                         .unwrap();
+                    let nh = nh.pruned;
                     assert!(
                         nh >= ne,
                         "case {case} {kernel:?} m={m} t={t}: hamerly ({nh}) under elkan ({ne})"
@@ -891,7 +905,8 @@ fn prop_spill_roundtrip_preserves_pruning_bitwise() {
         let x = rand_matrix(&mut rng, n, d, 2.0);
         let mut v = rand_matrix(&mut rng, c, d, 2.0);
         let w = rand_weights(&mut rng, n);
-        let cfg = BoundConfig { model, tolerance: 1e-2, refresh_every: 8 };
+        let quant = if rng.next_index(2) == 0 { QuantMode::Off } else { QuantMode::I8 };
+        let cfg = BoundConfig { model, tolerance: 1e-2, refresh_every: 8, quant };
         let mut state = BlockBounds::default();
         for _ in 0..2 {
             NativeBackend.pruned_partials(kernel, &x, &v, &w, 2.0, &mut state, &cfg).unwrap();
@@ -903,6 +918,19 @@ fn prop_spill_roundtrip_preserves_pruning_bitwise() {
         let mut restored = BlockBounds::unspill(&img)
             .unwrap_or_else(|| panic!("case {case}: image failed to decode"));
         assert_eq!(img, restored.spill().unwrap(), "case {case}: re-spill differs");
+        // The quant sidecar travels in the image: same byte charge back,
+        // and a non-zero one whenever the pass ran quantized.
+        assert_eq!(
+            state.quant_sidecar_bytes(),
+            restored.quant_sidecar_bytes(),
+            "case {case}: sidecar bytes diverged across the spill"
+        );
+        if quant.enabled() {
+            assert!(
+                restored.quant_sidecar_bytes() > 0,
+                "case {case}: quantized state reloaded without its sidecar"
+            );
+        }
         let (pa, na) =
             NativeBackend.pruned_partials(kernel, &x, &v, &w, 2.0, &mut state, &cfg).unwrap();
         let (pb, nb) = NativeBackend
@@ -912,5 +940,153 @@ fn prop_spill_roundtrip_preserves_pruning_bitwise() {
         assert_eq!(pa.w_acc, pb.w_acc, "case {case}");
         assert_eq!(pa.v_num.as_slice(), pb.v_num.as_slice(), "case {case}");
         assert_eq!(pa.objective, pb.objective, "case {case}");
+    }
+}
+
+/// The quant certificate is a true error bound: over random record and
+/// center shapes, signs and magnitudes — including centers drawn wider
+/// than the block's coded range, where the i16 center codes clamp — the
+/// certified radius brackets the exact squared distance for every
+/// (record, center) pair: `|d̃² − d²| ≤ err`.
+#[test]
+fn prop_quant_certificate_is_true_upper_bound() {
+    use bigfcm::fcm::QuantSidecar;
+    for case in 0..CASES {
+        let mut rng = Pcg::new(95_000 + case);
+        let n = 16 + rng.next_index(120);
+        let d = 1 + rng.next_index(12);
+        let c = 1 + rng.next_index(6);
+        let scale = [0.5, 2.0, 40.0][rng.next_index(3)];
+        let x = rand_matrix(&mut rng, n, d, scale);
+        // 1.5× wider than the records: some center coordinates land
+        // outside the sidecar's per-column range, exercising the clamped
+        // residual path of the certificate.
+        let v = rand_matrix(&mut rng, c, d, scale * 1.5);
+        let sidecar = QuantSidecar::build(&x);
+        let qc = sidecar.prep_centers(&v);
+        let mut d2 = vec![0.0f64; c];
+        let mut err = vec![0.0f64; c];
+        for k in 0..n {
+            sidecar.row_distances(k, &qc, &mut d2, &mut err);
+            for j in 0..c {
+                let exact = x.row_dist2(k, v.row(j));
+                assert!(
+                    (d2[j] - exact).abs() <= err[j],
+                    "case {case} k={k} j={j}: |{} - {exact}| = {} > err {}",
+                    d2[j],
+                    (d2[j] - exact).abs(),
+                    err[j]
+                );
+            }
+        }
+    }
+}
+
+/// The quant second chance preserves the session twin's accuracy
+/// envelope where the shift bound structurally cannot: on a
+/// wander-and-return center schedule the memoryful δ accumulates path
+/// length (it overcharges trajectories that come back), eventually
+/// abandoning every record's own-center bound, while the memoryless
+/// certified i8 interval re-certifies them against the refresh-time
+/// bounds. The pass then stays fully pruned and its replayed partials
+/// match the exact pass within 1e-6 on every return-to-refresh step —
+/// Fast and fused Classic kernels, m = 2 and m ≠ 2.
+#[test]
+fn prop_quant_rescue_matches_exact_on_return_passes() {
+    for case in 0..4u64 {
+        for kernel in [Kernel::FcmFast, Kernel::FcmClassic] {
+            for m in [2.0, 1.7] {
+                let mut rng = Pcg::new(96_000 + case);
+                let (n, d, c) = (240usize, 4usize, 3usize);
+                // Ring construction: centers ≥ 4 apart (center j offset on
+                // axis j), each record on a ring of radius [0.8, 1.2]
+                // around its own center. Far centers keep passing the
+                // primary shift test for the whole schedule (δ stays well
+                // under tol·lb_far); only the own-center bound ever needs
+                // the quant rescue, and its certified interval has ample
+                // slack inside the ±tol band at this data range.
+                let mut v = Matrix::zeros(c, d);
+                for j in 0..c {
+                    v.row_mut(j)[j] = 4.0;
+                }
+                let mut x = Matrix::zeros(n, d);
+                for i in 0..n {
+                    let j = i % c;
+                    let r = 0.8 + 0.4 * rng.next_f32() as f64;
+                    let mut u = [0.0f64; 4];
+                    let mut norm = 0.0f64;
+                    for ut in u.iter_mut() {
+                        *ut = rng.normal();
+                        norm += *ut * *ut;
+                    }
+                    let norm = norm.sqrt().max(1e-9);
+                    for t in 0..d {
+                        x.row_mut(i)[t] = v.row(j)[t] + (u[t] / norm * r) as f32;
+                    }
+                }
+                let w = rand_weights(&mut rng, n);
+                let cfg = BoundConfig {
+                    model: BoundModel::Elkan,
+                    tolerance: 0.4,
+                    refresh_every: 64,
+                    quant: QuantMode::I8,
+                };
+                let mut st = BlockBounds::default();
+                // Refresh pass: builds the sidecar and caches exact bounds.
+                NativeBackend.pruned_partials(kernel, &x, &v, &w, m, &mut st, &cfg).unwrap();
+                let mut last_quant = 0usize;
+                for t in 1..=6u32 {
+                    // Wander out on odd steps, return on even ones. The
+                    // path length δ grows by 0.12 every step either way.
+                    let step = if t % 2 == 1 { 0.12f32 } else { -0.12f32 };
+                    for j in 0..c {
+                        v.row_mut(j)[0] += step;
+                    }
+                    let (p, stats) = NativeBackend
+                        .pruned_partials(kernel, &x, &v, &w, m, &mut st, &cfg)
+                        .unwrap();
+                    assert_eq!(
+                        stats.pruned, n,
+                        "case {case} {kernel:?} m={m} t={t}: a record fell through to the \
+                         exact gather (quant rescued {})",
+                        stats.quant
+                    );
+                    last_quant = stats.quant;
+                    if t % 2 == 0 {
+                        // Centers are back at the refresh positions: the
+                        // replayed partials must match the exact pass to
+                        // floating-point noise, not just to tolerance.
+                        let exact =
+                            NativeBackend.exact_partials(kernel, &x, &v, &w, m).unwrap();
+                        for (a, b) in p.w_acc.iter().zip(&exact.w_acc) {
+                            let rel = (a - b).abs() / b.abs().max(1e-9);
+                            assert!(
+                                rel < 1e-6,
+                                "case {case} {kernel:?} m={m} t={t}: w_acc drift {rel}"
+                            );
+                        }
+                        for (a, b) in p.v_num.as_slice().iter().zip(exact.v_num.as_slice()) {
+                            assert!(
+                                (a - b).abs() < 1e-6 + 1e-4 * b.abs(),
+                                "case {case} {kernel:?} m={m} t={t}: v_num {a} vs {b}"
+                            );
+                        }
+                        let rel = (p.objective - exact.objective).abs()
+                            / exact.objective.abs().max(1e-9);
+                        assert!(
+                            rel < 1e-4,
+                            "case {case} {kernel:?} m={m} t={t}: objective drift {rel}"
+                        );
+                    }
+                }
+                // By the end δ ≈ 0.72 > tol·lb_own everywhere: every
+                // record was abandoned by the primary test and owes its
+                // pruning to the certified second chance.
+                assert_eq!(
+                    last_quant, n,
+                    "case {case} {kernel:?} m={m}: final pass should be all-quant-rescued"
+                );
+            }
+        }
     }
 }

@@ -49,6 +49,20 @@ import sys
 base_path, cur_path, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
 base_doc = json.load(open(base_path))
 cur_doc = json.load(open(cur_path))
+
+# Apples-to-oranges guard: both files carry a config/params fingerprint
+# (algo, bounds, quant, workers, seed). Refuse the diff when they disagree
+# — numbers from different configs are not a perf trajectory. Fail-soft:
+# the report is skipped, the build is not failed. Baselines predating the
+# hash (no config_hash key) diff as before.
+bh, ch = base_doc.get("config_hash"), cur_doc.get("config_hash")
+if bh and ch and bh != ch:
+    print()
+    print(f"refusing diff: config_hash mismatch (baseline {bh} vs current {ch})")
+    print("the bench config changed — refresh the baseline before tracking deltas:")
+    print(f"    cp rust/{cur_path} rust/{base_path} && git add rust/{base_path}")
+    sys.exit(0)
+
 base = base_doc["results"]
 cur = cur_doc["results"]
 
@@ -91,6 +105,11 @@ if cur_sess:
         "records_pruned",
         "records_pruned_dmin",
         "records_pruned_elkan",
+        "records_pruned_elkan_quant",
+        "records_pruned_quant",
+        "quant_sidecar_bytes",
+        "quant_build_s",
+        "quant_modelled_s",
         "slab_spilled_bytes",
         "slab_reloads",
         "combine_depth",
@@ -113,6 +132,12 @@ if cur_sess:
     pd, pe = cur_sess.get("records_pruned_dmin"), cur_sess.get("records_pruned_elkan")
     if pd is not None and pe is not None and pe < pd:
         print(f"note: elkan pruned fewer records than dmin ({pe} < {pd}) — bound regression; investigate")
+    # The quant second chance only runs on records plain elkan abandons,
+    # so elkan+i8 pruning below plain elkan is structurally impossible —
+    # if it shows up, the certified pre-pass regressed.
+    pq = cur_sess.get("records_pruned_elkan_quant")
+    if pq is not None and pe is not None and pq < pe:
+        print(f"note: elkan+quant pruned fewer records than elkan ({pq} < {pe}) — quant pre-pass regression; investigate")
 EOF
 
 # ---------------------------------------------------------------------------
@@ -154,8 +179,20 @@ import json
 import sys
 
 base_path, cur_path, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
-base = json.load(open(base_path)).get("serve") or {}
-cur = json.load(open(cur_path)).get("serve") or {}
+base_doc = json.load(open(base_path))
+cur_doc = json.load(open(cur_path))
+
+# Same config-fingerprint refusal as the micro_hotpath diff above.
+bh, ch = base_doc.get("config_hash"), cur_doc.get("config_hash")
+if bh and ch and bh != ch:
+    print()
+    print(f"refusing serve diff: config_hash mismatch (baseline {bh} vs current {ch})")
+    print("the serve config changed — refresh the baseline before tracking deltas:")
+    print(f"    cp rust/{cur_path} rust/{base_path} && git add rust/{base_path}")
+    sys.exit(0)
+
+base = base_doc.get("serve") or {}
+cur = cur_doc.get("serve") or {}
 
 print()
 print("== serve-bench vs committed baseline ==")

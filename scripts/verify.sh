@@ -31,4 +31,21 @@ cargo run --release --bin bigfcm -- serve-bench \
     --clients 2 --records 200 --dataset-records 4096 --clusters 3 \
     --max-batch 32 --linger-us 2000 --json none --require-coalescing
 
+echo "== score smoke (bigfcm score --quant i8) =="
+# Bulk-scoring acceptance in miniature: train a tiny session model, then
+# label the store through the quantized candidate pre-pass (approximate
+# distances select candidates, exact math scores only those). Exercises
+# the sidecar build, the top-k gather and the JobStats quant counters
+# end-to-end on the release binary.
+SMOKE_DIR="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_DIR"' EXIT
+# C=6 with top-k 2 keeps 2k < C, so the candidate pre-pass actually
+# engages (it falls back to exact scoring when 2k >= C).
+cargo run --release --bin bigfcm -- session \
+    --dataset susy --records 4096 --clusters 6 --iters 5 \
+    --save-model "$SMOKE_DIR/smoke.bfm"
+cargo run --release --bin bigfcm -- score \
+    --dataset susy --records 4096 --topk 2 --quant i8 \
+    --model "$SMOKE_DIR/smoke.bfm" --out "$SMOKE_DIR/scored"
+
 echo "verify: OK"
