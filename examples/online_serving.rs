@@ -74,12 +74,13 @@ fn main() {
 
     // ---- Online service: concurrent clients, micro-batched scoring ----
     let service = Arc::new(
-        ScoreService::new(
-            reloaded.clone(),
-            Arc::clone(&backend),
-            ServeOptions { linger: std::time::Duration::from_millis(2), ..Default::default() },
-        )
-        .expect("score service"),
+        ScoreService::builder(reloaded.clone())
+            .options(ServeOptions {
+                linger: std::time::Duration::from_millis(2),
+                ..Default::default()
+            })
+            .spawn(Arc::clone(&backend))
+            .expect("score service"),
     );
     let raw = Arc::new(data.features.clone());
     let clients = 4usize;
@@ -107,6 +108,14 @@ fn main() {
     );
     assert!(stats.batch_fill > 1.0, "concurrent clients should coalesce");
 
+    // ---- Hot reload: swap the bundle without dropping the service -----
+    let before = service.generation();
+    let after = service.reload(reloaded.clone()).expect("hot reload");
+    assert_eq!(after, before + 1, "reload bumps the generation");
+    let stamped = service.score_stamped(data.features.row(0)).expect("post-reload score");
+    assert_eq!(stamped.generation, after, "responses carry the generation they scored under");
+    println!("hot reload: generation {before} -> {after}");
+
     // ---- Bulk ScoreJob: label the whole store -------------------------
     let raw_store = Arc::new(BlockStore::in_memory("blobs-raw", &data.features, 1_024, 4).unwrap());
     let out_dir = tmp.join("memberships");
@@ -116,6 +125,7 @@ fn main() {
         Arc::new(reloaded),
         backend,
         2,
+        bigfcm::config::QuantMode::Off,
         out_dir.clone(),
     )
     .expect("bulk score job");

@@ -39,6 +39,19 @@ impl BaselineAlgo {
     }
 }
 
+impl std::str::FromStr for BaselineAlgo {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "km" | "kmeans" => Ok(BaselineAlgo::KMeans),
+            "fkm" | "fuzzy" => Ok(BaselineAlgo::FuzzyKMeans),
+            other => Err(Error::InvalidArgument(format!(
+                "unknown baseline `{other}` (km|fkm)"
+            ))),
+        }
+    }
+}
+
 /// Result of a full baseline run.
 #[derive(Clone, Debug)]
 pub struct BaselineRun {

@@ -10,6 +10,7 @@ pub use parse::{parse_toml, TomlValue};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::str::FromStr;
 
 use crate::error::{Error, Result};
 
@@ -67,6 +68,13 @@ impl BoundModel {
     }
 }
 
+impl FromStr for BoundModel {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        BoundModel::parse(s)
+    }
+}
+
 /// Whether a session's pruned kernels run the quantized distance pre-pass
 /// before the exact f32 math (see `fcm::quant`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -103,6 +111,13 @@ impl QuantMode {
     /// compares against).
     pub fn enabled(&self) -> bool {
         !matches!(self, QuantMode::Off)
+    }
+}
+
+impl FromStr for QuantMode {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        QuantMode::parse(s)
     }
 }
 
@@ -191,11 +206,15 @@ pub struct ServeConfig {
     /// Memberships kept per record by the bulk ScoreJob's sparse output
     /// rows (clamped to the model's cluster count).
     pub top_k: usize,
+    /// Per-tenant admission quota: max requests one tenant may hold in the
+    /// service queue at once. Requests beyond it are rejected immediately
+    /// (`Error::QuotaExceeded`, counted in `ServeStats`). 0 = unlimited.
+    pub tenant_quota: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { max_batch: 64, pad_rows: 8, queue_cap: 1024, linger_us: 200, top_k: 3 }
+        Self { max_batch: 64, pad_rows: 8, queue_cap: 1024, linger_us: 200, top_k: 3, tenant_quota: 0 }
     }
 }
 
@@ -212,6 +231,9 @@ pub struct OverheadConfig {
     pub shuffle_s_per_mib: f64,
     /// Seconds per MiB read from / written to HDFS.
     pub hdfs_s_per_mib: f64,
+    /// Seconds per MiB moved over the serving front's wire (request +
+    /// response frames). Default ≈ 1 GbE effective throughput.
+    pub net_s_per_mib: f64,
     /// Multiplier translating our measured compute seconds onto the paper's
     /// (slower, JVM, 2016 Core i5) per-node compute speed.
     pub compute_scale: f64,
@@ -227,6 +249,7 @@ impl Default for OverheadConfig {
             task_launch_s: 1.2,
             shuffle_s_per_mib: 0.05,
             hdfs_s_per_mib: 0.05,
+            net_s_per_mib: 0.01,
             compute_scale: 8.0,
         }
     }
@@ -252,6 +275,13 @@ impl FlagPolicy {
             "wfcmpb" => Ok(FlagPolicy::ForceWfcmpb),
             other => Err(Error::Config(format!("unknown flag policy `{other}`"))),
         }
+    }
+}
+
+impl FromStr for FlagPolicy {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        FlagPolicy::parse(s)
     }
 }
 
@@ -330,6 +360,13 @@ impl Backend {
             "shim" => Ok(Backend::Shim),
             other => Err(Error::Config(format!("unknown backend `{other}`"))),
         }
+    }
+}
+
+impl FromStr for Backend {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Backend::parse(s)
     }
 }
 
@@ -425,10 +462,12 @@ impl Config {
             "serve.queue_cap" => self.serve.queue_cap = num!(usize),
             "serve.linger_us" => self.serve.linger_us = num!(u64),
             "serve.top_k" => self.serve.top_k = num!(usize),
+            "serve.tenant_quota" => self.serve.tenant_quota = num!(usize),
             "overhead.job_startup_s" => self.overhead.job_startup_s = num!(f64),
             "overhead.task_launch_s" => self.overhead.task_launch_s = num!(f64),
             "overhead.shuffle_s_per_mib" => self.overhead.shuffle_s_per_mib = num!(f64),
             "overhead.hdfs_s_per_mib" => self.overhead.hdfs_s_per_mib = num!(f64),
+            "overhead.net_s_per_mib" => self.overhead.net_s_per_mib = num!(f64),
             "overhead.compute_scale" => self.overhead.compute_scale = num!(f64),
             "fcm.clusters" => self.fcm.clusters = num!(usize),
             "fcm.fuzzifier" => self.fcm.fuzzifier = num!(f64),
@@ -505,6 +544,8 @@ mod tests {
         c.set_kv("serve.max_batch=16").unwrap();
         c.set_kv("serve.linger_us=500").unwrap();
         c.set_kv("serve.top_k=2").unwrap();
+        c.set_kv("serve.tenant_quota=32").unwrap();
+        c.set_kv("overhead.net_s_per_mib=0.02").unwrap();
         c.set_kv("fcm.epsilon=5e-3").unwrap();
         c.set_kv("fcm.driver_preclustering=false").unwrap();
         c.set_kv("runtime.backend=native").unwrap();
@@ -520,6 +561,8 @@ mod tests {
         assert_eq!(c.serve.max_batch, 16);
         assert_eq!(c.serve.linger_us, 500);
         assert_eq!(c.serve.top_k, 2);
+        assert_eq!(c.serve.tenant_quota, 32);
+        assert_eq!(c.overhead.net_s_per_mib, 0.02);
         assert_eq!(c.fcm.epsilon, 5e-3);
         assert!(!c.fcm.driver_preclustering);
         assert_eq!(c.backend, Backend::Native);
@@ -545,6 +588,16 @@ mod tests {
         }
         assert!(QuantMode::parse("f16").is_err());
         assert!(QuantMode::I8.enabled() && !QuantMode::Off.enabled());
+    }
+
+    #[test]
+    fn from_str_routes_through_parse() {
+        assert_eq!("hamerly".parse::<BoundModel>().unwrap(), BoundModel::Hamerly);
+        assert_eq!("i8".parse::<QuantMode>().unwrap(), QuantMode::I8);
+        assert_eq!("shim".parse::<Backend>().unwrap(), Backend::Shim);
+        assert_eq!("race".parse::<FlagPolicy>().unwrap(), FlagPolicy::Race);
+        assert!("nope".parse::<BoundModel>().is_err());
+        assert!("nope".parse::<Backend>().is_err());
     }
 
     #[test]

@@ -22,6 +22,14 @@ pub enum Error {
     Job(String),
     Clustering(String),
     Bundle(String),
+    /// The score service is draining: the request was admitted but the
+    /// service closed before a batch claimed it. Distinct from `Job` so
+    /// callers (and the registry's retire path) can tell an orderly
+    /// shutdown from a scoring failure.
+    ShuttingDown,
+    /// A tenant exceeded its admission quota; the request was rejected
+    /// without queueing. Carries the tenant id.
+    QuotaExceeded(String),
 }
 
 impl fmt::Display for Error {
@@ -40,6 +48,8 @@ impl fmt::Display for Error {
             Error::Job(m) => write!(f, "mapreduce job failed: {m}"),
             Error::Clustering(m) => write!(f, "clustering did not produce a result: {m}"),
             Error::Bundle(m) => write!(f, "model bundle: {m}"),
+            Error::ShuttingDown => write!(f, "score service is shutting down"),
+            Error::QuotaExceeded(t) => write!(f, "tenant {t:?} exceeded admission quota"),
         }
     }
 }

@@ -35,6 +35,19 @@ pub enum Variant {
     Classic,
 }
 
+impl std::str::FromStr for Variant {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "fast" => Ok(Variant::Fast),
+            "classic" => Ok(Variant::Classic),
+            other => Err(Error::InvalidArgument(format!(
+                "unknown variant `{other}` (fast|classic)"
+            ))),
+        }
+    }
+}
+
 /// Parameters of one FCM run (paper notation).
 #[derive(Clone, Copy, Debug)]
 pub struct FcmParams {
@@ -274,6 +287,19 @@ impl SessionAlgo {
         match self {
             SessionAlgo::Fcm => "fcm",
             SessionAlgo::KMeans => "kmeans",
+        }
+    }
+}
+
+impl std::str::FromStr for SessionAlgo {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "fcm" => Ok(SessionAlgo::Fcm),
+            "km" | "kmeans" => Ok(SessionAlgo::KMeans),
+            other => Err(Error::InvalidArgument(format!(
+                "unknown session algo `{other}` (fcm|kmeans)"
+            ))),
         }
     }
 }

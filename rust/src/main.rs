@@ -3,7 +3,8 @@
 //! ```text
 //! bigfcm run         --dataset susy --records 100000 --clusters 6 [--save-model m.bfm]
 //! bigfcm session     --iters 50 --bounds elkan [--save-model m.bfm]
-//! bigfcm serve-bench --clients 4 --records 500 [--model m.bfm] [--json BENCH_serve.json]
+//! bigfcm serve       --port 0 [--model id=path.bfm]... | --connect ADDR --send CMD
+//! bigfcm serve-bench --clients 4 --records 500 [--open-loop --rate 2000] [--json BENCH_serve.json]
 //! bigfcm score       --model m.bfm --out DIR [--store DIR | --dataset susy]
 //! bigfcm bench       --exp table4 [--full] [--backend native|pjrt|auto]
 //! bigfcm gen         --dataset higgs --records 1000000 --out higgs.csv
@@ -12,9 +13,15 @@
 //!
 //! Every flag can also be set via `--config file.toml` and repeated
 //! `--set section.key=value` overrides (see `rust/src/config`).
+//!
+//! All string→enum flag parsing routes through the `FromStr` impls next
+//! to each enum (`config`, `fcm::loops`, `baselines`, `serve::service`),
+//! and the dataset/algo/bounds/quant flags shared by `run`/`session`/
+//! `score`/`serve`/`serve-bench` resolve through one
+//! [`resolve_common_args`] helper.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use bigfcm::baselines::{run_baseline, BaselineAlgo};
 use bigfcm::bench::tables::{run_by_id, Ctx};
@@ -30,7 +37,10 @@ use bigfcm::json;
 use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions, MIB};
 use bigfcm::metrics::confusion_accuracy;
 use bigfcm::runtime::ResolvedBackend;
-use bigfcm::serve::{run_score_job, ModelBundle, ScoreService, ServeOptions};
+use bigfcm::serve::{
+    client_call, run_score_job, FrontOptions, ModelBundle, ModelRegistry, ScoreService,
+    ServeFront, ServeOptions,
+};
 use bigfcm::telemetry::human_duration;
 
 /// CLI result: any error renders via Display at top level (offline build —
@@ -82,6 +92,16 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Every occurrence of a repeatable flag, in order (e.g. `--model
+    /// susy=a.bfm --model higgs=b.bfm`).
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+
     fn has(&self, key: &str) -> bool {
         self.get(key).is_some()
     }
@@ -115,15 +135,91 @@ fn backend_of(cfg: &Config) -> CliResult<Arc<dyn KernelBackend>> {
     Ok(Arc::new(ResolvedBackend::from_config(cfg)?))
 }
 
+/// The dataset/algo/variant/bounds/quant flag cluster shared by the
+/// dataset-driven subcommands, resolved once (see [`resolve_common_args`]).
+struct CommonArgs {
+    dataset_name: String,
+    records: usize,
+    clusters: usize,
+    fuzzifier: f64,
+    epsilon: f64,
+    algo: SessionAlgo,
+    variant: Variant,
+    prune: PruneConfig,
+}
+
+impl CommonArgs {
+    /// Materialize the synthetic dataset these flags name. Commands that
+    /// read an existing store skip this — flag resolution stays shared
+    /// without forcing a dataset build.
+    fn load_dataset(&self, seed: u64) -> CliResult<bigfcm::data::Dataset> {
+        builtin::by_name(&self.dataset_name, self.records, seed)
+            .ok_or_else(|| format!("unknown dataset `{}`", self.dataset_name).into())
+    }
+}
+
+/// The single resolution path for the flags `run`/`session`/`score`/
+/// `serve`/`serve-bench` share. `records_flag` names the record-count
+/// flag: the serve commands size the dataset with `--dataset-records`
+/// because their `--records` means per-client request counts.
+fn resolve_common_args(
+    args: &Args,
+    cfg: &Config,
+    records_flag: &str,
+    records_default: usize,
+    clusters_default: usize,
+) -> CliResult<CommonArgs> {
+    let dataset_name = args.get_or("dataset", "susy");
+    let records: usize = args.get_or(records_flag, &records_default.to_string()).parse()?;
+    let clusters: usize = args.get_or("clusters", &clusters_default.to_string()).parse()?;
+    let fuzzifier: f64 = args.get_or("fuzzifier", "2.0").parse()?;
+    let epsilon: f64 = args.get_or("epsilon", &cfg.fcm.epsilon.to_string()).parse()?;
+    let algo: SessionAlgo = args.get_or("algo", "fcm").parse()?;
+    let variant: Variant = args.get_or("variant", "fast").parse()?;
+    let mut prune = PruneConfig::from_cluster(&cfg.cluster);
+    match args.get_or("bounds", cfg.cluster.bounds.as_str()).as_str() {
+        "off" => prune.enabled = false,
+        b => prune.bounds = b.parse::<BoundModel>()?,
+    }
+    if let Some(q) = args.get("quant") {
+        prune.quant = q.parse::<QuantMode>()?;
+    }
+    if let Some(t) = args.get("tolerance") {
+        prune.tolerance = t.parse()?;
+    }
+    if let Some(s) = args.get("slab-mib") {
+        prune.slab_bytes = s.parse::<u64>()? * MIB;
+    }
+    if let Some(dir) = args.get("spill-dir") {
+        prune.spill_dir = Some(std::path::PathBuf::from(dir));
+    }
+    Ok(CommonArgs { dataset_name, records, clusters, fuzzifier, epsilon, algo, variant, prune })
+}
+
+/// Admission/batching knobs shared by `serve` and `serve-bench`:
+/// `serve.*` config defaults with per-invocation flag overrides.
+fn resolve_serve_options(args: &Args, cfg: &Config) -> CliResult<ServeOptions> {
+    let mut opts = ServeOptions::from_config(&cfg.serve);
+    if let Some(v) = args.get("max-batch") {
+        opts.max_batch = v.parse::<usize>()?.max(1);
+    }
+    if let Some(v) = args.get("linger-us") {
+        opts.linger = Duration::from_micros(v.parse::<u64>()?);
+    }
+    if let Some(v) = args.get("queue-cap") {
+        opts.queue_cap = v.parse::<usize>()?.max(1);
+    }
+    if let Some(v) = args.get("tenant-quota") {
+        opts.tenant_quota = v.parse::<usize>()?;
+    }
+    Ok(opts)
+}
+
 fn cmd_run(args: &Args) -> CliResult<()> {
     let cfg = load_config(args)?;
-    let name = args.get_or("dataset", "susy");
-    let n: usize = args.get_or("records", "50000").parse()?;
-    let c: usize = args.get_or("clusters", "2").parse()?;
-    let m: f64 = args.get_or("fuzzifier", "2.0").parse()?;
-    let eps: f64 = args.get_or("epsilon", &cfg.fcm.epsilon.to_string()).parse()?;
-    let dataset = builtin::by_name(&name, n, cfg.seed)
-        .ok_or_else(|| format!("unknown dataset `{name}`"))?;
+    let common = resolve_common_args(args, &cfg, "records", 50000, 2)?;
+    let (c, m, eps) = (common.clusters, common.fuzzifier, common.epsilon);
+    let dataset = common.load_dataset(cfg.seed)?;
     let backend = backend_of(&cfg)?;
     println!(
         "dataset={} records={} dims={} C={c} m={m} eps={eps:.0e} backend={}",
@@ -196,11 +292,7 @@ fn cmd_baseline(args: &Args) -> CliResult<()> {
     let cfg = load_config(args)?;
     let name = args.get_or("dataset", "susy");
     let n: usize = args.get_or("records", "50000").parse()?;
-    let algo = match args.get_or("algo", "fkm").as_str() {
-        "km" | "kmeans" => BaselineAlgo::KMeans,
-        "fkm" | "fuzzy" => BaselineAlgo::FuzzyKMeans,
-        other => bail!("unknown baseline `{other}`"),
-    };
+    let algo: BaselineAlgo = args.get_or("algo", "fkm").parse()?;
     let mut cfg = cfg;
     cfg.fcm.clusters = args.get_or("clusters", "2").parse()?;
     cfg.fcm.fuzzifier = args.get_or("fuzzifier", "2.0").parse()?;
@@ -235,43 +327,12 @@ fn cmd_baseline(args: &Args) -> CliResult<()> {
 /// JobStats session counters.
 fn cmd_session(args: &Args) -> CliResult<()> {
     let mut cfg = load_config(args)?;
-    let name = args.get_or("dataset", "susy");
-    let n: usize = args.get_or("records", "50000").parse()?;
-    let c: usize = args.get_or("clusters", "2").parse()?;
+    let common = resolve_common_args(args, &cfg, "records", 50000, 2)?;
+    let (c, m, eps) = (common.clusters, common.fuzzifier, common.epsilon);
     cfg.fcm.clusters = c;
-    let m: f64 = args.get_or("fuzzifier", "2.0").parse()?;
-    let eps: f64 = args.get_or("epsilon", &cfg.fcm.epsilon.to_string()).parse()?;
     let iters: usize = args.get_or("iters", "50").parse()?;
-    let algo = match args.get_or("algo", "fcm").as_str() {
-        "fcm" => SessionAlgo::Fcm,
-        "km" | "kmeans" => SessionAlgo::KMeans,
-        other => bail!("unknown session algo `{other}` (fcm|kmeans)"),
-    };
-    let variant = match args.get_or("variant", "fast").as_str() {
-        "fast" => Variant::Fast,
-        "classic" => Variant::Classic,
-        other => bail!("unknown variant `{other}` (fast|classic)"),
-    };
-    let mut prune = PruneConfig::from_cluster(&cfg.cluster);
-    match args.get_or("bounds", cfg.cluster.bounds.as_str()).as_str() {
-        "off" => prune.enabled = false,
-        b => prune.bounds = BoundModel::parse(b)?,
-    }
-    if let Some(q) = args.get("quant") {
-        prune.quant = QuantMode::parse(q)?;
-    }
-    if let Some(t) = args.get("tolerance") {
-        prune.tolerance = t.parse()?;
-    }
-    if let Some(s) = args.get("slab-mib") {
-        prune.slab_bytes = s.parse::<u64>()? * MIB;
-    }
-    if let Some(dir) = args.get("spill-dir") {
-        prune.spill_dir = Some(std::path::PathBuf::from(dir));
-    }
-
-    let dataset = builtin::by_name(&name, n, cfg.seed)
-        .ok_or_else(|| format!("unknown dataset `{name}`"))?;
+    let (algo, variant, prune) = (common.algo, common.variant, common.prune.clone());
+    let dataset = common.load_dataset(cfg.seed)?;
     let backend = backend_of(&cfg)?;
     let store = Arc::new(BlockStore::in_memory(
         dataset.name.clone(),
@@ -414,23 +475,24 @@ fn train_quick_bundle(
     Ok(bundle)
 }
 
-/// `bigfcm serve-bench`: closed-loop load harness against the online
-/// scoring service — N client threads each scoring R records
-/// back-to-back, reporting throughput, batch fill and p50/p95/p99 into
-/// the console and (optionally) a bench JSON.
+/// `bigfcm serve-bench`: load harness against the online scoring
+/// service. Closed-loop by default (N client threads each scoring R
+/// records back-to-back — measures capacity); `--open-loop` schedules
+/// arrivals at a fixed `--rate` independent of completions and measures
+/// each latency from the *scheduled* arrival, so queueing delay from
+/// falling behind counts against the service (no coordinated omission)
+/// and SLO attainment (`p99 < --p99-target-us` at `--rate` req/s) is
+/// meaningful. Reports into the console and (optionally) a bench JSON.
 fn cmd_serve_bench(args: &Args) -> CliResult<()> {
     let cfg = load_config(args)?;
+    let common = resolve_common_args(args, &cfg, "dataset-records", 20000, 4)?;
+    let open_loop = args.has("open-loop");
     let clients: usize = args.get_or("clients", "4").parse()?;
     let per_client: usize = args.get_or("records", "500").parse()?;
-    let name = args.get_or("dataset", "susy");
-    let dataset_records: usize = args.get_or("dataset-records", "20000").parse()?;
-    let c: usize = args.get_or("clusters", "4").parse()?;
-    let m: f64 = args.get_or("fuzzifier", "2.0").parse()?;
-    if clients == 0 || per_client == 0 {
+    if !open_loop && (clients == 0 || per_client == 0) {
         bail!("--clients and --records must be positive");
     }
-    let dataset = builtin::by_name(&name, dataset_records, cfg.seed)
-        .ok_or_else(|| format!("unknown dataset `{name}`"))?;
+    let dataset = common.load_dataset(cfg.seed)?;
     let backend = backend_of(&cfg)?;
     let bundle = match args.get("model") {
         Some(path) => {
@@ -439,27 +501,25 @@ fn cmd_serve_bench(args: &Args) -> CliResult<()> {
                 bail!(
                     "model expects {} features, dataset `{}` has {}",
                     b.dims(),
-                    name,
+                    common.dataset_name,
                     dataset.dims()
                 );
             }
             b
         }
-        None => train_quick_bundle(&cfg, &dataset, c, m, Arc::clone(&backend))?,
+        None => train_quick_bundle(
+            &cfg,
+            &dataset,
+            common.clusters,
+            common.fuzzifier,
+            Arc::clone(&backend),
+        )?,
     };
-    let mut opts = ServeOptions::from_config(&cfg.serve);
-    if let Some(v) = args.get("max-batch") {
-        opts.max_batch = v.parse::<usize>()?.max(1);
-    }
-    if let Some(v) = args.get("linger-us") {
-        opts.linger = std::time::Duration::from_micros(v.parse::<u64>()?);
-    }
-    if let Some(v) = args.get("queue-cap") {
-        opts.queue_cap = v.parse::<usize>()?.max(1);
-    }
+    let opts = resolve_serve_options(args, &cfg)?;
     println!(
-        "serve-bench: model C={} d={} algo={} backend={} | clients={clients} x {per_client} \
-         requests, max_batch={}, pad={}, linger={:?}, queue_cap={}",
+        "serve-bench[{}]: model C={} d={} algo={} backend={} | max_batch={}, pad={}, \
+         linger={:?}, queue_cap={}",
+        if open_loop { "open" } else { "closed" },
         bundle.clusters(),
         bundle.dims(),
         bundle.algo.as_str(),
@@ -470,36 +530,134 @@ fn cmd_serve_bench(args: &Args) -> CliResult<()> {
         opts.queue_cap,
     );
     let bundle_algo = bundle.algo;
-    let service = Arc::new(ScoreService::new(bundle, backend, opts)?);
+    let service = Arc::new(ScoreService::builder(bundle).options(opts).spawn(backend)?);
     let features = Arc::new(dataset.features);
-    let t0 = Instant::now();
-    let handles: Vec<_> = (0..clients)
-        .map(|ci| {
-            let svc = Arc::clone(&service);
-            let x = Arc::clone(&features);
-            std::thread::spawn(move || -> Result<(), String> {
-                let n = x.rows();
-                for r in 0..per_client {
-                    let row = x.row((ci * per_client + r * 7) % n);
-                    let u = svc.score(row).map_err(|e| e.to_string())?;
-                    let s: f32 = u.iter().sum();
-                    if (s - 1.0).abs() > 1e-4 {
-                        return Err(format!("membership row sums to {s}"));
+
+    // Extra JSON fields the active mode contributes to the bench doc.
+    let mut mode_json: Vec<(&str, json::Value)> = Vec::new();
+    let (total, wall, rps);
+    if open_loop {
+        let rate: f64 = args.get_or("rate", "2000").parse()?;
+        let duration_s: f64 = args.get_or("duration-s", "2.0").parse()?;
+        let p99_target_us: u64 = args.get_or("p99-target-us", "5000").parse()?;
+        let inflight: usize = args.get_or("inflight", "64").parse()?;
+        if !rate.is_finite() || rate <= 0.0 || !duration_s.is_finite() || duration_s <= 0.0
+            || inflight == 0
+        {
+            bail!("--rate, --duration-s and --inflight must be positive");
+        }
+        let n_req = (rate * duration_s).ceil().max(1.0) as usize;
+        let arrivals: Arc<Vec<Duration>> = Arc::new(
+            (0..n_req).map(|i| Duration::from_secs_f64(i as f64 / rate)).collect(),
+        );
+        let next = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let start = Instant::now();
+        let handles: Vec<_> = (0..inflight)
+            .map(|wi| {
+                let svc = Arc::clone(&service);
+                let x = Arc::clone(&features);
+                let arrivals = Arc::clone(&arrivals);
+                let next = Arc::clone(&next);
+                std::thread::spawn(move || -> Result<Vec<u64>, String> {
+                    let n = x.rows();
+                    let mut lat = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= arrivals.len() {
+                            return Ok(lat);
+                        }
+                        let due = arrivals[i];
+                        loop {
+                            let now = start.elapsed();
+                            if now >= due {
+                                break;
+                            }
+                            std::thread::sleep((due - now).min(Duration::from_micros(200)));
+                        }
+                        let row = x.row((wi + i * 7) % n);
+                        let u = svc.score(row).map_err(|e| e.to_string())?;
+                        let s: f32 = u.iter().sum();
+                        if (s - 1.0).abs() > 1e-4 {
+                            return Err(format!("membership row sums to {s}"));
+                        }
+                        lat.push(start.elapsed().saturating_sub(due).as_micros() as u64);
                     }
-                }
-                Ok(())
+                })
             })
-        })
-        .collect();
-    for (ci, h) in handles.into_iter().enumerate() {
-        h.join()
-            .map_err(|_| format!("client {ci} panicked"))?
-            .map_err(|e| format!("client {ci}: {e}"))?;
+            .collect();
+        let mut lats: Vec<u64> = Vec::with_capacity(n_req);
+        for (wi, h) in handles.into_iter().enumerate() {
+            let mut l = h
+                .join()
+                .map_err(|_| format!("worker {wi} panicked"))?
+                .map_err(|e| format!("worker {wi}: {e}"))?;
+            lats.append(&mut l);
+        }
+        let w = start.elapsed();
+        lats.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            lats[((lats.len() as f64 * p).ceil() as usize).clamp(1, lats.len()) - 1]
+        };
+        let (p50, p95, p99) = (pct(0.50), pct(0.95), pct(0.99));
+        let ok = lats.iter().filter(|&&l| l <= p99_target_us).count();
+        let ok_fraction = ok as f64 / lats.len() as f64;
+        let attained = p99 <= p99_target_us;
+        let achieved = lats.len() as f64 / w.as_secs_f64().max(1e-9);
+        println!(
+            "open-loop: {} arrivals at {rate:.0} req/s over {duration_s:.1}s -> achieved \
+             {achieved:.0} req/s",
+            lats.len(),
+        );
+        println!(
+            "open-loop latency (from scheduled arrival): p50 {p50} us, p95 {p95} us, p99 {p99} us"
+        );
+        println!(
+            "SLO p99 < {p99_target_us} us at {rate:.0} req/s: {} ({:.1}% of requests within \
+             target)",
+            if attained { "ATTAINED" } else { "MISSED" },
+            ok_fraction * 100.0,
+        );
+        mode_json.push(("target_rps", json::num(rate)));
+        mode_json.push(("achieved_rps", json::num(achieved)));
+        mode_json.push(("slo_p99_target_us", json::num(p99_target_us as f64)));
+        mode_json.push(("slo_attained", json::num(if attained { 1.0 } else { 0.0 })));
+        mode_json.push(("slo_ok_fraction", json::num(ok_fraction)));
+        mode_json.push(("open_p50_us", json::num(p50 as f64)));
+        mode_json.push(("open_p95_us", json::num(p95 as f64)));
+        mode_json.push(("open_p99_us", json::num(p99 as f64)));
+        total = lats.len();
+        wall = w;
+        rps = achieved;
+    } else {
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|ci| {
+                let svc = Arc::clone(&service);
+                let x = Arc::clone(&features);
+                std::thread::spawn(move || -> Result<(), String> {
+                    let n = x.rows();
+                    for r in 0..per_client {
+                        let row = x.row((ci * per_client + r * 7) % n);
+                        let u = svc.score(row).map_err(|e| e.to_string())?;
+                        let s: f32 = u.iter().sum();
+                        if (s - 1.0).abs() > 1e-4 {
+                            return Err(format!("membership row sums to {s}"));
+                        }
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for (ci, h) in handles.into_iter().enumerate() {
+            h.join()
+                .map_err(|_| format!("client {ci} panicked"))?
+                .map_err(|e| format!("client {ci}: {e}"))?;
+        }
+        total = clients * per_client;
+        wall = t0.elapsed();
+        rps = total as f64 / wall.as_secs_f64().max(1e-9);
     }
-    let wall = t0.elapsed();
     let stats = service.stats();
-    let total = (clients * per_client) as f64;
-    let rps = total / wall.as_secs_f64().max(1e-9);
     println!(
         "served {} requests in {} -> {:.0} req/s across {} batches",
         stats.requests,
@@ -523,10 +681,15 @@ fn cmd_serve_bench(args: &Args) -> CliResult<()> {
             json::Value::Object(o) => o,
             _ => unreachable!("ServeStats::to_json returns an object"),
         };
+        obj.insert("mode".into(), json::s(if open_loop { "open" } else { "closed" }));
         obj.insert("throughput_rps".into(), json::num(rps));
+        obj.insert("requests_total".into(), json::num(total as f64));
         obj.insert("clients".into(), json::num(clients as f64));
         obj.insert("records_per_client".into(), json::num(per_client as f64));
         obj.insert("wall_s".into(), json::num(wall.as_secs_f64()));
+        for (k, v) in mode_json {
+            obj.insert(k.into(), v);
+        }
         // Config identity: bench_diff.sh refuses to diff JSONs whose
         // hashes disagree instead of reporting bogus regressions across
         // incomparable configs.
@@ -539,7 +702,10 @@ fn cmd_serve_bench(args: &Args) -> CliResult<()> {
         );
         let doc = json::obj(vec![
             ("bench", json::s("serve_bench")),
-            ("workload", json::s(format!("{name} {dataset_records} records"))),
+            (
+                "workload",
+                json::s(format!("{} {} records", common.dataset_name, common.records)),
+            ),
             ("config_hash", json::s(hash)),
             ("serve", json::Value::Object(obj)),
         ]);
@@ -560,12 +726,13 @@ fn cmd_serve_bench(args: &Args) -> CliResult<()> {
 /// top-k sparse membership rows written to a new block store.
 fn cmd_score(args: &Args) -> CliResult<()> {
     let cfg = load_config(args)?;
+    let common = resolve_common_args(args, &cfg, "records", 50000, 2)?;
     let out_dir = args
         .get("out")
         .ok_or("`bigfcm score` needs --out DIR for the membership store")?
         .to_string();
     let top_k: usize = args.get_or("topk", &cfg.serve.top_k.to_string()).parse()?;
-    let quant = QuantMode::parse(&args.get_or("quant", cfg.cluster.quant.as_str()))?;
+    let quant = common.prune.quant;
     let backend = backend_of(&cfg)?;
     let store = match args.get("store") {
         Some(dir) => Arc::new(BlockStore::open_disk(
@@ -574,10 +741,7 @@ fn cmd_score(args: &Args) -> CliResult<()> {
             std::path::PathBuf::from(dir),
         )?),
         None => {
-            let name = args.get_or("dataset", "susy");
-            let n: usize = args.get_or("records", "50000").parse()?;
-            let dataset = builtin::by_name(&name, n, cfg.seed)
-                .ok_or_else(|| format!("unknown dataset `{name}`"))?;
+            let dataset = common.load_dataset(cfg.seed)?;
             Arc::new(BlockStore::in_memory(
                 dataset.name.clone(),
                 &dataset.features,
@@ -637,6 +801,88 @@ fn cmd_score(args: &Args) -> CliResult<()> {
             outcome.stats.quant_build_s,
         );
     }
+    Ok(())
+}
+
+/// `bigfcm serve`: the network front. Server mode binds the TCP frame
+/// protocol over a [`ModelRegistry`] (multi-model, hot reload over the
+/// wire via `reload <id> <path>`); client mode (`--connect ADDR --send
+/// CMD`) sends one framed command and prints the reply — the pair that
+/// `scripts/verify.sh` smoke-tests end-to-end.
+fn cmd_serve(args: &Args) -> CliResult<()> {
+    let cfg = load_config(args)?;
+    if let Some(addr) = args.get("connect") {
+        let cmd = args
+            .get("send")
+            .ok_or("`bigfcm serve --connect` needs --send \"CMD\"")?;
+        let reply = client_call(addr, cmd, Duration::from_secs(10))?;
+        println!("{reply}");
+        return Ok(());
+    }
+    let host = args.get_or("host", "127.0.0.1");
+    let port: u16 = args.get_or("port", "0").parse()?;
+    let backend = backend_of(&cfg)?;
+    let opts = resolve_serve_options(args, &cfg)?;
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&backend), opts));
+    let models = args.get_all("model");
+    if models.is_empty() {
+        // No bundles on the command line: quick-train a `default` model so
+        // the server is immediately scoreable (same path serve-bench uses).
+        let common = resolve_common_args(args, &cfg, "dataset-records", 20000, 4)?;
+        let dataset = common.load_dataset(cfg.seed)?;
+        let bundle = train_quick_bundle(
+            &cfg,
+            &dataset,
+            common.clusters,
+            common.fuzzifier,
+            Arc::clone(&backend),
+        )?;
+        let generation = registry.publish("default", bundle)?;
+        println!(
+            "published model `default` (quick-trained on {}, generation {generation})",
+            common.dataset_name
+        );
+    }
+    for spec in models {
+        let (id, path) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("--model expects id=path.bfm, got `{spec}`"))?;
+        let bundle = ModelBundle::load(std::path::Path::new(path))?;
+        let generation = registry.publish(id, bundle)?;
+        println!("published model `{id}` from {path} (generation {generation})");
+    }
+    let mut fopts = FrontOptions::default();
+    if let Some(v) = args.get("conn-workers") {
+        fopts.conn_workers = v.parse::<usize>()?.max(1);
+    }
+    let front = ServeFront::bind(
+        Arc::clone(&registry),
+        &format!("{host}:{port}"),
+        fopts,
+        cfg.overhead.clone(),
+    )?;
+    let addr = front.local_addr();
+    println!("bigfcm serve listening on {addr} (models: {})", registry.ids().join(", "));
+    if let Some(pf) = args.get("port-file") {
+        // Scripted callers bind port 0 and read the resolved address here.
+        std::fs::write(pf, addr.to_string()).map_err(|e| format!("writing {pf}: {e}"))?;
+    }
+    while !front.is_shutdown() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    front.shutdown();
+    let stats = front.stats();
+    println!(
+        "front: {} connections, {} frames ({} framing errors), {} scored, {} B in / {} B out, \
+         modelled net {:.3}s",
+        stats.connections,
+        stats.frames,
+        stats.framing_errors,
+        stats.scored,
+        stats.bytes_in,
+        stats.bytes_out,
+        stats.modelled_net_s,
+    );
     Ok(())
 }
 
@@ -700,6 +946,7 @@ fn main() -> CliResult<()> {
         "run" => cmd_run(&args),
         "baseline" => cmd_baseline(&args),
         "session" => cmd_session(&args),
+        "serve" => cmd_serve(&args),
         "serve-bench" => cmd_serve_bench(&args),
         "score" => cmd_score(&args),
         "bench" => cmd_bench(&args),
@@ -707,7 +954,7 @@ fn main() -> CliResult<()> {
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             println!(
-                "usage: bigfcm <run|baseline|session|serve-bench|score|bench|gen|info> [--flags]\n\
+                "usage: bigfcm <run|baseline|session|serve|serve-bench|score|bench|gen|info> [--flags]\n\
                  \n\
                  run         run BigFCM on a dataset (--dataset --records --clusters --epsilon\n\
                  \u{20}           --save-model PATH)\n\
@@ -717,9 +964,16 @@ fn main() -> CliResult<()> {
                  \u{20}           --algo fcm|kmeans --variant fast|classic --slab-mib N\n\
                  \u{20}           --spill-dir PATH --tolerance T --save-model PATH)\n\
                  \u{20}           with per-iteration counters\n\
-                 serve-bench closed-loop load harness for the online scoring service\n\
+                 serve       network scoring front over a multi-model registry\n\
+                 \u{20}           server: --host H --port P [--port-file PATH]\n\
+                 \u{20}           [--model id=path.bfm]... [--tenant-quota N] [--conn-workers N]\n\
+                 \u{20}           client: --connect ADDR --send \"score default - normal 1,2,3\"\n\
+                 \u{20}           (wire verbs: ping, score, reload, retire, stats, shutdown)\n\
+                 serve-bench load harness for the online scoring service\n\
                  \u{20}           (--clients N --records R [--model PATH] [--max-batch B]\n\
-                 \u{20}           [--linger-us U] [--json PATH|none] [--require-coalescing])\n\
+                 \u{20}           [--linger-us U] [--queue-cap Q] [--tenant-quota N]\n\
+                 \u{20}           [--open-loop --rate RPS --duration-s S --p99-target-us T\n\
+                 \u{20}           --inflight W] [--json PATH|none] [--require-coalescing])\n\
                  score       bulk ScoreJob: label a store with top-k memberships\n\
                  \u{20}           (--model PATH --out DIR [--store DIR | --dataset D --records N]\n\
                  \u{20}           [--topk K] [--quant off|i8])\n\

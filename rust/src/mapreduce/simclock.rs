@@ -27,11 +27,19 @@ pub struct SimCost {
     pub hdfs_io_s: f64,
     pub shuffle_s: f64,
     pub compute_s: f64,
+    /// Network transport (the serving front's wire bytes), charged the
+    /// way HDFS I/O is: bytes × a calibrated per-MiB rate.
+    pub net_s: f64,
 }
 
 impl SimCost {
     pub fn total_s(&self) -> f64 {
-        self.job_startup_s + self.task_launch_s + self.hdfs_io_s + self.shuffle_s + self.compute_s
+        self.job_startup_s
+            + self.task_launch_s
+            + self.hdfs_io_s
+            + self.shuffle_s
+            + self.compute_s
+            + self.net_s
     }
 
     pub fn add(&mut self, other: &SimCost) {
@@ -40,6 +48,7 @@ impl SimCost {
         self.hdfs_io_s += other.hdfs_io_s;
         self.shuffle_s += other.shuffle_s;
         self.compute_s += other.compute_s;
+        self.net_s += other.net_s;
     }
 
     /// Field-wise `self − before`: a run's share of a shared clock's cost
@@ -52,6 +61,7 @@ impl SimCost {
             hdfs_io_s: self.hdfs_io_s - before.hdfs_io_s,
             shuffle_s: self.shuffle_s - before.shuffle_s,
             compute_s: self.compute_s - before.compute_s,
+            net_s: self.net_s - before.net_s,
         }
     }
 }
@@ -138,6 +148,7 @@ impl SimClock {
             hdfs_io_s: frac(io_total),
             shuffle_s: shuffle,
             compute_s: frac(compute_total) + reduce_wall_s * overhead.compute_scale,
+            net_s: 0.0,
         };
         self.cost.add(&exact);
         self.jobs += 1;
@@ -161,6 +172,15 @@ impl SimClock {
     pub fn charge_scan(&mut self, overhead: &OverheadConfig, bytes: u64) -> f64 {
         let s = bytes as f64 / (1024.0 * 1024.0) * overhead.hdfs_s_per_mib;
         self.cost.hdfs_io_s += s;
+        s
+    }
+
+    /// Charge wire transport of `bytes` (the serving front's frames in +
+    /// frames out), modelled like HDFS I/O: bytes × `net_s_per_mib`.
+    /// Returns the seconds charged.
+    pub fn charge_net(&mut self, overhead: &OverheadConfig, bytes: u64) -> f64 {
+        let s = bytes as f64 / (1024.0 * 1024.0) * overhead.net_s_per_mib;
+        self.cost.net_s += s;
         s
     }
 
@@ -191,6 +211,7 @@ mod tests {
             task_launch_s: 1.0,
             shuffle_s_per_mib: 0.1,
             hdfs_s_per_mib: 0.1,
+            net_s_per_mib: 0.2,
             compute_scale: 2.0,
         }
     }
@@ -276,5 +297,17 @@ mod tests {
         clock.charge_scan(&overhead(), 100 * 1024 * 1024);
         // 2·2.0 compute + 100·0.1 io
         assert!((clock.total_s() - 14.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn net_charges_accumulate_like_io() {
+        let mut clock = SimClock::new();
+        let s = clock.charge_net(&overhead(), 10 * 1024 * 1024);
+        assert!((s - 1.0).abs() < 1e-9, "{s}");
+        assert!((clock.cost().net_s - 1.0).abs() < 1e-9);
+        assert!((clock.total_s() - 1.0).abs() < 1e-9);
+        let before = clock.cost();
+        clock.charge_net(&overhead(), 5 * 1024 * 1024);
+        assert!((clock.cost().delta(&before).net_s - 0.5).abs() < 1e-9);
     }
 }

@@ -1,0 +1,457 @@
+//! The network serving front: a length-prefixed line protocol over TCP,
+//! served on the crate's own thread pool.
+//!
+//! Production traffic arrives over a wire, not through an in-process
+//! call. The front binds a `TcpListener`, accepts connections on one
+//! acceptor thread, and runs each connection's handler on a
+//! [`ThreadPool`] worker. Framing is the simplest thing that is
+//! unambiguous over a stream:
+//!
+//! ```text
+//! frame := [u32 length, little-endian][length bytes of UTF-8 text]
+//! ```
+//!
+//! Request text is one command per frame; the response is one frame back
+//! on the same connection:
+//!
+//! | command | response |
+//! |---|---|
+//! | `ping` | `ok pong` |
+//! | `score <model> <tenant> <lane> <v0,v1,...>` | `ok <generation> <u0,u1,...>` |
+//! | `reload <model> <bundle-path>` | `ok <generation>` |
+//! | `retire <model>` | `ok retired` |
+//! | `stats` | `ok <json>` |
+//! | `shutdown` | `ok shutting-down` (front begins draining) |
+//!
+//! Application errors (unknown model, over-quota tenant, bad record)
+//! answer `err <message>` and the connection **stays open** — only
+//! *framing* violations (oversized length, truncated frame, invalid
+//! UTF-8) close the connection, and even those are isolated to it: the
+//! counter [`FrontStats::framing_errors`] ticks, the other connections
+//! and the process carry on.
+//!
+//! Transport is modelled in the [`SimClock`] the way HDFS I/O already
+//! is: every frame pair charges its wire bytes at
+//! [`OverheadConfig::net_s_per_mib`], so serve-bench reports carry a
+//! modelled network cost alongside the measured latencies.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::OverheadConfig;
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+use crate::mapreduce::SimClock;
+use crate::serve::bundle::ModelBundle;
+use crate::serve::registry::ModelRegistry;
+use crate::serve::service::Lane;
+use crate::threadpool::ThreadPool;
+
+/// Knobs of one [`ServeFront`].
+#[derive(Clone, Debug)]
+pub struct FrontOptions {
+    /// Connection-handler pool size (concurrent connections served).
+    pub conn_workers: usize,
+    /// Frames longer than this are a framing violation (connection
+    /// closed). Bounds a malicious/corrupt length prefix.
+    pub max_frame_bytes: usize,
+    /// Socket read timeout: how often an idle handler wakes to check the
+    /// shutdown flag.
+    pub read_timeout: Duration,
+}
+
+impl Default for FrontOptions {
+    fn default() -> Self {
+        Self {
+            conn_workers: 8,
+            max_frame_bytes: 1 << 20,
+            read_timeout: Duration::from_millis(250),
+        }
+    }
+}
+
+/// Snapshot of the front's wire meters.
+#[derive(Clone, Debug)]
+pub struct FrontStats {
+    /// Connections accepted.
+    pub connections: u64,
+    /// Frames answered (including `err` responses).
+    pub frames: u64,
+    /// Framing violations (oversized/truncated/non-UTF-8 frames) — each
+    /// closed its connection, none touched the process.
+    pub framing_errors: u64,
+    /// Wire bytes received / sent (headers included).
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Records scored over the wire.
+    pub scored: u64,
+    /// Modelled transport seconds charged to the SimClock.
+    pub modelled_net_s: f64,
+}
+
+impl FrontStats {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("connections", json::num(self.connections as f64)),
+            ("frames", json::num(self.frames as f64)),
+            ("framing_errors", json::num(self.framing_errors as f64)),
+            ("bytes_in", json::num(self.bytes_in as f64)),
+            ("bytes_out", json::num(self.bytes_out as f64)),
+            ("scored", json::num(self.scored as f64)),
+            ("modelled_net_s", json::num(self.modelled_net_s)),
+        ])
+    }
+}
+
+struct FrontShared {
+    registry: Arc<ModelRegistry>,
+    opts: FrontOptions,
+    overhead: OverheadConfig,
+    clock: Mutex<SimClock>,
+    shutdown: AtomicBool,
+    connections: AtomicU64,
+    frames: AtomicU64,
+    framing_errors: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    scored: AtomicU64,
+}
+
+/// The running front: listener + acceptor thread + handler pool (see
+/// module docs). Shut down via [`Self::shutdown`] (or the wire
+/// `shutdown` command followed by it); dropped fronts shut down too.
+pub struct ServeFront {
+    shared: Arc<FrontShared>,
+    addr: SocketAddr,
+    acceptor: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ServeFront {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// serving `registry`.
+    pub fn bind(
+        registry: Arc<ModelRegistry>,
+        addr: &str,
+        opts: FrontOptions,
+        overhead: OverheadConfig,
+    ) -> Result<ServeFront> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Job(format!("serve front cannot bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::Job(format!("serve front local_addr: {e}")))?;
+        let shared = Arc::new(FrontShared {
+            registry,
+            opts,
+            overhead,
+            clock: Mutex::new(SimClock::new()),
+            shutdown: AtomicBool::new(false),
+            connections: AtomicU64::new(0),
+            frames: AtomicU64::new(0),
+            framing_errors: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            scored: AtomicU64::new(0),
+        });
+        let for_acceptor = Arc::clone(&shared);
+        let acceptor = std::thread::Builder::new()
+            .name("bigfcm-front".to_string())
+            .spawn(move || {
+                // The pool lives (and dies) with the acceptor: when the
+                // loop breaks, dropping it joins every handler, which
+                // exit within one read timeout of the shutdown flag.
+                let pool = ThreadPool::new(for_acceptor.opts.conn_workers);
+                for stream in listener.incoming() {
+                    if for_acceptor.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match stream {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    for_acceptor.connections.fetch_add(1, Ordering::Relaxed);
+                    let sh = Arc::clone(&for_acceptor);
+                    pool.execute(move || handle_connection(sh, stream));
+                }
+            })
+            .map_err(|e| Error::Job(format!("spawning the front acceptor thread: {e}")))?;
+        Ok(ServeFront { shared, addr: local, acceptor: Mutex::new(Some(acceptor)) })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Whether the wire `shutdown` command (or [`Self::shutdown`]) has
+    /// been issued — the server loop's exit condition.
+    pub fn is_shutdown(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting, drain handlers, join the acceptor. Idempotent.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Wake the blocking accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.lock().expect("acceptor handle poisoned").take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Wire meter snapshot.
+    pub fn stats(&self) -> FrontStats {
+        let sh = &self.shared;
+        FrontStats {
+            connections: sh.connections.load(Ordering::Relaxed),
+            frames: sh.frames.load(Ordering::Relaxed),
+            framing_errors: sh.framing_errors.load(Ordering::Relaxed),
+            bytes_in: sh.bytes_in.load(Ordering::Relaxed),
+            bytes_out: sh.bytes_out.load(Ordering::Relaxed),
+            scored: sh.scored.load(Ordering::Relaxed),
+            modelled_net_s: sh.clock.lock().expect("front clock poisoned").cost().net_s,
+        }
+    }
+}
+
+impl Drop for ServeFront {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Why a connection's framing broke (all close the connection).
+enum FrameFault {
+    /// Peer closed cleanly between frames — not an error.
+    Eof,
+    /// Truncated header/payload, oversized length, or invalid UTF-8.
+    Violation(String),
+}
+
+/// Read exactly `buf.len()` bytes, tolerating read timeouts (the idle
+/// poll) as long as the shutdown flag stays clear. `started` says whether
+/// any earlier byte of this frame already arrived — EOF before the first
+/// byte is a clean close, EOF (or shutdown) mid-frame is a violation.
+fn read_full(
+    sh: &FrontShared,
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    mut started: bool,
+) -> std::result::Result<(), FrameFault> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        if sh.shutdown.load(Ordering::SeqCst) {
+            return Err(if started || got > 0 {
+                FrameFault::Violation("shutdown mid-frame".into())
+            } else {
+                FrameFault::Eof
+            });
+        }
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(if started || got > 0 {
+                    FrameFault::Violation("connection closed mid-frame".into())
+                } else {
+                    FrameFault::Eof
+                });
+            }
+            Ok(n) => {
+                got += n;
+                started = true;
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => continue,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameFault::Violation(format!("read failed: {e}"))),
+        }
+    }
+    Ok(())
+}
+
+/// Read one `[u32 LE len][payload]` frame.
+fn read_frame(sh: &FrontShared, stream: &mut TcpStream) -> std::result::Result<String, FrameFault> {
+    let mut header = [0u8; 4];
+    read_full(sh, stream, &mut header, false)?;
+    let len = u32::from_le_bytes(header) as usize;
+    if len > sh.opts.max_frame_bytes {
+        return Err(FrameFault::Violation(format!(
+            "frame length {len} exceeds cap {}",
+            sh.opts.max_frame_bytes
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    read_full(sh, stream, &mut payload, true)?;
+    sh.bytes_in.fetch_add(4 + len as u64, Ordering::Relaxed);
+    String::from_utf8(payload)
+        .map_err(|_| FrameFault::Violation("frame payload is not UTF-8".into()))
+}
+
+/// Write one frame; best-effort (a peer gone mid-write just ends the
+/// connection).
+fn write_frame(sh: &FrontShared, stream: &mut TcpStream, text: &str) -> bool {
+    let bytes = text.as_bytes();
+    let header = (bytes.len() as u32).to_le_bytes();
+    if stream.write_all(&header).is_err() || stream.write_all(bytes).is_err() {
+        return false;
+    }
+    let _ = stream.flush();
+    sh.bytes_out.fetch_add(4 + bytes.len() as u64, Ordering::Relaxed);
+    true
+}
+
+/// One connection's serve loop: frames in, responses out, until the peer
+/// closes, framing breaks, or the front shuts down.
+fn handle_connection(sh: Arc<FrontShared>, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(sh.opts.read_timeout));
+    let _ = stream.set_nodelay(true);
+    loop {
+        let cmd = match read_frame(&sh, &mut stream) {
+            Ok(text) => text,
+            Err(FrameFault::Eof) => return,
+            Err(FrameFault::Violation(why)) => {
+                sh.framing_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = write_frame(&sh, &mut stream, &format!("err framing: {why}"));
+                return; // violation closes this connection only
+            }
+        };
+        let response = dispatch(&sh, &cmd);
+        let alive = write_frame(&sh, &mut stream, &response);
+        sh.frames.fetch_add(1, Ordering::Relaxed);
+        // Model the frame pair's wire cost (headers included) like HDFS
+        // I/O.
+        let frame_bytes = (8 + cmd.len() + response.len()) as u64;
+        sh.clock
+            .lock()
+            .expect("front clock poisoned")
+            .charge_net(&sh.overhead, frame_bytes);
+        if !alive {
+            return;
+        }
+    }
+}
+
+/// Execute one command; application failures become `err <msg>` (the
+/// connection survives).
+fn dispatch(sh: &FrontShared, cmd: &str) -> String {
+    match dispatch_inner(sh, cmd) {
+        Ok(resp) => resp,
+        Err(e) => format!("err {e}"),
+    }
+}
+
+fn dispatch_inner(sh: &FrontShared, cmd: &str) -> Result<String> {
+    let mut parts = cmd.split_whitespace();
+    let verb = parts.next().unwrap_or("");
+    match verb {
+        "ping" => Ok("ok pong".into()),
+        "score" => {
+            let model = parts
+                .next()
+                .ok_or_else(|| Error::InvalidArgument("score needs: model tenant lane csv".into()))?;
+            let tenant = parts
+                .next()
+                .ok_or_else(|| Error::InvalidArgument("score needs: model tenant lane csv".into()))?;
+            let lane: Lane = parts
+                .next()
+                .ok_or_else(|| Error::InvalidArgument("score needs: model tenant lane csv".into()))?
+                .parse()?;
+            let csv = parts
+                .next()
+                .ok_or_else(|| Error::InvalidArgument("score needs: model tenant lane csv".into()))?;
+            if parts.next().is_some() {
+                return Err(Error::InvalidArgument("score takes exactly 4 arguments".into()));
+            }
+            let record = csv
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<f32>()
+                        .map_err(|_| Error::InvalidArgument(format!("bad feature value `{t}`")))
+                })
+                .collect::<Result<Vec<f32>>>()?;
+            let svc = sh
+                .registry
+                .get(model)
+                .ok_or_else(|| Error::InvalidArgument(format!("no model {model:?}")))?;
+            let scored = svc.score_as(&record, tenant, lane)?;
+            sh.scored.fetch_add(1, Ordering::Relaxed);
+            let csv_out = scored
+                .memberships
+                .iter()
+                .map(|u| u.to_string())
+                .collect::<Vec<_>>()
+                .join(",");
+            Ok(format!("ok {} {}", scored.generation, csv_out))
+        }
+        "reload" => {
+            let model = parts
+                .next()
+                .ok_or_else(|| Error::InvalidArgument("reload needs: model bundle-path".into()))?;
+            let path = parts
+                .next()
+                .ok_or_else(|| Error::InvalidArgument("reload needs: model bundle-path".into()))?;
+            let bundle = ModelBundle::load(std::path::Path::new(path))?;
+            let generation = sh.registry.publish(model, bundle)?;
+            Ok(format!("ok {generation}"))
+        }
+        "retire" => {
+            let model = parts
+                .next()
+                .ok_or_else(|| Error::InvalidArgument("retire needs: model".into()))?;
+            sh.registry.retire(model)?;
+            Ok("ok retired".into())
+        }
+        "stats" => {
+            let front = FrontStats {
+                connections: sh.connections.load(Ordering::Relaxed),
+                frames: sh.frames.load(Ordering::Relaxed),
+                framing_errors: sh.framing_errors.load(Ordering::Relaxed),
+                bytes_in: sh.bytes_in.load(Ordering::Relaxed),
+                bytes_out: sh.bytes_out.load(Ordering::Relaxed),
+                scored: sh.scored.load(Ordering::Relaxed),
+                modelled_net_s: sh.clock.lock().expect("front clock poisoned").cost().net_s,
+            };
+            let doc = json::obj(vec![
+                ("front", front.to_json()),
+                ("registry", sh.registry.stats_json()),
+            ]);
+            Ok(format!("ok {}", json::to_string(&doc)))
+        }
+        "shutdown" => {
+            sh.shutdown.store(true, Ordering::SeqCst);
+            Ok("ok shutting-down".into())
+        }
+        other => Err(Error::InvalidArgument(format!("unknown command `{other}`"))),
+    }
+}
+
+/// One-shot client: connect, send `cmd` as a frame, return the response
+/// payload. Used by `bigfcm serve --connect`, the verify smoke and the
+/// integration tests.
+pub fn client_call(addr: &str, cmd: &str, timeout: Duration) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| Error::Job(format!("connect {addr}: {e}")))?;
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(|e| Error::Job(format!("socket timeout: {e}")))?;
+    let _ = stream.set_nodelay(true);
+    let bytes = cmd.as_bytes();
+    let header = (bytes.len() as u32).to_le_bytes();
+    stream
+        .write_all(&header)
+        .and_then(|_| stream.write_all(bytes))
+        .map_err(|e| Error::Job(format!("send to {addr}: {e}")))?;
+    let mut hdr = [0u8; 4];
+    stream
+        .read_exact(&mut hdr)
+        .map_err(|e| Error::Job(format!("response header from {addr}: {e}")))?;
+    let len = u32::from_le_bytes(hdr) as usize;
+    let mut payload = vec![0u8; len];
+    stream
+        .read_exact(&mut payload)
+        .map_err(|e| Error::Job(format!("response payload from {addr}: {e}")))?;
+    String::from_utf8(payload).map_err(|_| Error::Job("response is not UTF-8".into()))
+}

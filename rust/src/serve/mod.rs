@@ -31,16 +31,34 @@
 //!   bounded reorder buffer keeps appends in block order while map tasks
 //!   finish out of order), so multi-GiB stores are labeled end-to-end
 //!   without materializing the membership matrix.
+//! * **[`registry`]** — a [`ModelRegistry`] runs many services at once,
+//!   keyed by model id, with **hot reload**: re-publishing an id swaps
+//!   its bundle atomically (generation-stamped; in-flight micro-batches
+//!   finish on the generation they admitted under) and `retire` shuts a
+//!   service down under the drain-and-reject contract.
+//! * **[`front`]** — a [`ServeFront`] serves the registry over TCP with
+//!   a length-prefixed frame protocol on the crate's thread pool:
+//!   per-connection framing errors are isolated from the process, and
+//!   wire bytes are charged to the [`crate::mapreduce::SimClock`] the
+//!   way HDFS I/O already is.
 //!
 //! ```text
+//!   tcp clients ──► ServeFront (frames · per-conn isolation · net cost
+//!                      │        modelled in SimClock)
+//!                      ▼
+//!                ModelRegistry (model id → service; hot reload = atomic
+//!                      │        generation-stamped bundle swap; retire)
+//!                      ▼
 //!      bigfcm run/session --save-model      bigfcm serve-bench / score
 //!                 │                                   │
 //!                 ▼                                   ▼
 //!           ModelBundle  ──────────────►  ScoreService        run_score_job
-//!        (centers·scaler·m·counters,      (bounded queue →    (MR job over a
-//!         checksummed bitwise codec)       micro-batches)      BlockStore)
-//!                                                │                  │
-//!                                                └── score_chunk ───┘
+//!        (centers·scaler·m·counters,      (bounded 2-lane     (MR job over a
+//!         checksummed bitwise codec)       queue + tenant      BlockStore)
+//!                                          quotas → micro-        │
+//!                                          batches)               │
+//!                                                │                │
+//!                                                └── score_chunk ─┘
 //!                                                 (one KernelBackend
 //!                                                  primitive: native,
 //!                                                  shim, PJRT-ready)
@@ -48,8 +66,12 @@
 
 pub mod bulk;
 pub mod bundle;
+pub mod front;
+pub mod registry;
 pub mod service;
 
 pub use bulk::{dense_from_top_k, run_score_job, ScoreJobOutcome, ScoreJobTotals};
 pub use bundle::ModelBundle;
-pub use service::{ScoreService, ServeOptions, ServeStats};
+pub use front::{client_call, FrontOptions, FrontStats, ServeFront};
+pub use registry::ModelRegistry;
+pub use service::{Lane, Scored, ScoreService, ScoreServiceBuilder, ServeOptions, ServeStats};

@@ -1,0 +1,222 @@
+//! Multi-model registry: many [`ScoreService`]s keyed by model id, with
+//! hot publish/reload and orderly retirement.
+//!
+//! Production serving is never one model: tenants score against different
+//! models, and models get retrained underneath live traffic. The registry
+//! owns one running [`ScoreService`] per model id, all built through the
+//! one construction path ([`ScoreServiceBuilder`]) with the registry's
+//! shared backend and options:
+//!
+//! * [`ModelRegistry::publish`] — first publish of an id spawns a fresh
+//!   service (generation 1); re-publishing an existing id **hot-reloads**
+//!   it in place via the service's atomic bundle swap, so open
+//!   connections and queued requests keep flowing — in-flight
+//!   micro-batches finish on the generation they admitted under, later
+//!   batches score on the new one, every response stamped.
+//! * [`ModelRegistry::retire`] — removes the id and closes its service
+//!   under the drain-and-reject shutdown contract: queued requests get
+//!   [`crate::error::Error::ShuttingDown`], nothing hangs.
+//!
+//! Lookups hand out `Arc<ScoreService>` clones, so a caller scoring
+//! against a service that is concurrently retired still gets its answers
+//! (or clean shutdown errors) — the service object outlives its registry
+//! slot.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::error::{Error, Result};
+use crate::fcm::KernelBackend;
+use crate::json::{self, Value};
+use crate::serve::bundle::ModelBundle;
+use crate::serve::service::{ScoreService, ServeOptions};
+
+/// The model registry (see module docs). Share behind an `Arc`; all
+/// methods take `&self`.
+pub struct ModelRegistry {
+    backend: Arc<dyn KernelBackend>,
+    opts: ServeOptions,
+    models: RwLock<HashMap<String, Arc<ScoreService>>>,
+    reloads: AtomicU64,
+}
+
+impl ModelRegistry {
+    /// A registry whose services all run on `backend` with `opts`.
+    pub fn new(backend: Arc<dyn KernelBackend>, opts: ServeOptions) -> Self {
+        Self {
+            backend,
+            opts,
+            models: RwLock::new(HashMap::new()),
+            reloads: AtomicU64::new(0),
+        }
+    }
+
+    /// Publish `bundle` under `id`: spawn a new service if the id is new,
+    /// hot-reload the existing one otherwise. Returns the generation now
+    /// serving (1 for a fresh spawn).
+    pub fn publish(&self, id: &str, bundle: ModelBundle) -> Result<u64> {
+        if id.is_empty() || id.contains(char::is_whitespace) {
+            return Err(Error::InvalidArgument(format!(
+                "model id {id:?} must be non-empty and whitespace-free"
+            )));
+        }
+        // Fast path: the id exists — reload without the write lock (the
+        // swap is the service's own atomic; the map doesn't change).
+        if let Some(svc) = self.get(id) {
+            let generation = svc.reload(bundle)?;
+            self.reloads.fetch_add(1, Ordering::Relaxed);
+            return Ok(generation);
+        }
+        let svc = Arc::new(
+            ScoreService::builder(bundle)
+                .options(self.opts.clone())
+                .spawn(Arc::clone(&self.backend))?,
+        );
+        let mut map = self.models.write().expect("registry lock poisoned");
+        // Two concurrent first-publishes of one id race to this insert;
+        // the loser's freshly spawned service must not clobber the
+        // winner's (clients may already hold it) — reload it instead.
+        if let Some(existing) = map.get(id) {
+            let existing = Arc::clone(existing);
+            drop(map);
+            svc.close();
+            let generation = existing.reload(svc.bundle().as_ref().clone())?;
+            self.reloads.fetch_add(1, Ordering::Relaxed);
+            return Ok(generation);
+        }
+        map.insert(id.to_string(), svc);
+        Ok(1)
+    }
+
+    /// The running service for `id`, if any.
+    pub fn get(&self, id: &str) -> Option<Arc<ScoreService>> {
+        self.models.read().expect("registry lock poisoned").get(id).cloned()
+    }
+
+    /// Remove `id` and shut its service down (drain-and-reject; queued
+    /// requests answered, batcher joined). Errors if the id is unknown.
+    pub fn retire(&self, id: &str) -> Result<()> {
+        let svc = self
+            .models
+            .write()
+            .expect("registry lock poisoned")
+            .remove(id)
+            .ok_or_else(|| Error::InvalidArgument(format!("no model {id:?} in the registry")))?;
+        svc.close();
+        Ok(())
+    }
+
+    /// Registered model ids, sorted.
+    pub fn ids(&self) -> Vec<String> {
+        let mut ids: Vec<String> =
+            self.models.read().expect("registry lock poisoned").keys().cloned().collect();
+        ids.sort();
+        ids
+    }
+
+    /// Total successful hot reloads across all ids.
+    pub fn reloads(&self) -> u64 {
+        self.reloads.load(Ordering::Relaxed)
+    }
+
+    /// Per-model stats snapshot as JSON: `{ "reloads": n, "models":
+    /// { id: ServeStats... } }` — the wire front's `stats` verb.
+    pub fn stats_json(&self) -> Value {
+        let map = self.models.read().expect("registry lock poisoned");
+        let mut ids: Vec<&String> = map.keys().collect();
+        ids.sort();
+        let models = ids
+            .into_iter()
+            .map(|id| (id.as_str(), map[id].stats().to_json()))
+            .collect::<Vec<_>>();
+        json::obj(vec![
+            ("reloads", json::num(self.reloads() as f64)),
+            ("models", json::obj(models)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+    use crate::data::Matrix;
+    use crate::fcm::{NativeBackend, SessionAlgo, Variant};
+
+    fn bundle(seed: u64) -> (ModelBundle, Matrix) {
+        let data = blobs(128, 3, 3, 0.3, seed);
+        let mut centers = Matrix::zeros(3, 3);
+        for i in 0..3 {
+            centers.row_mut(i).copy_from_slice(data.features.row(i * 40));
+        }
+        (ModelBundle::new(centers, SessionAlgo::Fcm, Variant::Fast, 2.0), data.features)
+    }
+
+    fn registry() -> ModelRegistry {
+        ModelRegistry::new(Arc::new(NativeBackend), ServeOptions::default())
+    }
+
+    #[test]
+    fn publish_get_retire_roundtrip() {
+        let reg = registry();
+        let (b1, x) = bundle(31);
+        let (b2, _) = bundle(32);
+        assert_eq!(reg.publish("susy", b1).unwrap(), 1);
+        assert_eq!(reg.publish("higgs", b2).unwrap(), 1);
+        assert_eq!(reg.ids(), vec!["higgs".to_string(), "susy".to_string()]);
+        let svc = reg.get("susy").expect("published model resolves");
+        let u = svc.score(x.row(0)).unwrap();
+        assert!((u.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(reg.get("nope").is_none());
+        reg.retire("susy").unwrap();
+        assert!(reg.get("susy").is_none());
+        assert!(reg.retire("susy").is_err(), "double retire errors");
+        assert_eq!(reg.ids(), vec!["higgs".to_string()]);
+    }
+
+    #[test]
+    fn republish_hot_reloads_in_place() {
+        let reg = registry();
+        let (b1, x) = bundle(33);
+        let (b2, _) = bundle(34);
+        let new_centers = b2.centers.clone();
+        assert_eq!(reg.publish("m", b1).unwrap(), 1);
+        let held = reg.get("m").unwrap(); // client holds the service across the reload
+        assert_eq!(reg.publish("m", b2).unwrap(), 2);
+        assert_eq!(reg.reloads(), 1);
+        // The held handle *is* the reloaded service, not a stale one.
+        assert_eq!(held.generation(), 2);
+        let scored = held.score_stamped(x.row(5)).unwrap();
+        assert_eq!(scored.generation, 2);
+        let oracle = crate::fcm::native::memberships(&x, &new_centers, 2.0);
+        for (a, b) in scored.memberships.iter().zip(oracle.row(5)) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn retired_service_held_by_client_rejects_cleanly() {
+        let reg = registry();
+        let (b, x) = bundle(35);
+        reg.publish("m", b).unwrap();
+        let held = reg.get("m").unwrap();
+        reg.retire("m").unwrap();
+        match held.score(x.row(0)) {
+            Err(Error::ShuttingDown) => {}
+            other => panic!("retired service must reject with ShuttingDown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_ids_and_mismatched_reload_bundles_error() {
+        let reg = registry();
+        let (b, _) = bundle(36);
+        assert!(reg.publish("", b.clone()).is_err());
+        assert!(reg.publish("two words", b.clone()).is_err());
+        reg.publish("m", b).unwrap();
+        let narrow = ModelBundle::new(Matrix::zeros(3, 2), SessionAlgo::Fcm, Variant::Fast, 2.0);
+        assert!(reg.publish("m", narrow).is_err(), "dim-mismatched reload must fail");
+        assert_eq!(reg.get("m").unwrap().generation(), 1);
+    }
+}

@@ -3,8 +3,12 @@
 //! oracle within 1e-6 (and sum to 1), micro-batching actually coalesces,
 //! and the bulk ScoreJob labels a store identically to the single-shot
 //! path — on both the native and PJRT-shim backends, with fault-injected
-//! re-execution never corrupting the output store.
+//! re-execution never corrupting the output store. The registry/front
+//! layer rides the same oracles: hot reload stays generation-consistent
+//! under concurrent load, per-tenant quotas reject (and count) at
+//! admission, and wire framing errors are isolated per connection.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -13,12 +17,18 @@ use bigfcm::data::normalize::Scaler;
 use bigfcm::data::synth::blobs;
 use bigfcm::data::Matrix;
 use bigfcm::fcm::native::memberships;
-use bigfcm::fcm::{KernelBackend, NativeBackend, QuantMode, SessionAlgo, Variant};
+use bigfcm::fcm::{
+    BoundRows, Kernel, KernelBackend, NativeBackend, Partials, QuantMode, SessionAlgo, Variant,
+};
 use bigfcm::hdfs::BlockStore;
 use bigfcm::mapreduce::{Engine, EngineOptions};
 use bigfcm::prng::Pcg;
 use bigfcm::runtime::PjrtShimBackend;
-use bigfcm::serve::{dense_from_top_k, run_score_job, ModelBundle, ScoreService, ServeOptions};
+use bigfcm::serve::{
+    client_call, dense_from_top_k, run_score_job, FrontOptions, Lane, ModelBundle, ModelRegistry,
+    ScoreService, ServeFront, ServeOptions,
+};
+use bigfcm::Error;
 
 /// A deterministic trained-ish bundle over blobs: centers picked from the
 /// (normalized) data, min-max scaler attached.
@@ -111,7 +121,7 @@ fn service_rows_match_single_shot_on_native_and_shim() {
         ("pjrt-shim", Arc::new(PjrtShimBackend::new(128))),
     ];
     for (name, backend) in backends {
-        let svc = ScoreService::new(bundle.clone(), backend, ServeOptions::default()).unwrap();
+        let svc = ScoreService::builder(bundle.clone()).spawn(backend).unwrap();
         for k in (0..600).step_by(37) {
             let u = svc.score(raw.row(k)).unwrap();
             let s: f32 = u.iter().sum();
@@ -130,12 +140,11 @@ fn service_rows_match_single_shot_on_native_and_shim() {
 fn concurrent_clients_coalesce_and_percentiles_are_ordered() {
     let (bundle, raw) = fixture(6_200, 512, 4, 3);
     let svc = Arc::new(
-        ScoreService::new(
-            bundle,
-            Arc::new(NativeBackend),
-            ServeOptions { max_batch: 16, linger: Duration::from_millis(40), ..Default::default() },
-        )
-        .unwrap(),
+        ScoreService::builder(bundle)
+            .max_batch(16)
+            .linger(Duration::from_millis(40))
+            .spawn(Arc::new(NativeBackend))
+            .unwrap(),
     );
     let raw = Arc::new(raw);
     let handles: Vec<_> = (0..6)
@@ -357,6 +366,288 @@ fn bulk_score_job_survives_fault_injection_and_reopens() {
     std::fs::remove_dir_all(&faulty_dir).ok();
 }
 
+/// A second bundle in the same feature space with visibly different
+/// centers — the hot-reload payload.
+fn shifted_bundle(base: &ModelBundle, raw: &Matrix) -> ModelBundle {
+    let scaler = base.scaler.clone().unwrap();
+    let mut normalized = raw.clone();
+    scaler.apply(&mut normalized);
+    let (c, d, n) = (base.centers.rows(), base.centers.cols(), normalized.rows());
+    let mut centers = Matrix::zeros(c, d);
+    for i in 0..c {
+        centers.row_mut(i).copy_from_slice(normalized.row((i * (n / c) + 29) % n));
+    }
+    let mut b = base.clone();
+    b.centers = centers;
+    b
+}
+
+/// Acceptance: hot reload is observably atomic. Clients hammer the
+/// service across a registry re-publish; every response must match the
+/// oracle of exactly the generation it is stamped with — a torn read
+/// (old scaler with new centers, or a half-swapped center matrix) would
+/// match neither within 1e-6.
+#[test]
+fn registry_hot_reload_is_generation_consistent_under_load() {
+    let (b1, raw) = fixture(7_000, 512, 4, 3);
+    let b2 = shifted_bundle(&b1, &raw);
+    let scaler = b1.scaler.clone().unwrap();
+    let mut normalized = raw.clone();
+    scaler.apply(&mut normalized);
+    let oracle1 = memberships(&normalized, &b1.centers, 2.0);
+    let oracle2 = memberships(&normalized, &b2.centers, 2.0);
+
+    let reg = Arc::new(ModelRegistry::new(
+        Arc::new(NativeBackend),
+        ServeOptions { linger: Duration::from_micros(100), ..Default::default() },
+    ));
+    assert_eq!(reg.publish("m", b1).unwrap(), 1);
+    let svc = reg.get("m").unwrap();
+    let raw = Arc::new(raw);
+    let stop = Arc::new(AtomicBool::new(false));
+    let handles: Vec<_> = (0..4)
+        .map(|ci: usize| {
+            let svc = Arc::clone(&svc);
+            let raw = Arc::clone(&raw);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                let mut r = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let k = (ci * 101 + r * 7) % raw.rows();
+                    let scored = svc.score_stamped(raw.row(k)).unwrap();
+                    seen.push((k, scored.generation, scored.memberships));
+                    r += 1;
+                }
+                seen
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(30));
+    assert_eq!(reg.publish("m", b2).unwrap(), 2, "re-publish hot-reloads in place");
+    assert_eq!(reg.reloads(), 1);
+    std::thread::sleep(Duration::from_millis(30));
+    stop.store(true, Ordering::Relaxed);
+
+    let mut seen_by_gen = [0usize; 2];
+    for h in handles {
+        for (k, generation, u) in h.join().unwrap() {
+            let s: f32 = u.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "gen {generation} row {k} sums to {s}");
+            let oracle = match generation {
+                1 => oracle1.row(k),
+                2 => oracle2.row(k),
+                g => panic!("impossible generation {g}"),
+            };
+            seen_by_gen[generation as usize - 1] += 1;
+            for (i, (a, b)) in u.iter().zip(oracle).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-6,
+                    "gen {generation} row {k} center {i}: {a} vs oracle {b} — torn reload?"
+                );
+            }
+        }
+    }
+    assert!(
+        seen_by_gen[0] > 0 && seen_by_gen[1] > 0,
+        "load must span the swap (per-generation counts {seen_by_gen:?})"
+    );
+    // Requests admitted after the swap observe the new generation.
+    assert_eq!(svc.score_stamped(raw.row(0)).unwrap().generation, 2);
+}
+
+/// Delegates kernel math to [`NativeBackend`] but parks the first
+/// `score_chunk` call on a gate, pinning the batcher mid-execution so
+/// queue residency (and therefore quota admission) is deterministic.
+struct GatedBackend {
+    entered: AtomicU64,
+    release: AtomicBool,
+}
+
+impl KernelBackend for GatedBackend {
+    fn exact_partials(
+        &self,
+        kernel: Kernel,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        m: f64,
+    ) -> bigfcm::Result<Partials> {
+        NativeBackend.exact_partials(kernel, x, v, w, m)
+    }
+
+    fn partials_with_bounds(
+        &self,
+        kernel: Kernel,
+        x: &Matrix,
+        v: &Matrix,
+        w: &[f32],
+        m: f64,
+        rows: &mut BoundRows,
+    ) -> bigfcm::Result<Partials> {
+        NativeBackend.partials_with_bounds(kernel, x, v, w, m, rows)
+    }
+
+    fn name(&self) -> &'static str {
+        "gated-native"
+    }
+
+    fn score_chunk(
+        &self,
+        kernel: Kernel,
+        x: &Matrix,
+        v: &Matrix,
+        m: f64,
+        u: &mut Matrix,
+    ) -> bigfcm::Result<()> {
+        if self.entered.fetch_add(1, Ordering::SeqCst) == 0 {
+            let t0 = std::time::Instant::now();
+            while !self.release.load(Ordering::SeqCst) {
+                assert!(t0.elapsed() < Duration::from_secs(5), "gate never released");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        NativeBackend.score_chunk(kernel, x, v, m, u)
+    }
+}
+
+/// Acceptance: per-tenant admission quotas reject deterministically and
+/// the rejection is counted — while other tenants keep being admitted.
+#[test]
+fn tenant_quota_rejects_and_counts_at_admission() {
+    let (bundle, raw) = fixture(7_200, 256, 4, 3);
+    let backend =
+        Arc::new(GatedBackend { entered: AtomicU64::new(0), release: AtomicBool::new(false) });
+    let svc = Arc::new(
+        ScoreService::builder(bundle)
+            .max_batch(1)
+            .linger(Duration::ZERO)
+            .tenant_quota(2)
+            .spawn(Arc::clone(&backend) as Arc<dyn KernelBackend>)
+            .unwrap(),
+    );
+    let raw = Arc::new(raw);
+    let noisy = |k: usize| {
+        let svc = Arc::clone(&svc);
+        let raw = Arc::clone(&raw);
+        std::thread::spawn(move || svc.score_as(raw.row(k), "noisy", Lane::Normal))
+    };
+    let c1 = noisy(1);
+    // Wait until the batcher is parked inside the gated kernel (request 1
+    // claimed, queue empty again).
+    let t0 = std::time::Instant::now();
+    while backend.entered.load(Ordering::SeqCst) == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "batcher never reached the kernel");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let c2 = noisy(2);
+    let c3 = noisy(3);
+    // Wait until both are resident (queue peak counts admitted depth).
+    let t0 = std::time::Instant::now();
+    while svc.stats().queue_peak < 2 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "clients never became resident");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // Third resident same-tenant request: over quota, rejected up front.
+    match svc.score_as(raw.row(4), "noisy", Lane::Normal) {
+        Err(Error::QuotaExceeded(t)) => assert_eq!(t, "noisy"),
+        Err(e) => panic!("expected QuotaExceeded, got {e}"),
+        Ok(_) => panic!("expected QuotaExceeded, got a score"),
+    }
+    // A different tenant is unaffected by the noisy tenant's quota.
+    let quiet = {
+        let svc = Arc::clone(&svc);
+        let raw = Arc::clone(&raw);
+        std::thread::spawn(move || svc.score_as(raw.row(5), "quiet", Lane::High))
+    };
+    backend.release.store(true, Ordering::SeqCst);
+    for h in [c1, c2, c3, quiet] {
+        let scored = h.join().unwrap().unwrap();
+        let s: f32 = scored.memberships.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5, "admitted request row sums to {s}");
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.quota_rejections, 1, "exactly the over-quota admission was rejected");
+    assert_eq!(stats.requests, 4, "rejected requests never count as served");
+}
+
+/// Acceptance: the wire front isolates framing violations to their own
+/// connection (process and sibling connections unaffected), and hot
+/// reload works over the socket with generation-stamped replies.
+#[test]
+fn wire_front_isolates_framing_errors_and_reloads_over_socket() {
+    let (b1, raw) = fixture(7_300, 256, 4, 3);
+    let b2 = shifted_bundle(&b1, &raw);
+    let reg = Arc::new(ModelRegistry::new(Arc::new(NativeBackend), ServeOptions::default()));
+    reg.publish("m", b1).unwrap();
+    let front = ServeFront::bind(
+        Arc::clone(&reg),
+        "127.0.0.1:0",
+        FrontOptions::default(),
+        OverheadConfig::default(),
+    )
+    .unwrap();
+    let addr = front.local_addr().to_string();
+    let timeout = Duration::from_secs(5);
+    let csv: String =
+        raw.row(3).iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",");
+
+    // A healthy scoring round-trip, generation-stamped.
+    let reply = client_call(&addr, &format!("score m tenant-a normal {csv}"), timeout).unwrap();
+    assert!(reply.starts_with("ok 1 "), "unexpected score reply `{reply}`");
+
+    // An application-level error answers `err ...` and keeps serving.
+    let reply = client_call(&addr, "definitely-not-a-verb", timeout).unwrap();
+    assert!(
+        reply.starts_with("err ") && reply.contains("unknown command"),
+        "got `{reply}`"
+    );
+
+    // A framing violation (absurd length prefix) kills only its own
+    // connection.
+    {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        s.flush().unwrap();
+        let mut rest = Vec::new();
+        let _ = s.read_to_end(&mut rest); // best-effort err frame, then close
+    }
+    let t0 = std::time::Instant::now();
+    while front.stats().framing_errors < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "framing error never counted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(front.stats().framing_errors, 1);
+
+    // Sibling connections keep working: hot-reload over the wire, then
+    // score against the new generation.
+    let dir = tmp_dir("wire_reload");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m2.bfm");
+    b2.save(&path).unwrap();
+    let reply =
+        client_call(&addr, &format!("reload m {}", path.display()), timeout).unwrap();
+    assert_eq!(reply, "ok 2", "reload reply `{reply}`");
+    let reply = client_call(&addr, &format!("score m tenant-a high {csv}"), timeout).unwrap();
+    assert!(reply.starts_with("ok 2 "), "post-reload reply `{reply}`");
+    let memberships: Vec<f32> = reply
+        .split(' ')
+        .nth(2)
+        .unwrap()
+        .split(',')
+        .map(|t| t.parse().unwrap())
+        .collect();
+    let s: f32 = memberships.iter().sum();
+    assert!((s - 1.0).abs() < 1e-5, "wire memberships sum to {s}");
+
+    let stats = front.stats();
+    assert!(stats.scored >= 2);
+    assert!(stats.modelled_net_s > 0.0, "wire bytes must charge the SimClock");
+    front.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// The scaler-guard satellite end-to-end: a constant feature column must
 /// not poison serving (regression for the NaN-normalization hazard).
 #[test]
@@ -381,8 +672,7 @@ fn constant_feature_columns_serve_finite_memberships() {
         centers.row_mut(1).copy_from_slice(normalized.row(n / 2));
         let mut bundle = ModelBundle::new(centers, SessionAlgo::Fcm, Variant::Fast, 2.0);
         bundle.scaler = Some(scaler);
-        let svc =
-            ScoreService::new(bundle, Arc::new(NativeBackend), ServeOptions::default()).unwrap();
+        let svc = ScoreService::builder(bundle).spawn(Arc::new(NativeBackend)).unwrap();
         for k in [1usize, 57, 299] {
             let u = svc.score(features.row(k)).unwrap();
             assert!(u.iter().all(|v| v.is_finite()), "row {k} carries non-finite memberships");

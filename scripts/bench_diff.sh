@@ -148,9 +148,14 @@ SERVE_BASELINE="benches/BENCH_serve.baseline.json"
 SERVE_CURRENT="BENCH_serve.json"
 
 echo ""
-echo "== bigfcm serve-bench =="
+echo "== bigfcm serve-bench (open-loop) =="
+# Open-loop: arrivals at a fixed rate independent of completions, each
+# latency measured from the scheduled arrival — the mode whose p99 an SLO
+# can honestly be stated against (closed-loop p99 hides queueing delay
+# behind client back-to-back pacing).
 if ! cargo run --release --bin bigfcm -- serve-bench \
-        --clients 4 --records 500 --dataset-records 16384 --clusters 4 \
+        --dataset-records 16384 --clusters 4 \
+        --open-loop --rate 2000 --duration-s 2.0 --p99-target-us 5000 --inflight 64 \
         --json "$SERVE_CURRENT"; then
     echo "serve-bench run failed (soft): nothing to diff"
     exit 0
@@ -198,13 +203,23 @@ print()
 print("== serve-bench vs committed baseline ==")
 keys = [
     "throughput_rps",
+    "target_rps",
+    "achieved_rps",
     "batch_fill",
     "pad_utilization",
     "p50_us",
     "p95_us",
     "p99_us",
+    "open_p50_us",
+    "open_p95_us",
+    "open_p99_us",
+    "slo_p99_target_us",
+    "slo_attained",
+    "slo_ok_fraction",
     "queue_peak",
     "backpressure_waits",
+    "quota_rejections",
+    "deprioritized",
     "errors",
 ]
 print(f"{'counter':<22} {'baseline':>14} {'now':>14}")
@@ -226,6 +241,19 @@ if bp and cp and (cp - bp) / bp > threshold:
     issues.append(f"p95 latency {cp:.0f} us vs baseline {bp:.0f} ({(cp - bp) / bp:+.1%})")
 if cur.get("errors"):
     issues.append(f"{cur['errors']:.0f} request(s) errored")
+
+# Open-loop SLO trajectory: attainment flipping 1 -> 0 is the headline
+# regression; a large drop in the within-target fraction flags even when
+# the binary verdict holds.
+ba, ca = base.get("slo_attained"), cur.get("slo_attained")
+if ba == 1 and ca == 0:
+    issues.append(
+        f"SLO attainment dropped: open-loop p99 {cur.get('open_p99_us', 0):.0f} us exceeds "
+        f"target {cur.get('slo_p99_target_us', 0):.0f} us (baseline attained it)"
+    )
+bf, cf = base.get("slo_ok_fraction"), cur.get("slo_ok_fraction")
+if bf is not None and cf is not None and bf - cf > threshold:
+    issues.append(f"slo_ok_fraction {cf:.3f} vs baseline {bf:.3f} ({cf - bf:+.3f})")
 
 print()
 if issues:

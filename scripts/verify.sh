@@ -48,4 +48,47 @@ cargo run --release --bin bigfcm -- score \
     --dataset susy --records 4096 --topk 2 --quant i8 \
     --model "$SMOKE_DIR/smoke.bfm" --out "$SMOKE_DIR/scored"
 
+echo "== serve front smoke (bigfcm serve) =="
+# The network front end-to-end on an ephemeral port: start the server
+# (quick-trains a `default` model), score one record over the socket,
+# hot-reload a second bundle over the wire (generation must bump to 2),
+# then shut down cleanly via the wire verb.
+PORT_FILE="$SMOKE_DIR/serve.addr"
+cargo run --release --bin bigfcm -- serve \
+    --port 0 --port-file "$PORT_FILE" \
+    --dataset susy --dataset-records 2048 --clusters 3 &
+SERVE_PID=$!
+for _ in $(seq 1 150); do
+    [ -s "$PORT_FILE" ] && break
+    sleep 0.2
+done
+[ -s "$PORT_FILE" ] || { echo "serve never wrote $PORT_FILE"; kill "$SERVE_PID" 2>/dev/null; exit 1; }
+ADDR="$(cat "$PORT_FILE")"
+
+# susy records carry 18 features; any in-range row exercises the path.
+ROW="0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5,0.5"
+REPLY="$(cargo run --release --bin bigfcm -- serve --connect "$ADDR" \
+    --send "score default smoke normal $ROW")"
+case "$REPLY" in
+    "ok 1 "*) echo "serve smoke: scored over the socket on generation 1" ;;
+    *) echo "serve smoke: unexpected score reply: $REPLY"; kill "$SERVE_PID" 2>/dev/null; exit 1 ;;
+esac
+
+cargo run --release --bin bigfcm -- session \
+    --dataset susy --records 2048 --clusters 3 --iters 3 \
+    --save-model "$SMOKE_DIR/serve2.bfm"
+REPLY="$(cargo run --release --bin bigfcm -- serve --connect "$ADDR" \
+    --send "reload default $SMOKE_DIR/serve2.bfm")"
+[ "$REPLY" = "ok 2" ] || { echo "serve smoke: unexpected reload reply: $REPLY"; kill "$SERVE_PID" 2>/dev/null; exit 1; }
+REPLY="$(cargo run --release --bin bigfcm -- serve --connect "$ADDR" \
+    --send "score default smoke high $ROW")"
+case "$REPLY" in
+    "ok 2 "*) echo "serve smoke: scored on generation 2 after hot reload" ;;
+    *) echo "serve smoke: post-reload score reply: $REPLY"; kill "$SERVE_PID" 2>/dev/null; exit 1 ;;
+esac
+
+cargo run --release --bin bigfcm -- serve --connect "$ADDR" --send "shutdown" >/dev/null
+wait "$SERVE_PID"
+echo "serve smoke: clean shutdown"
+
 echo "verify: OK"
