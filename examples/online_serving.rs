@@ -47,6 +47,7 @@ fn main() {
         &params,
         &PruneConfig::default(),
         SessionOptions::default(),
+        None,
     )
     .expect("training session");
     println!(

@@ -400,6 +400,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             &params,
             &prune,
             SessionOptions::default(),
+            None,
         )?;
         let session_wall = t2.elapsed().as_secs_f64();
         for (i, s) in srun.per_iteration.iter().enumerate() {

@@ -164,6 +164,7 @@ fn main() {
         &params,
         &PruneConfig::disabled(),
         SessionOptions::per_job(),
+        None,
     )
     .expect("per-job arm");
 
@@ -177,6 +178,7 @@ fn main() {
         &params,
         &PruneConfig::dmin(),
         SessionOptions::default(),
+        None,
     )
     .expect("dmin session arm");
 
@@ -190,6 +192,7 @@ fn main() {
         &params,
         &PruneConfig::default(), // elkan bounds
         SessionOptions::default(),
+        None,
     )
     .expect("session arm");
 
@@ -207,6 +210,7 @@ fn main() {
         &params,
         &PruneConfig { quant: QuantMode::I8, ..PruneConfig::default() },
         SessionOptions::default(),
+        None,
     )
     .expect("quant session arm");
 
@@ -299,6 +303,29 @@ fn main() {
         ("dmin_modelled_s", json::num(session_dmin.sim.total_s())),
         ("slab_spilled_bytes", json::num(session.slab_spilled_bytes as f64)),
         ("slab_reloads", json::num(session.slab_reloads as f64)),
+        // Recovery counters: all zero on fault-free bench runs, but kept in
+        // the trajectory so a chaos-configured run diffs cleanly and
+        // bench_diff.sh can flag retries that became aborts.
+        (
+            "read_retries",
+            json::num(session.per_iteration.iter().map(|s| s.read_retries).sum::<u64>() as f64),
+        ),
+        (
+            "read_aborts",
+            json::num(session.per_iteration.iter().map(|s| s.read_aborts).sum::<u64>() as f64),
+        ),
+        (
+            "quarantines",
+            json::num(session.per_iteration.iter().map(|s| s.quarantines).sum::<u64>() as f64),
+        ),
+        (
+            "prefetch_errors",
+            json::num(session.per_iteration.iter().map(|s| s.prefetch_errors).sum::<u64>() as f64),
+        ),
+        ("slab_spill_retries", json::num(session.slab_spill_retries as f64)),
+        ("slab_spill_quarantines", json::num(session.slab_spill_quarantines as f64)),
+        ("backoff_s", json::num(session.sim.backoff_s)),
+        ("checkpoints_written", json::num(session.checkpoints_written as f64)),
         ("combine_depth", json::num(combine_depth as f64)),
         ("per_job_objective", json::num(per_job.result.objective)),
         ("session_objective", json::num(session.result.objective)),

@@ -210,11 +210,121 @@ pub struct ServeConfig {
     /// service queue at once. Requests beyond it are rejected immediately
     /// (`Error::QuotaExceeded`, counted in `ServeStats`). 0 = unlimited.
     pub tenant_quota: usize,
+    /// Per-request deadline in microseconds: a request still unscored when
+    /// its deadline expires is shed before batch admission and answered
+    /// `err deadline` instead of occupying compute (counted in
+    /// `ServeStats.deadline_shed`). 0 = no deadline.
+    pub deadline_us: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { max_batch: 64, pad_rows: 8, queue_cap: 1024, linger_us: 200, top_k: 3, tenant_quota: 0 }
+        Self {
+            max_batch: 64,
+            pad_rows: 8,
+            queue_cap: 1024,
+            linger_us: 200,
+            top_k: 3,
+            tenant_quota: 0,
+            deadline_us: 0,
+        }
+    }
+}
+
+/// Iteration-resident session settings beyond the pruning knobs of
+/// `[cluster]` — currently the checkpoint cadence of the recovery layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionConfig {
+    /// Write a checksummed centers+iteration+objective checkpoint every
+    /// this many iterations (`bigfcm session --checkpoint PATH`); a later
+    /// `--resume PATH` warm-starts from it. 0 disables checkpointing.
+    pub checkpoint_every: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self { checkpoint_every: 0 }
+    }
+}
+
+/// Deterministic fault-injection settings (the `[faults]` section; see
+/// `crate::faults::FaultPlan`). All rates default to 0 and the trip
+/// schedule to off, so an absent section means no plan is built at all —
+/// every fault check in the layers is a single `Option` test.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultsConfig {
+    /// Seed of the fault schedule: same seed ⇒ same faults, replayable.
+    pub seed: u64,
+    /// Per-site injection rates in [0, 1].
+    pub block_read: f64,
+    pub spill_read: f64,
+    pub spill_write: f64,
+    pub bundle_load: f64,
+    pub prefetch: f64,
+    pub map_task: f64,
+    pub connection: f64,
+    /// Probability an injected read fault is bit-flip corruption instead
+    /// of a transient I/O error.
+    pub corrupt: f64,
+    /// Latency-spike magnitude for connection faults, microseconds
+    /// (0 = connection faults always drop).
+    pub latency_us: u64,
+    /// Deterministic "trip exactly the Nth operation" schedule: the site
+    /// name (`block_read`, `spill_read`, …) or empty for off.
+    pub trip_site: String,
+    /// 0-based operation index `trip_site` trips at.
+    pub trip_at: u64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            block_read: 0.0,
+            spill_read: 0.0,
+            spill_write: 0.0,
+            bundle_load: 0.0,
+            prefetch: 0.0,
+            map_task: 0.0,
+            connection: 0.0,
+            corrupt: 0.0,
+            latency_us: 0,
+            trip_site: String::new(),
+            trip_at: 0,
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// Whether any fault can ever fire — `false` (the default) means the
+    /// chaos layer builds no plan and every site check is a no-op.
+    pub fn enabled(&self) -> bool {
+        [
+            self.block_read,
+            self.spill_read,
+            self.spill_write,
+            self.bundle_load,
+            self.prefetch,
+            self.map_task,
+            self.connection,
+        ]
+        .iter()
+        .any(|&r| r > 0.0)
+            || !self.trip_site.is_empty()
+    }
+
+    /// Every rate field, for validation.
+    fn rates(&self) -> [(&'static str, f64); 8] {
+        [
+            ("faults.block_read", self.block_read),
+            ("faults.spill_read", self.spill_read),
+            ("faults.spill_write", self.spill_write),
+            ("faults.bundle_load", self.bundle_load),
+            ("faults.prefetch", self.prefetch),
+            ("faults.map_task", self.map_task),
+            ("faults.connection", self.connection),
+            ("faults.corrupt", self.corrupt),
+        ]
     }
 }
 
@@ -377,6 +487,8 @@ pub struct Config {
     pub overhead: OverheadConfig,
     pub fcm: FcmConfig,
     pub serve: ServeConfig,
+    pub session: SessionConfig,
+    pub faults: FaultsConfig,
     pub backend: Backend,
     /// Directory containing `manifest.json` + `*.hlo.txt`.
     pub artifacts_dir: PathBuf,
@@ -393,6 +505,8 @@ impl Default for Config {
             overhead: OverheadConfig::default(),
             fcm: FcmConfig::default(),
             serve: ServeConfig::default(),
+            session: SessionConfig::default(),
+            faults: FaultsConfig::default(),
             backend: Backend::Auto,
             artifacts_dir: PathBuf::from("artifacts"),
             data_dir: PathBuf::from("data_cache"),
@@ -463,6 +577,20 @@ impl Config {
             "serve.linger_us" => self.serve.linger_us = num!(u64),
             "serve.top_k" => self.serve.top_k = num!(usize),
             "serve.tenant_quota" => self.serve.tenant_quota = num!(usize),
+            "serve.deadline_us" => self.serve.deadline_us = num!(u64),
+            "session.checkpoint_every" => self.session.checkpoint_every = num!(usize),
+            "faults.seed" => self.faults.seed = num!(u64),
+            "faults.block_read" => self.faults.block_read = num!(f64),
+            "faults.spill_read" => self.faults.spill_read = num!(f64),
+            "faults.spill_write" => self.faults.spill_write = num!(f64),
+            "faults.bundle_load" => self.faults.bundle_load = num!(f64),
+            "faults.prefetch" => self.faults.prefetch = num!(f64),
+            "faults.map_task" => self.faults.map_task = num!(f64),
+            "faults.connection" => self.faults.connection = num!(f64),
+            "faults.corrupt" => self.faults.corrupt = num!(f64),
+            "faults.latency_us" => self.faults.latency_us = num!(u64),
+            "faults.trip_site" => self.faults.trip_site = value.to_string(),
+            "faults.trip_at" => self.faults.trip_at = num!(u64),
             "overhead.job_startup_s" => self.overhead.job_startup_s = num!(f64),
             "overhead.task_launch_s" => self.overhead.task_launch_s = num!(f64),
             "overhead.shuffle_s_per_mib" => self.overhead.shuffle_s_per_mib = num!(f64),
@@ -512,6 +640,11 @@ impl Config {
         }
         if self.serve.top_k == 0 {
             return Err(Error::Config("serve.top_k must be positive".into()));
+        }
+        for (key, rate) in self.faults.rates() {
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(Error::Config(format!("{key} must be within [0, 1], got {rate}")));
+            }
         }
         Ok(())
     }
@@ -566,6 +699,38 @@ mod tests {
         assert_eq!(c.fcm.epsilon, 5e-3);
         assert!(!c.fcm.driver_preclustering);
         assert_eq!(c.backend, Backend::Native);
+    }
+
+    #[test]
+    fn faults_session_and_deadline_keys_dispatch() {
+        let mut c = Config::default();
+        assert!(!c.faults.enabled(), "default [faults] must be inert");
+        c.set_kv("faults.seed=42").unwrap();
+        c.set_kv("faults.block_read=0.25").unwrap();
+        c.set_kv("faults.spill_read=0.1").unwrap();
+        c.set_kv("faults.corrupt=0.5").unwrap();
+        c.set_kv("faults.latency_us=1500").unwrap();
+        c.set_kv("faults.trip_site=bundle_load").unwrap();
+        c.set_kv("faults.trip_at=3").unwrap();
+        c.set_kv("session.checkpoint_every=5").unwrap();
+        c.set_kv("serve.deadline_us=2000").unwrap();
+        assert_eq!(c.faults.seed, 42);
+        assert_eq!(c.faults.block_read, 0.25);
+        assert_eq!(c.faults.spill_read, 0.1);
+        assert_eq!(c.faults.corrupt, 0.5);
+        assert_eq!(c.faults.latency_us, 1500);
+        assert_eq!(c.faults.trip_site, "bundle_load");
+        assert_eq!(c.faults.trip_at, 3);
+        assert_eq!(c.session.checkpoint_every, 5);
+        assert_eq!(c.serve.deadline_us, 2000);
+        assert!(c.faults.enabled());
+        c.validate().unwrap();
+        c.set_kv("faults.block_read=1.5").unwrap();
+        assert!(c.validate().is_err(), "rates beyond 1 must be rejected");
+        // A trip schedule alone (all rates zero) still enables the layer.
+        let mut c = Config::default();
+        c.set_kv("faults.trip_site=block_read").unwrap();
+        assert!(c.faults.enabled());
     }
 
     #[test]

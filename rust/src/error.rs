@@ -30,6 +30,25 @@ pub enum Error {
     /// A tenant exceeded its admission quota; the request was rejected
     /// without queueing. Carries the tenant id.
     QuotaExceeded(String),
+    /// A map task exhausted its attempt budget. Structured (task id +
+    /// attempts) so callers can tell a genuinely dying task from a job
+    /// logic error; the pool stays reusable after this is returned.
+    TaskFailed { task: usize, attempts: usize },
+    /// An operation hit its wall-clock timeout (e.g. connect/read on the
+    /// serve wire). Distinct from `Job` so CLI callers can tell "down"
+    /// (connection refused) from "slow" (peer up but unresponsive).
+    Timeout(String),
+    /// A serve request's deadline expired before a batch admitted it; the
+    /// request was shed, never scored. Wire form: `err deadline ...`.
+    Deadline,
+    /// The serve queue is full and the request's lane is sheddable
+    /// (Normal-lane work is rejected first under overload; High-lane work
+    /// keeps backpressure-waiting).
+    Overloaded,
+    /// A session checkpoint failed to decode (corruption, truncation, a
+    /// foreign file, or an unknown version) — resume refuses it loudly
+    /// rather than warm-starting from garbage.
+    Checkpoint(String),
 }
 
 impl fmt::Display for Error {
@@ -50,6 +69,13 @@ impl fmt::Display for Error {
             Error::Bundle(m) => write!(f, "model bundle: {m}"),
             Error::ShuttingDown => write!(f, "score service is shutting down"),
             Error::QuotaExceeded(t) => write!(f, "tenant {t:?} exceeded admission quota"),
+            Error::TaskFailed { task, attempts } => {
+                write!(f, "map task {task} failed after {attempts} attempts")
+            }
+            Error::Timeout(m) => write!(f, "timed out: {m}"),
+            Error::Deadline => write!(f, "deadline expired before scoring"),
+            Error::Overloaded => write!(f, "service overloaded: request shed"),
+            Error::Checkpoint(m) => write!(f, "session checkpoint: {m}"),
         }
     }
 }

@@ -1,0 +1,432 @@
+//! Deterministic chaos layer: seeded fault injection at every I/O boundary.
+//!
+//! BigFCM's premise is that the MapReduce substrate makes FCM practical on
+//! *unreliable* commodity clusters, so the reproduction needs faults it can
+//! actually study. A [`FaultPlan`] is built once from the `[faults]` config
+//! section and threaded (as `Option<Arc<FaultPlan>>`) into every layer that
+//! touches a real or modelled device: block-store/cache reads, the slab's
+//! spill ring, model-bundle loads, the prefetcher, map-task bodies and
+//! serve-front connections. Each site calls [`FaultPlan::check`] per
+//! operation; `None` (the `[faults]`-absent default everywhere) is a single
+//! `Option` test on the hot path.
+//!
+//! Determinism is the whole point: the decision for operation *n* at a site
+//! is a pure hash of `(seed, site, n)` — independent of thread scheduling
+//! wherever the op counter itself is drawn deterministically (the engine
+//! pre-draws map-task faults in task order; read sites draw per block read,
+//! which chaos tests pin by fixing the access sequence). Same seed ⇒ same
+//! fault schedule ⇒ every chaos run is replayable.
+//!
+//! Recovery at the sites is bounded, never best-effort-forever: transient
+//! read faults retry up to [`MAX_READ_RETRIES`] times with the modelled
+//! exponential backoff of [`backoff_s`] charged to the [`SimClock`]'s
+//! `backoff_s` cost class (cluster time, not wall time — retries are cheap
+//! to simulate and expensive on a real cluster); detected corruption gets
+//! exactly one quarantine re-read before the site's degraded path engages
+//! (spill slots recompute, cache blocks refetch, bundle loads fail loudly).
+//!
+//! [`SimClock`]: crate::mapreduce::SimClock
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::config::FaultsConfig;
+use crate::error::{Error, Result};
+
+/// Bounded retry budget for transient read faults: the first read plus this
+/// many retries, after which the site degrades (recompute / refetch / error).
+pub const MAX_READ_RETRIES: u32 = 3;
+
+/// Modelled exponential backoff before retry `attempt` (1-based), in
+/// simulated cluster seconds: 0.1 s, 0.2 s, 0.4 s, … The schedule is charged
+/// to the clock, never slept — consistent with every other `SimClock` cost.
+pub fn backoff_s(attempt: u32) -> f64 {
+    0.1 * f64::from(1u32 << (attempt.saturating_sub(1)).min(16))
+}
+
+/// Total modelled backoff of `n` consecutive retry attempts (1..=n) — the
+/// closed form the property tests assert the clock charge against.
+pub fn backoff_total_s(attempts: u32) -> f64 {
+    (1..=attempts).map(backoff_s).sum()
+}
+
+/// The injectable fault sites — one per I/O boundary the layers expose.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// `BlockStore`/`BlockCache` demand read of a record block.
+    BlockRead,
+    /// Slab spill-ring slot read (session state reload).
+    SpillRead,
+    /// Slab spill-ring slot write.
+    SpillWrite,
+    /// `ModelBundle` load from disk.
+    BundleLoad,
+    /// Prefetcher background read (advisory — never retried).
+    Prefetch,
+    /// Map-task body (worker-task failure, pre-drawn per task attempt).
+    MapTask,
+    /// Serve-front connection handling.
+    Connection,
+}
+
+/// Every site, in the fixed order the per-site rate/counter arrays use.
+pub const ALL_SITES: [FaultSite; 7] = [
+    FaultSite::BlockRead,
+    FaultSite::SpillRead,
+    FaultSite::SpillWrite,
+    FaultSite::BundleLoad,
+    FaultSite::Prefetch,
+    FaultSite::MapTask,
+    FaultSite::Connection,
+];
+
+impl FaultSite {
+    fn index(self) -> usize {
+        match self {
+            FaultSite::BlockRead => 0,
+            FaultSite::SpillRead => 1,
+            FaultSite::SpillWrite => 2,
+            FaultSite::BundleLoad => 3,
+            FaultSite::Prefetch => 4,
+            FaultSite::MapTask => 5,
+            FaultSite::Connection => 6,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultSite::BlockRead => "block_read",
+            FaultSite::SpillRead => "spill_read",
+            FaultSite::SpillWrite => "spill_write",
+            FaultSite::BundleLoad => "bundle_load",
+            FaultSite::Prefetch => "prefetch",
+            FaultSite::MapTask => "map_task",
+            FaultSite::Connection => "connection",
+        }
+    }
+}
+
+impl std::str::FromStr for FaultSite {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        ALL_SITES
+            .into_iter()
+            .find(|site| site.as_str() == s)
+            .ok_or_else(|| {
+                Error::InvalidArgument(format!(
+                    "unknown fault site `{s}` (block_read|spill_read|spill_write|bundle_load|prefetch|map_task|connection)"
+                ))
+            })
+    }
+}
+
+/// A named fault kind, decided deterministically at [`FaultPlan::check`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Injected {
+    /// Transient I/O error — the read/write fails once; retry may succeed.
+    TransientIo,
+    /// Bit-flip corruption — the payload arrives, checksum-detectably torn.
+    Corrupt,
+    /// Latency spike of this many microseconds (charged, not slept).
+    Latency(u64),
+    /// Connection drop — the peer goes away mid-exchange.
+    ConnDrop,
+    /// Worker-task failure — the map attempt dies and is re-executed.
+    TaskFail,
+}
+
+/// SplitMix64 finalizer — the one hash the whole schedule derives from.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform draw in [0, 1) from `(seed, site, op, salt)` — pure, replayable.
+fn draw(seed: u64, site: usize, op: u64, salt: u64) -> f64 {
+    let h = mix(seed ^ (site as u64).wrapping_mul(0xA076_1D64_78BD_642F) ^ op ^ salt.wrapping_mul(0xE703_7ED1_A0B4_28DB));
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// The seeded fault schedule. Immutable after construction except for the
+/// per-site op/injection counters, so it is shared as `Arc<FaultPlan>`
+/// across the engine, slab, serve front and tests.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    rates: [f64; ALL_SITES.len()],
+    /// Probability an injected read fault is corruption (vs transient I/O).
+    corrupt: f64,
+    /// Latency-spike magnitude for connection faults, microseconds.
+    latency_us: u64,
+    /// Deterministic "trip at the Nth op of this site" schedule (0-based).
+    trip: Option<(FaultSite, u64)>,
+    /// Per-site operation counters — the op index of the next check.
+    ops: [AtomicU64; ALL_SITES.len()],
+    /// Per-site injected-fault counters (observability / test assertions).
+    injected: [AtomicU64; ALL_SITES.len()],
+}
+
+impl FaultPlan {
+    /// Build a plan from the `[faults]` config section; `None` when the
+    /// section is absent/inert, so every site's check compiles down to one
+    /// `Option` test with no plan allocated at all.
+    pub fn from_config(cfg: &FaultsConfig) -> Result<Option<Arc<FaultPlan>>> {
+        if !cfg.enabled() {
+            return Ok(None);
+        }
+        let trip = if cfg.trip_site.is_empty() {
+            None
+        } else {
+            Some((cfg.trip_site.parse::<FaultSite>()?, cfg.trip_at))
+        };
+        let mut rates = [0.0; ALL_SITES.len()];
+        rates[FaultSite::BlockRead.index()] = cfg.block_read;
+        rates[FaultSite::SpillRead.index()] = cfg.spill_read;
+        rates[FaultSite::SpillWrite.index()] = cfg.spill_write;
+        rates[FaultSite::BundleLoad.index()] = cfg.bundle_load;
+        rates[FaultSite::Prefetch.index()] = cfg.prefetch;
+        rates[FaultSite::MapTask.index()] = cfg.map_task;
+        rates[FaultSite::Connection.index()] = cfg.connection;
+        Ok(Some(Arc::new(FaultPlan {
+            seed: cfg.seed,
+            rates,
+            corrupt: cfg.corrupt,
+            latency_us: cfg.latency_us,
+            trip,
+            ops: Default::default(),
+            injected: Default::default(),
+        })))
+    }
+
+    /// A rate-only plan for tests: `rate` at exactly one site.
+    pub fn for_site(seed: u64, site: FaultSite, rate: f64, corrupt: f64) -> Arc<FaultPlan> {
+        let mut rates = [0.0; ALL_SITES.len()];
+        rates[site.index()] = rate;
+        Arc::new(FaultPlan {
+            seed,
+            rates,
+            corrupt,
+            latency_us: 0,
+            trip: None,
+            ops: Default::default(),
+            injected: Default::default(),
+        })
+    }
+
+    /// A schedule-only plan for tests: trip exactly the `at`-th operation
+    /// (0-based) of `site`, nothing else, ever.
+    pub fn tripping(seed: u64, site: FaultSite, at: u64) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            seed,
+            rates: [0.0; ALL_SITES.len()],
+            corrupt: 0.0,
+            latency_us: 0,
+            trip: Some((site, at)),
+            ops: Default::default(),
+            injected: Default::default(),
+        })
+    }
+
+    /// Like [`Self::tripping`], but the tripped fault is a corruption —
+    /// pins the checksum-quarantine paths without any statistical draw.
+    pub fn tripping_corrupt(seed: u64, site: FaultSite, at: u64) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            seed,
+            rates: [0.0; ALL_SITES.len()],
+            corrupt: 1.0,
+            latency_us: 0,
+            trip: Some((site, at)),
+            ops: Default::default(),
+            injected: Default::default(),
+        })
+    }
+
+    /// Decide whether this operation at `site` faults, and how. Advances
+    /// the site's op counter exactly once per call — a retry of the same
+    /// logical read is a *new* operation, so a transient fault usually
+    /// clears on retry (and a rate-1.0 site never does, pinning the
+    /// exhaustion paths).
+    pub fn check(&self, site: FaultSite) -> Option<Injected> {
+        let i = site.index();
+        let op = self.ops[i].fetch_add(1, Ordering::Relaxed);
+        let tripped = self.trip == Some((site, op));
+        if !tripped {
+            let rate = self.rates[i];
+            if rate <= 0.0 || draw(self.seed, i, op, 1) >= rate {
+                return None;
+            }
+        }
+        self.injected[i].fetch_add(1, Ordering::Relaxed);
+        Some(self.kind(site, op))
+    }
+
+    /// The fault kind for an injected fault at `(site, op)` — pure.
+    fn kind(&self, site: FaultSite, op: u64) -> Injected {
+        match site {
+            FaultSite::BlockRead | FaultSite::SpillRead | FaultSite::BundleLoad => {
+                if draw(self.seed, site.index(), op, 2) < self.corrupt {
+                    Injected::Corrupt
+                } else {
+                    Injected::TransientIo
+                }
+            }
+            FaultSite::SpillWrite | FaultSite::Prefetch => Injected::TransientIo,
+            FaultSite::MapTask => Injected::TaskFail,
+            FaultSite::Connection => {
+                if self.latency_us > 0 && draw(self.seed, site.index(), op, 2) < 0.5 {
+                    Injected::Latency(self.latency_us)
+                } else {
+                    Injected::ConnDrop
+                }
+            }
+        }
+    }
+
+    /// The plan's master seed (sites that physically corrupt bytes derive
+    /// their flip position from it, keeping the whole schedule replayable).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Operations checked at `site` so far.
+    pub fn ops_at(&self, site: FaultSite) -> u64 {
+        self.ops[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Faults injected at `site` so far.
+    pub fn injected_at(&self, site: FaultSite) -> u64 {
+        self.injected[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Faults injected across all sites.
+    pub fn injected_total(&self) -> u64 {
+        ALL_SITES.iter().map(|&s| self.injected_at(s)).sum()
+    }
+}
+
+/// Flip one payload byte — the canonical "torn bytes" simulation for
+/// [`Injected::Corrupt`]: the real checksum machinery at the site must
+/// detect it, which is exactly what the quarantine paths exercise.
+pub fn corrupt_image(img: &mut [u8], seed: u64) {
+    if img.is_empty() {
+        return;
+    }
+    let at = (mix(seed) as usize) % img.len();
+    img[at] ^= 0x40;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schedule(plan: &FaultPlan, site: FaultSite, n: usize) -> Vec<Option<Injected>> {
+        (0..n).map(|_| plan.check(site)).collect()
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let a = FaultPlan::for_site(42, FaultSite::BlockRead, 0.3, 0.5);
+        let b = FaultPlan::for_site(42, FaultSite::BlockRead, 0.3, 0.5);
+        assert_eq!(
+            schedule(&a, FaultSite::BlockRead, 500),
+            schedule(&b, FaultSite::BlockRead, 500)
+        );
+        assert!(a.injected_at(FaultSite::BlockRead) > 0, "rate 0.3 over 500 ops must fire");
+        let c = FaultPlan::for_site(43, FaultSite::BlockRead, 0.3, 0.5);
+        assert_ne!(
+            schedule(&a, FaultSite::BlockRead, 500),
+            schedule(&c, FaultSite::BlockRead, 500),
+            "different seed must shift the schedule"
+        );
+    }
+
+    #[test]
+    fn rate_matches_frequency_roughly() {
+        let plan = FaultPlan::for_site(7, FaultSite::SpillRead, 0.2, 0.0);
+        let hits = schedule(&plan, FaultSite::SpillRead, 5000)
+            .iter()
+            .filter(|f| f.is_some())
+            .count();
+        let freq = hits as f64 / 5000.0;
+        assert!((freq - 0.2).abs() < 0.03, "observed rate {freq}");
+    }
+
+    #[test]
+    fn zero_rate_never_fires_and_other_sites_stay_silent() {
+        let plan = FaultPlan::for_site(1, FaultSite::BlockRead, 1.0, 0.0);
+        for _ in 0..100 {
+            assert_eq!(plan.check(FaultSite::SpillRead), None);
+            assert_eq!(plan.check(FaultSite::MapTask), None);
+        }
+        assert_eq!(plan.injected_total(), 0);
+    }
+
+    #[test]
+    fn trip_fires_exactly_once_at_nth_op() {
+        let plan = FaultPlan::tripping(9, FaultSite::BundleLoad, 2);
+        assert_eq!(plan.check(FaultSite::BundleLoad), None);
+        assert_eq!(plan.check(FaultSite::BundleLoad), None);
+        assert!(plan.check(FaultSite::BundleLoad).is_some(), "op 2 must trip");
+        for _ in 0..50 {
+            assert_eq!(plan.check(FaultSite::BundleLoad), None);
+        }
+        assert_eq!(plan.injected_at(FaultSite::BundleLoad), 1);
+    }
+
+    #[test]
+    fn kinds_follow_site_and_corrupt_rate() {
+        let plan = FaultPlan::for_site(3, FaultSite::BlockRead, 1.0, 1.0);
+        assert_eq!(plan.check(FaultSite::BlockRead), Some(Injected::Corrupt));
+        let plan = FaultPlan::for_site(3, FaultSite::BlockRead, 1.0, 0.0);
+        assert_eq!(plan.check(FaultSite::BlockRead), Some(Injected::TransientIo));
+        let plan = FaultPlan::for_site(3, FaultSite::MapTask, 1.0, 0.0);
+        assert_eq!(plan.check(FaultSite::MapTask), Some(Injected::TaskFail));
+        let plan = FaultPlan::for_site(3, FaultSite::Connection, 1.0, 0.0);
+        assert_eq!(plan.check(FaultSite::Connection), Some(Injected::ConnDrop));
+    }
+
+    #[test]
+    fn backoff_schedule_is_exponential_and_summable() {
+        assert!((backoff_s(1) - 0.1).abs() < 1e-12);
+        assert!((backoff_s(2) - 0.2).abs() < 1e-12);
+        assert!((backoff_s(3) - 0.4).abs() < 1e-12);
+        assert!((backoff_total_s(3) - 0.7).abs() < 1e-12);
+        assert_eq!(backoff_total_s(0), 0.0);
+    }
+
+    #[test]
+    fn corrupt_image_flips_one_byte_deterministically() {
+        let orig = vec![0u8; 64];
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        corrupt_image(&mut a, 5);
+        corrupt_image(&mut b, 5);
+        assert_eq!(a, b);
+        let flipped = a.iter().zip(&orig).filter(|(x, y)| x != y).count();
+        assert_eq!(flipped, 1);
+        corrupt_image(&mut [], 5); // empty image must not panic
+    }
+
+    #[test]
+    fn config_roundtrip_builds_expected_plan() {
+        let mut cfg = FaultsConfig::default();
+        assert!(FaultPlan::from_config(&cfg).unwrap().is_none(), "inert section => no plan");
+        cfg.seed = 11;
+        cfg.block_read = 0.5;
+        let plan = FaultPlan::from_config(&cfg).unwrap().expect("rates > 0 => plan");
+        let mut saw = false;
+        for _ in 0..50 {
+            saw |= plan.check(FaultSite::BlockRead).is_some();
+        }
+        assert!(saw);
+        cfg.block_read = 0.0;
+        cfg.trip_site = "spill_read".into();
+        cfg.trip_at = 0;
+        let plan = FaultPlan::from_config(&cfg).unwrap().expect("trip schedule => plan");
+        assert!(plan.check(FaultSite::SpillRead).is_some());
+        cfg.trip_site = "bogus".into();
+        assert!(FaultPlan::from_config(&cfg).is_err(), "unknown trip site must be loud");
+    }
+}

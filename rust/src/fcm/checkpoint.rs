@@ -1,0 +1,260 @@
+//! Checksummed session checkpoints — the recovery half of the chaos layer.
+//!
+//! Every `session.checkpoint_every` iterations the convergence loop writes
+//! the full resumable state (centers, per-center weight mass, iteration
+//! count, objective) to a single checkpoint file. The image reuses the
+//! crate's codec discipline: length-prefixed fields through the
+//! [`crate::fcm::backend`] helpers, an FNV-1a trailer over the whole
+//! payload, and a magic/version header — so a torn write, a bit flip or a
+//! file that is not a checkpoint at all is rejected loudly at load time
+//! instead of silently warm-starting a session from garbage.
+//!
+//! Resume semantics (`bigfcm session --resume <path>`): the loaded centers
+//! become the seed `v0` and the iteration budget continues from
+//! `iteration`, so a run killed at iteration k and resumed converges to the
+//! same centers as the uninterrupted run (bitwise with pruning off — the
+//! per-iteration math is a pure function of the incoming centers).
+
+use std::path::Path;
+
+use crate::data::Matrix;
+use crate::error::{Error, Result};
+use crate::fcm::backend::{put_f64, put_f64s, put_matrix, put_u32, put_u64, put_u8, Cur};
+use crate::fcm::{SessionAlgo, Variant};
+use crate::hdfs::fnv1a;
+
+/// Checkpoint file magic (little-endian first field of every image).
+pub const CHECKPOINT_MAGIC: u32 = 0xB16F_C4EC;
+/// Bumped on any layout change; loaders reject unknown versions.
+pub const CHECKPOINT_VERSION: u8 = 1;
+
+/// The resumable state of an iteration-resident convergence loop.
+#[derive(Clone, Debug)]
+pub struct SessionCheckpoint {
+    /// Which per-iteration partials the session computes.
+    pub algo: SessionAlgo,
+    /// FCM chunk-math variant (ignored for K-Means, stored anyway so a
+    /// resume cannot silently switch math).
+    pub variant: Variant,
+    /// Iterations completed when this checkpoint was taken.
+    pub iteration: u64,
+    /// Objective after `iteration` iterations.
+    pub objective: f64,
+    /// Fuzzifier the run used — resume refuses nothing, but the CLI prints
+    /// it so a mismatched `--m` is visible.
+    pub m: f64,
+    /// Centers after `iteration` iterations (the resume seed).
+    pub centers: Matrix,
+    /// Per-center weight mass after `iteration` iterations.
+    pub weights: Vec<f64>,
+}
+
+fn algo_tag(a: SessionAlgo) -> u8 {
+    match a {
+        SessionAlgo::Fcm => 0,
+        SessionAlgo::KMeans => 1,
+    }
+}
+
+fn variant_tag(v: Variant) -> u8 {
+    match v {
+        Variant::Fast => 0,
+        Variant::Classic => 1,
+    }
+}
+
+impl SessionCheckpoint {
+    /// Serialise to the checksummed image (header, fields, FNV-1a trailer).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b =
+            Vec::with_capacity(self.centers.rows() * self.centers.cols() * 4 + 128);
+        put_u32(&mut b, CHECKPOINT_MAGIC);
+        put_u8(&mut b, CHECKPOINT_VERSION);
+        put_u8(&mut b, algo_tag(self.algo));
+        put_u8(&mut b, variant_tag(self.variant));
+        put_u64(&mut b, self.iteration);
+        put_f64(&mut b, self.objective);
+        put_f64(&mut b, self.m);
+        put_matrix(&mut b, &self.centers);
+        put_f64s(&mut b, &self.weights);
+        let sum = fnv1a(&b);
+        put_u64(&mut b, sum);
+        b
+    }
+
+    /// Decode an image, rejecting corruption, truncation, foreign files and
+    /// unknown versions with a structured [`Error::Checkpoint`].
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        fn fail(m: &str) -> Error {
+            Error::Checkpoint(m.to_string())
+        }
+        if bytes.len() < 8 {
+            return Err(fail("truncated (shorter than its checksum trailer)"));
+        }
+        let (payload, trailer) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(trailer.try_into().expect("8-byte trailer"));
+        let computed = fnv1a(payload);
+        if stored != computed {
+            return Err(Error::Checkpoint(format!(
+                "checksum mismatch (stored {stored:#018x}, computed {computed:#018x}) — \
+                 refusing to resume from a corrupt checkpoint"
+            )));
+        }
+        let mut c = Cur::new(payload);
+        match c.u32() {
+            Some(CHECKPOINT_MAGIC) => {}
+            Some(other) => {
+                return Err(Error::Checkpoint(format!(
+                    "bad magic {other:#010x} — not a session checkpoint"
+                )))
+            }
+            None => return Err(fail("truncated header")),
+        }
+        match c.u8() {
+            Some(CHECKPOINT_VERSION) => {}
+            Some(v) => {
+                return Err(Error::Checkpoint(format!("unknown checkpoint version {v}")))
+            }
+            None => return Err(fail("truncated header")),
+        }
+        let algo = match c.u8() {
+            Some(0) => SessionAlgo::Fcm,
+            Some(1) => SessionAlgo::KMeans,
+            _ => return Err(fail("bad algo tag")),
+        };
+        let variant = match c.u8() {
+            Some(0) => Variant::Fast,
+            Some(1) => Variant::Classic,
+            _ => return Err(fail("bad variant tag")),
+        };
+        let iteration = c.u64().ok_or_else(|| fail("truncated iteration"))?;
+        let objective = c.f64().ok_or_else(|| fail("truncated objective"))?;
+        let m = c.f64().ok_or_else(|| fail("truncated fuzzifier"))?;
+        let centers = c.matrix().ok_or_else(|| fail("truncated centers"))?;
+        let weights = c.f64s().ok_or_else(|| fail("truncated weights"))?;
+        if weights.len() != centers.rows() {
+            return Err(Error::Checkpoint(format!(
+                "weights length {} != centers rows {}",
+                weights.len(),
+                centers.rows()
+            )));
+        }
+        if !c.done() {
+            return Err(fail("trailing bytes after checkpoint payload"));
+        }
+        Ok(Self { algo, variant, iteration, objective, m, centers, weights })
+    }
+
+    /// Write the image to `path` (creating parent directories), returning
+    /// the bytes written — the per-checkpoint overhead figure.
+    pub fn save(&self, path: &Path) -> Result<u64> {
+        let img = self.encode();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(|e| Error::io(parent, e))?;
+            }
+        }
+        std::fs::write(path, &img).map_err(|e| Error::io(path, e))?;
+        Ok(img.len() as u64)
+    }
+
+    /// Read and decode `path`, prefixing decode failures with the path so
+    /// "which checkpoint was corrupt" survives into the CLI error.
+    pub fn load(path: &Path) -> Result<Self> {
+        let img = std::fs::read(path).map_err(|e| Error::io(path, e))?;
+        Self::decode(&img).map_err(|e| match e {
+            Error::Checkpoint(m) => {
+                Error::Checkpoint(format!("{}: {m}", path.display()))
+            }
+            other => other,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::corrupt_image;
+
+    fn sample() -> SessionCheckpoint {
+        SessionCheckpoint {
+            algo: SessionAlgo::Fcm,
+            variant: Variant::Fast,
+            iteration: 7,
+            objective: 123.456789,
+            m: 2.0,
+            centers: Matrix::from_rows(&[vec![1.5, -2.25, 0.125], vec![4.0, 5.5, -6.75]]),
+            weights: vec![10.0, 20.5],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise() {
+        let cp = sample();
+        let back = SessionCheckpoint::decode(&cp.encode()).unwrap();
+        assert_eq!(back.algo, SessionAlgo::Fcm);
+        assert_eq!(back.variant, Variant::Fast);
+        assert_eq!(back.iteration, 7);
+        assert_eq!(back.objective.to_bits(), cp.objective.to_bits());
+        assert_eq!(back.m.to_bits(), cp.m.to_bits());
+        assert_eq!(back.centers.as_slice(), cp.centers.as_slice());
+        assert_eq!(back.weights, cp.weights);
+    }
+
+    #[test]
+    fn save_load_roundtrips_on_disk() {
+        let dir = std::env::temp_dir().join(format!("bigfcm_ckpt_{}", std::process::id()));
+        let path = dir.join("nested").join("s.ckpt");
+        let cp = sample();
+        let bytes = cp.save(&path).unwrap();
+        assert_eq!(bytes, cp.encode().len() as u64);
+        let back = SessionCheckpoint::load(&path).unwrap();
+        assert_eq!(back.centers.as_slice(), cp.centers.as_slice());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn any_single_byte_flip_is_rejected() {
+        let img = sample().encode();
+        // corrupt_image picks a seeded byte; sweep several seeds so flips
+        // land in the header, the payload and the trailer across runs.
+        for seed in 0..16u64 {
+            let mut bad = img.clone();
+            corrupt_image(&mut bad, seed);
+            assert_ne!(bad, img, "seed {seed} corrupted nothing");
+            let err = SessionCheckpoint::decode(&bad).unwrap_err();
+            assert!(
+                matches!(err, Error::Checkpoint(_)),
+                "seed {seed}: wrong error {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_and_foreign_magic_are_rejected() {
+        let img = sample().encode();
+        assert!(SessionCheckpoint::decode(&img[..4]).is_err());
+        assert!(SessionCheckpoint::decode(&[]).is_err());
+        // A well-checksummed image with the wrong magic is "not a
+        // checkpoint", not "corrupt": rebuild the trailer after the edit.
+        let mut foreign = img[..img.len() - 8].to_vec();
+        foreign[0] ^= 0xFF;
+        let sum = fnv1a(&foreign);
+        put_u64(&mut foreign, sum);
+        let err = SessionCheckpoint::decode(&foreign).unwrap_err();
+        assert!(err.to_string().contains("not a session checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn load_error_carries_path() {
+        let dir = std::env::temp_dir().join(format!("bigfcm_ckpt_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.ckpt");
+        let mut img = sample().encode();
+        corrupt_image(&mut img, 3);
+        std::fs::write(&path, &img).unwrap();
+        let err = SessionCheckpoint::load(&path).unwrap_err();
+        assert!(err.to_string().contains("corrupt.ckpt"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

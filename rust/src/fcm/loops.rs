@@ -19,6 +19,7 @@ use std::sync::{Arc, Mutex};
 use crate::data::Matrix;
 use crate::error::{Error, Result};
 use crate::fcm::backend::{BlockBounds, BoundConfig, BoundModel, Kernel, KernelBackend, QuantMode};
+use crate::fcm::checkpoint::SessionCheckpoint;
 use crate::fcm::{max_center_shift2, ClusterResult, Partials};
 use crate::hdfs::BlockStore;
 use crate::mapreduce::{
@@ -259,6 +260,19 @@ impl PruneConfig {
     }
 }
 
+/// Periodic checkpointing of an iteration-resident session (the recovery
+/// half of the chaos layer; see [`crate::fcm::checkpoint`]).
+#[derive(Clone, Debug)]
+pub struct CheckpointPolicy {
+    /// Write a checkpoint after every this many completed iterations
+    /// (`session.checkpoint_every`; 0 disables even when a path is set).
+    pub every: usize,
+    /// Checkpoint file, overwritten in place each time — a resume only
+    /// ever wants the newest state, and the checksum trailer catches a
+    /// torn overwrite.
+    pub path: PathBuf,
+}
+
 /// Which per-iteration partials the session loop computes. The FCM arm
 /// takes its Fast/Classic chunk math from [`FcmParams::variant`], exactly
 /// like [`run_fcm`] — one source of truth, no redundant specification.
@@ -475,6 +489,18 @@ pub struct SessionRunResult {
     pub slab_spilled_bytes: u64,
     /// Slab states reloaded from the spill ring across the run.
     pub slab_reloads: u64,
+    /// Transient-fault retries taken by spill-ring slot reads across the
+    /// run (chaos runs only).
+    pub slab_spill_retries: u64,
+    /// Checksum-quarantine re-reads of spill-ring slots across the run
+    /// (chaos runs only).
+    pub slab_spill_quarantines: u64,
+    /// Session checkpoints written across the run (0 without a
+    /// [`CheckpointPolicy`]).
+    pub checkpoints_written: u64,
+    /// Total checkpoint bytes written — the recovery-overhead figure of
+    /// the fault-tolerance experiments table.
+    pub checkpoint_bytes: u64,
     /// Per-iteration job stats, with `records_pruned`, `slab_bytes` and
     /// `slab_evictions` stamped in.
     pub per_iteration: Vec<JobStats>,
@@ -508,6 +534,7 @@ pub fn run_fcm_session(
     params: &FcmParams,
     prune: &PruneConfig,
     options: SessionOptions,
+    checkpoint: Option<&CheckpointPolicy>,
 ) -> Result<SessionRunResult> {
     if v0.cols() != store.cols() {
         return Err(Error::Clustering("seed center dims mismatch".into()));
@@ -516,11 +543,14 @@ pub fn run_fcm_session(
         return Err(Error::Clustering("no seed centers".into()));
     }
     let sim_before = engine.clock().cost();
+    // The slab's spill ring sits under the same chaos plan as the engine's
+    // block reads: `[faults]` covers every I/O boundary of a session run.
+    let fault_plan = engine.options().faults.clone();
     let spill = prune
         .spill_dir
         .as_ref()
         .filter(|_| prune.enabled)
-        .map(|dir| SpillConfig::new(dir.clone()));
+        .map(|dir| SpillConfig::new(dir.clone()).with_faults(fault_plan.clone()));
     let slab = Arc::new(StateSlab::new(
         if prune.enabled { prune.slab_bytes } else { 0 },
         spill,
@@ -546,6 +576,9 @@ pub fn run_fcm_session(
     let mut quant_build_s_total = 0.0f64;
     let mut peak_resident_bytes = 0u64;
     let mut spill_io_charged = 0u64;
+    let mut slab_backoff_charged = 0.0f64;
+    let mut checkpoints_written = 0u64;
+    let mut checkpoint_bytes = 0u64;
     let mut per_iteration: Vec<JobStats> = Vec::new();
     // Adaptive refresh cap (ROADMAP iteration-residency item): while the
     // shift trajectory keeps shrinking geometrically the cap doubles (up
@@ -572,6 +605,8 @@ pub fn run_fcm_session(
         stats.slab_evictions = slab.evictions();
         stats.slab_spilled_bytes = slab.spilled_bytes();
         stats.slab_reloads = slab.reloads();
+        stats.slab_spill_retries = slab.spill_retries();
+        stats.slab_spill_quarantines = slab.spill_quarantines();
         records_pruned_total += pruned_this;
         records_pruned_quant_total += pruned_quant_this;
         quant_sidecar_peak = quant_sidecar_peak.max(sidecar_bytes_this);
@@ -584,6 +619,14 @@ pub fn run_fcm_session(
         if spill_io > spill_io_charged {
             session.charge_scan(spill_io - spill_io_charged);
             spill_io_charged = spill_io;
+        }
+        // Modelled retry backoff the ring's recovered reads accrued inside
+        // map tasks: fold each iteration's delta into the clock exactly
+        // once (the block cache's own backoff is already folded per job).
+        let slab_backoff = slab.backoff_seconds();
+        if slab_backoff > slab_backoff_charged {
+            session.charge_backoff(slab_backoff - slab_backoff_charged);
+            slab_backoff_charged = slab_backoff;
         }
         // The per-job meters reset between iterations; fold each
         // iteration's peak into the loop-wide envelope figure.
@@ -610,6 +653,25 @@ pub fn run_fcm_session(
         }
         prev_shift = shift;
         per_iteration.push(stats);
+        if let Some(cp) = checkpoint {
+            if cp.every > 0 && it % cp.every == 0 {
+                let written = SessionCheckpoint {
+                    algo,
+                    variant: params.variant,
+                    iteration: it as u64,
+                    objective,
+                    m: params.m,
+                    centers: v.clone(),
+                    weights: weights.clone(),
+                }
+                .save(&cp.path)?;
+                checkpoints_written += 1;
+                checkpoint_bytes += written;
+                // A checkpoint is a real disk transfer — charge it like
+                // the spill ring's, so recovery overhead shows up in sim.
+                session.charge_scan(written);
+            }
+        }
         if shift <= params.epsilon {
             if prune.enabled && pruned_this > 0 {
                 // Confirm convergence with an exact pass: drop every
@@ -635,6 +697,10 @@ pub fn run_fcm_session(
         quant_build_s: quant_build_s_total,
         slab_spilled_bytes: slab.spilled_bytes(),
         slab_reloads: slab.reloads(),
+        slab_spill_retries: slab.spill_retries(),
+        slab_spill_quarantines: slab.spill_quarantines(),
+        checkpoints_written,
+        checkpoint_bytes,
         per_iteration,
         peak_resident_bytes,
         sim,
@@ -797,6 +863,7 @@ mod tests {
             &params,
             &PruneConfig::disabled(),
             SessionOptions::default(),
+            None,
         )
         .unwrap();
         let mut pruned_engine = Engine::new(EngineOptions::default(), OverheadConfig::default());
@@ -809,6 +876,7 @@ mod tests {
             &params,
             &PruneConfig::default(),
             SessionOptions::default(),
+            None,
         )
         .unwrap();
         assert!(exact.result.converged, "exact arm did not converge");
@@ -848,6 +916,7 @@ mod tests {
             &params,
             &PruneConfig::disabled(),
             SessionOptions::default(),
+            None,
         )
         .unwrap();
         let mut e2 = Engine::new(EngineOptions::default(), OverheadConfig::default());
@@ -860,6 +929,7 @@ mod tests {
             &params,
             &PruneConfig::default(),
             SessionOptions::default(),
+            None,
         )
         .unwrap();
         assert!(exact.result.converged && pruned.result.converged);
@@ -883,6 +953,7 @@ mod tests {
             &params,
             &PruneConfig::default(),
             SessionOptions::default(),
+            None,
         )
         .unwrap();
         assert!(run.result.converged);
@@ -903,6 +974,7 @@ mod tests {
             &params,
             &PruneConfig::default(),
             SessionOptions::default(),
+            None,
         )
         .is_err());
         let no_seeds = Matrix::zeros(0, 3);
@@ -915,6 +987,7 @@ mod tests {
             &params,
             &PruneConfig::default(),
             SessionOptions::default(),
+            None,
         )
         .is_err());
     }
@@ -985,6 +1058,7 @@ mod tests {
             &params,
             &PruneConfig::disabled(),
             SessionOptions::default(),
+            None,
         )
         .unwrap();
         let prune = PruneConfig { adaptive_refresh: true, ..PruneConfig::default() };
@@ -998,6 +1072,7 @@ mod tests {
             &params,
             &prune,
             SessionOptions::default(),
+            None,
         )
         .unwrap();
         assert!(adaptive.result.converged);
@@ -1026,9 +1101,88 @@ mod tests {
             &params,
             &fixed,
             SessionOptions::default(),
+            None,
         )
         .unwrap();
         assert!(fixed_run.per_iteration.iter().all(|s| s.refresh_cap == base));
+    }
+
+    /// The chaos layer's recovery contract: a run killed at iteration k
+    /// and resumed from its checkpoint converges to bitwise the same
+    /// centers as the uninterrupted run (pruning off — each iteration is a
+    /// pure function of the incoming centers).
+    #[test]
+    fn kill_at_k_then_resume_converges_to_same_centers() {
+        let (store, v0, params, backend) = session_setup(61);
+        let mut e1 = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let full = run_fcm_session(
+            &mut e1,
+            &store,
+            Arc::clone(&backend),
+            SessionAlgo::Fcm,
+            v0.clone(),
+            &params,
+            &PruneConfig::disabled(),
+            SessionOptions::default(),
+            None,
+        )
+        .unwrap();
+        assert!(full.result.converged);
+        assert!(full.result.iterations > 3, "control too short to kill at 3");
+        assert_eq!(full.checkpoints_written, 0, "no policy, no checkpoints");
+
+        // Kill at iteration 3 (max_iterations as the kill switch) with a
+        // checkpoint after every iteration.
+        let dir =
+            std::env::temp_dir().join(format!("bigfcm_ckpt_loop_{}", std::process::id()));
+        let policy = CheckpointPolicy { every: 1, path: dir.join("s.ckpt") };
+        let killed_params = FcmParams { max_iterations: 3, ..params };
+        let mut e2 = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let killed = run_fcm_session(
+            &mut e2,
+            &store,
+            Arc::clone(&backend),
+            SessionAlgo::Fcm,
+            v0.clone(),
+            &killed_params,
+            &PruneConfig::disabled(),
+            SessionOptions::default(),
+            Some(&policy),
+        )
+        .unwrap();
+        assert!(!killed.result.converged);
+        assert_eq!(killed.checkpoints_written, 3);
+        assert!(killed.checkpoint_bytes > 0);
+
+        // Resume: the newest checkpoint's centers warm-start a fresh run.
+        let cp = SessionCheckpoint::load(&policy.path).unwrap();
+        assert_eq!(cp.iteration, 3);
+        assert_eq!(cp.centers.as_slice(), killed.result.centers.as_slice());
+        let mut e3 = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let resumed = run_fcm_session(
+            &mut e3,
+            &store,
+            backend,
+            SessionAlgo::Fcm,
+            cp.centers.clone(),
+            &params,
+            &PruneConfig::disabled(),
+            SessionOptions::default(),
+            None,
+        )
+        .unwrap();
+        assert!(resumed.result.converged);
+        assert_eq!(
+            resumed.result.centers.as_slice(),
+            full.result.centers.as_slice(),
+            "resume drifted from the uninterrupted run"
+        );
+        assert_eq!(
+            cp.iteration as usize + resumed.result.iterations,
+            full.result.iterations,
+            "resume re-ran or skipped iterations"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

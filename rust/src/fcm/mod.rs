@@ -9,6 +9,7 @@
 //! on PJRT (the production hot path) and the offline PJRT shim.
 
 pub mod backend;
+pub mod checkpoint;
 pub mod loops;
 pub mod native;
 pub mod quant;
@@ -19,10 +20,11 @@ pub use backend::{
     memberships_from_bounds, BlockBounds, BoundConfig, BoundModel, BoundRows, Kernel,
     KernelBackend, PruneStats, QuantMode,
 };
+pub use checkpoint::SessionCheckpoint;
 pub use quant::{QuantCenters, QuantSidecar};
 pub use loops::{
-    kmeans_loop, run_fcm, run_fcm_session, FcmParams, PruneConfig, SessionAlgo,
-    SessionRunResult, Variant,
+    kmeans_loop, run_fcm, run_fcm_session, CheckpointPolicy, FcmParams, PruneConfig,
+    SessionAlgo, SessionRunResult, Variant,
 };
 pub use native::NativeBackend;
 

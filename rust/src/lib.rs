@@ -39,6 +39,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod faults;
 pub mod fcm;
 pub mod hdfs;
 pub mod json;

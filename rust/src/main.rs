@@ -30,8 +30,9 @@ use bigfcm::config::{params_hash, BoundModel, Config, QuantMode};
 use bigfcm::coordinator::BigFcm;
 use bigfcm::data::normalize::Scaler;
 use bigfcm::data::{builtin, csv};
-use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo, Variant};
-use bigfcm::fcm::{assign_hard, KernelBackend};
+use bigfcm::fcm::loops::{run_fcm_session, CheckpointPolicy, FcmParams, PruneConfig, SessionAlgo, Variant};
+use bigfcm::fcm::{assign_hard, KernelBackend, SessionCheckpoint};
+use bigfcm::faults::FaultPlan;
 use bigfcm::hdfs::BlockStore;
 use bigfcm::json;
 use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions, MIB};
@@ -212,6 +213,18 @@ fn resolve_serve_options(args: &Args, cfg: &Config) -> CliResult<ServeOptions> {
     if let Some(v) = args.get("tenant-quota") {
         opts.tenant_quota = v.parse::<usize>()?;
     }
+    if let Some(v) = args.get("deadline-us") {
+        let us = v.parse::<u64>()?;
+        opts.deadline = if us > 0 { Some(Duration::from_micros(us)) } else { None };
+    }
+    Ok(opts)
+}
+
+/// Engine options with the `[faults]` chaos plan attached (`None` when the
+/// section is inert, so un-chaosed runs check nothing).
+fn engine_options_of(cfg: &Config) -> CliResult<EngineOptions> {
+    let mut opts = EngineOptions::from_cluster(&cfg.cluster);
+    opts.faults = FaultPlan::from_config(&cfg.faults)?;
     Ok(opts)
 }
 
@@ -340,10 +353,44 @@ fn cmd_session(args: &Args) -> CliResult<()> {
         cfg.cluster.block_records,
         cfg.cluster.workers,
     )?);
-    let mut engine = Engine::new(EngineOptions::from_cluster(&cfg.cluster), cfg.overhead.clone());
+    let mut engine = Engine::new(engine_options_of(&cfg)?, cfg.overhead.clone());
+    if let Some(v) = args.get("checkpoint-every") {
+        cfg.session.checkpoint_every = v.parse()?;
+    }
+    // --checkpoint implies a cadence: an unconfigured
+    // session.checkpoint_every of 0 means every iteration here.
+    let checkpoint = args.get("checkpoint").map(|p| CheckpointPolicy {
+        every: cfg.session.checkpoint_every.max(1),
+        path: std::path::PathBuf::from(p),
+    });
     let mut rng = bigfcm::prng::Pcg::new(cfg.seed);
     let sample = store.sample_records(c.max(2) * 8, &mut rng)?;
-    let v0 = bigfcm::fcm::seeding::random_records(&sample, c, &mut rng);
+    let mut v0 = bigfcm::fcm::seeding::random_records(&sample, c, &mut rng);
+    let mut resumed_from: Option<u64> = None;
+    if let Some(path) = args.get("resume").or_else(|| args.get("resume-or-cold")) {
+        match SessionCheckpoint::load(std::path::Path::new(path)) {
+            Ok(cp) => {
+                if cp.centers.cols() != store.cols() {
+                    bail!(
+                        "checkpoint {path} has {}-dim centers, store `{}` has {} features",
+                        cp.centers.cols(),
+                        store.name(),
+                        store.cols()
+                    );
+                }
+                println!(
+                    "resuming from {path}: iteration {}, objective {:.6e}",
+                    cp.iteration, cp.objective
+                );
+                v0 = cp.centers;
+                resumed_from = Some(cp.iteration);
+            }
+            Err(e) if args.has("resume-or-cold") => {
+                println!("checkpoint unusable, cold-starting instead: {e}");
+            }
+            Err(e) => return Err(format!("--resume {path}: {e}").into()),
+        }
+    }
     let params = FcmParams { m, epsilon: eps, max_iterations: iters, variant };
 
     println!(
@@ -370,6 +417,7 @@ fn cmd_session(args: &Args) -> CliResult<()> {
         &params,
         &prune,
         SessionOptions::default(),
+        checkpoint.as_ref(),
     )?;
     for (i, s) in run.per_iteration.iter().enumerate() {
         println!(
@@ -402,6 +450,28 @@ fn cmd_session(args: &Args) -> CliResult<()> {
         run.slab_reloads,
         run.peak_resident_bytes as f64 / MIB as f64,
     );
+    if cfg.faults.enabled() || checkpoint.is_some() || resumed_from.is_some() {
+        let cache = engine.block_cache();
+        println!(
+            "recovery: read retries {}, read aborts {}, quarantines {}, prefetch errors {}, \
+             spill retries {}, spill quarantines {}, backoff {:.3}s, checkpoints {} ({} B)",
+            cache.read_retries(),
+            cache.read_aborts(),
+            cache.quarantines(),
+            cache.prefetch_errors(),
+            run.slab_spill_retries,
+            run.slab_spill_quarantines,
+            run.sim.backoff_s,
+            run.checkpoints_written,
+            run.checkpoint_bytes,
+        );
+    }
+    if let Some(at) = resumed_from {
+        println!(
+            "resumed at iteration {at}: {} total iterations of progress",
+            at + run.result.iterations as u64
+        );
+    }
     println!(
         "modelled {} (startup {:.1}s + launch {:.1}s + io {:.1}s + shuffle {:.1}s + compute {:.1}s)",
         human_duration(std::time::Duration::from_secs_f64(run.sim.total_s())),
@@ -460,6 +530,7 @@ fn train_quick_bundle(
         &params,
         &PruneConfig::from_cluster(&cfg.cluster),
         SessionOptions::default(),
+        None,
     )?;
     let mut bundle =
         ModelBundle::new(run.result.centers.clone(), SessionAlgo::Fcm, Variant::Fast, m);
@@ -750,8 +821,12 @@ fn cmd_score(args: &Args) -> CliResult<()> {
             )?)
         }
     };
+    let fault_plan = FaultPlan::from_config(&cfg.faults)?;
     let bundle = match args.get("model") {
-        Some(path) => Arc::new(ModelBundle::load(std::path::Path::new(path))?),
+        Some(path) => Arc::new(ModelBundle::load_with_faults(
+            std::path::Path::new(path),
+            fault_plan.as_deref(),
+        )?),
         None => bail!("`bigfcm score` needs --model PATH (save one with run/session --save-model)"),
     };
     println!(
@@ -765,7 +840,7 @@ fn cmd_score(args: &Args) -> CliResult<()> {
         quant.as_str(),
         backend.name(),
     );
-    let mut engine = Engine::new(EngineOptions::from_cluster(&cfg.cluster), cfg.overhead.clone());
+    let mut engine = Engine::new(engine_options_of(&cfg)?, cfg.overhead.clone());
     let outcome = run_score_job(
         &mut engine,
         &store,
@@ -799,6 +874,18 @@ fn cmd_score(args: &Args) -> CliResult<()> {
             outcome.stats.records_pruned_quant,
             outcome.stats.quant_sidecar_bytes,
             outcome.stats.quant_build_s,
+        );
+    }
+    if cfg.faults.enabled() {
+        let cache = engine.block_cache();
+        println!(
+            "recovery: read retries {}, read aborts {}, quarantines {}, prefetch errors {}, \
+             backoff {:.3}s",
+            cache.read_retries(),
+            cache.read_aborts(),
+            cache.quarantines(),
+            cache.prefetch_errors(),
+            cache.backoff_seconds(),
         );
     }
     Ok(())
@@ -843,15 +930,18 @@ fn cmd_serve(args: &Args) -> CliResult<()> {
             common.dataset_name
         );
     }
+    let fault_plan = FaultPlan::from_config(&cfg.faults)?;
     for spec in models {
         let (id, path) = spec
             .split_once('=')
             .ok_or_else(|| format!("--model expects id=path.bfm, got `{spec}`"))?;
-        let bundle = ModelBundle::load(std::path::Path::new(path))?;
+        let bundle =
+            ModelBundle::load_with_faults(std::path::Path::new(path), fault_plan.as_deref())?;
         let generation = registry.publish(id, bundle)?;
         println!("published model `{id}` from {path} (generation {generation})");
     }
     let mut fopts = FrontOptions::default();
+    fopts.faults = fault_plan;
     if let Some(v) = args.get("conn-workers") {
         fopts.conn_workers = v.parse::<usize>()?.max(1);
     }
@@ -874,7 +964,7 @@ fn cmd_serve(args: &Args) -> CliResult<()> {
     let stats = front.stats();
     println!(
         "front: {} connections, {} frames ({} framing errors), {} scored, {} B in / {} B out, \
-         modelled net {:.3}s",
+         modelled net {:.3}s, injected drops {}, injected wait {:.3}s",
         stats.connections,
         stats.frames,
         stats.framing_errors,
@@ -882,6 +972,8 @@ fn cmd_serve(args: &Args) -> CliResult<()> {
         stats.bytes_in,
         stats.bytes_out,
         stats.modelled_net_s,
+        stats.conn_drops,
+        stats.injected_wait_s,
     );
     Ok(())
 }
@@ -962,13 +1054,17 @@ fn main() -> CliResult<()> {
                  session     iteration-resident convergence loop (--iters N\n\
                  \u{20}           --bounds dmin|elkan|hamerly|off --quant off|i8\n\
                  \u{20}           --algo fcm|kmeans --variant fast|classic --slab-mib N\n\
-                 \u{20}           --spill-dir PATH --tolerance T --save-model PATH)\n\
+                 \u{20}           --spill-dir PATH --tolerance T --save-model PATH\n\
+                 \u{20}           --checkpoint PATH --checkpoint-every N\n\
+                 \u{20}           --resume PATH | --resume-or-cold PATH)\n\
                  \u{20}           with per-iteration counters\n\
                  serve       network scoring front over a multi-model registry\n\
                  \u{20}           server: --host H --port P [--port-file PATH]\n\
                  \u{20}           [--model id=path.bfm]... [--tenant-quota N] [--conn-workers N]\n\
+                 \u{20}           [--deadline-us U]\n\
                  \u{20}           client: --connect ADDR --send \"score default - normal 1,2,3\"\n\
-                 \u{20}           (wire verbs: ping, score, reload, retire, stats, shutdown)\n\
+                 \u{20}           (wire verbs: ping, health, score, reload, retire, stats,\n\
+                 \u{20}           shutdown)\n\
                  serve-bench load harness for the online scoring service\n\
                  \u{20}           (--clients N --records R [--model PATH] [--max-batch B]\n\
                  \u{20}           [--linger-us U] [--queue-cap Q] [--tenant-quota N]\n\
@@ -982,7 +1078,9 @@ fn main() -> CliResult<()> {
                  info        show config + artifact registry [--model PATH]\n\
                  \n\
                  common:     --config file.toml --set sec.key=val --backend native|pjrt|auto|shim\n\
-                 \u{20}           --artifacts DIR --seed N"
+                 \u{20}           --artifacts DIR --seed N\n\
+                 \u{20}           chaos: --set faults.seed=S --set faults.block_read=R ... (see\n\
+                 \u{20}           [faults] config; deterministic per seed, off by default)"
             );
             Ok(())
         }

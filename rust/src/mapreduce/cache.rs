@@ -28,7 +28,8 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::data::Matrix;
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::faults::{backoff_s, FaultPlan, FaultSite, Injected, MAX_READ_RETRIES};
 use crate::hdfs::BlockStore;
 
 /// One mebibyte — the unit block-cache budgets are usually expressed in.
@@ -259,6 +260,26 @@ pub struct BlockCache {
     /// job so modelled HDFS I/O counts every disk read exactly once.
     prefetch_wasted: AtomicU64,
     residency: Arc<Residency>,
+    /// Chaos plan for the demand-read / prefetch sites. `None` in
+    /// production: every fault check is a single `Option` match.
+    faults: Option<Arc<FaultPlan>>,
+    /// Transient-fault retries taken by demand reads (each also accrues a
+    /// modelled backoff wait in `backoff_ns`).
+    read_retries: AtomicU64,
+    /// Demand reads that exhausted [`MAX_READ_RETRIES`] and surfaced an
+    /// error — recovery gave up, the caller saw the failure.
+    read_aborts: AtomicU64,
+    /// Checksum-quarantine incidents: a demand read observed torn bytes
+    /// and re-read the block from the store instead of serving them.
+    quarantines: AtomicU64,
+    /// Modelled retry-backoff accumulated by demand reads, in nanoseconds
+    /// (an atomic stand-in for f64 seconds; the engine drains it into the
+    /// SimClock's `backoff_s` cost class). Never actually slept.
+    backoff_ns: AtomicU64,
+    /// Prefetch reads that failed, real or injected. The prefetcher
+    /// deliberately swallows the error (a failed warm-up must not kill the
+    /// job) — this counter is its only visibility.
+    prefetch_errors: AtomicU64,
 }
 
 impl BlockCache {
@@ -280,12 +301,24 @@ impl BlockCache {
             prefetch_pending: AtomicU64::new(0),
             prefetch_wasted: AtomicU64::new(0),
             residency: Arc::new(Residency::default()),
+            faults: None,
+            read_retries: AtomicU64::new(0),
+            read_aborts: AtomicU64::new(0),
+            quarantines: AtomicU64::new(0),
+            backoff_ns: AtomicU64::new(0),
+            prefetch_errors: AtomicU64::new(0),
         }
     }
 
     /// Cache with a budget expressed in MiB.
     pub fn with_budget_mib(mib: usize) -> Self {
         Self::with_budget_bytes(mib as u64 * MIB)
+    }
+
+    /// Attach a chaos plan to the demand-read and prefetch sites.
+    pub fn with_faults(mut self, faults: Option<Arc<FaultPlan>>) -> Self {
+        self.faults = faults;
+        self
     }
 
     /// Evict least-recently-used entries until retained bytes plus in-flight
@@ -347,7 +380,7 @@ impl BlockCache {
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let data = store.read_block(id)?;
+        let data = self.read_recovered(store, id)?;
         let bytes = store.blocks()[id].bytes;
         let block = Arc::new(CachedBlock::new(data, bytes, Arc::clone(&self.residency)));
         if self.budget_bytes > 0 {
@@ -365,6 +398,53 @@ impl BlockCache {
             // evicted unconsumed (wasted).
         }
         Ok((block, ReadSource::Miss))
+    }
+
+    /// Demand-read a block from the store with bounded fault recovery.
+    ///
+    /// Injected transient errors retry with exponential backoff — modelled,
+    /// never slept: each retry accrues [`backoff_s`] into `backoff_ns` for
+    /// the engine to charge to the SimClock. Injected corruption is a
+    /// checksum quarantine: the torn bytes are discarded and the block is
+    /// re-read from the store (never served). After [`MAX_READ_RETRIES`]
+    /// consecutive failed attempts the read aborts with the failing block
+    /// id in the message. Real store errors are not retried (the store is
+    /// authoritative about its own failures) but are tagged with the block
+    /// id so a dying disk names the block it died on.
+    fn read_recovered(&self, store: &BlockStore, id: usize) -> Result<Matrix> {
+        let mut attempt: u32 = 0;
+        loop {
+            attempt += 1;
+            let injected = self.faults.as_ref().and_then(|p| p.check(FaultSite::BlockRead));
+            match injected {
+                None => {
+                    return store
+                        .read_block(id)
+                        .map_err(|e| Error::BlockStore(format!("block {id}: {e}")));
+                }
+                Some(Injected::Corrupt) => {
+                    // Torn bytes detected on arrival: quarantine them and
+                    // fall through to the bounded re-read below.
+                    self.quarantines.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(_) => {
+                    // Transient read failure: pay a modelled backoff wait,
+                    // then fall through to the bounded retry below.
+                    if attempt < MAX_READ_RETRIES {
+                        self.read_retries.fetch_add(1, Ordering::Relaxed);
+                        let ns = (backoff_s(attempt) * 1e9).round() as u64;
+                        self.backoff_ns.fetch_add(ns, Ordering::Relaxed);
+                    }
+                }
+            }
+            if attempt >= MAX_READ_RETRIES {
+                self.read_aborts.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::BlockStore(format!(
+                    "block {id}: read failed after {MAX_READ_RETRIES} attempts \
+                     (fault persisted through retries)"
+                )));
+            }
+        }
     }
 
     /// Pull a block into the cache ahead of demand, evicting LRU entries to
@@ -395,11 +475,20 @@ impl BlockCache {
             // that accounts for this reservation.
             self.evict_over_budget(&mut st);
         }
+        if let Some(fault) = self.faults.as_ref().and_then(|p| p.check(FaultSite::Prefetch)) {
+            // A prefetch is pure warm-up: no retry, no backoff — the demand
+            // path will stream the block if it's really needed. Roll back
+            // the reservation and surface a counted error.
+            self.prefetch_pending.fetch_sub(bytes, Ordering::SeqCst);
+            self.prefetch_errors.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::BlockStore(format!("block {id}: injected prefetch fault {fault:?}")));
+        }
         let data = match store.read_block(id) {
             Ok(d) => d,
             Err(e) => {
                 self.prefetch_pending.fetch_sub(bytes, Ordering::SeqCst);
-                return Err(e);
+                self.prefetch_errors.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::BlockStore(format!("block {id}: {e}")));
             }
         };
         let block = Arc::new(CachedBlock::new(data, bytes, Arc::clone(&self.residency)));
@@ -473,6 +562,31 @@ impl BlockCache {
     /// charges these so modelled I/O counts every real read exactly once.
     pub fn prefetch_wasted_bytes(&self) -> u64 {
         self.prefetch_wasted.load(Ordering::Relaxed)
+    }
+
+    /// Transient-fault retries taken by demand reads.
+    pub fn read_retries(&self) -> u64 {
+        self.read_retries.load(Ordering::Relaxed)
+    }
+
+    /// Demand reads that exhausted the retry budget and surfaced an error.
+    pub fn read_aborts(&self) -> u64 {
+        self.read_aborts.load(Ordering::Relaxed)
+    }
+
+    /// Checksum-quarantine incidents (torn bytes discarded and re-read).
+    pub fn quarantines(&self) -> u64 {
+        self.quarantines.load(Ordering::Relaxed)
+    }
+
+    /// Modelled retry-backoff accumulated by demand reads, in seconds.
+    pub fn backoff_seconds(&self) -> f64 {
+        self.backoff_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Prefetch reads that failed (real or injected) and were swallowed.
+    pub fn prefetch_errors(&self) -> u64 {
+        self.prefetch_errors.load(Ordering::Relaxed)
     }
 
     /// Decoded blocks alive right now (cache + in-flight tasks + prefetch).
@@ -786,6 +900,75 @@ mod tests {
         assert_eq!(src, ReadSource::Cached, "recently touched block was evicted");
         let (_, src) = c.get_or_read_traced(&s, 0).unwrap();
         assert_eq!(src, ReadSource::Miss, "LRU block survived eviction");
+    }
+
+    #[test]
+    fn transient_read_fault_retries_with_backoff_and_serves_same_bytes() {
+        use crate::faults::{backoff_s, FaultPlan, FaultSite};
+        let s = block_store(400, 100);
+        let clean = BlockCache::with_budget_bytes(budget_for(&s, 8));
+        let want = clean.get_or_read(&s, 1).unwrap().data().clone();
+        // Trip exactly one transient fault at the first BlockRead op.
+        let plan = FaultPlan::tripping(7, FaultSite::BlockRead, 0);
+        let c = BlockCache::with_budget_bytes(budget_for(&s, 8)).with_faults(Some(plan));
+        let got = c.get_or_read(&s, 1).unwrap();
+        assert_eq!(*got.data(), want, "recovered read must be bitwise clean");
+        assert_eq!(c.read_retries(), 1);
+        assert_eq!(c.read_aborts(), 0);
+        assert!((c.backoff_seconds() - backoff_s(1)).abs() < 1e-12);
+        // Warm hit afterwards: no further ops at the fault site needed.
+        c.get_or_read(&s, 1).unwrap();
+        assert_eq!(c.read_retries(), 1);
+    }
+
+    #[test]
+    fn persistent_read_fault_aborts_with_block_id() {
+        use crate::faults::{FaultPlan, FaultSite, MAX_READ_RETRIES};
+        let s = block_store(400, 100);
+        let plan = FaultPlan::for_site(11, FaultSite::BlockRead, 1.0, 0.0);
+        let c = BlockCache::with_budget_bytes(budget_for(&s, 8)).with_faults(Some(plan));
+        let err = c.get_or_read(&s, 3).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("block 3"), "error must name the failing block: {msg}");
+        assert_eq!(c.read_aborts(), 1);
+        assert_eq!(c.read_retries(), u64::from(MAX_READ_RETRIES) - 1);
+        // The cache stays usable: a clean op clears (rate draws are per-op,
+        // but rate 1.0 never clears — so only counters moved, no poison).
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn corrupt_read_quarantines_and_refetches() {
+        use crate::faults::{FaultPlan, FaultSite};
+        let s = block_store(400, 100);
+        let clean = BlockCache::with_budget_bytes(budget_for(&s, 8));
+        let want = clean.get_or_read(&s, 0).unwrap();
+        // Trip exactly one corruption at the first demand read.
+        let plan = FaultPlan::tripping_corrupt(21, FaultSite::BlockRead, 0);
+        let c = BlockCache::with_budget_bytes(budget_for(&s, 8)).with_faults(Some(plan));
+        let got = c.get_or_read(&s, 0).unwrap();
+        assert_eq!(got.data(), want.data(), "quarantined block must re-read clean");
+        assert_eq!(c.quarantines(), 1);
+        assert_eq!(c.read_aborts(), 0);
+        assert_eq!(c.read_retries(), 0, "a quarantine re-read is not a transient retry");
+        assert_eq!(c.backoff_seconds(), 0.0, "quarantine re-reads are immediate");
+    }
+
+    #[test]
+    fn prefetch_fault_is_swallowed_but_counted() {
+        use crate::faults::{FaultPlan, FaultSite};
+        let s = block_store(400, 100);
+        let plan = FaultPlan::for_site(5, FaultSite::Prefetch, 1.0, 0.0);
+        let c = BlockCache::with_budget_bytes(budget_for(&s, 8)).with_faults(Some(plan));
+        let err = c.prefetch(&s, 2).unwrap_err();
+        assert!(err.to_string().contains("block 2"), "{err}");
+        assert_eq!(c.prefetch_errors(), 1);
+        assert_eq!(c.prefetches(), 0);
+        // Reservation was rolled back: demand path still works and the
+        // budget is intact.
+        let got = c.get_or_read(&s, 2);
+        assert!(got.is_ok());
+        assert_eq!(c.budget_slack(), budget_for(&s, 8) - s.blocks()[2].bytes);
     }
 
     #[test]

@@ -39,6 +39,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::{ClusterConfig, OverheadConfig};
 use crate::error::{Error, Result};
+use crate::faults::{FaultPlan, FaultSite};
 use crate::hdfs::BlockStore;
 use crate::mapreduce::cache::{BlockCache, ReadSource, MIB};
 use crate::mapreduce::simclock::{SimClock, SimCost, TaskSample};
@@ -71,6 +72,10 @@ pub struct EngineOptions {
     /// jobs that implement [`MapReduceJob::combine`] — the reduce then
     /// funnels O(workers + log blocks) segments instead of O(blocks).
     pub tree_combine: bool,
+    /// Chaos plan threaded into the block cache (demand-read / prefetch
+    /// sites) and the map-task pre-draw. `None` (the default, and always
+    /// when `[faults]` is absent) keeps every check a single `Option` test.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for EngineOptions {
@@ -82,6 +87,7 @@ impl Default for EngineOptions {
             block_cache_bytes: 256 * MIB,
             prefetch: true,
             tree_combine: true,
+            faults: None,
         }
     }
 }
@@ -132,6 +138,18 @@ pub struct JobStats {
     /// or lost a duplicate race); charged to this job's modelled HDFS I/O
     /// so every real read is counted exactly once.
     pub prefetch_wasted_bytes: u64,
+    /// Transient-fault retries taken by this job's demand block reads
+    /// (chaos runs only; each accrued modelled backoff into `sim`).
+    pub read_retries: u64,
+    /// Demand reads that exhausted the retry budget this job (a nonzero
+    /// value only ever accompanies a failed run's partial stats — success
+    /// means every retry chain cleared).
+    pub read_aborts: u64,
+    /// Checksum-quarantine re-reads this job (torn bytes never served).
+    pub quarantines: u64,
+    /// Prefetch reads that failed and were swallowed this job; the demand
+    /// path re-reads such blocks, so they cost latency, not correctness.
+    pub prefetch_errors: u64,
     /// Map records whose contribution was served from the sticky pruning
     /// slab instead of a full distance pass. Filled by the session layer
     /// (`crate::fcm::loops::run_fcm_session`); 0 for ordinary jobs.
@@ -158,6 +176,12 @@ pub struct JobStats {
     /// State reloads served from the slab's spill ring so far in the
     /// session (session runs only).
     pub slab_reloads: u64,
+    /// Transient-fault retries taken by spill-ring slot reads so far in the
+    /// session (chaos runs only; stamped by the session layer).
+    pub slab_spill_retries: u64,
+    /// Checksum-quarantine re-reads of spill-ring slots so far in the
+    /// session (chaos runs only; stamped by the session layer).
+    pub slab_spill_quarantines: u64,
     /// Effective refresh cap (`refresh_every`) this job's pruned passes
     /// ran under — the session loop's adaptive-refresh policy stamps it
     /// (session runs only; 0 for ordinary jobs).
@@ -203,11 +227,15 @@ enum PrefetchMsg {
 /// Prefetcher thread body: pull hinted blocks into the cache until the
 /// engine drops its sender. Prefetch failures are deliberately swallowed —
 /// the demand path will retry the read and surface the error attached to
-/// the task that needed the block.
+/// the task that needed the block, with the failing block id in its
+/// message — but never silently: the cache meters every one in
+/// `prefetch_errors`, which [`JobStats::prefetch_errors`] reports per job
+/// so a dying disk is observable long before demand reads start failing.
 fn prefetch_loop(rx: Receiver<PrefetchMsg>, cache: Arc<BlockCache>) {
     while let Ok(msg) = rx.recv() {
         match msg {
             PrefetchMsg::Fetch(store, id) => {
+                // Counted by the cache as `prefetch_errors`; see above.
                 let _ = cache.prefetch(&store, id);
             }
             PrefetchMsg::Fence(ack) => {
@@ -219,7 +247,10 @@ fn prefetch_loop(rx: Receiver<PrefetchMsg>, cache: Arc<BlockCache>) {
 
 impl Engine {
     pub fn new(options: EngineOptions, overhead: OverheadConfig) -> Self {
-        let block_cache = Arc::new(BlockCache::with_budget_bytes(options.block_cache_bytes));
+        let block_cache = Arc::new(
+            BlockCache::with_budget_bytes(options.block_cache_bytes)
+                .with_faults(options.faults.clone()),
+        );
         let (prefetch_tx, prefetch_handle) = if options.prefetch {
             let (tx, rx) = channel();
             let cache = Arc::clone(&block_cache);
@@ -273,6 +304,12 @@ impl Engine {
         self.clock.charge_scan(&self.overhead, bytes);
     }
 
+    /// Charge modelled retry-backoff (fault recovery outside a job's own
+    /// accounting, e.g. the session slab's ring reloads).
+    pub fn charge_backoff(&mut self, s: f64) {
+        self.clock.charge_backoff(s);
+    }
+
     /// Execute one MapReduce job over every block of `store`.
     ///
     /// Blocks are read *inside* the worker tasks (see module docs); the
@@ -307,8 +344,14 @@ impl Engine {
 
         // Pre-draw fault schedules so parallel execution stays deterministic:
         // fail_counts[t] = how many attempts of task t fail before success.
+        // The legacy `fault_rate` injector models per-attempt transient
+        // failures and always leaves one good attempt; the chaos plan's
+        // MapTask site models a dead node pinned to the task's split —
+        // every attempt dies, the job surfaces [`Error::TaskFailed`] and
+        // the pool stays reusable. Plan draws are taken in task order so
+        // the schedule is independent of worker interleaving.
         let mut fault_rng = Pcg::new(self.options.fault_seed);
-        let fail_counts: Vec<usize> = (0..n_blocks)
+        let mut fail_counts: Vec<usize> = (0..n_blocks)
             .map(|_| {
                 let mut fails = 0;
                 while fails < MAX_ATTEMPTS - 1 && fault_rng.next_f64() < self.options.fault_rate {
@@ -317,11 +360,24 @@ impl Engine {
                 fails
             })
             .collect();
+        if let Some(plan) = &self.options.faults {
+            for fc in fail_counts.iter_mut() {
+                if plan.check(FaultSite::MapTask).is_some() {
+                    *fc = MAX_ATTEMPTS;
+                }
+            }
+        }
+        let fail_counts = fail_counts;
 
         // Locality hints: one queue entry per block on its preferred worker.
         let hints: Vec<usize> = store.blocks().iter().map(|b| b.preferred_worker).collect();
         let prefetch_hits_before = self.block_cache.prefetch_hits();
         let prefetch_wasted_before = self.block_cache.prefetch_wasted_bytes();
+        let read_retries_before = self.block_cache.read_retries();
+        let read_aborts_before = self.block_cache.read_aborts();
+        let quarantines_before = self.block_cache.quarantines();
+        let prefetch_errors_before = self.block_cache.prefetch_errors();
+        let backoff_before = self.block_cache.backoff_seconds();
         let max_block = store.max_block_bytes();
         let use_tree = cfg.tree_combine && job.supports_combine();
 
@@ -391,7 +447,7 @@ impl Engine {
             for p in parts {
                 let part = p
                     .map_err(|panic| Error::Job(format!("map/combine panicked: {panic}")))?
-                    .map_err(|e| Error::Job(format!("map task failed: {e}")))?;
+                    .map_err(wrap_map_error)?;
                 outs.push(part);
             }
             let mut tagged: Vec<(usize, TaskSample)> = sample_rx.into_iter().collect();
@@ -432,7 +488,7 @@ impl Engine {
             for r in results {
                 let task = r
                     .map_err(|panic| Error::Job(format!("map task panicked: {panic}")))?
-                    .map_err(|e| Error::Job(format!("map task failed: {e}")))?;
+                    .map_err(wrap_map_error)?;
                 samples.push(task.sample);
                 outs.push(task.out);
             }
@@ -483,6 +539,13 @@ impl Engine {
             sim.hdfs_io_s += self.clock.charge_scan(&oh, prefetch_wasted_bytes);
         }
 
+        // Modelled backoff this job's retried reads accrued in the cache:
+        // fold it into the clock (and this job's breakdown) exactly once.
+        let backoff = self.block_cache.backoff_seconds() - backoff_before;
+        if backoff > 0.0 {
+            sim.backoff_s += self.clock.charge_backoff(backoff);
+        }
+
         let stats = JobStats {
             name: job.name().to_string(),
             wall: started.elapsed(),
@@ -494,6 +557,10 @@ impl Engine {
             locality_steals: locality.steals,
             prefetch_hits: self.block_cache.prefetch_hits() - prefetch_hits_before,
             prefetch_wasted_bytes,
+            read_retries: self.block_cache.read_retries() - read_retries_before,
+            read_aborts: self.block_cache.read_aborts() - read_aborts_before,
+            quarantines: self.block_cache.quarantines() - quarantines_before,
+            prefetch_errors: self.block_cache.prefetch_errors() - prefetch_errors_before,
             records_pruned: 0,
             records_pruned_quant: 0,
             quant_sidecar_bytes: 0,
@@ -502,6 +569,8 @@ impl Engine {
             slab_evictions: 0,
             slab_spilled_bytes: 0,
             slab_reloads: 0,
+            slab_spill_retries: 0,
+            slab_spill_quarantines: 0,
             refresh_cap: 0,
             reduce_wall_s,
             combine_wall_s,
@@ -522,6 +591,16 @@ impl Engine {
                 let _ = ack_rx.recv();
             }
         }
+    }
+}
+
+/// Keep structured failures structured across the map barrier:
+/// [`Error::TaskFailed`] (attempt exhaustion) passes through untouched so
+/// callers can match on it; everything else gets the generic job wrapper.
+fn wrap_map_error(e: Error) -> Error {
+    match e {
+        e @ Error::TaskFailed { .. } => e,
+        e => Error::Job(format!("map task failed: {e}")),
     }
 }
 
@@ -561,6 +640,12 @@ fn run_map_task<J: MapReduceJob>(
                 let _ = tx.send(PrefetchMsg::Fetch(Arc::clone(store), next2));
             }
         }
+    }
+    if fails >= MAX_ATTEMPTS {
+        // The chaos plan killed this task's node: every attempt would die.
+        // Surface the exhaustion as a structured error — no panic, and the
+        // pool (which collects per-task Results) stays fully reusable.
+        return Err(Error::TaskFailed { task: id, attempts: MAX_ATTEMPTS });
     }
     let (block, source) = blocks.get_or_read_traced(store, id)?;
     let bytes = match source {
@@ -920,6 +1005,72 @@ mod tests {
             .unwrap();
         assert_eq!(stats.reduce_parts, 8, "flat fallback for combiner-less jobs");
         assert_eq!(stats.combine_depth, 0);
+    }
+
+    #[test]
+    fn chaos_task_exhaustion_is_structured_and_pool_stays_reusable() {
+        use crate::faults::FaultPlan;
+        let s = store(); // 8 blocks
+        let opts = EngineOptions {
+            faults: Some(FaultPlan::tripping(3, FaultSite::MapTask, 2)),
+            ..Default::default()
+        };
+        let mut e = Engine::new(opts, OverheadConfig::default());
+        // Job 1: the plan kills task 2's node — every attempt dies.
+        let err = e
+            .run_job(Arc::new(SumJob), &s, Arc::new(DistributedCache::new()))
+            .unwrap_err();
+        match err {
+            Error::TaskFailed { task, attempts } => {
+                assert_eq!(task, 2);
+                assert_eq!(attempts, MAX_ATTEMPTS);
+            }
+            other => panic!("expected structured TaskFailed, got: {other}"),
+        }
+        // Job 2 on the same engine: the trip already fired (ops 8..), so
+        // the pool must run a clean job to completion — no poisoned slots,
+        // no hang.
+        let ((_, rows), stats) = e
+            .run_job(Arc::new(SumJob), &s, Arc::new(DistributedCache::new()))
+            .unwrap();
+        assert_eq!(rows, 1000);
+        assert_eq!(stats.attempts, 8);
+    }
+
+    #[test]
+    fn chaos_transient_read_charges_clock_once_per_retry() {
+        use crate::faults::{backoff_s, FaultPlan};
+        let s = store();
+        // Trip exactly one transient fault at the first demand block read;
+        // prefetch off so the demand path owns every op at the site.
+        let opts = EngineOptions {
+            prefetch: false,
+            faults: Some(FaultPlan::tripping(5, FaultSite::BlockRead, 0)),
+            ..Default::default()
+        };
+        let mut e = Engine::new(opts, OverheadConfig::default());
+        let ((total, rows), stats) = e
+            .run_job(Arc::new(SumJob), &s, Arc::new(DistributedCache::new()))
+            .unwrap();
+        assert_eq!(rows, 1000);
+        assert!(total.is_finite());
+        assert_eq!(stats.read_retries, 1, "exactly one injected fault => one retry");
+        assert_eq!(stats.read_aborts, 0);
+        // The clock is charged exactly the modelled backoff of attempt 1 —
+        // once, in the job's own cost breakdown and in the engine total.
+        assert!(
+            (stats.sim.backoff_s - backoff_s(1)).abs() < 1e-9,
+            "job backoff {} != modelled {}",
+            stats.sim.backoff_s,
+            backoff_s(1)
+        );
+        assert!((e.clock().cost().backoff_s - backoff_s(1)).abs() < 1e-9);
+        // A second, fault-free job charges no further backoff.
+        let (_, stats2) = e
+            .run_job(Arc::new(SumJob), &s, Arc::new(DistributedCache::new()))
+            .unwrap();
+        assert_eq!(stats2.sim.backoff_s, 0.0);
+        assert!((e.clock().cost().backoff_s - backoff_s(1)).abs() < 1e-9);
     }
 
     #[test]

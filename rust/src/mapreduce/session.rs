@@ -46,6 +46,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::error::Result;
+use crate::faults::{backoff_s, FaultPlan, FaultSite, Injected, MAX_READ_RETRIES};
 use crate::hdfs::{spill_slot_path as slot_path, BlockStore};
 use crate::mapreduce::engine::{Engine, JobRunCfg, JobStats};
 use crate::mapreduce::{DistributedCache, MapReduceJob};
@@ -126,11 +127,19 @@ pub struct SpillConfig {
     /// Rereading also saves the recompute's kernel time, which is why the
     /// crossover sits above 1.
     pub max_recompute_ratio: f64,
+    /// Chaos plan for the ring's read/write sites (`None` in production).
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl SpillConfig {
     pub fn new(dir: PathBuf) -> Self {
-        Self { dir, max_recompute_ratio: 4.0 }
+        Self { dir, max_recompute_ratio: 4.0, faults: None }
+    }
+
+    /// Attach a chaos plan to the ring's read/write sites.
+    pub fn with_faults(mut self, faults: Option<Arc<FaultPlan>>) -> Self {
+        self.faults = faults;
+        self
     }
 }
 
@@ -204,6 +213,16 @@ pub struct StateSlab<S> {
     spilled_bytes: AtomicU64,
     reloads: AtomicU64,
     reload_bytes: AtomicU64,
+    /// Transient-fault retries taken by ring reloads (chaos runs only).
+    spill_retries: AtomicU64,
+    /// Checksum-quarantine re-reads of ring slots (chaos runs only).
+    spill_quarantines: AtomicU64,
+    /// Ring reloads that exhausted the retry budget and fell back to the
+    /// recompute path (fresh state; the block's next pass is exact).
+    spill_read_aborts: AtomicU64,
+    /// Modelled retry-backoff accumulated by ring reloads, in nanoseconds
+    /// (the session loop drains the delta into the SimClock).
+    backoff_ns: AtomicU64,
 }
 
 impl<S: SlabState + Default> StateSlab<S> {
@@ -235,6 +254,50 @@ impl<S: SlabState + Default> StateSlab<S> {
             spilled_bytes: AtomicU64::new(0),
             reloads: AtomicU64::new(0),
             reload_bytes: AtomicU64::new(0),
+            spill_retries: AtomicU64::new(0),
+            spill_quarantines: AtomicU64::new(0),
+            spill_read_aborts: AtomicU64::new(0),
+            backoff_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Read a ring slot with bounded fault recovery: injected transient
+    /// errors retry (modelled backoff accrued into `backoff_ns`, never
+    /// slept); injected corruption quarantines the torn image and re-reads
+    /// the slot once per incident. When the retry budget is exhausted —
+    /// or the file is genuinely unreadable — the slab degrades to the
+    /// documented recompute path: a fresh state, so the block's next pass
+    /// is exact. The ring can therefore *delay* results but never change
+    /// them or fail a session.
+    fn read_slot_recovered(&self, path: &PathBuf) -> (S, u64) {
+        let plan = self.spill.as_ref().and_then(|c| c.faults.as_ref());
+        let mut attempt: u32 = 0;
+        loop {
+            attempt += 1;
+            match plan.and_then(|p| p.check(FaultSite::SpillRead)) {
+                None => {
+                    return match std::fs::read(path) {
+                        Ok(img) => self.decode_reload(&img),
+                        Err(_) => (S::default(), 0),
+                    };
+                }
+                Some(Injected::Corrupt) => {
+                    // Torn image on arrival: discard it unread (never adopt
+                    // bytes known to be torn) and re-read the slot.
+                    self.spill_quarantines.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(_) => {
+                    if attempt < MAX_READ_RETRIES {
+                        self.spill_retries.fetch_add(1, Ordering::Relaxed);
+                        let ns = (backoff_s(attempt) * 1e9).round() as u64;
+                        self.backoff_ns.fetch_add(ns, Ordering::Relaxed);
+                    }
+                }
+            }
+            if attempt >= MAX_READ_RETRIES {
+                self.spill_read_aborts.fetch_add(1, Ordering::Relaxed);
+                return (S::default(), 0);
+            }
         }
     }
 
@@ -287,10 +350,10 @@ impl<S: SlabState + Default> StateSlab<S> {
                     // this entry() to finish first.
                     let path = inner.spill_paths.get(&block).cloned();
                     drop(inner);
-                    let (state, bytes) = path
-                        .and_then(|p| std::fs::read(p).ok())
-                        .map(|img| self.decode_reload(&img))
-                        .unwrap_or_else(|| (S::default(), 0));
+                    let (state, bytes) = match &path {
+                        Some(p) => self.read_slot_recovered(p),
+                        None => (S::default(), 0),
+                    };
                     inner = self.inner.lock().expect("state slab poisoned");
                     (Arc::new(Mutex::new(state)), bytes)
                 }
@@ -465,8 +528,16 @@ impl<S: SlabState + Default> StateSlab<S> {
                 Err(std::sync::TryLockError::WouldBlock) => continue, // adopted mid-flight
                 Err(std::sync::TryLockError::Poisoned(_)) => None,
             };
+            let write_faulted = cfg
+                .faults
+                .as_ref()
+                .map(|p| p.check(FaultSite::SpillWrite).is_some())
+                .unwrap_or(false);
             let written = match (&img, dir_ready) {
-                (Some(img), true) => {
+                // An injected write fault takes the same degraded path as
+                // an unwritable ring: counted eviction, slot dropped, the
+                // block recomputes exactly on its next pass.
+                (Some(img), true) if !write_faulted => {
                     let path = slot_path(&cfg.dir, id);
                     if std::fs::write(&path, img).is_ok() {
                         Some(path)
@@ -553,6 +624,26 @@ impl<S: SlabState + Default> StateSlab<S> {
     /// Bytes read back from the spill ring since construction.
     pub fn reload_bytes(&self) -> u64 {
         self.reload_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Transient-fault retries taken by ring reloads since construction.
+    pub fn spill_retries(&self) -> u64 {
+        self.spill_retries.load(Ordering::Relaxed)
+    }
+
+    /// Checksum-quarantine re-reads of ring slots since construction.
+    pub fn spill_quarantines(&self) -> u64 {
+        self.spill_quarantines.load(Ordering::Relaxed)
+    }
+
+    /// Ring reloads that exhausted retries and recomputed instead.
+    pub fn spill_read_aborts(&self) -> u64 {
+        self.spill_read_aborts.load(Ordering::Relaxed)
+    }
+
+    /// Modelled retry-backoff accumulated by ring reloads, in seconds.
+    pub fn backoff_seconds(&self) -> f64 {
+        self.backoff_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
     /// Add to the shared pruned-records counter (kernels report how many
@@ -690,6 +781,14 @@ impl IterativeSession<'_> {
     /// Charge a driver-side HDFS scan to the session's modelled clock.
     pub fn charge_scan(&mut self, bytes: u64) {
         self.engine.charge_scan(bytes);
+    }
+
+    /// Charge modelled retry-backoff (slab ring recovery) to the session's
+    /// clock — the session loop drains the slab's accrued backoff here.
+    pub fn charge_backoff(&mut self, s: f64) {
+        if s > 0.0 {
+            self.engine.charge_backoff(s);
+        }
     }
 }
 
@@ -888,6 +987,81 @@ mod tests {
             Arc::ptr_eq(&h0, &slab.entry(0)),
             "locked entry must survive budget pressure in place"
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chaos_spill_read_retries_then_reloads_bitwise() {
+        let dir = spill_dir("chaos_read");
+        // Trip exactly one transient fault at the first ring read.
+        let cfg = SpillConfig::new(dir.clone())
+            .with_faults(Some(FaultPlan::tripping(13, FaultSite::SpillRead, 0)));
+        let slab: StateSlab<CounterState> = StateSlab::new(250, Some(cfg));
+        for block in 0..4 {
+            touch(&slab, block, 100);
+        }
+        assert_eq!(slab.spills(), 2);
+        // Reload block 0 through the faulted read: one retry, then the
+        // state comes back bitwise (pass counter survived).
+        let h = slab.entry(0);
+        assert_eq!(h.lock().unwrap().passes, 1, "retried reload must be bitwise");
+        assert_eq!(slab.spill_retries(), 1);
+        assert_eq!(slab.spill_read_aborts(), 0);
+        assert!((slab.backoff_seconds() - backoff_s(1)).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chaos_spill_read_exhaustion_degrades_to_recompute() {
+        let dir = spill_dir("chaos_abort");
+        // Rate 1.0: the ring read never clears — the slab must fall back
+        // to a fresh state (the recompute path), never hang or panic.
+        let cfg = SpillConfig::new(dir.clone())
+            .with_faults(Some(FaultPlan::for_site(13, FaultSite::SpillRead, 1.0, 0.0)));
+        let slab: StateSlab<CounterState> = StateSlab::new(250, Some(cfg));
+        for block in 0..4 {
+            touch(&slab, block, 100);
+        }
+        assert_eq!(slab.spills(), 2);
+        let h = slab.entry(0);
+        assert_eq!(h.lock().unwrap().passes, 0, "exhausted reload must start fresh");
+        assert_eq!(slab.spill_read_aborts(), 1);
+        assert_eq!(slab.spill_retries(), u64::from(MAX_READ_RETRIES) - 1);
+        assert_eq!(slab.reloads(), 0, "no image was ever adopted");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chaos_spill_corruption_quarantines_then_rereads() {
+        let dir = spill_dir("chaos_corrupt");
+        let cfg = SpillConfig::new(dir.clone())
+            .with_faults(Some(FaultPlan::tripping_corrupt(13, FaultSite::SpillRead, 0)));
+        let slab: StateSlab<CounterState> = StateSlab::new(250, Some(cfg));
+        for block in 0..4 {
+            touch(&slab, block, 100);
+        }
+        let h = slab.entry(0);
+        assert_eq!(h.lock().unwrap().passes, 1, "quarantined slot must re-read clean");
+        assert_eq!(slab.spill_quarantines(), 1);
+        assert_eq!(slab.spill_retries(), 0, "a quarantine re-read is not a transient retry");
+        assert_eq!(slab.spill_read_aborts(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chaos_spill_write_fault_degrades_to_counted_eviction() {
+        let dir = spill_dir("chaos_write");
+        // Every ring write faults: the slab must degrade exactly like an
+        // unwritable ring — counted evictions, recompute on next touch.
+        let cfg = SpillConfig::new(dir.clone())
+            .with_faults(Some(FaultPlan::for_site(13, FaultSite::SpillWrite, 1.0, 0.0)));
+        let slab: StateSlab<CounterState> = StateSlab::new(250, Some(cfg));
+        for block in 0..4 {
+            touch(&slab, block, 100);
+        }
+        assert_eq!(slab.spills(), 0, "faulted writes must never count as spills");
+        assert_eq!(slab.evictions(), 2);
+        assert_eq!(slab.entry(0).lock().unwrap().passes, 0, "state recomputes from fresh");
         std::fs::remove_dir_all(&dir).ok();
     }
 

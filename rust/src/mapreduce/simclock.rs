@@ -30,6 +30,9 @@ pub struct SimCost {
     /// Network transport (the serving front's wire bytes), charged the
     /// way HDFS I/O is: bytes × a calibrated per-MiB rate.
     pub net_s: f64,
+    /// Modelled retry-backoff waits (transient-fault recovery). Charged in
+    /// virtual time only — the process never actually sleeps.
+    pub backoff_s: f64,
 }
 
 impl SimCost {
@@ -40,6 +43,7 @@ impl SimCost {
             + self.shuffle_s
             + self.compute_s
             + self.net_s
+            + self.backoff_s
     }
 
     pub fn add(&mut self, other: &SimCost) {
@@ -49,6 +53,7 @@ impl SimCost {
         self.shuffle_s += other.shuffle_s;
         self.compute_s += other.compute_s;
         self.net_s += other.net_s;
+        self.backoff_s += other.backoff_s;
     }
 
     /// Field-wise `self − before`: a run's share of a shared clock's cost
@@ -62,6 +67,7 @@ impl SimCost {
             shuffle_s: self.shuffle_s - before.shuffle_s,
             compute_s: self.compute_s - before.compute_s,
             net_s: self.net_s - before.net_s,
+            backoff_s: self.backoff_s - before.backoff_s,
         }
     }
 }
@@ -149,6 +155,7 @@ impl SimClock {
             shuffle_s: shuffle,
             compute_s: frac(compute_total) + reduce_wall_s * overhead.compute_scale,
             net_s: 0.0,
+            backoff_s: 0.0,
         };
         self.cost.add(&exact);
         self.jobs += 1;
@@ -181,6 +188,15 @@ impl SimClock {
     pub fn charge_net(&mut self, overhead: &OverheadConfig, bytes: u64) -> f64 {
         let s = bytes as f64 / (1024.0 * 1024.0) * overhead.net_s_per_mib;
         self.cost.net_s += s;
+        s
+    }
+
+    /// Charge modelled retry-backoff wait (seconds of virtual time). The
+    /// fault-recovery paths never sleep for real; they account the
+    /// exponential-backoff schedule here so modelled times stay honest
+    /// about what a cluster would have paid. Returns the seconds charged.
+    pub fn charge_backoff(&mut self, s: f64) -> f64 {
+        self.cost.backoff_s += s;
         s
     }
 
@@ -297,6 +313,21 @@ mod tests {
         clock.charge_scan(&overhead(), 100 * 1024 * 1024);
         // 2·2.0 compute + 100·0.1 io
         assert!((clock.total_s() - 14.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backoff_charges_accumulate_and_delta() {
+        let mut clock = SimClock::new();
+        let s = clock.charge_backoff(0.3);
+        assert!((s - 0.3).abs() < 1e-12);
+        assert!((clock.cost().backoff_s - 0.3).abs() < 1e-12);
+        assert!((clock.total_s() - 0.3).abs() < 1e-12);
+        let before = clock.cost();
+        clock.charge_backoff(0.7);
+        assert!((clock.cost().delta(&before).backoff_s - 0.7).abs() < 1e-12);
+        let mut sum = SimCost::default();
+        sum.add(&clock.cost());
+        assert!((sum.backoff_s - 1.0).abs() < 1e-12);
     }
 
     #[test]

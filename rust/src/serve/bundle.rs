@@ -26,6 +26,7 @@ use std::path::Path;
 use crate::data::normalize::Scaler;
 use crate::data::Matrix;
 use crate::error::{Error, Result};
+use crate::faults::{corrupt_image, FaultPlan, FaultSite, Injected, MAX_READ_RETRIES};
 use crate::fcm::backend::{
     put_blob, put_f32s, put_f64, put_f64s, put_matrix, put_u32, put_u64, put_u8, Cur,
 };
@@ -289,6 +290,42 @@ impl ModelBundle {
         Self::decode(&bytes)
     }
 
+    /// Load and verify from a file under the chaos plan's `BundleLoad`
+    /// site. Transient injected faults retry (bounded, like every other
+    /// read boundary); injected corruption flips a byte in the freshly
+    /// read image and routes it through the real codec — the FNV-1a
+    /// trailer must reject it — before re-reading clean bytes; exhaustion
+    /// surfaces a structured error naming the path. With `faults` `None`
+    /// this is exactly [`Self::load`].
+    pub fn load_with_faults(path: &Path, faults: Option<&FaultPlan>) -> Result<ModelBundle> {
+        let Some(plan) = faults else { return Self::load(path) };
+        let mut attempt: u32 = 0;
+        loop {
+            attempt += 1;
+            match plan.check(FaultSite::BundleLoad) {
+                None => return Self::load(path),
+                Some(Injected::Corrupt) => {
+                    let mut img = std::fs::read(path).map_err(|e| Error::io(path, e))?;
+                    corrupt_image(&mut img, plan.seed() ^ attempt as u64);
+                    if let Ok(bundle) = Self::decode(&img) {
+                        // Pathological checksum collision: the torn image
+                        // still decoded and validated — serve it.
+                        return Ok(bundle);
+                    }
+                    // Quarantined; loop around and re-read clean bytes.
+                }
+                Some(_) => {}
+            }
+            if attempt >= MAX_READ_RETRIES {
+                return Err(Error::Bundle(format!(
+                    "{}: load failed after {MAX_READ_RETRIES} attempts \
+                     (fault persisted through retries)",
+                    path.display()
+                )));
+            }
+        }
+    }
+
     /// Human-readable report for `bigfcm info --model`.
     pub fn summary(&self) -> String {
         format!(
@@ -386,6 +423,54 @@ mod tests {
             s.scale[0] = 0.0;
         }
         assert!(b.validate().is_err(), "zero scale must be rejected");
+    }
+
+    fn saved_sample(tag: &str) -> (std::path::PathBuf, ModelBundle) {
+        let dir = std::env::temp_dir()
+            .join(format!("bigfcm_bundle_chaos_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bundle");
+        let b = sample_bundle(2);
+        b.save(&path).unwrap();
+        (path, b)
+    }
+
+    #[test]
+    fn load_with_faults_none_is_plain_load() {
+        let (path, b) = saved_sample("plain");
+        let back = ModelBundle::load_with_faults(&path, None).unwrap();
+        assert_eq!(back.encode(), b.encode());
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn transient_bundle_fault_retries_then_loads_bitwise() {
+        let (path, b) = saved_sample("transient");
+        let plan = FaultPlan::tripping(17, FaultSite::BundleLoad, 0);
+        let back = ModelBundle::load_with_faults(&path, Some(plan.as_ref())).unwrap();
+        assert_eq!(back.encode(), b.encode());
+        assert_eq!(plan.injected_at(FaultSite::BundleLoad), 1);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn corrupt_bundle_is_quarantined_then_reread_bitwise() {
+        let (path, b) = saved_sample("corrupt");
+        let plan = FaultPlan::tripping_corrupt(17, FaultSite::BundleLoad, 0);
+        let back = ModelBundle::load_with_faults(&path, Some(plan.as_ref())).unwrap();
+        assert_eq!(back.encode(), b.encode());
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn persistent_bundle_fault_aborts_with_path() {
+        let (path, _) = saved_sample("persistent");
+        let plan = FaultPlan::for_site(17, FaultSite::BundleLoad, 1.0, 0.0);
+        let err = ModelBundle::load_with_faults(&path, Some(plan.as_ref())).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("after 3 attempts"), "{msg}");
+        assert!(msg.contains("m.bundle"), "{msg}");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
     }
 
     #[test]

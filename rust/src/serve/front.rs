@@ -44,6 +44,7 @@ use std::time::Duration;
 
 use crate::config::OverheadConfig;
 use crate::error::{Error, Result};
+use crate::faults::{FaultPlan, FaultSite, Injected};
 use crate::json::{self, Value};
 use crate::mapreduce::SimClock;
 use crate::serve::bundle::ModelBundle;
@@ -62,6 +63,11 @@ pub struct FrontOptions {
     /// Socket read timeout: how often an idle handler wakes to check the
     /// shutdown flag.
     pub read_timeout: Duration,
+    /// Chaos plan: each accepted connection checks the `Connection` site —
+    /// an injected drop closes it before any frame is served (counted in
+    /// [`FrontStats::conn_drops`]), an injected latency spike charges the
+    /// modelled clock. `None` (the default) checks nothing.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for FrontOptions {
@@ -70,6 +76,7 @@ impl Default for FrontOptions {
             conn_workers: 8,
             max_frame_bytes: 1 << 20,
             read_timeout: Duration::from_millis(250),
+            faults: None,
         }
     }
 }
@@ -91,6 +98,12 @@ pub struct FrontStats {
     pub scored: u64,
     /// Modelled transport seconds charged to the SimClock.
     pub modelled_net_s: f64,
+    /// Connections killed by an injected fault before serving a frame
+    /// (chaos runs only; clients see a clean close, never a hang).
+    pub conn_drops: u64,
+    /// Modelled injected-latency seconds (chaos runs only; virtual time,
+    /// the front never actually sleeps).
+    pub injected_wait_s: f64,
 }
 
 impl FrontStats {
@@ -103,6 +116,8 @@ impl FrontStats {
             ("bytes_out", json::num(self.bytes_out as f64)),
             ("scored", json::num(self.scored as f64)),
             ("modelled_net_s", json::num(self.modelled_net_s)),
+            ("conn_drops", json::num(self.conn_drops as f64)),
+            ("injected_wait_s", json::num(self.injected_wait_s)),
         ])
     }
 }
@@ -119,6 +134,7 @@ struct FrontShared {
     bytes_in: AtomicU64,
     bytes_out: AtomicU64,
     scored: AtomicU64,
+    conn_drops: AtomicU64,
 }
 
 /// The running front: listener + acceptor thread + handler pool (see
@@ -156,6 +172,7 @@ impl ServeFront {
             bytes_in: AtomicU64::new(0),
             bytes_out: AtomicU64::new(0),
             scored: AtomicU64::new(0),
+            conn_drops: AtomicU64::new(0),
         });
         let for_acceptor = Arc::clone(&shared);
         let acceptor = std::thread::Builder::new()
@@ -214,6 +231,8 @@ impl ServeFront {
             bytes_out: sh.bytes_out.load(Ordering::Relaxed),
             scored: sh.scored.load(Ordering::Relaxed),
             modelled_net_s: sh.clock.lock().expect("front clock poisoned").cost().net_s,
+            conn_drops: sh.conn_drops.load(Ordering::Relaxed),
+            injected_wait_s: sh.clock.lock().expect("front clock poisoned").cost().backoff_s,
         }
     }
 }
@@ -307,6 +326,25 @@ fn write_frame(sh: &FrontShared, stream: &mut TcpStream, text: &str) -> bool {
 fn handle_connection(sh: Arc<FrontShared>, mut stream: TcpStream) {
     let _ = stream.set_read_timeout(Some(sh.opts.read_timeout));
     let _ = stream.set_nodelay(true);
+    // Chaos: each accepted connection draws once at the Connection site.
+    // A latency spike is charged to the modelled clock (virtual time, no
+    // real sleep); any other injection kills the connection before the
+    // first frame — the peer sees a clean close, never a hang.
+    if let Some(plan) = sh.opts.faults.as_ref() {
+        match plan.check(FaultSite::Connection) {
+            None => {}
+            Some(Injected::Latency(us)) => {
+                sh.clock
+                    .lock()
+                    .expect("front clock poisoned")
+                    .charge_backoff(us as f64 / 1e6);
+            }
+            Some(_) => {
+                sh.conn_drops.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
     loop {
         let cmd = match read_frame(&sh, &mut stream) {
             Ok(text) => text,
@@ -347,6 +385,13 @@ fn dispatch_inner(sh: &FrontShared, cmd: &str) -> Result<String> {
     let verb = parts.next().unwrap_or("");
     match verb {
         "ping" => Ok("ok pong".into()),
+        // Liveness probe for degraded-mode monitors: touches no registry
+        // lock, so it answers even while reloads or scoring are wedged.
+        "health" => Ok(if sh.shutdown.load(Ordering::SeqCst) {
+            "ok draining".into()
+        } else {
+            "ok up".into()
+        }),
         "score" => {
             let model = parts
                 .next()
@@ -393,7 +438,10 @@ fn dispatch_inner(sh: &FrontShared, cmd: &str) -> Result<String> {
             let path = parts
                 .next()
                 .ok_or_else(|| Error::InvalidArgument("reload needs: model bundle-path".into()))?;
-            let bundle = ModelBundle::load(std::path::Path::new(path))?;
+            let bundle = ModelBundle::load_with_faults(
+                std::path::Path::new(path),
+                sh.opts.faults.as_deref(),
+            )?;
             let generation = sh.registry.publish(model, bundle)?;
             Ok(format!("ok {generation}"))
         }
@@ -413,6 +461,13 @@ fn dispatch_inner(sh: &FrontShared, cmd: &str) -> Result<String> {
                 bytes_out: sh.bytes_out.load(Ordering::Relaxed),
                 scored: sh.scored.load(Ordering::Relaxed),
                 modelled_net_s: sh.clock.lock().expect("front clock poisoned").cost().net_s,
+                conn_drops: sh.conn_drops.load(Ordering::Relaxed),
+                injected_wait_s: sh
+                    .clock
+                    .lock()
+                    .expect("front clock poisoned")
+                    .cost()
+                    .backoff_s,
             };
             let doc = json::obj(vec![
                 ("front", front.to_json()),
@@ -432,8 +487,23 @@ fn dispatch_inner(sh: &FrontShared, cmd: &str) -> Result<String> {
 /// payload. Used by `bigfcm serve --connect`, the verify smoke and the
 /// integration tests.
 pub fn client_call(addr: &str, cmd: &str, timeout: Duration) -> Result<String> {
-    let mut stream = TcpStream::connect(addr)
-        .map_err(|e| Error::Job(format!("connect {addr}: {e}")))?;
+    use std::net::ToSocketAddrs;
+    // Distinguish "down" (refused/unreachable — `Error::Job`) from "slow"
+    // (peer up but unresponsive — `Error::Timeout`), so callers can retry
+    // a slow front but fail fast on a dead one.
+    let is_timeout = |k: ErrorKind| matches!(k, ErrorKind::TimedOut | ErrorKind::WouldBlock);
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| Error::Job(format!("resolve {addr}: {e}")))?
+        .next()
+        .ok_or_else(|| Error::Job(format!("resolve {addr}: no addresses")))?;
+    let mut stream = TcpStream::connect_timeout(&sock, timeout).map_err(|e| {
+        if is_timeout(e.kind()) {
+            Error::Timeout(format!("connect {addr}: no answer within {timeout:?}"))
+        } else {
+            Error::Job(format!("connect {addr}: {e}"))
+        }
+    })?;
     stream
         .set_read_timeout(Some(timeout))
         .map_err(|e| Error::Job(format!("socket timeout: {e}")))?;
@@ -445,13 +515,21 @@ pub fn client_call(addr: &str, cmd: &str, timeout: Duration) -> Result<String> {
         .and_then(|_| stream.write_all(bytes))
         .map_err(|e| Error::Job(format!("send to {addr}: {e}")))?;
     let mut hdr = [0u8; 4];
-    stream
-        .read_exact(&mut hdr)
-        .map_err(|e| Error::Job(format!("response header from {addr}: {e}")))?;
+    stream.read_exact(&mut hdr).map_err(|e| {
+        if is_timeout(e.kind()) {
+            Error::Timeout(format!("response header from {addr}: no answer within {timeout:?}"))
+        } else {
+            Error::Job(format!("response header from {addr}: {e}"))
+        }
+    })?;
     let len = u32::from_le_bytes(hdr) as usize;
     let mut payload = vec![0u8; len];
-    stream
-        .read_exact(&mut payload)
-        .map_err(|e| Error::Job(format!("response payload from {addr}: {e}")))?;
+    stream.read_exact(&mut payload).map_err(|e| {
+        if is_timeout(e.kind()) {
+            Error::Timeout(format!("response payload from {addr}: no answer within {timeout:?}"))
+        } else {
+            Error::Job(format!("response payload from {addr}: {e}"))
+        }
+    })?;
     String::from_utf8(payload).map_err(|_| Error::Job("response is not UTF-8".into()))
 }

@@ -81,6 +81,12 @@ pub struct ServeOptions {
     /// Max requests one tenant may hold in the queue at once; admission
     /// beyond it fails fast with [`Error::QuotaExceeded`]. 0 = unlimited.
     pub tenant_quota: usize,
+    /// Per-request deadline (enqueue → batch admission): a request still
+    /// queued when it expires is answered [`Error::Deadline`] and shed
+    /// before it reaches a batch — a degraded service answers *something*
+    /// for every request instead of scoring work nobody is waiting for.
+    /// `None` never sheds by age.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServeOptions {
@@ -91,6 +97,7 @@ impl Default for ServeOptions {
             queue_cap: 1024,
             linger: Duration::from_micros(200),
             tenant_quota: 0,
+            deadline: None,
         }
     }
 }
@@ -103,6 +110,11 @@ impl ServeOptions {
             queue_cap: cfg.queue_cap.max(1),
             linger: Duration::from_micros(cfg.linger_us),
             tenant_quota: cfg.tenant_quota,
+            deadline: if cfg.deadline_us > 0 {
+                Some(Duration::from_micros(cfg.deadline_us))
+            } else {
+                None
+            },
         }
     }
 }
@@ -169,6 +181,12 @@ pub struct ServeStats {
     pub quota_rejections: u64,
     /// High-lane pops that passed over waiting normal-lane requests.
     pub deprioritized: u64,
+    /// Requests shed with [`Error::Deadline`]: still queued when their
+    /// deadline expired, answered without ever reaching a batch.
+    pub deadline_shed: u64,
+    /// Normal-lane requests rejected with [`Error::Overloaded`] at a full
+    /// queue (high-lane work keeps backpressure-waiting instead).
+    pub overload_shed: u64,
     /// Current model generation (1 at spawn, +1 per reload).
     pub generation: u64,
     /// Request latency percentiles, enqueue → response, microseconds.
@@ -192,6 +210,8 @@ impl ServeStats {
             ("backpressure_waits", json::num(self.backpressure_waits as f64)),
             ("quota_rejections", json::num(self.quota_rejections as f64)),
             ("deprioritized", json::num(self.deprioritized as f64)),
+            ("deadline_shed", json::num(self.deadline_shed as f64)),
+            ("overload_shed", json::num(self.overload_shed as f64)),
             ("generation", json::num(self.generation as f64)),
             ("p50_us", json::num(self.p50_us as f64)),
             ("p95_us", json::num(self.p95_us as f64)),
@@ -210,6 +230,8 @@ struct Pending {
     row: Vec<f32>,
     tenant: Option<String>,
     tx: Sender<Result<Scored>>,
+    /// Admission time — the deadline clock ([`ServeOptions::deadline`]).
+    enqueued: Instant,
 }
 
 /// Latency samples the reservoir keeps resident — enough for stable
@@ -316,6 +338,8 @@ struct Shared {
     backpressure_waits: AtomicU64,
     quota_rejections: AtomicU64,
     deprioritized: AtomicU64,
+    deadline_shed: AtomicU64,
+    overload_shed: AtomicU64,
     errors: AtomicU64,
     latencies_us: Mutex<LatencyLog>,
 }
@@ -370,6 +394,12 @@ impl ScoreServiceBuilder {
         self
     }
 
+    /// Per-request deadline; `None` never sheds by age.
+    pub fn deadline(mut self, d: Option<Duration>) -> Self {
+        self.opts.deadline = d;
+        self
+    }
+
     /// Validate the bundle, spawn the batcher thread, return the running
     /// service (generation 1).
     pub fn spawn(self, backend: Arc<dyn KernelBackend>) -> Result<ScoreService> {
@@ -396,6 +426,8 @@ impl ScoreServiceBuilder {
             backpressure_waits: AtomicU64::new(0),
             quota_rejections: AtomicU64::new(0),
             deprioritized: AtomicU64::new(0),
+            deadline_shed: AtomicU64::new(0),
+            overload_shed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             latencies_us: Mutex::new(LatencyLog::new()),
         });
@@ -507,6 +539,15 @@ impl ScoreService {
                 _ => None,
             };
             while q.len() >= sh.opts.queue_cap && !q.closed {
+                // Degraded mode sheds the sheddable lane first: normal
+                // work bounces immediately instead of camping on the
+                // condvar, keeping the bounded queue's residual capacity
+                // for high-lane (latency-critical) tenants, which retain
+                // the blocking backpressure contract.
+                if lane == Lane::Normal {
+                    sh.overload_shed.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::Overloaded);
+                }
                 sh.backpressure_waits.fetch_add(1, Ordering::Relaxed);
                 q = sh.not_full.wait(q).expect("score queue poisoned");
             }
@@ -524,7 +565,7 @@ impl ScoreService {
                 }
                 *q.tenant_counts.entry(t.clone()).or_insert(0) += 1;
             }
-            let pending = Pending { row, tenant: tracked, tx };
+            let pending = Pending { row, tenant: tracked, tx, enqueued: t0 };
             match lane {
                 Lane::High => q.high.push_back(pending),
                 Lane::Normal => q.normal.push_back(pending),
@@ -568,6 +609,8 @@ impl ScoreService {
             backpressure_waits: sh.backpressure_waits.load(Ordering::Relaxed),
             quota_rejections: sh.quota_rejections.load(Ordering::Relaxed),
             deprioritized: sh.deprioritized.load(Ordering::Relaxed),
+            deadline_shed: sh.deadline_shed.load(Ordering::Relaxed),
+            overload_shed: sh.overload_shed.load(Ordering::Relaxed),
             generation: self.generation(),
             p50_us: pct(0.50),
             p95_us: pct(0.95),
@@ -609,6 +652,26 @@ impl Drop for ScoreService {
     }
 }
 
+/// Pop the next request that still has time to live. Requests whose
+/// [`ServeOptions::deadline`] expired while they queued are answered
+/// [`Error::Deadline`] right here — shed before batch admission, never
+/// scored — and counted in [`ServeStats::deadline_shed`].
+fn pop_live(q: &mut QueueInner, sh: &Shared) -> Option<Pending> {
+    while let Some(p) = q.pop(&sh.deprioritized) {
+        let expired = sh
+            .opts
+            .deadline
+            .map(|d| p.enqueued.elapsed() > d)
+            .unwrap_or(false);
+        if !expired {
+            return Some(p);
+        }
+        sh.deadline_shed.fetch_add(1, Ordering::Relaxed);
+        let _ = p.tx.send(Err(Error::Deadline));
+    }
+    None
+}
+
 /// Batcher thread: pop the first waiting request, linger for company, cut
 /// the batch at `max_batch` or the linger deadline, execute off-lock.
 fn worker_loop(sh: Arc<Shared>) {
@@ -617,7 +680,7 @@ fn worker_loop(sh: Arc<Shared>) {
         {
             let mut q = sh.queue.lock().expect("score queue poisoned");
             loop {
-                if let Some(p) = q.pop(&sh.deprioritized) {
+                if let Some(p) = pop_live(&mut q, &sh) {
                     batch.push(p);
                     break;
                 }
@@ -629,7 +692,7 @@ fn worker_loop(sh: Arc<Shared>) {
             let deadline = Instant::now() + sh.opts.linger;
             loop {
                 while batch.len() < sh.opts.max_batch {
-                    match q.pop(&sh.deprioritized) {
+                    match pop_live(&mut q, &sh) {
                         Some(p) => batch.push(p),
                         None => break,
                     }
@@ -1006,6 +1069,87 @@ mod tests {
         match r2 {
             Err(Error::ShuttingDown) => {}
             other => panic!("queued request must get ShuttingDown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn expired_request_is_shed_with_deadline_before_scoring() {
+        let (bundle, x) = bundle_from_blobs(21);
+        let gate = Arc::new(GatedBackend::new());
+        let svc = Arc::new(
+            ScoreService::builder(bundle)
+                .max_batch(1)
+                .linger(Duration::from_micros(0))
+                .deadline(Some(Duration::from_millis(5)))
+                .spawn(Arc::clone(&gate) as Arc<dyn KernelBackend>)
+                .unwrap(),
+        );
+        let x = Arc::new(x);
+        let c1 = client_as(&svc, &x, 0, "t");
+        gate.wait_entered(); // request 1 claimed into a batch before expiry
+        let c2 = client_as(&svc, &x, 1, "t");
+        let t0 = Instant::now();
+        while svc.stats().queue_peak < 1 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "request 2 never queued");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Let request 2 outlive its deadline in the queue, then unblock.
+        std::thread::sleep(Duration::from_millis(25));
+        gate.release.store(true, Ordering::SeqCst);
+        let r1 = c1.join().unwrap();
+        assert!(r1.is_ok(), "claimed-before-expiry request must score: {r1:?}");
+        match c2.join().unwrap() {
+            Err(Error::Deadline) => {}
+            other => panic!("expired request must get Deadline, got {other:?}"),
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.deadline_shed, 1);
+        assert_eq!(stats.requests, 2, "shed requests are still answered requests");
+    }
+
+    #[test]
+    fn full_queue_sheds_normal_lane_but_backpressures_high_lane() {
+        let (bundle, x) = bundle_from_blobs(22);
+        let gate = Arc::new(GatedBackend::new());
+        let svc = Arc::new(
+            ScoreService::builder(bundle)
+                .max_batch(1)
+                .queue_cap(1)
+                .linger(Duration::from_micros(0))
+                .spawn(Arc::clone(&gate) as Arc<dyn KernelBackend>)
+                .unwrap(),
+        );
+        let x = Arc::new(x);
+        let c1 = client_as(&svc, &x, 0, "t");
+        gate.wait_entered(); // batcher stuck executing request 1
+        let c2 = client_as(&svc, &x, 1, "t"); // fills the 1-slot queue
+        let t0 = Instant::now();
+        while svc.stats().queue_peak < 1 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "request 2 never queued");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Normal lane at a full queue: immediate structured rejection.
+        match svc.score_as(x.row(2), "t", Lane::Normal) {
+            Err(Error::Overloaded) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(svc.stats().overload_shed, 1);
+        // High lane keeps the blocking backpressure contract instead.
+        let high = {
+            let svc = Arc::clone(&svc);
+            let x = Arc::clone(&x);
+            std::thread::spawn(move || svc.score_as(x.row(3), "t", Lane::High))
+        };
+        let t0 = Instant::now();
+        while svc.stats().backpressure_waits == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "high-lane client never waited");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        gate.release.store(true, Ordering::SeqCst);
+        for h in [c1, c2, high] {
+            let out = h.join().unwrap().unwrap();
+            let s: f32 = out.memberships.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
         }
     }
 

@@ -1,0 +1,420 @@
+//! Chaos test matrix: the deterministic fault layer (`bigfcm::faults`)
+//! driven through every recovery path at fixed seeds.
+//!
+//! The contract under test, per fault site:
+//!   * recovered faults are *transparent* — session centers and bulk-score
+//!     output are bitwise identical to the fault-free run (recovery only
+//!     adds modelled backoff time and counter ticks);
+//!   * unrecoverable faults are *structured* — a typed error naming the
+//!     failing unit (`TaskFailed`, `Timeout`, bundle/checkpoint messages)
+//!     or a metered degraded path (spill slots recompute, connections
+//!     close), never a panic and never a hang;
+//!   * the same seed replays the same schedule, so every assertion here is
+//!     deterministic.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bigfcm::config::{OverheadConfig, QuantMode};
+use bigfcm::data::synth::blobs;
+use bigfcm::data::Matrix;
+use bigfcm::error::Result;
+use bigfcm::faults::{FaultPlan, FaultSite};
+use bigfcm::fcm::loops::{
+    run_fcm_session, CheckpointPolicy, FcmParams, PruneConfig, SessionAlgo, SessionRunResult,
+    Variant,
+};
+use bigfcm::fcm::{seeding, KernelBackend, NativeBackend, SessionCheckpoint};
+use bigfcm::hdfs::BlockStore;
+use bigfcm::mapreduce::{
+    DistributedCache, Engine, EngineOptions, MapReduceJob, SessionOptions, TaskCtx,
+};
+use bigfcm::prng::Pcg;
+use bigfcm::serve::{
+    client_call, run_score_job, FrontOptions, ModelBundle, ModelRegistry, ServeFront, ServeOptions,
+};
+use bigfcm::Error;
+
+/// The three fixed seeds the whole matrix replays at.
+const SEEDS: [u64; 3] = [11, 12, 13];
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("bigfcm_chaos_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Small-but-real session fixture: 8 blocks of 256 records, 3 clusters.
+fn session_fixture(seed: u64) -> (Arc<BlockStore>, Matrix, FcmParams, Arc<dyn KernelBackend>) {
+    let data = blobs(2048, 3, 3, 0.25, seed);
+    let store = Arc::new(BlockStore::in_memory("chaos", &data.features, 256, 4).unwrap());
+    let mut rng = Pcg::new(seed ^ 0x5E55);
+    let v0 = seeding::random_records(&data.features, 3, &mut rng);
+    let params = FcmParams { epsilon: 1e-10, max_iterations: 60, ..Default::default() };
+    (store, v0, params, Arc::new(NativeBackend))
+}
+
+/// Chaos engines disable the prefetcher so every block goes through the
+/// demand-read fault site in a deterministic op order (the prefetcher has
+/// its own site, exercised by the cache unit tests).
+fn engine_with(faults: Option<Arc<FaultPlan>>) -> Engine {
+    let opts = EngineOptions { prefetch: false, faults, ..Default::default() };
+    Engine::new(opts, OverheadConfig::default())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_session(
+    engine: &mut Engine,
+    store: &Arc<BlockStore>,
+    backend: &Arc<dyn KernelBackend>,
+    v0: &Matrix,
+    params: &FcmParams,
+    prune: &PruneConfig,
+    checkpoint: Option<&CheckpointPolicy>,
+) -> SessionRunResult {
+    run_fcm_session(
+        engine,
+        store,
+        Arc::clone(backend),
+        SessionAlgo::Fcm,
+        v0.clone(),
+        params,
+        prune,
+        SessionOptions::default(),
+        checkpoint,
+    )
+    .unwrap()
+}
+
+fn assert_bitwise(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!(a.rows(), b.rows(), "{what}: row count");
+    assert_eq!(a.cols(), b.cols(), "{what}: col count");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+/// Recovered demand-read faults — one transient retry and one checksum
+/// quarantine — are invisible in the results at every seed: centers
+/// bitwise-match the fault-free run, only the recovery meters move.
+#[test]
+fn session_centers_bitwise_identical_under_recovered_read_faults() {
+    for (i, seed) in SEEDS.into_iter().enumerate() {
+        let (store, v0, params, backend) = session_fixture(seed);
+        let prune = PruneConfig::disabled();
+        let mut clean = engine_with(None);
+        let base = run_session(&mut clean, &store, &backend, &v0, &params, &prune, None);
+
+        for corrupt in [false, true] {
+            let plan = if corrupt {
+                FaultPlan::tripping_corrupt(seed, FaultSite::BlockRead, i as u64)
+            } else {
+                FaultPlan::tripping(seed, FaultSite::BlockRead, i as u64)
+            };
+            let mut engine = engine_with(Some(Arc::clone(&plan)));
+            let run = run_session(&mut engine, &store, &backend, &v0, &params, &prune, None);
+            assert_eq!(
+                plan.injected_at(FaultSite::BlockRead),
+                1,
+                "seed {seed}: the tripped fault must fire exactly once"
+            );
+            let cache = engine.block_cache();
+            if corrupt {
+                assert_eq!(cache.quarantines(), 1, "seed {seed}: corrupt read quarantined");
+            } else {
+                assert_eq!(cache.read_retries(), 1, "seed {seed}: transient read retried");
+                assert!(
+                    run.sim.backoff_s > 0.0,
+                    "seed {seed}: retry backoff must be charged to the modelled clock"
+                );
+            }
+            assert_eq!(cache.read_aborts(), 0, "seed {seed}: one fault never exhausts retries");
+            assert_bitwise(
+                &base.result.centers,
+                &run.result.centers,
+                &format!("seed {seed} corrupt={corrupt}"),
+            );
+            assert_eq!(run.result.iterations, base.result.iterations, "seed {seed}");
+        }
+    }
+}
+
+/// A spill ring whose every slot read faults persistently degrades to
+/// recompute — the session still converges to a finite objective, with the
+/// retries and aborts metered, instead of erroring or hanging.
+#[test]
+fn spill_ring_degrades_to_recompute_under_persistent_read_faults() {
+    let seed = SEEDS[1];
+    let (store, v0, params, backend) = session_fixture(seed);
+    let dir = tmp_dir("spill");
+    let prune = PruneConfig {
+        slab_bytes: 16 * 1024,
+        spill_dir: Some(dir.clone()),
+        ..PruneConfig::default()
+    };
+
+    let mut clean = engine_with(None);
+    let base = run_session(&mut clean, &store, &backend, &v0, &params, &prune, None);
+    assert!(
+        base.slab_spilled_bytes > 0 && base.slab_reloads > 0,
+        "fixture must exercise the spill ring (spilled {} B, {} reloads)",
+        base.slab_spilled_bytes,
+        base.slab_reloads
+    );
+
+    let plan = FaultPlan::for_site(seed, FaultSite::SpillRead, 1.0, 0.0);
+    let mut engine = engine_with(Some(Arc::clone(&plan)));
+    let run = run_session(&mut engine, &store, &backend, &v0, &params, &prune, None);
+    assert!(plan.injected_at(FaultSite::SpillRead) > 0, "spill reads must have been attempted");
+    assert!(run.slab_spill_retries > 0, "exhaustion walks through the retry budget first");
+    assert!(run.result.converged, "recompute degradation must not block convergence");
+    assert!(run.result.objective.is_finite());
+    assert!(run.sim.backoff_s > 0.0, "spill retries charge modelled backoff");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Bulk scoring writes byte-identical membership blocks whether or not a
+/// recovered fault hit the input path.
+#[test]
+fn bulk_score_output_is_byte_identical_under_recovered_faults() {
+    let seed = SEEDS[2];
+    let data = blobs(1536, 4, 3, 0.25, seed);
+    let store = Arc::new(BlockStore::in_memory("chaos_score", &data.features, 256, 4).unwrap());
+    let backend: Arc<dyn KernelBackend> = Arc::new(NativeBackend);
+    let mk_bundle = || {
+        let mut centers = Matrix::zeros(3, 4);
+        for i in 0..3 {
+            centers.row_mut(i).copy_from_slice(data.features.row(i * 512));
+        }
+        ModelBundle::new(centers, SessionAlgo::Fcm, Variant::Fast, 2.0)
+    };
+
+    let out_clean = tmp_dir("score_clean");
+    let mut clean = engine_with(None);
+    let a = run_score_job(
+        &mut clean,
+        &store,
+        Arc::new(mk_bundle()),
+        Arc::clone(&backend),
+        2,
+        QuantMode::Off,
+        out_clean.clone(),
+    )
+    .unwrap();
+
+    let out_chaos = tmp_dir("score_chaos");
+    let plan = FaultPlan::tripping(seed, FaultSite::BlockRead, 1);
+    let mut engine = engine_with(Some(Arc::clone(&plan)));
+    let b = run_score_job(
+        &mut engine,
+        &store,
+        Arc::new(mk_bundle()),
+        Arc::clone(&backend),
+        2,
+        QuantMode::Off,
+        out_chaos.clone(),
+    )
+    .unwrap();
+
+    assert_eq!(plan.injected_at(FaultSite::BlockRead), 1, "the tripped read fault must fire");
+    assert_eq!(engine.block_cache().read_retries(), 1);
+    assert_eq!(a.totals.rows, b.totals.rows);
+    assert_eq!(a.totals.top1_mass.to_bits(), b.totals.top1_mass.to_bits());
+    assert_eq!(a.store.num_blocks(), b.store.num_blocks());
+    for blk in 0..a.store.num_blocks() {
+        let ma = a.store.read_block(blk).unwrap();
+        let mb = b.store.read_block(blk).unwrap();
+        assert_bitwise(&ma, &mb, &format!("membership block {blk}"));
+    }
+    std::fs::remove_dir_all(&out_clean).ok();
+    std::fs::remove_dir_all(&out_chaos).ok();
+}
+
+/// Trivial sum job for the worker-failure path.
+struct Sum;
+
+impl MapReduceJob for Sum {
+    type MapOut = f64;
+    type Output = f64;
+
+    fn map_combine(&self, block: &Matrix, _ctx: &TaskCtx) -> Result<Self::MapOut> {
+        Ok(block.as_slice().iter().map(|&v| v as f64).sum())
+    }
+
+    fn reduce(&self, parts: Vec<Self::MapOut>, _ctx: &TaskCtx) -> Result<Self::Output> {
+        Ok(parts.into_iter().sum())
+    }
+
+    fn shuffle_bytes(&self, _part: &Self::MapOut) -> u64 {
+        8
+    }
+
+    fn name(&self) -> &str {
+        "chaos_sum"
+    }
+}
+
+/// A map task that exhausts its attempt budget surfaces as
+/// `Error::TaskFailed` naming the task — no panic — and the engine (pool,
+/// cache, clock) keeps working: the very next job on it succeeds exactly.
+#[test]
+fn map_task_exhaustion_is_structured_and_engine_survives() {
+    let data = blobs(1024, 3, 2, 0.3, 17);
+    let store = Arc::new(BlockStore::in_memory("chaos_task", &data.features, 256, 4).unwrap());
+    let expected: f64 = data.features.as_slice().iter().map(|&v| v as f64).sum();
+
+    let plan = FaultPlan::tripping(17, FaultSite::MapTask, 0);
+    let mut engine = engine_with(Some(Arc::clone(&plan)));
+    let err = engine
+        .run_job(Arc::new(Sum), &store, Arc::new(DistributedCache::new()))
+        .unwrap_err();
+    match err {
+        Error::TaskFailed { task, attempts } => {
+            assert_eq!(task, 0, "the tripped task is the one named");
+            assert!(attempts >= 1);
+        }
+        other => panic!("expected TaskFailed, got: {other}"),
+    }
+
+    // The trip is consumed: the same engine runs the next job to completion.
+    let (total, stats) = engine
+        .run_job(Arc::new(Sum), &store, Arc::new(DistributedCache::new()))
+        .unwrap();
+    assert_eq!(stats.map_tasks as usize, store.num_blocks());
+    assert!(
+        (total - expected).abs() <= 1e-6 * expected.abs().max(1.0),
+        "{total} vs {expected}"
+    );
+}
+
+/// Kill-at-iteration-k recovery: a session checkpointed every iteration and
+/// stopped at 3 resumes from the checkpoint file to the *bitwise* same
+/// final centers as the uninterrupted run, in exactly the remaining
+/// iterations; a corrupted checkpoint is rejected loudly instead of being
+/// resumed from.
+#[test]
+fn checkpointed_session_resumes_bitwise_and_rejects_corruption() {
+    let seed = SEEDS[0];
+    let (store, v0, params, backend) = session_fixture(seed);
+    let prune = PruneConfig::disabled();
+
+    let mut full_engine = engine_with(None);
+    let full = run_session(&mut full_engine, &store, &backend, &v0, &params, &prune, None);
+
+    let dir = tmp_dir("ckpt");
+    let path = dir.join("session.ckpt");
+    let killed_params = FcmParams { max_iterations: 3, ..params };
+    let policy = CheckpointPolicy { every: 1, path: path.clone() };
+    let killed = run_session(
+        &mut engine_with(None),
+        &store,
+        &backend,
+        &v0,
+        &killed_params,
+        &prune,
+        Some(&policy),
+    );
+    assert_eq!(killed.checkpoints_written, 3);
+    assert!(killed.checkpoint_bytes > 0);
+
+    let cp = SessionCheckpoint::load(&path).unwrap();
+    assert_eq!(cp.iteration, 3);
+    assert_bitwise(&cp.centers, &killed.result.centers, "checkpoint vs killed run");
+
+    let mut resumed_engine = engine_with(None);
+    let resumed =
+        run_session(&mut resumed_engine, &store, &backend, &cp.centers, &params, &prune, None);
+    assert_bitwise(&full.result.centers, &resumed.result.centers, "resumed vs uninterrupted");
+    assert_eq!(
+        cp.iteration as usize + resumed.result.iterations,
+        full.result.iterations,
+        "resume picks up exactly where the checkpoint left off"
+    );
+
+    // Any torn byte must refuse to resume, loudly.
+    let mut img = std::fs::read(&path).unwrap();
+    let mid = img.len() / 2;
+    img[mid] ^= 0x10;
+    std::fs::write(&path, &img).unwrap();
+    let err = SessionCheckpoint::load(&path).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("checkpoint") && msg.contains(&path.display().to_string()),
+        "rejection must name the file: {msg}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Serving fixture: a tiny valid bundle for the wire tests.
+fn wire_bundle() -> ModelBundle {
+    let data = blobs(256, 4, 3, 0.25, 23);
+    let mut centers = Matrix::zeros(3, 4);
+    for i in 0..3 {
+        centers.row_mut(i).copy_from_slice(data.features.row(i * 64));
+    }
+    ModelBundle::new(centers, SessionAlgo::Fcm, Variant::Fast, 2.0)
+}
+
+/// The `health` verb answers without touching the registry, and a front
+/// whose every connection is chaos-dropped returns structured errors to
+/// clients promptly — never a hang — while metering the drops.
+#[test]
+fn front_health_answers_and_injected_conn_drops_never_hang() {
+    let reg = Arc::new(ModelRegistry::new(Arc::new(NativeBackend), ServeOptions::default()));
+    reg.publish("m", wire_bundle()).unwrap();
+
+    let front = ServeFront::bind(
+        Arc::clone(&reg),
+        "127.0.0.1:0",
+        FrontOptions::default(),
+        OverheadConfig::default(),
+    )
+    .unwrap();
+    let addr = front.local_addr().to_string();
+    assert_eq!(client_call(&addr, "health", Duration::from_secs(5)).unwrap(), "ok up");
+    drop(front);
+
+    let plan = FaultPlan::for_site(23, FaultSite::Connection, 1.0, 0.0);
+    let fopts = FrontOptions { faults: Some(Arc::clone(&plan)), ..FrontOptions::default() };
+    let front =
+        ServeFront::bind(Arc::clone(&reg), "127.0.0.1:0", fopts, OverheadConfig::default())
+            .unwrap();
+    let addr = front.local_addr().to_string();
+    let t0 = Instant::now();
+    let err = client_call(&addr, "health", Duration::from_secs(5)).unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "a dropped connection must error before the client timeout: {err}"
+    );
+    let t0 = Instant::now();
+    while front.stats().conn_drops < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "injected drop never metered");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// `client_call` separates "down" (refused — `Error::Job`, fails fast) from
+/// "slow" (peer up but unresponsive — `Error::Timeout` after the budget).
+#[test]
+fn client_call_distinguishes_down_from_slow() {
+    // Down: nothing listens on the reserved port — connection refused.
+    let err = client_call("127.0.0.1:1", "ping", Duration::from_secs(2)).unwrap_err();
+    assert!(
+        !matches!(err, Error::Timeout(_)),
+        "a refused connection is down, not slow: {err}"
+    );
+    assert!(err.to_string().contains("connect"), "down must name the connect step: {err}");
+
+    // Slow: a listener that never accepts — the kernel completes the
+    // handshake, then the response read times out.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let t0 = Instant::now();
+    let err = client_call(&addr, "ping", Duration::from_millis(400)).unwrap_err();
+    assert!(
+        matches!(err, Error::Timeout(_)),
+        "an unresponsive peer is slow, not down: {err}"
+    );
+    assert!(t0.elapsed() >= Duration::from_millis(300), "the timeout budget must be honored");
+    drop(listener);
+}

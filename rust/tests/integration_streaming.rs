@@ -201,6 +201,7 @@ fn run_twin_arm(
         &twin.params,
         prune,
         SessionOptions::default(),
+        None,
     )
     .unwrap()
 }

@@ -326,6 +326,7 @@ fn prop_pruned_session_converges_to_exact_centers() {
                 &params,
                 &PruneConfig::disabled(),
                 SessionOptions::default(),
+                None,
             )
             .unwrap();
             let mut e2 = Engine::new(EngineOptions::default(), Config::default().overhead);
@@ -338,6 +339,7 @@ fn prop_pruned_session_converges_to_exact_centers() {
                 &params,
                 &PruneConfig::default(),
                 SessionOptions::default(),
+                None,
             )
             .unwrap();
             assert!(exact.result.converged, "case {case} {variant:?}: exact arm stalled");

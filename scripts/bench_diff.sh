@@ -112,6 +112,14 @@ if cur_sess:
         "quant_modelled_s",
         "slab_spilled_bytes",
         "slab_reloads",
+        "read_retries",
+        "read_aborts",
+        "quarantines",
+        "prefetch_errors",
+        "slab_spill_retries",
+        "slab_spill_quarantines",
+        "backoff_s",
+        "checkpoints_written",
         "combine_depth",
         "per_job_modelled_s",
         "session_modelled_s",
@@ -138,6 +146,16 @@ if cur_sess:
     pq = cur_sess.get("records_pruned_elkan_quant")
     if pq is not None and pe is not None and pq < pe:
         print(f"note: elkan+quant pruned fewer records than elkan ({pq} < {pe}) — quant pre-pass regression; investigate")
+    # Recovery trajectory: retries recovering is the designed behavior;
+    # retries *becoming aborts* means the retry budget stopped absorbing
+    # the configured fault rate — a recovery regression, not noise.
+    aborts = cur_sess.get("read_aborts") or 0
+    if aborts > 0:
+        retries = cur_sess.get("read_retries") or 0
+        print(f"note: {aborts:.0f} read retries became aborts (retries {retries:.0f}) — recovery regression; investigate")
+    base_aborts = base_sess.get("read_aborts") or 0
+    if aborts > base_aborts:
+        print(f"note: read_aborts rose vs baseline ({base_aborts:.0f} -> {aborts:.0f})")
 EOF
 
 # ---------------------------------------------------------------------------
@@ -220,6 +238,8 @@ keys = [
     "backpressure_waits",
     "quota_rejections",
     "deprioritized",
+    "deadline_shed",
+    "overload_shed",
     "errors",
 ]
 print(f"{'counter':<22} {'baseline':>14} {'now':>14}")
@@ -241,6 +261,12 @@ if bp and cp and (cp - bp) / bp > threshold:
     issues.append(f"p95 latency {cp:.0f} us vs baseline {bp:.0f} ({(cp - bp) / bp:+.1%})")
 if cur.get("errors"):
     issues.append(f"{cur['errors']:.0f} request(s) errored")
+shed = (cur.get("deadline_shed") or 0) + (cur.get("overload_shed") or 0)
+base_shed = (base.get("deadline_shed") or 0) + (base.get("overload_shed") or 0)
+if shed > base_shed:
+    issues.append(
+        f"degraded-mode shedding rose vs baseline ({base_shed:.0f} -> {shed:.0f} requests shed)"
+    )
 
 # Open-loop SLO trajectory: attainment flipping 1 -> 0 is the headline
 # regression; a large drop in the within-target fraction flags even when

@@ -48,6 +48,35 @@ cargo run --release --bin bigfcm -- score \
     --dataset susy --records 4096 --topk 2 --quant i8 \
     --model "$SMOKE_DIR/smoke.bfm" --out "$SMOKE_DIR/scored"
 
+echo "== chaos smoke (deterministic fault injection + recovery) =="
+# One transient read fault tripped at the first demand block read: the
+# session must run to completion while reporting exactly one recovered
+# retry (and no aborts) on the recovery counter line. Same seed, same
+# schedule — this is replayable, not statistical.
+CHAOS_OUT="$(cargo run --release --bin bigfcm -- session \
+    --dataset susy --records 4096 --clusters 3 --iters 4 \
+    --set faults.seed=11 --set faults.trip_site=block_read --set faults.trip_at=0)"
+echo "$CHAOS_OUT" | grep -q "recovery: read retries 1, read aborts 0" \
+    || { echo "chaos smoke: expected one recovered read retry"; echo "$CHAOS_OUT"; exit 1; }
+echo "chaos smoke: one injected read fault recovered transparently"
+
+echo "== checkpoint/resume smoke =="
+cargo run --release --bin bigfcm -- session \
+    --dataset susy --records 4096 --clusters 3 --iters 4 \
+    --checkpoint "$SMOKE_DIR/session.ckpt" --checkpoint-every 2
+[ -s "$SMOKE_DIR/session.ckpt" ] || { echo "checkpoint file was not written"; exit 1; }
+RESUME_OUT="$(cargo run --release --bin bigfcm -- session \
+    --dataset susy --records 4096 --clusters 3 --iters 4 \
+    --resume "$SMOKE_DIR/session.ckpt")"
+echo "$RESUME_OUT" | grep -q "resuming from" \
+    || { echo "resume smoke: session did not warm-start"; echo "$RESUME_OUT"; exit 1; }
+RESCUE_OUT="$(cargo run --release --bin bigfcm -- session \
+    --dataset susy --records 2048 --clusters 3 --iters 2 \
+    --resume-or-cold "$SMOKE_DIR/does-not-exist.ckpt")"
+echo "$RESCUE_OUT" | grep -q "cold-starting" \
+    || { echo "resume-or-cold smoke: missing cold-start fallback"; echo "$RESCUE_OUT"; exit 1; }
+echo "checkpoint smoke: write, warm-start resume and cold-start fallback all OK"
+
 echo "== serve front smoke (bigfcm serve) =="
 # The network front end-to-end on an ephemeral port: start the server
 # (quick-trains a `default` model), score one record over the socket,
