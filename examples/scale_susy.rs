@@ -32,10 +32,12 @@ use std::time::Instant;
 use bigfcm::config::{BoundModel, Config, FlagPolicy, QuantMode};
 use bigfcm::coordinator::BigFcm;
 use bigfcm::data::synth::susy_like;
-use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo};
+use bigfcm::fcm::loops::{run_fcm_session, run_fcm_session_sharded, FcmParams, PruneConfig, SessionAlgo};
 use bigfcm::fcm::{BlockBounds, BoundConfig, Kernel, KernelBackend, NativeBackend};
 use bigfcm::hdfs::BlockStoreWriter;
-use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions, SlabState, MIB};
+use bigfcm::mapreduce::{
+    Engine, EngineOptions, SessionOptions, ShardMergeMode, ShardedEngine, SlabState, MIB,
+};
 
 struct Args {
     /// Target on-disk store size in bytes.
@@ -56,6 +58,8 @@ struct Args {
     bounds: BoundModel,
     /// Quantized distance pre-pass of the session phase ("off" | "i8").
     quant: QuantMode,
+    /// Engine shards of the sharded scale-out phase (≤ 1 skips it).
+    shards: usize,
     /// Spill cold slab state to this disk ring instead of evicting it.
     spill_dir: Option<PathBuf>,
     /// Keep the generated store (for re-runs) instead of deleting it.
@@ -76,6 +80,7 @@ impl Default for Args {
             slab_mib: 0,
             bounds: BoundModel::Elkan,
             quant: QuantMode::Off,
+            shards: 0,
             spill_dir: None,
             keep: false,
             dir: None,
@@ -109,7 +114,7 @@ fn usage() -> ! {
         "usage: scale_susy [--bytes SIZE] [--cache-mib N] [--workers N] \
          [--block-rows N] [--max-wall-s S] [--session-iters N] \
          [--slab-mib N] [--bounds dmin|elkan|hamerly] [--quant off|i8] \
-         [--spill-dir PATH] [--dir PATH] [--keep] [--seed N]\n\
+         [--shards N] [--spill-dir PATH] [--dir PATH] [--keep] [--seed N]\n\
          SIZE accepts GiB/MiB/KiB suffixes, e.g. --bytes 2GiB; \
          --slab-mib 0 auto-sizes the pruning slab to the store and the \
          bound model; --spill-dir rides out undersized slabs on disk"
@@ -155,6 +160,9 @@ fn parse_args() -> Args {
             "--quant" => {
                 args.quant = QuantMode::parse(&val("--quant")).unwrap_or_else(|_| usage());
             }
+            "--shards" => {
+                args.shards = val("--shards").parse().unwrap_or_else(|_| usage());
+            }
             "--spill-dir" => args.spill_dir = Some(PathBuf::from(val("--spill-dir"))),
             "--dir" => args.dir = Some(PathBuf::from(val("--dir"))),
             "--keep" => args.keep = true,
@@ -163,6 +171,10 @@ fn parse_args() -> Args {
         }
     }
     if args.bytes == 0 || args.block_rows == 0 || args.workers == 0 {
+        usage();
+    }
+    if args.shards > args.workers {
+        eprintln!("--shards {} > --workers {}: every shard needs a worker", args.shards, args.workers);
         usage();
     }
     args
@@ -435,7 +447,80 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         session_run = Some(srun);
     }
 
+    // ---- Phase 4: sharded scale-out (per-shard residency envelopes) ----
+    // The same convergence loop across N engine shards with the exact
+    // two-level merge: each shard runs its slice of the store under its
+    // slice of the cache budget, and the envelope the single-engine phases
+    // enforce must hold **per shard** — peak resident ≤ the shard's cache
+    // slice plus one in-flight block per shard worker.
+    let mut shard_failures: Vec<String> = Vec::new();
+    if args.shards > 1 {
+        println!("\n=== sharded phase ({} shards, exact merge) ===", args.shards);
+        cfg.cluster.shards = args.shards;
+        let mut sh_engine = ShardedEngine::new(
+            &store,
+            &EngineOptions::from_cluster(&cfg.cluster),
+            cfg.overhead.clone(),
+            args.shards,
+            cfg.shard.steal_penalty,
+        );
+        let params = FcmParams {
+            epsilon: 1e-12,
+            max_iterations: args.session_iters.max(2),
+            ..Default::default()
+        };
+        let backend: Arc<dyn KernelBackend> = Arc::new(NativeBackend);
+        let mut prune = PruneConfig::from_cluster(&cfg.cluster);
+        prune.bounds = args.bounds;
+        prune.quant = args.quant;
+        let t3 = Instant::now();
+        let srun = run_fcm_session_sharded(
+            &mut sh_engine,
+            &store,
+            backend,
+            SessionAlgo::Fcm,
+            run.centers.clone(),
+            &params,
+            &prune,
+            SessionOptions::default(),
+            None,
+            ShardMergeMode::Exact,
+        )?;
+        let sharded_wall = t3.elapsed().as_secs_f64();
+        println!(
+            "sharded: {} iterations in {sharded_wall:.1}s wall, steals {} ({:.2} MiB), \
+             modelled {:.0}s",
+            srun.run.result.iterations,
+            srun.shard_steals,
+            mib(srun.shard_steal_bytes),
+            srun.run.sim.total_s(),
+        );
+        for (i, slice) in sh_engine.plan().slices.iter().enumerate() {
+            let peak = srun.per_shard_peak_resident_bytes[i];
+            let shard_envelope = slice.cache_bytes + slice.workers as u64 * max_block;
+            println!(
+                "  shard {i}: blocks {:>4} (stolen {:>3}), workers {}, cache {:.1} MiB, \
+                 peak {:.1} MiB (envelope {:.1} MiB), pruned {}",
+                slice.block_ids.len(),
+                slice.stolen.len(),
+                slice.workers,
+                mib(slice.cache_bytes),
+                mib(peak),
+                mib(shard_envelope),
+                srun.records_pruned_per_shard[i],
+            );
+            if peak > shard_envelope {
+                shard_failures.push(format!(
+                    "shard {i} resident-byte envelope violated: peak {} > cache slice {} + \
+                     {} workers x {}",
+                    peak, slice.cache_bytes, slice.workers, max_block
+                ));
+            }
+        }
+    }
+
     let mut failures = Vec::new();
+    failures.extend(shard_failures);
     if let Some(srun) = &session_run {
         if args.session_iters >= 3 {
             let pruned_after_two: u64 = srun

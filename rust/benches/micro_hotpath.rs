@@ -16,12 +16,14 @@ use std::time::Instant;
 use bigfcm::config::{params_hash, OverheadConfig, QuantMode};
 use bigfcm::data::synth::susy_like;
 use bigfcm::data::Matrix;
-use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo};
+use bigfcm::fcm::loops::{
+    run_fcm_session, run_fcm_session_sharded, FcmParams, PruneConfig, SessionAlgo,
+};
 use bigfcm::fcm::native::{fcm_partials_native, fcm_partials_scalar};
 use bigfcm::fcm::{Kernel, KernelBackend, NativeBackend};
 use bigfcm::hdfs::BlockStore;
 use bigfcm::json;
-use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions};
+use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions, ShardMergeMode, ShardedEngine};
 use bigfcm::runtime::{PjrtRuntime, PjrtShimBackend};
 
 const N: usize = 65_536;
@@ -204,15 +206,35 @@ fn main() {
     let session_quant = run_fcm_session(
         &mut quant_engine,
         &store,
-        backend,
+        Arc::clone(&backend),
         SessionAlgo::Fcm,
-        v0,
+        v0.clone(),
         &params,
         &PruneConfig { quant: QuantMode::I8, ..PruneConfig::default() },
         SessionOptions::default(),
         None,
     )
     .expect("quant session arm");
+
+    // Sharded A/B arm: the identical elkan session across 2 engine shards
+    // with the exact two-level merge — bitwise the single-engine arm's
+    // result, while startup is charged once per shard and the merged
+    // modelled time takes the critical shard (wall = max over shards).
+    let mut sharded_engine =
+        ShardedEngine::new(&store, &EngineOptions::default(), overhead.clone(), 2, 4.0);
+    let session_sharded = run_fcm_session_sharded(
+        &mut sharded_engine,
+        &store,
+        backend,
+        SessionAlgo::Fcm,
+        v0,
+        &params,
+        &PruneConfig::default(),
+        SessionOptions::default(),
+        None,
+        ShardMergeMode::Exact,
+    )
+    .expect("sharded session arm");
 
     let wall_sum = |runs: &[bigfcm::mapreduce::JobStats]| -> f64 {
         runs.iter().map(|s| s.reduce_wall_s).sum()
@@ -267,6 +289,18 @@ fn main() {
         session_quant.jobs,
         session_quant.quant_sidecar_bytes,
         session_quant.quant_build_s,
+    );
+    let steal_ratio = session_sharded.shard_steals as f64
+        / sharded_engine.plan().total_blocks.max(1) as f64;
+    println!(
+        "sharded A/B: 2 shards exact merge, bitwise match {}, steals {} \
+         (ratio {:.3}, {} B), modelled total {:.0}s (single-engine {:.0}s)",
+        session_sharded.run.result.centers.as_slice() == session.result.centers.as_slice(),
+        session_sharded.shard_steals,
+        steal_ratio,
+        session_sharded.shard_steal_bytes,
+        session_sharded.run.sim.total_s(),
+        session.sim.total_s(),
     );
 
     // Machine-readable emission for cross-PR tracking.
@@ -329,11 +363,20 @@ fn main() {
         ("combine_depth", json::num(combine_depth as f64)),
         ("per_job_objective", json::num(per_job.result.objective)),
         ("session_objective", json::num(session.result.objective)),
+        // Sharded scale-out trajectory: steal volume is a topology property
+        // (plan-time rebalance), so a ratio drift flags a scheduler change;
+        // the modelled time is the wall = max-over-shards headline.
+        ("shard_steals", json::num(session_sharded.shard_steals as f64)),
+        ("shard_steal_ratio", json::num(steal_ratio)),
+        ("sharded_modelled_s", json::num(session_sharded.run.sim.total_s())),
+        ("sharded_objective", json::num(session_sharded.run.result.objective)),
     ]);
     // Config/params fingerprint: bench_diff.sh refuses to diff two BENCH
     // files whose hashes disagree (apples-to-oranges guard). The hash
-    // covers the hard-coded workload knobs of the session A/B above.
-    let hash = params_hash("fcm", "elkan", QuantMode::I8.as_str(), 4, 0xAB);
+    // covers the hard-coded workload knobs of the session A/B above,
+    // including the sharded arm's topology (shards, merge mode, penalty).
+    let hash =
+        params_hash("fcm", "elkan", QuantMode::I8.as_str(), 4, 0xAB, 2, ShardMergeMode::Exact, 4.0);
     let doc = json::obj(vec![
         ("bench", json::s("micro_hotpath")),
         ("workload", json::s("susy_like 65536x18 C=6")),

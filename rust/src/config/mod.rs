@@ -13,6 +13,7 @@ use std::path::{Path, PathBuf};
 use std::str::FromStr;
 
 use crate::error::{Error, Result};
+use crate::mapreduce::shard::ShardMergeMode;
 
 /// Which per-record bound model a session's pruned kernels maintain in the
 /// sticky slab (see `fcm::backend::BlockBounds`).
@@ -124,9 +125,24 @@ impl FromStr for QuantMode {
 /// FNV-1a hash of the parameters that make two benchmark runs comparable,
 /// as a hex string. `bench_diff.sh` refuses to diff JSONs whose hashes
 /// differ — a 10% "regression" between an elkan run and a dmin run is not
-/// a regression, it's a config change.
-pub fn params_hash(algo: &str, bounds: &str, quant: &str, workers: usize, seed: u64) -> String {
-    let canon = format!("algo={algo};bounds={bounds};quant={quant};workers={workers};seed={seed}");
+/// a regression, it's a config change. The shard topology (count, merge
+/// mode, steal penalty) is part of the hash for the same reason: a sharded
+/// run pays different startup/net charges than a single-engine run.
+#[allow(clippy::too_many_arguments)]
+pub fn params_hash(
+    algo: &str,
+    bounds: &str,
+    quant: &str,
+    workers: usize,
+    seed: u64,
+    shards: usize,
+    merge: ShardMergeMode,
+    steal_penalty: f64,
+) -> String {
+    let canon = format!(
+        "algo={algo};bounds={bounds};quant={quant};workers={workers};seed={seed};shards={shards};merge={};steal={steal_penalty}",
+        merge.as_str()
+    );
     format!("{:016x}", crate::hdfs::fnv1a(canon.as_bytes()))
 }
 
@@ -167,6 +183,11 @@ pub struct ClusterConfig {
     /// observed per-iteration shift trajectory: steady geometric shrink
     /// doubles the cap (up to 8× the base), any shift growth snaps it back.
     pub adaptive_refresh: bool,
+    /// Engine shards one run spans (shard = rack): each shard owns a
+    /// contiguous block-id slice, a proportional slice of `cache_mib`, a
+    /// slice of `workers`, its own prefetcher and a derived fault domain.
+    /// 1 (the default) is the classic single-engine run.
+    pub shards: usize,
 }
 
 impl Default for ClusterConfig {
@@ -184,7 +205,29 @@ impl Default for ClusterConfig {
             quant: QuantMode::Off,
             slab_spill_dir: String::new(),
             adaptive_refresh: true,
+            shards: 1,
         }
+    }
+}
+
+/// Sharded scale-out settings beyond the shard count itself (the `[shard]`
+/// section; see `crate::mapreduce::shard`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardConfig {
+    /// How per-shard partials merge globally: `exact` exchanges full
+    /// `Partials` and completes the single-engine merge DAG (bitwise
+    /// drop-in); `representative` exchanges only centers + fuzzy counts
+    /// and records its objective delta vs exact.
+    pub merge: ShardMergeMode,
+    /// Multiplier on `overhead.net_s_per_mib` for cross-shard stolen-block
+    /// transfers (shard = rack, so a steal crosses the rack switch; see
+    /// EXPERIMENTS.md §Sharding for the calibration note).
+    pub steal_penalty: f64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self { merge: ShardMergeMode::Exact, steal_penalty: 4.0 }
     }
 }
 
@@ -488,6 +531,7 @@ pub struct Config {
     pub fcm: FcmConfig,
     pub serve: ServeConfig,
     pub session: SessionConfig,
+    pub shard: ShardConfig,
     pub faults: FaultsConfig,
     pub backend: Backend,
     /// Directory containing `manifest.json` + `*.hlo.txt`.
@@ -506,6 +550,7 @@ impl Default for Config {
             fcm: FcmConfig::default(),
             serve: ServeConfig::default(),
             session: SessionConfig::default(),
+            shard: ShardConfig::default(),
             faults: FaultsConfig::default(),
             backend: Backend::Auto,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -578,7 +623,10 @@ impl Config {
             "serve.top_k" => self.serve.top_k = num!(usize),
             "serve.tenant_quota" => self.serve.tenant_quota = num!(usize),
             "serve.deadline_us" => self.serve.deadline_us = num!(u64),
+            "cluster.shards" => self.cluster.shards = num!(usize),
             "session.checkpoint_every" => self.session.checkpoint_every = num!(usize),
+            "shard.merge" => self.shard.merge = value.parse::<ShardMergeMode>()?,
+            "shard.steal_penalty" => self.shard.steal_penalty = num!(f64),
             "faults.seed" => self.faults.seed = num!(u64),
             "faults.block_read" => self.faults.block_read = num!(f64),
             "faults.spill_read" => self.faults.spill_read = num!(f64),
@@ -645,6 +693,21 @@ impl Config {
             if !(0.0..=1.0).contains(&rate) {
                 return Err(Error::Config(format!("{key} must be within [0, 1], got {rate}")));
             }
+        }
+        if self.cluster.shards == 0 {
+            return Err(Error::Config("cluster.shards must be >= 1".into()));
+        }
+        if self.cluster.shards > self.cluster.workers {
+            return Err(Error::Config(format!(
+                "cluster.shards ({}) must not exceed cluster.workers ({}) — every shard needs a worker",
+                self.cluster.shards, self.cluster.workers
+            )));
+        }
+        if !(self.shard.steal_penalty >= 0.0) {
+            return Err(Error::Config(format!(
+                "shard.steal_penalty must be >= 0, got {}",
+                self.shard.steal_penalty
+            )));
         }
         Ok(())
     }
@@ -767,12 +830,43 @@ mod tests {
 
     #[test]
     fn params_hash_separates_configs() {
-        let a = params_hash("fcm", "elkan", "off", 4, 42);
-        let b = params_hash("fcm", "elkan", "i8", 4, 42);
-        let c = params_hash("fcm", "elkan", "off", 4, 42);
+        let a = params_hash("fcm", "elkan", "off", 4, 42, 1, ShardMergeMode::Exact, 4.0);
+        let b = params_hash("fcm", "elkan", "i8", 4, 42, 1, ShardMergeMode::Exact, 4.0);
+        let c = params_hash("fcm", "elkan", "off", 4, 42, 1, ShardMergeMode::Exact, 4.0);
         assert_eq!(a, c);
         assert_ne!(a, b);
         assert_eq!(a.len(), 16);
+        // Shard topology is part of run comparability: different shard
+        // counts, merge modes or steal penalties must never diff clean.
+        let sharded = params_hash("fcm", "elkan", "off", 4, 42, 2, ShardMergeMode::Exact, 4.0);
+        let rep = params_hash("fcm", "elkan", "off", 4, 42, 2, ShardMergeMode::Representative, 4.0);
+        let steep = params_hash("fcm", "elkan", "off", 4, 42, 2, ShardMergeMode::Exact, 8.0);
+        assert_ne!(a, sharded);
+        assert_ne!(sharded, rep);
+        assert_ne!(sharded, steep);
+    }
+
+    #[test]
+    fn shard_keys_dispatch_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.cluster.shards, 1);
+        assert_eq!(c.shard.merge, ShardMergeMode::Exact);
+        assert_eq!(c.shard.steal_penalty, 4.0);
+        c.set_kv("cluster.shards=2").unwrap();
+        c.set_kv("shard.merge=representative").unwrap();
+        c.set_kv("shard.steal_penalty=6.5").unwrap();
+        assert_eq!(c.cluster.shards, 2);
+        assert_eq!(c.shard.merge, ShardMergeMode::Representative);
+        assert_eq!(c.shard.steal_penalty, 6.5);
+        c.validate().unwrap();
+        c.set_kv("cluster.shards=0").unwrap();
+        assert!(c.validate().is_err(), "0 shards must be rejected");
+        c.set_kv("cluster.shards=8").unwrap(); // workers defaults to 4
+        assert!(c.validate().is_err(), "more shards than workers must be rejected");
+        c.set_kv("cluster.shards=2").unwrap();
+        c.set_kv("shard.steal_penalty=-1").unwrap();
+        assert!(c.validate().is_err(), "negative steal penalty must be rejected");
+        assert!(c.set_kv("shard.merge=fuzzy").is_err());
     }
 
     #[test]

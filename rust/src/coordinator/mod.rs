@@ -27,7 +27,8 @@ use crate::error::Result;
 use crate::fcm::{KernelBackend, ClusterResult, NativeBackend};
 use crate::hdfs::BlockStore;
 use crate::mapreduce::{
-    DistributedCache, Engine, EngineOptions, JobStats, SessionOptions, SimCost,
+    DistributedCache, Engine, EngineOptions, JobRunCfg, JobStats, SessionOptions, ShardedEngine,
+    SimCost,
 };
 
 /// Everything a BigFCM run produces.
@@ -53,6 +54,9 @@ pub struct BigFcmRun {
     /// saved model bundles — a capped, unconverged reduce must not be
     /// persisted as converged provenance).
     pub converged: bool,
+    /// Per-shard stats rows of the MR job, with steal counters stamped
+    /// (empty when `cluster.shards <= 1` — the single-engine pipeline).
+    pub per_shard: Vec<JobStats>,
 }
 
 impl BigFcmRun {
@@ -120,6 +124,16 @@ impl BigFcm {
     /// blocks from the worker pool. Engine shape (workers, block-cache
     /// budget, prefetch) comes from the cluster config.
     pub fn run_store(&self, store: &Arc<BlockStore>) -> Result<BigFcmRun> {
+        if self.cfg.cluster.shards > 1 {
+            let mut engine = ShardedEngine::new(
+                store,
+                &EngineOptions::from_cluster(&self.cfg.cluster),
+                self.cfg.overhead.clone(),
+                self.cfg.cluster.shards,
+                self.cfg.shard.steal_penalty,
+            );
+            return self.run_with_sharded_engine(store, &mut engine);
+        }
         let mut engine = Engine::new(
             EngineOptions::from_cluster(&self.cfg.cluster),
             self.cfg.overhead.clone(),
@@ -176,6 +190,54 @@ impl BigFcm {
             objective: reduced.result.objective,
             converged: reduced.result.converged,
             job: stats,
+            per_shard: Vec::new(),
+        })
+    }
+
+    /// Run the full pipeline across engine shards (`cluster.shards > 1`):
+    /// the driver phase executes on shard 0's engine (its sampling and
+    /// racing charges fold into the global clock), then the single MR job
+    /// fans out one map + local-combine phase per shard and the global
+    /// merge DAG completes driver-side — bitwise the single-engine
+    /// pipeline result, with startup charged once per shard and stolen
+    /// blocks' rack traffic on `net_s`.
+    pub fn run_with_sharded_engine(
+        &self,
+        store: &Arc<BlockStore>,
+        engine: &mut ShardedEngine,
+    ) -> Result<BigFcmRun> {
+        self.cfg.validate()?;
+        let backend: Arc<dyn KernelBackend> =
+            self.backend.clone().unwrap_or_else(|| Arc::new(NativeBackend));
+        let started = Instant::now();
+        let cache = Arc::new(DistributedCache::new());
+
+        // ---- Phase 1: driver job, on shard 0 -------------------------
+        let driver_before = engine.engine(0).clock().cost();
+        let decision = {
+            let mut session = engine.engine_mut(0).session(store, SessionOptions::default());
+            run_driver(&self.cfg, backend.as_ref(), &cache, &mut session)?
+        };
+        let driver_cost = engine.engine(0).clock().cost().delta(&driver_before);
+        engine.absorb(&driver_cost);
+
+        // ---- Phase 2: the single MR job, one map phase per shard -----
+        let job = Arc::new(CombineJob::new(self.cfg.clone(), Arc::clone(&backend)));
+        let run_cfg =
+            JobRunCfg { charge_startup: true, tree_combine: self.cfg.cluster.tree_combine };
+        let (reduced, stats, per_shard) = engine.run_job_cfg(job, store, &cache, run_cfg)?;
+
+        Ok(BigFcmRun {
+            centers: reduced.result.centers,
+            weights: reduced.result.weights,
+            driver: decision,
+            wall: started.elapsed(),
+            sim: engine.clock().cost(),
+            reduce_iterations: reduced.result.iterations,
+            objective: reduced.result.objective,
+            converged: reduced.result.converged,
+            job: stats,
+            per_shard,
         })
     }
 }

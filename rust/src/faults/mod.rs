@@ -290,6 +290,26 @@ impl FaultPlan {
         self.seed
     }
 
+    /// Derive a shard-local fault domain: same rates/corruption/latency/trip
+    /// schedule, seed `self.seed ⊕ shard_id`, and — critically — **fresh
+    /// per-site op counters**. A sharded run that shared one plan would
+    /// interleave op draws across shard threads, so the schedule would
+    /// depend on scheduling; one derived plan per shard makes every shard's
+    /// chaos schedule a pure function of `(faults.seed, shard_id)` and the
+    /// shard's own operation order, replayable bitwise regardless of
+    /// cross-shard interleaving.
+    pub fn derive_for_shard(&self, shard_id: u64) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            seed: self.seed ^ shard_id,
+            rates: self.rates,
+            corrupt: self.corrupt,
+            latency_us: self.latency_us,
+            trip: self.trip,
+            ops: Default::default(),
+            injected: Default::default(),
+        })
+    }
+
     /// Operations checked at `site` so far.
     pub fn ops_at(&self, site: FaultSite) -> u64 {
         self.ops[site.index()].load(Ordering::Relaxed)
@@ -407,6 +427,36 @@ mod tests {
         let flipped = a.iter().zip(&orig).filter(|(x, y)| x != y).count();
         assert_eq!(flipped, 1);
         corrupt_image(&mut [], 5); // empty image must not panic
+    }
+
+    #[test]
+    fn derived_shard_plans_are_independent_and_replayable() {
+        let base = FaultPlan::for_site(42, FaultSite::BlockRead, 0.3, 0.5);
+        // Shard 1/2 derive distinct seeds; re-deriving replays bitwise.
+        let s1a = base.derive_for_shard(1);
+        let s2 = base.derive_for_shard(2);
+        let sched1a = schedule(&s1a, FaultSite::BlockRead, 300);
+        let sched2 = schedule(&s2, FaultSite::BlockRead, 300);
+        assert_ne!(sched1a, sched2, "shards must get distinct schedules");
+        let s1b = base.derive_for_shard(1);
+        assert_eq!(
+            sched1a,
+            schedule(&s1b, FaultSite::BlockRead, 300),
+            "same (seed, shard) must replay the same schedule"
+        );
+        // Counters are shard-local: the base plan's op counter was never
+        // advanced by the derived plans' draws.
+        assert_eq!(base.ops_at(FaultSite::BlockRead), 0);
+        // Shard 0 degenerates to the base schedule (seed ^ 0 == seed).
+        let s0 = base.derive_for_shard(0);
+        assert_eq!(
+            schedule(&base, FaultSite::BlockRead, 300),
+            schedule(&s0, FaultSite::BlockRead, 300)
+        );
+        // Trip schedules ride along per shard.
+        let trip = FaultPlan::tripping(9, FaultSite::SpillRead, 1).derive_for_shard(3);
+        assert_eq!(trip.check(FaultSite::SpillRead), None);
+        assert!(trip.check(FaultSite::SpillRead).is_some());
     }
 
     #[test]

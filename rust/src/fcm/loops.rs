@@ -15,6 +15,7 @@
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::data::Matrix;
 use crate::error::{Error, Result};
@@ -22,9 +23,10 @@ use crate::fcm::backend::{BlockBounds, BoundConfig, BoundModel, Kernel, KernelBa
 use crate::fcm::checkpoint::SessionCheckpoint;
 use crate::fcm::{max_center_shift2, ClusterResult, Partials};
 use crate::hdfs::BlockStore;
+use crate::mapreduce::shard::complete_global_dag;
 use crate::mapreduce::{
-    DistributedCache, Engine, JobStats, MapReduceJob, SessionOptions, SimCost, SlabState,
-    SpillConfig, StateSlab, TaskCtx, MIB,
+    DistributedCache, Engine, JobStats, MapReduceJob, SessionOptions, ShardMergeMode,
+    ShardedEngine, SimCost, SlabState, SpillConfig, StateSlab, TaskCtx, MIB,
 };
 
 /// FCM chunk-math variant.
@@ -707,6 +709,360 @@ pub fn run_fcm_session(
     })
 }
 
+// ---------------------------------------------------------------------------
+// Sharded iteration-resident loop
+// ---------------------------------------------------------------------------
+
+/// Outcome of a sharded iteration-resident run: the merged
+/// [`SessionRunResult`] plus the per-shard view the scaling experiments
+/// read — per-shard pruning, per-shard cache envelopes, rack traffic, and
+/// the representative-merge quality delta.
+#[derive(Clone, Debug)]
+pub struct ShardedSessionRunResult {
+    /// Merged run view. Per-iteration rows are the merged shard rows:
+    /// counters summed, wall = max over shards + the global merge stage,
+    /// modelled time = critical shard + per-shard startups + globals.
+    pub run: SessionRunResult,
+    /// Shard count the run actually used (the plan clamps to the block
+    /// count, so this can be lower than `cluster.shards`).
+    pub shards: usize,
+    /// Merge mode the global stage ran.
+    pub merge: ShardMergeMode,
+    /// Map records served from each shard's sticky slab across the run.
+    pub records_pruned_per_shard: Vec<u64>,
+    /// Max per-iteration peak resident bytes of each shard's block cache
+    /// — the per-shard memory-envelope figure.
+    pub per_shard_peak_resident_bytes: Vec<u64>,
+    /// Final iteration's per-shard stats rows (slab counters stamped).
+    pub per_shard_last: Vec<JobStats>,
+    /// Blocks the plan-time rebalance moved across shards.
+    pub shard_steals: usize,
+    /// Serialised bytes of those blocks (charged to `net_s` once, on the
+    /// cold first iteration, at `shard.steal_penalty ×` the wire rate).
+    pub shard_steal_bytes: u64,
+    /// Final iteration's objective-weighted squared distance between the
+    /// representative merge's centers and the exact merge's
+    /// (`Σ_i w_i ‖c_rep,i − c_exact,i‖²`; 0 under `shard.merge = exact`).
+    pub merge_objective_delta: f64,
+    /// Max of that delta across the run.
+    pub merge_objective_delta_max: f64,
+}
+
+/// The representative exchange (à la Bendechache et al., arXiv
+/// 1710.09593): each shard ships only its local centers + fuzzy counts,
+/// and the driver reconstructs global numerators as `Σ_s c_s,i · w_s,i`.
+/// Exact when every shard's per-cluster mean agrees; otherwise a measured
+/// approximation — the caller records the delta vs the exact merge.
+fn representative_merge(shard_parts: &[Partials], fallback: &Matrix) -> Partials {
+    let (c, d) = (fallback.rows(), fallback.cols());
+    let mut out = Partials::zeros(c, d);
+    for p in shard_parts {
+        let centers = p.clone().into_centers(fallback);
+        for i in 0..c {
+            let w = p.w_acc[i];
+            out.w_acc[i] += w;
+            for j in 0..d {
+                let cur = out.v_num.get(i, j);
+                out.v_num.set(i, j, cur + (centers.get(i, j) as f64 * w) as f32);
+            }
+        }
+        out.objective += p.objective;
+    }
+    out
+}
+
+/// [`run_fcm_session`] across N engine shards (see
+/// [`crate::mapreduce::shard`]): every iteration maps + locally combines
+/// on each shard's own pool/cache/prefetcher/slab concurrently, then a
+/// driver-side global stage merges the per-shard outputs — either
+/// completing the exact merge DAG (bitwise drop-in for the single-engine
+/// loop) or through the representative centers-only exchange, whose
+/// objective-quality delta vs exact is measured every iteration.
+///
+/// Bounds state, quant sidecars and warm blocks stay **shard-resident**:
+/// each shard owns a slab keyed by global block ids (the id spaces
+/// partition, so a shared spill dir never collides), sized at
+/// `slab_bytes / shards`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fcm_session_sharded(
+    engine: &mut ShardedEngine,
+    store: &Arc<BlockStore>,
+    backend: Arc<dyn KernelBackend>,
+    algo: SessionAlgo,
+    v0: Matrix,
+    params: &FcmParams,
+    prune: &PruneConfig,
+    options: SessionOptions,
+    checkpoint: Option<&CheckpointPolicy>,
+    merge: ShardMergeMode,
+) -> Result<ShardedSessionRunResult> {
+    if v0.cols() != store.cols() {
+        return Err(Error::Clustering("seed center dims mismatch".into()));
+    }
+    if v0.rows() == 0 {
+        return Err(Error::Clustering("no seed centers".into()));
+    }
+    let shards = engine.shards();
+    let sim_before = engine.clock().cost();
+    let slab_budget = if prune.enabled { (prune.slab_bytes / shards as u64).max(1) } else { 0 };
+    let slabs: Vec<Arc<StateSlab<BlockBounds>>> = (0..shards)
+        .map(|i| {
+            // Each shard's spill ring sits under that shard's derived
+            // fault domain, like its block reads.
+            let spill = prune.spill_dir.as_ref().filter(|_| prune.enabled).map(|dir| {
+                SpillConfig::new(dir.clone())
+                    .with_faults(engine.engine(i).options().faults.clone())
+            });
+            Arc::new(StateSlab::new(slab_budget, spill))
+        })
+        .collect();
+    let jobs: Vec<Arc<SessionPartialsJob>> = slabs
+        .iter()
+        .map(|slab| {
+            Arc::new(SessionPartialsJob::new(
+                algo.kernel(params.variant),
+                params.m,
+                Arc::clone(&backend),
+                Arc::clone(slab),
+                prune.clone(),
+            ))
+        })
+        .collect();
+    let total_blocks = engine.plan().total_blocks;
+    let shard_steals = engine.plan().steals();
+    let shard_steal_bytes = engine.plan().steal_bytes();
+    let mut session = engine.session(store, options);
+    let cache = Arc::new(DistributedCache::new());
+
+    let mut v = v0;
+    let mut weights = vec![0.0; v.rows()];
+    let mut objective = f64::INFINITY;
+    let mut converged = false;
+    let mut iterations = 0usize;
+    let mut records_pruned_total = 0u64;
+    let mut records_pruned_quant_total = 0u64;
+    let mut quant_sidecar_peak = 0u64;
+    let mut quant_build_s_total = 0.0f64;
+    let mut records_pruned_per_shard = vec![0u64; shards];
+    let mut per_shard_peak = vec![0u64; shards];
+    let mut per_shard_last: Vec<JobStats> = Vec::new();
+    let mut spill_io_charged = vec![0u64; shards];
+    let mut backoff_charged = vec![0.0f64; shards];
+    let mut checkpoints_written = 0u64;
+    let mut checkpoint_bytes = 0u64;
+    let mut per_iteration: Vec<JobStats> = Vec::new();
+    let mut delta_last = 0.0f64;
+    let mut delta_max = 0.0f64;
+    let base_cap = prune.refresh_every.max(1);
+    let mut refresh_cap = base_cap;
+    let mut shrink_streak = 0usize;
+    let mut prev_shift = f64::INFINITY;
+    for it in 1..=params.max_iterations {
+        iterations = it;
+        cache.put_matrix(KEY_SESSION_CENTERS, v.clone());
+        let (segments, mut shard_stats, cfg) = session.run_iteration_segments(&jobs, &cache)?;
+        // Drain each shard's slab counters into its own stats row — the
+        // merged row sums them, and the per-shard rows are the scaling
+        // experiments' per-rack truth.
+        let mut pruned_this = 0u64;
+        let mut sidecar_this = 0u64;
+        for (i, (slab, st)) in slabs.iter().zip(shard_stats.iter_mut()).enumerate() {
+            let pruned = slab.take_records_pruned();
+            let pruned_quant = slab.take_records_pruned_quant();
+            let sidecar_bytes = slab.take_quant_sidecar_bytes();
+            let build_s = slab.take_quant_build_ns() as f64 * 1e-9;
+            st.refresh_cap = refresh_cap;
+            st.records_pruned = pruned;
+            st.records_pruned_quant = pruned_quant;
+            st.quant_sidecar_bytes = sidecar_bytes;
+            st.quant_build_s = build_s;
+            st.slab_bytes = slab.bytes();
+            st.slab_evictions = slab.evictions();
+            st.slab_spilled_bytes = slab.spilled_bytes();
+            st.slab_reloads = slab.reloads();
+            st.slab_spill_retries = slab.spill_retries();
+            st.slab_spill_quarantines = slab.spill_quarantines();
+            pruned_this += pruned;
+            sidecar_this += sidecar_bytes;
+            records_pruned_per_shard[i] += pruned;
+            records_pruned_quant_total += pruned_quant;
+            quant_build_s_total += build_s;
+            // Spill writes/reloads and retry backoff are real transfers:
+            // fold each shard's delta into the global clock exactly once.
+            let spill_io = slab.spilled_bytes() + slab.reload_bytes();
+            if spill_io > spill_io_charged[i] {
+                session.charge_scan(spill_io - spill_io_charged[i]);
+                spill_io_charged[i] = spill_io;
+            }
+            let backoff = slab.backoff_seconds();
+            if backoff > backoff_charged[i] {
+                session.charge_backoff(backoff - backoff_charged[i]);
+                backoff_charged[i] = backoff;
+            }
+            per_shard_peak[i] = per_shard_peak[i]
+                .max(session.engine().engine(i).block_cache().peak_resident_bytes());
+        }
+        records_pruned_total += pruned_this;
+        quant_sidecar_peak = quant_sidecar_peak.max(sidecar_this);
+        // The global merge stage — exact DAG completion or the
+        // representative exchange.
+        let use_tree = cfg.tree_combine;
+        let (partials, global_wall, reduce_wall_s, merges, reduce_parts, delta) = match merge {
+            ShardMergeMode::Exact => {
+                let flat: Vec<_> = segments.into_iter().flatten().collect();
+                let t0 = Instant::now();
+                let (survivors, merges) =
+                    complete_global_dag(jobs[0].as_ref(), flat, total_blocks, use_tree)?;
+                let global_wall = t0.elapsed();
+                let reduce_parts = survivors.len();
+                let t_r = Instant::now();
+                let mut itr = survivors.into_iter();
+                let mut acc = itr
+                    .next()
+                    .ok_or_else(|| Error::Job("no partials to reduce".into()))?;
+                for p in itr {
+                    acc.merge(&p);
+                }
+                (acc, global_wall, t_r.elapsed().as_secs_f64(), merges, reduce_parts, 0.0)
+            }
+            ShardMergeMode::Representative => {
+                // The quality yardstick: the exact merge, computed
+                // driver-side outside the timed/charged window (it ships
+                // no modelled bytes — it exists to measure the delta).
+                let flat: Vec<_> = segments
+                    .iter()
+                    .flat_map(|segs| segs.iter().map(|(k, p)| (*k, p.clone())))
+                    .collect();
+                let (ex_survivors, _) =
+                    complete_global_dag(jobs[0].as_ref(), flat, total_blocks, use_tree)?;
+                let mut itr = ex_survivors.into_iter();
+                let mut exact = itr
+                    .next()
+                    .ok_or_else(|| Error::Job("no partials to reduce".into()))?;
+                for p in itr {
+                    exact.merge(&p);
+                }
+                // The operative path: per-shard local fold (leftmost-block
+                // order), then the centers + fuzzy-counts exchange.
+                let t0 = Instant::now();
+                let shard_parts = segments
+                    .into_iter()
+                    .map(|mut segs| -> Result<Partials> {
+                        segs.sort_by_key(|((level, slot), _)| slot << level);
+                        let mut itr = segs.into_iter().map(|(_, p)| p);
+                        let mut acc = itr
+                            .next()
+                            .ok_or_else(|| Error::Job("shard produced no partials".into()))?;
+                        for p in itr {
+                            acc.merge(&p);
+                        }
+                        Ok(acc)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let rep = representative_merge(&shard_parts, &v);
+                let global_wall = t0.elapsed();
+                let w_ex = exact.w_acc.clone();
+                let c_ex = exact.into_centers(&v);
+                let c_rep = rep.clone().into_centers(&v);
+                let mut delta = 0.0f64;
+                for i in 0..c_ex.rows() {
+                    delta += w_ex[i] * c_rep.row_dist2(i, c_ex.row(i));
+                }
+                (rep, global_wall, 0.0, shards.saturating_sub(1), shards, delta)
+            }
+        };
+        delta_last = delta;
+        delta_max = delta_max.max(delta);
+        let mut merged =
+            session.finalize_iteration(&shard_stats, global_wall, reduce_wall_s, merges, reduce_parts);
+        merged.refresh_cap = refresh_cap;
+        weights.clone_from_slice(&partials.w_acc);
+        objective = partials.objective;
+        let v_new = partials.into_centers(&v);
+        let shift = max_center_shift2(&v, &v_new);
+        v = v_new;
+        if prune.enabled && prune.adaptive_refresh {
+            if shift <= 0.5 * prev_shift {
+                shrink_streak += 1;
+                if shrink_streak >= 2 {
+                    refresh_cap = (refresh_cap * 2).min(base_cap * 8);
+                }
+            } else {
+                shrink_streak = 0;
+                if shift > prev_shift {
+                    refresh_cap = base_cap;
+                }
+            }
+            for job in &jobs {
+                job.set_refresh_cap(refresh_cap);
+            }
+        }
+        prev_shift = shift;
+        per_shard_last = shard_stats;
+        per_iteration.push(merged);
+        if let Some(cp) = checkpoint {
+            if cp.every > 0 && it % cp.every == 0 {
+                let written = SessionCheckpoint {
+                    algo,
+                    variant: params.variant,
+                    iteration: it as u64,
+                    objective,
+                    m: params.m,
+                    centers: v.clone(),
+                    weights: weights.clone(),
+                }
+                .save(&cp.path)?;
+                checkpoints_written += 1;
+                checkpoint_bytes += written;
+                session.charge_scan(written);
+            }
+        }
+        if shift <= params.epsilon {
+            if prune.enabled && pruned_this > 0 {
+                // Confirm convergence with an exact pass on every shard.
+                for slab in &slabs {
+                    slab.invalidate_all();
+                }
+                continue;
+            }
+            converged = true;
+            break;
+        }
+    }
+    drop(session);
+
+    let sim = engine.clock().cost().delta(&sim_before);
+    let peak_resident_bytes = per_shard_peak.iter().copied().max().unwrap_or(0);
+    Ok(ShardedSessionRunResult {
+        run: SessionRunResult {
+            result: ClusterResult { centers: v, weights, iterations, objective, converged },
+            jobs: iterations,
+            records_pruned: records_pruned_total,
+            records_pruned_quant: records_pruned_quant_total,
+            quant_sidecar_bytes: quant_sidecar_peak,
+            quant_build_s: quant_build_s_total,
+            slab_spilled_bytes: slabs.iter().map(|s| s.spilled_bytes()).sum(),
+            slab_reloads: slabs.iter().map(|s| s.reloads()).sum(),
+            slab_spill_retries: slabs.iter().map(|s| s.spill_retries()).sum(),
+            slab_spill_quarantines: slabs.iter().map(|s| s.spill_quarantines()).sum(),
+            checkpoints_written,
+            checkpoint_bytes,
+            per_iteration,
+            peak_resident_bytes,
+            sim,
+        },
+        shards,
+        merge,
+        records_pruned_per_shard,
+        per_shard_peak_resident_bytes: per_shard_peak,
+        per_shard_last,
+        shard_steals,
+        shard_steal_bytes,
+        merge_objective_delta: delta_last,
+        merge_objective_delta_max: delta_max,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1183,6 +1539,126 @@ mod tests {
             "resume re-ran or skipped iterations"
         );
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharded_session_exact_merge_is_bitwise_drop_in() {
+        let (store, v0, params, backend) = session_setup(123);
+        let mut single = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let base = run_fcm_session(
+            &mut single,
+            &store,
+            Arc::clone(&backend),
+            SessionAlgo::Fcm,
+            v0.clone(),
+            &params,
+            &PruneConfig::default(),
+            SessionOptions::default(),
+            None,
+        )
+        .unwrap();
+        assert!(base.result.converged);
+        for shards in [1usize, 2, 3] {
+            let mut sharded = ShardedEngine::new(
+                &store,
+                &EngineOptions::default(),
+                OverheadConfig::default(),
+                shards,
+                4.0,
+            );
+            let r = run_fcm_session_sharded(
+                &mut sharded,
+                &store,
+                Arc::clone(&backend),
+                SessionAlgo::Fcm,
+                v0.clone(),
+                &params,
+                &PruneConfig::default(),
+                SessionOptions::default(),
+                None,
+                ShardMergeMode::Exact,
+            )
+            .unwrap();
+            assert_eq!(
+                r.run.result.centers.as_slice(),
+                base.result.centers.as_slice(),
+                "shards={shards}: exact merge must be a bitwise drop-in"
+            );
+            assert_eq!(r.run.result.iterations, base.result.iterations, "shards={shards}");
+            assert_eq!(
+                r.run.records_pruned, base.records_pruned,
+                "shards={shards}: pruning decisions diverged"
+            );
+            assert_eq!(r.shards, shards);
+            assert_eq!(r.merge_objective_delta_max, 0.0, "exact merge reports no delta");
+            assert_eq!(r.records_pruned_per_shard.len(), shards);
+            if shards > 1 {
+                assert!(
+                    r.records_pruned_per_shard.iter().all(|&p| p > 0),
+                    "shards={shards}: every shard must prune ({:?})",
+                    r.records_pruned_per_shard
+                );
+            }
+            // Resident sharded loop: startup once per shard, no more.
+            let startup = OverheadConfig::default().job_startup_s;
+            let paid = r.run.sim.job_startup_s / startup;
+            assert!(
+                (paid - shards as f64).abs() < 1e-9,
+                "shards={shards}: startup charged {paid} times"
+            );
+            assert_eq!(r.per_shard_last.len(), shards);
+            assert_eq!(r.per_shard_peak_resident_bytes.len(), shards);
+            assert!(r.per_shard_peak_resident_bytes.iter().all(|&b| b > 0));
+        }
+    }
+
+    #[test]
+    fn sharded_session_representative_merge_reports_delta_and_stays_close() {
+        let (store, v0, _, backend) = session_setup(131);
+        let params = FcmParams { epsilon: 1e-7, ..Default::default() };
+        let mut single = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let exact = run_fcm_session(
+            &mut single,
+            &store,
+            Arc::clone(&backend),
+            SessionAlgo::Fcm,
+            v0.clone(),
+            &params,
+            &PruneConfig::disabled(),
+            SessionOptions::default(),
+            None,
+        )
+        .unwrap();
+        assert!(exact.result.converged);
+        let mut sharded = ShardedEngine::new(
+            &store,
+            &EngineOptions::default(),
+            OverheadConfig::default(),
+            2,
+            4.0,
+        );
+        let r = run_fcm_session_sharded(
+            &mut sharded,
+            &store,
+            backend,
+            SessionAlgo::Fcm,
+            v0,
+            &params,
+            &PruneConfig::disabled(),
+            SessionOptions::default(),
+            None,
+            ShardMergeMode::Representative,
+        )
+        .unwrap();
+        assert!(r.run.result.converged, "representative arm did not converge");
+        assert_eq!(r.merge, ShardMergeMode::Representative);
+        assert!(r.merge_objective_delta_max.is_finite());
+        assert!(r.merge_objective_delta_max >= r.merge_objective_delta);
+        // Shards see i.i.d. slices of the same mixture, so the
+        // centers-only exchange must land near the exact fixpoint
+        // (EXPERIMENTS.md documents this tolerance).
+        let shift = max_center_shift2(&exact.result.centers, &r.run.result.centers);
+        assert!(shift < 1e-2, "representative merge drifted from exact: {shift}");
     }
 
     #[test]

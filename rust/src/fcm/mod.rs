@@ -23,8 +23,8 @@ pub use backend::{
 pub use checkpoint::SessionCheckpoint;
 pub use quant::{QuantCenters, QuantSidecar};
 pub use loops::{
-    kmeans_loop, run_fcm, run_fcm_session, CheckpointPolicy, FcmParams, PruneConfig,
-    SessionAlgo, SessionRunResult, Variant,
+    kmeans_loop, run_fcm, run_fcm_session, run_fcm_session_sharded, CheckpointPolicy, FcmParams,
+    PruneConfig, SessionAlgo, SessionRunResult, ShardedSessionRunResult, Variant,
 };
 pub use native::NativeBackend;
 

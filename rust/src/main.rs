@@ -30,12 +30,15 @@ use bigfcm::config::{params_hash, BoundModel, Config, QuantMode};
 use bigfcm::coordinator::BigFcm;
 use bigfcm::data::normalize::Scaler;
 use bigfcm::data::{builtin, csv};
-use bigfcm::fcm::loops::{run_fcm_session, CheckpointPolicy, FcmParams, PruneConfig, SessionAlgo, Variant};
+use bigfcm::fcm::loops::{
+    run_fcm_session, run_fcm_session_sharded, CheckpointPolicy, FcmParams, PruneConfig,
+    SessionAlgo, Variant,
+};
 use bigfcm::fcm::{assign_hard, KernelBackend, SessionCheckpoint};
 use bigfcm::faults::FaultPlan;
 use bigfcm::hdfs::BlockStore;
 use bigfcm::json;
-use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions, MIB};
+use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions, ShardMergeMode, ShardedEngine, MIB};
 use bigfcm::metrics::confusion_accuracy;
 use bigfcm::runtime::ResolvedBackend;
 use bigfcm::serve::{
@@ -340,6 +343,16 @@ fn cmd_baseline(args: &Args) -> CliResult<()> {
 /// JobStats session counters.
 fn cmd_session(args: &Args) -> CliResult<()> {
     let mut cfg = load_config(args)?;
+    if let Some(v) = args.get("shards") {
+        cfg.set("cluster.shards", v)?;
+    }
+    if let Some(v) = args.get("merge") {
+        cfg.set("shard.merge", v)?;
+    }
+    if let Some(v) = args.get("steal-penalty") {
+        cfg.set("shard.steal_penalty", v)?;
+    }
+    cfg.validate()?;
     let common = resolve_common_args(args, &cfg, "records", 50000, 2)?;
     let (c, m, eps) = (common.clusters, common.fuzzifier, common.epsilon);
     cfg.fcm.clusters = c;
@@ -353,7 +366,6 @@ fn cmd_session(args: &Args) -> CliResult<()> {
         cfg.cluster.block_records,
         cfg.cluster.workers,
     )?);
-    let mut engine = Engine::new(engine_options_of(&cfg)?, cfg.overhead.clone());
     if let Some(v) = args.get("checkpoint-every") {
         cfg.session.checkpoint_every = v.parse()?;
     }
@@ -408,17 +420,59 @@ fn cmd_session(args: &Args) -> CliResult<()> {
             .unwrap_or_else(|| "off".into()),
         backend.name(),
     );
-    let run = run_fcm_session(
-        &mut engine,
-        &store,
-        backend,
-        algo,
-        v0,
-        &params,
-        &prune,
-        SessionOptions::default(),
-        checkpoint.as_ref(),
-    )?;
+    // (read retries, read aborts, quarantines, prefetch errors) summed over
+    // every engine shard's block cache — the engines drop with their branch.
+    let (run, sharded, recovery) = if cfg.cluster.shards > 1 {
+        let mut engine = ShardedEngine::new(
+            &store,
+            &engine_options_of(&cfg)?,
+            cfg.overhead.clone(),
+            cfg.cluster.shards,
+            cfg.shard.steal_penalty,
+        );
+        let res = run_fcm_session_sharded(
+            &mut engine,
+            &store,
+            backend,
+            algo,
+            v0,
+            &params,
+            &prune,
+            SessionOptions::default(),
+            checkpoint.as_ref(),
+            cfg.shard.merge,
+        )?;
+        let mut recovery = (0u64, 0u64, 0u64, 0u64);
+        for i in 0..cfg.cluster.shards {
+            let cache = engine.engine(i).block_cache();
+            recovery.0 += cache.read_retries();
+            recovery.1 += cache.read_aborts();
+            recovery.2 += cache.quarantines();
+            recovery.3 += cache.prefetch_errors();
+        }
+        (res.run.clone(), Some(res), recovery)
+    } else {
+        let mut engine = Engine::new(engine_options_of(&cfg)?, cfg.overhead.clone());
+        let run = run_fcm_session(
+            &mut engine,
+            &store,
+            backend,
+            algo,
+            v0,
+            &params,
+            &prune,
+            SessionOptions::default(),
+            checkpoint.as_ref(),
+        )?;
+        let cache = engine.block_cache();
+        let recovery = (
+            cache.read_retries(),
+            cache.read_aborts(),
+            cache.quarantines(),
+            cache.prefetch_errors(),
+        );
+        (run, None, recovery)
+    };
     for (i, s) in run.per_iteration.iter().enumerate() {
         println!(
             "  iter {:>3}: pruned {:>8} (quant {:>7}), cap {:>3}, reduce parts {:>3} (depth {}), \
@@ -450,15 +504,42 @@ fn cmd_session(args: &Args) -> CliResult<()> {
         run.slab_reloads,
         run.peak_resident_bytes as f64 / MIB as f64,
     );
+    if let Some(sh) = &sharded {
+        println!(
+            "sharded: {} shards, merge={}, steals {} ({} B over the rack link)",
+            sh.shards,
+            sh.merge.as_str(),
+            sh.shard_steals,
+            sh.shard_steal_bytes,
+        );
+        for (i, last) in sh.per_shard_last.iter().enumerate() {
+            println!(
+                "  shard {:>2}: blocks {:>4} (stolen {:>3}, {} B), pruned {:>8}, \
+                 peak {:>7.2} MiB, modelled {:.3}s",
+                i,
+                last.map_tasks,
+                last.shard_steals,
+                last.shard_steal_bytes,
+                sh.records_pruned_per_shard[i],
+                sh.per_shard_peak_resident_bytes[i] as f64 / MIB as f64,
+                last.sim.total_s(),
+            );
+        }
+        if matches!(sh.merge, ShardMergeMode::Representative) {
+            println!(
+                "merge objective delta: last {:.6e} max {:.6e}",
+                sh.merge_objective_delta, sh.merge_objective_delta_max,
+            );
+        }
+    }
     if cfg.faults.enabled() || checkpoint.is_some() || resumed_from.is_some() {
-        let cache = engine.block_cache();
         println!(
             "recovery: read retries {}, read aborts {}, quarantines {}, prefetch errors {}, \
              spill retries {}, spill quarantines {}, backoff {:.3}s, checkpoints {} ({} B)",
-            cache.read_retries(),
-            cache.read_aborts(),
-            cache.quarantines(),
-            cache.prefetch_errors(),
+            recovery.0,
+            recovery.1,
+            recovery.2,
+            recovery.3,
             run.slab_spill_retries,
             run.slab_spill_quarantines,
             run.sim.backoff_s,
@@ -481,6 +562,13 @@ fn cmd_session(args: &Args) -> CliResult<()> {
         run.sim.shuffle_s,
         run.sim.compute_s,
     );
+    // Bitwise fingerprint of the final centers — the verify.sh sharded
+    // smoke diffs this line across `--shards 1` and `--shards N`.
+    let mut center_bytes = Vec::with_capacity(run.result.centers.as_slice().len() * 4);
+    for v in run.result.centers.as_slice() {
+        center_bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    println!("centers fnv1a={:016x}", bigfcm::hdfs::fnv1a(&center_bytes));
     if let Some(path) = args.get("save-model") {
         let mut bundle = ModelBundle::new(run.result.centers.clone(), algo, variant, m);
         bundle.weights = run.result.weights.clone();
@@ -770,6 +858,9 @@ fn cmd_serve_bench(args: &Args) -> CliResult<()> {
             cfg.cluster.quant.as_str(),
             cfg.cluster.workers,
             cfg.seed,
+            cfg.cluster.shards,
+            cfg.shard.merge,
+            cfg.shard.steal_penalty,
         );
         let doc = json::obj(vec![
             ("bench", json::s("serve_bench")),
@@ -1056,8 +1147,10 @@ fn main() -> CliResult<()> {
                  \u{20}           --algo fcm|kmeans --variant fast|classic --slab-mib N\n\
                  \u{20}           --spill-dir PATH --tolerance T --save-model PATH\n\
                  \u{20}           --checkpoint PATH --checkpoint-every N\n\
-                 \u{20}           --resume PATH | --resume-or-cold PATH)\n\
-                 \u{20}           with per-iteration counters\n\
+                 \u{20}           --resume PATH | --resume-or-cold PATH\n\
+                 \u{20}           --shards N --merge exact|representative\n\
+                 \u{20}           --steal-penalty X)\n\
+                 \u{20}           with per-iteration + per-shard counters\n\
                  serve       network scoring front over a multi-model registry\n\
                  \u{20}           server: --host H --port P [--port-file PATH]\n\
                  \u{20}           [--model id=path.bfm]... [--tenant-quota N] [--conn-workers N]\n\

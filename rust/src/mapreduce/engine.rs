@@ -186,6 +186,13 @@ pub struct JobStats {
     /// ran under — the session loop's adaptive-refresh policy stamps it
     /// (session runs only; 0 for ordinary jobs).
     pub refresh_cap: usize,
+    /// Blocks this job mapped that the shard plan moved here from another
+    /// shard's slice (sharded runs only; stamped by the sharded engine).
+    pub shard_steals: usize,
+    /// Serialised bytes of those cross-shard blocks — the traffic the
+    /// modelled rack link carries, charged to `net_s` at the configured
+    /// steal penalty (sharded runs only).
+    pub shard_steal_bytes: u64,
     /// Real seconds of the reduce phase. Tree-combined jobs fold most
     /// merge work into the map slots, so this drops from O(blocks) worth
     /// of merging to O(parts).
@@ -572,12 +579,238 @@ impl Engine {
             slab_spill_retries: 0,
             slab_spill_quarantines: 0,
             refresh_cap: 0,
+            shard_steals: 0,
+            shard_steal_bytes: 0,
             reduce_wall_s,
             combine_wall_s,
             combine_depth,
             reduce_parts,
         };
         Ok((output, stats))
+    }
+
+    /// Map phase of one job over an explicit **global block-id list** —
+    /// the sharded engine's per-shard entry point. Task `i` reads global
+    /// block `block_ids[i]` through this engine's cache (cache and slab
+    /// keys stay global, so a shard's warm state is exactly the state the
+    /// single engine would hold for those blocks), and the worker-side
+    /// combine cascade runs at the blocks' *global* leaf slots against a
+    /// merge tree of `total_blocks` leaves. Segments whose merge partner
+    /// lives on another shard park and are returned tagged `(level, slot)`;
+    /// the caller completes the identical global merge DAG and runs the
+    /// reduce, so a non-associative combiner (f32 accumulation) gives a
+    /// bitwise drop-in for the unsharded run no matter how blocks were
+    /// sliced. No reduce happens here: the returned [`JobStats`] carry the
+    /// map/combine phase only (`reduce_wall_s` 0, `shuffle_bytes` = what
+    /// the surviving segments ship to the global stage).
+    pub fn run_job_map_segments<J: MapReduceJob + 'static>(
+        &mut self,
+        job: Arc<J>,
+        store: &Arc<BlockStore>,
+        cache: Arc<DistributedCache>,
+        cfg: JobRunCfg,
+        block_ids: &[usize],
+        total_blocks: usize,
+    ) -> Result<(Vec<((usize, usize), J::MapOut)>, JobStats)> {
+        let started = Instant::now();
+        let n = block_ids.len();
+        if n == 0 {
+            return Err(Error::Job("no input blocks".into()));
+        }
+
+        // Pre-draw fault schedules in local task order (the id list is
+        // fixed at plan time, so the schedule is a pure function of this
+        // shard's seed and slice — independent of cross-shard interleaving).
+        let mut fault_rng = Pcg::new(self.options.fault_seed);
+        let mut fail_counts: Vec<usize> = (0..n)
+            .map(|_| {
+                let mut fails = 0;
+                while fails < MAX_ATTEMPTS - 1 && fault_rng.next_f64() < self.options.fault_rate {
+                    fails += 1;
+                }
+                fails
+            })
+            .collect();
+        if let Some(plan) = &self.options.faults {
+            for fc in fail_counts.iter_mut() {
+                if plan.check(FaultSite::MapTask).is_some() {
+                    *fc = MAX_ATTEMPTS;
+                }
+            }
+        }
+        let fail_counts = fail_counts;
+
+        let hints: Vec<usize> = block_ids
+            .iter()
+            .map(|&b| store.blocks()[b].preferred_worker)
+            .collect();
+        let prefetch_hits_before = self.block_cache.prefetch_hits();
+        let prefetch_wasted_before = self.block_cache.prefetch_wasted_bytes();
+        let read_retries_before = self.block_cache.read_retries();
+        let read_aborts_before = self.block_cache.read_aborts();
+        let quarantines_before = self.block_cache.quarantines();
+        let prefetch_errors_before = self.block_cache.prefetch_errors();
+        let backoff_before = self.block_cache.backoff_seconds();
+        let max_block = store.max_block_bytes();
+        let use_tree = cfg.tree_combine && job.supports_combine();
+
+        let job_for_map = Arc::clone(&job);
+        let cache_for_map = Arc::clone(&cache);
+        let store_for_map = Arc::clone(store);
+        let blocks_for_map = Arc::clone(&self.block_cache);
+        let prefetch_for_map = self.prefetch_tx.clone().map(Mutex::new);
+        let ids_for_map = Arc::new(block_ids.to_vec());
+
+        let map_one = {
+            let ids = Arc::clone(&ids_for_map);
+            move |id: usize, ahead: QueueAhead| -> Result<(J::MapOut, TaskSample)> {
+                // Queue lookahead carries local task ids; the prefetcher
+                // wants store block ids.
+                let ahead = QueueAhead {
+                    next: ahead.next.map(|t| ids[t]),
+                    next2: ahead.next2.map(|t| ids[t]),
+                };
+                run_map_task(
+                    job_for_map.as_ref(),
+                    &cache_for_map,
+                    &store_for_map,
+                    &blocks_for_map,
+                    prefetch_for_map.as_ref(),
+                    max_block,
+                    fail_counts[id],
+                    ids[id],
+                    ahead,
+                )
+            }
+        };
+
+        let (segments, samples, locality, combine_depth, combine_wall_s) = if use_tree {
+            let (sample_tx, sample_rx) = channel::<(usize, TaskSample)>();
+            let sample_tx = Mutex::new(sample_tx);
+            let job_for_combine = Arc::clone(&job);
+            let combine_wall = Arc::new(Mutex::new(0.0f64));
+            let combine_wall_in = Arc::clone(&combine_wall);
+            let (parts, locality, cstats) = self.pool.map_indexed_hinted_combined_at(
+                n,
+                &hints,
+                block_ids,
+                total_blocks,
+                move |id, ahead| -> Result<J::MapOut> {
+                    let (out, sample) = map_one(id, ahead)?;
+                    let _ = sample_tx
+                        .lock()
+                        .expect("sample sender poisoned")
+                        .send((id, sample));
+                    Ok(out)
+                },
+                move |a: Result<J::MapOut>, b: Result<J::MapOut>| -> Result<J::MapOut> {
+                    match (a, b) {
+                        (Ok(x), Ok(y)) => {
+                            let t0 = Instant::now();
+                            let merged = job_for_combine.combine(x, y);
+                            *combine_wall_in.lock().expect("combine wall poisoned") +=
+                                t0.elapsed().as_secs_f64();
+                            merged
+                        }
+                        (Err(e), _) | (_, Err(e)) => Err(e),
+                    }
+                },
+            );
+            self.fence_prefetcher();
+            let mut segments = Vec::with_capacity(parts.len());
+            for (tag, p) in parts {
+                let part = p
+                    .map_err(|panic| Error::Job(format!("map/combine panicked: {panic}")))?
+                    .map_err(wrap_map_error)?;
+                segments.push((tag, part));
+            }
+            let mut tagged: Vec<(usize, TaskSample)> = sample_rx.into_iter().collect();
+            if tagged.len() != n {
+                return Err(Error::Job(format!(
+                    "lost map-task samples: {} of {n}",
+                    tagged.len()
+                )));
+            }
+            tagged.sort_by_key(|(id, _)| *id);
+            let samples: Vec<TaskSample> = tagged.into_iter().map(|(_, s)| s).collect();
+            let combine_wall_s = *combine_wall.lock().expect("combine wall poisoned");
+            (segments, samples, locality, cstats.depth, combine_wall_s)
+        } else {
+            let (results, locality) = self.pool.map_indexed_hinted(n, &hints, move |id, ahead| {
+                map_one(id, ahead)
+            });
+            self.fence_prefetcher();
+            let mut segments = Vec::with_capacity(n);
+            let mut samples = Vec::with_capacity(n);
+            for (i, r) in results.into_iter().enumerate() {
+                let (out, sample) = r
+                    .map_err(|panic| Error::Job(format!("map task panicked: {panic}")))?
+                    .map_err(wrap_map_error)?;
+                samples.push(sample);
+                // Flat path: every map output is a leaf-level segment.
+                segments.push(((0usize, block_ids[i]), out));
+            }
+            (segments, samples, locality, 0, 0.0)
+        };
+
+        let attempts_total: usize = samples.iter().map(|s| s.attempts).sum();
+        let shuffle_bytes: u64 = segments.iter().map(|(_, o)| job.shuffle_bytes(o)).sum();
+        let reduce_parts = segments.len();
+
+        let mut oh = self.overhead.clone();
+        if !cfg.charge_startup {
+            oh.job_startup_s = 0.0;
+        }
+        let mut sim = self.clock.charge_job(&oh, self.options.workers, &samples, shuffle_bytes, 0.0);
+        if combine_wall_s > 0.0 {
+            sim.compute_s += self
+                .clock
+                .charge_local(&oh, Duration::from_secs_f64(combine_wall_s));
+        }
+        let prefetch_wasted_bytes =
+            self.block_cache.prefetch_wasted_bytes() - prefetch_wasted_before;
+        if prefetch_wasted_bytes > 0 {
+            sim.hdfs_io_s += self.clock.charge_scan(&oh, prefetch_wasted_bytes);
+        }
+        let backoff = self.block_cache.backoff_seconds() - backoff_before;
+        if backoff > 0.0 {
+            sim.backoff_s += self.clock.charge_backoff(backoff);
+        }
+
+        let stats = JobStats {
+            name: job.name().to_string(),
+            wall: started.elapsed(),
+            sim,
+            map_tasks: n,
+            attempts: attempts_total,
+            shuffle_bytes,
+            locality_hits: locality.local_hits,
+            locality_steals: locality.steals,
+            prefetch_hits: self.block_cache.prefetch_hits() - prefetch_hits_before,
+            prefetch_wasted_bytes,
+            read_retries: self.block_cache.read_retries() - read_retries_before,
+            read_aborts: self.block_cache.read_aborts() - read_aborts_before,
+            quarantines: self.block_cache.quarantines() - quarantines_before,
+            prefetch_errors: self.block_cache.prefetch_errors() - prefetch_errors_before,
+            records_pruned: 0,
+            records_pruned_quant: 0,
+            quant_sidecar_bytes: 0,
+            quant_build_s: 0.0,
+            slab_bytes: 0,
+            slab_evictions: 0,
+            slab_spilled_bytes: 0,
+            slab_reloads: 0,
+            slab_spill_retries: 0,
+            slab_spill_quarantines: 0,
+            refresh_cap: 0,
+            shard_steals: 0,
+            shard_steal_bytes: 0,
+            reduce_wall_s: 0.0,
+            combine_wall_s,
+            combine_depth,
+            reduce_parts,
+        };
+        Ok((segments, stats))
     }
 
     /// Barrier the prefetcher: every map task has finished, so every Fetch

@@ -38,11 +38,13 @@
 pub mod cache;
 pub mod engine;
 pub mod session;
+pub mod shard;
 pub mod simclock;
 
 pub use cache::{BlockCache, CachedBlock, DistributedCache, ReadSource, MIB};
 pub use engine::{Engine, EngineOptions, JobRunCfg, JobStats};
 pub use session::{IterativeSession, SessionOptions, SlabState, SpillConfig, StateSlab};
+pub use shard::{ShardMergeMode, ShardPlan, ShardedEngine, ShardedSession};
 pub use simclock::{SimClock, SimCost};
 
 use crate::data::Matrix;

@@ -1,0 +1,933 @@
+//! Sharded multi-engine scale-out: one run spans N engine shards.
+//!
+//! The paper's scalability story is multi-node: each node clusters the
+//! blocks it stores and only compact partials cross the network. This
+//! module reproduces that shape inside one process: a [`ShardedEngine`]
+//! owns N [`Engine`]s (shard = rack/node group), each with its own
+//! contiguous block-id slice of the store (the [`ShardPlan`]), its own
+//! byte-budgeted block cache (the cluster budget split proportionally to
+//! slice bytes), its own worker pool, prefetcher and locality queues, and
+//! its own derived fault domain
+//! ([`crate::faults::FaultPlan::derive_for_shard`]).
+//!
+//! **Two-level merge.** Per-shard map outputs merge locally on each
+//! shard's pool through the worker-side combine tree — but the tree runs
+//! at the blocks' *global* leaf slots
+//! ([`crate::threadpool::ThreadPool::map_indexed_hinted_combined_at`]), so
+//! pairs split across shards park as tagged `(level, slot)` segments and a
+//! driver-side stage ([`complete_global_dag`]) finishes the identical
+//! merge DAG across shards. Every DAG node is computed exactly once
+//! globally, which makes `shard.merge = exact` a **bitwise drop-in** for
+//! the single-engine result even though `Partials` accumulate in f32
+//! (non-associative addition). `shard.merge = representative` instead
+//! exchanges only centers + fuzzy counts per shard (à la Bendechache et
+//! al., arXiv 1710.09593); the session loop measures its objective-quality
+//! delta against the exact merge every iteration.
+//!
+//! **Cross-shard stealing.** Work moves between shards only at plan time,
+//! when a shard's queues would run dry long before its neighbours'
+//! (modelled finish = slice bytes / shard workers): the rebalance greedily
+//! moves donor-tail blocks to the starved shard while the makespan
+//! improves. A stolen block keeps its global merge slot (bitwise-safe) and
+//! its transfer bytes are charged to the `net_s` cost class at
+//! `shard.steal_penalty ×` the calibrated wire rate — rack-local reads are
+//! free, cross-rack reads are not.
+//!
+//! **Accounting.** Per-shard [`JobStats`] are surfaced individually and
+//! merged: counters sum, startup is charged once per shard (each shard is
+//! its own job submission), and the merged modelled time takes the
+//! **critical shard** — wall = max over shards — plus the global-stage
+//! charges. That max-over-shards line is the scaling headline.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::OverheadConfig;
+use crate::error::{Error, Result};
+use crate::hdfs::BlockStore;
+use crate::mapreduce::engine::{Engine, EngineOptions, JobRunCfg, JobStats};
+use crate::mapreduce::session::SessionOptions;
+use crate::mapreduce::simclock::{SimClock, SimCost};
+use crate::mapreduce::{DistributedCache, MapReduceJob, TaskCtx};
+
+/// How the N per-shard partials merge into the global result.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardMergeMode {
+    /// Full `Partials` exchange completing the global merge DAG — bitwise
+    /// drop-in for the single-engine result.
+    #[default]
+    Exact,
+    /// Shards exchange only centers + fuzzy counts (arXiv 1710.09593);
+    /// cheaper wire format, with the objective delta vs exact recorded.
+    Representative,
+}
+
+impl ShardMergeMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShardMergeMode::Exact => "exact",
+            ShardMergeMode::Representative => "representative",
+        }
+    }
+}
+
+impl std::str::FromStr for ShardMergeMode {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "exact" => Ok(ShardMergeMode::Exact),
+            "representative" | "rep" => Ok(ShardMergeMode::Representative),
+            other => Err(Error::InvalidArgument(format!(
+                "unknown shard merge mode `{other}` (exact|representative)"
+            ))),
+        }
+    }
+}
+
+/// One shard's share of the store and the cluster budget.
+#[derive(Clone, Debug)]
+pub struct ShardSlice {
+    /// Home slice: the contiguous block-id range this shard stores.
+    pub range: std::ops::Range<usize>,
+    /// Execution list: home blocks minus donations, plus stolen blocks.
+    /// These are **global** block ids — cache keys, slab keys and merge
+    /// slots all stay global, which is what keeps sharding bitwise-safe.
+    pub block_ids: Vec<usize>,
+    /// Blocks the plan-time rebalance moved here from other shards.
+    pub stolen: Vec<usize>,
+    /// Serialised bytes of the stolen blocks (the modelled rack traffic).
+    pub stolen_bytes: u64,
+    /// Serialised bytes of the execution list.
+    pub bytes: u64,
+    /// This shard's slice of the cluster cache budget.
+    pub cache_bytes: u64,
+    /// This shard's slice of the cluster worker count.
+    pub workers: usize,
+}
+
+/// Contiguous block-range partition of a store over N shards, with the
+/// cache budget split proportionally to slice bytes and a plan-time
+/// modelled steal rebalance (see the module docs).
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub slices: Vec<ShardSlice>,
+    pub total_blocks: usize,
+    pub steal_penalty: f64,
+}
+
+impl ShardPlan {
+    pub fn new(
+        store: &BlockStore,
+        shards: usize,
+        workers: usize,
+        cache_bytes: u64,
+        steal_penalty: f64,
+    ) -> Self {
+        let n = store.num_blocks();
+        let shards = shards.max(1).min(n.max(1));
+        let workers = workers.max(shards); // ≥ 1 worker per shard
+        let metas = store.blocks();
+
+        // Contiguous home ranges balanced by block count; worker split
+        // base + remainder (earlier shards absorb the remainder).
+        let base = n / shards;
+        let rem = n % shards;
+        let wbase = workers / shards;
+        let wrem = workers % shards;
+        let mut slices = Vec::with_capacity(shards);
+        let mut start = 0usize;
+        for s in 0..shards {
+            let len = base + usize::from(s < rem);
+            let range = start..start + len;
+            start += len;
+            slices.push(ShardSlice {
+                block_ids: range.clone().collect(),
+                range,
+                stolen: Vec::new(),
+                stolen_bytes: 0,
+                bytes: 0,
+                cache_bytes: 0,
+                workers: wbase + usize::from(s < wrem),
+            });
+        }
+
+        // Plan-time modelled rebalance: while moving the most-loaded
+        // shard's home-tail block to the driest shard lowers the pairwise
+        // makespan (finish estimate = execution bytes / shard workers),
+        // move it. Bounded by the block count, so it always terminates.
+        let bytes_of = |ids: &[usize]| ids.iter().map(|&b| metas[b].bytes).sum::<u64>();
+        for slice in slices.iter_mut() {
+            slice.bytes = bytes_of(&slice.block_ids);
+        }
+        for _ in 0..n {
+            let est = |s: &ShardSlice| s.bytes as f64 / s.workers as f64;
+            let donor = (0..slices.len())
+                .max_by(|&a, &b| est(&slices[a]).partial_cmp(&est(&slices[b])).unwrap())
+                .expect("non-empty plan");
+            let thief = (0..slices.len())
+                .min_by(|&a, &b| est(&slices[a]).partial_cmp(&est(&slices[b])).unwrap())
+                .expect("non-empty plan");
+            if donor == thief {
+                break;
+            }
+            // Donate from the home tail only — stolen blocks never re-hop,
+            // and a donor always keeps at least one home block (an engine
+            // with an empty slice would have nothing to map).
+            let home_left =
+                slices[donor].block_ids.len() - slices[donor].stolen.len();
+            if home_left <= 1 {
+                break;
+            }
+            let candidate = slices[donor]
+                .block_ids
+                .iter()
+                .rev()
+                .find(|b| !slices[donor].stolen.contains(b))
+                .copied();
+            let Some(block) = candidate else { break };
+            let bbytes = metas[block].bytes;
+            let before = est(&slices[donor]).max(est(&slices[thief]));
+            let after = ((slices[donor].bytes - bbytes) as f64 / slices[donor].workers as f64)
+                .max((slices[thief].bytes + bbytes) as f64 / slices[thief].workers as f64);
+            if after + 1e-12 >= before {
+                break;
+            }
+            slices[donor].block_ids.retain(|&b| b != block);
+            slices[donor].bytes -= bbytes;
+            slices[thief].block_ids.push(block);
+            slices[thief].stolen.push(block);
+            slices[thief].stolen_bytes += bbytes;
+            slices[thief].bytes += bbytes;
+        }
+
+        // Cache budget proportional to final execution bytes.
+        let total_bytes: u64 = slices.iter().map(|s| s.bytes).sum();
+        let mut assigned = 0u64;
+        let last = slices.len() - 1;
+        for (i, slice) in slices.iter_mut().enumerate() {
+            slice.cache_bytes = if i == last {
+                cache_bytes - assigned // remainder-exact: slices sum to the budget
+            } else if total_bytes > 0 {
+                ((cache_bytes as u128 * slice.bytes as u128) / total_bytes as u128) as u64
+            } else {
+                cache_bytes / shards as u64
+            };
+            assigned += slice.cache_bytes;
+        }
+
+        Self { slices, total_blocks: n, steal_penalty }
+    }
+
+    /// Total blocks the rebalance moved across shards.
+    pub fn steals(&self) -> usize {
+        self.slices.iter().map(|s| s.stolen.len()).sum()
+    }
+
+    /// Total serialised bytes of cross-shard blocks.
+    pub fn steal_bytes(&self) -> u64 {
+        self.slices.iter().map(|s| s.stolen_bytes).sum()
+    }
+}
+
+/// Complete the global merge DAG over every shard's tagged segments and
+/// return the canonical survivor list (ordered by leftmost block) ready
+/// for the job's reduce, plus the number of driver-side merges performed.
+///
+/// With `use_tree` off (flat reduce) the segments are all leaf-level; they
+/// are sorted into block order untouched — exactly what the single
+/// engine's flat path feeds its reduce. With it on, pairs merge bottom-up
+/// (even slot always the left operand), reproducing precisely the merges
+/// the single-engine combining drain would have performed on the pool.
+pub fn complete_global_dag<J: MapReduceJob>(
+    job: &J,
+    segments: Vec<((usize, usize), J::MapOut)>,
+    total: usize,
+    use_tree: bool,
+) -> Result<(Vec<J::MapOut>, usize)> {
+    if !use_tree {
+        let mut segs = segments;
+        segs.sort_by_key(|((level, slot), _)| slot << level);
+        return Ok((segs.into_iter().map(|(_, v)| v).collect(), 0));
+    }
+    let mut parked: HashMap<(usize, usize), J::MapOut> = HashMap::with_capacity(segments.len());
+    for (key, v) in segments {
+        if parked.insert(key, v).is_some() {
+            return Err(Error::Job(format!(
+                "duplicate merge-DAG node ({}, {}) — shard slices overlap",
+                key.0, key.1
+            )));
+        }
+    }
+    let mut widths = vec![total.max(1)];
+    while *widths.last().expect("non-empty widths") > 1 {
+        let w = *widths.last().expect("non-empty widths");
+        widths.push(w / 2);
+    }
+    let mut merges = 0usize;
+    for level in 0..widths.len() {
+        let mut evens: Vec<usize> = parked
+            .keys()
+            .filter(|&&(l, s)| l == level && s % 2 == 0)
+            .map(|&(_, s)| s)
+            .collect();
+        evens.sort_unstable();
+        for s in evens {
+            if !parked.contains_key(&(level, s + 1)) {
+                continue; // partner is a lone tail elsewhere in the DAG
+            }
+            let left = parked.remove(&(level, s)).expect("left node present");
+            let right = parked.remove(&(level, s + 1)).expect("right node present");
+            let merged = job.combine(left, right)?;
+            merges += 1;
+            parked.insert((level + 1, s / 2), merged);
+        }
+    }
+    let mut survivors: Vec<((usize, usize), J::MapOut)> = parked.into_iter().collect();
+    survivors.sort_by_key(|((level, slot), _)| slot << level);
+    Ok((survivors.into_iter().map(|(_, v)| v).collect(), merges))
+}
+
+/// N engines, one store, one global clock. See the module docs.
+pub struct ShardedEngine {
+    engines: Vec<Engine>,
+    plan: ShardPlan,
+    overhead: OverheadConfig,
+    clock: SimClock,
+    /// Global-clock snapshot at the start of the in-flight job's map phase
+    /// (consumed by [`Self::finalize_job`] to delta out the job's share).
+    job_cost_before: SimCost,
+}
+
+impl ShardedEngine {
+    /// Build N shard engines from the cluster-level options: workers and
+    /// cache budget split per the [`ShardPlan`], one derived fault domain
+    /// per shard, everything else inherited.
+    pub fn new(
+        store: &BlockStore,
+        options: &EngineOptions,
+        overhead: OverheadConfig,
+        shards: usize,
+        steal_penalty: f64,
+    ) -> Self {
+        let plan = ShardPlan::new(
+            store,
+            shards,
+            options.workers,
+            options.block_cache_bytes,
+            steal_penalty,
+        );
+        let engines = plan
+            .slices
+            .iter()
+            .enumerate()
+            .map(|(i, slice)| {
+                let opts = EngineOptions {
+                    workers: slice.workers,
+                    block_cache_bytes: slice.cache_bytes,
+                    faults: options
+                        .faults
+                        .as_ref()
+                        .map(|p| p.derive_for_shard(i as u64)),
+                    ..options.clone()
+                };
+                Engine::new(opts, overhead.clone())
+            })
+            .collect();
+        Self {
+            engines,
+            plan,
+            overhead,
+            clock: SimClock::new(),
+            job_cost_before: SimCost::default(),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn engine(&self, shard: usize) -> &Engine {
+        &self.engines[shard]
+    }
+
+    pub fn engine_mut(&mut self, shard: usize) -> &mut Engine {
+        &mut self.engines[shard]
+    }
+
+    /// The merged modelled clock: critical-shard share per job + global
+    /// stage + rack traffic (per-shard clocks stay shard-local truth).
+    pub fn clock(&self) -> &SimClock {
+        &self.clock
+    }
+
+    pub fn overhead(&self) -> &OverheadConfig {
+        &self.overhead
+    }
+
+    /// Fold an externally accrued cost share (e.g. the driver phase run on
+    /// shard 0's engine) into the global clock.
+    pub fn absorb(&mut self, cost: &SimCost) {
+        self.clock.absorb(cost, 0, 0);
+    }
+
+    /// Charge a driver-side HDFS scan to the global clock (checkpoint
+    /// writes, slab spill traffic — mirrors [`Engine::charge_scan`]).
+    pub fn charge_scan(&mut self, bytes: u64) {
+        self.clock.charge_scan(&self.overhead, bytes);
+    }
+
+    /// Charge modelled retry-backoff to the global clock.
+    pub fn charge_backoff(&mut self, s: f64) {
+        if s > 0.0 {
+            self.clock.charge_backoff(s);
+        }
+    }
+
+    /// Run the map + local-combine phase on every shard concurrently —
+    /// `jobs[i]` on shard `i` (sessions hand each shard its own job
+    /// instance so slabs stay shard-resident; plain pipelines clone one
+    /// Arc). Returns each shard's tagged segments and its [`JobStats`]
+    /// (steal counters stamped, startup per `cfg`), and advances the
+    /// global clock by the critical shard's share plus the stolen blocks'
+    /// rack transfer (cold jobs only — a warm shard serves stolen blocks
+    /// from its own cache, exactly like warm HDFS reads).
+    pub fn run_map_segments<J: MapReduceJob + 'static>(
+        &mut self,
+        jobs: &[Arc<J>],
+        store: &Arc<BlockStore>,
+        cache: &Arc<DistributedCache>,
+        cfg: JobRunCfg,
+    ) -> Result<(Vec<Vec<((usize, usize), J::MapOut)>>, Vec<JobStats>)> {
+        if jobs.len() != self.engines.len() {
+            return Err(Error::Job(format!(
+                "{} jobs for {} shards",
+                jobs.len(),
+                self.engines.len()
+            )));
+        }
+        self.job_cost_before = self.clock.cost();
+        let total = self.plan.total_blocks;
+        let engines = &mut self.engines;
+        let plan = &self.plan;
+        let results: Vec<Result<(Vec<((usize, usize), J::MapOut)>, JobStats)>> =
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(engines.len());
+                for ((engine, slice), job) in engines.iter_mut().zip(&plan.slices).zip(jobs) {
+                    let store = Arc::clone(store);
+                    let cache = Arc::clone(cache);
+                    let job = Arc::clone(job);
+                    handles.push(scope.spawn(move || {
+                        engine.run_job_map_segments(
+                            job,
+                            &store,
+                            cache,
+                            cfg,
+                            &slice.block_ids,
+                            total,
+                        )
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard driver thread panicked"))
+                    .collect()
+            });
+        let mut segments = Vec::with_capacity(results.len());
+        let mut stats = Vec::with_capacity(results.len());
+        for (slice, r) in self.plan.slices.iter().zip(results) {
+            let (segs, mut st) = r?;
+            st.shard_steals = slice.stolen.len();
+            st.shard_steal_bytes = slice.stolen_bytes;
+            segments.push(segs);
+            stats.push(st);
+        }
+        // Global clock: the shards ran concurrently, so the merged job
+        // pays the critical (max modelled cost) shard's share...
+        let tasks: usize = stats.iter().map(|s| s.map_tasks).sum();
+        let critical = stats
+            .iter()
+            .map(|s| s.sim)
+            .max_by(|a, b| a.total_s().partial_cmp(&b.total_s()).unwrap())
+            .unwrap_or_default();
+        self.clock.absorb(&critical, 1, tasks);
+        // ...plus every shard's startup beyond the critical one's (each
+        // shard is its own job submission — startup is once *per shard*)...
+        let extra_startup: f64 = stats.iter().map(|s| s.sim.job_startup_s).sum::<f64>()
+            - critical.job_startup_s;
+        if extra_startup > 0.0 {
+            self.clock.absorb(
+                &SimCost { job_startup_s: extra_startup, ..SimCost::default() },
+                0,
+                0,
+            );
+        }
+        // ...plus the cross-rack transfer of stolen blocks, at the steal
+        // penalty, on cold jobs (warm shards hold them in cache already).
+        if cfg.charge_startup && self.plan.steal_bytes() > 0 {
+            let mut oh = self.overhead.clone();
+            oh.net_s_per_mib *= self.plan.steal_penalty;
+            for st in stats.iter_mut() {
+                if st.shard_steal_bytes > 0 {
+                    st.sim.net_s += self.clock.charge_net(&oh, st.shard_steal_bytes);
+                }
+            }
+        }
+        Ok((segments, stats))
+    }
+
+    /// Merge per-shard stats into the run's headline row: counters sum,
+    /// wall = max over shards + the global stage, modelled cost = the
+    /// global clock's delta since this job's map phase began (critical
+    /// shard + startups + rack traffic + global-stage compute).
+    pub fn finalize_job(
+        &mut self,
+        shard_stats: &[JobStats],
+        global_wall: std::time::Duration,
+        reduce_wall_s: f64,
+        global_merges: usize,
+        reduce_parts: usize,
+    ) -> JobStats {
+        let _ = global_merges; // surfaced via reduce_parts; kept for callers' symmetry
+        // The global merge/reduce stage is real driver-side compute.
+        if global_wall.as_secs_f64() > 0.0 {
+            self.clock.charge_local(&self.overhead, global_wall);
+        }
+        let sim = self.clock.cost().delta(&self.job_cost_before);
+        let first = shard_stats.first().expect("at least one shard");
+        let max_wall = shard_stats.iter().map(|s| s.wall).max().unwrap_or_default();
+        let mut merged = JobStats {
+            name: first.name.clone(),
+            wall: max_wall + global_wall,
+            sim,
+            map_tasks: 0,
+            attempts: 0,
+            shuffle_bytes: 0,
+            locality_hits: 0,
+            locality_steals: 0,
+            prefetch_hits: 0,
+            prefetch_wasted_bytes: 0,
+            read_retries: 0,
+            read_aborts: 0,
+            quarantines: 0,
+            prefetch_errors: 0,
+            records_pruned: 0,
+            records_pruned_quant: 0,
+            quant_sidecar_bytes: 0,
+            quant_build_s: 0.0,
+            slab_bytes: 0,
+            slab_evictions: 0,
+            slab_spilled_bytes: 0,
+            slab_reloads: 0,
+            slab_spill_retries: 0,
+            slab_spill_quarantines: 0,
+            refresh_cap: 0,
+            shard_steals: 0,
+            shard_steal_bytes: 0,
+            reduce_wall_s,
+            combine_wall_s: 0.0,
+            combine_depth: 0,
+            reduce_parts,
+        };
+        for s in shard_stats {
+            merged.map_tasks += s.map_tasks;
+            merged.attempts += s.attempts;
+            merged.shuffle_bytes += s.shuffle_bytes;
+            merged.locality_hits += s.locality_hits;
+            merged.locality_steals += s.locality_steals;
+            merged.prefetch_hits += s.prefetch_hits;
+            merged.prefetch_wasted_bytes += s.prefetch_wasted_bytes;
+            merged.read_retries += s.read_retries;
+            merged.read_aborts += s.read_aborts;
+            merged.quarantines += s.quarantines;
+            merged.prefetch_errors += s.prefetch_errors;
+            merged.records_pruned += s.records_pruned;
+            merged.records_pruned_quant += s.records_pruned_quant;
+            merged.quant_sidecar_bytes += s.quant_sidecar_bytes;
+            merged.quant_build_s += s.quant_build_s;
+            merged.slab_bytes += s.slab_bytes;
+            merged.slab_evictions += s.slab_evictions;
+            merged.slab_spilled_bytes += s.slab_spilled_bytes;
+            merged.slab_reloads += s.slab_reloads;
+            merged.slab_spill_retries += s.slab_spill_retries;
+            merged.slab_spill_quarantines += s.slab_spill_quarantines;
+            merged.refresh_cap = merged.refresh_cap.max(s.refresh_cap);
+            merged.shard_steals += s.shard_steals;
+            merged.shard_steal_bytes += s.shard_steal_bytes;
+            merged.combine_wall_s += s.combine_wall_s;
+            merged.combine_depth = merged.combine_depth.max(s.combine_depth);
+        }
+        merged
+    }
+
+    /// Execute one job across every shard with the exact two-level merge:
+    /// per-shard map + local combine, driver-side global DAG completion,
+    /// then the job's reduce over the canonical survivor list — a bitwise
+    /// drop-in for [`Engine::run_job_cfg`] on a single engine. Returns the
+    /// output, the merged stats and the per-shard stats.
+    pub fn run_job_cfg<J: MapReduceJob + 'static>(
+        &mut self,
+        job: Arc<J>,
+        store: &Arc<BlockStore>,
+        cache: &Arc<DistributedCache>,
+        cfg: JobRunCfg,
+    ) -> Result<(J::Output, JobStats, Vec<JobStats>)> {
+        let jobs: Vec<Arc<J>> = (0..self.shards()).map(|_| Arc::clone(&job)).collect();
+        self.run_jobs_cfg(&jobs, store, cache, cfg)
+    }
+
+    /// [`Self::run_job_cfg`] with one job instance per shard (sessions).
+    pub fn run_jobs_cfg<J: MapReduceJob + 'static>(
+        &mut self,
+        jobs: &[Arc<J>],
+        store: &Arc<BlockStore>,
+        cache: &Arc<DistributedCache>,
+        cfg: JobRunCfg,
+    ) -> Result<(J::Output, JobStats, Vec<JobStats>)> {
+        let (segments, shard_stats) = self.run_map_segments(jobs, store, cache, cfg)?;
+        let use_tree = cfg.tree_combine && jobs[0].supports_combine();
+        let t0 = Instant::now();
+        let (parts, merges) = complete_global_dag(
+            jobs[0].as_ref(),
+            segments.into_iter().flatten().collect(),
+            self.plan.total_blocks,
+            use_tree,
+        )?;
+        let reduce_parts = parts.len();
+        let reduce_ctx = TaskCtx { cache, task_id: usize::MAX, attempt: 0, doomed: false };
+        let t_reduce = Instant::now();
+        let output = jobs[0].reduce(parts, &reduce_ctx)?;
+        let reduce_wall_s = t_reduce.elapsed().as_secs_f64();
+        let merged =
+            self.finalize_job(&shard_stats, t0.elapsed(), reduce_wall_s, merges, reduce_parts);
+        Ok((output, merged, shard_stats))
+    }
+
+    /// Open an iteration-resident session over `store` spanning all shards.
+    pub fn session<'e>(
+        &'e mut self,
+        store: &Arc<BlockStore>,
+        options: SessionOptions,
+    ) -> ShardedSession<'e> {
+        ShardedSession { engine: self, store: Arc::clone(store), options, iterations: 0 }
+    }
+}
+
+/// The sharded twin of [`crate::mapreduce::IterativeSession`]: slabs,
+/// bounds state, quant sidecars and block caches stay **shard-resident**
+/// across iterations, startup is charged once per shard on the first
+/// iteration only (when resident), and per-job cache meters reset between
+/// iterations without dropping warm blocks.
+pub struct ShardedSession<'e> {
+    engine: &'e mut ShardedEngine,
+    store: Arc<BlockStore>,
+    options: SessionOptions,
+    iterations: usize,
+}
+
+impl ShardedSession<'_> {
+    /// The [`JobRunCfg`] the next iteration runs under.
+    pub fn next_cfg(&self) -> JobRunCfg {
+        JobRunCfg {
+            charge_startup: !self.options.resident || self.iterations == 0,
+            tree_combine: self
+                .options
+                .tree_combine
+                .unwrap_or(self.engine.engines[0].options().tree_combine),
+        }
+    }
+
+    /// One iteration's map + local-combine phase on every shard; the
+    /// caller completes the global merge (exact or representative) and
+    /// calls [`ShardedEngine::finalize_job`] through
+    /// [`Self::finalize_iteration`].
+    pub fn run_iteration_segments<J: MapReduceJob + 'static>(
+        &mut self,
+        jobs: &[Arc<J>],
+        cache: &Arc<DistributedCache>,
+    ) -> Result<(Vec<Vec<((usize, usize), J::MapOut)>>, Vec<JobStats>, JobRunCfg)> {
+        let cfg = self.next_cfg();
+        if self.iterations > 0 {
+            for e in &self.engine.engines {
+                e.block_cache().reset_job_meters();
+            }
+        }
+        let store = Arc::clone(&self.store);
+        let out = self.engine.run_map_segments(jobs, &store, cache, cfg)?;
+        self.iterations += 1;
+        Ok((out.0, out.1, cfg))
+    }
+
+    /// Finish one iteration's accounting (see
+    /// [`ShardedEngine::finalize_job`]).
+    pub fn finalize_iteration(
+        &mut self,
+        shard_stats: &[JobStats],
+        global_wall: std::time::Duration,
+        reduce_wall_s: f64,
+        global_merges: usize,
+        reduce_parts: usize,
+    ) -> JobStats {
+        self.engine
+            .finalize_job(shard_stats, global_wall, reduce_wall_s, global_merges, reduce_parts)
+    }
+
+    /// Charge a driver-side HDFS scan to the run's global clock.
+    pub fn charge_scan(&mut self, bytes: u64) {
+        self.engine.charge_scan(bytes);
+    }
+
+    /// Charge modelled retry-backoff to the run's global clock.
+    pub fn charge_backoff(&mut self, s: f64) {
+        self.engine.charge_backoff(s);
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.iterations
+    }
+
+    pub fn store(&self) -> &Arc<BlockStore> {
+        &self.store
+    }
+
+    pub fn engine(&self) -> &ShardedEngine {
+        self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut ShardedEngine {
+        self.engine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+    use crate::data::Matrix;
+    use crate::mapreduce::MIB;
+
+    /// Combiner-capable sum job (mirrors the engine tests' CombSum).
+    struct CombSum;
+
+    impl MapReduceJob for CombSum {
+        type MapOut = (f64, usize);
+        type Output = (f64, usize);
+
+        fn map_combine(&self, block: &Matrix, _ctx: &TaskCtx) -> Result<Self::MapOut> {
+            let s: f64 = block.as_slice().iter().map(|&v| v as f64).sum();
+            Ok((s, block.rows()))
+        }
+
+        fn reduce(&self, parts: Vec<Self::MapOut>, _ctx: &TaskCtx) -> Result<Self::Output> {
+            Ok(parts
+                .into_iter()
+                .fold((0.0, 0), |acc, p| (acc.0 + p.0, acc.1 + p.1)))
+        }
+
+        fn supports_combine(&self) -> bool {
+            true
+        }
+
+        fn combine(&self, left: Self::MapOut, right: Self::MapOut) -> Result<Self::MapOut> {
+            Ok((left.0 + right.0, left.1 + right.1))
+        }
+
+        fn shuffle_bytes(&self, _part: &Self::MapOut) -> u64 {
+            16
+        }
+
+        fn name(&self) -> &str {
+            "comb_sum"
+        }
+    }
+
+    fn store(blocks: usize) -> Arc<BlockStore> {
+        let rows = blocks * 125;
+        let d = blobs(rows, 3, 2, 0.5, 7);
+        Arc::new(BlockStore::in_memory("t", &d.features, 125, 4).unwrap())
+    }
+
+    #[test]
+    fn plan_covers_every_block_exactly_once() {
+        let s = store(10);
+        for shards in [1usize, 2, 3, 4] {
+            let plan = ShardPlan::new(&s, shards, 8, 64 * MIB, 4.0);
+            let mut seen: Vec<usize> = plan
+                .slices
+                .iter()
+                .flat_map(|sl| sl.block_ids.iter().copied())
+                .collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..10).collect::<Vec<_>>(), "shards={shards}");
+            let cache: u64 = plan.slices.iter().map(|sl| sl.cache_bytes).sum();
+            assert_eq!(cache, 64 * MIB, "cache budget must split exactly");
+            let workers: usize = plan.slices.iter().map(|sl| sl.workers).sum();
+            assert_eq!(workers, 8, "workers must split exactly");
+            assert!(plan.slices.iter().all(|sl| sl.workers >= 1));
+        }
+    }
+
+    #[test]
+    fn balanced_plan_steals_nothing_and_skew_steals_something() {
+        let s = store(12);
+        // 4 workers over 2 shards: even split, even bytes → no steals.
+        let even = ShardPlan::new(&s, 2, 4, 64 * MIB, 4.0);
+        assert_eq!(even.steals(), 0, "balanced shards must not steal");
+        // 3 workers over 2 shards: 2/1 split → shard 1 is the straggler;
+        // the rebalance must move some of its tail to shard 0.
+        let skew = ShardPlan::new(&s, 2, 3, 64 * MIB, 4.0);
+        assert!(skew.steals() > 0, "induced imbalance must trigger steals");
+        assert!(skew.steal_bytes() > 0);
+        assert!(skew.slices[0].stolen.len() > 0, "the wide shard is the thief");
+        assert_eq!(skew.slices[1].stolen.len(), 0);
+        // Stolen blocks still cover the store exactly once.
+        let mut seen: Vec<usize> = skew
+            .slices
+            .iter()
+            .flat_map(|sl| sl.block_ids.iter().copied())
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sharded_sum_matches_single_engine_for_any_shard_count() {
+        let s = store(10);
+        let mut single = Engine::new(EngineOptions::default(), OverheadConfig::default());
+        let ((expect_sum, expect_rows), _) = single
+            .run_job(Arc::new(CombSum), &s, Arc::new(DistributedCache::new()))
+            .unwrap();
+        for shards in [1usize, 2, 3] {
+            let mut sharded = ShardedEngine::new(
+                &s,
+                &EngineOptions::default(),
+                OverheadConfig::default(),
+                shards,
+                4.0,
+            );
+            let cache = Arc::new(DistributedCache::new());
+            let cfg = JobRunCfg { charge_startup: true, tree_combine: true };
+            let ((sum, rows), merged, per_shard) = sharded
+                .run_job_cfg(Arc::new(CombSum), &s, &cache, cfg)
+                .unwrap();
+            assert_eq!(rows, expect_rows, "shards={shards}");
+            assert_eq!(sum.to_bits(), expect_sum.to_bits(), "shards={shards}: not bitwise");
+            assert_eq!(per_shard.len(), shards);
+            assert_eq!(merged.map_tasks, 10);
+            let task_sum: usize = per_shard.iter().map(|s| s.map_tasks).sum();
+            assert_eq!(task_sum, 10);
+            // Startup once per shard.
+            let startups = merged.sim.job_startup_s / sharded.overhead().job_startup_s;
+            assert!((startups - shards as f64).abs() < 1e-9, "shards={shards}: {startups}");
+            // Merged modelled time = critical shard + extra startups (+ globals):
+            // it must be at least every single shard's share.
+            for st in &per_shard {
+                assert!(merged.sim.total_s() + 1e-12 >= st.sim.total_s(), "shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_flat_reduce_matches_single_engine() {
+        let s = store(9);
+        let cfg = JobRunCfg { charge_startup: true, tree_combine: false };
+        let mut single = Engine::new(
+            EngineOptions { tree_combine: false, ..Default::default() },
+            OverheadConfig::default(),
+        );
+        let ((expect, _), _) = single
+            .run_job(Arc::new(CombSum), &s, Arc::new(DistributedCache::new()))
+            .unwrap();
+        let mut sharded =
+            ShardedEngine::new(&s, &EngineOptions::default(), OverheadConfig::default(), 2, 4.0);
+        let ((sum, rows), merged, _) = sharded
+            .run_job_cfg(Arc::new(CombSum), &s, &Arc::new(DistributedCache::new()), cfg)
+            .unwrap();
+        assert_eq!(rows, 9 * 125);
+        assert_eq!(sum.to_bits(), expect.to_bits(), "flat sharded reduce must be bitwise");
+        assert_eq!(merged.reduce_parts, 9, "flat path funnels every map output");
+    }
+
+    #[test]
+    fn steals_are_charged_to_net_on_cold_jobs_only() {
+        let s = store(12);
+        // 3 workers / 2 shards: induced imbalance → steals exist.
+        let opts = EngineOptions { workers: 3, ..Default::default() };
+        let mut sharded =
+            ShardedEngine::new(&s, &opts, OverheadConfig::default(), 2, 4.0);
+        assert!(sharded.plan().steals() > 0);
+        let cache = Arc::new(DistributedCache::new());
+        let cold = JobRunCfg { charge_startup: true, tree_combine: true };
+        let (_, merged_cold, per_shard) =
+            sharded.run_job_cfg(Arc::new(CombSum), &s, &cache, cold).unwrap();
+        assert!(merged_cold.sim.net_s > 0.0, "cold steals must charge net_s");
+        assert!(merged_cold.shard_steals > 0);
+        assert!(merged_cold.shard_steal_bytes > 0);
+        let thief = per_shard.iter().find(|st| st.shard_steals > 0).unwrap();
+        assert!(thief.sim.net_s > 0.0, "the thief's row carries the rack charge");
+        // Penalty scales the charge linearly.
+        let expected = sharded.plan().steal_bytes() as f64 / (1024.0 * 1024.0)
+            * sharded.overhead().net_s_per_mib
+            * 4.0;
+        assert!((merged_cold.sim.net_s - expected).abs() < 1e-9);
+        // Warm iteration: stolen blocks are cached shard-side — no re-charge.
+        let warm = JobRunCfg { charge_startup: false, tree_combine: true };
+        let (_, merged_warm, _) =
+            sharded.run_job_cfg(Arc::new(CombSum), &s, &cache, warm).unwrap();
+        assert_eq!(merged_warm.sim.net_s, 0.0, "warm jobs must not re-pay the transfer");
+        assert!(merged_warm.shard_steals > 0, "the counters still describe the plan");
+    }
+
+    #[test]
+    fn sharded_session_charges_startup_once_per_shard() {
+        let s = store(8);
+        let mut sharded =
+            ShardedEngine::new(&s, &EngineOptions::default(), OverheadConfig::default(), 2, 4.0);
+        let startup = sharded.overhead().job_startup_s;
+        let cache = Arc::new(DistributedCache::new());
+        let mut session = sharded.session(&s, SessionOptions::default());
+        for it in 0..3 {
+            let jobs = vec![Arc::new(CombSum), Arc::new(CombSum)];
+            let (segments, stats, cfg) =
+                session.run_iteration_segments(&jobs, &cache).unwrap();
+            let (parts, merges) = complete_global_dag(
+                jobs[0].as_ref(),
+                segments.into_iter().flatten().collect(),
+                8,
+                cfg.tree_combine,
+            )
+            .unwrap();
+            let reduce_parts = parts.len();
+            let merged = session.finalize_iteration(
+                &stats,
+                std::time::Duration::from_secs(0),
+                0.0,
+                merges,
+                reduce_parts,
+            );
+            if it == 0 {
+                assert!((merged.sim.job_startup_s - 2.0 * startup).abs() < 1e-9);
+            } else {
+                assert_eq!(merged.sim.job_startup_s, 0.0, "resident iterations re-pay nothing");
+            }
+        }
+        assert_eq!(session.iterations(), 3);
+    }
+
+    #[test]
+    fn merge_mode_parses_and_roundtrips() {
+        assert_eq!("exact".parse::<ShardMergeMode>().unwrap(), ShardMergeMode::Exact);
+        assert_eq!(
+            "representative".parse::<ShardMergeMode>().unwrap(),
+            ShardMergeMode::Representative
+        );
+        assert_eq!("rep".parse::<ShardMergeMode>().unwrap(), ShardMergeMode::Representative);
+        assert!("fuzzy".parse::<ShardMergeMode>().is_err());
+        assert_eq!(ShardMergeMode::Exact.as_str(), "exact");
+        assert_eq!(ShardMergeMode::Representative.as_str(), "representative");
+    }
+}

@@ -200,6 +200,17 @@ impl SimClock {
         s
     }
 
+    /// Fold an externally computed cost share into this clock — the
+    /// sharded engine's merge: per-shard clocks advance concurrently, and
+    /// the global clock takes the critical (max-cost) shard's share per
+    /// job plus the cross-shard extras. No per-class rate math happens
+    /// here; the share was already charged by a shard's own clock.
+    pub fn absorb(&mut self, cost: &SimCost, jobs: usize, tasks: usize) {
+        self.cost.add(cost);
+        self.jobs += jobs;
+        self.tasks += tasks;
+    }
+
     pub fn cost(&self) -> SimCost {
         self.cost
     }

@@ -200,16 +200,56 @@ impl ThreadPool {
         F: Fn(usize, QueueAhead) -> R + Send + Sync + 'static,
         C: Fn(R, R) -> R + Send + Sync + 'static,
     {
+        let slots: Vec<usize> = (0..n).collect();
+        let (parts, locality, stats) =
+            self.map_indexed_hinted_combined_at(n, hints, &slots, n, f, combine);
+        (parts.into_iter().map(|(_, v)| v).collect(), locality, stats)
+    }
+
+    /// Sharded variant of [`Self::map_indexed_hinted_combined`]: the merge
+    /// tree's slot widths come from `total` (the *global* task count of a
+    /// larger map this drain is a slice of), and local task `i` enters the
+    /// cascade at leaf slot `slots[i]` instead of `i`. Pairs whose partner
+    /// slot belongs to another slice park at their `(level, slot)` and are
+    /// returned tagged, so a driver-side stage can complete the identical
+    /// merge DAG across slices — every DAG node is computed exactly once
+    /// globally, which keeps an order-sensitive or non-associative `combine`
+    /// (f32 accumulation, ordered concatenation) bitwise-independent of how
+    /// the map was sliced.
+    ///
+    /// With `slots = 0..n` and `total = n` this is exactly the unsharded
+    /// combining drain. Surviving segments are ordered by leftmost task
+    /// index (`slot << level`).
+    pub fn map_indexed_hinted_combined_at<R, F, C>(
+        &self,
+        n: usize,
+        hints: &[usize],
+        slots: &[usize],
+        total: usize,
+        f: F,
+        combine: C,
+    ) -> (
+        Vec<((usize, usize), Result<R, String>)>,
+        LocalityStats,
+        CombineStats,
+    )
+    where
+        R: Send + 'static,
+        F: Fn(usize, QueueAhead) -> R + Send + Sync + 'static,
+        C: Fn(R, R) -> R + Send + Sync + 'static,
+    {
         if n == 0 {
             return (Vec::new(), LocalityStats::default(), CombineStats::default());
         }
+        assert_eq!(slots.len(), n, "one leaf slot per task");
         let size = self.size();
         let queues = build_queues(n, hints, size);
         let local_hits = Arc::new(AtomicUsize::new(0));
         let steals = Arc::new(AtomicUsize::new(0));
+        let leaf_slots = Arc::new(slots.to_vec());
         // Slot widths per level: a lone trailing slot (odd width) can never
         // merge at its level and parks there until final collection.
-        let mut widths = vec![n];
+        let mut widths = vec![total.max(n)];
         while *widths.last().expect("non-empty widths") > 1 {
             let w = *widths.last().expect("non-empty widths");
             widths.push(w / 2);
@@ -232,6 +272,7 @@ impl ThreadPool {
             let steals = Arc::clone(&steals);
             let widths = Arc::clone(&widths);
             let ledger = Arc::clone(&ledger);
+            let leaf_slots = Arc::clone(&leaf_slots);
             let f = Arc::clone(&f);
             let combine = Arc::clone(&combine);
             let done_tx = done_tx.clone();
@@ -246,12 +287,13 @@ impl ThreadPool {
                     let mut val: Result<R, String> =
                         catch_unwind(AssertUnwindSafe(|| f(id, ahead))).map_err(describe_panic);
                     // Cascade up the merge tree: park when the sibling is
-                    // still running (it will pick the pair up later), merge
+                    // still running (it will pick the pair up later — or
+                    // lives on another slice and never arrives here), merge
                     // and promote when it already parked. Check-and-park is
                     // one lock acquisition, so exactly one of the siblings
                     // performs each merge.
                     let mut level = 0usize;
-                    let mut slot = id;
+                    let mut slot = leaf_slots[id];
                     loop {
                         let width = widths.get(level).copied().unwrap_or(1);
                         let sib = slot ^ 1;
@@ -306,9 +348,8 @@ impl ThreadPool {
             let (level, slot) = part.0;
             slot << level
         });
-        let results = parts.into_iter().map(|(_, v)| v).collect();
         (
-            results,
+            parts,
             LocalityStats {
                 local_hits: local_hits.load(Ordering::Relaxed),
                 steals: steals.load(Ordering::Relaxed),
@@ -652,6 +693,68 @@ mod tests {
                     assert!(stats.merges < n, "merge count must be below task count");
                 }
             }
+        }
+    }
+
+    /// Running the combining drain as independent slices at global slots and
+    /// completing the merge DAG driver-side must reproduce the unsharded
+    /// drain's surviving segments exactly — same count, same contents, same
+    /// order — for splits that do and don't align with subtree boundaries.
+    #[test]
+    fn combined_at_slices_complete_to_identical_segments() {
+        let cat = |mut a: Vec<usize>, b: Vec<usize>| {
+            a.extend(b);
+            a
+        };
+        for (total, cut) in [(5usize, 2usize), (7, 4), (8, 3), (16, 8), (20, 7)] {
+            let pool = ThreadPool::new(3);
+            let hints: Vec<usize> = (0..total).map(|i| i % 3).collect();
+            let (reference, _, _) =
+                pool.map_indexed_hinted_combined(total, &hints, |i, _| vec![i], cat);
+            let reference: Vec<Vec<usize>> =
+                reference.into_iter().map(|r| r.unwrap()).collect();
+
+            let mut parked: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
+            for (lo, hi) in [(0usize, cut), (cut, total)] {
+                let n = hi - lo;
+                let slots: Vec<usize> = (lo..hi).collect();
+                let hints: Vec<usize> = (0..n).map(|i| i % 3).collect();
+                let (parts, _, _) = pool.map_indexed_hinted_combined_at(
+                    n,
+                    &hints,
+                    &slots,
+                    total,
+                    move |i, _| vec![lo + i],
+                    cat,
+                );
+                for ((level, slot), v) in parts {
+                    assert!(
+                        parked.insert((level, slot), v.unwrap()).is_none(),
+                        "total={total} cut={cut}: duplicate DAG node ({level},{slot})"
+                    );
+                }
+            }
+            // Complete the identical DAG bottom-up: merge any even/odd slot
+            // pair present at a level (even slot left), promote the result.
+            let mut widths = vec![total];
+            while *widths.last().unwrap() > 1 {
+                widths.push(widths.last().unwrap() / 2);
+            }
+            for level in 0..widths.len() {
+                loop {
+                    let key = parked.keys().copied().find(|&(l, s)| {
+                        l == level && s % 2 == 0 && parked.contains_key(&(l, s + 1))
+                    });
+                    let Some((l, s)) = key else { break };
+                    let left = parked.remove(&(l, s)).unwrap();
+                    let right = parked.remove(&(l, s + 1)).unwrap();
+                    parked.insert((l + 1, s / 2), cat(left, right));
+                }
+            }
+            let mut survivors: Vec<((usize, usize), Vec<usize>)> = parked.into_iter().collect();
+            survivors.sort_by_key(|((level, slot), _)| slot << level);
+            let merged: Vec<Vec<usize>> = survivors.into_iter().map(|(_, v)| v).collect();
+            assert_eq!(merged, reference, "total={total} cut={cut}");
         }
     }
 

@@ -11,11 +11,14 @@ use bigfcm::config::{OverheadConfig, QuantMode};
 use bigfcm::data::synth::blobs;
 use bigfcm::data::Matrix;
 use bigfcm::error::Result;
-use bigfcm::fcm::loops::{run_fcm_session, FcmParams, PruneConfig, SessionAlgo};
+use bigfcm::fcm::loops::{
+    run_fcm_session, run_fcm_session_sharded, FcmParams, PruneConfig, SessionAlgo,
+};
 use bigfcm::fcm::{max_center_shift2, KernelBackend, NativeBackend};
 use bigfcm::hdfs::BlockStoreWriter;
 use bigfcm::mapreduce::{
-    DistributedCache, Engine, EngineOptions, MapReduceJob, SessionOptions, TaskCtx,
+    DistributedCache, Engine, EngineOptions, MapReduceJob, SessionOptions, ShardMergeMode,
+    ShardedEngine, TaskCtx,
 };
 use bigfcm::runtime::PjrtShimBackend;
 
@@ -384,6 +387,91 @@ fn mini_scale_session_slab_spill_is_bitwise() {
     );
     assert_eq!(roomy.records_pruned, spilled.records_pruned, "pruning decisions diverged");
     assert_eq!(roomy.jobs, spilled.jobs);
+
+    std::fs::remove_dir_all(&twin.dir).ok();
+}
+
+/// Sharded twin of the session harness (the scale-out tentpole's CI
+/// acceptance): the same convergence loop across 2 engine shards.
+///
+/// * **exact merge** is a bitwise drop-in for the single-engine session —
+///   with a balanced plan (4 workers / 2 shards) *and* under induced
+///   imbalance (3 workers / 2 shards), because stolen blocks keep their
+///   global merge slots;
+/// * steal counters fire **only** under the induced imbalance;
+/// * pruning is live on **every** shard (per-shard `records_pruned > 0`);
+/// * **representative merge** converges with a finite, recorded objective
+///   delta and lands within the documented 1e-2 squared-shift tolerance of
+///   the exact centers (EXPERIMENTS.md §Sharding).
+#[test]
+fn mini_scale_session_sharded_merges() {
+    let twin = session_twin_setup("sharded");
+    let native: Arc<dyn KernelBackend> = Arc::new(NativeBackend);
+
+    let single = run_twin_arm(&twin, Arc::clone(&native), &PruneConfig::default());
+
+    let run_sharded = |workers: usize, merge: ShardMergeMode, params: &FcmParams, prune: &PruneConfig| {
+        let opts = EngineOptions { workers, ..twin.opts.clone() };
+        let mut engine =
+            ShardedEngine::new(&twin.store, &opts, OverheadConfig::default(), 2, 4.0);
+        run_fcm_session_sharded(
+            &mut engine,
+            &twin.store,
+            Arc::clone(&native),
+            SessionAlgo::Fcm,
+            twin.v0.clone(),
+            params,
+            prune,
+            SessionOptions::default(),
+            None,
+            merge,
+        )
+        .unwrap()
+    };
+
+    // Balanced plan: 12 blocks / 2 shards / 4 workers — no steal pressure.
+    let exact = run_sharded(4, ShardMergeMode::Exact, &twin.params, &PruneConfig::default());
+    assert_eq!(
+        exact.run.result.centers.as_slice(),
+        single.result.centers.as_slice(),
+        "sharded exact merge is not a bitwise drop-in"
+    );
+    assert_eq!(exact.shard_steals, 0, "balanced 4-worker/2-shard plan must not steal");
+    assert_eq!(exact.merge_objective_delta_max, 0.0);
+    assert_eq!(exact.records_pruned_per_shard.len(), 2);
+    for (i, &p) in exact.records_pruned_per_shard.iter().enumerate() {
+        assert!(p > 0, "shard {i} never pruned — slab not shard-resident?");
+    }
+
+    // Induced imbalance: 3 workers split 2/1, so shard 1 would finish its
+    // half of the store at half shard 0's rate — the plan must steal, the
+    // stolen bytes must be metered, and the result must stay bitwise.
+    let skew = run_sharded(3, ShardMergeMode::Exact, &twin.params, &PruneConfig::default());
+    assert!(skew.shard_steals > 0, "2/1 worker split induced no steals");
+    assert!(skew.shard_steal_bytes > 0, "steals metered no bytes");
+    assert_eq!(
+        skew.run.result.centers.as_slice(),
+        single.result.centers.as_slice(),
+        "stolen blocks broke bitwise exactness — global slots not kept?"
+    );
+
+    // Representative exchange: centers + fuzzy counts per shard. Epsilon
+    // relaxed to the reconstruction noise floor; the objective delta is
+    // measured every iteration against an uncharged exact merge.
+    let rep_params = FcmParams { epsilon: 1e-7, ..twin.params };
+    let rep =
+        run_sharded(4, ShardMergeMode::Representative, &rep_params, &PruneConfig::disabled());
+    assert!(rep.run.result.converged, "representative arm did not converge");
+    assert!(
+        rep.merge_objective_delta.is_finite() && rep.merge_objective_delta >= 0.0,
+        "objective delta not recorded"
+    );
+    assert!(rep.merge_objective_delta_max >= rep.merge_objective_delta);
+    let shift = max_center_shift2(&single.result.centers, &rep.run.result.centers);
+    assert!(
+        shift < 1e-2,
+        "representative merge drifted {shift} beyond the documented 1e-2 tolerance"
+    );
 
     std::fs::remove_dir_all(&twin.dir).ok();
 }

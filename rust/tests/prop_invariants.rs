@@ -403,6 +403,65 @@ fn prop_tree_combine_is_drop_in_for_flat_reduce() {
     }
 }
 
+/// Sharding the engine is a drop-in for the single-engine pipeline: the
+/// exact two-level merge computes every node of the single engine's f32
+/// combine DAG exactly once at its global leaf slot, so the final centers
+/// must be bit-identical at every shard count — including the flat
+/// multi-reducer path (reducers > 1, combiner stood down), where segments
+/// are per-block and the driver-side fold reproduces block order exactly.
+#[test]
+fn prop_sharded_exact_merge_is_drop_in_for_single_engine() {
+    for case in 0..2u64 {
+        for reducers in [1usize, 4] {
+            let data = blobs(2048, 3, 3, 0.3, 80_000 + case);
+            let store =
+                Arc::new(BlockStore::in_memory("t", &data.features, 256, 4).unwrap());
+            let mut cfg = Config::default();
+            cfg.fcm.epsilon = 1e-9;
+            cfg.fcm.flag_policy = FlagPolicy::ForceFcm;
+            cfg.cluster.reducers = reducers;
+            cfg.cluster.tree_combine = true;
+            let mut baseline = None;
+            for shards in [1usize, 2, 4] {
+                cfg.cluster.shards = shards;
+                let run = BigFcm::new(cfg.clone()).clusters(3).run_store(&store).unwrap();
+                if shards == 1 {
+                    assert!(
+                        run.per_shard.is_empty(),
+                        "case {case} reducers {reducers}: single-engine run grew shard rows"
+                    );
+                    baseline = Some(run);
+                    continue;
+                }
+                let base = baseline.as_ref().unwrap();
+                assert_eq!(
+                    run.centers.as_slice(),
+                    base.centers.as_slice(),
+                    "case {case} reducers {reducers} shards {shards}: sharded pipeline diverged"
+                );
+                assert_eq!(
+                    run.per_shard.len(),
+                    shards,
+                    "case {case} reducers {reducers} shards {shards}: missing shard stats"
+                );
+                // Every block maps on exactly one shard.
+                let shard_tasks: usize = run.per_shard.iter().map(|s| s.map_tasks).sum();
+                assert_eq!(
+                    shard_tasks, base.job.map_tasks,
+                    "case {case} reducers {reducers} shards {shards}: map tasks lost or doubled"
+                );
+                // Startup is charged once per shard; the merged modelled
+                // wall takes the critical shard, so it can only shrink or
+                // hold as map compute spreads (modulo the extra startups).
+                assert!(
+                    run.job.sim.job_startup_s > base.job.sim.job_startup_s,
+                    "case {case} shards {shards}: per-shard startup not charged"
+                );
+            }
+        }
+    }
+}
+
 /// Adaptive prefetch depth never grows the residency envelope: with a
 /// budget roomy enough to trigger depth-2 prefetches (≥ 2 max-blocks of
 /// slack throughout), peak resident bytes still stay within

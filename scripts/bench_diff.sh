@@ -51,15 +51,16 @@ base_doc = json.load(open(base_path))
 cur_doc = json.load(open(cur_path))
 
 # Apples-to-oranges guard: both files carry a config/params fingerprint
-# (algo, bounds, quant, workers, seed). Refuse the diff when they disagree
-# — numbers from different configs are not a perf trajectory. Fail-soft:
-# the report is skipped, the build is not failed. Baselines predating the
-# hash (no config_hash key) diff as before.
+# (algo, bounds, quant, workers, seed, plus the shard topology: shards,
+# merge mode, steal penalty). Refuse the diff when they disagree —
+# numbers from different configs or cluster topologies are not a perf
+# trajectory. Fail-soft: the report is skipped, the build is not failed.
+# Baselines predating the hash (no config_hash key) diff as before.
 bh, ch = base_doc.get("config_hash"), cur_doc.get("config_hash")
 if bh and ch and bh != ch:
     print()
     print(f"refusing diff: config_hash mismatch (baseline {bh} vs current {ch})")
-    print("the bench config changed — refresh the baseline before tracking deltas:")
+    print("the bench config or shard topology changed — refresh the baseline before tracking deltas:")
     print(f"    cp rust/{cur_path} rust/{base_path} && git add rust/{base_path}")
     sys.exit(0)
 
@@ -124,6 +125,10 @@ if cur_sess:
         "per_job_modelled_s",
         "session_modelled_s",
         "dmin_modelled_s",
+        "shard_steals",
+        "shard_steal_ratio",
+        "sharded_modelled_s",
+        "sharded_objective",
     ]
     print(f"{'counter':<26} {'baseline':>14} {'now':>14}")
     for key in keys:
@@ -156,6 +161,15 @@ if cur_sess:
     base_aborts = base_sess.get("read_aborts") or 0
     if aborts > base_aborts:
         print(f"note: read_aborts rose vs baseline ({base_aborts:.0f} -> {aborts:.0f})")
+    # Cross-shard steal trajectory: the steal ratio is a plan-time property
+    # of the topology (same store, same shards, same workers), so any rise
+    # vs baseline means the rebalance got hungrier — modelled rack traffic
+    # crept into the scale-out headline; that is a scheduler regression,
+    # not runner noise.
+    br = base_sess.get("shard_steal_ratio")
+    cr = cur_sess.get("shard_steal_ratio")
+    if br is not None and cr is not None and cr > br + 1e-12:
+        print(f"note: cross-shard steal ratio rose vs baseline ({br:.3f} -> {cr:.3f}) — plan-time rebalance regression; investigate")
 EOF
 
 # ---------------------------------------------------------------------------

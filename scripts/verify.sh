@@ -77,6 +77,29 @@ echo "$RESCUE_OUT" | grep -q "cold-starting" \
     || { echo "resume-or-cold smoke: missing cold-start fallback"; echo "$RESCUE_OUT"; exit 1; }
 echo "checkpoint smoke: write, warm-start resume and cold-start fallback all OK"
 
+echo "== sharded smoke (exact bitwise drop-in + representative delta) =="
+# The scale-out tentpole on the release binary: `--shards 2 --merge exact`
+# must reproduce the single-engine centers bit for bit (the CLI prints an
+# fnv1a fingerprint of the final centers for exactly this diff), and the
+# representative exchange must report its measured objective delta.
+ONE_OUT="$(cargo run --release --bin bigfcm -- session \
+    --dataset susy --records 4096 --clusters 3 --iters 4 --shards 1)"
+TWO_OUT="$(cargo run --release --bin bigfcm -- session \
+    --dataset susy --records 4096 --clusters 3 --iters 4 --shards 2 --merge exact)"
+ONE_FP="$(echo "$ONE_OUT" | grep "centers fnv1a=")"
+TWO_FP="$(echo "$TWO_OUT" | grep "centers fnv1a=")"
+[ -n "$ONE_FP" ] || { echo "sharded smoke: no centers fingerprint printed"; echo "$ONE_OUT"; exit 1; }
+[ "$ONE_FP" = "$TWO_FP" ] || {
+    echo "sharded smoke: exact merge is not bitwise ($ONE_FP vs $TWO_FP)"; exit 1; }
+echo "$TWO_OUT" | grep -q "sharded: 2 shards, merge=exact" \
+    || { echo "sharded smoke: missing per-shard summary"; echo "$TWO_OUT"; exit 1; }
+REP_OUT="$(cargo run --release --bin bigfcm -- session \
+    --dataset susy --records 4096 --clusters 3 --iters 4 \
+    --shards 2 --merge representative)"
+echo "$REP_OUT" | grep -q "merge objective delta: last" \
+    || { echo "sharded smoke: representative merge reported no objective delta"; echo "$REP_OUT"; exit 1; }
+echo "sharded smoke: exact merge bitwise, representative delta reported"
+
 echo "== serve front smoke (bigfcm serve) =="
 # The network front end-to-end on an ephemeral port: start the server
 # (quick-trains a `default` model), score one record over the socket,
