@@ -303,6 +303,37 @@ fn main() {
         session.sim.total_s(),
     );
 
+    // Tracing overhead A/B (observability acceptance gate: the disabled
+    // tracer must cost ≤ 3% on the hot path). Same chunked tiled-kernel
+    // pass both times — one span per chunk, the way map tasks trace —
+    // with the global tracer off, then on.
+    let chunk = 4_096usize;
+    let chunks: Vec<Matrix> = (0..N / chunk)
+        .map(|i| data.features.slice_rows(i * chunk, (i + 1) * chunk))
+        .collect();
+    let tracer = bigfcm::telemetry::trace::global();
+    let mut chunked_pass = || {
+        for (i, x) in chunks.iter().enumerate() {
+            let mut span = tracer.span("map_task", "bench");
+            span.attr("block", i.to_string());
+            std::hint::black_box(fcm_partials_native(x, &v, &w[..chunk], 2.0));
+        }
+    };
+    tracer.enable(false);
+    let t_trace_off = bench("chunked pass (16 spans), tracing off", 5, &mut chunked_pass);
+    tracer.enable(true);
+    let t_trace_on = bench("chunked pass (16 spans), tracing on", 5, &mut chunked_pass);
+    tracer.enable(false);
+    let trace_spans = tracer.drain().spans.len();
+    let trace_overhead = t_trace_on / t_trace_off - 1.0;
+    println!(
+        "trace A/B: off {:.3} ms, on {:.3} ms ({:+.2}% overhead, {} spans recorded)",
+        t_trace_off * 1e3,
+        t_trace_on * 1e3,
+        trace_overhead * 100.0,
+        trace_spans,
+    );
+
     // Machine-readable emission for cross-PR tracking.
     let results = json::Value::Object(
         rows_out
@@ -383,6 +414,15 @@ fn main() {
         ("config_hash", json::s(&hash)),
         ("results", results),
         ("session", session_obj),
+        (
+            "trace",
+            json::obj(vec![
+                ("off_s", json::num(t_trace_off)),
+                ("on_s", json::num(t_trace_on)),
+                ("overhead_frac", json::num(trace_overhead)),
+                ("spans", json::num(trace_spans as f64)),
+            ]),
+        ),
     ]);
     let path = "BENCH_micro_hotpath.json";
     match std::fs::write(path, json::to_string(&doc)) {

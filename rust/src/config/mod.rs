@@ -188,6 +188,10 @@ pub struct ClusterConfig {
     /// slice of `workers`, its own prefetcher and a derived fault domain.
     /// 1 (the default) is the classic single-engine run.
     pub shards: usize,
+    /// Record hierarchical trace spans (`telemetry::trace`). Off (the
+    /// default) keeps every span site at a single relaxed atomic load;
+    /// `--trace-out` on the CLI switches it on for that run.
+    pub trace: bool,
 }
 
 impl Default for ClusterConfig {
@@ -206,7 +210,26 @@ impl Default for ClusterConfig {
             slab_spill_dir: String::new(),
             adaptive_refresh: true,
             shards: 1,
+            trace: false,
         }
+    }
+}
+
+/// Tracing knobs beyond the on/off switch (the `[trace]` section; see
+/// `crate::telemetry::trace`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceConfig {
+    /// Spans at least this many µs long are logged with their ancestry as
+    /// they are recorded. 0 (the default) disables slow-span logging.
+    pub slow_span_us: u64,
+    /// Retained-span cap; spans past it degrade to per-name aggregation
+    /// rows instead of growing memory.
+    pub max_spans: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { slow_span_us: 0, max_spans: crate::telemetry::trace::DEFAULT_MAX_SPANS }
     }
 }
 
@@ -533,6 +556,7 @@ pub struct Config {
     pub session: SessionConfig,
     pub shard: ShardConfig,
     pub faults: FaultsConfig,
+    pub trace: TraceConfig,
     pub backend: Backend,
     /// Directory containing `manifest.json` + `*.hlo.txt`.
     pub artifacts_dir: PathBuf,
@@ -552,6 +576,7 @@ impl Default for Config {
             session: SessionConfig::default(),
             shard: ShardConfig::default(),
             faults: FaultsConfig::default(),
+            trace: TraceConfig::default(),
             backend: Backend::Auto,
             artifacts_dir: PathBuf::from("artifacts"),
             data_dir: PathBuf::from("data_cache"),
@@ -624,6 +649,15 @@ impl Config {
             "serve.tenant_quota" => self.serve.tenant_quota = num!(usize),
             "serve.deadline_us" => self.serve.deadline_us = num!(u64),
             "cluster.shards" => self.cluster.shards = num!(usize),
+            "cluster.trace" => {
+                self.cluster.trace = match value {
+                    "on" | "true" => true,
+                    "off" | "false" => false,
+                    _ => return Err(bad(key, value)),
+                }
+            }
+            "trace.slow_span_us" => self.trace.slow_span_us = num!(u64),
+            "trace.max_spans" => self.trace.max_spans = num!(usize),
             "session.checkpoint_every" => self.session.checkpoint_every = num!(usize),
             "shard.merge" => self.shard.merge = value.parse::<ShardMergeMode>()?,
             "shard.steal_penalty" => self.shard.steal_penalty = num!(f64),
@@ -708,6 +742,9 @@ impl Config {
                 "shard.steal_penalty must be >= 0, got {}",
                 self.shard.steal_penalty
             )));
+        }
+        if self.trace.max_spans == 0 {
+            return Err(Error::Config("trace.max_spans must be >= 1".into()));
         }
         Ok(())
     }
@@ -794,6 +831,26 @@ mod tests {
         let mut c = Config::default();
         c.set_kv("faults.trip_site=block_read").unwrap();
         assert!(c.faults.enabled());
+    }
+
+    #[test]
+    fn trace_keys_dispatch() {
+        let mut c = Config::default();
+        assert!(!c.cluster.trace, "tracing must default off");
+        c.set_kv("cluster.trace=on").unwrap();
+        assert!(c.cluster.trace);
+        c.set_kv("cluster.trace=off").unwrap();
+        assert!(!c.cluster.trace);
+        c.set_kv("cluster.trace=true").unwrap();
+        assert!(c.cluster.trace);
+        assert!(c.set_kv("cluster.trace=maybe").is_err());
+        c.set_kv("trace.slow_span_us=2500").unwrap();
+        c.set_kv("trace.max_spans=1024").unwrap();
+        assert_eq!(c.trace.slow_span_us, 2500);
+        assert_eq!(c.trace.max_spans, 1024);
+        c.validate().unwrap();
+        c.set_kv("trace.max_spans=0").unwrap();
+        assert!(c.validate().is_err(), "a zero span cap must be rejected");
     }
 
     #[test]

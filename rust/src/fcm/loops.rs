@@ -28,6 +28,8 @@ use crate::mapreduce::{
     DistributedCache, Engine, JobStats, MapReduceJob, SessionOptions, ShardMergeMode,
     ShardedEngine, SimCost, SlabState, SpillConfig, StateSlab, TaskCtx, MIB,
 };
+use crate::telemetry::metrics::MetricsRegistry;
+use crate::telemetry::trace;
 
 /// FCM chunk-math variant.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -515,6 +517,71 @@ pub struct SessionRunResult {
     pub sim: SimCost,
 }
 
+impl SessionRunResult {
+    /// Publish this run into `reg`: `session.*` for the run-level
+    /// counters and `job.*` for the per-iteration [`JobStats`] rows summed
+    /// across the run. Counters carry exact integers, so the registry is a
+    /// bit-identical view of the legacy struct — the CLI report, bench
+    /// JSON and wire exposition all read these names instead of
+    /// re-deriving their own totals.
+    pub fn publish_metrics(&self, reg: &MetricsRegistry) {
+        reg.set_counter("session.jobs", self.jobs as u64);
+        reg.set_counter("session.iterations", self.result.iterations as u64);
+        reg.set_counter("session.records_pruned", self.records_pruned);
+        reg.set_counter("session.records_pruned_quant", self.records_pruned_quant);
+        reg.set_counter("session.quant_sidecar_bytes", self.quant_sidecar_bytes);
+        reg.set_counter("session.slab_spilled_bytes", self.slab_spilled_bytes);
+        reg.set_counter("session.slab_reloads", self.slab_reloads);
+        reg.set_counter("session.slab_spill_retries", self.slab_spill_retries);
+        reg.set_counter("session.slab_spill_quarantines", self.slab_spill_quarantines);
+        reg.set_counter("session.checkpoints_written", self.checkpoints_written);
+        reg.set_counter("session.checkpoint_bytes", self.checkpoint_bytes);
+        reg.set_counter("session.peak_resident_bytes", self.peak_resident_bytes);
+        reg.set_gauge("session.converged", if self.result.converged { 1.0 } else { 0.0 });
+        reg.set_gauge("session.objective", self.result.objective);
+        reg.set_gauge("session.quant_build_s", self.quant_build_s);
+        reg.set_gauge("session.sim_total_s", self.sim.total_s());
+        reg.set_gauge("session.sim_backoff_s", self.sim.backoff_s);
+        let sum = self.per_iteration.iter().fold(JobStats::default(), |mut acc, s| {
+            acc.wall += s.wall;
+            acc.map_tasks += s.map_tasks;
+            acc.attempts += s.attempts;
+            acc.shuffle_bytes += s.shuffle_bytes;
+            acc.locality_hits += s.locality_hits;
+            acc.locality_steals += s.locality_steals;
+            acc.prefetch_hits += s.prefetch_hits;
+            acc.prefetch_wasted_bytes += s.prefetch_wasted_bytes;
+            acc.read_retries += s.read_retries;
+            acc.read_aborts += s.read_aborts;
+            acc.quarantines += s.quarantines;
+            acc.prefetch_errors += s.prefetch_errors;
+            acc.records_pruned += s.records_pruned;
+            acc.records_pruned_quant += s.records_pruned_quant;
+            acc.quant_sidecar_bytes = acc.quant_sidecar_bytes.max(s.quant_sidecar_bytes);
+            acc.quant_build_s += s.quant_build_s;
+            acc.slab_bytes = acc.slab_bytes.max(s.slab_bytes);
+            acc.slab_evictions = acc.slab_evictions.max(s.slab_evictions);
+            acc.slab_spilled_bytes = acc.slab_spilled_bytes.max(s.slab_spilled_bytes);
+            acc.slab_reloads = acc.slab_reloads.max(s.slab_reloads);
+            acc.slab_spill_retries = acc.slab_spill_retries.max(s.slab_spill_retries);
+            acc.slab_spill_quarantines =
+                acc.slab_spill_quarantines.max(s.slab_spill_quarantines);
+            acc.refresh_cap = acc.refresh_cap.max(s.refresh_cap);
+            acc.shard_steals += s.shard_steals;
+            acc.shard_steal_bytes += s.shard_steal_bytes;
+            acc.combine_depth = acc.combine_depth.max(s.combine_depth);
+            acc.reduce_parts += s.reduce_parts;
+            acc.reduce_wall_s += s.reduce_wall_s;
+            acc.combine_wall_s += s.combine_wall_s;
+            acc.read_wall_s += s.read_wall_s;
+            acc.compute_wall_s += s.compute_wall_s;
+            acc.sim.add(&s.sim);
+            acc
+        });
+        sum.publish_metrics(reg, "job");
+    }
+}
+
 /// Run an FCM (or K-Means) convergence loop over a block store through an
 /// iteration-resident session: every iteration is one engine job, but the
 /// pool, block cache, prefetcher, distributed cache and the sticky pruning
@@ -545,6 +612,10 @@ pub fn run_fcm_session(
         return Err(Error::Clustering("no seed centers".into()));
     }
     let sim_before = engine.clock().cost();
+    let tracer = trace::global();
+    let mut session_span = tracer.span("session", "session");
+    session_span.attr("algo", algo.as_str().to_string());
+    session_span.attr("clusters", v0.rows().to_string());
     // The slab's spill ring sits under the same chaos plan as the engine's
     // block reads: `[faults]` covers every I/O boundary of a session run.
     let fault_plan = engine.options().faults.clone();
@@ -592,6 +663,8 @@ pub fn run_fcm_session(
     let mut prev_shift = f64::INFINITY;
     for it in 1..=params.max_iterations {
         iterations = it;
+        let mut iter_span = tracer.span("iteration", "session");
+        iter_span.attr("iteration", it.to_string());
         cache.put_matrix(KEY_SESSION_CENTERS, v.clone());
         let (partials, mut stats) = session.run_iteration(Arc::clone(&job), Arc::clone(&cache))?;
         let pruned_this = slab.take_records_pruned();
@@ -609,6 +682,10 @@ pub fn run_fcm_session(
         stats.slab_reloads = slab.reloads();
         stats.slab_spill_retries = slab.spill_retries();
         stats.slab_spill_quarantines = slab.spill_quarantines();
+        // Stamp the reported wall onto the trace span so the Chrome rows
+        // agree with `JobStats` exactly (same number, one source).
+        iter_span.set_dur(stats.wall);
+        iter_span.attr("pruned", pruned_this.to_string());
         records_pruned_total += pruned_this;
         records_pruned_quant_total += pruned_quant_this;
         quant_sidecar_peak = quant_sidecar_peak.max(sidecar_bytes_this);
@@ -804,6 +881,10 @@ pub fn run_fcm_session_sharded(
     }
     let shards = engine.shards();
     let sim_before = engine.clock().cost();
+    let tracer = trace::global();
+    let mut session_span = tracer.span("session", "session");
+    session_span.attr("algo", algo.as_str().to_string());
+    session_span.attr("shards", shards.to_string());
     let slab_budget = if prune.enabled { (prune.slab_bytes / shards as u64).max(1) } else { 0 };
     let slabs: Vec<Arc<StateSlab<BlockBounds>>> = (0..shards)
         .map(|i| {
@@ -859,6 +940,8 @@ pub fn run_fcm_session_sharded(
     let mut prev_shift = f64::INFINITY;
     for it in 1..=params.max_iterations {
         iterations = it;
+        let mut iter_span = tracer.span("iteration", "session");
+        iter_span.attr("iteration", it.to_string());
         cache.put_matrix(KEY_SESSION_CENTERS, v.clone());
         let (segments, mut shard_stats, cfg) = session.run_iteration_segments(&jobs, &cache)?;
         // Drain each shard's slab counters into its own stats row — the
@@ -976,6 +1059,10 @@ pub fn run_fcm_session_sharded(
         let mut merged =
             session.finalize_iteration(&shard_stats, global_wall, reduce_wall_s, merges, reduce_parts);
         merged.refresh_cap = refresh_cap;
+        // Same-number contract as the single-engine loop: the iteration
+        // span reports exactly the merged row's wall.
+        iter_span.set_dur(merged.wall);
+        iter_span.attr("pruned", pruned_this.to_string());
         weights.clone_from_slice(&partials.w_acc);
         objective = partials.objective;
         let v_new = partials.into_centers(&v);

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! bigfcm run         --dataset susy --records 100000 --clusters 6 [--save-model m.bfm]
-//! bigfcm session     --iters 50 --bounds elkan [--save-model m.bfm]
+//! bigfcm session     --iters 50 --bounds elkan [--save-model m.bfm] [--trace-out t.json --timeline]
 //! bigfcm serve       --port 0 [--model id=path.bfm]... | --connect ADDR --send CMD
 //! bigfcm serve-bench --clients 4 --records 500 [--open-loop --rate 2000] [--json BENCH_serve.json]
 //! bigfcm score       --model m.bfm --out DIR [--store DIR | --dataset susy]
@@ -38,14 +38,16 @@ use bigfcm::fcm::{assign_hard, KernelBackend, SessionCheckpoint};
 use bigfcm::faults::FaultPlan;
 use bigfcm::hdfs::BlockStore;
 use bigfcm::json;
-use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions, ShardMergeMode, ShardedEngine, MIB};
+use bigfcm::mapreduce::{
+    Engine, EngineOptions, SessionOptions, ShardMergeMode, ShardedEngine, SimCost, MIB,
+};
 use bigfcm::metrics::confusion_accuracy;
 use bigfcm::runtime::ResolvedBackend;
 use bigfcm::serve::{
     client_call, run_score_job, FrontOptions, ModelBundle, ModelRegistry, ScoreService,
     ServeFront, ServeOptions,
 };
-use bigfcm::telemetry::human_duration;
+use bigfcm::telemetry::{chrome_trace_json, human_duration, metrics, trace};
 
 /// CLI result: any error renders via Display at top level (offline build —
 /// no anyhow, so context is folded into the message at the wrap site).
@@ -231,6 +233,40 @@ fn engine_options_of(cfg: &Config) -> CliResult<EngineOptions> {
     Ok(opts)
 }
 
+/// Arm the global tracer from `cluster.trace` / `trace.*` config and the
+/// `--trace-out` flag; returns the Chrome-trace output path when given.
+/// Tracing stays fully off (the near-zero-cost disabled path) unless one
+/// of the two asks for it.
+fn arm_tracing(args: &Args, cfg: &Config) -> Option<String> {
+    let out = args.get("trace-out").map(str::to_string);
+    if cfg.cluster.trace || out.is_some() {
+        let tracer = trace::global();
+        tracer.set_slow_span_us(cfg.trace.slow_span_us);
+        tracer.set_max_spans(cfg.trace.max_spans);
+        tracer.enable(true);
+    }
+    out
+}
+
+/// Drain the tracer into Chrome tracing / Perfetto JSON at `path`, with
+/// the modelled cost classes laid end-to-end as a second process's rows.
+fn write_trace(path: &str, sim: &SimCost) -> CliResult<()> {
+    let data = trace::global().drain();
+    let sim_rows = [
+        ("job_startup", sim.job_startup_s),
+        ("task_launch", sim.task_launch_s),
+        ("hdfs_io", sim.hdfs_io_s),
+        ("shuffle", sim.shuffle_s),
+        ("compute", sim.compute_s),
+        ("net", sim.net_s),
+        ("backoff", sim.backoff_s),
+    ];
+    let doc = chrome_trace_json(&data, &sim_rows);
+    std::fs::write(path, doc).map_err(|e| format!("writing {path}: {e}"))?;
+    println!("trace: wrote {path} ({} spans, {} dropped)", data.spans.len(), data.dropped);
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> CliResult<()> {
     let cfg = load_config(args)?;
     let common = resolve_common_args(args, &cfg, "records", 50000, 2)?;
@@ -353,6 +389,7 @@ fn cmd_session(args: &Args) -> CliResult<()> {
         cfg.set("shard.steal_penalty", v)?;
     }
     cfg.validate()?;
+    let trace_out = arm_tracing(args, &cfg);
     let common = resolve_common_args(args, &cfg, "records", 50000, 2)?;
     let (c, m, eps) = (common.clusters, common.fuzzifier, common.epsilon);
     cfg.fcm.clusters = c;
@@ -489,20 +526,48 @@ fn cmd_session(args: &Args) -> CliResult<()> {
             s.slab_reloads,
         );
     }
+    if args.has("timeline") {
+        // Per-iteration phase breakdown from the same JobStats rows the
+        // trace spans are stamped from (read/compute are summed worker
+        // seconds, so they can exceed the elapsed wall).
+        println!(
+            "timeline:  iter |   read_s | compute_s |   pruned | combine_s | reduce_s |   wall_s \
+             |    sim_s"
+        );
+        for (i, s) in run.per_iteration.iter().enumerate() {
+            println!(
+                "timeline:  {:>4} | {:>8.3} | {:>9.3} | {:>8} | {:>9.3} | {:>8.3} | {:>8.3} | \
+                 {:>8.3}",
+                i + 1,
+                s.read_wall_s,
+                s.compute_wall_s,
+                s.records_pruned,
+                s.combine_wall_s,
+                s.reduce_wall_s,
+                s.wall.as_secs_f64(),
+                s.sim.total_s(),
+            );
+        }
+    }
     println!(
         "{} iterations ({} engine jobs), converged={}, objective {:.6e}",
         run.result.iterations, run.jobs, run.result.converged, run.result.objective
     );
+    // Publish into the unified registry and report *from* it — the
+    // counters line is a registry read, not a second hand-summed view.
+    let reg = metrics::global();
+    run.publish_metrics(reg);
+    let rc = |k: &str| reg.value(k).unwrap_or(0.0) as u64;
     println!(
         "session counters: records_pruned {}, records_pruned_quant {}, quant_sidecar_bytes {}, \
          quant_build_s {:.3}, slab_spilled_bytes {}, slab_reloads {}, peak resident {:.1} MiB",
-        run.records_pruned,
-        run.records_pruned_quant,
-        run.quant_sidecar_bytes,
-        run.quant_build_s,
-        run.slab_spilled_bytes,
-        run.slab_reloads,
-        run.peak_resident_bytes as f64 / MIB as f64,
+        rc("session.records_pruned"),
+        rc("session.records_pruned_quant"),
+        rc("session.quant_sidecar_bytes"),
+        reg.value("session.quant_build_s").unwrap_or(0.0),
+        rc("session.slab_spilled_bytes"),
+        rc("session.slab_reloads"),
+        rc("session.peak_resident_bytes") as f64 / MIB as f64,
     );
     if let Some(sh) = &sharded {
         println!(
@@ -582,6 +647,9 @@ fn cmd_session(args: &Args) -> CliResult<()> {
         let bytes = bundle.save(std::path::Path::new(path))?;
         println!("saved model bundle: {path} ({bytes} B)");
     }
+    if let Some(path) = &trace_out {
+        write_trace(path, &run.sim)?;
+    }
     Ok(())
 }
 
@@ -644,6 +712,7 @@ fn train_quick_bundle(
 /// meaningful. Reports into the console and (optionally) a bench JSON.
 fn cmd_serve_bench(args: &Args) -> CliResult<()> {
     let cfg = load_config(args)?;
+    let trace_out = arm_tracing(args, &cfg);
     let common = resolve_common_args(args, &cfg, "dataset-records", 20000, 4)?;
     let open_loop = args.has("open-loop");
     let clients: usize = args.get_or("clients", "4").parse()?;
@@ -834,6 +903,11 @@ fn cmd_serve_bench(args: &Args) -> CliResult<()> {
     );
     let coalesced = stats.batch_fill > 1.0;
     println!("coalescing: {}", if coalesced { "yes (batch fill > 1)" } else { "NO" });
+    // The bench's serving counters land in the unified registry too, so
+    // the emitted JSON carries the registry snapshot alongside the legacy
+    // per-struct object.
+    let reg = metrics::global();
+    stats.publish_metrics(reg, "serve.bench");
     let json_path = args.get_or("json", "none");
     if json_path != "none" {
         let mut obj = match stats.to_json() {
@@ -870,6 +944,7 @@ fn cmd_serve_bench(args: &Args) -> CliResult<()> {
             ),
             ("config_hash", json::s(hash)),
             ("serve", json::Value::Object(obj)),
+            ("metrics", reg.to_json()),
         ]);
         std::fs::write(&json_path, json::to_string(&doc))
             .map_err(|e| format!("writing {json_path}: {e}"))?;
@@ -881,6 +956,12 @@ fn cmd_serve_bench(args: &Args) -> CliResult<()> {
             stats.batch_fill
         );
     }
+    if let Some(path) = &trace_out {
+        // Close first so the serve-root manual span lands in the drain
+        // (close() is idempotent; the Drop-time close becomes a no-op).
+        service.close();
+        write_trace(path, &SimCost::default())?;
+    }
     Ok(())
 }
 
@@ -888,6 +969,7 @@ fn cmd_serve_bench(args: &Args) -> CliResult<()> {
 /// top-k sparse membership rows written to a new block store.
 fn cmd_score(args: &Args) -> CliResult<()> {
     let cfg = load_config(args)?;
+    let trace_out = arm_tracing(args, &cfg);
     let common = resolve_common_args(args, &cfg, "records", 50000, 2)?;
     let out_dir = args
         .get("out")
@@ -978,6 +1060,10 @@ fn cmd_score(args: &Args) -> CliResult<()> {
             cache.prefetch_errors(),
             cache.backoff_seconds(),
         );
+    }
+    if let Some(path) = &trace_out {
+        let sim = engine.clock().cost();
+        write_trace(path, &sim)?;
     }
     Ok(())
 }
@@ -1149,7 +1235,7 @@ fn main() -> CliResult<()> {
                  \u{20}           --checkpoint PATH --checkpoint-every N\n\
                  \u{20}           --resume PATH | --resume-or-cold PATH\n\
                  \u{20}           --shards N --merge exact|representative\n\
-                 \u{20}           --steal-penalty X)\n\
+                 \u{20}           --steal-penalty X --trace-out t.json --timeline)\n\
                  \u{20}           with per-iteration + per-shard counters\n\
                  serve       network scoring front over a multi-model registry\n\
                  \u{20}           server: --host H --port P [--port-file PATH]\n\
@@ -1157,7 +1243,7 @@ fn main() -> CliResult<()> {
                  \u{20}           [--deadline-us U]\n\
                  \u{20}           client: --connect ADDR --send \"score default - normal 1,2,3\"\n\
                  \u{20}           (wire verbs: ping, health, score, reload, retire, stats,\n\
-                 \u{20}           shutdown)\n\
+                 \u{20}           metrics, shutdown)\n\
                  serve-bench load harness for the online scoring service\n\
                  \u{20}           (--clients N --records R [--model PATH] [--max-batch B]\n\
                  \u{20}           [--linger-us U] [--queue-cap Q] [--tenant-quota N]\n\
@@ -1172,6 +1258,9 @@ fn main() -> CliResult<()> {
                  \n\
                  common:     --config file.toml --set sec.key=val --backend native|pjrt|auto|shim\n\
                  \u{20}           --artifacts DIR --seed N\n\
+                 \u{20}           tracing: --trace-out t.json on session/score/serve-bench\n\
+                 \u{20}           (Chrome/Perfetto JSON; --set cluster.trace=on,\n\
+                 \u{20}           --set trace.slow_span_us=U for slow-span logs)\n\
                  \u{20}           chaos: --set faults.seed=S --set faults.block_read=R ... (see\n\
                  \u{20}           [faults] config; deterministic per seed, off by default)"
             );

@@ -32,6 +32,7 @@
 //!   [`JobStats::reduce_parts`] and [`JobStats::combine_depth`] surface
 //!   the effect per job.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -45,6 +46,8 @@ use crate::mapreduce::cache::{BlockCache, ReadSource, MIB};
 use crate::mapreduce::simclock::{SimClock, SimCost, TaskSample};
 use crate::mapreduce::{DistributedCache, MapReduceJob, TaskCtx};
 use crate::prng::Pcg;
+use crate::telemetry::metrics::MetricsRegistry;
+use crate::telemetry::trace;
 use crate::threadpool::{QueueAhead, ThreadPool};
 
 /// Hadoop's default max attempts per task.
@@ -117,7 +120,7 @@ pub struct JobRunCfg {
 }
 
 /// Statistics of one executed job.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct JobStats {
     pub name: String,
     /// Real elapsed time of the whole job on this machine.
@@ -206,6 +209,55 @@ pub struct JobStats {
     /// Combiner outputs that reached the reduce phase (= `map_tasks` for a
     /// flat reduce, O(workers + log blocks) when tree-combined).
     pub reduce_parts: usize,
+    /// Real seconds map tasks spent reading their input block (demand
+    /// reads through the cache), summed across workers.
+    pub read_wall_s: f64,
+    /// Real seconds map tasks spent inside `map_combine`, summed across
+    /// workers (Σ of the per-task compute samples).
+    pub compute_wall_s: f64,
+}
+
+impl JobStats {
+    /// Publish every numeric field into `reg` under `{prefix}.*` names.
+    /// Counters carry the exact integer (no float round-trip), so the
+    /// registry view stays bit-identical with the legacy struct; walls and
+    /// modelled seconds go in as gauges.
+    pub fn publish_metrics(&self, reg: &MetricsRegistry, prefix: &str) {
+        let c = |k: &str, v: u64| reg.set_counter(&format!("{prefix}.{k}"), v);
+        let g = |k: &str, v: f64| reg.set_gauge(&format!("{prefix}.{k}"), v);
+        c("map_tasks", self.map_tasks as u64);
+        c("attempts", self.attempts as u64);
+        c("shuffle_bytes", self.shuffle_bytes);
+        c("locality_hits", self.locality_hits as u64);
+        c("locality_steals", self.locality_steals as u64);
+        c("prefetch_hits", self.prefetch_hits);
+        c("prefetch_wasted_bytes", self.prefetch_wasted_bytes);
+        c("read_retries", self.read_retries);
+        c("read_aborts", self.read_aborts);
+        c("quarantines", self.quarantines);
+        c("prefetch_errors", self.prefetch_errors);
+        c("records_pruned", self.records_pruned);
+        c("records_pruned_quant", self.records_pruned_quant);
+        c("quant_sidecar_bytes", self.quant_sidecar_bytes);
+        c("slab_bytes", self.slab_bytes);
+        c("slab_evictions", self.slab_evictions);
+        c("slab_spilled_bytes", self.slab_spilled_bytes);
+        c("slab_reloads", self.slab_reloads);
+        c("slab_spill_retries", self.slab_spill_retries);
+        c("slab_spill_quarantines", self.slab_spill_quarantines);
+        c("refresh_cap", self.refresh_cap as u64);
+        c("shard_steals", self.shard_steals as u64);
+        c("shard_steal_bytes", self.shard_steal_bytes);
+        c("combine_depth", self.combine_depth as u64);
+        c("reduce_parts", self.reduce_parts as u64);
+        g("wall_s", self.wall.as_secs_f64());
+        g("sim_total_s", self.sim.total_s());
+        g("quant_build_s", self.quant_build_s);
+        g("reduce_wall_s", self.reduce_wall_s);
+        g("combine_wall_s", self.combine_wall_s);
+        g("read_wall_s", self.read_wall_s);
+        g("compute_wall_s", self.compute_wall_s);
+    }
 }
 
 /// The MapReduce engine. One engine per pipeline run; owns the worker pool,
@@ -242,6 +294,8 @@ fn prefetch_loop(rx: Receiver<PrefetchMsg>, cache: Arc<BlockCache>) {
     while let Ok(msg) = rx.recv() {
         match msg {
             PrefetchMsg::Fetch(store, id) => {
+                let mut span = trace::global().span("prefetch", "mapreduce");
+                span.attr("block", id.to_string());
                 // Counted by the cache as `prefetch_errors`; see above.
                 let _ = cache.prefetch(&store, id);
             }
@@ -348,6 +402,15 @@ impl Engine {
         if n_blocks == 0 {
             return Err(Error::Job("no input blocks".into()));
         }
+        // Job span: ambient on the driver thread (nests under an open
+        // iteration span), explicit parent of the worker-side task spans.
+        let tracer = trace::global();
+        let mut job_span = tracer.span("job", "mapreduce");
+        job_span.attr("name", job.name().to_string());
+        job_span.attr("blocks", n_blocks.to_string());
+        let job_span_id = job_span.id();
+        // Demand-read wall accumulated by map tasks across workers.
+        let read_nanos = Arc::new(AtomicU64::new(0));
 
         // Pre-draw fault schedules so parallel execution stays deterministic:
         // fail_counts[t] = how many attempts of task t fail before success.
@@ -404,6 +467,7 @@ impl Engine {
         // `Sender` predates `Sync` in older std releases; the Mutex makes
         // the shared map closure unambiguously thread-safe either way.
         let prefetch_for_map = self.prefetch_tx.clone().map(Mutex::new);
+        let read_for_map = Arc::clone(&read_nanos);
 
         let (outs, samples, locality, combine_depth, combine_wall_s) = if use_tree {
             // Worker-side tree combine: map outputs merge pairwise on the
@@ -429,6 +493,8 @@ impl Engine {
                         fail_counts[id],
                         id,
                         ahead,
+                        &read_for_map,
+                        job_span_id,
                     )?;
                     let _ = sample_tx
                         .lock()
@@ -441,8 +507,11 @@ impl Engine {
                         (Ok(x), Ok(y)) => {
                             let t0 = Instant::now();
                             let merged = job_for_combine.combine(x, y);
+                            let el = t0.elapsed();
                             *combine_wall_in.lock().expect("combine wall poisoned") +=
-                                t0.elapsed().as_secs_f64();
+                                el.as_secs_f64();
+                            trace::global()
+                                .record_manual("combine", "mapreduce", job_span_id, el, Vec::new());
                             merged
                         }
                         (Err(e), _) | (_, Err(e)) => Err(e),
@@ -485,6 +554,8 @@ impl Engine {
                         fail_counts[id],
                         id,
                         ahead,
+                        &read_for_map,
+                        job_span_id,
                     )
                     .map(|(out, sample)| TaskResult { out, sample })
                 },
@@ -512,7 +583,10 @@ impl Engine {
         // Reduce phase (single reducer, as the paper's default).
         let reduce_ctx = TaskCtx { cache: &cache, task_id: usize::MAX, attempt: 0, doomed: false };
         let t0 = Instant::now();
-        let output = job.reduce(outs, &reduce_ctx)?;
+        let output = {
+            let _reduce_span = tracer.span("reduce", "mapreduce");
+            job.reduce(outs, &reduce_ctx)?
+        };
         let reduce_wall_s = t0.elapsed().as_secs_f64();
 
         let mut oh = self.overhead.clone();
@@ -585,7 +659,11 @@ impl Engine {
             combine_wall_s,
             combine_depth,
             reduce_parts,
+            read_wall_s: read_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            compute_wall_s: samples.iter().map(|s| s.compute_wall_s).sum(),
         };
+        // Stamp the measured wall so the trace and the report agree exactly.
+        job_span.set_dur(stats.wall);
         Ok((output, stats))
     }
 
@@ -617,6 +695,14 @@ impl Engine {
         if n == 0 {
             return Err(Error::Job("no input blocks".into()));
         }
+        // Ambient job span: on a shard runner thread this nests under the
+        // shard span the sharded engine opened around this call.
+        let tracer = trace::global();
+        let mut job_span = tracer.span("job", "mapreduce");
+        job_span.attr("name", job.name().to_string());
+        job_span.attr("blocks", n.to_string());
+        let job_span_id = job_span.id();
+        let read_nanos = Arc::new(AtomicU64::new(0));
 
         // Pre-draw fault schedules in local task order (the id list is
         // fixed at plan time, so the schedule is a pure function of this
@@ -660,6 +746,7 @@ impl Engine {
         let blocks_for_map = Arc::clone(&self.block_cache);
         let prefetch_for_map = self.prefetch_tx.clone().map(Mutex::new);
         let ids_for_map = Arc::new(block_ids.to_vec());
+        let read_for_map = Arc::clone(&read_nanos);
 
         let map_one = {
             let ids = Arc::clone(&ids_for_map);
@@ -680,6 +767,8 @@ impl Engine {
                     fail_counts[id],
                     ids[id],
                     ahead,
+                    &read_for_map,
+                    job_span_id,
                 )
             }
         };
@@ -708,8 +797,11 @@ impl Engine {
                         (Ok(x), Ok(y)) => {
                             let t0 = Instant::now();
                             let merged = job_for_combine.combine(x, y);
+                            let el = t0.elapsed();
                             *combine_wall_in.lock().expect("combine wall poisoned") +=
-                                t0.elapsed().as_secs_f64();
+                                el.as_secs_f64();
+                            trace::global()
+                                .record_manual("combine", "mapreduce", job_span_id, el, Vec::new());
                             merged
                         }
                         (Err(e), _) | (_, Err(e)) => Err(e),
@@ -809,7 +901,10 @@ impl Engine {
             combine_wall_s,
             combine_depth,
             reduce_parts,
+            read_wall_s: read_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            compute_wall_s: samples.iter().map(|s| s.compute_wall_s).sum(),
         };
+        job_span.set_dur(stats.wall);
         Ok((segments, stats))
     }
 
@@ -859,7 +954,14 @@ fn run_map_task<J: MapReduceJob>(
     fails: usize,
     id: usize,
     ahead: QueueAhead,
+    read_nanos: &AtomicU64,
+    job_span: u64,
 ) -> Result<(J::MapOut, TaskSample)> {
+    // Worker-side task span: explicit parent (the driver's job span lives
+    // on another thread), ambient for the spill/reload spans the slab may
+    // open while this task computes.
+    let mut task_span = trace::global().span_child("map_task", "mapreduce", job_span);
+    task_span.attr("block", id.to_string());
     // Hint the prefetcher *before* paying our own read, so they overlap.
     if let (Some(tx), Some(next)) = (prefetch, ahead.next) {
         let tx = tx.lock().expect("prefetch sender poisoned");
@@ -880,7 +982,9 @@ fn run_map_task<J: MapReduceJob>(
         // pool (which collects per-task Results) stays fully reusable.
         return Err(Error::TaskFailed { task: id, attempts: MAX_ATTEMPTS });
     }
+    let t_read = Instant::now();
     let (block, source) = blocks.get_or_read_traced(store, id)?;
+    read_nanos.fetch_add(t_read.elapsed().as_nanos() as u64, Ordering::Relaxed);
     let bytes = match source {
         ReadSource::Cached => 0,
         ReadSource::Miss | ReadSource::Prefetched => store.blocks()[id].bytes,
@@ -897,6 +1001,7 @@ fn run_map_task<J: MapReduceJob>(
             attempt += 1;
             continue;
         }
+        task_span.attr("attempts", (attempt + 1).to_string());
         return out.map(|o| {
             (o, TaskSample { compute_wall_s, input_bytes: bytes, attempts: attempt + 1 })
         });

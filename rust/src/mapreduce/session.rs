@@ -50,6 +50,7 @@ use crate::faults::{backoff_s, FaultPlan, FaultSite, Injected, MAX_READ_RETRIES}
 use crate::hdfs::{spill_slot_path as slot_path, BlockStore};
 use crate::mapreduce::engine::{Engine, JobRunCfg, JobStats};
 use crate::mapreduce::{DistributedCache, MapReduceJob};
+use crate::telemetry::trace;
 
 /// How a session schedules its iterations.
 #[derive(Clone, Copy, Debug)]
@@ -270,6 +271,8 @@ impl<S: SlabState + Default> StateSlab<S> {
     /// is exact. The ring can therefore *delay* results but never change
     /// them or fail a session.
     fn read_slot_recovered(&self, path: &PathBuf) -> (S, u64) {
+        // Ambient: nests under the worker's open map_task span.
+        let _span = trace::global().span("spill_reload", "session");
         let plan = self.spill.as_ref().and_then(|c| c.faults.as_ref());
         let mut attempt: u32 = 0;
         loop {
@@ -538,6 +541,8 @@ impl<S: SlabState + Default> StateSlab<S> {
                 // an unwritable ring: counted eviction, slot dropped, the
                 // block recomputes exactly on its next pass.
                 (Some(img), true) if !write_faulted => {
+                    let mut span = trace::global().span("spill", "session");
+                    span.attr("block", id.to_string());
                     let path = slot_path(&cfg.dir, id);
                     if std::fs::write(&path, img).is_ok() {
                         Some(path)

@@ -50,6 +50,7 @@ use crate::mapreduce::engine::{Engine, EngineOptions, JobRunCfg, JobStats};
 use crate::mapreduce::session::SessionOptions;
 use crate::mapreduce::simclock::{SimClock, SimCost};
 use crate::mapreduce::{DistributedCache, MapReduceJob, TaskCtx};
+use crate::telemetry::trace;
 
 /// How the N per-shard partials merge into the global result.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -414,14 +415,23 @@ impl ShardedEngine {
         let total = self.plan.total_blocks;
         let engines = &mut self.engines;
         let plan = &self.plan;
+        // Shard spans parent to whatever span is ambient on the driver
+        // (the iteration span during sessions); the per-shard job span
+        // then nests under the shard via the runner thread's ambient stack.
+        let trace_parent = trace::current_span_id();
         let results: Vec<Result<(Vec<((usize, usize), J::MapOut)>, JobStats)>> =
             std::thread::scope(|scope| {
                 let mut handles = Vec::with_capacity(engines.len());
-                for ((engine, slice), job) in engines.iter_mut().zip(&plan.slices).zip(jobs) {
+                for (shard_idx, ((engine, slice), job)) in
+                    engines.iter_mut().zip(&plan.slices).zip(jobs).enumerate()
+                {
                     let store = Arc::clone(store);
                     let cache = Arc::clone(cache);
                     let job = Arc::clone(job);
                     handles.push(scope.spawn(move || {
+                        let mut shard_span =
+                            trace::global().span_child("shard", "mapreduce", trace_parent);
+                        shard_span.attr("shard", shard_idx.to_string());
                         engine.run_job_map_segments(
                             job,
                             &store,
@@ -532,6 +542,8 @@ impl ShardedEngine {
             combine_wall_s: 0.0,
             combine_depth: 0,
             reduce_parts,
+            read_wall_s: 0.0,
+            compute_wall_s: 0.0,
         };
         for s in shard_stats {
             merged.map_tasks += s.map_tasks;
@@ -560,6 +572,8 @@ impl ShardedEngine {
             merged.shard_steal_bytes += s.shard_steal_bytes;
             merged.combine_wall_s += s.combine_wall_s;
             merged.combine_depth = merged.combine_depth.max(s.combine_depth);
+            merged.read_wall_s += s.read_wall_s;
+            merged.compute_wall_s += s.compute_wall_s;
         }
         merged
     }

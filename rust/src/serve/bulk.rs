@@ -35,6 +35,7 @@ use crate::fcm::{Kernel, KernelBackend, QuantMode, QuantSidecar};
 use crate::hdfs::{BlockStore, BlockStoreWriter};
 use crate::mapreduce::{DistributedCache, Engine, JobStats, MapReduceJob, TaskCtx};
 use crate::serve::bundle::ModelBundle;
+use crate::telemetry::{metrics, trace};
 
 /// Mergeable per-block aggregates the reduce folds (the actual membership
 /// rows go to disk in the map phase, not through the shuffle).
@@ -296,6 +297,9 @@ pub fn run_score_job(
             bundle.dims()
         )));
     }
+    let mut score_span = trace::global().span("score", "serve");
+    score_span.attr("blocks", store.num_blocks().to_string());
+    score_span.attr("top_k", top_k.to_string());
     let k = top_k.max(1).min(bundle.clusters());
     let writer = BlockStoreWriter::create(
         format!("{}-memberships", store.name()),
@@ -331,6 +335,9 @@ pub fn run_score_job(
     let writer = st.writer.take().expect("writer present until finish");
     engine.charge_scan(writer.total_bytes());
     let out = writer.finish()?;
+    // One source of truth: the bulk job's counters land in the unified
+    // registry under `score.*` alongside the legacy stats struct.
+    stats.publish_metrics(metrics::global(), "score");
     Ok(ScoreJobOutcome { store: out, totals, stats, top_k: k })
 }
 

@@ -20,7 +20,8 @@
 //! | `score <model> <tenant> <lane> <v0,v1,...>` | `ok <generation> <u0,u1,...>` |
 //! | `reload <model> <bundle-path>` | `ok <generation>` |
 //! | `retire <model>` | `ok retired` |
-//! | `stats` | `ok <json>` |
+//! | `stats` | `ok <json>` (front + registry + unified metrics snapshot) |
+//! | `metrics` | `ok\n<text>` (Prometheus-style exposition of the registry) |
 //! | `shutdown` | `ok shutting-down` (front begins draining) |
 //!
 //! Application errors (unknown model, over-quota tenant, bad record)
@@ -50,6 +51,7 @@ use crate::mapreduce::SimClock;
 use crate::serve::bundle::ModelBundle;
 use crate::serve::registry::ModelRegistry;
 use crate::serve::service::Lane;
+use crate::telemetry::metrics;
 use crate::threadpool::ThreadPool;
 
 /// Knobs of one [`ServeFront`].
@@ -119,6 +121,20 @@ impl FrontStats {
             ("conn_drops", json::num(self.conn_drops as f64)),
             ("injected_wait_s", json::num(self.injected_wait_s)),
         ])
+    }
+
+    /// Publish into `reg` under `front.*` — the unified-registry view the
+    /// wire `stats` and `metrics` verbs expose.
+    pub fn publish_metrics(&self, reg: &crate::telemetry::metrics::MetricsRegistry) {
+        reg.set_counter("front.connections", self.connections);
+        reg.set_counter("front.frames", self.frames);
+        reg.set_counter("front.framing_errors", self.framing_errors);
+        reg.set_counter("front.bytes_in", self.bytes_in);
+        reg.set_counter("front.bytes_out", self.bytes_out);
+        reg.set_counter("front.scored", self.scored);
+        reg.set_counter("front.conn_drops", self.conn_drops);
+        reg.set_gauge("front.modelled_net_s", self.modelled_net_s);
+        reg.set_gauge("front.injected_wait_s", self.injected_wait_s);
     }
 }
 
@@ -380,6 +396,22 @@ fn dispatch(sh: &FrontShared, cmd: &str) -> String {
     }
 }
 
+/// Snapshot the front's own counters (the `front.*` half of `stats`).
+fn front_stats(sh: &FrontShared) -> FrontStats {
+    let cost = sh.clock.lock().expect("front clock poisoned").cost();
+    FrontStats {
+        connections: sh.connections.load(Ordering::Relaxed),
+        frames: sh.frames.load(Ordering::Relaxed),
+        framing_errors: sh.framing_errors.load(Ordering::Relaxed),
+        bytes_in: sh.bytes_in.load(Ordering::Relaxed),
+        bytes_out: sh.bytes_out.load(Ordering::Relaxed),
+        scored: sh.scored.load(Ordering::Relaxed),
+        modelled_net_s: cost.net_s,
+        conn_drops: sh.conn_drops.load(Ordering::Relaxed),
+        injected_wait_s: cost.backoff_s,
+    }
+}
+
 fn dispatch_inner(sh: &FrontShared, cmd: &str) -> Result<String> {
     let mut parts = cmd.split_whitespace();
     let verb = parts.next().unwrap_or("");
@@ -453,27 +485,27 @@ fn dispatch_inner(sh: &FrontShared, cmd: &str) -> Result<String> {
             Ok("ok retired".into())
         }
         "stats" => {
-            let front = FrontStats {
-                connections: sh.connections.load(Ordering::Relaxed),
-                frames: sh.frames.load(Ordering::Relaxed),
-                framing_errors: sh.framing_errors.load(Ordering::Relaxed),
-                bytes_in: sh.bytes_in.load(Ordering::Relaxed),
-                bytes_out: sh.bytes_out.load(Ordering::Relaxed),
-                scored: sh.scored.load(Ordering::Relaxed),
-                modelled_net_s: sh.clock.lock().expect("front clock poisoned").cost().net_s,
-                conn_drops: sh.conn_drops.load(Ordering::Relaxed),
-                injected_wait_s: sh
-                    .clock
-                    .lock()
-                    .expect("front clock poisoned")
-                    .cost()
-                    .backoff_s,
-            };
+            // Refresh the unified registry from the live counters, then
+            // answer from it — the wire view, the CLI report and the
+            // Prometheus exposition all read the same names.
+            let reg = metrics::global();
+            let front = front_stats(sh);
+            front.publish_metrics(reg);
+            sh.registry.publish_metrics(reg);
             let doc = json::obj(vec![
                 ("front", front.to_json()),
                 ("registry", sh.registry.stats_json()),
+                ("metrics", reg.to_json()),
             ]);
             Ok(format!("ok {}", json::to_string(&doc)))
+        }
+        "metrics" => {
+            // Prometheus-style text exposition of the unified registry,
+            // refreshed from the live counters on every call.
+            let reg = metrics::global();
+            front_stats(sh).publish_metrics(reg);
+            sh.registry.publish_metrics(reg);
+            Ok(format!("ok\n{}", reg.prometheus_text()))
         }
         "shutdown" => {
             sh.shutdown.store(true, Ordering::SeqCst);

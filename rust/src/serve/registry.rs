@@ -120,6 +120,17 @@ impl ModelRegistry {
         self.reloads.load(Ordering::Relaxed)
     }
 
+    /// Publish the registry-wide reload counter and every model's
+    /// [`crate::serve::ServeStats`] into `reg` under `serve.{id}.*` — the
+    /// unified-registry view behind the wire `stats`/`metrics` verbs.
+    pub fn publish_metrics(&self, reg: &crate::telemetry::metrics::MetricsRegistry) {
+        reg.set_counter("serve.reloads", self.reloads());
+        let map = self.models.read().expect("registry lock poisoned");
+        for (id, svc) in map.iter() {
+            svc.stats().publish_metrics(reg, &format!("serve.{id}"));
+        }
+    }
+
     /// Per-model stats snapshot as JSON: `{ "reloads": n, "models":
     /// { id: ServeStats... } }` — the wire front's `stats` verb.
     pub fn stats_json(&self) -> Value {

@@ -65,6 +65,8 @@ use crate::error::{Error, Result};
 use crate::fcm::KernelBackend;
 use crate::json::{self, Value};
 use crate::serve::bundle::ModelBundle;
+use crate::telemetry::metrics::MetricsRegistry;
+use crate::telemetry::trace::{self, ManualSpan};
 
 /// Knobs of one [`ScoreService`].
 #[derive(Clone, Debug)]
@@ -220,6 +222,30 @@ impl ServeStats {
             ("max_us", json::num(self.max_us as f64)),
         ])
     }
+
+    /// Publish into `reg` under `{prefix}.*` — the unified-registry view
+    /// the wire `stats` and `metrics` verbs expose.
+    pub fn publish_metrics(&self, reg: &MetricsRegistry, prefix: &str) {
+        let c = |k: &str, v: u64| reg.set_counter(&format!("{prefix}.{k}"), v);
+        let g = |k: &str, v: f64| reg.set_gauge(&format!("{prefix}.{k}"), v);
+        c("requests", self.requests);
+        c("batches", self.batches);
+        c("errors", self.errors);
+        g("batch_fill", self.batch_fill);
+        g("pad_utilization", self.pad_utilization);
+        c("queue_peak", self.queue_peak);
+        c("backpressure_waits", self.backpressure_waits);
+        c("quota_rejections", self.quota_rejections);
+        c("deprioritized", self.deprioritized);
+        c("deadline_shed", self.deadline_shed);
+        c("overload_shed", self.overload_shed);
+        c("generation", self.generation);
+        g("p50_us", self.p50_us as f64);
+        g("p95_us", self.p95_us as f64);
+        g("p99_us", self.p99_us as f64);
+        g("mean_us", self.mean_us);
+        g("max_us", self.max_us as f64);
+    }
 }
 
 /// One admitted request: the *raw* record (normalization happens at batch
@@ -342,6 +368,11 @@ struct Shared {
     overload_shed: AtomicU64,
     errors: AtomicU64,
     latencies_us: Mutex<LatencyLog>,
+    /// Serve-root trace span: opened at spawn, ended at close. Batch
+    /// spans parent onto `trace_root_id` (the batcher thread has no
+    /// ambient stack linking it to the spawner).
+    trace_root: Mutex<Option<ManualSpan>>,
+    trace_root_id: u64,
 }
 
 /// Builds a [`ScoreService`] — the one construction path. Start from a
@@ -405,6 +436,8 @@ impl ScoreServiceBuilder {
     pub fn spawn(self, backend: Arc<dyn KernelBackend>) -> Result<ScoreService> {
         self.bundle.validate()?;
         let dims = self.bundle.dims();
+        let trace_root = trace::global().begin("serve", "serve", 0);
+        let trace_root_id = trace_root.id;
         let shared = Arc::new(Shared {
             model: RwLock::new(ModelSnap { bundle: Arc::new(self.bundle), generation: 1 }),
             dims,
@@ -430,6 +463,8 @@ impl ScoreServiceBuilder {
             overload_shed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             latencies_us: Mutex::new(LatencyLog::new()),
+            trace_root: Mutex::new(Some(trace_root)),
+            trace_root_id,
         });
         let for_worker = Arc::clone(&shared);
         let worker = std::thread::Builder::new()
@@ -643,6 +678,12 @@ impl ScoreService {
         if let Some(h) = self.worker.lock().expect("worker handle poisoned").take() {
             let _ = h.join();
         }
+        // Close the serve-root span exactly once (close() runs again from
+        // Drop); telemetry locks degrade to drop rather than poison.
+        if let Some(root) = sh.trace_root.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            let requests = sh.requests.load(Ordering::Relaxed);
+            trace::global().end(&root, vec![("requests", requests.to_string())]);
+        }
     }
 }
 
@@ -743,10 +784,15 @@ fn execute_batch(sh: &Shared, batch: Vec<Pending>) {
         bundle.normalize_row(row);
     }
     let mut u = Matrix::zeros(padded, c);
-    match sh
-        .backend
-        .score_chunk(bundle.kernel(), &x, &bundle.centers, bundle.m, &mut u)
-    {
+    let mut batch_span = trace::global().span_child("batch", "serve", sh.trace_root_id);
+    batch_span.attr("live", live.to_string());
+    batch_span.attr("padded", padded.to_string());
+    batch_span.attr("generation", generation.to_string());
+    let scored = {
+        let _score_span = trace::global().span("score_chunk", "serve");
+        sh.backend.score_chunk(bundle.kernel(), &x, &bundle.centers, bundle.m, &mut u)
+    };
+    match scored {
         Ok(()) => {
             for (i, p) in batch.iter().enumerate() {
                 let _ = p.tx.send(Ok(Scored { memberships: u.row(i).to_vec(), generation }));

@@ -1,0 +1,326 @@
+//! Unified metrics registry: typed counter/gauge/histogram handles
+//! registered by name.
+//!
+//! The ad-hoc counter structs (`JobStats`, `SessionRunResult`, `ServeStats`,
+//! `FrontStats`) publish into one registry so the session CLI report, the
+//! bench JSON and the serve wire `stats`/`metrics` verbs all read a single
+//! source of truth. Handles are cheap `Arc` clones around atomics; getting
+//! the same name twice returns a handle to the same cell. A name registered
+//! under a conflicting type yields a *detached* handle (writes go nowhere)
+//! rather than a panic — instrumentation never kills a run, the same
+//! degrade-to-drop contract as [`super::trace`].
+//!
+//! Exposition: [`MetricsRegistry::to_json`] for the JSON replies and
+//! [`MetricsRegistry::prometheus_text`] for the wire `metrics` verb
+//! (Prometheus text format: dots become underscores, histograms flatten to
+//! `_count` / `_sum` / `_max`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use crate::json::{self, Value};
+
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Monotonic (or set-published) integer metric.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn add(&self, by: u64) {
+        self.0.fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Publish an externally accumulated total (stats-struct views).
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value float metric (stored as f64 bits in an atomic).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn add(&self, by: f64) {
+        self.set(self.get() + by);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Default)]
+struct HistState {
+    count: u64,
+    sum: f64,
+    max: f64,
+    /// log2 buckets of the observed value over `[2^-10, 2^21)`.
+    buckets: [u64; 32],
+}
+
+/// Streaming distribution metric with log2 buckets (count/sum/max are the
+/// exposition surface; buckets ride in the JSON snapshot).
+#[derive(Clone)]
+pub struct Histogram(Arc<Mutex<HistState>>);
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        let mut st = relock(&self.0);
+        st.count += 1;
+        st.sum += v;
+        if v > st.max {
+            st.max = v;
+        }
+        let idx = if v > 0.0 {
+            (v.log2().floor() as i64 + 10).clamp(0, 31) as usize
+        } else {
+            0
+        };
+        st.buckets[idx] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        relock(&self.0).count
+    }
+
+    pub fn sum(&self) -> f64 {
+        relock(&self.0).sum
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// One metric's value at snapshot time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram { count: u64, sum: f64, max: f64 },
+}
+
+/// Named metric table. One process-global instance ([`global`]) backs the
+/// binaries; tests construct their own.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Counter handle for `name`, registering it on first use. A type
+    /// clash returns a detached handle.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut inner = relock(&self.inner);
+        match inner
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Counter(Arc::new(AtomicU64::new(0)))))
+        {
+            Metric::Counter(c) => c.clone(),
+            _ => Counter(Arc::new(AtomicU64::new(0))),
+        }
+    }
+
+    /// Gauge handle for `name` (detached on type clash).
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut inner = relock(&self.inner);
+        match inner
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Gauge(Arc::new(AtomicU64::new(0)))))
+        {
+            Metric::Gauge(g) => g.clone(),
+            _ => Gauge(Arc::new(AtomicU64::new(0))),
+        }
+    }
+
+    /// Histogram handle for `name` (detached on type clash).
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut inner = relock(&self.inner);
+        match inner
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Histogram(Arc::new(Mutex::new(HistState::default())))))
+        {
+            Metric::Histogram(h) => h.clone(),
+            _ => Histogram(Arc::new(Mutex::new(HistState::default()))),
+        }
+    }
+
+    /// Convenience: publish a counter value in one call.
+    pub fn set_counter(&self, name: &str, v: u64) {
+        self.counter(name).set(v);
+    }
+
+    /// Convenience: publish a gauge value in one call.
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.gauge(name).set(v);
+    }
+
+    /// Numeric read-back of any metric (histograms read as their sum).
+    pub fn value(&self, name: &str) -> Option<f64> {
+        match relock(&self.inner).get(name)? {
+            Metric::Counter(c) => Some(c.get() as f64),
+            Metric::Gauge(g) => Some(g.get()),
+            Metric::Histogram(h) => Some(h.sum()),
+        }
+    }
+
+    /// Consistent point-in-time view of every registered metric.
+    pub fn snapshot(&self) -> BTreeMap<String, MetricValue> {
+        relock(&self.inner)
+            .iter()
+            .map(|(k, m)| {
+                let v = match m {
+                    Metric::Counter(c) => MetricValue::Counter(c.get()),
+                    Metric::Gauge(g) => MetricValue::Gauge(g.get()),
+                    Metric::Histogram(h) => {
+                        let st = relock(&h.0);
+                        MetricValue::Histogram { count: st.count, sum: st.sum, max: st.max }
+                    }
+                };
+                (k.clone(), v)
+            })
+            .collect()
+    }
+
+    /// JSON object view (`stats` wire verb, bench JSON).
+    pub fn to_json(&self) -> Value {
+        Value::Object(
+            self.snapshot()
+                .into_iter()
+                .map(|(k, v)| {
+                    let jv = match v {
+                        MetricValue::Counter(c) => json::num(c as f64),
+                        MetricValue::Gauge(g) => json::num(g),
+                        MetricValue::Histogram { count, sum, max } => json::obj(vec![
+                            ("count", json::num(count as f64)),
+                            ("sum", json::num(sum)),
+                            ("max", json::num(max)),
+                        ]),
+                    };
+                    (k, jv)
+                })
+                .collect(),
+        )
+    }
+
+    /// Prometheus text exposition (`metrics` wire verb).
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in self.snapshot() {
+            let base: String = name
+                .chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                .collect();
+            match v {
+                MetricValue::Counter(c) => {
+                    out.push_str(&format!("# TYPE {base} counter\n{base} {c}\n"));
+                }
+                MetricValue::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {base} gauge\n{base} {g}\n"));
+                }
+                MetricValue::Histogram { count, sum, max } => {
+                    out.push_str(&format!(
+                        "# TYPE {base} summary\n{base}_count {count}\n{base}_sum {sum}\n{base}_max {max}\n"
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Drop every registered metric (tests and fresh sessions).
+    pub fn clear(&self) {
+        relock(&self.inner).clear();
+    }
+}
+
+static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+
+/// The process-global registry the binaries publish into.
+pub fn global() -> &'static MetricsRegistry {
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_handles_share_the_cell() {
+        let r = MetricsRegistry::new();
+        let a = r.counter("job.map_tasks");
+        let b = r.counter("job.map_tasks");
+        a.add(3);
+        b.add(4);
+        assert_eq!(a.get(), 7);
+        assert_eq!(r.value("job.map_tasks"), Some(7.0));
+    }
+
+    #[test]
+    fn type_clash_detaches_instead_of_panicking() {
+        let r = MetricsRegistry::new();
+        r.counter("x").add(5);
+        let g = r.gauge("x"); // clash: detached
+        g.set(99.0);
+        assert_eq!(r.value("x"), Some(5.0));
+    }
+
+    #[test]
+    fn gauge_and_histogram_roundtrip() {
+        let r = MetricsRegistry::new();
+        r.gauge("wall_s").set(1.5);
+        let h = r.histogram("lat_s");
+        h.observe(0.002);
+        h.observe(0.004);
+        let snap = r.snapshot();
+        assert_eq!(snap.get("wall_s"), Some(&MetricValue::Gauge(1.5)));
+        match snap.get("lat_s") {
+            Some(&MetricValue::Histogram { count, sum, max }) => {
+                assert_eq!(count, 2);
+                assert!((sum - 0.006).abs() < 1e-12);
+                assert!((max - 0.004).abs() < 1e-12);
+            }
+            other => panic!("bad histogram snapshot: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let r = MetricsRegistry::new();
+        r.counter("front.bytes_in").set(10);
+        r.gauge("serve.p99_ms").set(1.25);
+        r.histogram("serve.batch_fill").observe(8.0);
+        let text = r.prometheus_text();
+        assert!(text.contains("# TYPE front_bytes_in counter"));
+        assert!(text.contains("front_bytes_in 10"));
+        assert!(text.contains("# TYPE serve_p99_ms gauge"));
+        assert!(text.contains("serve_batch_fill_count 1"));
+    }
+
+    #[test]
+    fn to_json_is_an_object() {
+        let r = MetricsRegistry::new();
+        r.counter("a").set(1);
+        let j = r.to_json();
+        assert_eq!(j.get("a").and_then(|v| v.as_f64()), Some(1.0));
+    }
+}

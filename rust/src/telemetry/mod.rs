@@ -1,4 +1,5 @@
-//! Structured timing and counters for every run.
+//! Observability layer: structured tracing, a unified metrics registry and
+//! the timing helpers every report shares.
 //!
 //! Two clocks exist in this system and every report keeps them separate:
 //!
@@ -7,121 +8,22 @@
 //!   [`crate::mapreduce::simclock`], which charges job/task/shuffle overheads
 //!   the paper's physical testbed paid but a single process does not.
 //!
-//! The table-regeneration harness reports `modelled = sim + scaled-wall`, the
-//! way DESIGN.md §3 documents the substitution.
+//! The [`trace`] submodule records hierarchical spans (`session > iteration
+//! > job > shard > map_task / combine / spill / prefetch`; `serve > batch >
+//! score_chunk`) and exports Chrome `chrome://tracing` / Perfetto JSON; the
+//! [`metrics`] submodule is the typed counter/gauge/histogram registry the
+//! stats structs publish into so the CLI report, bench JSON and wire verbs
+//! read one source of truth. Both degrade to dropping data on any internal
+//! failure — instrumentation never kills a run.
 
-use std::collections::BTreeMap;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, Histogram, MetricValue, MetricsRegistry};
+pub use trace::{chrome_trace_json, ManualSpan, SpanGuard, SpanRec, TraceData, Tracer};
+
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-use std::time::{Duration, Instant};
-
-use crate::json::{self, Value};
-
-/// A single named timing span.
-#[derive(Clone, Debug)]
-pub struct Span {
-    pub name: String,
-    pub wall: Duration,
-}
-
-/// Collects spans and counters for one run; cheap to clone snapshots out of.
-#[derive(Default)]
-pub struct Telemetry {
-    spans: Mutex<Vec<Span>>,
-    counters: Mutex<BTreeMap<String, u64>>,
-}
-
-impl Telemetry {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Time a closure under `name`.
-    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
-        let start = Instant::now();
-        let out = f();
-        self.record(name, start.elapsed());
-        out
-    }
-
-    /// Record an externally measured span.
-    pub fn record(&self, name: &str, wall: Duration) {
-        self.spans
-            .lock()
-            .expect("telemetry poisoned")
-            .push(Span { name: name.to_string(), wall });
-    }
-
-    /// Increment a named counter.
-    pub fn incr(&self, name: &str, by: u64) {
-        *self
-            .counters
-            .lock()
-            .expect("telemetry poisoned")
-            .entry(name.to_string())
-            .or_insert(0) += by;
-    }
-
-    /// Total wall time across spans with this name.
-    pub fn total(&self, name: &str) -> Duration {
-        self.spans
-            .lock()
-            .expect("telemetry poisoned")
-            .iter()
-            .filter(|s| s.name == name)
-            .map(|s| s.wall)
-            .sum()
-    }
-
-    /// Counter value (0 if never incremented).
-    pub fn counter(&self, name: &str) -> u64 {
-        self.counters
-            .lock()
-            .expect("telemetry poisoned")
-            .get(name)
-            .copied()
-            .unwrap_or(0)
-    }
-
-    /// Snapshot all spans.
-    pub fn spans(&self) -> Vec<Span> {
-        self.spans.lock().expect("telemetry poisoned").clone()
-    }
-
-    /// Serialise to a JSON report object.
-    pub fn to_json(&self) -> Value {
-        let spans = self.spans();
-        let mut by_name: BTreeMap<String, (u64, f64)> = BTreeMap::new();
-        for s in &spans {
-            let e = by_name.entry(s.name.clone()).or_insert((0, 0.0));
-            e.0 += 1;
-            e.1 += s.wall.as_secs_f64();
-        }
-        let span_obj = Value::Object(
-            by_name
-                .into_iter()
-                .map(|(k, (n, secs))| {
-                    (
-                        k,
-                        json::obj(vec![
-                            ("count", json::num(n as f64)),
-                            ("total_s", json::num(secs)),
-                        ]),
-                    )
-                })
-                .collect(),
-        );
-        let counters = Value::Object(
-            self.counters
-                .lock()
-                .expect("telemetry poisoned")
-                .iter()
-                .map(|(k, &v)| (k.clone(), json::num(v as f64)))
-                .collect(),
-        );
-        json::obj(vec![("spans", span_obj), ("counters", counters)])
-    }
-}
+use std::time::Duration;
 
 /// A monotonically accumulating nanosecond cell, safe to bump from workers.
 #[derive(Default)]
@@ -160,34 +62,6 @@ pub fn human_duration(d: Duration) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn records_spans_and_counters() {
-        let t = Telemetry::new();
-        let v = t.time("work", || {
-            std::thread::sleep(Duration::from_millis(5));
-            42
-        });
-        assert_eq!(v, 42);
-        assert!(t.total("work") >= Duration::from_millis(4));
-        t.incr("chunks", 3);
-        t.incr("chunks", 2);
-        assert_eq!(t.counter("chunks"), 5);
-        assert_eq!(t.counter("missing"), 0);
-    }
-
-    #[test]
-    fn json_report_shape() {
-        let t = Telemetry::new();
-        t.record("phase", Duration::from_millis(10));
-        t.record("phase", Duration::from_millis(20));
-        t.incr("n", 1);
-        let j = t.to_json();
-        let phase = j.get("spans").unwrap().get("phase").unwrap();
-        assert_eq!(phase.get("count").unwrap().as_f64(), Some(2.0));
-        assert!(phase.get("total_s").unwrap().as_f64().unwrap() >= 0.029);
-        assert_eq!(j.get("counters").unwrap().get("n").unwrap().as_f64(), Some(1.0));
-    }
 
     #[test]
     fn atomic_duration_accumulates() {

@@ -1,0 +1,646 @@
+//! Structured hierarchical tracing with Chrome-trace export.
+//!
+//! Spans form a tree (`session > iteration > job > shard > map_task /
+//! combine / spill / prefetch`; `serve > batch > score_chunk`) and are
+//! recorded **lock-cheaply** into a small set of sharded buffers indexed by
+//! a per-thread id, then merged at [`Tracer::drain`] — a worker thread only
+//! ever contends with the (rare) other thread hashing to the same shard, and
+//! no span recorded before the drain can be lost to an unflushed
+//! thread-local. Memory is bounded: past [`Tracer::set_max_spans`] new spans
+//! degrade to a per-`(cat, name)` aggregation row (count + total µs), the
+//! same shape as the serve latency reservoir. When tracing is disabled the
+//! record path is one relaxed atomic load.
+//!
+//! Instrumentation must never kill a run: every internal lock degrades to
+//! the poisoned inner value instead of panicking, and a full buffer drops
+//! to aggregation instead of erroring.
+//!
+//! Two handle styles cover the call sites:
+//!
+//! * [`SpanGuard`] — RAII + *ambient*: the span is pushed onto a
+//!   thread-local stack so child spans opened on the same thread nest under
+//!   it automatically; recorded at drop (covers `?` early returns).
+//! * [`ManualSpan`] — explicit begin/end across threads (the serve root
+//!   lives in the service's shared state and is ended at `close()`); plus
+//!   [`Tracer::record_manual`] for after-the-fact spans whose duration was
+//!   measured elsewhere (per-shard walls merged on the driver).
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::json::{self, Value};
+
+/// Buffer shards: threads hash `tid % NBUF`, so contention is rare without
+/// unbounded per-thread state.
+const NBUF: usize = 16;
+
+/// `(cat, name)` → `(count, total µs)` rollup of spans past the cap.
+type AggMap = BTreeMap<(&'static str, &'static str), (u64, u64)>;
+
+/// Default retained-span cap (past it, spans aggregate).
+pub const DEFAULT_MAX_SPANS: usize = 262_144;
+
+/// Lock that degrades to the inner value on poison — instrumentation must
+/// never propagate a worker panic into a second failure.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static THREAD_NAMES: Mutex<Vec<(u64, String)>> = Mutex::new(Vec::new());
+
+thread_local! {
+    /// Small dense per-thread id (0 = unassigned), assigned on first use.
+    static TID: Cell<u64> = const { Cell::new(0) };
+    /// Ambient span stack: `(span id, span name)` innermost-last.
+    static AMBIENT: RefCell<Vec<(u64, &'static str)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// The innermost ambient span id open on this thread (0 = none) — capture
+/// it before handing work to another thread so spans there can parent here.
+pub fn current_span_id() -> u64 {
+    AMBIENT.with(|s| s.borrow().last().map(|&(id, _)| id).unwrap_or(0))
+}
+
+/// This thread's dense trace id, registering its name on first use.
+fn current_tid() -> u64 {
+    TID.with(|c| {
+        let mut t = c.get();
+        if t == 0 {
+            t = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            c.set(t);
+            let name = std::thread::current()
+                .name()
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| format!("thread-{t}"));
+            relock(&THREAD_NAMES).push((t, name));
+        }
+        t
+    })
+}
+
+/// One finished span.
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    pub id: u64,
+    /// Parent span id; 0 means root.
+    pub parent: u64,
+    pub name: &'static str,
+    /// Coarse category (`session`, `mapreduce`, `serve`, ...) — the Chrome
+    /// `cat` field, also the aggregation key prefix.
+    pub cat: &'static str,
+    /// Dense recording-thread id (Chrome `tid`).
+    pub tid: u64,
+    /// Start, µs since the tracer epoch.
+    pub start_us: u64,
+    /// Duration in µs; `u64` by construction, so durations are never
+    /// negative.
+    pub dur_us: u64,
+    pub attrs: Vec<(&'static str, String)>,
+}
+
+/// Aggregation row for spans past the retention cap.
+#[derive(Clone, Debug)]
+pub struct AggRow {
+    pub cat: &'static str,
+    pub name: &'static str,
+    pub count: u64,
+    pub total_us: u64,
+}
+
+/// Everything [`Tracer::drain`] hands back.
+#[derive(Clone, Debug, Default)]
+pub struct TraceData {
+    /// Retained spans, sorted by start time.
+    pub spans: Vec<SpanRec>,
+    /// Per-`(cat, name)` rollups of spans dropped past the cap.
+    pub aggregated: Vec<AggRow>,
+    /// Count of spans that went to aggregation instead of retention.
+    pub dropped: u64,
+    /// `(tid, thread name)` for every thread that recorded a span.
+    pub threads: Vec<(u64, String)>,
+}
+
+impl TraceData {
+    /// Total retained duration of spans with this name, in seconds.
+    pub fn total_s(&self, name: &str) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| s.dur_us as f64 / 1e6)
+            .sum()
+    }
+
+    /// Retained spans with this name.
+    pub fn by_name(&self, name: &str) -> Vec<&SpanRec> {
+        self.spans.iter().filter(|s| s.name == name).collect()
+    }
+}
+
+/// The span collector. One process-global instance serves the binaries
+/// ([`global`]); tests construct their own to stay isolated.
+pub struct Tracer {
+    enabled: AtomicBool,
+    slow_span_us: AtomicU64,
+    max_spans: AtomicUsize,
+    next_id: AtomicU64,
+    epoch: Instant,
+    bufs: Vec<Mutex<Vec<SpanRec>>>,
+    retained: AtomicUsize,
+    agg: Mutex<AggMap>,
+    dropped: AtomicU64,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Tracer {
+            enabled: AtomicBool::new(false),
+            slow_span_us: AtomicU64::new(0),
+            max_spans: AtomicUsize::new(DEFAULT_MAX_SPANS),
+            next_id: AtomicU64::new(1),
+            epoch: Instant::now(),
+            bufs: (0..NBUF).map(|_| Mutex::new(Vec::new())).collect(),
+            retained: AtomicUsize::new(0),
+            agg: Mutex::new(BTreeMap::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Turn recording on or off. Off (the default) makes every span call a
+    /// single relaxed load.
+    pub fn enable(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Spans at least this long are logged with their ancestry as they are
+    /// recorded (0 disables, the default).
+    pub fn set_slow_span_us(&self, us: u64) {
+        self.slow_span_us.store(us, Ordering::Relaxed);
+    }
+
+    /// Retention cap; spans past it degrade to aggregation rows.
+    pub fn set_max_spans(&self, cap: usize) {
+        self.max_spans.store(cap.max(1), Ordering::Relaxed);
+    }
+
+    fn alloc_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Open an ambient span: parent is the innermost span already open on
+    /// this thread.
+    pub fn span(&self, name: &'static str, cat: &'static str) -> SpanGuard<'_> {
+        let parent = if self.enabled() {
+            AMBIENT.with(|s| s.borrow().last().map(|&(id, _)| id).unwrap_or(0))
+        } else {
+            0
+        };
+        self.span_child(name, cat, parent)
+    }
+
+    /// Open an ambient span under an explicit parent id (0 = root). Used
+    /// where the logical parent lives on another thread (map tasks under
+    /// the driver's job span).
+    pub fn span_child(&self, name: &'static str, cat: &'static str, parent: u64) -> SpanGuard<'_> {
+        if !self.enabled() {
+            return SpanGuard {
+                tracer: self,
+                id: 0,
+                parent: 0,
+                name,
+                cat,
+                start: self.epoch,
+                attrs: Vec::new(),
+                dur_override: None,
+            };
+        }
+        let id = self.alloc_id();
+        AMBIENT.with(|s| s.borrow_mut().push((id, name)));
+        SpanGuard {
+            tracer: self,
+            id,
+            parent,
+            name,
+            cat,
+            start: Instant::now(),
+            attrs: Vec::new(),
+            dur_override: None,
+        }
+    }
+
+    /// Begin an explicit (non-ambient) span that another thread may end
+    /// later via [`Tracer::end`]. Returns an inert span while disabled.
+    pub fn begin(&self, name: &'static str, cat: &'static str, parent: u64) -> ManualSpan {
+        let id = if self.enabled() { self.alloc_id() } else { 0 };
+        ManualSpan { id, parent, name, cat, start: Instant::now() }
+    }
+
+    /// End a [`ManualSpan`], measuring its duration from `begin`.
+    pub fn end(&self, span: &ManualSpan, attrs: Vec<(&'static str, String)>) {
+        if span.id == 0 || !self.enabled() {
+            return;
+        }
+        let start_us = span.start.saturating_duration_since(self.epoch).as_micros() as u64;
+        self.record(SpanRec {
+            id: span.id,
+            parent: span.parent,
+            name: span.name,
+            cat: span.cat,
+            tid: current_tid(),
+            start_us,
+            dur_us: span.start.elapsed().as_micros() as u64,
+            attrs,
+        });
+    }
+
+    /// Record a span after the fact with an externally measured duration
+    /// (ends now). Returns the span id (0 while disabled).
+    pub fn record_manual(
+        &self,
+        name: &'static str,
+        cat: &'static str,
+        parent: u64,
+        dur: Duration,
+        attrs: Vec<(&'static str, String)>,
+    ) -> u64 {
+        if !self.enabled() {
+            return 0;
+        }
+        let id = self.alloc_id();
+        let now_us = self.epoch.elapsed().as_micros() as u64;
+        let dur_us = dur.as_micros() as u64;
+        self.record(SpanRec {
+            id,
+            parent,
+            name,
+            cat,
+            tid: current_tid(),
+            start_us: now_us.saturating_sub(dur_us),
+            dur_us,
+            attrs,
+        });
+        id
+    }
+
+    fn record(&self, rec: SpanRec) {
+        let slow = self.slow_span_us.load(Ordering::Relaxed);
+        if slow > 0 && rec.dur_us >= slow {
+            let ancestry = AMBIENT.with(|s| {
+                s.borrow().iter().map(|&(_, n)| n).collect::<Vec<_>>().join(" > ")
+            });
+            eprintln!(
+                "trace: slow span `{}` ({} µs >= {} µs) under [{}]",
+                rec.name, rec.dur_us, slow, ancestry
+            );
+        }
+        if self.retained.load(Ordering::Relaxed) >= self.max_spans.load(Ordering::Relaxed) {
+            let mut agg = relock(&self.agg);
+            let e = agg.entry((rec.cat, rec.name)).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += rec.dur_us;
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.retained.fetch_add(1, Ordering::Relaxed);
+        relock(&self.bufs[(rec.tid as usize) % NBUF]).push(rec);
+    }
+
+    /// Merge every shard buffer into one sorted trace and clear the
+    /// collector (enabled state and knobs are kept).
+    pub fn drain(&self) -> TraceData {
+        let mut spans: Vec<SpanRec> = Vec::with_capacity(self.retained.load(Ordering::Relaxed));
+        for buf in &self.bufs {
+            spans.append(&mut relock(buf));
+        }
+        spans.sort_by_key(|s| (s.start_us, s.id));
+        self.retained.store(0, Ordering::Relaxed);
+        let aggregated = std::mem::take(&mut *relock(&self.agg))
+            .into_iter()
+            .map(|((cat, name), (count, total_us))| AggRow { cat, name, count, total_us })
+            .collect();
+        let dropped = self.dropped.swap(0, Ordering::Relaxed);
+        let tids: std::collections::BTreeSet<u64> = spans.iter().map(|s| s.tid).collect();
+        let threads = relock(&THREAD_NAMES)
+            .iter()
+            .filter(|(t, _)| tids.contains(t))
+            .cloned()
+            .collect();
+        TraceData { spans, aggregated, dropped, threads }
+    }
+
+    /// Drop everything collected so far without returning it.
+    pub fn reset(&self) {
+        let _ = self.drain();
+    }
+}
+
+/// RAII ambient span: records at drop with measured (or overridden)
+/// duration, and keeps the thread-local ancestry stack honest.
+pub struct SpanGuard<'a> {
+    tracer: &'a Tracer,
+    id: u64,
+    parent: u64,
+    name: &'static str,
+    cat: &'static str,
+    start: Instant,
+    attrs: Vec<(&'static str, String)>,
+    dur_override: Option<Duration>,
+}
+
+impl SpanGuard<'_> {
+    /// Attach a key=value attribute.
+    pub fn attr(&mut self, key: &'static str, value: String) {
+        if self.id != 0 {
+            self.attrs.push((key, value));
+        }
+    }
+
+    /// Override the recorded duration (e.g. stamp the exact `JobStats`
+    /// wall so span totals and the report agree by construction).
+    pub fn set_dur(&mut self, dur: Duration) {
+        self.dur_override = Some(dur);
+    }
+
+    /// The span id (0 while tracing is disabled) — pass to
+    /// [`Tracer::span_child`] on other threads.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if self.id == 0 {
+            return;
+        }
+        AMBIENT.with(|s| {
+            let mut st = s.borrow_mut();
+            if let Some(pos) = st.iter().rposition(|&(id, _)| id == self.id) {
+                st.remove(pos);
+            }
+        });
+        let dur = self.dur_override.unwrap_or_else(|| self.start.elapsed());
+        let start_us = self.start.saturating_duration_since(self.tracer.epoch).as_micros() as u64;
+        self.tracer.record(SpanRec {
+            id: self.id,
+            parent: self.parent,
+            name: self.name,
+            cat: self.cat,
+            tid: current_tid(),
+            start_us,
+            dur_us: dur.as_micros() as u64,
+            attrs: std::mem::take(&mut self.attrs),
+        });
+    }
+}
+
+/// Explicit begin/end span; plain data, safe to store in shared state and
+/// end from another thread.
+#[derive(Clone, Debug)]
+pub struct ManualSpan {
+    pub id: u64,
+    parent: u64,
+    name: &'static str,
+    cat: &'static str,
+    start: Instant,
+}
+
+static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+
+/// The process-global tracer the binaries record into.
+pub fn global() -> &'static Tracer {
+    GLOBAL.get_or_init(Tracer::new)
+}
+
+/// Render a drained trace as Chrome `chrome://tracing` / Perfetto JSON.
+///
+/// Retained spans become `ph:"X"` complete events on pid 1 with one row per
+/// recording thread; `sim` rows (modelled cost classes, `(label, seconds)`)
+/// are laid end-to-end on pid 2 so the modelled breakdown reads as a bar
+/// next to the measured timeline. Parents that were aggregated away are
+/// remapped to the root so the tree always resolves.
+pub fn chrome_trace_json(data: &TraceData, sim: &[(&str, f64)]) -> String {
+    let ids: std::collections::BTreeSet<u64> = data.spans.iter().map(|s| s.id).collect();
+    let mut events: Vec<Value> = Vec::with_capacity(data.spans.len() + data.threads.len() + 8);
+    events.push(json::obj(vec![
+        ("name", json::s("process_name")),
+        ("ph", json::s("M")),
+        ("pid", json::num(1.0)),
+        ("tid", json::num(0.0)),
+        ("args", json::obj(vec![("name", json::s("bigfcm"))])),
+    ]));
+    for (tid, name) in &data.threads {
+        events.push(json::obj(vec![
+            ("name", json::s("thread_name")),
+            ("ph", json::s("M")),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(*tid as f64)),
+            ("args", json::obj(vec![("name", json::s(name.as_str()))])),
+        ]));
+    }
+    for rec in &data.spans {
+        let parent = if rec.parent != 0 && !ids.contains(&rec.parent) { 0 } else { rec.parent };
+        let mut args = vec![
+            ("id".to_string(), json::num(rec.id as f64)),
+            ("parent".to_string(), json::num(parent as f64)),
+        ];
+        for (k, v) in &rec.attrs {
+            args.push((k.to_string(), json::s(v.as_str())));
+        }
+        events.push(json::obj(vec![
+            ("name", json::s(rec.name)),
+            ("cat", json::s(rec.cat)),
+            ("ph", json::s("X")),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(rec.tid as f64)),
+            ("ts", json::num(rec.start_us as f64)),
+            ("dur", json::num(rec.dur_us as f64)),
+            ("args", Value::Object(args.into_iter().collect())),
+        ]));
+    }
+    if !sim.is_empty() {
+        events.push(json::obj(vec![
+            ("name", json::s("process_name")),
+            ("ph", json::s("M")),
+            ("pid", json::num(2.0)),
+            ("tid", json::num(0.0)),
+            ("args", json::obj(vec![("name", json::s("sim-clock (modelled)"))])),
+        ]));
+        let mut at = 0.0f64;
+        for &(label, secs) in sim {
+            if secs <= 0.0 {
+                continue;
+            }
+            events.push(json::obj(vec![
+                ("name", json::s(label)),
+                ("cat", json::s("sim")),
+                ("ph", json::s("X")),
+                ("pid", json::num(2.0)),
+                ("tid", json::num(0.0)),
+                ("ts", json::num(at)),
+                ("dur", json::num(secs * 1e6)),
+            ]));
+            at += secs * 1e6;
+        }
+    }
+    if data.dropped > 0 {
+        events.push(json::obj(vec![
+            ("name", json::s(format!("trace capped: {} spans aggregated", data.dropped))),
+            ("ph", json::s("i")),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(0.0)),
+            ("ts", json::num(0.0)),
+            ("s", json::s("g")),
+        ]));
+    }
+    let doc = json::obj(vec![
+        ("traceEvents", Value::Array(events)),
+        ("displayTimeUnit", json::s("ms")),
+    ]);
+    json::to_string(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let t = Tracer::new();
+        {
+            let mut g = t.span("root", "test");
+            g.attr("k", "v".into());
+        }
+        t.record_manual("m", "test", 0, Duration::from_millis(1), Vec::new());
+        let d = t.drain();
+        assert!(d.spans.is_empty());
+        assert_eq!(d.dropped, 0);
+    }
+
+    #[test]
+    fn ambient_nesting_assigns_parents() {
+        let t = Tracer::new();
+        t.enable(true);
+        let root_id;
+        {
+            let root = t.span("root", "test");
+            root_id = root.id();
+            let _child = t.span("child", "test");
+        }
+        let d = t.drain();
+        assert_eq!(d.spans.len(), 2);
+        let child = d.spans.iter().find(|s| s.name == "child").unwrap();
+        assert_eq!(child.parent, root_id);
+        let root = d.spans.iter().find(|s| s.name == "root").unwrap();
+        assert_eq!(root.parent, 0);
+    }
+
+    #[test]
+    fn set_dur_overrides_measured() {
+        let t = Tracer::new();
+        t.enable(true);
+        {
+            let mut g = t.span("it", "test");
+            g.set_dur(Duration::from_micros(12_345));
+        }
+        let d = t.drain();
+        assert_eq!(d.spans[0].dur_us, 12_345);
+    }
+
+    #[test]
+    fn cap_degrades_to_aggregation() {
+        let t = Tracer::new();
+        t.enable(true);
+        t.set_max_spans(4);
+        for _ in 0..10 {
+            t.record_manual("hot", "test", 0, Duration::from_micros(10), Vec::new());
+        }
+        let d = t.drain();
+        assert_eq!(d.spans.len(), 4);
+        assert_eq!(d.dropped, 6);
+        assert_eq!(d.aggregated.len(), 1);
+        assert_eq!(d.aggregated[0].count, 6);
+        assert_eq!(d.aggregated[0].total_us, 60);
+    }
+
+    #[test]
+    fn concurrent_buffers_merge_without_loss() {
+        let t = Arc::new(Tracer::new());
+        t.enable(true);
+        let mut handles = Vec::new();
+        for w in 0..4u64 {
+            let t = Arc::clone(&t);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    let mut g = t.span("work", "test");
+                    g.attr("w", format!("{w}/{i}"));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let d = t.drain();
+        assert_eq!(d.spans.len(), 200);
+        assert_eq!(d.dropped, 0);
+        // every recording thread registered a name
+        let tids: std::collections::BTreeSet<u64> = d.spans.iter().map(|s| s.tid).collect();
+        assert_eq!(d.threads.len(), tids.len());
+    }
+
+    #[test]
+    fn manual_span_ends_cross_thread() {
+        let t = Arc::new(Tracer::new());
+        t.enable(true);
+        let m = t.begin("serve", "serve", 0);
+        let t2 = Arc::clone(&t);
+        let m2 = m.clone();
+        std::thread::spawn(move || t2.end(&m2, vec![("done", "yes".into())]))
+            .join()
+            .unwrap();
+        let d = t.drain();
+        assert_eq!(d.spans.len(), 1);
+        assert_eq!(d.spans[0].name, "serve");
+    }
+
+    #[test]
+    fn chrome_export_parses_and_parents_resolve() {
+        let t = Tracer::new();
+        t.enable(true);
+        {
+            let root = t.span("session", "session");
+            let _child = t.span_child("iteration", "session", root.id());
+        }
+        let d = t.drain();
+        let txt = chrome_trace_json(&d, &[("compute", 1.5), ("shuffle", 0.0)]);
+        let v = json::parse(&txt).expect("chrome trace must parse");
+        let events = match v.get("traceEvents") {
+            Some(Value::Array(a)) => a,
+            _ => panic!("missing traceEvents"),
+        };
+        let ids: Vec<f64> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .filter_map(|e| e.get("args").and_then(|a| a.get("id")).and_then(|x| x.as_f64()))
+            .collect();
+        for e in events {
+            if let Some(p) = e.get("args").and_then(|a| a.get("parent")).and_then(|x| x.as_f64()) {
+                assert!(p == 0.0 || ids.contains(&p), "dangling parent {p}");
+            }
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Observability integration: the tracing + metrics layer end to end over
+//! real session runs. The instrumented code paths record into the
+//! process-global tracer, so every test here serializes on one lock and
+//! resets the collector around itself — `cargo test` runs test threads
+//! concurrently and span counts would otherwise cross-pollute.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use bigfcm::config::OverheadConfig;
+use bigfcm::data::synth::blobs;
+use bigfcm::fcm::loops::{
+    run_fcm_session, FcmParams, PruneConfig, SessionAlgo, SessionRunResult,
+};
+use bigfcm::fcm::{seeding, KernelBackend, NativeBackend};
+use bigfcm::hdfs::BlockStore;
+use bigfcm::json::{self, Value};
+use bigfcm::mapreduce::{Engine, EngineOptions, SessionOptions};
+use bigfcm::prng::Pcg;
+use bigfcm::telemetry::metrics::MetricsRegistry;
+use bigfcm::telemetry::{chrome_trace_json, trace};
+
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Exclusive use of the global tracer: reset it, arm it, and hand back the
+/// guard the test must hold until it has drained.
+fn armed_tracer() -> MutexGuard<'static, ()> {
+    let guard = TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let t = trace::global();
+    t.enable(false);
+    t.reset();
+    t.set_max_spans(trace::DEFAULT_MAX_SPANS);
+    t.set_slow_span_us(0);
+    t.enable(true);
+    guard
+}
+
+fn disarm_tracer() {
+    let t = trace::global();
+    t.enable(false);
+    t.reset();
+}
+
+/// A small fixed-seed session run: 4096 records in 16 blocks, 3 clusters,
+/// 4 workers — enough parallelism to exercise the sharded span buffers.
+fn run_small_session(seed: u64, workers: usize) -> SessionRunResult {
+    let data = blobs(4096, 4, 3, 0.25, seed);
+    let store = Arc::new(BlockStore::in_memory("t", &data.features, 256, 4).unwrap());
+    let mut rng = Pcg::new(seed ^ 0x7ACE);
+    let v0 = seeding::random_records(&data.features, 3, &mut rng);
+    let params = FcmParams { epsilon: 1e-9, max_iterations: 6, ..Default::default() };
+    let backend: Arc<dyn KernelBackend> = Arc::new(NativeBackend);
+    let mut engine = Engine::new(
+        EngineOptions { workers, ..Default::default() },
+        OverheadConfig::default(),
+    );
+    run_fcm_session(
+        &mut engine,
+        &store,
+        backend,
+        SessionAlgo::Fcm,
+        v0,
+        &params,
+        &PruneConfig::disabled(),
+        SessionOptions::default(),
+        None,
+    )
+    .unwrap()
+}
+
+/// The exported Chrome trace must parse with our own JSON parser, every
+/// `ph:"X"` event's parent must resolve (or be 0 = root), durations must be
+/// present and non-negative, and the span taxonomy of a session run must
+/// all be there.
+#[test]
+fn session_chrome_trace_parses_and_parents_resolve() {
+    let _guard = armed_tracer();
+    let _run = run_small_session(11, 4);
+    let data = trace::global().drain();
+    disarm_tracer();
+
+    let txt = chrome_trace_json(&data, &[("compute", 1.0), ("shuffle", 0.25)]);
+    let doc = json::parse(&txt).expect("chrome trace must parse");
+    let events = match doc.get("traceEvents") {
+        Some(Value::Array(a)) => a,
+        other => panic!("missing traceEvents array: {other:?}"),
+    };
+    let complete: Vec<&Value> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .collect();
+    assert!(!complete.is_empty(), "no complete events exported");
+
+    let ids: Vec<f64> = complete
+        .iter()
+        .filter_map(|e| e.get("args").and_then(|a| a.get("id")).and_then(|x| x.as_f64()))
+        .collect();
+    let mut names = std::collections::BTreeSet::new();
+    for e in &complete {
+        if let Some(n) = e.get("name").and_then(|n| n.as_str()) {
+            names.insert(n.to_string());
+        }
+        let dur = e.get("dur").and_then(|d| d.as_f64());
+        assert!(dur.is_some_and(|d| d >= 0.0), "event without a non-negative dur: {e:?}");
+        if let Some(p) = e.get("args").and_then(|a| a.get("parent")).and_then(|x| x.as_f64())
+        {
+            assert!(p == 0.0 || ids.contains(&p), "dangling parent id {p}");
+        }
+    }
+    for want in ["session", "iteration", "job", "map_task", "combine"] {
+        assert!(names.contains(want), "span {want:?} missing (have {names:?})");
+    }
+}
+
+/// Per-iteration span durations are stamped from the exact `JobStats` wall
+/// (`set_dur`), so the trace and the report must agree within 1% — and the
+/// span count must equal the iteration count.
+#[test]
+fn iteration_spans_agree_with_reported_walls() {
+    let _guard = armed_tracer();
+    let run = run_small_session(23, 2);
+    let data = trace::global().drain();
+    disarm_tracer();
+
+    let iter_spans = data.by_name("iteration");
+    assert_eq!(
+        iter_spans.len(),
+        run.per_iteration.len(),
+        "one iteration span per engine iteration"
+    );
+    let span_total_s = data.total_s("iteration");
+    let report_total_s: f64 = run.per_iteration.iter().map(|s| s.wall.as_secs_f64()).sum();
+    assert!(report_total_s > 0.0, "degenerate run: zero reported wall");
+    let rel = (span_total_s - report_total_s).abs() / report_total_s;
+    assert!(
+        rel <= 0.01,
+        "iteration span total {span_total_s:.6}s vs reported {report_total_s:.6}s ({rel:.4} rel)"
+    );
+}
+
+/// Four workers recording concurrently into the sharded buffers must not
+/// lose spans: the trace holds exactly one `map_task` span per map task the
+/// engine reports, and one `job` span per engine job.
+#[test]
+fn concurrent_worker_spans_merge_without_loss() {
+    let _guard = armed_tracer();
+    let run = run_small_session(37, 4);
+    let data = trace::global().drain();
+    disarm_tracer();
+
+    assert_eq!(data.dropped, 0, "span cap engaged on a tiny run");
+    let expect_tasks: usize = run.per_iteration.iter().map(|s| s.map_tasks).sum();
+    assert_eq!(
+        data.by_name("map_task").len(),
+        expect_tasks,
+        "map_task spans vs engine-reported map tasks"
+    );
+    assert_eq!(data.by_name("job").len(), run.jobs, "job spans vs engine jobs");
+    // Multiple worker threads actually recorded (the buffers were shared).
+    let tids: std::collections::BTreeSet<u64> =
+        data.by_name("map_task").iter().map(|s| s.tid).collect();
+    assert!(tids.len() > 1, "expected map tasks across threads, got {tids:?}");
+}
+
+/// The registry view is a bit-identical projection of the legacy stats
+/// structs: publishing a fixed-seed run and reading the counters back must
+/// reproduce the struct fields exactly (no float laundering of integers).
+#[test]
+fn registry_counters_match_legacy_structs_exactly() {
+    // No tracing needed, but the session run records spans whenever some
+    // parallel test has the global tracer enabled — serialize anyway.
+    let _guard = TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let run = run_small_session(53, 2);
+
+    let reg = MetricsRegistry::new();
+    run.publish_metrics(&reg);
+
+    assert_eq!(reg.counter("session.jobs").get(), run.jobs as u64);
+    assert_eq!(
+        reg.counter("session.iterations").get(),
+        run.result.iterations as u64
+    );
+    assert_eq!(reg.counter("session.records_pruned").get(), run.records_pruned);
+    assert_eq!(
+        reg.counter("session.peak_resident_bytes").get(),
+        run.peak_resident_bytes
+    );
+
+    let map_tasks: usize = run.per_iteration.iter().map(|s| s.map_tasks).sum();
+    let shuffle: u64 = run.per_iteration.iter().map(|s| s.shuffle_bytes).sum();
+    let attempts: usize = run.per_iteration.iter().map(|s| s.attempts).sum();
+    assert_eq!(reg.counter("job.map_tasks").get(), map_tasks as u64);
+    assert_eq!(reg.counter("job.shuffle_bytes").get(), shuffle);
+    assert_eq!(reg.counter("job.attempts").get(), attempts as u64);
+
+    let wall_s: f64 = run.per_iteration.iter().map(|s| s.wall.as_secs_f64()).sum();
+    let got = reg.value("job.wall_s").expect("job.wall_s published");
+    assert!((got - wall_s).abs() <= 1e-9 + 1e-9 * wall_s.abs());
+
+    // And the exposition surface carries them under Prometheus names.
+    let text = reg.prometheus_text();
+    assert!(text.contains("# TYPE session_jobs counter"));
+    assert!(text.contains(&format!("job_map_tasks {map_tasks}")));
+    assert!(text.contains("# TYPE job_wall_s gauge"));
+}
+
+/// With the tracer disabled (the default), an instrumented session run
+/// records nothing at all — the off path is a relaxed load, not a buffered
+/// span.
+#[test]
+fn disabled_tracer_records_no_spans_from_a_session() {
+    let _guard = TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let t = trace::global();
+    t.enable(false);
+    t.reset();
+    let _run = run_small_session(71, 2);
+    let data = t.drain();
+    assert!(data.spans.is_empty(), "disabled tracer retained {} spans", data.spans.len());
+    assert_eq!(data.dropped, 0);
+}

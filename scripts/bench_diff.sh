@@ -170,6 +170,23 @@ if cur_sess:
     cr = cur_sess.get("shard_steal_ratio")
     if br is not None and cr is not None and cr > br + 1e-12:
         print(f"note: cross-shard steal ratio rose vs baseline ({br:.3f} -> {cr:.3f}) — plan-time rebalance regression; investigate")
+
+# Tracing overhead A/B (observability gate): the bench runs the same
+# chunked kernel pass with the global tracer off, then on, one span per
+# chunk. Enabled tracing costing more than 3% of the hot path is flagged
+# (fail-soft like everything above).
+cur_trace = cur_doc.get("trace") or {}
+frac = cur_trace.get("overhead_frac")
+if frac is not None:
+    off_s, on_s = cur_trace.get("off_s") or 0.0, cur_trace.get("on_s") or 0.0
+    print()
+    print("== tracing overhead A/B ==")
+    print(f"tracer off {off_s * 1e3:.3f} ms, on {on_s * 1e3:.3f} ms -> overhead {frac:+.2%}")
+    if frac > 0.03:
+        print(f"note: tracing-enabled overhead {frac:+.2%} exceeds the 3% budget — span hot path regression; investigate")
+    bfrac = (base_doc.get("trace") or {}).get("overhead_frac")
+    if bfrac is not None and frac - bfrac > 0.03:
+        print(f"note: tracing overhead rose vs baseline ({bfrac:+.2%} -> {frac:+.2%})")
 EOF
 
 # ---------------------------------------------------------------------------

@@ -100,6 +100,40 @@ echo "$REP_OUT" | grep -q "merge objective delta: last" \
     || { echo "sharded smoke: representative merge reported no objective delta"; echo "$REP_OUT"; exit 1; }
 echo "sharded smoke: exact merge bitwise, representative delta reported"
 
+echo "== trace smoke (session --trace-out + --timeline) =="
+# Observability acceptance in miniature: a sharded session with tracing on
+# must emit a parseable Chrome-trace JSON with the span taxonomy present,
+# and print the per-iteration --timeline table.
+TRACE_OUT="$(cargo run --release --bin bigfcm -- session \
+    --dataset susy --records 4096 --clusters 3 --iters 4 --shards 2 \
+    --trace-out "$SMOKE_DIR/trace.json" --timeline)"
+echo "$TRACE_OUT" | grep -q "timeline:" \
+    || { echo "trace smoke: --timeline printed no table"; echo "$TRACE_OUT"; exit 1; }
+echo "$TRACE_OUT" | grep -q "trace: wrote" \
+    || { echo "trace smoke: no trace emission line"; echo "$TRACE_OUT"; exit 1; }
+[ -s "$SMOKE_DIR/trace.json" ] || { echo "trace smoke: trace.json missing/empty"; exit 1; }
+# Keep a copy outside the mktemp dir (removed on exit) so CI can upload the
+# trace as an artifact; target/ is already gitignored.
+cp "$SMOKE_DIR/trace.json" target/trace_smoke.json
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$SMOKE_DIR/trace.json" <<'PYEOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+events = doc["traceEvents"]
+names = {e.get("name") for e in events if e.get("ph") == "X"}
+for want in ("session", "iteration", "shard", "job", "map_task"):
+    assert want in names, f"span {want!r} missing from trace (have {sorted(names)})"
+assert all(e.get("dur", 0) >= 0 for e in events if e.get("ph") == "X"), "negative duration"
+print(f"trace smoke: {len(events)} events, taxonomy present")
+PYEOF
+else
+    grep -q '"traceEvents"' "$SMOKE_DIR/trace.json" \
+        || { echo "trace smoke: not a Chrome trace document"; exit 1; }
+    grep -q '"map_task"' "$SMOKE_DIR/trace.json" \
+        || { echo "trace smoke: no map_task spans in trace"; exit 1; }
+    echo "trace smoke: Chrome trace shape present (python3 unavailable for full parse)"
+fi
+
 echo "== serve front smoke (bigfcm serve) =="
 # The network front end-to-end on an ephemeral port: start the server
 # (quick-trains a `default` model), score one record over the socket,
@@ -138,6 +172,11 @@ case "$REPLY" in
     "ok 2 "*) echo "serve smoke: scored on generation 2 after hot reload" ;;
     *) echo "serve smoke: post-reload score reply: $REPLY"; kill "$SERVE_PID" 2>/dev/null; exit 1 ;;
 esac
+
+REPLY="$(cargo run --release --bin bigfcm -- serve --connect "$ADDR" --send "metrics")"
+echo "$REPLY" | grep -q "# TYPE front_frames counter" \
+    || { echo "serve smoke: metrics verb returned no exposition: $REPLY"; kill "$SERVE_PID" 2>/dev/null; exit 1; }
+echo "serve smoke: Prometheus-style metrics exposition over the wire"
 
 cargo run --release --bin bigfcm -- serve --connect "$ADDR" --send "shutdown" >/dev/null
 wait "$SERVE_PID"
